@@ -1,0 +1,82 @@
+//! Cluster simulation: reproduce the *shape* of Figure 2/4 — per-network
+//! epoch-time breakdown (communication vs computation) across 2–16 GPUs and
+//! all compression arms — on the calibrated K80/PCIe interconnect model.
+//!
+//! ```sh
+//! cargo run --release --example cluster_sim                   # all networks
+//! cargo run --release --example cluster_sim -- --network vgg19 --preset 10gbe
+//! ```
+
+use qsgd::config::Args;
+use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm};
+use qsgd::models::{zoo, CostModel};
+use qsgd::simnet::{Preset, SimNet};
+use qsgd::util::stats;
+
+fn bar(frac: f64, width: usize) -> String {
+    let filled = (frac * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(filled.min(width)), ".".repeat(width - filled.min(width)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let preset: Preset =
+        args.string("preset", "k80").parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let cost = CostModel::k80();
+
+    let nets = match args.get("network") {
+        Some(n) => vec![zoo::by_name(n).ok_or_else(|| anyhow::anyhow!("unknown network '{n}'"))?],
+        None => zoo::table1_networks(),
+    };
+    let arms = [
+        ("32bit", EpochArm::fp32()),
+        ("1BitSGD", EpochArm::onebit()),
+        ("QSGD 2bit", EpochArm::qsgd(2, 64)),
+        ("QSGD 4bit", EpochArm::qsgd(4, 512)),
+    ];
+
+    for net in &nets {
+        println!(
+            "\n=== {} ({} params, {} samples/epoch) — bars: comm '#' / compute '.' ===",
+            net.name,
+            stats::fmt_bytes(net.params() as f64 * 4.0),
+            net.epoch_samples
+        );
+        for gpus in [2usize, 4, 8, 16] {
+            let simnet = SimNet::preset(gpus, preset);
+            // normalise bars to the slowest arm at this GPU count
+            let sims: Vec<_> = arms
+                .iter()
+                .map(|(label, arm)| (label, simulate_epoch(net, gpus, arm, &simnet, &cost, 1, 0)))
+                .collect();
+            let tmax = sims.iter().map(|(_, s)| s.epoch_time()).fold(0.0, f64::max);
+            println!("  {gpus:>2} GPUs:");
+            for (label, s) in &sims {
+                let total = s.epoch_time();
+                let comm_frac = s.breakdown.comm_fraction();
+                let width = ((total / tmax) * 46.0).round() as usize;
+                let comm_w = (comm_frac * width as f64).round() as usize;
+                println!(
+                    "    {label:<10} [{}{}] {:<9} comm {:>3.0}%",
+                    "#".repeat(comm_w.min(width)),
+                    ".".repeat(width - comm_w.min(width)),
+                    stats::fmt_duration(total),
+                    comm_frac * 100.0,
+                );
+            }
+        }
+        // the headline ratios for this network at 8 GPUs
+        let simnet = SimNet::preset(8, preset);
+        let fp = simulate_epoch(net, 8, &EpochArm::fp32(), &simnet, &cost, 1, 0);
+        let q4 = simulate_epoch(net, 8, &EpochArm::qsgd(4, 512), &simnet, &cost, 1, 0);
+        println!(
+            "  → 8-GPU 4-bit speedup {:.2}x; comm time cut {:.1}x; {} on the wire per step (was {})",
+            fp.epoch_time() / q4.epoch_time(),
+            fp.breakdown.communication().secs() / q4.breakdown.communication().secs(),
+            stats::fmt_bytes(q4.message_bytes as f64),
+            stats::fmt_bytes(fp.message_bytes as f64),
+        );
+        let _ = bar(0.5, 10); // keep helper linked
+    }
+    Ok(())
+}

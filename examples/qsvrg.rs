@@ -1,0 +1,68 @@
+//! QSVRG (§3.3, Theorem 3.6): linear convergence with quantized
+//! variance-reduced updates, vs exact parallel SVRG and plain QSGD.
+//!
+//! ```sh
+//! cargo run --release --example qsvrg -- --epochs 10 --processors 4
+//! ```
+
+use qsgd::config::Args;
+use qsgd::coordinator::svrg::{self, SvrgConfig};
+use qsgd::data::{LogisticProblem, Objective};
+use qsgd::metrics::Table;
+use qsgd::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let epochs = args.usize("epochs", 10);
+    let processors = args.usize("processors", 4);
+    let seed = args.u64("seed", 0);
+
+    let obj = LogisticProblem::generate(512, 128, 0.02, seed);
+    println!(
+        "ridge logistic: m=512 components, n=128, κ = L/ℓ ≈ {:.1}, {processors} processors",
+        obj.smoothness() / obj.strong_convexity()
+    );
+    let f_star = svrg::solve_f_star(&obj, 8000);
+    println!("f* ≈ {f_star:.6} (GD to high precision)\n");
+
+    let run = |quantize: bool| {
+        let cfg = SvrgConfig { processors, epochs, iters: None, eta: None, seed, quantize };
+        svrg::run(&cfg, &obj, f_star)
+    };
+    let rq = run(true)?;
+    let re = run(false)?;
+
+    let mut table = Table::new(&["epoch", "QSVRG gap", "exact SVRG gap", "0.9^p ref"]);
+    for e in 0..=epochs {
+        let gq = rq.gap.points.get(e).map(|p| p.1).unwrap_or(f64::NAN);
+        let ge = re.gap.points.get(e).map(|p| p.1).unwrap_or(f64::NAN);
+        let reference = rq.gap.points[0].1 * 0.9f64.powi(e as i32);
+        table.row(&[
+            e.to_string(),
+            format!("{gq:.3e}"),
+            format!("{ge:.3e}"),
+            format!("{reference:.3e}"),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "\nTheorem 3.6 bits bound: ≤ {:.0} bits/processor/epoch ({}).",
+        rq.bits_bound_per_epoch,
+        stats::fmt_bytes(rq.bits_bound_per_epoch / 8.0)
+    );
+    let measured =
+        rq.wire.payload_bytes as f64 * 8.0 / (processors as f64 * epochs as f64);
+    println!(
+        "Measured:              {:.0} bits/processor/epoch ({}), {:.2} bits/coordinate.",
+        measured,
+        stats::fmt_bytes(measured / 8.0),
+        rq.wire.bits_per_coordinate()
+    );
+    println!(
+        "\nQSVRG contracts linearly at the same rate as exact SVRG while sending\n\
+         ~{:.0}x fewer gradient bits — Theorem 3.6's claim.",
+        rq.wire.compression_ratio()
+    );
+    Ok(())
+}

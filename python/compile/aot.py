@@ -1,0 +1,187 @@
+"""AOT lowering: JAX/Pallas graphs → HLO *text* artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust coordinator is fully
+self-contained afterwards. HLO text (NOT ``lowered.compiler_ir("hlo")`` proto
+serialization) is the interchange format: jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts built (shapes are baked into the HLO and recorded in the manifest):
+
+* ``logreg_grad``   — convex workload (Thm 3.4 / QSVRG experiments)
+* ``mlp_grad``      — the paper's MNIST-style two-layer perceptron
+* ``tfm_grad``      — transformer LM (the communication-bound e2e driver)
+* ``*_grad_q``      — fused variants with the Layer-1 Pallas quantization
+                      kernel applied to the gradient in-graph
+* ``quantize``      — the standalone Pallas kernel, used by Rust tests to
+                      cross-check the Rust quantizer level-for-level
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.quantize import quantize_pallas
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_artifact(name, fn, in_specs, outdir, manifest, meta=None):
+    lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    (outdir / fname).write_text(text)
+    out_shapes = [
+        {"shape": [int(d) for d in o.shape], "dtype": str(o.dtype)}
+        for o in jax.eval_shape(fn, *[s for _, s in in_specs])
+    ]
+    manifest[name] = {
+        "file": fname,
+        "inputs": [
+            {"name": n, "shape": [int(d) for d in s.shape], "dtype": str(s.dtype)}
+            for n, s in in_specs
+        ],
+        "outputs": out_shapes,
+        **(meta or {}),
+    }
+    print(f"  {name}: {len(text)} chars, inputs={[n for n, _ in in_specs]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--logreg-dim", type=int, default=128)
+    ap.add_argument("--logreg-batch", type=int, default=64)
+    ap.add_argument("--mlp-sizes", default="256,128,10")
+    ap.add_argument("--mlp-batch", type=int, default=64)
+    ap.add_argument("--tfm-vocab", type=int, default=512)
+    ap.add_argument("--tfm-dmodel", type=int, default=128)
+    ap.add_argument("--tfm-layers", type=int, default=2)
+    ap.add_argument("--tfm-heads", type=int, default=4)
+    ap.add_argument("--tfm-dff", type=int, default=512)
+    ap.add_argument("--tfm-seq", type=int, default=64)
+    ap.add_argument("--tfm-batch", type=int, default=8)
+    ap.add_argument("--q-s", type=int, default=15, help="levels for fused quantize (4-bit: 2^4-1)")
+    ap.add_argument("--q-bucket", type=int, default=512)
+    ap.add_argument("--q-norm", default="max", choices=["l2", "max"])
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {}
+
+    def qmeta(n):
+        nb = -(-n // args.q_bucket)
+        return {"q_s": args.q_s, "q_bucket": args.q_bucket, "q_norm": args.q_norm, "q_buckets": nb}
+
+    # ---- logistic regression ------------------------------------------------
+    dim, lb = args.logreg_dim, args.logreg_batch
+    n_lr = M.layout_size(M.logreg_layout(dim))
+    lr_loss = functools.partial(M.logreg_loss, dim=dim)
+    lower_artifact(
+        "logreg_grad",
+        M.grad_fn(lr_loss),
+        [("params", spec([n_lr])), ("x", spec([lb, dim])), ("y", spec([lb]))],
+        outdir,
+        manifest,
+        meta={"params": n_lr, "layout": M.layout_manifest(M.logreg_layout(dim)), "batch": lb},
+    )
+
+    # ---- MLP ----------------------------------------------------------------
+    sizes = [int(x) for x in args.mlp_sizes.split(",")]
+    n_mlp = M.layout_size(M.mlp_layout(sizes))
+    mlp_loss = functools.partial(M.mlp_loss, sizes=sizes)
+    mlp_inputs = [
+        ("params", spec([n_mlp])),
+        ("x", spec([args.mlp_batch, sizes[0]])),
+        ("y", spec([args.mlp_batch], I32)),
+    ]
+    lower_artifact(
+        "mlp_grad",
+        M.grad_fn(mlp_loss),
+        mlp_inputs,
+        outdir,
+        manifest,
+        meta={"params": n_mlp, "layout": M.layout_manifest(M.mlp_layout(sizes)), "batch": args.mlp_batch, "sizes": sizes},
+    )
+    lower_artifact(
+        "mlp_grad_q",
+        M.grad_q_fn(mlp_loss, s=args.q_s, bucket=args.q_bucket, norm=args.q_norm),
+        [mlp_inputs[0], ("uniforms", spec([n_mlp]))] + mlp_inputs[1:],
+        outdir,
+        manifest,
+        meta={"params": n_mlp, "layout": M.layout_manifest(M.mlp_layout(sizes)), "batch": args.mlp_batch, "sizes": sizes, **qmeta(n_mlp)},
+    )
+
+    # ---- transformer LM -----------------------------------------------------
+    cfg = M.TransformerConfig(
+        vocab=args.tfm_vocab,
+        d_model=args.tfm_dmodel,
+        n_layer=args.tfm_layers,
+        n_head=args.tfm_heads,
+        d_ff=args.tfm_dff,
+        seq=args.tfm_seq,
+    )
+    n_tfm = M.layout_size(M.transformer_layout(cfg))
+    tfm_loss = functools.partial(M.transformer_loss, cfg=cfg)
+    tfm_inputs = [
+        ("params", spec([n_tfm])),
+        ("tokens", spec([args.tfm_batch, cfg.seq + 1], I32)),
+    ]
+    tfm_meta = {
+        "params": n_tfm,
+        "layout": M.layout_manifest(M.transformer_layout(cfg)),
+        "batch": args.tfm_batch,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layer": cfg.n_layer,
+            "n_head": cfg.n_head, "d_ff": cfg.d_ff, "seq": cfg.seq,
+        },
+    }
+    lower_artifact("tfm_grad", M.grad_fn(tfm_loss), tfm_inputs, outdir, manifest, meta=tfm_meta)
+    lower_artifact(
+        "tfm_grad_q",
+        M.grad_q_fn(tfm_loss, s=args.q_s, bucket=args.q_bucket, norm=args.q_norm),
+        [tfm_inputs[0], ("uniforms", spec([n_tfm])), tfm_inputs[1]],
+        outdir,
+        manifest,
+        meta={**tfm_meta, **qmeta(n_tfm)},
+    )
+
+    # ---- standalone Pallas quantize kernel (Rust cross-validation) ----------
+    qnb, qd, qs = 64, 512, 15
+    lower_artifact(
+        "quantize",
+        functools.partial(quantize_pallas, s=qs, norm="l2"),
+        [("v", spec([qnb, qd])), ("u", spec([qnb, qd]))],
+        outdir,
+        manifest,
+        meta={"q_s": qs, "q_bucket": qd, "q_norm": "l2", "q_buckets": qnb},
+    )
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {outdir}/manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Layer-1 Pallas kernel: bucketed QSGD stochastic quantization.
+
+The paper performs quantization *on the GPU*, overlapped with backprop
+(double buffering, §5 Protocol); entropy coding stays on CPU threads. We
+mirror that split: this kernel is the on-accelerator half (quantize +
+dequantize on the level grid), and the Rust ``coding`` module is the CPU
+half (Elias coding of the levels).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA version
+assigns one thread block per bucket with a shared-memory reduction for the
+bucket scale. On TPU, each **bucket is one VMEM block** (`BlockSpec` row
+below); the scale is a VPU in-block reduction and the randomized rounding is
+elementwise VPU work. Quantization is memory-bound — the roofline is HBM
+bandwidth, so the BlockSpec *is* the optimization: stream (v, u) in, q out,
+3·d·4 bytes of VMEM per grid step, no MXU involvement.
+
+Must run with ``interpret=True`` on this testbed: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(v_ref, u_ref, q_ref, scale_ref, *, s: int, norm: str):
+    """One grid step = one bucket (a (1, d) block resident in VMEM)."""
+    v = v_ref[...]
+    u = u_ref[...]
+    absv = jnp.abs(v)
+    if norm == "l2":
+        scale = jnp.sqrt(jnp.sum(v * v))
+    else:  # max
+        scale = jnp.max(absv)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    r = jnp.minimum(absv * (s / safe), float(s))
+    lo = jnp.floor(r)
+    p = r - lo
+    lev = lo + (u < p).astype(v.dtype)
+    q = jnp.sign(v) * scale * (lev / float(s))
+    q_ref[...] = jnp.where(scale > 0, q, 0.0)
+    scale_ref[...] = jnp.full(scale_ref.shape, scale, dtype=v.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "norm"))
+def quantize_pallas(v2d: jnp.ndarray, u2d: jnp.ndarray, *, s: int, norm: str = "l2"):
+    """Quantize-dequantize each bucket row of ``v2d`` with uniforms ``u2d``.
+
+    Returns ``(q2d, scales)`` where ``q2d`` holds the on-grid reconstructed
+    values ``F(b)·sgn·ℓ/s`` and ``scales`` has shape (num_buckets, 1). The
+    scales let the CPU encoder recover the integer levels exactly:
+    ``ℓ_i = round(|q_i|·s/F(b))``.
+    """
+    nb, d = v2d.shape
+    kernel = functools.partial(_quantize_kernel, s=s, norm=norm)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, d), v2d.dtype),
+            jax.ShapeDtypeStruct((nb, 1), v2d.dtype),
+        ],
+        interpret=True,
+    )(v2d, u2d)
+
+
+def quantize_flat(v: jnp.ndarray, u: jnp.ndarray, *, s: int, bucket: int, norm: str = "l2"):
+    """Flat-vector entry point used by the L2 fused-gradient graphs.
+
+    Pads to a bucket multiple (paper §4: tensors are reshaped to fit bucket
+    sizes), runs the kernel, and returns ``(q, scales)`` with ``q`` unpadded
+    back to length n.
+    """
+    n = v.shape[0]
+    nb = -(-n // bucket)
+    pad = nb * bucket - n
+    v2 = jnp.pad(v, (0, pad)).reshape(nb, bucket)
+    u2 = jnp.pad(u, (0, pad)).reshape(nb, bucket)
+    q2, scales = quantize_pallas(v2, u2, s=s, norm=norm)
+    return q2.reshape(-1)[:n], scales

@@ -1,0 +1,87 @@
+"""Pure-jnp oracle for the bucketed stochastic-quantization kernel.
+
+This is the correctness contract for the Pallas kernel in ``quantize.py`` and
+for the Rust quantizer in ``rust/src/quant/stochastic.rs``: all three must
+agree bit-for-bit on the *level* assignment given the same uniforms.
+
+QSGD quantization (paper §3.1, with the §4 bucketing + max-norm variants):
+given a bucket ``b`` of ``d`` consecutive values and a scale
+``F(b) ∈ {‖b‖₂, ‖b‖∞}``, each coordinate is mapped to
+
+    Q_s(b_i) = F(b) · sgn(b_i) · ξ_i,   ξ_i ∈ {0, 1/s, …, 1}
+
+where, with ``r_i = |b_i|·s/F(b)``, ``ℓ = ⌊r_i⌋`` and ``p = r_i − ℓ``:
+
+    ξ_i = (ℓ + 1{u_i < p}) / s      (u_i ~ U[0,1), supplied by the caller)
+
+so that E[ξ_i] = |b_i|/F(b) (Lemma 3.1(i), unbiasedness).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucket_scales(v2d: jnp.ndarray, norm: str) -> jnp.ndarray:
+    """Per-bucket scale F(b): ‖b‖₂ (paper §3.1) or ‖b‖∞ (paper §4 variant).
+
+    ``v2d`` has shape (num_buckets, d); returns shape (num_buckets, 1).
+    """
+    if norm == "l2":
+        s = jnp.sqrt(jnp.sum(v2d * v2d, axis=-1, keepdims=True))
+    elif norm == "max":
+        s = jnp.max(jnp.abs(v2d), axis=-1, keepdims=True)
+    else:
+        raise ValueError(f"unknown norm {norm!r}")
+    return s
+
+
+def quantize_levels_ref(
+    v2d: jnp.ndarray, u2d: jnp.ndarray, s: int, norm: str = "l2"
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference levels: returns (levels int32 in [0, s], scales (nb,1)).
+
+    A zero bucket (scale == 0) quantizes to all-zero levels.
+    """
+    scale = bucket_scales(v2d, norm)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    r = jnp.abs(v2d) * (s / safe)
+    # Guard against fp overshoot: |b_i|·s/F(b) ≤ s mathematically, but fp
+    # division can exceed it by an ulp for max-norm's extremal coordinate.
+    r = jnp.minimum(r, float(s))
+    lo = jnp.floor(r)
+    p = r - lo
+    lev = lo + (u2d < p).astype(v2d.dtype)
+    lev = jnp.where(scale > 0, lev, 0.0)
+    return lev.astype(jnp.int32), scale
+
+
+def dequantize_ref(
+    levels: jnp.ndarray, signs: jnp.ndarray, scale: jnp.ndarray, s: int
+) -> jnp.ndarray:
+    """Q_s value from (levels, signs, per-bucket scale)."""
+    return scale * signs * (levels.astype(scale.dtype) / float(s))
+
+
+def quantize_dequantize_ref(
+    v2d: jnp.ndarray, u2d: jnp.ndarray, s: int, norm: str = "l2"
+) -> jnp.ndarray:
+    """End-to-end Q_s(v): quantize and reconstruct (the oracle the Pallas
+    kernel is tested against)."""
+    lev, scale = quantize_levels_ref(v2d, u2d, s, norm)
+    signs = jnp.sign(v2d)
+    return dequantize_ref(lev, signs, scale, s)
+
+
+def quantize_flat_ref(
+    v: jnp.ndarray, u: jnp.ndarray, s: int, bucket: int, norm: str = "l2"
+) -> jnp.ndarray:
+    """Flat-vector convenience wrapper: pads v to a multiple of ``bucket``
+    (paper §4 reshapes tensors to fit bucket sizes), quantizes, unpads."""
+    n = v.shape[0]
+    nb = -(-n // bucket)
+    pad = nb * bucket - n
+    v2 = jnp.pad(v, (0, pad)).reshape(nb, bucket)
+    u2 = jnp.pad(u, (0, pad)).reshape(nb, bucket)
+    q = quantize_dequantize_ref(v2, u2, s, norm)
+    return q.reshape(-1)[:n]

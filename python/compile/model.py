@@ -1,0 +1,235 @@
+"""Layer-2 JAX models: forward/backward graphs over a *flat* parameter vector.
+
+Every model here is exposed as a pure function
+
+    grad_fn(params: f32[n], <batch inputs>) -> (loss: f32[], grad: f32[n])
+
+so the Rust coordinator owns a single contiguous parameter buffer per model —
+exactly the representation QSGD's bucketed quantization operates on (§4: "view
+each gradient as a one-dimensional vector v, reshaping tensors if necessary").
+
+Fused variants additionally run the Layer-1 Pallas quantization kernel on the
+gradient *inside the same HLO module* (paper §5: quantization happens on the
+accelerator, overlapped with backprop; only entropy coding runs on CPU):
+
+    grad_q_fn(params, uniforms, <batch>) -> (loss, qgrad, scales)
+
+Build-time only. `aot.py` lowers these to HLO text; Rust loads and executes
+them via PJRT with zero Python on the hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.quantize import quantize_flat
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter plumbing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One named tensor inside the flat parameter vector."""
+
+    name: str
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        out = 1
+        for d in self.shape:
+            out *= d
+        return out
+
+
+def layout_size(specs: Sequence[TensorSpec]) -> int:
+    return sum(t.size for t in specs)
+
+
+def unflatten(params: jnp.ndarray, specs: Sequence[TensorSpec]) -> dict[str, jnp.ndarray]:
+    """Static slicing of the flat vector into named tensors."""
+    out = {}
+    off = 0
+    for t in specs:
+        out[t.name] = params[off : off + t.size].reshape(t.shape)
+        off += t.size
+    assert off == params.shape[0], f"layout {off} != params {params.shape[0]}"
+    return out
+
+
+def layout_manifest(specs: Sequence[TensorSpec]) -> list[dict]:
+    """JSON-able layout description consumed by rust/src/models/layout.rs
+    (tensor boundaries drive the <10K-element skip rule and bucket reshaping)."""
+    out = []
+    off = 0
+    for t in specs:
+        out.append({"name": t.name, "shape": list(t.shape), "offset": off, "size": t.size})
+        off += t.size
+    return out
+
+
+# --------------------------------------------------------------------------
+# Logistic regression (the paper's convex setting, Thm 3.4 / QSVRG)
+# --------------------------------------------------------------------------
+
+
+def logreg_layout(dim: int) -> list[TensorSpec]:
+    return [TensorSpec("w", (dim,)), TensorSpec("b", (1,))]
+
+
+def logreg_loss(params: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, dim: int, l2: float = 1e-4):
+    """Binary logistic regression with ridge term (ℓ-strong convexity for QSVRG)."""
+    p = unflatten(params, logreg_layout(dim))
+    logits = x @ p["w"] + p["b"][0]
+    # y in {0,1}; numerically stable BCE-with-logits.
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss + 0.5 * l2 * jnp.sum(params * params)
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (the paper's MNIST two-layer perceptron)
+# --------------------------------------------------------------------------
+
+
+def mlp_layout(sizes: Sequence[int]) -> list[TensorSpec]:
+    specs = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        specs.append(TensorSpec(f"fc{i}.w", (a, b)))
+        specs.append(TensorSpec(f"fc{i}.b", (b,)))
+    return specs
+
+
+def mlp_loss(params: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, sizes: Sequence[int]):
+    """ReLU MLP with softmax cross-entropy; y is int32 class labels."""
+    p = unflatten(params, mlp_layout(sizes))
+    h = x
+    nl = len(sizes) - 1
+    for i in range(nl):
+        h = h @ p[f"fc{i}.w"] + p[f"fc{i}.b"]
+        if i + 1 < nl:
+            h = jax.nn.relu(h)
+    logp = jax.nn.log_softmax(h, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (the paper's "recurrent" communication-bound workload class;
+# stands in for the LSTM/AN4 experiment and the e2e driver)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layer: int = 2
+    n_head: int = 4
+    d_ff: int = 512
+    seq: int = 64
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+
+def transformer_layout(cfg: TransformerConfig) -> list[TensorSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    specs = [
+        TensorSpec("embed", (cfg.vocab, d)),
+        TensorSpec("pos", (cfg.seq, d)),
+    ]
+    for i in range(cfg.n_layer):
+        specs += [
+            TensorSpec(f"l{i}.ln1.g", (d,)),
+            TensorSpec(f"l{i}.ln1.b", (d,)),
+            TensorSpec(f"l{i}.attn.wqkv", (d, 3 * d)),
+            TensorSpec(f"l{i}.attn.wo", (d, d)),
+            TensorSpec(f"l{i}.ln2.g", (d,)),
+            TensorSpec(f"l{i}.ln2.b", (d,)),
+            TensorSpec(f"l{i}.mlp.w1", (d, f)),
+            TensorSpec(f"l{i}.mlp.b1", (f,)),
+            TensorSpec(f"l{i}.mlp.w2", (f, d)),
+            TensorSpec(f"l{i}.mlp.b2", (d,)),
+        ]
+    specs += [
+        TensorSpec("lnf.g", (d,)),
+        TensorSpec("lnf.b", (d,)),
+        TensorSpec("unembed", (d, cfg.vocab)),
+    ]
+    return specs
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def transformer_loss(params: jnp.ndarray, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """Causal next-token LM loss. ``tokens`` is int32[B, seq+1]."""
+    p = unflatten(params, transformer_layout(cfg))
+    x_tok = tokens[:, :-1]
+    y_tok = tokens[:, 1:]
+    B, T = x_tok.shape
+    h = p["embed"][x_tok] + p["pos"][None, :T, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    for i in range(cfg.n_layer):
+        hn = _layer_norm(h, p[f"l{i}.ln1.g"], p[f"l{i}.ln1.b"])
+        qkv = hn @ p[f"l{i}.attn.wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(B, T, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(cfg.d_head))
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, cfg.d_model)
+        h = h + o @ p[f"l{i}.attn.wo"]
+        hn = _layer_norm(h, p[f"l{i}.ln2.g"], p[f"l{i}.ln2.b"])
+        h = h + jax.nn.gelu(hn @ p[f"l{i}.mlp.w1"] + p[f"l{i}.mlp.b1"]) @ p[f"l{i}.mlp.w2"] + p[
+            f"l{i}.mlp.b2"
+        ]
+    h = _layer_norm(h, p["lnf.g"], p["lnf.b"])
+    logits = h @ p["unembed"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y_tok[..., None], axis=-1))
+
+
+# --------------------------------------------------------------------------
+# (loss, grad) graphs and fused quantized-gradient graphs
+# --------------------------------------------------------------------------
+
+
+def grad_fn(loss_fn: Callable) -> Callable:
+    """(params, *batch) -> (loss, grad) — the artifact Rust executes per step."""
+
+    def f(params, *batch):
+        loss, g = jax.value_and_grad(loss_fn)(params, *batch)
+        return loss, g
+
+    return f
+
+
+def grad_q_fn(loss_fn: Callable, *, s: int, bucket: int, norm: str = "l2") -> Callable:
+    """(params, uniforms, *batch) -> (loss, qgrad, scales).
+
+    The Layer-1 Pallas kernel runs on the raw gradient inside the same HLO
+    module — the on-device half of QSGD. ``scales`` (one per bucket) lets the
+    Rust encoder recover exact integer levels for Elias coding.
+    """
+
+    def f(params, uniforms, *batch):
+        loss, g = jax.value_and_grad(loss_fn)(params, *batch)
+        q, scales = quantize_flat(g, uniforms, s=s, bucket=bucket, norm=norm)
+        return loss, q, scales
+
+    return f

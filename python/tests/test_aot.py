@@ -1,0 +1,74 @@
+"""AOT lowering contract: HLO-text interchange + manifest integrity.
+
+The interchange format requirements come from /opt/xla-example/README.md:
+HLO *text* (not serialized proto) so xla_extension 0.5.1 can re-parse with
+reassigned instruction ids.
+"""
+
+import functools
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as M
+
+
+def test_to_hlo_text_produces_parseable_module():
+    lowered = jax.jit(lambda x, y: (x @ y + 1.0,)).lower(
+        jax.ShapeDtypeStruct((2, 3), jnp.float32), jax.ShapeDtypeStruct((3, 2), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "parameter(0)" in text
+    # return_tuple=True ⇒ root is a tuple
+    assert "tuple" in text
+
+
+def test_lower_artifact_writes_file_and_manifest(tmp_path: pathlib.Path):
+    manifest = {}
+    dim = 8
+    loss = functools.partial(M.logreg_loss, dim=dim)
+    n = M.layout_size(M.logreg_layout(dim))
+    aot.lower_artifact(
+        "toy",
+        M.grad_fn(loss),
+        [
+            ("params", aot.spec([n])),
+            ("x", aot.spec([4, dim])),
+            ("y", aot.spec([4])),
+        ],
+        tmp_path,
+        manifest,
+        meta={"params": n, "layout": M.layout_manifest(M.logreg_layout(dim)), "batch": 4},
+    )
+    assert (tmp_path / "toy.hlo.txt").exists()
+    e = manifest["toy"]
+    assert e["params"] == n
+    assert [i["name"] for i in e["inputs"]] == ["params", "x", "y"]
+    assert e["outputs"][0]["shape"] == []  # scalar loss
+    assert e["outputs"][1]["shape"] == [n]  # gradient
+    # manifest must be JSON-serialisable (the Rust parser consumes it)
+    json.dumps(manifest)
+
+
+def test_built_manifest_consistent_with_layouts():
+    """If artifacts/ exists, every grad artifact's layout must cover exactly
+    its parameter count and the fused variants must carry quant metadata."""
+    art_dir = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    mpath = art_dir / "manifest.json"
+    if not mpath.exists():
+        import pytest
+
+        pytest.skip("artifacts not built")
+    manifest = json.loads(mpath.read_text())
+    for name, e in manifest.items():
+        assert (art_dir / e["file"]).exists(), name
+        if "layout" in e:
+            total = sum(t["size"] for t in e["layout"])
+            assert total == e["params"], name
+            offs = [t["offset"] for t in e["layout"]]
+            assert offs == sorted(offs)
+        if name.endswith("_q") or name == "quantize":
+            assert e["q_s"] >= 1 and e["q_bucket"] >= 1, name

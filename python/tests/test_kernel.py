@@ -1,0 +1,121 @@
+"""Layer-1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+The kernel/oracle agreement is the CORE correctness signal for the quantizer
+(the Rust implementation is cross-checked against the same oracle through the
+``quantize`` artifact in rust/tests/). Hypothesis sweeps shapes, level counts,
+norms and seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quantize import quantize_flat, quantize_pallas
+
+
+def _rand(nb, d, seed, scale=1.0):
+    kv, ku = jax.random.split(jax.random.PRNGKey(seed))
+    v = jax.random.normal(kv, (nb, d), dtype=jnp.float32) * scale
+    u = jax.random.uniform(ku, (nb, d), dtype=jnp.float32)
+    return v, u
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 8),
+    d=st.sampled_from([1, 2, 7, 32, 64, 129]),
+    s=st.sampled_from([1, 2, 3, 15, 255]),
+    norm=st.sampled_from(["l2", "max"]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref(nb, d, s, norm, seed):
+    v, u = _rand(nb, d, seed)
+    q, scales = quantize_pallas(v, u, s=s, norm=norm)
+    qr = ref.quantize_dequantize_ref(v, u, s, norm)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(scales)[:, 0], np.asarray(ref.bucket_scales(v, norm))[:, 0], rtol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    bucket=st.sampled_from([32, 64, 512]),
+    s=st.sampled_from([1, 3, 15]),
+    seed=st.integers(0, 2**16),
+)
+def test_flat_padding_matches_ref(n, bucket, s, seed):
+    kv, ku = jax.random.split(jax.random.PRNGKey(seed))
+    v = jax.random.normal(kv, (n,), dtype=jnp.float32)
+    u = jax.random.uniform(ku, (n,), dtype=jnp.float32)
+    q, _ = quantize_flat(v, u, s=s, bucket=bucket, norm="l2")
+    qr = ref.quantize_flat_ref(v, u, s, bucket, "l2")
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), rtol=1e-6, atol=1e-7)
+
+
+def test_levels_are_on_grid():
+    """Every output value must equal scale·sgn·ℓ/s for integer ℓ ∈ [0, s]."""
+    v, u = _rand(16, 128, 7)
+    s = 15
+    q, scales = quantize_pallas(v, u, s=s, norm="l2")
+    lev = np.abs(np.asarray(q)) * s / np.asarray(scales)
+    assert np.allclose(lev, np.round(lev), atol=1e-4)
+    assert lev.max() <= s + 1e-4
+
+
+def test_zero_bucket():
+    v = jnp.zeros((3, 64), dtype=jnp.float32)
+    u = jnp.full((3, 64), 0.5, dtype=jnp.float32)
+    q, scales = quantize_pallas(v, u, s=4, norm="l2")
+    assert np.all(np.asarray(q) == 0)
+    assert np.all(np.asarray(scales) == 0)
+
+
+def test_unbiasedness_monte_carlo():
+    """Lemma 3.1(i): E[Q_s(v)] = v. Average over many uniform draws."""
+    kv = jax.random.PRNGKey(3)
+    v = jax.random.normal(kv, (4, 64), dtype=jnp.float32)
+    s = 4
+    trials = 600
+    acc = np.zeros_like(np.asarray(v))
+    for t in range(trials):
+        u = jax.random.uniform(jax.random.PRNGKey(1000 + t), (4, 64), dtype=jnp.float32)
+        acc += np.asarray(ref.quantize_dequantize_ref(v, u, s, "l2"))
+    mean = acc / trials
+    scale = np.asarray(ref.bucket_scales(v, "l2"))
+    # per-coordinate stderr ≈ scale/(s·sqrt(trials)); allow 5 sigma
+    tol = 5 * scale / (s * np.sqrt(trials))
+    assert np.all(np.abs(mean - np.asarray(v)) < tol + 1e-6)
+
+
+@pytest.mark.parametrize("s,norm", [(1, "l2"), (4, "l2"), (16, "l2")])
+def test_variance_bound(s, norm):
+    """Lemma 3.1(ii): E‖Q_s(v)−v‖² ≤ min(n/s², √n/s)·‖v‖² (per bucket, d=n)."""
+    d = 256
+    kv = jax.random.PRNGKey(11)
+    v = jax.random.normal(kv, (1, d), dtype=jnp.float32)
+    bound = min(d / s**2, np.sqrt(d) / s) * float(jnp.sum(v * v))
+    trials = 400
+    errs = []
+    for t in range(trials):
+        u = jax.random.uniform(jax.random.PRNGKey(t), (1, d), dtype=jnp.float32)
+        q = ref.quantize_dequantize_ref(v, u, s, norm)
+        errs.append(float(jnp.sum((q - v) ** 2)))
+    assert np.mean(errs) <= bound * 1.05
+
+
+def test_sparsity_bound():
+    """Lemma 3.1(iii): E‖Q_s(v)‖₀ ≤ s(s+√n)."""
+    d, s = 1024, 2
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, d), dtype=jnp.float32)
+    trials = 200
+    nnz = []
+    for t in range(trials):
+        u = jax.random.uniform(jax.random.PRNGKey(t), (1, d), dtype=jnp.float32)
+        q = ref.quantize_dequantize_ref(v, u, s, "l2")
+        nnz.append(int(jnp.sum(q != 0)))
+    assert np.mean(nnz) <= s * (s + np.sqrt(d)) * 1.05

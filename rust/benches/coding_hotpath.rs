@@ -1,0 +1,110 @@
+//! L3 hot-path microbenchmarks: quantization, Elias coding, end-to-end
+//! encode/decode throughput. These numbers feed `CostModel` calibration and
+//! the §Perf log in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench coding_hotpath`
+
+use qsgd::bench::{section, Bench};
+use qsgd::coding::gradient::{self, Regime};
+use qsgd::coordinator::CompressorSpec;
+use qsgd::quant::{stochastic, Norm};
+use qsgd::util::rng::{self, Xoshiro256};
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Xoshiro256::from_u64(0);
+    let n = 1 << 20; // 1M coordinates ≈ a mid-size model shard
+    let grad = rng::normal_vec(&mut rng, n);
+    let coords = n as f64;
+
+    section("quantize (1M coords)");
+    for (label, s, bucket, norm) in [
+        ("4-bit/512 max-norm (paper §5)", 7u32, 512usize, Norm::Max),
+        ("2-bit/64 max-norm", 1, 64, Norm::Max),
+        ("8-bit/512 max-norm", 127, 512, Norm::Max),
+        ("s=√n L2 (paper §3.1)", 1024, n, Norm::L2),
+    ] {
+        let mut r = Xoshiro256::from_u64(1);
+        let s1 = b.run(&format!("quantize {label}"), || {
+            stochastic::quantize(&grad, s, bucket, norm, &mut r)
+        });
+        s1.report_throughput(coords * 4.0);
+    }
+
+    section("entropy code (quantized 4-bit/512, 1M coords)");
+    let mut r = Xoshiro256::from_u64(2);
+    let q = stochastic::quantize(&grad, 7, 512, Norm::Max, &mut r);
+    let enc_sparse = b.run("encode sparse", || gradient::encode(&q, Regime::Sparse));
+    enc_sparse.report_throughput(coords * 4.0);
+    let enc_dense = b.run("encode dense", || gradient::encode(&q, Regime::Dense));
+    enc_dense.report_throughput(coords * 4.0);
+    let bytes_sparse = gradient::encode(&q, Regime::Sparse);
+    let bytes_dense = gradient::encode(&q, Regime::Dense);
+    println!(
+        "  (wire: sparse {} vs dense {} for {} coords)",
+        bytes_sparse.len(),
+        bytes_dense.len(),
+        n
+    );
+    let dec = b.run("decode sparse", || gradient::decode(&bytes_sparse).unwrap());
+    dec.report_throughput(coords * 4.0);
+    let dec2 = b.run("decode dense", || gradient::decode(&bytes_dense).unwrap());
+    dec2.report_throughput(coords * 4.0);
+
+    section("end-to-end Compressor (quantize+code / decode+dequant)");
+    for spec in [
+        CompressorSpec::qsgd_2bit(),
+        CompressorSpec::qsgd_4bit(),
+        CompressorSpec::qsgd_8bit(),
+        CompressorSpec::OneBit { column: 512 },
+        CompressorSpec::TernGrad { bucket: 512 },
+    ] {
+        let mut c = spec.build(n);
+        let mut r = Xoshiro256::from_u64(3);
+        let enc = b.run(&format!("compress {}", spec.label()), || c.compress(&grad, &mut r));
+        enc.report_throughput(coords * 4.0);
+        let msg = c.compress(&grad, &mut r);
+        let dec = b.run(&format!("decompress {}", spec.label()), || {
+            c.decompress(&msg, n).unwrap()
+        });
+        dec.report_throughput(coords * 4.0);
+    }
+
+    section("decode-side aggregation (K=8 peers)");
+    let mut r = Xoshiro256::from_u64(4);
+    let qs: Vec<_> =
+        (0..8).map(|_| stochastic::quantize(&grad, 7, 512, Norm::Max, &mut r)).collect();
+    let agg = b.run("dequantize_add x8 (decoded)", || {
+        let mut acc = vec![0.0f32; n];
+        for q in &qs {
+            q.dequantize_add(1.0 / 8.0, &mut acc);
+        }
+        acc
+    });
+    agg.report_throughput(coords * 4.0 * 8.0);
+    // Fused wire→accumulator path (§6 sparsity exploitation): sparse s=1
+    // messages aggregate in O(nnz) per peer.
+    let sparse_msgs: Vec<Vec<u8>> = (0..8)
+        .map(|_| {
+            let q = stochastic::quantize(&grad, 1, n, Norm::L2, &mut r);
+            gradient::encode(&q, Regime::Sparse)
+        })
+        .collect();
+    let agg2 = b.run("decode_add x8 (sparse s=1, from wire)", || {
+        let mut acc = vec![0.0f32; n];
+        for m in &sparse_msgs {
+            gradient::decode_add(m, 1.0 / 8.0, &mut acc).unwrap();
+        }
+        acc
+    });
+    agg2.report_throughput(coords * 4.0 * 8.0);
+    let dense_msgs: Vec<Vec<u8>> = qs.iter().map(|q| gradient::encode_auto(q)).collect();
+    let agg3 = b.run("decode_add x8 (4-bit/512, from wire)", || {
+        let mut acc = vec![0.0f32; n];
+        for m in &dense_msgs {
+            gradient::decode_add(m, 1.0 / 8.0, &mut acc).unwrap();
+        }
+        acc
+    });
+    agg3.report_throughput(coords * 4.0 * 8.0);
+}

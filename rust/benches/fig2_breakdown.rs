@@ -1,0 +1,86 @@
+//! Figure 2 / Figure 4 reproduction: epoch-time breakdown (communication vs
+//! computation) for every evaluation network on 2/4/8/16 GPUs, under
+//! 32-bit, 1BitSGD, QSGD 2-bit/64 and QSGD 4-bit/512 — the same series the
+//! paper's stacked bars show.
+//!
+//! Run: `cargo bench --bench fig2_breakdown`
+
+use qsgd::bench::section;
+use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm};
+use qsgd::metrics::Table;
+use qsgd::models::{zoo, CostModel};
+use qsgd::simnet::{Preset, SimNet};
+use qsgd::util::stats;
+
+fn main() {
+    let cost = CostModel::k80();
+    let arms: [(&str, EpochArm); 4] = [
+        ("32bit", EpochArm::fp32()),
+        ("1BitSGD", EpochArm::onebit()),
+        ("QSGD 2bit/64", EpochArm::qsgd(2, 64)),
+        ("QSGD 4bit/512", EpochArm::qsgd(4, 512)),
+    ];
+
+    for net in zoo::table1_networks() {
+        section(&format!(
+            "{} — {} params, global batches {:?}",
+            net.name,
+            stats::fmt_bytes(net.params() as f64 * 4.0),
+            net.batch_sizes
+        ));
+        let mut t = Table::new(&[
+            "GPUs", "arm", "epoch", "comm", "compute", "comm%", "msg/step",
+        ]);
+        for gpus in [2usize, 4, 8, 16] {
+            let simnet = SimNet::preset(gpus, Preset::K80Pcie);
+            for (label, arm) in &arms {
+                let s = simulate_epoch(&net, gpus, arm, &simnet, &cost, 1, 0);
+                t.row(&[
+                    gpus.to_string(),
+                    label.to_string(),
+                    stats::fmt_duration(s.epoch_time()),
+                    stats::fmt_duration(s.breakdown.communication().secs()),
+                    stats::fmt_duration(s.breakdown.compute.secs()),
+                    format!("{:.0}%", s.breakdown.comm_fraction() * 100.0),
+                    stats::fmt_bytes(s.message_bytes as f64),
+                ]);
+            }
+        }
+        t.print();
+    }
+
+    section("paper anchor points");
+    let cost = CostModel::k80();
+    let a = zoo::alexnet();
+    let simnet16 = SimNet::preset(16, Preset::K80Pcie);
+    let fp = simulate_epoch(&a, 16, &EpochArm::fp32(), &simnet16, &cost, 1, 0);
+    let q4 = simulate_epoch(&a, 16, &EpochArm::qsgd(4, 512), &simnet16, &cost, 1, 0);
+    println!(
+        "16-GPU AlexNet fp32 comm fraction: {:.0}%   (paper: >80%)",
+        fp.breakdown.comm_fraction() * 100.0
+    );
+    println!(
+        "16-GPU AlexNet 4-bit comm-time cut: {:.1}x  (paper: 4x)",
+        fp.breakdown.communication().secs() / q4.breakdown.communication().secs()
+    );
+    println!(
+        "16-GPU AlexNet 4-bit epoch-time cut: {:.1}x (paper: 2.5x)",
+        fp.epoch_time() / q4.epoch_time()
+    );
+    let l = zoo::lstm_an4();
+    let simnet2 = SimNet::preset(2, Preset::K80Pcie);
+    let lfp = simulate_epoch(&l, 2, &EpochArm::fp32(), &simnet2, &cost, 1, 0);
+    let lq = simulate_epoch(&l, 2, &EpochArm::qsgd(4, 512), &simnet2, &cost, 1, 0);
+    println!(
+        "2-GPU LSTM fp32 comm fraction: {:.0}%       (paper: 71%)",
+        lfp.breakdown.comm_fraction() * 100.0
+    );
+    println!(
+        "2-GPU LSTM 4-bit comm-time cut: {:.1}x      (paper: 6.8x)",
+        lfp.breakdown.communication().secs() / lq.breakdown.communication().secs()
+    );
+    println!(
+        "2-GPU LSTM 4-bit epoch-time cut: {:.1}x     (paper: 2.7x)",
+        lfp.epoch_time() / lq.epoch_time()
+    );
+}

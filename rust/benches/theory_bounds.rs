@@ -1,0 +1,183 @@
+//! Theory-validation bench: regenerates the paper's analytical claims as
+//! measured-vs-bound tables.
+//!
+//! * Lemma 3.1 — unbiasedness / variance / sparsity of Q_s.
+//! * Theorem 3.2 — sparse code length vs bound.
+//! * Corollary 3.3 — dense code length vs 2.8n + 32 at s = √n.
+//! * §4 — the bucket-size/bit-width variance knob (√d/2^b table).
+//! * Theorem F.4 — deterministic GD quantizer code length.
+//!
+//! Run: `cargo bench --bench theory_bounds`
+
+use qsgd::bench::section;
+use qsgd::coding::gradient as gcode;
+use qsgd::metrics::Table;
+use qsgd::quant::{deterministic, stochastic, variance_bound, Norm};
+use qsgd::util::rng::{self, Xoshiro256};
+
+fn main() {
+    let mut rng = Xoshiro256::from_u64(0);
+
+    section("Lemma 3.1: variance + sparsity of Q_s (n = 16384, 40 trials)");
+    let n = 16384usize;
+    let v = rng::normal_vec(&mut rng, n);
+    let vnorm2: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+    let mut t = Table::new(&[
+        "s", "E var / ‖v‖²", "min(n/s²,√n/s)", "E nnz", "s(s+√n)", "mean |bias|",
+    ]);
+    for s in [1u32, 2, 4, 16, 128] {
+        let trials = 40;
+        let mut var = 0.0f64;
+        let mut nnz = 0usize;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let q = stochastic::quantize_paper(&v, s, &mut rng);
+            let d = q.dequantize();
+            var += v.iter().zip(&d).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>();
+            nnz += q.nnz();
+            for (m, x) in mean.iter_mut().zip(&d) {
+                *m += *x as f64 / trials as f64;
+            }
+        }
+        let bias: f64 = mean
+            .iter()
+            .zip(&v)
+            .map(|(m, &x)| (m - x as f64).abs())
+            .sum::<f64>()
+            / n as f64;
+        t.row(&[
+            s.to_string(),
+            format!("{:.3}", var / trials as f64 / vnorm2),
+            format!("{:.3}", ((n as f64) / (s as f64).powi(2)).min((n as f64).sqrt() / s as f64)),
+            format!("{:.0}", nnz as f64 / trials as f64),
+            format!("{:.0}", s as f64 * (s as f64 + (n as f64).sqrt())),
+            format!("{bias:.4}"),
+        ]);
+    }
+    t.print();
+
+    section("Theorem 3.2 / Corollary 3.3: expected code length (bits)");
+    let mut t = Table::new(&["n", "s", "regime", "measured", "bound", "bits/coord", "paper headline"]);
+    for (n, s) in [(4096usize, 1u32), (4096, 2), (16384, 1), (16384, 4)] {
+        let v = rng::normal_vec(&mut rng, n);
+        let trials = 25;
+        let bits: f64 = (0..trials)
+            .map(|_| {
+                let q = stochastic::quantize_paper(&v, s, &mut rng);
+                gcode::encode(&q, gcode::Regime::Sparse).len() as f64 * 8.0
+            })
+            .sum::<f64>()
+            / trials as f64;
+        t.row(&[
+            n.to_string(),
+            s.to_string(),
+            "sparse".into(),
+            format!("{bits:.0}"),
+            format!("{:.0}", gcode::sparse_bits_bound(n, s)),
+            format!("{:.3}", bits / n as f64),
+            "√n(log n+O(1)) @ s=1".into(),
+        ]);
+    }
+    for n in [1024usize, 4096, 16384] {
+        let s = (n as f64).sqrt() as u32;
+        let v = rng::normal_vec(&mut rng, n);
+        let trials = 25;
+        let bits: f64 = (0..trials)
+            .map(|_| {
+                let q = stochastic::quantize_paper(&v, s, &mut rng);
+                gcode::encode(&q, gcode::Regime::Dense).len() as f64 * 8.0
+            })
+            .sum::<f64>()
+            / trials as f64;
+        t.row(&[
+            n.to_string(),
+            format!("√n={s}"),
+            "dense".into(),
+            format!("{bits:.0}"),
+            format!("{:.0}", gcode::dense_bits_bound(n, s)),
+            format!("{:.3}", bits / n as f64),
+            format!("2.8n+32 = {:.0}", 2.8 * n as f64 + 32.0),
+        ]);
+    }
+    t.print();
+    println!("  (dense measured ≈3.1 bits/coord vs Cor. 3.3 headline 2.8 — the paper's");
+    println!("   constant drops o(1) terms; the rigorous Lemma A.6 bound holds.)");
+
+    section("§4 variance knob: bucket size d × bit width b (bound √d/2^b)");
+    let mut t = Table::new(&["bucket d", "bits b", "bound min(d/s²,√d/s)", "measured var blowup"]);
+    for (d, bits) in [(64usize, 2u32), (128, 2), (512, 4), (8192, 4), (512, 8)] {
+        let s = (1u32 << (bits - 1)) - 1;
+        let v = rng::normal_vec(&mut rng, d);
+        let vn2: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+        let trials = 300;
+        let var: f64 = (0..trials)
+            .map(|_| {
+                let q = stochastic::quantize(&v, s, d, Norm::L2, &mut rng);
+                let dd = q.dequantize();
+                v.iter().zip(&dd).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>()
+            })
+            .sum::<f64>()
+            / trials as f64;
+        t.row(&[
+            d.to_string(),
+            bits.to_string(),
+            format!("{:.3}", variance_bound(d, s)),
+            format!("{:.3}", var / vn2),
+        ]);
+    }
+    t.print();
+    println!("  (paper example: d=512, 4-bit ⇒ √512/2⁴ ≈ 1.41)");
+
+    section("ablation: integer code choice (omega vs gamma vs delta), bits per gradient");
+    // Re-encode the same quantized gradients with each integer code and
+    // compare total wire size — the design choice behind the paper's
+    // Elias-omega pick (asymptotically optimal) vs the simpler codes.
+    use qsgd::coding::bitstream::BitWriter;
+    use qsgd::coding::elias;
+    let mut t = Table::new(&["config", "omega", "gamma", "delta"]);
+    for (n, s, label) in [
+        (16384usize, 1u32, "s=1 sparse-ish"),
+        (16384, 4, "s=4"),
+        (16384, 128, "s=√n dense"),
+    ] {
+        let v = rng::normal_vec(&mut rng, n);
+        let q = stochastic::quantize_paper(&v, s, &mut rng);
+        let total = |enc: &dyn Fn(&mut BitWriter, u64)| -> u64 {
+            let mut w = BitWriter::new();
+            for b in &q.buckets {
+                for &l in &b.levels {
+                    enc(&mut w, l.unsigned_abs() as u64 + 1);
+                    if l != 0 {
+                        w.write_bit(l < 0);
+                    }
+                }
+            }
+            w.len_bits()
+        };
+        t.row(&[
+            label.to_string(),
+            format!("{}", total(&|w, k| elias::encode(w, k))),
+            format!("{}", total(&elias::encode_gamma)),
+            format!("{}", total(&elias::encode_delta)),
+        ]);
+    }
+    t.print();
+    println!("  (gamma wins at tiny levels; omega/delta win as levels grow — the\n   paper's omega choice is the asymptotically safe one)");
+
+    section("Theorem F.4: deterministic GD quantizer code length");
+    let mut t = Table::new(&["n", "|I(v)|", "√n", "bits", "√n(log n+1+log e)+32"]);
+    for n in [256usize, 1024, 4096, 65536] {
+        let v = rng::normal_vec(&mut rng, n);
+        let q = deterministic::quantize(&v);
+        let bits = q.encode().len() * 8;
+        let bound = (n as f64).sqrt() * ((n as f64).log2() + 1.0 + std::f64::consts::E.log2()) + 32.0;
+        t.row(&[
+            n.to_string(),
+            q.indices.len().to_string(),
+            format!("{:.1}", (n as f64).sqrt()),
+            bits.to_string(),
+            format!("{bound:.0}"),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (the offline environment has no criterion).
+//!
+//! `cargo bench` targets declare `harness = false` and drive this module:
+//! warmup, calibrated iteration counts, multiple samples, median/p10/p90
+//! reporting, and optional throughput lines. Output is plain text tables so
+//! bench logs read like the paper's.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct Sampled {
+    pub name: String,
+    /// Per-iteration wall time samples, seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Sampled {
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn report(&self) {
+        let med = self.median();
+        println!(
+            "{:<44} {:>10}  (p10 {:>10}, p90 {:>10}, n={})",
+            self.name,
+            stats::fmt_duration(med),
+            stats::fmt_duration(stats::percentile(&self.samples, 10.0)),
+            stats::fmt_duration(stats::percentile(&self.samples, 90.0)),
+            self.samples.len()
+        );
+    }
+
+    pub fn report_throughput(&self, bytes_per_iter: f64) {
+        let med = self.median();
+        println!(
+            "{:<44} {:>10}  {:>12}/s",
+            self.name,
+            stats::fmt_duration(med),
+            stats::fmt_bytes(bytes_per_iter / med)
+        );
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    /// Target per-sample duration; iterations auto-calibrate to this.
+    pub sample_target_s: f64,
+    pub samples: usize,
+    pub warmup_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { sample_target_s: 0.08, samples: 12, warmup_s: 0.15 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { sample_target_s: 0.03, samples: 7, warmup_s: 0.05 }
+    }
+
+    /// Benchmark `f`, which performs ONE unit of work per call. Returns
+    /// per-iteration timings. A `black_box`-style sink prevents the optimizer
+    /// from eliding the closure's result: return something observable.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Sampled {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut iters_done = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_s || iters_done < 3 {
+            sink(f());
+            iters_done += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / iters_done as f64;
+        let iters = ((self.sample_target_s / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                sink(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        Sampled { name: name.to_string(), samples }
+    }
+}
+
+/// Opaque sink — prevents dead-code elimination of benchmark bodies.
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a markdown-style table row with fixed column widths.
+pub fn row(cols: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cols.iter().zip(widths) {
+        line.push_str(&format!("{:<width$}  ", c, width = w));
+    }
+    println!("{}", line.trim_end());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let b = Bench { sample_target_s: 0.001, samples: 3, warmup_s: 0.001 };
+        let s = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(s.samples.len(), 3);
+        assert!(s.median() > 0.0);
+    }
+}

@@ -1,0 +1,239 @@
+//! MSB-first bit-level I/O for the gradient wire format.
+//!
+//! The encoder is on the hot path (the paper overlaps quantize+encode with
+//! backprop; if coding is slower than the network it becomes the bottleneck),
+//! so the writer appends into a `u64` accumulator and spills whole words.
+
+/// Append-only bit buffer (MSB-first within each byte).
+#[derive(Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Pending bits, left-aligned in the low `fill` bits of `acc`.
+    acc: u64,
+    fill: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { buf: Vec::with_capacity(bytes), acc: 0, fill: 0 }
+    }
+
+    /// Total bits written so far.
+    #[inline]
+    pub fn len_bits(&self) -> u64 {
+        self.buf.len() as u64 * 8 + self.fill as u64
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Write the low `count` bits of `v` (MSB of those bits first). Writes
+    /// wider than 32 bits are split so the 64-bit accumulator (≤31 pending
+    /// bits + ≤32 new) never overflows.
+    #[inline]
+    pub fn write_bits(&mut self, v: u64, count: u32) {
+        debug_assert!(count <= 64);
+        debug_assert!(count == 64 || v < (1u64 << count));
+        if count > 32 {
+            self.write_bits(v >> 32, count - 32);
+            self.write_bits(v & 0xffff_ffff, 32);
+            return;
+        }
+        self.acc = (self.acc << count) | v;
+        self.fill += count;
+        // Spill whole 32-bit words at once (perf: the encoder emits 2–8 bit
+        // codes; byte-at-a-time spilling was ~15% of encode time).
+        if self.fill >= 32 {
+            self.fill -= 32;
+            let word = (self.acc >> self.fill) as u32;
+            self.buf.extend_from_slice(&word.to_be_bytes());
+        }
+    }
+
+    /// Raw 32-bit float (the per-bucket scale; `F = 32` in the paper).
+    #[inline]
+    pub fn write_f32(&mut self, x: f32) {
+        self.write_bits(x.to_bits() as u64, 32);
+    }
+
+    /// Flush (zero-padding the final partial byte) and return the bytes.
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        while self.fill >= 8 {
+            self.fill -= 8;
+            self.buf.push((self.acc >> self.fill) as u8);
+        }
+        if self.fill > 0 {
+            let pad = 8 - self.fill;
+            self.buf.push(((self.acc << pad) & 0xff) as u8);
+            self.fill = 0;
+        }
+        self.buf
+    }
+}
+
+/// Reader over a byte slice produced by [`BitWriter`].
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next bit index.
+    pos: u64,
+}
+
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+pub struct BitstreamExhausted;
+
+impl std::fmt::Display for BitstreamExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bitstream exhausted")
+    }
+}
+impl std::error::Error for BitstreamExhausted {}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    #[inline]
+    pub fn bits_remaining(&self) -> u64 {
+        (self.buf.len() as u64 * 8).saturating_sub(self.pos)
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool, BitstreamExhausted> {
+        if self.pos >= self.buf.len() as u64 * 8 {
+            return Err(BitstreamExhausted);
+        }
+        let byte = self.buf[(self.pos / 8) as usize];
+        let bit = (byte >> (7 - (self.pos % 8))) & 1;
+        self.pos += 1;
+        Ok(bit == 1)
+    }
+
+    #[inline]
+    pub fn read_bits(&mut self, count: u32) -> Result<u64, BitstreamExhausted> {
+        debug_assert!(count <= 64);
+        if self.bits_remaining() < count as u64 {
+            return Err(BitstreamExhausted);
+        }
+        let mut out = 0u64;
+        let mut left = count;
+        while left > 0 {
+            let byte_idx = (self.pos / 8) as usize;
+            let bit_off = (self.pos % 8) as u32;
+            let avail = 8 - bit_off;
+            let take = avail.min(left);
+            let byte = self.buf[byte_idx] as u64;
+            let chunk = (byte >> (avail - take)) & ((1u64 << take) - 1);
+            out = (out << take) | chunk;
+            self.pos += take as u64;
+            left -= take;
+        }
+        Ok(out)
+    }
+
+    #[inline]
+    pub fn read_f32(&mut self) -> Result<f32, BitstreamExhausted> {
+        Ok(f32::from_bits(self.read_bits(32)? as u32))
+    }
+
+    /// Peek the next `count ≤ 32` bits without consuming, zero-padded past
+    /// the end of the stream (prefix-table decoding needs a fixed window).
+    #[inline]
+    pub fn peek_bits(&self, count: u32) -> u64 {
+        debug_assert!((1..=32).contains(&count));
+        let byte_idx = (self.pos / 8) as usize;
+        let bit_off = (self.pos % 8) as u32;
+        // Fast path: an 8-byte window always contains bit_off + 32 bits.
+        if byte_idx + 8 <= self.buf.len() {
+            let w = u64::from_be_bytes(self.buf[byte_idx..byte_idx + 8].try_into().unwrap());
+            return (w << bit_off) >> (64 - count);
+        }
+        // Tail: assemble what remains, zero-padded.
+        let mut out = 0u64;
+        let mut pos = self.pos;
+        let mut left = count;
+        let total = self.buf.len() as u64 * 8;
+        while left > 0 {
+            if pos >= total {
+                out <<= left;
+                break;
+            }
+            let bi = (pos / 8) as usize;
+            let off = (pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(left);
+            let byte = self.buf[bi] as u64;
+            let chunk = (byte >> (avail - take)) & ((1u64 << take) - 1);
+            out = (out << take) | chunk;
+            pos += take as u64;
+            left -= take;
+        }
+        out
+    }
+
+    /// Consume `count` bits previously peeked.
+    #[inline]
+    pub fn advance(&mut self, count: u32) -> Result<(), BitstreamExhausted> {
+        if self.bits_remaining() < count as u64 {
+            return Err(BitstreamExhausted);
+        }
+        self.pos += count as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        w.write_bits(0b1011, 4);
+        w.write_bits(0xdead_beef, 32);
+        w.write_f32(-1.5);
+        w.write_bits(u64::MAX, 64);
+        assert_eq!(w.len_bits(), 1 + 4 + 32 + 32 + 64);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit().unwrap());
+        assert_eq!(r.read_bits(4).unwrap(), 0b1011);
+        assert_eq!(r.read_bits(32).unwrap(), 0xdead_beef);
+        assert_eq!(r.read_f32().unwrap(), -1.5);
+        assert_eq!(r.read_bits(64).unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error() {
+        let bytes = BitWriter::new().into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bit(), Err(BitstreamExhausted));
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        // padding bits are readable (zero), but not beyond the byte
+        assert_eq!(r.read_bits(8).unwrap(), 0b1010_0000);
+        assert_eq!(r.read_bit(), Err(BitstreamExhausted));
+    }
+
+    #[test]
+    fn cross_byte_reads() {
+        let mut w = BitWriter::new();
+        for i in 0..100u64 {
+            w.write_bits(i % 4, 2);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for i in 0..100u64 {
+            assert_eq!(r.read_bits(2).unwrap(), i % 4);
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! The end-to-end QSGD compressor: stochastic quantization + Elias coding,
+//! as plugged into Algorithm 1's Encode/Decode steps.
+
+use rand_core::RngCore;
+
+use super::gradient::{self, Regime};
+use crate::quant::{self, Compressor, Norm};
+
+/// QSGD Encode/Decode (quantize → entropy-code). Stateless (the paper:
+/// "quantization on the fly, without error accumulation").
+#[derive(Debug, Clone)]
+pub struct QsgdCompressor {
+    /// Number of quantization levels `s`.
+    pub s: u32,
+    /// Bucket size `d` (paper §4; `usize::MAX` ⇒ whole-vector §3.1 scheme).
+    pub bucket: usize,
+    pub norm: Norm,
+    /// `None` ⇒ the paper's regime rule per gradient ([`gradient::preferred_regime`]).
+    pub regime: Option<Regime>,
+}
+
+impl QsgdCompressor {
+    /// Experiment-style constructor: `bits`-bit QSGD with the given bucket
+    /// (paper §5 uses e.g. 4-bit/512-bucket, 2-bit/64-bucket, max-norm).
+    pub fn with_bits(bits: u32, bucket: usize) -> Self {
+        Self { s: quant::levels_for_bits(bits), bucket, norm: Norm::Max, regime: None }
+    }
+
+    /// Theory-style constructor: the §3.1 scheme (2-norm, single bucket).
+    pub fn paper(s: u32) -> Self {
+        Self { s, bucket: usize::MAX, norm: Norm::L2, regime: None }
+    }
+
+    pub fn quantize(&self, grad: &[f32], rng: &mut dyn RngCore) -> quant::QuantizedGradient {
+        let bucket = self.bucket.min(grad.len().max(1));
+        quant::stochastic::quantize(grad, self.s, bucket, self.norm, rng)
+    }
+}
+
+impl Compressor for QsgdCompressor {
+    fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
+        let q = self.quantize(grad, rng);
+        match self.regime {
+            Some(r) => gradient::encode(&q, r),
+            None => gradient::encode_auto(&q),
+        }
+    }
+
+    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        let q = gradient::decode(msg)?;
+        anyhow::ensure!(q.n == n, "decoded length {} != expected {n}", q.n);
+        Ok(q.dequantize())
+    }
+
+    fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
+        let n = gradient::decode_add(msg, alpha, acc)?;
+        anyhow::ensure!(n == acc.len(), "decoded length {n} != expected {}", acc.len());
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        let b = (self.s + 1).next_power_of_two().trailing_zeros() + 1;
+        format!("qsgd(s={},~{}bit,bucket={},{:?})", self.s, b, self.bucket, self.norm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    
+
+    #[test]
+    fn end_to_end_error_bound() {
+        
+        let mut r = Xoshiro256::from_u64(0);
+        let grad: Vec<f32> = (0..5000).map(|_| crate::util::rng::uniform_f32(&mut r) - 0.5).collect();
+        let mut c = QsgdCompressor::with_bits(4, 512);
+        let msg = c.compress(&grad, &mut r);
+        let back = c.decompress(&msg, grad.len()).unwrap();
+        // per-coordinate error ≤ bucket-max / s
+        for (chunk_g, chunk_b) in grad.chunks(512).zip(back.chunks(512)) {
+            let scale = chunk_g.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for (g, b) in chunk_g.iter().zip(chunk_b) {
+                assert!((g - b).abs() <= scale / 7.0 + 1e-6);
+            }
+        }
+        // 4-bit QSGD must compress well below fp32
+        assert!(msg.len() * 4 < grad.len() * 4);
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        let mut c = QsgdCompressor::paper(4);
+        let mut r = Xoshiro256::from_u64(1);
+        let msg = c.compress(&[1.0, 2.0, 3.0], &mut r);
+        assert!(c.decompress(&msg, 4).is_err());
+    }
+}

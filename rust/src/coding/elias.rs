@@ -1,0 +1,394 @@
+//! Recursive Elias (Elias omega) integer coding — paper Definition A.1.
+//!
+//! `Elias(k)` for `k ≥ 1`: start with a terminating `0`; while `k > 1`,
+//! prepend the binary representation of `k` and recurse on
+//! `k' = (bits in that representation) − 1`. Length satisfies
+//! `|Elias(k)| ≤ log k + log log k + … + 1 = (1+o(1))·log k + 1` (Lemma A.1).
+//!
+//! `Elias'(k) = Elias(k+1)` extends the code to `k = 0` (used by the dense
+//! `Code'_s` of Corollary 3.3, Appendix A.3).
+
+use super::bitstream::{BitReader, BitWriter, BitstreamExhausted};
+
+/// Encode `k ≥ 1` (panics on 0 in debug; the dense codec uses [`encode0`]).
+#[inline]
+pub fn encode(w: &mut BitWriter, mut k: u64) {
+    debug_assert!(k >= 1, "Elias omega is defined on positive integers");
+    // Collect the groups (they are *prepended*, so emit in reverse).
+    // At most 6 groups for u64 (64 -> 6 -> 2 -> 1).
+    let mut groups: [(u64, u32); 8] = [(0, 0); 8];
+    let mut ng = 0;
+    while k > 1 {
+        let bits = 64 - k.leading_zeros();
+        groups[ng] = (k, bits);
+        ng += 1;
+        k = (bits - 1) as u64;
+    }
+    for i in (0..ng).rev() {
+        let (v, bits) = groups[i];
+        w.write_bits(v, bits);
+    }
+    w.write_bit(false);
+}
+
+/// Decode an omega-coded positive integer.
+#[inline]
+pub fn decode(r: &mut BitReader) -> Result<u64, BitstreamExhausted> {
+    let mut n: u64 = 1;
+    loop {
+        if !r.read_bit()? {
+            return Ok(n);
+        }
+        if n >= 64 {
+            // Malformed stream: would overflow u64. Treat as exhaustion.
+            return Err(BitstreamExhausted);
+        }
+        // The group starts with the `1` we just consumed, followed by n bits.
+        n = (1 << n) | r.read_bits(n as u32)?;
+    }
+}
+
+/// `Elias'(k) = Elias(k+1)` — zero-capable variant (Appendix A.3).
+#[inline]
+pub fn encode0(w: &mut BitWriter, k: u64) {
+    encode(w, k + 1);
+}
+
+#[inline]
+pub fn decode0(r: &mut BitReader) -> Result<u64, BitstreamExhausted> {
+    Ok(decode(r)? - 1)
+}
+
+/// Code length in bits, without encoding (for bound checks / sizing).
+#[inline]
+pub fn len(mut k: u64) -> u64 {
+    debug_assert!(k >= 1);
+    let mut bits = 1; // terminating 0
+    while k > 1 {
+        let b = 64 - k.leading_zeros();
+        bits += b as u64;
+        k = (b - 1) as u64;
+    }
+    bits
+}
+
+/// Precomputed codeword table for small integers — the encoder hot path.
+///
+/// Quantized levels are bounded by `s` (≤ 255 for 8-bit QSGD) and run-length
+/// gaps are short in the dense-ish regimes, so almost every emitted codeword
+/// comes from this table as a single `write_bits` call instead of the
+/// group-by-group recursion (≈3× encode speedup, see EXPERIMENTS.md §Perf).
+pub struct EliasLut {
+    /// codes[k-1] = (pattern, bits) for k in [1, len].
+    codes: Vec<(u32, u32)>,
+}
+
+impl EliasLut {
+    /// Build a table covering `1..=max_k` (codewords must fit 32 bits, which
+    /// holds for max_k < 2^18: len(2^18) = 19+5+3+2+1 = 30).
+    pub fn new(max_k: u64) -> Self {
+        assert!(max_k >= 1 && max_k < (1 << 18));
+        let codes = (1..=max_k)
+            .map(|k| {
+                let mut w = BitWriter::new();
+                encode(&mut w, k);
+                let bits = w.len_bits() as u32;
+                debug_assert!(bits <= 32);
+                let bytes = w.into_bytes();
+                let mut pat: u32 = 0;
+                for (i, &b) in bytes.iter().enumerate() {
+                    pat |= (b as u32) << (24 - 8 * i);
+                }
+                (pat >> (32 - bits), bits)
+            })
+            .collect();
+        Self { codes }
+    }
+
+    /// Codeword for `k`, if tabulated.
+    #[inline]
+    pub fn get(&self, k: u64) -> Option<(u32, u32)> {
+        self.codes.get((k - 1) as usize).copied()
+    }
+
+    /// Encode `k`, via the table when possible.
+    #[inline]
+    pub fn encode(&self, w: &mut BitWriter, k: u64) {
+        match self.get(k) {
+            Some((pat, bits)) => w.write_bits(pat as u64, bits),
+            None => encode(w, k),
+        }
+    }
+}
+
+/// Prefix-table decoder: a `2^W`-entry table maps the next W bits directly
+/// to `(value, codeword length)` for every integer whose omega code fits in
+/// W bits; longer codewords fall back to the bit-serial [`decode`]. The
+/// decoder hot path (one lookup per codeword) replaces ~4 `read_bit` calls
+/// per level — see EXPERIMENTS.md §Perf.
+pub struct DecodeLut {
+    w: u32,
+    /// table[prefix] = (value, bits); bits == 0 ⇒ fall back.
+    table: Vec<(u32, u8)>,
+}
+
+impl DecodeLut {
+    /// `w ≤ 16` keeps the table ≤ 512 KiB; w = 14 covers all levels of
+    /// 8-bit QSGD (|Elias(128)| = 14) and typical sparse gaps.
+    pub fn new(w: u32) -> Self {
+        assert!((1..=16).contains(&w));
+        let mut table = vec![(0u32, 0u8); 1usize << w];
+        // enumerate k by increasing code length; stop once len(k) > w
+        let mut k = 1u64;
+        loop {
+            let bits = len(k) as u32;
+            if bits > w {
+                // omega code lengths are not monotone in k, so scan on until
+                // lengths exceed w for a whole stretch; bound the scan.
+                if k > (1 << w) {
+                    break;
+                }
+                k += 1;
+                continue;
+            }
+            let mut bw = BitWriter::new();
+            encode(&mut bw, k);
+            let bytes = bw.into_bytes();
+            let mut pat: u32 = 0;
+            for (i, &b) in bytes.iter().enumerate().take(4) {
+                pat |= (b as u32) << (24 - 8 * i);
+            }
+            let prefix = (pat >> (32 - w)) as usize; // code left-aligned in w bits
+            let free = w - bits;
+            for fill in 0..(1usize << free) {
+                table[(prefix & !((1usize << free) - 1)) | fill] = (k as u32, bits as u8);
+            }
+            k += 1;
+        }
+        Self { w, table }
+    }
+
+    /// Decode one integer, via the table when the codeword is short enough.
+    #[inline]
+    pub fn decode(&self, r: &mut BitReader) -> Result<u64, BitstreamExhausted> {
+        let prefix = r.peek_bits(self.w) as usize;
+        let (v, bits) = self.table[prefix];
+        if bits != 0 {
+            r.advance(bits as u32)?;
+            Ok(v as u64)
+        } else {
+            decode(r)
+        }
+    }
+
+    /// `Elias'` variant.
+    #[inline]
+    pub fn decode0(&self, r: &mut BitReader) -> Result<u64, BitstreamExhausted> {
+        Ok(self.decode(r)? - 1)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Elias gamma / delta — ablation codes (DESIGN.md: the paper picks omega for
+// its (1+o(1))·log k asymptotics; gamma is 2·log k + 1 and delta is
+// log k + 2·log log k + 1, so for the small integers QSGD actually emits the
+// ranking can invert — the theory_bounds bench measures it).
+// --------------------------------------------------------------------------
+
+/// Elias gamma: ⌊log k⌋ zeros, then the binary representation of k.
+#[inline]
+pub fn encode_gamma(w: &mut BitWriter, k: u64) {
+    debug_assert!(k >= 1);
+    let bits = 64 - k.leading_zeros();
+    w.write_bits(0, bits - 1);
+    w.write_bits(k, bits);
+}
+
+#[inline]
+pub fn decode_gamma(r: &mut BitReader) -> Result<u64, BitstreamExhausted> {
+    let mut zeros = 0u32;
+    while !r.read_bit()? {
+        zeros += 1;
+        if zeros >= 64 {
+            return Err(BitstreamExhausted);
+        }
+    }
+    // leading 1 already consumed
+    Ok((1u64 << zeros) | r.read_bits(zeros)?)
+}
+
+pub fn len_gamma(k: u64) -> u64 {
+    let bits = (64 - k.leading_zeros()) as u64;
+    2 * bits - 1
+}
+
+/// Elias delta: gamma(bit length) then the remaining bits of k.
+#[inline]
+pub fn encode_delta(w: &mut BitWriter, k: u64) {
+    debug_assert!(k >= 1);
+    let bits = 64 - k.leading_zeros();
+    encode_gamma(w, bits as u64);
+    if bits > 1 {
+        w.write_bits(k & ((1u64 << (bits - 1)) - 1), bits - 1);
+    }
+}
+
+#[inline]
+pub fn decode_delta(r: &mut BitReader) -> Result<u64, BitstreamExhausted> {
+    let bits = decode_gamma(r)? as u32;
+    if bits == 0 || bits > 64 {
+        return Err(BitstreamExhausted);
+    }
+    if bits == 1 {
+        return Ok(1);
+    }
+    Ok((1u64 << (bits - 1)) | r.read_bits(bits - 1)?)
+}
+
+pub fn len_delta(k: u64) -> u64 {
+    let bits = (64 - k.leading_zeros()) as u64;
+    len_gamma(bits) + bits - 1
+}
+
+/// The paper's analytic upper bound `(1+o(1))·log k + 1`, instantiated as
+/// `log k + log log k + log log log k + … + 1` (Lemma A.1(1)).
+pub fn len_bound(k: u64) -> f64 {
+    let mut x = k as f64;
+    let mut total = 1.0;
+    while x > 1.0 {
+        let l = x.log2();
+        if l <= 0.0 {
+            break;
+        }
+        total += l;
+        x = l;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(k: u64) -> u64 {
+        let mut w = BitWriter::new();
+        encode(&mut w, k);
+        assert_eq!(w.len_bits(), len(k));
+        let bytes = w.into_bytes();
+        decode(&mut BitReader::new(&bytes)).unwrap()
+    }
+
+    #[test]
+    fn known_codewords() {
+        // Canonical omega codes: 1 -> "0", 2 -> "10 0", 3 -> "11 0",
+        // 4 -> "10 100 0" ... check lengths and first values.
+        assert_eq!(len(1), 1);
+        assert_eq!(len(2), 3);
+        assert_eq!(len(3), 3);
+        assert_eq!(len(4), 6); // "10" + "100" + "0"
+        assert_eq!(len(16), 11); // "10" + "100" + "10000" + "0"
+        assert_eq!(len(100), 13); // "10" + "110" + "1100100" + "0"
+        let mut w = BitWriter::new();
+        encode(&mut w, 1);
+        assert_eq!(w.into_bytes(), vec![0b0000_0000]);
+        let mut w = BitWriter::new();
+        encode(&mut w, 2);
+        assert_eq!(w.into_bytes(), vec![0b1000_0000]);
+    }
+
+    #[test]
+    fn roundtrip_small_and_large() {
+        for k in 1..=2000 {
+            assert_eq!(roundtrip(k), k);
+        }
+        for k in [u32::MAX as u64, 1 << 40, u64::MAX / 2, u64::MAX] {
+            assert_eq!(roundtrip(k), k);
+        }
+    }
+
+    #[test]
+    fn zero_capable_variant() {
+        for k in 0..500 {
+            let mut w = BitWriter::new();
+            encode0(&mut w, k);
+            let bytes = w.into_bytes();
+            assert_eq!(decode0(&mut BitReader::new(&bytes)).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn length_within_paper_bound() {
+        // Lemma A.1: |Elias(k)| ≤ log k + log log k + ... + 1, up to the
+        // +O(1) slack from ceil'd group sizes. Allow the standard +2·groups.
+        for k in 1..100_000u64 {
+            let l = len(k) as f64;
+            assert!(l <= len_bound(k) + 2.0 * (1.0 + (k as f64).log2().max(1.0).log2().max(0.0)) + 3.0,
+                "k={k} len={l} bound={}", len_bound(k));
+        }
+    }
+
+    #[test]
+    fn sequence_roundtrip() {
+        let ks: Vec<u64> = (1..300).map(|i| (i * 2654435761u64) % 10_000 + 1).collect();
+        let mut w = BitWriter::new();
+        for &k in &ks {
+            encode(&mut w, k);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &k in &ks {
+            assert_eq!(decode(&mut r).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn decode_malformed_does_not_panic() {
+        let bytes = vec![0xff; 64];
+        let mut r = BitReader::new(&bytes);
+        assert!(decode(&mut r).is_err());
+    }
+
+    #[test]
+    fn gamma_delta_roundtrip_and_lengths() {
+        for k in 1..=3000u64 {
+            let mut w = BitWriter::new();
+            encode_gamma(&mut w, k);
+            assert_eq!(w.len_bits(), len_gamma(k), "gamma len k={k}");
+            let b = w.into_bytes();
+            assert_eq!(decode_gamma(&mut BitReader::new(&b)).unwrap(), k);
+
+            let mut w = BitWriter::new();
+            encode_delta(&mut w, k);
+            assert_eq!(w.len_bits(), len_delta(k), "delta len k={k}");
+            let b = w.into_bytes();
+            assert_eq!(decode_delta(&mut BitReader::new(&b)).unwrap(), k);
+        }
+        // canonical values: γ(1)="1", γ(2)="010", δ(1)="1"
+        assert_eq!(len_gamma(1), 1);
+        assert_eq!(len_gamma(2), 3);
+        assert_eq!(len_delta(1), 1);
+        // asymptotics: omega and delta beat gamma for large k
+        let k = 1 << 20;
+        assert!(len(k) < len_gamma(k));
+        assert!(len_delta(k) < len_gamma(k));
+        // but for the tiny integers QSGD mostly emits, gamma is shortest
+        assert!(len_gamma(2) <= len(2));
+        assert!(len_gamma(3) <= len(3));
+    }
+
+    #[test]
+    fn lut_matches_reference_encoder() {
+        let lut = EliasLut::new(4096);
+        for k in 1..=5000u64 {
+            let mut wa = BitWriter::new();
+            lut.encode(&mut wa, k); // table for k ≤ 4096, fallback above
+            let mut wb = BitWriter::new();
+            encode(&mut wb, k);
+            assert_eq!(wa.len_bits(), wb.len_bits(), "k={k}");
+            assert_eq!(wa.into_bytes(), wb.into_bytes(), "k={k}");
+        }
+        assert!(lut.get(1).is_some());
+        assert!(lut.get(4096).is_some());
+        assert!(lut.get(4097).is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! Lossless coding of quantized gradients (paper §3.1 "Efficient Coding of
+//! Gradients", Appendices A.2/A.3): bit-level I/O, recursive Elias integer
+//! codes, and the sparse/dense gradient wire formats.
+
+pub mod bitstream;
+pub mod elias;
+pub mod gradient;
+
+mod compressor;
+pub use compressor::QsgdCompressor;

@@ -1,0 +1,75 @@
+//! Collective exchange primitives over the simulated interconnect.
+//!
+//! These move *real* encoded bytes between simulated workers (the decode
+//! side consumes exactly what the encode side produced — no shortcuts) and
+//! charge virtual transfer time on the [`crate::simnet::SimNet`] model.
+
+use crate::simnet::{SimNet, VTime};
+
+/// Result of an all-broadcast: every worker sees all K messages, in worker
+/// order (a worker's own message included, as in Algorithm 1 where the local
+/// gradient also passes through Encode/Decode — quantization noise applies
+/// to one's own contribution too).
+pub struct BroadcastResult {
+    pub time: VTime,
+    pub messages: Vec<Vec<u8>>,
+}
+
+/// All-to-all broadcast of per-worker messages (Algorithm 1 lines 4–8).
+pub fn all_broadcast(net: &SimNet, messages: Vec<Vec<u8>>) -> BroadcastResult {
+    assert_eq!(messages.len(), net.workers);
+    let sizes: Vec<usize> = messages.iter().map(Vec::len).collect();
+    let time = net.exchange_time(&sizes);
+    BroadcastResult { time, messages }
+}
+
+/// Dense fp32 ring allreduce (the 32-bit baseline's transport): averages the
+/// workers' gradients in-network; every worker receives the same mean.
+pub fn ring_allreduce_mean(net: &SimNet, grads: &[Vec<f32>]) -> (VTime, Vec<f32>) {
+    assert_eq!(grads.len(), net.workers);
+    let n = grads[0].len();
+    assert!(grads.iter().all(|g| g.len() == n), "allreduce requires equal sizes");
+    let bytes = n * 4;
+    let time = net.exchange_time(&vec![bytes; net.workers]);
+    let mut mean = vec![0.0f32; n];
+    let k = net.workers as f32;
+    for g in grads {
+        for (m, &x) in mean.iter_mut().zip(g) {
+            *m += x / k;
+        }
+    }
+    (time, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::{Link, Topology};
+
+    fn net(k: usize, topo: Topology) -> SimNet {
+        SimNet::new(k, Link::new(1e9, 1e-6), topo)
+    }
+
+    #[test]
+    fn broadcast_preserves_bytes() {
+        let msgs: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8; 10 + i]).collect();
+        let r = all_broadcast(&net(4, Topology::P2pBroadcast), msgs.clone());
+        assert_eq!(r.messages, msgs);
+        assert!(r.time.secs() > 0.0);
+    }
+
+    #[test]
+    fn allreduce_mean_is_exact() {
+        let grads = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        let (t, mean) = ring_allreduce_mean(&net(2, Topology::RingAllReduce), &grads);
+        assert_eq!(mean, vec![2.0, 4.0]);
+        assert!(t.secs() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal sizes")]
+    fn allreduce_rejects_ragged() {
+        let grads = vec![vec![1.0f32], vec![1.0, 2.0]];
+        ring_allreduce_mean(&net(2, Topology::RingAllReduce), &grads);
+    }
+}

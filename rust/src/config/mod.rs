@@ -1,0 +1,99 @@
+//! Tiny CLI argument parser (the offline environment has no clap): supports
+//! `--key value`, `--flag`, and positional arguments, with typed getters.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let raw: Vec<String> = iter.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn string(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        // NB: `--flag value`-style ambiguity is resolved greedily (the next
+        // non-`--` token is consumed as the value), so boolean flags should
+        // come last or use `--flag=true`; positionals go first.
+        let a = parse("train tfm --workers 8 --lr=0.1 --double-buffer");
+        assert_eq!(a.positional, vec!["train", "tfm"]);
+        assert_eq!(a.usize("workers", 1), 8);
+        assert!((a.f32("lr", 0.0) - 0.1).abs() < 1e-9);
+        assert!(a.flag("double-buffer"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--quiet");
+        assert!(a.flag("quiet"));
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,217 @@
+//! Asynchronous parameter-server QSGD — Appendix D.
+//!
+//! Star topology: a central server holds the parameters; each worker loops
+//! {pull params, compute stochastic gradient on its (stale) copy, push the
+//! *encoded* gradient}. The server applies updates in arrival order. An
+//! event-driven simulation over the virtual clock produces bounded-staleness
+//! behaviour: a worker's delay is its pull + compute + push interval, so the
+//! maximum staleness T of Theorem D.1 is set by the slowest round trip.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use super::sources::GradSource;
+use super::CompressorSpec;
+use crate::metrics::{Curve, WireStats};
+use crate::models::CostModel;
+use crate::simnet::SimNet;
+use crate::util::rng::Xoshiro256;
+
+pub struct AsyncConfig {
+    pub workers: usize,
+    /// Total gradient applications at the server.
+    pub updates: usize,
+    pub compressor: CompressorSpec,
+    pub lr: f32,
+    pub seed: u64,
+    pub net: SimNet,
+    pub cost: CostModel,
+    /// Per-worker compute-speed multipliers (stragglers); empty ⇒ all 1.
+    pub speed: Vec<f64>,
+    pub log_every: usize,
+}
+
+pub struct AsyncResult {
+    pub loss: Curve,
+    pub wire: WireStats,
+    pub params: Vec<f32>,
+    /// Max observed staleness (server updates between a worker's pull and
+    /// its push being applied).
+    pub max_staleness: usize,
+    pub mean_staleness: f64,
+    /// Virtual makespan.
+    pub vtime: f64,
+}
+
+#[derive(PartialEq)]
+struct Event {
+    at: f64,
+    worker: usize,
+    /// Server update count when this worker pulled (for staleness).
+    pulled_version: usize,
+    step: u64,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on time
+        other.at.partial_cmp(&self.at).unwrap_or(Ordering::Equal)
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult> {
+    let n = source.dim();
+    let mut params: Vec<f32> = {
+        let mut r = Xoshiro256::stream(cfg.seed, 0xA54C);
+        crate::util::rng::normal_vec(&mut r, n).into_iter().map(|x| x * 0.1).collect()
+    };
+    let mut compressors: Vec<_> = (0..cfg.workers).map(|_| cfg.compressor.build(n)).collect();
+    let mut rngs: Vec<_> =
+        (0..cfg.workers).map(|w| Xoshiro256::stream(cfg.seed ^ 0xAB5, w as u64)).collect();
+    // Snapshot each worker computed its gradient on.
+    let mut snapshots: Vec<Vec<f32>> = vec![params.clone(); cfg.workers];
+
+    let speed = |w: usize| -> f64 {
+        cfg.speed.get(w).copied().unwrap_or(1.0).max(1e-6)
+    };
+    let pull_bytes = n * 4; // dense param pull
+    let compute_s = cfg.cost.step_compute_s(source.flops_fwd_per_step(), 1);
+
+    let mut heap = BinaryHeap::new();
+    for w in 0..cfg.workers {
+        let t = cfg.net.p2p_time(pull_bytes).secs() + compute_s / speed(w);
+        heap.push(Event { at: t, worker: w, pulled_version: 0, step: 0 });
+    }
+
+    let mut version = 0usize;
+    let mut wire = WireStats::default();
+    let mut loss_curve = Curve::default();
+    let mut max_stale = 0usize;
+    let mut stale_sum = 0usize;
+    let mut now = 0.0f64;
+
+    while version < cfg.updates {
+        let ev = heap.pop().expect("workers alive");
+        now = ev.at;
+        let w = ev.worker;
+
+        // Worker w finished computing on its snapshot; push encoded gradient.
+        let (loss, grad) = source.loss_and_grad(w, ev.step, &snapshots[w])?;
+        let msg = compressors[w].compress(&grad, &mut rngs[w]);
+        wire.record(msg.len(), n);
+        let push_t = cfg.net.p2p_time(msg.len()).secs();
+
+        // Server receives and applies (arrival order = heap order here).
+        let decoded = compressors[w].decompress(&msg, n)?;
+        for (p, &g) in params.iter_mut().zip(&decoded) {
+            *p -= cfg.lr * g;
+        }
+        let staleness = version - ev.pulled_version;
+        max_stale = max_stale.max(staleness);
+        stale_sum += staleness;
+        version += 1;
+
+        if version % cfg.log_every.max(1) == 0 || version == cfg.updates {
+            loss_curve.push(version, loss as f64);
+        }
+
+        // Worker pulls fresh params and starts the next round.
+        snapshots[w] = params.clone();
+        let next = now + push_t + cfg.net.p2p_time(pull_bytes).secs() + compute_s / speed(w);
+        heap.push(Event { at: next, worker: w, pulled_version: version, step: ev.step + 1 });
+    }
+
+    Ok(AsyncResult {
+        loss: loss_curve,
+        wire,
+        params,
+        max_staleness: max_stale,
+        mean_staleness: stale_sum as f64 / cfg.updates as f64,
+        vtime: now,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sources::ConvexSource;
+    use crate::data::QuadraticProblem;
+    use crate::simnet::{Link, SimNet, Topology};
+
+    fn cfg(workers: usize, updates: usize, compressor: CompressorSpec) -> AsyncConfig {
+        AsyncConfig {
+            workers,
+            updates,
+            compressor,
+            lr: 0.02,
+            seed: 1,
+            net: SimNet::new(workers, Link::new(1e9, 1e-5), Topology::Star),
+            cost: CostModel::k80(),
+            speed: vec![],
+            log_every: 10,
+        }
+    }
+
+    fn source() -> ConvexSource<QuadraticProblem> {
+        ConvexSource::new(QuadraticProblem::generate(256, 24, 1e-3, 0.05, 11), 8, 13)
+    }
+
+    #[test]
+    fn async_qsgd_converges() {
+        let mut src = source();
+        let r = run(&cfg(4, 400, CompressorSpec::qsgd_4bit()), &mut src).unwrap();
+        let first = r.loss.points[0].1;
+        let last = r.loss.tail_mean(3);
+        assert!(last < first * 0.3, "{first} -> {last}");
+        assert!(r.vtime > 0.0);
+    }
+
+    #[test]
+    fn staleness_bounded_by_worker_count() {
+        let mut src = source();
+        let r = run(&cfg(4, 300, CompressorSpec::qsgd_4bit()), &mut src).unwrap();
+        // homogeneous workers: staleness ≈ K−1
+        assert!(r.max_staleness <= 2 * 4, "max staleness {}", r.max_staleness);
+        assert!(r.mean_staleness > 0.0);
+    }
+
+    #[test]
+    fn stragglers_increase_staleness() {
+        // Make compute dominate the round trip so speed multipliers matter.
+        let slow_cost = CostModel { device_flops: 1e6, ..CostModel::k80() };
+        let mut src = source();
+        let mut c = cfg(4, 300, CompressorSpec::qsgd_4bit());
+        c.cost = slow_cost;
+        c.speed = vec![1.0, 1.0, 1.0, 0.05]; // one very slow worker
+        let r_slow = run(&c, &mut src).unwrap();
+        let mut src2 = source();
+        let mut cu = cfg(4, 300, CompressorSpec::qsgd_4bit());
+        cu.cost = slow_cost;
+        let r_uniform = run(&cu, &mut src2).unwrap();
+        assert!(
+            r_slow.max_staleness > r_uniform.max_staleness,
+            "slow {} vs uniform {}",
+            r_slow.max_staleness,
+            r_uniform.max_staleness
+        );
+    }
+
+    #[test]
+    fn compression_reduces_push_bytes() {
+        let mut src = source();
+        let rq = run(&cfg(2, 100, CompressorSpec::qsgd_4bit()), &mut src).unwrap();
+        let mut src2 = source();
+        let rf = run(&cfg(2, 100, CompressorSpec::Fp32), &mut src2).unwrap();
+        assert!(rq.wire.payload_bytes * 3 < rf.wire.payload_bytes);
+    }
+}

@@ -1,0 +1,219 @@
+//! Plan-aware message assembly: applies the §5 protocol to a full model
+//! gradient — quantize the large tensors, ship small tensors (<10K elements)
+//! in raw fp32, frame the segments so the receiver can reassemble.
+//!
+//! Frame layout (byte-aligned, little-endian):
+//!   u32 segment_count, then per segment: u32 payload_len | u8 kind | payload
+//! where kind 0 = fp32 raw, 1 = compressed.
+
+use anyhow::{ensure, Context, Result};
+use rand_core::RngCore;
+
+use crate::coordinator::CompressorSpec;
+use crate::models::layout::QuantPlan;
+use crate::quant::Compressor;
+
+/// Compressor wrapper that honours a [`QuantPlan`]. Each quantized segment
+/// gets its *own* inner compressor instance sized to the segment — stateful
+/// compressors (1BitSGD's error-feedback residual) track per-coordinate
+/// state, so they must be segment-local.
+pub struct PlanCompressor {
+    pub plan: QuantPlan,
+    inner: Vec<Box<dyn Compressor>>,
+}
+
+impl PlanCompressor {
+    pub fn from_spec(plan: QuantPlan, spec: &CompressorSpec) -> Self {
+        let inner = plan
+            .segments
+            .iter()
+            .filter(|s| s.quantized)
+            .map(|s| spec.build(s.len))
+            .collect();
+        Self { plan, inner }
+    }
+
+    /// Encode a full gradient following the plan.
+    pub fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
+        assert_eq!(grad.len(), self.plan.total_len(), "gradient/plan mismatch");
+        let mut out = Vec::with_capacity(grad.len() / 2 + 64);
+        out.extend_from_slice(&(self.plan.segments.len() as u32).to_le_bytes());
+        let mut qi = 0usize;
+        for seg in &self.plan.segments.clone() {
+            let slice = &grad[seg.offset..seg.offset + seg.len];
+            let (kind, payload): (u8, Vec<u8>) = if seg.quantized {
+                let c = &mut self.inner[qi];
+                qi += 1;
+                (1, c.compress(slice, rng))
+            } else {
+                let mut raw = Vec::with_capacity(slice.len() * 4);
+                for &x in slice {
+                    raw.extend_from_slice(&x.to_le_bytes());
+                }
+                (0, raw)
+            };
+            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            out.push(kind);
+            out.extend_from_slice(&payload);
+        }
+        out
+    }
+
+    /// Decode a message produced by [`Self::compress`] under the same plan.
+    pub fn decompress(&self, msg: &[u8]) -> Result<Vec<f32>> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            ensure!(*pos + n <= msg.len(), "truncated message");
+            let s = &msg[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let nseg = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        ensure!(nseg == self.plan.segments.len(), "segment count mismatch");
+        let mut out = vec![0.0f32; self.plan.total_len()];
+        let mut qi = 0usize;
+        for seg in &self.plan.segments {
+            let len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let kind = take(&mut pos, 1)?[0];
+            let payload = take(&mut pos, len)?;
+            let dst = &mut out[seg.offset..seg.offset + seg.len];
+            match kind {
+                0 => {
+                    ensure!(!seg.quantized, "fp32 payload for quantized segment");
+                    ensure!(payload.len() == seg.len * 4, "fp32 segment length");
+                    for (d, c) in dst.iter_mut().zip(payload.chunks_exact(4)) {
+                        *d = f32::from_le_bytes(c.try_into().unwrap());
+                    }
+                }
+                1 => {
+                    ensure!(seg.quantized, "compressed payload for fp32 segment");
+                    let dec = self.inner[qi]
+                        .decompress(payload, seg.len)
+                        .context("segment decompress")?;
+                    qi += 1;
+                    dst.copy_from_slice(&dec);
+                }
+                k => anyhow::bail!("unknown segment kind {k}"),
+            }
+        }
+        ensure!(pos == msg.len(), "trailing bytes in message");
+        Ok(out)
+    }
+
+    /// Fused decode-and-accumulate across the plan's segments:
+    /// `acc += alpha · decode(msg)`. Uses each inner compressor's sparse
+    /// `decompress_add` path (the §6 sparsity optimisation).
+    pub fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(acc.len() == self.plan.total_len(), "accumulator/plan mismatch");
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            ensure!(*pos + n <= msg.len(), "truncated message");
+            let s = &msg[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let nseg = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        ensure!(nseg == self.plan.segments.len(), "segment count mismatch");
+        let mut qi = 0usize;
+        for seg in &self.plan.segments {
+            let len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let kind = take(&mut pos, 1)?[0];
+            let payload = take(&mut pos, len)?;
+            let dst = &mut acc[seg.offset..seg.offset + seg.len];
+            match kind {
+                0 => {
+                    ensure!(!seg.quantized && payload.len() == seg.len * 4, "fp32 segment");
+                    for (d, c) in dst.iter_mut().zip(payload.chunks_exact(4)) {
+                        *d += alpha * f32::from_le_bytes(c.try_into().unwrap());
+                    }
+                }
+                1 => {
+                    ensure!(seg.quantized, "compressed payload for fp32 segment");
+                    self.inner[qi].decompress_add(payload, alpha, dst)?;
+                    qi += 1;
+                }
+                k => anyhow::bail!("unknown segment kind {k}"),
+            }
+        }
+        ensure!(pos == msg.len(), "trailing bytes in message");
+        Ok(())
+    }
+
+    pub fn name(&self) -> String {
+        format!("plan[{}seg]x{}", self.plan.segments.len(), self.inner.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CompressorSpec;
+    use crate::models::layout::{ParamLayout, QuantPlan};
+    use crate::util::rng::{self, Xoshiro256};
+
+    fn layout() -> ParamLayout {
+        ParamLayout::synthetic(&[
+            ("small", vec![100]),           // fp32
+            ("big", vec![200, 100]),        // quantized
+            ("bias", vec![50]),             // fp32
+        ])
+    }
+
+    #[test]
+    fn skip_segments_are_lossless() {
+        let l = layout();
+        let plan = QuantPlan::build(&l, 10_000);
+        let mut rng = Xoshiro256::from_u64(0);
+        let grad = rng::normal_vec(&mut rng, l.total_params());
+        let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
+        let msg = pc.compress(&grad, &mut rng);
+        let back = pc.decompress(&msg).unwrap();
+        // fp32 segments: exact
+        assert_eq!(&back[..100], &grad[..100]);
+        assert_eq!(&back[20100..], &grad[20100..]);
+        // quantized middle: within one level of a 512-bucket max-norm quantizer
+        for (chunk_g, chunk_b) in grad[100..20100].chunks(512).zip(back[100..20100].chunks(512)) {
+            let scale = chunk_g.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for (g, b) in chunk_g.iter().zip(chunk_b) {
+                assert!((g - b).abs() <= scale / 7.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn message_smaller_than_fp32() {
+        let l = layout();
+        let plan = QuantPlan::build(&l, 10_000);
+        let mut rng = Xoshiro256::from_u64(1);
+        let grad = rng::normal_vec(&mut rng, l.total_params());
+        let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
+        let msg = pc.compress(&grad, &mut rng);
+        assert!(msg.len() < l.total_params() * 4 / 3, "msg {} bytes", msg.len());
+    }
+
+    #[test]
+    fn corrupt_messages_rejected() {
+        let l = layout();
+        let plan = QuantPlan::build(&l, 10_000);
+        let mut rng = Xoshiro256::from_u64(2);
+        let grad = rng::normal_vec(&mut rng, l.total_params());
+        let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
+        let msg = pc.compress(&grad, &mut rng);
+        assert!(pc.decompress(&msg[..msg.len() - 3]).is_err());
+        let mut extra = msg.clone();
+        extra.extend_from_slice(&[0, 1, 2]);
+        assert!(pc.decompress(&extra).is_err());
+        assert!(pc.decompress(&[]).is_err());
+    }
+
+    #[test]
+    fn fp32_plan_is_identity() {
+        let l = layout();
+        let plan = QuantPlan::build(&l, usize::MAX); // nothing quantized
+        let mut rng = Xoshiro256::from_u64(3);
+        let grad = rng::normal_vec(&mut rng, l.total_params());
+        let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::Fp32);
+        let msg = pc.compress(&grad, &mut rng);
+        assert_eq!(pc.decompress(&msg).unwrap(), grad);
+    }
+}

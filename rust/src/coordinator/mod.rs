@@ -1,0 +1,140 @@
+//! The Layer-3 coordinator: data-parallel training loops with pluggable
+//! gradient compression — the paper's system contribution.
+//!
+//! * [`sync`] — synchronous data-parallel SGD (Algorithm 1) with the §5
+//!   protocol (bucket-aware encoding, <10K skip rule, double buffering).
+//! * [`svrg`] — QSVRG (§3.3 / Appendix B): quantized variance-reduced
+//!   epochs with linear convergence.
+//! * [`async_ps`] — asynchronous parameter-server QSGD (Appendix D).
+//! * [`exchange`] — plan-aware message assembly (which segments are
+//!   quantized, framing, byte accounting).
+//! * [`sources`] — gradient providers: Rust-native convex objectives and
+//!   PJRT-executed model artifacts (MLP, transformer LM).
+
+pub mod async_ps;
+pub mod epoch_sim;
+pub mod exchange;
+pub mod sources;
+pub mod svrg;
+pub mod sync;
+
+use crate::coding::gradient::Regime;
+use crate::coding::QsgdCompressor;
+use crate::quant::{self, Compressor, Norm};
+
+/// Which gradient compression the coordinator applies — mirrors the paper's
+/// experimental arms (32-bit, QSGD b-bit/bucket, 1BitSGD, TernGrad).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressorSpec {
+    Fp32,
+    Qsgd { bits: u32, bucket: usize, norm: Norm, regime: Option<Regime> },
+    OneBit { column: usize },
+    TernGrad { bucket: usize },
+}
+
+impl CompressorSpec {
+    /// The paper's headline configuration: 4-bit, 512 bucket, max-norm.
+    pub fn qsgd_4bit() -> Self {
+        CompressorSpec::Qsgd { bits: 4, bucket: 512, norm: Norm::Max, regime: None }
+    }
+
+    /// 2-bit / 64-bucket arm (Appendix E uses bucket 64 for 2-bit).
+    pub fn qsgd_2bit() -> Self {
+        CompressorSpec::Qsgd { bits: 2, bucket: 64, norm: Norm::Max, regime: None }
+    }
+
+    /// 8-bit / 512-bucket arm.
+    pub fn qsgd_8bit() -> Self {
+        CompressorSpec::Qsgd { bits: 8, bucket: 512, norm: Norm::Max, regime: None }
+    }
+
+    /// Instantiate a (possibly stateful) compressor for one worker.
+    pub fn build(&self, n: usize) -> Box<dyn Compressor> {
+        match *self {
+            CompressorSpec::Fp32 => Box::new(quant::Fp32),
+            CompressorSpec::Qsgd { bits, bucket, norm, regime } => Box::new(QsgdCompressor {
+                s: quant::levels_for_bits(bits),
+                bucket,
+                norm,
+                regime,
+            }),
+            CompressorSpec::OneBit { column } => Box::new(quant::onebit::OneBitSgd::new(n, column)),
+            CompressorSpec::TernGrad { bucket } => Box::new(quant::terngrad::TernGrad::new(bucket)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            CompressorSpec::Fp32 => "32bit".into(),
+            CompressorSpec::Qsgd { bits, bucket, .. } => format!("QSGD {bits}bit/{bucket}"),
+            CompressorSpec::OneBit { .. } => "1BitSGD".into(),
+            CompressorSpec::TernGrad { .. } => "TernGrad".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        // e.g. "fp32", "qsgd4", "qsgd2:64", "qsgd8:512", "1bit", "terngrad"
+        let s = s.to_lowercase();
+        if s == "fp32" || s == "32bit" {
+            return Ok(CompressorSpec::Fp32);
+        }
+        if s == "1bit" || s == "onebit" {
+            return Ok(CompressorSpec::OneBit { column: 512 });
+        }
+        if s == "terngrad" {
+            return Ok(CompressorSpec::TernGrad { bucket: 512 });
+        }
+        if let Some(rest) = s.strip_prefix("qsgd") {
+            let (bits_s, bucket_s) = match rest.split_once(':') {
+                Some((b, d)) => (b, Some(d)),
+                None => (rest, None),
+            };
+            let bits: u32 = bits_s.parse().map_err(|_| anyhow::anyhow!("bad bits '{bits_s}'"))?;
+            let bucket = match bucket_s {
+                Some(d) => d.parse()?,
+                None => if bits <= 2 { 64 } else { 512 },
+            };
+            return Ok(CompressorSpec::Qsgd { bits, bucket, norm: Norm::Max, regime: None });
+        }
+        anyhow::bail!("unknown compressor '{s}' (fp32|qsgdN[:bucket]|1bit|terngrad)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(CompressorSpec::parse("fp32").unwrap(), CompressorSpec::Fp32);
+        assert_eq!(
+            CompressorSpec::parse("qsgd4").unwrap(),
+            CompressorSpec::Qsgd { bits: 4, bucket: 512, norm: Norm::Max, regime: None }
+        );
+        assert_eq!(
+            CompressorSpec::parse("qsgd2:128").unwrap(),
+            CompressorSpec::Qsgd { bits: 2, bucket: 128, norm: Norm::Max, regime: None }
+        );
+        assert!(matches!(CompressorSpec::parse("1bit").unwrap(), CompressorSpec::OneBit { .. }));
+        assert!(CompressorSpec::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn build_and_roundtrip_all() {
+        let mut rng = crate::util::rng::Xoshiro256::from_u64(0);
+        let grad: Vec<f32> = crate::util::rng::normal_vec(&mut rng, 700);
+        for spec in [
+            CompressorSpec::Fp32,
+            CompressorSpec::qsgd_2bit(),
+            CompressorSpec::qsgd_4bit(),
+            CompressorSpec::qsgd_8bit(),
+            CompressorSpec::OneBit { column: 128 },
+            CompressorSpec::TernGrad { bucket: 128 },
+        ] {
+            let mut c = spec.build(grad.len());
+            let msg = c.compress(&grad, &mut rng);
+            let back = c.decompress(&msg, grad.len()).unwrap();
+            assert_eq!(back.len(), grad.len(), "{}", spec.label());
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! Synchronous data-parallel SGD with gradient compression — Algorithm 1
+//! with the §5 protocol.
+//!
+//! Per iteration, for each of K (simulated) workers: obtain a stochastic
+//! gradient, Encode (quantize + entropy-code under the model's QuantPlan),
+//! all-broadcast the messages over the simulated interconnect, Decode all K
+//! messages, average, and step. Virtual time charges compute (FLOPs model),
+//! encode/decode (coordinate-throughput model), and transfer (α–β link
+//! model); with `double_buffer` the per-step total is
+//! `max(compute, communication)` as in the paper's overlapped pipeline.
+//!
+//! Workers are time-multiplexed on the driver thread (PJRT handles are
+//! !Send); cluster parallelism is accounted in *virtual* time. Because
+//! decoding is deterministic, each message is decoded once and the decoded
+//! gradient is shared — mathematically identical to every worker decoding
+//! its own copy, which per-step parameter-consistency checks enforce.
+
+use anyhow::Result;
+
+use super::exchange::PlanCompressor;
+use super::sources::GradSource;
+use super::CompressorSpec;
+use crate::collectives;
+use crate::metrics::{Breakdown, Curve, WireStats};
+use crate::models::layout::QuantPlan;
+use crate::models::CostModel;
+use crate::optim::Sgd;
+use crate::simnet::{SimNet, VTime};
+use crate::util::rng::{self, Xoshiro256};
+
+/// Configuration of one synchronous training run.
+pub struct SyncConfig {
+    pub workers: usize,
+    pub steps: usize,
+    pub compressor: CompressorSpec,
+    /// Quantization plan (tensor-aware skip rule); `None` ⇒ quantize all.
+    pub plan: Option<QuantPlan>,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    /// §5 double buffering: overlap communication with the next step's compute.
+    pub double_buffer: bool,
+    /// Record loss every `log_every` steps.
+    pub log_every: usize,
+    /// Evaluate held-out metric every `eval_every` steps (0 = never).
+    pub eval_every: usize,
+    pub net: SimNet,
+    pub cost: CostModel,
+    /// Initial parameter scale (gaussian init · scale).
+    pub init_scale: f32,
+    /// Verify all workers hold bit-identical parameters every N steps.
+    pub consistency_every: usize,
+}
+
+impl SyncConfig {
+    pub fn quick(workers: usize, steps: usize, compressor: CompressorSpec, lr: f32) -> Self {
+        Self {
+            workers,
+            steps,
+            compressor,
+            plan: None,
+            lr,
+            momentum: 0.0,
+            seed: 0,
+            double_buffer: true,
+            log_every: 10,
+            eval_every: 0,
+            net: SimNet::preset(workers, crate::simnet::Preset::K80Pcie),
+            cost: CostModel::k80(),
+            init_scale: 0.1,
+            consistency_every: 50,
+        }
+    }
+}
+
+/// Outcome of a run.
+pub struct RunResult {
+    pub loss: Curve,
+    pub eval: Curve,
+    pub breakdown: Breakdown,
+    pub wire: WireStats,
+    pub params: Vec<f32>,
+    pub label: String,
+}
+
+impl RunResult {
+    /// Virtual epoch/run time under the configured pipeline mode.
+    pub fn virtual_time(&self, double_buffer: bool) -> VTime {
+        if double_buffer {
+            self.breakdown.total_double_buffered()
+        } else {
+            self.breakdown.total()
+        }
+    }
+}
+
+/// One simulated worker's state.
+struct Worker {
+    params: Vec<f32>,
+    opt: Sgd,
+    compressor: PlanCompressor,
+    rng: Xoshiro256,
+}
+
+/// The synchronous trainer.
+pub struct SyncTrainer {
+    pub cfg: SyncConfig,
+}
+
+impl SyncTrainer {
+    pub fn new(cfg: SyncConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn run(&mut self, source: &mut dyn GradSource) -> Result<RunResult> {
+        let cfg = &self.cfg;
+        let n = source.dim();
+        let plan = cfg
+            .plan
+            .clone()
+            .unwrap_or_else(|| QuantPlan::build(&one_tensor_layout(n), 0));
+        anyhow::ensure!(plan.total_len() == n, "plan does not cover the gradient");
+
+        // Identical init on every worker (same seed), per-worker RNG streams
+        // for quantization randomness.
+        let mut init_rng = Xoshiro256::stream(cfg.seed, 0x1417);
+        let init: Vec<f32> = rng::normal_vec(&mut init_rng, n)
+            .into_iter()
+            .map(|x| x * cfg.init_scale)
+            .collect();
+        let mut workers: Vec<Worker> = (0..cfg.workers)
+            .map(|w| Worker {
+                params: init.clone(),
+                opt: Sgd::new(
+                    crate::optim::LrSchedule::Const(cfg.lr),
+                    cfg.momentum,
+                    0.0,
+                    n,
+                ),
+                compressor: PlanCompressor::from_spec(plan.clone(), &cfg.compressor),
+                rng: Xoshiro256::stream(cfg.seed ^ 0xF00D, w as u64),
+            })
+            .collect();
+
+        let mut loss_curve = Curve::default();
+        let mut eval_curve = Curve::default();
+        let mut breakdown = Breakdown::default();
+        let mut wire = WireStats::default();
+
+        for step in 0..cfg.steps {
+            // 1. local gradients (virtual: all workers compute in parallel)
+            let mut grads = Vec::with_capacity(cfg.workers);
+            let mut mean_loss = 0.0f64;
+            for w in 0..cfg.workers {
+                let (loss, grad) = source.loss_and_grad(w, step as u64, &workers[w].params)?;
+                mean_loss += loss as f64 / cfg.workers as f64;
+                grads.push(grad);
+            }
+            breakdown.compute += VTime(cfg.cost.step_compute_s(source.flops_fwd_per_step(), 1));
+
+            // 2. encode (parallel across workers in virtual time)
+            let mut messages = Vec::with_capacity(cfg.workers);
+            for (w, grad) in grads.iter().enumerate() {
+                let worker = &mut workers[w];
+                let msg = worker.compressor.compress(grad, &mut worker.rng);
+                wire.record(msg.len(), n);
+                messages.push(msg);
+            }
+            breakdown.encode += VTime(cfg.cost.encode_s(n));
+
+            // 3. exchange
+            let bc = collectives::all_broadcast(&cfg.net, messages);
+            breakdown.transfer += bc.time;
+
+            // 4. decode + average (decode each message once; see module doc).
+            // Fused decode-into-accumulator — O(nnz) per sparse message.
+            let mut mean_grad = vec![0.0f32; n];
+            let alpha = 1.0 / cfg.workers as f32;
+            for msg in &bc.messages {
+                workers[0].compressor.decompress_add(msg, alpha, &mut mean_grad)?;
+            }
+            breakdown.decode += VTime(cfg.cost.decode_s(n, cfg.workers));
+
+            // 5. apply identical update on every worker
+            for w in workers.iter_mut() {
+                w.opt.apply(&mut w.params, &mean_grad);
+            }
+            breakdown.steps += 1;
+
+            if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
+                loss_curve.push(step, mean_loss);
+            }
+            if cfg.eval_every > 0 && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) {
+                if let Some(m) = source.eval(&workers[0].params) {
+                    eval_curve.push(step, m);
+                }
+            }
+            if cfg.consistency_every > 0 && step % cfg.consistency_every == 0 {
+                assert_consistent(&workers);
+            }
+        }
+        assert_consistent(&workers);
+
+        Ok(RunResult {
+            loss: loss_curve,
+            eval: eval_curve,
+            breakdown,
+            wire,
+            params: workers.swap_remove(0).params,
+            label: cfg.compressor.label(),
+        })
+    }
+}
+
+fn one_tensor_layout(n: usize) -> crate::models::layout::ParamLayout {
+    crate::models::layout::ParamLayout::synthetic(&[("flat", vec![n])])
+}
+
+/// All replicas must hold bit-identical parameters (synchronous SGD with
+/// deterministic aggregation — the paper's Algorithm 1 invariant).
+fn assert_consistent(workers: &[Worker]) {
+    if workers.len() < 2 {
+        return;
+    }
+    let first = &workers[0].params;
+    assert!(
+        first.iter().all(|p| p.is_finite()),
+        "parameters went non-finite (learning rate above 1/L?)"
+    );
+    for (i, w) in workers.iter().enumerate().skip(1) {
+        assert!(
+            w.params == *first,
+            "worker {i} diverged from worker 0 — synchronous invariant broken"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sources::ConvexSource;
+    use crate::data::QuadraticProblem;
+
+    fn run_with(spec: CompressorSpec, steps: usize, lr: f32) -> RunResult {
+        let p = QuadraticProblem::generate(256, 128, 1e-3, 0.05, 7);
+        let mut src = ConvexSource::new(p, 8, 3);
+        let mut cfg = SyncConfig::quick(4, steps, spec, lr);
+        cfg.eval_every = 10;
+        SyncTrainer::new(cfg).run(&mut src).unwrap()
+    }
+
+    #[test]
+    fn fp32_converges() {
+        let r = run_with(CompressorSpec::Fp32, 150, 0.05);
+        let first = r.loss.points[0].1;
+        let last = r.loss.tail_mean(3);
+        assert!(last < first * 0.2, "{first} -> {last}");
+        // fp32 messages carry only the small segment-framing overhead
+        let ratio = r.wire.compression_ratio();
+        assert!(ratio > 0.95 && ratio <= 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn qsgd_converges_with_compression() {
+        let r = run_with(CompressorSpec::qsgd_4bit(), 150, 0.05);
+        let first = r.loss.points[0].1;
+        let last = r.loss.tail_mean(3);
+        assert!(last < first * 0.3, "{first} -> {last}");
+        assert!(r.wire.compression_ratio() > 4.0, "ratio {}", r.wire.compression_ratio());
+        // bytes on the wire must be far below fp32's (at this tiny model
+        // size transfer *time* is latency-dominated; the time comparison at
+        // real model sizes is the fig2_breakdown bench's job)
+        let fp = run_with(CompressorSpec::Fp32, 20, 0.05);
+        let q = run_with(CompressorSpec::qsgd_4bit(), 20, 0.05);
+        assert!(q.wire.payload_bytes * 4 < fp.wire.payload_bytes);
+    }
+
+    #[test]
+    fn onebit_and_terngrad_converge() {
+        for spec in [CompressorSpec::OneBit { column: 32 }, CompressorSpec::TernGrad { bucket: 32 }] {
+            let r = run_with(spec.clone(), 200, 0.03);
+            let first = r.loss.points[0].1;
+            let last = r.loss.tail_mean(3);
+            assert!(last < first * 0.5, "{}: {first} -> {last}", spec.label());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_with(CompressorSpec::qsgd_2bit(), 30, 0.05);
+        let b = run_with(CompressorSpec::qsgd_2bit(), 30, 0.05);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.wire.payload_bytes, b.wire.payload_bytes);
+    }
+
+    #[test]
+    fn more_workers_lower_variance() {
+        // K-worker averaging reduces gradient noise ⇒ for the same step
+        // count and lr, terminal loss should not be (much) worse.
+        let p = QuadraticProblem::generate(256, 128, 1e-3, 0.5, 9);
+        let mut src = ConvexSource::new(p, 2, 5);
+        let r1 = SyncTrainer::new(SyncConfig::quick(1, 120, CompressorSpec::qsgd_4bit(), 0.04))
+            .run(&mut src)
+            .unwrap();
+        let p2 = QuadraticProblem::generate(256, 128, 1e-3, 0.5, 9);
+        let mut src2 = ConvexSource::new(p2, 2, 5);
+        let r8 = SyncTrainer::new(SyncConfig::quick(8, 120, CompressorSpec::qsgd_4bit(), 0.04))
+            .run(&mut src2)
+            .unwrap();
+        assert!(r8.loss.tail_mean(3) <= r1.loss.tail_mean(3) * 1.2);
+    }
+
+    #[test]
+    fn breakdown_populated() {
+        let r = run_with(CompressorSpec::qsgd_4bit(), 10, 0.05);
+        assert!(r.breakdown.compute.secs() > 0.0);
+        assert!(r.breakdown.encode.secs() > 0.0);
+        assert!(r.breakdown.transfer.secs() > 0.0);
+        assert!(r.breakdown.decode.secs() > 0.0);
+        assert_eq!(r.breakdown.steps, 10);
+        assert!(r.virtual_time(true).secs() <= r.virtual_time(false).secs());
+    }
+}

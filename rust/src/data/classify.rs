@@ -1,0 +1,133 @@
+//! Gaussian-cluster classification data (the MNIST/CIFAR stand-in).
+//!
+//! `classes` well-separated Gaussian clusters in `dim` dimensions with some
+//! within-class anisotropy — learnable but not trivial, so QSGD-vs-fp32
+//! accuracy-parity curves (Fig. 3/5) are meaningful.
+
+
+use crate::util::rng::{self, Xoshiro256};
+
+#[derive(Debug, Clone)]
+pub struct ClassifyData {
+    pub dim: usize,
+    pub classes: usize,
+    /// Cluster centres, `classes × dim`.
+    centers: Vec<f32>,
+    /// Per-class noise scale.
+    noise: f32,
+    seed: u64,
+}
+
+impl ClassifyData {
+    pub fn new(dim: usize, classes: usize, separation: f32, noise: f32, seed: u64) -> Self {
+        let mut rng = Xoshiro256::stream(seed, 0xC1A55);
+        let mut centers = vec![0.0f32; classes * dim];
+        for c in centers.iter_mut() {
+            *c = rng::normal_f32(&mut rng) * separation;
+        }
+        Self { dim, classes, centers, noise, seed }
+    }
+
+    /// Paper-protocol default: MNIST-like difficulty.
+    pub fn mnist_like(dim: usize, classes: usize, seed: u64) -> Self {
+        Self::new(dim, classes, 1.0, 1.2, seed)
+    }
+
+    /// Sample batch `index` for `worker`: (x flat [batch×dim], labels).
+    /// Batches are deterministic in (seed, worker, index) so every run — and
+    /// every compressor under test — sees identical data order.
+    pub fn batch(&self, worker: usize, index: u64, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Xoshiro256::stream(self.seed ^ 0xBA7C4, (worker as u64) << 40 | index);
+        let mut x = Vec::with_capacity(batch * self.dim);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let cls = rng::uniform_usize(&mut rng, self.classes);
+            y.push(cls as i32);
+            let ctr = &self.centers[cls * self.dim..(cls + 1) * self.dim];
+            for d in 0..self.dim {
+                // anisotropic noise: later dims noisier
+                let aniso = 0.5 + (d as f32 / self.dim as f32);
+                x.push(ctr[d] + rng::normal_f32(&mut rng) * self.noise * aniso);
+            }
+        }
+        (x, y)
+    }
+
+    /// A held-out evaluation set.
+    pub fn eval_set(&self, samples: usize) -> (Vec<f32>, Vec<i32>) {
+        self.batch(usize::MAX - 1, u64::MAX - 1, samples)
+    }
+
+    /// 0-1 accuracy of `predict` (argmax scores per row) on an eval set.
+    pub fn accuracy<F>(&self, samples: usize, mut predict: F) -> f64
+    where
+        F: FnMut(&[f32]) -> usize,
+    {
+        let (x, y) = self.eval_set(samples);
+        let mut correct = 0usize;
+        for (row, &label) in x.chunks(self.dim).zip(&y) {
+            if predict(row) == label as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / samples as f64
+    }
+}
+
+/// Bayes-ish reference: nearest-centre classification accuracy (upper bound
+/// ballpark for linear models on this data).
+pub fn nearest_center_accuracy(data: &ClassifyData, samples: usize) -> f64 {
+    let centers = data.centers.clone();
+    let dim = data.dim;
+    data.accuracy(samples, |row| {
+        let mut best = (f32::INFINITY, 0usize);
+        for (c, ctr) in centers.chunks(dim).enumerate() {
+            let d: f32 = row.iter().zip(ctr).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best.0 {
+                best = (d, c);
+            }
+        }
+        best.1
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_deterministic_and_distinct() {
+        let d = ClassifyData::mnist_like(16, 4, 7);
+        let (x1, y1) = d.batch(0, 0, 32);
+        let (x2, y2) = d.batch(0, 0, 32);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        let (x3, _) = d.batch(0, 1, 32);
+        assert_ne!(x1, x3);
+        let (x4, _) = d.batch(1, 0, 32);
+        assert_ne!(x1, x4);
+        assert_eq!(x1.len(), 32 * 16);
+    }
+
+    #[test]
+    fn labels_in_range_and_balanced_ish() {
+        let d = ClassifyData::mnist_like(8, 10, 3);
+        let (_, y) = d.batch(0, 0, 2000);
+        let mut counts = [0usize; 10];
+        for &l in &y {
+            assert!((0..10).contains(&(l as usize)));
+            counts[l as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 100, "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn task_is_learnable() {
+        // nearest-centre accuracy must beat chance by a wide margin
+        let d = ClassifyData::mnist_like(32, 10, 11);
+        let acc = nearest_center_accuracy(&d, 1000);
+        assert!(acc > 0.5, "acc {acc}");
+    }
+}

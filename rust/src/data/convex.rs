@@ -1,0 +1,274 @@
+//! Rust-native convex finite-sum objectives for the theory experiments
+//! (Theorem 3.4 convex QSGD, Theorem 3.6 QSVRG, Appendix F quantized GD).
+//!
+//! These run thousands of iterations per bench, so they are implemented
+//! natively rather than through PJRT; the full three-layer path is exercised
+//! by the MLP/transformer workloads instead.
+
+use rand_core::RngCore;
+
+use crate::util::rng::{self, Xoshiro256};
+
+/// A differentiable finite-sum objective f = (1/m) Σ f_i, ℓ-strongly convex.
+pub trait Objective: Send + Sync {
+    fn dim(&self) -> usize;
+    fn num_components(&self) -> usize;
+    /// Full-objective value.
+    fn loss(&self, w: &[f32]) -> f64;
+    /// ∇f_i(w) accumulated into `out` (overwrites).
+    fn component_grad(&self, i: usize, w: &[f32], out: &mut [f32]);
+    /// Full gradient ∇f(w) into `out`.
+    fn full_grad(&self, w: &[f32], out: &mut [f32]) {
+        let mut tmp = vec![0.0f32; self.dim()];
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let m = self.num_components();
+        for i in 0..m {
+            self.component_grad(i, w, &mut tmp);
+            for (o, t) in out.iter_mut().zip(&tmp) {
+                *o += t / m as f32;
+            }
+        }
+    }
+    /// A stochastic gradient: uniformly random component.
+    fn stochastic_grad(&self, w: &[f32], rng: &mut dyn RngCore, out: &mut [f32]) {
+        let i = rng::uniform_usize(rng, self.num_components());
+        self.component_grad(i, w, out);
+    }
+    /// Strong-convexity modulus ℓ (0 if merely convex).
+    fn strong_convexity(&self) -> f64;
+    /// Smoothness constant L (estimate).
+    fn smoothness(&self) -> f64;
+}
+
+// --------------------------------------------------------------------------
+// Ridge-regularised logistic regression
+// --------------------------------------------------------------------------
+
+/// f_i(w) = log(1 + exp(−y_i·xᵢᵀw)) + (λ/2)‖w‖², y ∈ {−1, +1}.
+pub struct LogisticProblem {
+    pub dim: usize,
+    pub lambda: f32,
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    m: usize,
+    /// max_i ‖x_i‖² (for L = max‖x‖²/4 + λ)
+    max_x2: f64,
+}
+
+impl LogisticProblem {
+    /// Generate a separable-with-noise dataset from a planted weight vector.
+    pub fn generate(m: usize, dim: usize, lambda: f32, seed: u64) -> Self {
+        let mut rng = Xoshiro256::stream(seed, 0x10615);
+        let planted: Vec<f32> = rng::normal_vec(&mut rng, dim);
+        let mut xs = Vec::with_capacity(m * dim);
+        let mut ys = Vec::with_capacity(m);
+        let mut max_x2 = 0.0f64;
+        for _ in 0..m {
+            let x: Vec<f32> = rng::normal_vec(&mut rng, dim);
+            let margin: f32 = x.iter().zip(&planted).map(|(a, b)| a * b).sum();
+            // 10% label noise keeps the optimum interior
+            let flip = rng::uniform_f32(&mut rng) < 0.1;
+            let y = if (margin >= 0.0) ^ flip { 1.0 } else { -1.0 };
+            max_x2 = max_x2.max(x.iter().map(|v| (*v as f64).powi(2)).sum());
+            xs.extend_from_slice(&x);
+            ys.push(y);
+        }
+        Self { dim, lambda, xs, ys, m, max_x2 }
+    }
+}
+
+impl Objective for LogisticProblem {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_components(&self) -> usize {
+        self.m
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for i in 0..self.m {
+            let x = &self.xs[i * self.dim..(i + 1) * self.dim];
+            let z: f32 = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() * self.ys[i];
+            // log(1+exp(-z)), stable
+            total += if z > 0.0 {
+                ((-z as f64).exp()).ln_1p()
+            } else {
+                -z as f64 + ((z as f64).exp()).ln_1p()
+            };
+        }
+        let reg: f64 = 0.5 * self.lambda as f64 * w.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        total / self.m as f64 + reg
+    }
+
+    fn component_grad(&self, i: usize, w: &[f32], out: &mut [f32]) {
+        let x = &self.xs[i * self.dim..(i + 1) * self.dim];
+        let y = self.ys[i];
+        let z: f32 = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() * y;
+        // σ(−z) = 1/(1+e^z)
+        let coef = -y / (1.0 + z.exp());
+        for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w.iter()) {
+            *o = coef * xi + self.lambda * wi;
+        }
+    }
+
+    fn strong_convexity(&self) -> f64 {
+        self.lambda as f64
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.max_x2 / 4.0 + self.lambda as f64
+    }
+}
+
+// --------------------------------------------------------------------------
+// Quadratic f(w) = (1/2m) Σ (xᵢᵀw − b_i)² + (λ/2)‖w‖²  (least squares)
+// --------------------------------------------------------------------------
+
+pub struct QuadraticProblem {
+    pub dim: usize,
+    pub lambda: f32,
+    xs: Vec<f32>,
+    bs: Vec<f32>,
+    m: usize,
+    max_x2: f64,
+}
+
+impl QuadraticProblem {
+    pub fn generate(m: usize, dim: usize, lambda: f32, noise: f32, seed: u64) -> Self {
+        let mut rng = Xoshiro256::stream(seed, 0x40AD);
+        let planted: Vec<f32> = rng::normal_vec(&mut rng, dim);
+        let mut xs = Vec::with_capacity(m * dim);
+        let mut bs = Vec::with_capacity(m);
+        let mut max_x2 = 0.0f64;
+        for _ in 0..m {
+            let x: Vec<f32> = rng::normal_vec(&mut rng, dim);
+            let b: f32 = x.iter().zip(&planted).map(|(a, c)| a * c).sum::<f32>()
+                + rng::normal_f32(&mut rng) * noise;
+            max_x2 = max_x2.max(x.iter().map(|v| (*v as f64).powi(2)).sum());
+            xs.extend_from_slice(&x);
+            bs.push(b);
+        }
+        Self { dim, lambda, xs, bs, m, max_x2 }
+    }
+}
+
+impl Objective for QuadraticProblem {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_components(&self) -> usize {
+        self.m
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for i in 0..self.m {
+            let x = &self.xs[i * self.dim..(i + 1) * self.dim];
+            let r: f32 = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() - self.bs[i];
+            total += 0.5 * (r as f64).powi(2);
+        }
+        let reg: f64 = 0.5 * self.lambda as f64 * w.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        total / self.m as f64 + reg
+    }
+
+    fn component_grad(&self, i: usize, w: &[f32], out: &mut [f32]) {
+        let x = &self.xs[i * self.dim..(i + 1) * self.dim];
+        let r: f32 = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() - self.bs[i];
+        for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w.iter()) {
+            *o = r * xi + self.lambda * wi;
+        }
+    }
+
+    fn strong_convexity(&self) -> f64 {
+        self.lambda as f64
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.max_x2 + self.lambda as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_check<O: Objective>(p: &O, seed: u64) {
+        let mut rng = Xoshiro256::from_u64(seed);
+        let w: Vec<f32> = rng::normal_vec(&mut rng, p.dim());
+        let mut g = vec![0.0f32; p.dim()];
+        p.full_grad(&w, &mut g);
+        let eps = 1e-3f32;
+        for j in 0..p.dim().min(5) {
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[j] += eps;
+            wm[j] -= eps;
+            let fd = (p.loss(&wp) - p.loss(&wm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[j] as f64).abs() < 2e-3,
+                "dim {j}: fd {fd} vs analytic {}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn logistic_gradient_matches_fd() {
+        fd_check(&LogisticProblem::generate(64, 10, 1e-2, 0), 1);
+    }
+
+    #[test]
+    fn quadratic_gradient_matches_fd() {
+        fd_check(&QuadraticProblem::generate(64, 10, 1e-2, 0.1, 0), 2);
+    }
+
+    #[test]
+    fn stochastic_grad_unbiased() {
+        let p = LogisticProblem::generate(32, 8, 1e-2, 3);
+        let mut rng = Xoshiro256::from_u64(4);
+        let w: Vec<f32> = rng::normal_vec(&mut rng, 8);
+        let mut full = vec![0.0f32; 8];
+        p.full_grad(&w, &mut full);
+        let mut acc = vec![0.0f64; 8];
+        let trials = 20_000;
+        let mut g = vec![0.0f32; 8];
+        for _ in 0..trials {
+            p.stochastic_grad(&w, &mut rng, &mut g);
+            for (a, &x) in acc.iter_mut().zip(&g) {
+                *a += x as f64;
+            }
+        }
+        for j in 0..8 {
+            assert!(
+                (acc[j] / trials as f64 - full[j] as f64).abs() < 0.05,
+                "dim {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn gd_converges_on_quadratic() {
+        let p = QuadraticProblem::generate(128, 16, 1e-3, 0.01, 5);
+        let mut w = vec![0.0f32; 16];
+        let mut g = vec![0.0f32; 16];
+        let lr = (1.0 / p.smoothness()) as f32;
+        let l0 = p.loss(&w);
+        for _ in 0..200 {
+            p.full_grad(&w, &mut g);
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= lr * gi;
+            }
+        }
+        assert!(p.loss(&w) < l0 * 0.05, "no convergence: {} -> {}", l0, p.loss(&w));
+    }
+
+    #[test]
+    fn constants_sane() {
+        let p = LogisticProblem::generate(64, 10, 1e-2, 6);
+        assert!(p.strong_convexity() > 0.0);
+        assert!(p.smoothness() > p.strong_convexity());
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic datasets and Rust-native objectives.
+//!
+//! Substitutions for the paper's datasets (DESIGN.md §Substitutions):
+//! Gaussian-cluster classification stands in for MNIST/CIFAR, a Zipf–Markov
+//! token corpus for the LM workloads, and finite-sum logistic/quadratic
+//! problems for the convex theory experiments (Thm 3.4, QSVRG, App. F).
+//! Everything is deterministic given a seed.
+
+pub mod classify;
+pub mod convex;
+pub mod corpus;
+
+pub use classify::ClassifyData;
+pub use convex::{LogisticProblem, Objective, QuadraticProblem};
+pub use corpus::TokenCorpus;

@@ -1,0 +1,30 @@
+//! QSGD: Communication-Efficient SGD via Gradient Quantization and Encoding.
+//!
+//! Full-system reproduction of Alistarh et al., NIPS 2017. Three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator: data-parallel
+//!   worker orchestration, gradient quantization ([`quant`]), lossless Elias coding
+//!   ([`coding`]), a simulated multi-GPU interconnect ([`simnet`]), collective
+//!   communication patterns ([`collectives`]), and the synchronous / asynchronous /
+//!   variance-reduced training loops ([`coordinator`]).
+//! * **Layer 2 (JAX, build-time)** — model forward/backward graphs, AOT-lowered to
+//!   HLO text and executed from Rust via PJRT ([`runtime`]).
+//! * **Layer 1 (Pallas, build-time)** — the stochastic-quantization kernel, fused
+//!   into the L2 graph; validated against a pure-jnp oracle at build time.
+//!
+//! Python never runs on the training hot path: `make artifacts` lowers the graphs
+//! once, and the Rust binary is self-contained afterwards.
+
+pub mod bench;
+pub mod coding;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod simnet;
+pub mod util;

@@ -1,0 +1,305 @@
+//! `qsgd` — CLI for the QSGD reproduction.
+//!
+//! Subcommands:
+//!   info                       — artifacts + runtime smoke info
+//!   train                      — synchronous data-parallel training
+//!   simulate                   — epoch-time breakdown for a paper network
+//!   svrg                       — QSVRG linear-convergence run
+//!   async                      — asynchronous parameter-server run
+//!   validate                   — quick Lemma 3.1 / Thm 3.2 empirical checks
+
+use anyhow::Result;
+
+use qsgd::config::Args;
+use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm};
+use qsgd::coordinator::sources::{ConvexSource, GradSource, RuntimeSource, Workload};
+use qsgd::coordinator::sync::{SyncConfig, SyncTrainer};
+use qsgd::coordinator::{async_ps, svrg, CompressorSpec};
+use qsgd::data::{ClassifyData, LogisticProblem, QuadraticProblem, TokenCorpus};
+use qsgd::metrics::Table;
+use qsgd::models::layout::QuantPlan;
+use qsgd::models::{zoo, CostModel};
+use qsgd::runtime::Runtime;
+use qsgd::simnet::{Preset, SimNet};
+use qsgd::util::stats;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let r = match cmd {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "svrg" => cmd_svrg(&args),
+        "async" => cmd_async(&args),
+        "validate" => cmd_validate(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "qsgd — QSGD (NIPS'17) reproduction\n\n\
+         USAGE: qsgd <info|train|simulate|svrg|async|validate> [--flags]\n\n\
+         train    --model <logreg|mlp|tfm|quadratic|logreg-native> \\\n\
+                  --compressor <fp32|qsgdN[:bucket]|1bit|terngrad> \\\n\
+                  --workers K --steps N --lr F --seed S [--eval-every N]\n\
+         simulate --network <alexnet|vgg19|resnet50|resnet152|resnet110|bn-inception|lstm>\n\
+                  --gpus K [--preset k80|10gbe|nvlink]\n\
+         svrg     --processors K --epochs P [--exact]\n\
+         async    --workers K --updates N --compressor <...>\n\
+         validate [--n N] [--trials T]"
+    );
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let rt = Runtime::from_default_dir()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts ({}):", rt.manifest().artifacts.len());
+    for (name, a) in &rt.manifest().artifacts {
+        println!(
+            "  {name:<14} params={:<9} inputs={} outputs={} {}",
+            a.params.map(|p| p.to_string()).unwrap_or_else(|| "-".into()),
+            a.inputs.len(),
+            a.outputs.len(),
+            a.quant
+                .map(|q| format!("fused-quant s={} bucket={}", q.s, q.bucket))
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.string("model", "mlp");
+    let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
+    let workers = args.usize("workers", 4);
+    let steps = args.usize("steps", 200);
+    let lr = args.f32("lr", 0.1);
+    let seed = args.u64("seed", 0);
+
+    let mut cfg = SyncConfig::quick(workers, steps, spec, lr);
+    cfg.seed = seed;
+    cfg.eval_every = args.usize("eval-every", 25);
+    cfg.log_every = args.usize("log-every", 10);
+
+    let run = |cfg: SyncConfig, src: &mut dyn GradSource| -> Result<()> {
+        let label = cfg.compressor.label();
+        let db = cfg.double_buffer;
+        let mut trainer = SyncTrainer::new(cfg);
+        let res = trainer.run(src)?;
+        println!("== {} on {} ==", label, src.name());
+        println!("loss: {}", res.loss.sparkline(12));
+        if !res.eval.points.is_empty() {
+            println!("eval: {}", res.eval.sparkline(12));
+        }
+        println!(
+            "virtual time: {} (comm {:.0}%), wire: {} msgs, {} payload, {:.2}x vs fp32, {:.2} bits/coord",
+            stats::fmt_duration(res.virtual_time(db).secs()),
+            res.breakdown.comm_fraction() * 100.0,
+            res.wire.messages,
+            stats::fmt_bytes(res.wire.payload_bytes as f64),
+            res.wire.compression_ratio(),
+            res.wire.bits_per_coordinate(),
+        );
+        Ok(())
+    };
+
+    match model.as_str() {
+        "quadratic" => {
+            let p = QuadraticProblem::generate(512, 256, 1e-3, 0.05, seed);
+            run(cfg, &mut ConvexSource::new(p, 8, seed))
+        }
+        "logreg-native" => {
+            let p = LogisticProblem::generate(512, 256, 1e-3, seed);
+            run(cfg, &mut ConvexSource::new(p, 8, seed))
+        }
+        "logreg" | "mlp" | "tfm" => {
+            let rt = Runtime::from_default_dir()?;
+            let (artifact, workload) = runtime_workload(&rt, &model, seed)?;
+            let art = rt.manifest().get(&artifact)?;
+            if let Some(layout) = &art.layout {
+                cfg.plan = Some(QuantPlan::quantize_all(layout));
+            }
+            let mut src = RuntimeSource::new(&rt, &artifact, workload)?;
+            run(cfg, &mut src)
+        }
+        other => anyhow::bail!("unknown model '{other}'"),
+    }
+}
+
+/// Map a model name to (artifact, workload) built from the manifest shapes.
+fn runtime_workload(rt: &Runtime, model: &str, seed: u64) -> Result<(String, Workload)> {
+    match model {
+        "mlp" => {
+            let art = rt.manifest().get("mlp_grad")?;
+            let dim = art.inputs[1].shape[1];
+            let batch = art.batch.unwrap_or(64);
+            Ok((
+                "mlp_grad".into(),
+                Workload::Classify { data: ClassifyData::mnist_like(dim, 10, seed), batch },
+            ))
+        }
+        "tfm" => {
+            let art = rt.manifest().get("tfm_grad")?;
+            let batch = art.batch.unwrap_or(8);
+            let seq_plus_1 = art.inputs[1].shape[1];
+            Ok((
+                "tfm_grad".into(),
+                Workload::Lm { corpus: TokenCorpus::new(512, seed), batch, seq_plus_1 },
+            ))
+        }
+        _ => anyhow::bail!("no runtime workload for model '{model}' (use mlp|tfm)"),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let name = args.string("network", "alexnet");
+    let net = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown network '{name}'"))?;
+    let gpus = args.usize("gpus", 8);
+    let preset: Preset =
+        args.string("preset", "k80").parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let simnet = SimNet::preset(gpus, preset);
+    let cost = CostModel::k80();
+
+    let mut table = Table::new(&["arm", "epoch", "comm%", "msg", "speedup"]);
+    let fp = simulate_epoch(&net, gpus, &EpochArm::fp32(), &simnet, &cost, 2, 0);
+    let arms = [
+        EpochArm::fp32(),
+        EpochArm::qsgd(2, 64),
+        EpochArm::qsgd(4, 512),
+        EpochArm::qsgd(8, 512),
+        EpochArm::onebit(),
+        EpochArm::fp32_allreduce(),
+    ];
+    for arm in arms {
+        let r = simulate_epoch(&net, gpus, &arm, &simnet, &cost, 2, 0);
+        let label =
+            if arm.dense_transport { format!("{} (ring)", r.arm) } else { r.arm.clone() };
+        table.row(&[
+            label,
+            stats::fmt_duration(r.epoch_time()),
+            format!("{:.0}%", r.breakdown.comm_fraction() * 100.0),
+            stats::fmt_bytes(r.message_bytes as f64),
+            format!("{:.2}x", fp.epoch_time() / r.epoch_time()),
+        ]);
+    }
+    println!(
+        "{} on {gpus} GPUs ({} params, {:.1}% quantized, {} steps/epoch):",
+        net.name,
+        net.params(),
+        fp.quantized_fraction * 100.0,
+        fp.steps
+    );
+    table.print();
+    Ok(())
+}
+
+fn cmd_svrg(args: &Args) -> Result<()> {
+    let processors = args.usize("processors", 4);
+    let epochs = args.usize("epochs", 8);
+    let obj = LogisticProblem::generate(256, 64, 0.05, args.u64("seed", 0));
+    let f_star = svrg::solve_f_star(&obj, 4000);
+    let cfg = svrg::SvrgConfig {
+        processors,
+        epochs,
+        iters: None,
+        eta: None,
+        seed: args.u64("seed", 0),
+        quantize: !args.flag("exact"),
+    };
+    let r = svrg::run(&cfg, &obj, f_star)?;
+    println!("QSVRG (quantize={}) gap per epoch:", cfg.quantize);
+    for (e, g) in &r.gap.points {
+        println!("  epoch {e:>2}: {g:.3e}");
+    }
+    println!(
+        "bits/processor/epoch bound: {:.0}; measured total payload {}",
+        r.bits_bound_per_epoch,
+        stats::fmt_bytes(r.wire.payload_bytes as f64)
+    );
+    Ok(())
+}
+
+fn cmd_async(args: &Args) -> Result<()> {
+    let workers = args.usize("workers", 4);
+    let updates = args.usize("updates", 500);
+    let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
+    let cfg = async_ps::AsyncConfig {
+        workers,
+        updates,
+        compressor: spec,
+        lr: args.f32("lr", 0.02),
+        seed: args.u64("seed", 0),
+        net: SimNet::new(
+            workers,
+            qsgd::simnet::Link::new(6e9, 50e-6),
+            qsgd::simnet::Topology::Star,
+        ),
+        cost: CostModel::k80(),
+        speed: vec![],
+        log_every: args.usize("log-every", 25),
+    };
+    let p = QuadraticProblem::generate(512, 256, 1e-3, 0.05, cfg.seed);
+    let mut src = ConvexSource::new(p, 8, cfg.seed);
+    let r = async_ps::run(&cfg, &mut src)?;
+    println!("async QSGD: loss {}", r.loss.sparkline(12));
+    println!(
+        "staleness max={} mean={:.2}, vtime {}, payload {}",
+        r.max_staleness,
+        r.mean_staleness,
+        stats::fmt_duration(r.vtime),
+        stats::fmt_bytes(r.wire.payload_bytes as f64)
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    use qsgd::coding::gradient as gcode;
+    use qsgd::quant::stochastic;
+    use qsgd::util::rng::{self, Xoshiro256};
+
+    let n = args.usize("n", 4096);
+    let trials = args.usize("trials", 50);
+    let mut rng = Xoshiro256::from_u64(args.u64("seed", 0));
+    let v = rng::normal_vec(&mut rng, n);
+    let vnorm2: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+
+    let mut table =
+        Table::new(&["s", "var blowup", "bound", "E nnz", "s(s+√n)", "bits", "Thm3.2/C3.3"]);
+    for s in [1u32, 2, 4, 16, (n as f64).sqrt() as u32] {
+        let (mut var, mut nnz, mut bits) = (0.0f64, 0.0f64, 0.0f64);
+        for _ in 0..trials {
+            let q = stochastic::quantize_paper(&v, s, &mut rng);
+            let d = q.dequantize();
+            var += v.iter().zip(&d).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>();
+            nnz += q.nnz() as f64;
+            bits += gcode::encode_auto(&q).len() as f64 * 8.0;
+        }
+        let bound = ((n as f64) / (s as f64).powi(2)).min((n as f64).sqrt() / s as f64);
+        let code_bound = if (s as f64) >= (n as f64).sqrt() {
+            2.8 * n as f64 + 32.0
+        } else {
+            gcode::sparse_bits_bound(n, s)
+        };
+        table.row(&[
+            s.to_string(),
+            format!("{:.3}", var / trials as f64 / vnorm2),
+            format!("{bound:.3}"),
+            format!("{:.0}", nnz / trials as f64),
+            format!("{:.0}", s as f64 * (s as f64 + (n as f64).sqrt())),
+            format!("{:.0}", bits / trials as f64),
+            format!("{code_bound:.0}"),
+        ]);
+    }
+    println!("Lemma 3.1 / Theorem 3.2 empirical checks (n={n}, {trials} trials):");
+    table.print();
+    Ok(())
+}

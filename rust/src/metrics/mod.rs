@@ -1,0 +1,231 @@
+//! Training metrics: virtual/wall time breakdowns, bytes-on-wire accounting,
+//! loss curves, and the table printers the benches use to emit paper-style
+//! rows.
+
+use crate::simnet::VTime;
+use crate::util::stats;
+
+/// Per-step cost breakdown accumulated over a run (virtual seconds — the
+/// simulated cluster clock; wall time is tracked by callers where relevant).
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    /// Fwd+bwd compute.
+    pub compute: VTime,
+    /// Quantize + entropy-code (the paper folds this into communication).
+    pub encode: VTime,
+    /// Wire transfer.
+    pub transfer: VTime,
+    /// Decode + aggregate.
+    pub decode: VTime,
+    pub steps: usize,
+}
+
+impl Breakdown {
+    /// The paper's "communication" bucket: encode + transfer + decode.
+    pub fn communication(&self) -> VTime {
+        self.encode + self.transfer + self.decode
+    }
+
+    pub fn total(&self) -> VTime {
+        self.compute + self.communication()
+    }
+
+    /// Total with double buffering (§5 Protocol): communication of step t
+    /// overlaps with computation of step t+1, so epoch time ≈
+    /// steps · max(comp, comm) + the non-overlapped tail.
+    pub fn total_double_buffered(&self) -> VTime {
+        let per_comp = self.compute.secs() / self.steps.max(1) as f64;
+        let per_comm = self.communication().secs() / self.steps.max(1) as f64;
+        VTime(self.steps as f64 * per_comp.max(per_comm) + per_comp.min(per_comm))
+    }
+
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total().secs();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.communication().secs() / t
+        }
+    }
+
+    pub fn add(&mut self, other: &Breakdown) {
+        self.compute += other.compute;
+        self.encode += other.encode;
+        self.transfer += other.transfer;
+        self.decode += other.decode;
+        self.steps += other.steps;
+    }
+}
+
+/// Bits-on-wire accounting for one worker's outbound traffic.
+#[derive(Debug, Clone, Default)]
+pub struct WireStats {
+    pub messages: u64,
+    pub payload_bytes: u64,
+    /// What the same payloads would cost uncompressed (n·4 bytes each).
+    pub fp32_equiv_bytes: u64,
+}
+
+impl WireStats {
+    pub fn record(&mut self, payload: usize, n_coords: usize) {
+        self.messages += 1;
+        self.payload_bytes += payload as u64;
+        self.fp32_equiv_bytes += n_coords as u64 * 4;
+    }
+
+    /// Bandwidth saving factor vs fp32 (the paper's headline ~5.7× etc).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.payload_bytes == 0 {
+            return 1.0;
+        }
+        self.fp32_equiv_bytes as f64 / self.payload_bytes as f64
+    }
+
+    pub fn bits_per_coordinate(&self) -> f64 {
+        if self.fp32_equiv_bytes == 0 {
+            return 0.0;
+        }
+        self.payload_bytes as f64 * 8.0 / (self.fp32_equiv_bytes as f64 / 4.0)
+    }
+
+    pub fn add(&mut self, other: &WireStats) {
+        self.messages += other.messages;
+        self.payload_bytes += other.payload_bytes;
+        self.fp32_equiv_bytes += other.fp32_equiv_bytes;
+    }
+}
+
+/// A (step → value) curve, e.g. loss or accuracy over training.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Curve {
+    pub fn push(&mut self, step: usize, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    /// Mean of the final `k` values (smoothed terminal value).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        let vals: Vec<f64> =
+            self.points.iter().rev().take(k).map(|&(_, v)| v).collect();
+        stats::mean(&vals)
+    }
+
+    /// First step at which the curve drops to ≤ `target` (loss) — used for
+    /// "time to target accuracy/loss" comparisons (Fig. 3).
+    pub fn first_step_below(&self, target: f64) -> Option<usize> {
+        self.points.iter().find(|&&(_, v)| v <= target).map(|&(s, _)| s)
+    }
+
+    /// Render as compact text for logs: `step:value` pairs, subsampled.
+    pub fn sparkline(&self, max_points: usize) -> String {
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let stride = (self.points.len() / max_points.max(1)).max(1);
+        self.points
+            .iter()
+            .step_by(stride)
+            .map(|(s, v)| format!("{s}:{v:.4}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Fixed-width table printer (paper-style rows in bench output).
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cols: &[String]) {
+        assert_eq!(cols.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cols) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cols.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cols: &[String]| {
+            let mut s = String::from("| ");
+            for (c, w) in cols.iter().zip(&self.widths) {
+                s.push_str(&format!("{:<width$} | ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_math() {
+        let b = Breakdown {
+            compute: VTime(6.0),
+            encode: VTime(1.0),
+            transfer: VTime(2.0),
+            decode: VTime(1.0),
+            steps: 2,
+        };
+        assert_eq!(b.communication().secs(), 4.0);
+        assert_eq!(b.total().secs(), 10.0);
+        assert!((b.comm_fraction() - 0.4).abs() < 1e-12);
+        // double buffered: 2 steps · max(3, 2) + min(3, 2) = 8
+        assert!((b.total_double_buffered().secs() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wire_stats() {
+        let mut w = WireStats::default();
+        w.record(100, 1000); // 100 bytes for 1000 coords
+        w.record(100, 1000);
+        assert_eq!(w.messages, 2);
+        assert!((w.compression_ratio() - 40.0).abs() < 1e-12);
+        assert!((w.bits_per_coordinate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_queries() {
+        let mut c = Curve::default();
+        for (s, v) in [(0, 5.0), (10, 3.0), (20, 1.5), (30, 1.0)] {
+            c.push(s, v);
+        }
+        assert_eq!(c.first_step_below(2.0), Some(20));
+        assert_eq!(c.first_step_below(0.5), None);
+        assert_eq!(c.last(), Some(1.0));
+        assert!((c.tail_mean(2) - 1.25).abs() < 1e-12);
+        assert!(!c.sparkline(2).is_empty());
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+}

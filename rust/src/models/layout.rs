@@ -1,0 +1,210 @@
+//! Flat-parameter layouts and quantization plans.
+//!
+//! The L2 graphs operate on a single flat `f32[n]` parameter vector; the
+//! AOT manifest records where each named tensor lives. The coordinator uses
+//! this to apply the paper's §5 protocol rules: tensors with fewer than 10K
+//! elements are *not* quantized ("the computational cost of quantizing them
+//! significantly exceeds the reduction in communication"), and buckets never
+//! straddle tensor boundaries ("we reshape matrices to fit bucket sizes, so
+//! that no receptive field is split across two buckets").
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Paper §5: tensors smaller than this many elements ride along in fp32.
+pub const SKIP_QUANT_BELOW: usize = 10_000;
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// The full layout of a model's flat parameter vector.
+#[derive(Debug, Clone, Default)]
+pub struct ParamLayout {
+    pub tensors: Vec<TensorInfo>,
+}
+
+impl ParamLayout {
+    /// Parse the `layout` array of a manifest entry.
+    pub fn from_json(layout: &Json) -> Result<Self> {
+        let arr = layout.as_arr().context("layout is not an array")?;
+        let mut tensors = Vec::with_capacity(arr.len());
+        let mut expect_off = 0usize;
+        for t in arr {
+            let name = t.get("name").and_then(Json::as_str).context("tensor name")?.to_string();
+            let shape: Vec<usize> = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("tensor shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let offset = t.get("offset").and_then(Json::as_usize).context("tensor offset")?;
+            let size = t.get("size").and_then(Json::as_usize).context("tensor size")?;
+            anyhow::ensure!(offset == expect_off, "layout not contiguous at {name}");
+            anyhow::ensure!(shape.iter().product::<usize>() == size, "shape/size mismatch at {name}");
+            expect_off = offset + size;
+            tensors.push(TensorInfo { name, shape, offset, size });
+        }
+        Ok(Self { tensors })
+    }
+
+    /// Synthetic layout (for networks we only simulate): one tensor per
+    /// (name, shape) pair, packed contiguously.
+    pub fn synthetic(tensors: &[(&str, Vec<usize>)]) -> Self {
+        let mut out = Vec::with_capacity(tensors.len());
+        let mut off = 0;
+        for (name, shape) in tensors {
+            let size: usize = shape.iter().product();
+            out.push(TensorInfo { name: name.to_string(), shape: shape.clone(), offset: off, size });
+            off += size;
+        }
+        Self { tensors: out }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.last().map(|t| t.offset + t.size).unwrap_or(0)
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorInfo> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+}
+
+/// A contiguous segment of the flat gradient with a single treatment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub offset: usize,
+    pub len: usize,
+    /// false ⇒ transmit raw fp32 (the <10K rule).
+    pub quantized: bool,
+}
+
+/// How a model's gradient is carved into quantize/skip segments.
+///
+/// Adjacent quantized tensors are merged into one segment (buckets then run
+/// across the merged range but the coordinator resets buckets at segment
+/// boundaries, honouring the no-straddle rule at the tensor-group level the
+/// way CNTK's reshaping does).
+#[derive(Debug, Clone, Default)]
+pub struct QuantPlan {
+    pub segments: Vec<Segment>,
+}
+
+impl QuantPlan {
+    pub fn build(layout: &ParamLayout, min_quant_size: usize) -> Self {
+        let mut segments: Vec<Segment> = Vec::new();
+        for t in &layout.tensors {
+            let quantized = t.size >= min_quant_size;
+            match segments.last_mut() {
+                Some(s) if s.quantized == quantized && s.offset + s.len == t.offset => {
+                    s.len += t.size;
+                }
+                _ => segments.push(Segment { offset: t.offset, len: t.size, quantized }),
+            }
+        }
+        Self { segments }
+    }
+
+    /// Paper default: the §5 skip rule.
+    pub fn paper_default(layout: &ParamLayout) -> Self {
+        Self::build(layout, SKIP_QUANT_BELOW)
+    }
+
+    /// Quantize everything (for small test models whose tensors are all
+    /// below the paper threshold).
+    pub fn quantize_all(layout: &ParamLayout) -> Self {
+        Self::build(layout, 0)
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.segments.iter().map(|s| s.len).sum()
+    }
+
+    /// Fraction of parameters transmitted in quantized form (the paper
+    /// reports >99% for its networks).
+    pub fn quantized_fraction(&self) -> f64 {
+        let q: usize = self.segments.iter().filter(|s| s.quantized).map(|s| s.len).sum();
+        let t = self.total_len();
+        if t == 0 {
+            0.0
+        } else {
+            q as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn parse_manifest_layout() {
+        let j = json::parse(
+            r#"[
+              {"name": "w", "shape": [4, 8], "offset": 0, "size": 32},
+              {"name": "b", "shape": [8], "offset": 32, "size": 8}
+            ]"#,
+        )
+        .unwrap();
+        let l = ParamLayout::from_json(&j).unwrap();
+        assert_eq!(l.total_params(), 40);
+        assert_eq!(l.tensor("w").unwrap().shape, vec![4, 8]);
+        assert!(l.tensor("missing").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_gaps() {
+        let j = json::parse(
+            r#"[{"name": "w", "shape": [4], "offset": 1, "size": 4}]"#,
+        )
+        .unwrap();
+        assert!(ParamLayout::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn skip_rule_and_merging() {
+        let l = ParamLayout::synthetic(&[
+            ("conv1", vec![64, 3, 7, 7]),    // 9408 < 10K  -> fp32
+            ("fc1", vec![512, 512]),         // 262144      -> quantized
+            ("fc1.b", vec![512]),            // 512         -> fp32
+            ("fc2", vec![512, 512]),         // quantized
+            ("fc3", vec![512, 512]),         // quantized (merges with fc2? no — fc1.b between)
+        ]);
+        let p = QuantPlan::paper_default(&l);
+        assert_eq!(p.segments.len(), 4);
+        assert!(!p.segments[0].quantized);
+        assert!(p.segments[1].quantized);
+        assert!(!p.segments[2].quantized);
+        assert!(p.segments[3].quantized);
+        assert_eq!(p.segments[3].len, 2 * 512 * 512); // fc2+fc3 merged
+        assert_eq!(p.total_len(), l.total_params());
+        let f = p.quantized_fraction();
+        assert!(f > 0.97 && f < 1.0, "{f}");
+    }
+
+    #[test]
+    fn quantize_all_is_one_segment() {
+        let l = ParamLayout::synthetic(&[("a", vec![10]), ("b", vec![20])]);
+        let p = QuantPlan::quantize_all(&l);
+        assert_eq!(p.segments.len(), 1);
+        assert_eq!(p.segments[0].len, 30);
+        assert_eq!(p.quantized_fraction(), 1.0);
+    }
+
+    #[test]
+    fn empty_layout() {
+        let l = ParamLayout::default();
+        assert_eq!(l.total_params(), 0);
+        let p = QuantPlan::paper_default(&l);
+        assert!(p.segments.is_empty());
+        assert_eq!(p.quantized_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Model metadata: flat-parameter layouts (the contract with the L2 JAX
+//! graphs), quantization plans (the paper's <10K-element skip rule and
+//! bucket reshaping), shape replicas of the paper's evaluation networks, and
+//! the FLOPs cost model that drives the epoch-time simulator.
+
+pub mod cost;
+pub mod layout;
+pub mod zoo;
+
+pub use cost::CostModel;
+pub use layout::{ParamLayout, QuantPlan, TensorInfo};
+pub use zoo::NetworkShape;

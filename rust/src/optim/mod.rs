@@ -1,0 +1,140 @@
+//! Optimizers and learning-rate schedules for the coordinator.
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Const(f32),
+    /// lr · decay^(step/every)
+    StepDecay { lr: f32, decay: f32, every: usize },
+    /// 1/(L + √K/γ) style theory rate is just Const computed by the caller.
+    InvSqrt { lr: f32, warmup: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Const(lr) => lr,
+            LrSchedule::StepDecay { lr, decay, every } => {
+                lr * decay.powi((step / every.max(1)) as i32)
+            }
+            LrSchedule::InvSqrt { lr, warmup } => {
+                if step < warmup {
+                    lr * (step + 1) as f32 / warmup as f32
+                } else {
+                    lr * ((warmup.max(1) as f32) / (step + 1) as f32).sqrt()
+                }
+            }
+        }
+    }
+}
+
+/// SGD with optional momentum and weight decay — the update rule of
+/// Algorithm 1 line 9 (`x ← x − (η/K) Σ ĝ`); the coordinator passes the
+/// already-averaged decoded gradient.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub schedule: LrSchedule,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Vec<f32>,
+    step: usize,
+}
+
+impl Sgd {
+    pub fn new(schedule: LrSchedule, momentum: f32, weight_decay: f32, dim: usize) -> Self {
+        Self {
+            schedule,
+            momentum,
+            weight_decay,
+            velocity: if momentum > 0.0 { vec![0.0; dim] } else { Vec::new() },
+            step: 0,
+        }
+    }
+
+    pub fn plain(lr: f32, dim: usize) -> Self {
+        Self::new(LrSchedule::Const(lr), 0.0, 0.0, dim)
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.schedule.at(self.step)
+    }
+
+    /// Apply one update in place.
+    pub fn apply(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        let lr = self.lr();
+        if self.momentum > 0.0 {
+            assert_eq!(self.velocity.len(), params.len());
+            for i in 0..params.len() {
+                let g = grad[i] + self.weight_decay * params[i];
+                self.velocity[i] = self.momentum * self.velocity[i] + g;
+                params[i] -= lr * self.velocity[i];
+            }
+        } else if self.weight_decay > 0.0 {
+            for i in 0..params.len() {
+                params[i] -= lr * (grad[i] + self.weight_decay * params[i]);
+            }
+        } else {
+            for (p, &g) in params.iter_mut().zip(grad) {
+                *p -= lr * g;
+            }
+        }
+        self.step += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules() {
+        assert_eq!(LrSchedule::Const(0.1).at(1000), 0.1);
+        let s = LrSchedule::StepDecay { lr: 1.0, decay: 0.5, every: 10 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(10), 0.5);
+        assert_eq!(s.at(25), 0.25);
+        let w = LrSchedule::InvSqrt { lr: 1.0, warmup: 10 };
+        assert!(w.at(0) < w.at(9));
+        assert!(w.at(100) < w.at(10));
+    }
+
+    #[test]
+    fn plain_sgd_descends_quadratic() {
+        // f(x) = 0.5‖x‖² ⇒ grad = x; converges from any start
+        let mut p = vec![1.0f32, -2.0, 3.0];
+        let mut opt = Sgd::plain(0.1, 3);
+        for _ in 0..100 {
+            let g = p.clone();
+            opt.apply(&mut p, &g);
+        }
+        assert!(p.iter().all(|&x| x.abs() < 1e-3));
+        assert_eq!(opt.step_count(), 100);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |mom: f32| {
+            let mut p = vec![1.0f32; 4];
+            let mut opt = Sgd::new(LrSchedule::Const(0.02), mom, 0.0, 4);
+            for _ in 0..60 {
+                let g = p.clone();
+                opt.apply(&mut p, &g);
+            }
+            p.iter().map(|x| (x * x) as f64).sum::<f64>()
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut p = vec![1.0f32];
+        let mut opt = Sgd::new(LrSchedule::Const(0.1), 0.0, 0.5, 1);
+        opt.apply(&mut p, &[0.0]);
+        assert!((p[0] - 0.95).abs() < 1e-6);
+    }
+}

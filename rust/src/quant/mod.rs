@@ -1,0 +1,253 @@
+//! Gradient quantizers: QSGD (stochastic, §3.1/§4), the deterministic GD
+//! quantizer (Appendix F), and the 1BitSGD / TernGrad baselines.
+
+pub mod deterministic;
+pub mod onebit;
+pub mod stochastic;
+pub mod terngrad;
+
+
+
+/// Which per-bucket scale `F(b)` to use (paper §4: max-norm "preserves more
+/// values" but loses the sparsity guarantee; §3.1 theory uses the 2-norm).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+
+pub enum Norm {
+    L2,
+    #[default]
+    Max,
+}
+
+impl Norm {
+    /// Per-bucket scale. 8-lane unrolled reductions — the scalar fold does
+    /// not auto-vectorise and the scale pass was ~25% of quantize time
+    /// (EXPERIMENTS.md §Perf). NOTE: the L2 summation order differs from a
+    /// strict sequential sum by f32 rounding, same as XLA's vectorised
+    /// reduction — the Pallas cross-check budgets for this.
+    pub fn scale(self, v: &[f32]) -> f32 {
+        match self {
+            Norm::L2 => {
+                let mut acc = [0.0f32; 8];
+                let chunks = v.chunks_exact(8);
+                let rem = chunks.remainder();
+                for ch in chunks {
+                    for i in 0..8 {
+                        acc[i] += ch[i] * ch[i];
+                    }
+                }
+                let mut s: f32 = acc.iter().sum();
+                for &x in rem {
+                    s += x * x;
+                }
+                s.sqrt()
+            }
+            Norm::Max => {
+                let mut acc = [0.0f32; 8];
+                let chunks = v.chunks_exact(8);
+                let rem = chunks.remainder();
+                for ch in chunks {
+                    for i in 0..8 {
+                        acc[i] = acc[i].max(ch[i].abs());
+                    }
+                }
+                let mut m = acc.iter().fold(0.0f32, |a, &b| a.max(b));
+                for &x in rem {
+                    m = m.max(x.abs());
+                }
+                m
+            }
+        }
+    }
+}
+
+/// One quantized bucket: the transmitted scale plus signed levels
+/// `ℓ_i ∈ [−s, s]` (sign folded in; `|ℓ_i|/s = ξ_i` of the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantBucket {
+    pub scale: f32,
+    pub levels: Vec<i32>,
+}
+
+impl QuantBucket {
+    /// Reconstruct `Q_s(b)_i = F(b)·sgn·ℓ_i/s` into `out`.
+    pub fn dequantize_into(&self, s: u32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.levels.len());
+        let k = self.scale / s as f32;
+        for (o, &l) in out.iter_mut().zip(&self.levels) {
+            *o = l as f32 * k;
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.levels.iter().filter(|&&l| l != 0).count()
+    }
+}
+
+/// A fully quantized gradient: the exact object `Encode`/`Decode` of
+/// Algorithm 1 moves between processors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedGradient {
+    /// Quantization levels `s ≥ 1` (bit width b ⇒ `s = 2^(b−1) − 1` signed
+    /// levels plus sign, see [`levels_for_bits`]).
+    pub s: u32,
+    /// Bucket size `d` (§4); the final bucket may be shorter.
+    pub bucket_size: usize,
+    pub norm: Norm,
+    /// Original vector length.
+    pub n: usize,
+    pub buckets: Vec<QuantBucket>,
+}
+
+impl QuantizedGradient {
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n];
+        let mut off = 0;
+        for b in &self.buckets {
+            let end = off + b.levels.len();
+            b.dequantize_into(self.s, &mut out[off..end]);
+            off = end;
+        }
+        debug_assert_eq!(off, self.n);
+        out
+    }
+
+    /// Accumulate `alpha · Q_s(v)` into `acc` without materialising a Vec —
+    /// the decode-side hot path when averaging K peers' gradients.
+    pub fn dequantize_add(&self, alpha: f32, acc: &mut [f32]) {
+        assert_eq!(acc.len(), self.n);
+        let mut off = 0;
+        for b in &self.buckets {
+            let k = alpha * b.scale / self.s as f32;
+            for (a, &l) in acc[off..off + b.levels.len()].iter_mut().zip(&b.levels) {
+                *a += l as f32 * k;
+            }
+            off += b.levels.len();
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.buckets.iter().map(|b| b.nnz()).sum()
+    }
+}
+
+/// `b`-bit QSGD in the paper's experimental framing uses `2^(b−1) − 1`
+/// magnitude levels plus a sign bit per coordinate (e.g. 4-bit ⇒ s = 7
+/// levels {0, 1/7, …, 1}; 2-bit ⇒ s = 1, i.e. ternary).
+pub fn levels_for_bits(bits: u32) -> u32 {
+    assert!((2..=16).contains(&bits), "bit width out of range");
+    (1u32 << (bits - 1)) - 1
+}
+
+/// §4 variance knob: quantizing buckets of size `d` with `s` levels bounds
+/// the variance blowup by `min(d/s², √d/s)` (paper example: bucket 512 at
+/// 4 bits ⇒ √512/2⁴ ≈ 1.41).
+pub fn variance_bound(d: usize, s: u32) -> f64 {
+    let d = d as f64;
+    let s = s as f64;
+    (d / (s * s)).min(d.sqrt() / s)
+}
+
+/// A gradient compressor as plugged into the coordinator's exchange step
+/// (Algorithm 1 lines 3/7). Implementations may be stateful (1BitSGD keeps
+/// per-worker error-feedback residuals).
+pub trait Compressor: Send {
+    /// Encode `grad` into a wire message.
+    fn compress(&mut self, grad: &[f32], rng: &mut dyn rand_core::RngCore) -> Vec<u8>;
+    /// Decode a peer's message back into a dense gradient of length `n`.
+    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>>;
+    /// Fused decode-and-accumulate: `acc[..n] += alpha · decode(msg)`.
+    /// Implementations may exploit wire-level sparsity (QSGD overrides this
+    /// with an O(nnz) path — the paper's §6 future-work optimisation);
+    /// the default decodes then adds.
+    fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
+        let g = self.decompress(msg, acc.len())?;
+        for (a, &x) in acc.iter_mut().zip(&g) {
+            *a += alpha * x;
+        }
+        Ok(())
+    }
+    fn name(&self) -> String;
+}
+
+/// Identity "compressor": raw little-endian f32s (the 32-bit baseline).
+pub struct Fp32;
+
+impl Compressor for Fp32 {
+    fn compress(&mut self, grad: &[f32], _rng: &mut dyn rand_core::RngCore) -> Vec<u8> {
+        let mut out = Vec::with_capacity(grad.len() * 4);
+        for &g in grad {
+            out.extend_from_slice(&g.to_le_bytes());
+        }
+        out
+    }
+
+    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(msg.len() == n * 4, "fp32 message length mismatch");
+        Ok(msg
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_for_bits_matches_paper() {
+        assert_eq!(levels_for_bits(2), 1); // ternary
+        assert_eq!(levels_for_bits(4), 7);
+        assert_eq!(levels_for_bits(8), 127);
+    }
+
+    #[test]
+    fn variance_knob_example() {
+        // Paper §4 example, stated with s = 2^bits: √512/2⁴ ≈ 1.41.
+        assert!((variance_bound(512, 16) - 1.414).abs() < 0.01);
+    }
+
+    #[test]
+    fn fp32_roundtrip() {
+        let g = vec![1.0f32, -2.5, 0.0, f32::MIN_POSITIVE];
+        let mut c = Fp32;
+        let msg = c.compress(&g, &mut crate::util::rng::Xoshiro256::from_u64(0));
+        assert_eq!(msg.len(), 16);
+        assert_eq!(c.decompress(&msg, 4).unwrap(), g);
+        assert!(c.decompress(&msg, 5).is_err());
+    }
+
+    #[test]
+    fn norm_scales() {
+        let v = [3.0f32, -4.0];
+        assert!((Norm::L2.scale(&v) - 5.0).abs() < 1e-6);
+        assert!((Norm::Max.scale(&v) - 4.0).abs() < 1e-6);
+        assert_eq!(Norm::L2.scale(&[]), 0.0);
+    }
+
+    #[test]
+    fn dequantize_add_matches_dequantize() {
+        let qg = QuantizedGradient {
+            s: 4,
+            bucket_size: 3,
+            norm: Norm::Max,
+            n: 5,
+            buckets: vec![
+                QuantBucket { scale: 2.0, levels: vec![4, -2, 0] },
+                QuantBucket { scale: 1.0, levels: vec![1, -4] },
+            ],
+        };
+        let d = qg.dequantize();
+        assert_eq!(d, vec![2.0, -1.0, 0.0, 0.25, -1.0]);
+        let mut acc = vec![1.0f32; 5];
+        qg.dequantize_add(0.5, &mut acc);
+        for i in 0..5 {
+            assert!((acc[i] - (1.0 + 0.5 * d[i])).abs() < 1e-6);
+        }
+        assert_eq!(qg.nnz(), 4);
+    }
+}

@@ -1,0 +1,177 @@
+//! 1BitSGD baseline (Seide et al. 2014), as compared against in Appendix E.
+//!
+//! Each coordinate is reduced to its sign; per column (here: per bucket, the
+//! CNTK implementation quantizes per matrix column — see the Appendix-E
+//! discussion of that artefact) two reconstruction values are transmitted:
+//! the mean of the positive entries and the mean of the negative entries.
+//! The quantization *error is fed back*: the residual is added to the next
+//! step's gradient, which is what makes the heuristic converge in practice
+//! (delta-sigma modulation) but is also why it needs an extra model-sized
+//! state buffer — the paper notes QSGD avoids this ("quantization on the
+//! fly, without error accumulation").
+//!
+//! Wire cost: 1 bit per coordinate + 2 floats per column (paper §1: "a cost
+//! of n bits and two floats per iteration" for column = n).
+
+use crate::coding::bitstream::{BitReader, BitWriter};
+
+/// Stateful 1BitSGD quantizer (holds the error-feedback residual).
+pub struct OneBitSgd {
+    /// Column length used for the two reconstruction means.
+    pub column: usize,
+    residual: Vec<f32>,
+}
+
+impl OneBitSgd {
+    pub fn new(n: usize, column: usize) -> Self {
+        assert!(column >= 1);
+        Self { column, residual: vec![0.0; n] }
+    }
+
+    /// Quantize `grad + residual`, update the residual, return the message.
+    pub fn compress(&mut self, grad: &[f32]) -> Vec<u8> {
+        assert_eq!(grad.len(), self.residual.len());
+        let n = grad.len();
+        let mut w = BitWriter::with_capacity(n / 8 + (n / self.column + 1) * 8 + 16);
+        // Header: none needed (n, column are out-of-band via config).
+        for (ci, chunk) in grad.chunks(self.column).enumerate() {
+            let off = ci * self.column;
+            // effective gradient = grad + carried error
+            let eff: Vec<f32> = chunk
+                .iter()
+                .zip(&self.residual[off..off + chunk.len()])
+                .map(|(&g, &r)| g + r)
+                .collect();
+            let (mut psum, mut pcnt, mut nsum, mut ncnt) = (0.0f64, 0usize, 0.0f64, 0usize);
+            for &x in &eff {
+                if x >= 0.0 {
+                    psum += x as f64;
+                    pcnt += 1;
+                } else {
+                    nsum += x as f64;
+                    ncnt += 1;
+                }
+            }
+            let pmean = if pcnt > 0 { (psum / pcnt as f64) as f32 } else { 0.0 };
+            let nmean = if ncnt > 0 { (nsum / ncnt as f64) as f32 } else { 0.0 };
+            w.write_f32(pmean);
+            w.write_f32(nmean);
+            for (j, &x) in eff.iter().enumerate() {
+                let neg = x < 0.0;
+                w.write_bit(neg);
+                let recon = if neg { nmean } else { pmean };
+                self.residual[off + j] = x - recon;
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Decode a peer's message into a dense gradient.
+    pub fn decompress(msg: &[u8], n: usize, column: usize) -> anyhow::Result<Vec<f32>> {
+        let mut r = BitReader::new(msg);
+        let mut out = Vec::with_capacity(n);
+        let mut remaining = n;
+        while remaining > 0 {
+            let len = remaining.min(column);
+            let pmean = r.read_f32()?;
+            let nmean = r.read_f32()?;
+            for _ in 0..len {
+                out.push(if r.read_bit()? { nmean } else { pmean });
+            }
+            remaining -= len;
+        }
+        Ok(out)
+    }
+
+    /// Message size in bits for a gradient of length `n` (exact, for the
+    /// cost model): 64 bits per column + 1 bit per coordinate.
+    pub fn message_bits(n: usize, column: usize) -> u64 {
+        let cols = n.div_ceil(column) as u64;
+        cols * 64 + n as u64
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    pub fn reset(&mut self) {
+        self.residual.iter_mut().for_each(|r| *r = 0.0);
+    }
+}
+
+impl super::Compressor for OneBitSgd {
+    fn compress(&mut self, grad: &[f32], _rng: &mut dyn rand_core::RngCore) -> Vec<u8> {
+        OneBitSgd::compress(self, grad)
+    }
+
+    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        OneBitSgd::decompress(msg, n, self.column)
+    }
+
+    fn name(&self) -> String {
+        format!("1bit(col={})", self.column)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_size() {
+        let g: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 10.0).collect();
+        let mut q = OneBitSgd::new(100, 32);
+        let msg = q.compress(&g);
+        assert_eq!(msg.len() as u64, OneBitSgd::message_bits(100, 32).div_ceil(8));
+        let d = OneBitSgd::decompress(&msg, 100, 32).unwrap();
+        assert_eq!(d.len(), 100);
+        // signs must match (first step: residual = 0)
+        for (x, y) in g.iter().zip(&d) {
+            if *x > 0.0 {
+                assert!(*y >= 0.0);
+            }
+            if *x < 0.0 {
+                assert!(*y <= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_preserves_mass() {
+        // Σ decoded + residual == Σ effective gradient per column (the
+        // delta-sigma property: no gradient mass is ever lost).
+        let g: Vec<f32> = (0..64).map(|i| ((i * 37) % 13) as f32 - 6.0).collect();
+        let mut q = OneBitSgd::new(64, 64);
+        let msg = q.compress(&g);
+        let d = OneBitSgd::decompress(&msg, 64, 64).unwrap();
+        for i in 0..64 {
+            assert!((d[i] + q.residual()[i] - g[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn residual_drives_later_steps() {
+        // A coordinate too small to flip the sign on step 1 must eventually
+        // be transmitted thanks to error feedback.
+        let mut q = OneBitSgd::new(2, 2);
+        let g = [1.0f32, -0.1];
+        let mut acc = [0.0f32; 2];
+        for _ in 0..50 {
+            let msg = q.compress(&g);
+            let d = OneBitSgd::decompress(&msg, 2, 2).unwrap();
+            acc[0] += d[0];
+            acc[1] += d[1];
+        }
+        // over 50 steps the *average* transmitted value approaches g
+        assert!((acc[0] / 50.0 - 1.0).abs() < 0.1);
+        assert!((acc[1] / 50.0 + 0.1).abs() < 0.05);
+    }
+
+    #[test]
+    fn zero_gradient() {
+        let mut q = OneBitSgd::new(8, 4);
+        let msg = q.compress(&[0.0; 8]);
+        let d = OneBitSgd::decompress(&msg, 8, 4).unwrap();
+        assert_eq!(d, vec![0.0; 8]);
+    }
+}

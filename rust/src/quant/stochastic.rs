@@ -1,0 +1,296 @@
+//! QSGD stochastic quantization `Q_s` — paper §3.1 with the §4 bucketing and
+//! max-norm variants.
+//!
+//! Level assignment must agree with the Layer-1 Pallas kernel and its jnp
+//! oracle (``python/compile/kernels/ref.py``): with `r = |v_i|·s/F(b)`,
+//! `ℓ = ⌊r⌋`, `p = r − ℓ`, the quantized level is `ℓ + 1{u < p}` — unbiased
+//! randomized rounding onto `{0, 1/s, …, 1}` (Lemma 3.1(i)).
+
+use rand_core::RngCore;
+
+use super::{Norm, QuantBucket, QuantizedGradient};
+
+/// Quantize one bucket given externally supplied uniforms (deterministic;
+/// this is the function cross-checked level-for-level against Pallas).
+pub fn quantize_bucket_with_uniforms(v: &[f32], u: &[f32], s: u32, norm: Norm) -> QuantBucket {
+    debug_assert_eq!(v.len(), u.len());
+    let scale = norm.scale(v);
+    if scale <= 0.0 || !scale.is_finite() {
+        return QuantBucket { scale: 0.0, levels: vec![0; v.len()] };
+    }
+    // Match the jnp oracle's operation order: k = s/scale, r = |v|·k.
+    let k = s as f32 / scale;
+    let levels = v
+        .iter()
+        .zip(u)
+        .map(|(&x, &ui)| {
+            let r = (x.abs() * k).min(s as f32);
+            let lo = r.floor();
+            let p = r - lo;
+            let lev = lo as i32 + (ui < p) as i32;
+            if x.is_sign_negative() {
+                -lev
+            } else {
+                lev
+            }
+        })
+        .collect();
+    QuantBucket { scale, levels }
+}
+
+/// Draw a uniform in [0, 1) from 24 random mantissa bits (exactly matching
+/// the distribution of `jax.random.uniform` granularity for f32).
+#[inline]
+fn next_uniform(rng: &mut dyn RngCore) -> f32 {
+    (rng.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+}
+
+/// Quantize one bucket, drawing uniforms from `rng`.
+pub fn quantize_bucket(v: &[f32], s: u32, norm: Norm, rng: &mut dyn RngCore) -> QuantBucket {
+    let scale = norm.scale(v);
+    if scale <= 0.0 || !scale.is_finite() {
+        return QuantBucket { scale: 0.0, levels: vec![0; v.len()] };
+    }
+    let k = s as f32 / scale;
+    let levels = v
+        .iter()
+        .map(|&x| {
+            let r = (x.abs() * k).min(s as f32);
+            let lo = r.floor();
+            let p = r - lo;
+            let lev = lo as i32 + ((next_uniform(rng) < p) as i32);
+            if x.is_sign_negative() {
+                -lev
+            } else {
+                lev
+            }
+        })
+        .collect();
+    QuantBucket { scale, levels }
+}
+
+/// Hot-path bucket quantizer over pre-drawn random words: one `fill_bytes`
+/// virtual call per bucket instead of one `next_u32` per coordinate (the
+/// per-coordinate dyn dispatch was ~40% of quantize time — EXPERIMENTS §Perf).
+#[inline]
+fn quantize_bucket_from_words(v: &[f32], words: &[u8], s: u32, norm: Norm) -> QuantBucket {
+    debug_assert_eq!(words.len(), v.len() * 4);
+    let scale = norm.scale(v);
+    if scale <= 0.0 || !scale.is_finite() {
+        return QuantBucket { scale: 0.0, levels: vec![0; v.len()] };
+    }
+    let k = s as f32 / scale;
+    let smax = s as f32;
+    let levels = v
+        .iter()
+        .zip(words.chunks_exact(4))
+        .map(|(&x, c)| {
+            let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            let u = (word >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
+            let r = (x.abs() * k).min(smax);
+            // r ≥ 0 ⇒ truncation == floor, and r ≤ s keeps it in i32 range
+            let lo = r as i32;
+            let p = r - lo as f32;
+            let lev = lo + ((u < p) as i32);
+            if x.is_sign_negative() {
+                -lev
+            } else {
+                lev
+            }
+        })
+        .collect();
+    QuantBucket { scale, levels }
+}
+
+/// Full-gradient quantization with §4 bucketing: the vector is viewed as
+/// consecutive buckets of `bucket_size` (last one may be shorter — the paper
+/// reshapes tensors so "no receptive field is split across two buckets"; the
+/// tensor-aware reshaping lives in `models::layout`).
+pub fn quantize(
+    v: &[f32],
+    s: u32,
+    bucket_size: usize,
+    norm: Norm,
+    rng: &mut dyn RngCore,
+) -> QuantizedGradient {
+    assert!(s >= 1 && bucket_size >= 1);
+    let chunk = bucket_size.min(v.len()).max(1);
+    let mut words = vec![0u8; chunk * 4];
+    let buckets = v
+        .chunks(bucket_size)
+        .map(|c| {
+            let w = &mut words[..c.len() * 4];
+            rng.fill_bytes(w);
+            quantize_bucket_from_words(c, w, s, norm)
+        })
+        .collect();
+    QuantizedGradient { s, bucket_size, norm, n: v.len(), buckets }
+}
+
+/// Deterministic variant of [`quantize`] with caller-supplied uniforms
+/// (used by tests to cross-validate against the Pallas artifact).
+pub fn quantize_with_uniforms(
+    v: &[f32],
+    u: &[f32],
+    s: u32,
+    bucket_size: usize,
+    norm: Norm,
+) -> QuantizedGradient {
+    assert_eq!(v.len(), u.len());
+    let buckets = v
+        .chunks(bucket_size)
+        .zip(u.chunks(bucket_size))
+        .map(|(c, uc)| quantize_bucket_with_uniforms(c, uc, s, norm))
+        .collect();
+    QuantizedGradient { s, bucket_size, norm, n: v.len(), buckets }
+}
+
+/// The paper's full-vector `Q_s` (no bucketing: d = n, 2-norm) — the object
+/// Lemma 3.1 / Theorem 3.2 are stated about.
+pub fn quantize_paper(v: &[f32], s: u32, rng: &mut dyn RngCore) -> QuantizedGradient {
+    quantize(v, s, v.len().max(1), Norm::L2, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    
+
+    fn rng(seed: u64) -> Xoshiro256 {
+        Xoshiro256::from_u64(seed)
+    }
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        
+        let mut r = rng(seed);
+        (0..n).map(|_| crate::util::rng::uniform_f32(&mut r) * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn zero_vector_quantizes_to_zero() {
+        let q = quantize_paper(&[0.0; 16], 4, &mut rng(0));
+        assert_eq!(q.dequantize(), vec![0.0; 16]);
+        assert_eq!(q.nnz(), 0);
+    }
+
+    #[test]
+    fn levels_bounded_by_s() {
+        let v = randn(1000, 1);
+        for s in [1u32, 2, 7, 255] {
+            let q = quantize_paper(&v, s, &mut rng(2));
+            for b in &q.buckets {
+                assert!(b.levels.iter().all(|&l| l.unsigned_abs() <= s));
+            }
+        }
+    }
+
+    #[test]
+    fn max_norm_extremal_coordinate_hits_top_level() {
+        // With max-norm, the largest |v_i| has r = s exactly ⇒ level s.
+        let v = [0.1f32, -2.0, 0.5];
+        let q = quantize(&v, 4, 3, Norm::Max, &mut rng(3));
+        assert_eq!(q.buckets[0].levels[1], -4);
+        assert!((q.buckets[0].scale - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_within_one_level() {
+        // |Q_s(v)_i − v_i| ≤ F(b)/s always (randomized rounding moves at most
+        // one level).
+        let v = randn(512, 4);
+        for norm in [Norm::L2, Norm::Max] {
+            let q = quantize(&v, 7, 64, norm, &mut rng(5));
+            let d = q.dequantize();
+            let mut off = 0;
+            for b in &q.buckets {
+                for i in 0..b.levels.len() {
+                    assert!((d[off + i] - v[off + i]).abs() <= b.scale / 7.0 + 1e-6);
+                }
+                off += b.levels.len();
+            }
+        }
+    }
+
+    #[test]
+    fn unbiasedness_monte_carlo() {
+        // Lemma 3.1(i): E[Q_s(v)] = v.
+        let v = randn(64, 6);
+        let s = 2;
+        let trials = 3000;
+        let mut acc = vec![0.0f64; 64];
+        let mut r = rng(7);
+        for _ in 0..trials {
+            let q = quantize_paper(&v, s, &mut r);
+            for (a, x) in acc.iter_mut().zip(q.dequantize()) {
+                *a += x as f64;
+            }
+        }
+        let norm = Norm::L2.scale(&v) as f64;
+        let tol = 5.0 * norm / (s as f64 * (trials as f64).sqrt());
+        for i in 0..64 {
+            assert!(
+                (acc[i] / trials as f64 - v[i] as f64).abs() < tol,
+                "coordinate {i} biased"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_bound_lemma_3_1() {
+        // Lemma 3.1(ii): E‖Q_s(v) − v‖² ≤ min(n/s², √n/s)·‖v‖².
+        let n = 256;
+        let v = randn(n, 8);
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+        for s in [1u32, 4, 16] {
+            let bound = ((n as f64) / (s as f64).powi(2)).min((n as f64).sqrt() / s as f64) * vnorm2;
+            let trials = 800;
+            let mut tot = 0.0f64;
+            let mut r = rng(s as u64);
+            for _ in 0..trials {
+                let q = quantize_paper(&v, s, &mut r);
+                let d = q.dequantize();
+                tot += v
+                    .iter()
+                    .zip(&d)
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>();
+            }
+            assert!(tot / trials as f64 <= bound * 1.05, "s={s}");
+        }
+    }
+
+    #[test]
+    fn sparsity_bound_lemma_3_1() {
+        // Lemma 3.1(iii): E‖Q_s(v)‖₀ ≤ s(s + √n).
+        let n = 4096;
+        let v = randn(n, 9);
+        let s = 2u32;
+        let trials = 200;
+        let mut r = rng(11);
+        let tot: usize = (0..trials).map(|_| quantize_paper(&v, s, &mut r).nnz()).sum();
+        let bound = s as f64 * (s as f64 + (n as f64).sqrt());
+        assert!(tot as f64 / trials as f64 <= bound * 1.05);
+    }
+
+    #[test]
+    fn bucketing_is_independent_per_bucket() {
+        // Quantizing [a | b] with bucket d must equal quantizing a and b
+        // separately (same uniforms).
+        let v = randn(128, 12);
+        let u: Vec<f32> = randn(128, 13).iter().map(|x| (x + 1.0) / 2.0).collect();
+        let q = quantize_with_uniforms(&v, &u, 7, 64, Norm::L2);
+        let qa = quantize_bucket_with_uniforms(&v[..64], &u[..64], 7, Norm::L2);
+        let qb = quantize_bucket_with_uniforms(&v[64..], &u[64..], 7, Norm::L2);
+        assert_eq!(q.buckets, vec![qa, qb]);
+    }
+
+    #[test]
+    fn ragged_tail_bucket() {
+        let v = randn(100, 14);
+        let q = quantize(&v, 4, 64, Norm::Max, &mut rng(15));
+        assert_eq!(q.buckets.len(), 2);
+        assert_eq!(q.buckets[1].levels.len(), 36);
+        assert_eq!(q.dequantize().len(), 100);
+    }
+}

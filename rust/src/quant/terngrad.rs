@@ -1,0 +1,162 @@
+//! TernGrad baseline (Wen et al. 2017) — the concurrent three-level scheme
+//! discussed in the paper's Related Work.
+//!
+//! Each bucket is scaled by `s_t = max|v_i|`; coordinate i is sent as
+//! `s_t · sgn(v_i) · b_i` with `b_i ~ Bernoulli(|v_i|/s_t)`. This is exactly
+//! QSGD with s = 1 and max-norm scaling; we implement it standalone (with
+//! TernGrad's optional gradient clipping) so the benchmark comparison is
+//! explicit. Wire format: 32-bit scale + 2 bits per coordinate ({−1,0,+1}).
+
+use rand_core::RngCore;
+
+use crate::coding::bitstream::{BitReader, BitWriter};
+
+/// TernGrad quantizer configuration.
+pub struct TernGrad {
+    pub bucket: usize,
+    /// Optional gradient clipping at `c·σ` (Wen et al. §4.1); `None` = off.
+    pub clip_sigmas: Option<f32>,
+}
+
+impl TernGrad {
+    pub fn new(bucket: usize) -> Self {
+        Self { bucket, clip_sigmas: None }
+    }
+
+    pub fn compress(&self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity(grad.len() / 4 + 8);
+        for chunk in grad.chunks(self.bucket) {
+            let mut buf_storage;
+            let chunk = if let Some(c) = self.clip_sigmas {
+                let mean = chunk.iter().sum::<f32>() / chunk.len() as f32;
+                let var =
+                    chunk.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / chunk.len() as f32;
+                let lim = c * var.sqrt();
+                buf_storage = chunk.to_vec();
+                for x in &mut buf_storage {
+                    *x = x.clamp(-lim, lim);
+                }
+                &buf_storage[..]
+            } else {
+                chunk
+            };
+            let scale = chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            w.write_f32(scale);
+            if scale <= 0.0 {
+                for _ in chunk {
+                    w.write_bits(0, 2);
+                }
+                continue;
+            }
+            for &x in chunk {
+                let p = x.abs() / scale;
+                let u = (rng.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
+                let code: u64 = if u < p {
+                    if x < 0.0 {
+                        2 // −1
+                    } else {
+                        1 // +1
+                    }
+                } else {
+                    0
+                };
+                w.write_bits(code, 2);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        let mut r = BitReader::new(msg);
+        let mut out = Vec::with_capacity(n);
+        let mut remaining = n;
+        while remaining > 0 {
+            let len = remaining.min(self.bucket);
+            let scale = r.read_f32()?;
+            for _ in 0..len {
+                let v = match r.read_bits(2)? {
+                    0 => 0.0,
+                    1 => scale,
+                    2 => -scale,
+                    _ => anyhow::bail!("invalid ternary code"),
+                };
+                out.push(v);
+            }
+            remaining -= len;
+        }
+        Ok(out)
+    }
+
+    /// Exact message size in bits.
+    pub fn message_bits(&self, n: usize) -> u64 {
+        let cols = n.div_ceil(self.bucket) as u64;
+        cols * 32 + 2 * n as u64
+    }
+}
+
+impl super::Compressor for TernGrad {
+    fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
+        TernGrad::compress(self, grad, rng)
+    }
+
+    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        TernGrad::decompress(self, msg, n)
+    }
+
+    fn name(&self) -> String {
+        format!("terngrad(bucket={})", self.bucket)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_values_are_ternary() {
+        let g: Vec<f32> = (0..200).map(|i| ((i as f32) / 40.0).sin()).collect();
+        let t = TernGrad::new(64);
+        let mut rng = crate::util::rng::Xoshiro256::from_u64(0);
+        let msg = t.compress(&g, &mut rng);
+        assert_eq!(msg.len() as u64, t.message_bits(200).div_ceil(8));
+        let d = t.decompress(&msg, 200).unwrap();
+        for chunk in d.chunks(64).zip(g.chunks(64)) {
+            let scale = chunk.1.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for &x in chunk.0 {
+                assert!(x == 0.0 || (x.abs() - scale).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_monte_carlo() {
+        let g = [0.5f32, -0.25, 1.0, 0.0];
+        let t = TernGrad::new(4);
+        let mut rng = crate::util::rng::Xoshiro256::from_u64(1);
+        let trials = 4000;
+        let mut acc = [0.0f64; 4];
+        for _ in 0..trials {
+            let msg = t.compress(&g, &mut rng);
+            for (a, x) in acc.iter_mut().zip(t.decompress(&msg, 4).unwrap()) {
+                *a += x as f64;
+            }
+        }
+        for i in 0..4 {
+            assert!((acc[i] / trials as f64 - g[i] as f64).abs() < 0.05, "i={i}");
+        }
+    }
+
+    #[test]
+    fn clipping_reduces_scale() {
+        let mut g = vec![0.01f32; 256];
+        g[0] = 10.0; // outlier
+        let unclipped = TernGrad::new(256);
+        let clipped = TernGrad { bucket: 256, clip_sigmas: Some(2.5) };
+        let mut rng = crate::util::rng::Xoshiro256::from_u64(2);
+        let m1 = unclipped.compress(&g, &mut rng);
+        let m2 = clipped.compress(&g, &mut rng);
+        let s1 = f32::from_bits(u32::from_be_bytes([m1[0], m1[1], m1[2], m1[3]]));
+        let s2 = f32::from_bits(u32::from_be_bytes([m2[0], m2[1], m2[2], m2[3]]));
+        assert!(s2 < s1);
+    }
+}

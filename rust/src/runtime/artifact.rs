@@ -1,0 +1,223 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::models::layout::ParamLayout;
+use crate::util::json::{self, Json};
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            _ => anyhow::bail!("unsupported dtype '{s}'"),
+        }
+    }
+
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// One named input or output tensor spec.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json, default_name: &str) -> Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or(default_name)
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("io spec shape")?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = DType::parse(j.get("dtype").and_then(Json::as_str).context("io dtype")?)?;
+        Ok(Self { name, shape, dtype })
+    }
+}
+
+/// Quantization parameters baked into a fused `*_grad_q` artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct FusedQuant {
+    pub s: u32,
+    pub bucket: usize,
+    pub buckets: usize,
+    /// true ⇒ max-norm scaling.
+    pub max_norm: bool,
+}
+
+/// One AOT artifact (an HLO module plus its metadata).
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Flat parameter count, if this is a model-gradient artifact.
+    pub params: Option<usize>,
+    /// Batch size baked into the HLO, if applicable.
+    pub batch: Option<usize>,
+    pub layout: Option<ParamLayout>,
+    pub quant: Option<FusedQuant>,
+}
+
+impl Artifact {
+    fn from_json(name: &str, j: &Json, dir: &Path) -> Result<Self> {
+        let file = j.get("file").and_then(Json::as_str).context("artifact file")?;
+        let inputs = j
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .context("inputs")?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| IoSpec::from_json(s, &format!("in{i}")))
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .context("outputs")?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| IoSpec::from_json(s, &format!("out{i}")))
+            .collect::<Result<Vec<_>>>()?;
+        let layout = match j.get("layout") {
+            Some(l) => Some(ParamLayout::from_json(l)?),
+            None => None,
+        };
+        let quant = match (j.get("q_s"), j.get("q_bucket"), j.get("q_buckets")) {
+            (Some(s), Some(b), Some(nb)) => Some(FusedQuant {
+                s: s.as_usize().context("q_s")? as u32,
+                bucket: b.as_usize().context("q_bucket")?,
+                buckets: nb.as_usize().context("q_buckets")?,
+                max_norm: j.get("q_norm").and_then(Json::as_str) == Some("max"),
+            }),
+            _ => None,
+        };
+        Ok(Self {
+            name: name.to_string(),
+            path: dir.join(file),
+            inputs,
+            outputs,
+            params: j.get("params").and_then(Json::as_usize),
+            batch: j.get("batch").and_then(Json::as_usize),
+            layout,
+            quant,
+        })
+    }
+}
+
+/// The parsed manifest: artifact name → metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let src = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = json::parse(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let obj = j.as_obj().context("manifest root must be an object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in obj {
+            artifacts.insert(name.clone(), Artifact::from_json(name, entry, &dir)?);
+        }
+        Ok(Self { artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+}
+
+/// Default artifacts directory: `$QSGD_ARTIFACTS` or `artifacts/` relative to
+/// the workspace root (assumes the binary runs from the repo).
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("QSGD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_entry() {
+        let j = json::parse(
+            r#"{
+              "file": "m.hlo.txt",
+              "inputs": [
+                {"name": "params", "shape": [40], "dtype": "float32"},
+                {"name": "y", "shape": [8], "dtype": "int32"}
+              ],
+              "outputs": [{"shape": [], "dtype": "float32"}, {"shape": [40], "dtype": "float32"}],
+              "params": 40,
+              "batch": 8,
+              "layout": [{"name": "w", "shape": [40], "offset": 0, "size": 40}],
+              "q_s": 15, "q_bucket": 512, "q_norm": "max", "q_buckets": 1
+            }"#,
+        )
+        .unwrap();
+        let a = Artifact::from_json("m", &j, Path::new("/tmp")).unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[1].elements(), 8);
+        assert_eq!(a.outputs[1].shape, vec![40]);
+        assert_eq!(a.params, Some(40));
+        assert_eq!(a.layout.as_ref().unwrap().total_params(), 40);
+        let q = a.quant.unwrap();
+        assert_eq!((q.s, q.bucket, q.buckets, q.max_norm), (15, 512, 1, true));
+        assert_eq!(a.path, PathBuf::from("/tmp/m.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let j = json::parse(r#"{"inputs": []}"#).unwrap();
+        assert!(Artifact::from_json("m", &j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration-level check, skipped gracefully when artifacts are absent.
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["logreg_grad", "mlp_grad", "tfm_grad", "quantize"] {
+                assert!(m.get(name).is_ok(), "{name} missing from manifest");
+            }
+            let mlp = m.get("mlp_grad").unwrap();
+            assert!(mlp.layout.is_some());
+            assert_eq!(mlp.inputs[0].elements(), mlp.params.unwrap());
+        }
+    }
+}

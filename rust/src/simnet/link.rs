@@ -1,0 +1,39 @@
+//! α–β link model: per-endpoint latency + bandwidth.
+
+/// A single (full-duplex) link attached to each endpoint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Sustainable bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-message latency (α), seconds.
+    pub latency_s: f64,
+}
+
+impl Link {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0 && latency_s >= 0.0);
+        Self { bandwidth_bps, latency_s }
+    }
+
+    /// Time to serialise `bytes` onto this link (excluding latency).
+    pub fn serialize_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Full point-to-point message time.
+    pub fn message_time(&self, bytes: usize) -> f64 {
+        self.latency_s + self.serialize_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_time_decomposes() {
+        let l = Link::new(1e9, 5e-6);
+        assert!((l.message_time(1_000_000) - (5e-6 + 1e-3)).abs() < 1e-12);
+        assert_eq!(l.serialize_time(0), 0.0);
+    }
+}

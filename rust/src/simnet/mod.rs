@@ -1,0 +1,186 @@
+//! Virtual-clock interconnect simulator.
+//!
+//! The paper's testbed is 16× NVIDIA K80 on one EC2 p2.16xlarge with
+//! GPUDirect peer-to-peer MPI (no NCCL). We cannot attach 16 GPUs here, so
+//! Figure 2 / Table 1 epoch-time *shapes* are reproduced on a calibrated
+//! simulator: the bytes-on-wire are exact (produced by the real Rust
+//! encoder), transfer times follow an α–β (latency–bandwidth) model, and
+//! computation times come from a per-network FLOPs cost model
+//! (`models::cost`). See DESIGN.md §Substitutions.
+
+pub mod link;
+pub mod presets;
+pub mod topology;
+
+pub use link::Link;
+pub use presets::Preset;
+pub use topology::Topology;
+
+/// Virtual time, seconds. All simulated costs accumulate here; wall-clock
+/// time is tracked separately by `metrics`.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct VTime(pub f64);
+
+impl VTime {
+    pub const ZERO: VTime = VTime(0.0);
+
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+
+    pub fn max(self, other: VTime) -> VTime {
+        VTime(self.0.max(other.0))
+    }
+}
+
+impl std::ops::Add for VTime {
+    type Output = VTime;
+    fn add(self, rhs: VTime) -> VTime {
+        VTime(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for VTime {
+    fn add_assign(&mut self, rhs: VTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Sub for VTime {
+    type Output = VTime;
+    fn sub(self, rhs: VTime) -> VTime {
+        VTime(self.0 - rhs.0)
+    }
+}
+
+/// Cluster-level network model: K endpoints, a per-endpoint link (α–β), and
+/// a topology describing how collective exchanges are scheduled.
+#[derive(Debug, Clone)]
+pub struct SimNet {
+    pub workers: usize,
+    pub link: Link,
+    pub topology: Topology,
+}
+
+impl SimNet {
+    pub fn new(workers: usize, link: Link, topology: Topology) -> Self {
+        assert!(workers >= 1);
+        Self { workers, link, topology }
+    }
+
+    pub fn preset(workers: usize, preset: Preset) -> Self {
+        let (link, topology) = preset.build();
+        Self::new(workers, link, topology)
+    }
+
+    /// Virtual time for the gradient exchange of one iteration, where worker
+    /// `i` contributes a message of `msg_bytes[i]` bytes that every peer must
+    /// receive (Algorithm 1's broadcast), or — for `Topology::RingAllReduce`
+    /// — all messages are dense equal-size buffers reduced in-ring.
+    pub fn exchange_time(&self, msg_bytes: &[usize]) -> VTime {
+        assert_eq!(msg_bytes.len(), self.workers);
+        if self.workers == 1 {
+            return VTime::ZERO;
+        }
+        let k = self.workers as f64;
+        let alpha = self.link.latency_s;
+        let beta = 1.0 / self.link.bandwidth_bps;
+        let t = match self.topology {
+            // Each endpoint serialises its K−1 sends on its own egress and
+            // its K−1 receives on its ingress; transfers between distinct
+            // pairs overlap (GPUDirect P2P). The bottleneck endpoint is the
+            // one sending its message K−1 times or receiving everyone
+            // else's, whichever is larger.
+            Topology::P2pBroadcast => {
+                let total: usize = msg_bytes.iter().sum();
+                let max_send = msg_bytes
+                    .iter()
+                    .map(|&b| (self.workers - 1) as f64 * b as f64)
+                    .fold(0.0, f64::max);
+                let max_recv = msg_bytes
+                    .iter()
+                    .map(|&b| (total - b) as f64)
+                    .fold(0.0, f64::max);
+                alpha * (k - 1.0) + beta * max_send.max(max_recv)
+            }
+            // Parameter-server star: all pushes serialise at the server's
+            // ingress (the caller models the pull separately via p2p_time).
+            Topology::Star => {
+                let total: usize = msg_bytes.iter().sum();
+                2.0 * alpha + beta * total as f64
+            }
+            // Dense ring allreduce (the fp32 baseline's best case):
+            // 2(K−1)/K · bytes with 2(K−1) latency hops; requires equal-size
+            // dense buffers, so use the max.
+            Topology::RingAllReduce => {
+                let b = msg_bytes.iter().copied().max().unwrap_or(0) as f64;
+                2.0 * (k - 1.0) * alpha + 2.0 * (k - 1.0) / k * b * beta
+            }
+        };
+        VTime(t)
+    }
+
+    /// Time to move one point-to-point message (async parameter-server ops).
+    pub fn p2p_time(&self, bytes: usize) -> VTime {
+        VTime(self.link.latency_s + bytes as f64 / self.link.bandwidth_bps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(workers: usize, topo: Topology) -> SimNet {
+        SimNet::new(workers, Link { bandwidth_bps: 1e9, latency_s: 1e-5 }, topo)
+    }
+
+    #[test]
+    fn single_worker_is_free() {
+        let n = net(1, Topology::P2pBroadcast);
+        assert_eq!(n.exchange_time(&[1 << 20]).secs(), 0.0);
+    }
+
+    #[test]
+    fn broadcast_scales_with_peers() {
+        let n2 = net(2, Topology::P2pBroadcast);
+        let n8 = net(8, Topology::P2pBroadcast);
+        let t2 = n2.exchange_time(&[1 << 20; 2]).secs();
+        let t8 = n8.exchange_time(&[1 << 20; 8]).secs();
+        assert!(t8 > t2 * 3.0, "t2={t2} t8={t8}");
+    }
+
+    #[test]
+    fn smaller_messages_are_faster() {
+        let n = net(8, Topology::P2pBroadcast);
+        let dense = n.exchange_time(&[4 << 20; 8]).secs();
+        let compressed = n.exchange_time(&[512 << 10; 8]).secs();
+        assert!(compressed < dense / 7.0);
+    }
+
+    #[test]
+    fn ring_allreduce_beats_broadcast_for_dense() {
+        let b = net(8, Topology::P2pBroadcast);
+        let r = net(8, Topology::RingAllReduce);
+        let msgs = [16 << 20; 8];
+        assert!(r.exchange_time(&msgs).secs() < b.exchange_time(&msgs).secs());
+    }
+
+    #[test]
+    fn heterogeneous_message_sizes() {
+        let n = net(4, Topology::P2pBroadcast);
+        let mut msgs = [1000usize; 4];
+        msgs[2] = 1_000_000; // straggler dominates
+        let t = n.exchange_time(&msgs).secs();
+        // at least the time for the big sender to push 3 copies
+        assert!(t >= 3.0 * 1_000_000.0 / 1e9);
+    }
+
+    #[test]
+    fn vtime_arithmetic() {
+        let mut t = VTime::ZERO;
+        t += VTime(1.5);
+        assert_eq!((t + VTime(0.5)).secs(), 2.0);
+        assert_eq!((t - VTime(0.5)).secs(), 1.0);
+        assert_eq!(VTime(1.0).max(VTime(2.0)).secs(), 2.0);
+    }
+}

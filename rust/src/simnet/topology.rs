@@ -1,0 +1,55 @@
+//! Exchange topologies (how a collective step is scheduled on the links).
+
+/// Topology of the per-iteration gradient exchange.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// Algorithm 1's all-to-all broadcast of (possibly compressed,
+    /// variable-size) gradient messages — what CNTK's MPI path does for
+    /// 1BitSGD/QSGD gradients.
+    #[default]
+    P2pBroadcast,
+    /// Parameter-server star (Appendix D, async QSGD).
+    Star,
+    /// Bandwidth-optimal dense ring allreduce — the fp32 baseline's best
+    /// case. Requires dense equal-size buffers, i.e. it cannot carry
+    /// variable-length entropy-coded messages (the paper's §6 notes MPI has
+    /// no sparse/variable types; this is the same constraint).
+    RingAllReduce,
+}
+
+impl std::str::FromStr for Topology {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "p2p" | "broadcast" => Ok(Topology::P2pBroadcast),
+            "star" | "ps" => Ok(Topology::Star),
+            "ring" | "allreduce" => Ok(Topology::RingAllReduce),
+            _ => Err(format!("unknown topology '{s}' (p2p|star|ring)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Topology::P2pBroadcast => "p2p",
+            Topology::Star => "star",
+            Topology::RingAllReduce => "ring",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for t in [Topology::P2pBroadcast, Topology::Star, Topology::RingAllReduce] {
+            assert_eq!(t.to_string().parse::<Topology>().unwrap(), t);
+        }
+        assert!("mesh".parse::<Topology>().is_err());
+    }
+}

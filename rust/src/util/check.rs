@@ -1,0 +1,115 @@
+//! Property-testing mini-harness (the offline environment has no proptest).
+//!
+//! [`forall`] runs a property over many independently seeded PRNGs and, on
+//! failure, re-runs a size-reduction pass ("shrinking-lite": the generator
+//! receives a `size` hint the harness decays) before reporting the minimal
+//! failing seed/size so the case can be replayed deterministically.
+
+use rand_core::RngCore;
+
+use super::rng::Xoshiro256;
+
+/// Generation context handed to properties: a seeded PRNG plus a size hint
+/// in [1, max_size] that properties should use to scale their inputs.
+pub struct Gen<'a> {
+    pub rng: &'a mut Xoshiro256,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + super::rng::uniform_usize(self.rng, hi - lo + 1)
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Vec<f32> {
+        super::rng::normal_vec(self.rng, n)
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+}
+
+/// Run `prop` on `cases` random inputs. On a failure at (seed, size), retry
+/// with smaller sizes to find a smaller reproduction, then panic with the
+/// replay coordinates.
+pub fn forall<F>(name: &str, cases: u64, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let run = |prop: &mut F, seed: u64, size: usize| -> Result<(), String> {
+        let mut rng = Xoshiro256::stream(0xC0FFEE ^ seed, seed);
+        let mut g = Gen { rng: &mut rng, size };
+        prop(&mut g)
+    };
+    for seed in 0..cases {
+        // cycle sizes so small inputs are exercised too
+        let size = 1 + (seed as usize * 7919) % max_size;
+        if let Err(msg) = run(&mut prop, seed, size) {
+            // shrink: halve the size hint while the property still fails
+            let mut best = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                match run(&mut prop, seed, s) {
+                    Err(m) => {
+                        best = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed: seed={seed} size={} (shrunk from {}): {}",
+                best.0, size, best.1
+            );
+        }
+    }
+}
+
+/// Assertion helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 50, 100, |g| {
+            count += 1;
+            let n = g.usize_in(1, g.size);
+            let v = g.f32_vec(n);
+            if v.len() == n {
+                Ok(())
+            } else {
+                Err("length".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        forall("fails", 10, 64, |g| {
+            let n = g.usize_in(1, g.size);
+            prop_assert!(n < 5, "n={n} too big");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! Offline-environment substrates: PRNG + distributions ([`rng`]), a minimal
+//! JSON parser ([`json`]), summary statistics ([`stats`]), and a small
+//! property-testing harness ([`check`]).
+
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;

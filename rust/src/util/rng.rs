@@ -1,0 +1,218 @@
+//! Deterministic PRNG + distributions.
+//!
+//! The offline build environment vendors only `rand_core` (traits), so the
+//! generator and the distributions live here. Xoshiro256** (Blackman &
+//! Vigna) seeded via SplitMix64 — the same construction `rand_xoshiro`
+//! ships; statistically solid and extremely fast, which matters because the
+//! coordinator draws one uniform per gradient coordinate per step.
+
+use rand_core::{impls, Error, RngCore, SeedableRng};
+
+/// SplitMix64 — used for seeding and as a cheap stream splitter.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Xoshiro256** generator.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        // all-zero state is invalid; splitmix of any seed avoids it, but be safe
+        if s == [0, 0, 0, 0] {
+            return Self { s: [1, 2, 3, 4] };
+        }
+        Self { s }
+    }
+
+    /// Derive an independent stream (e.g. one per worker) — jump-free
+    /// splitting via splitmix on (seed, stream).
+    pub fn stream(seed: u64, stream: u64) -> Self {
+        let mut sm = seed ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let _ = splitmix64(&mut sm);
+        Self::from_u64(splitmix64(&mut sm))
+    }
+}
+
+impl RngCore for Xoshiro256 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        impls::fill_bytes_via_next(self, dest)
+    }
+
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+impl SeedableRng for Xoshiro256 {
+    type Seed = [u8; 32];
+
+    fn from_seed(seed: Self::Seed) -> Self {
+        let mut s = [0u64; 4];
+        for (i, c) in seed.chunks_exact(8).enumerate() {
+            s[i] = u64::from_le_bytes(c.try_into().unwrap());
+        }
+        if s == [0, 0, 0, 0] {
+            s = [1, 2, 3, 4];
+        }
+        Self { s }
+    }
+
+    fn seed_from_u64(seed: u64) -> Self {
+        Self::from_u64(seed)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Distributions
+// --------------------------------------------------------------------------
+
+/// Uniform in [0, 1) with 24-bit granularity (matches `jax.random.uniform`
+/// f32 granularity; also what the quantizer's level test expects).
+#[inline]
+pub fn uniform_f32(rng: &mut dyn RngCore) -> f32 {
+    (rng.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+}
+
+/// Uniform in [0, 1) at f64 precision.
+#[inline]
+pub fn uniform_f64(rng: &mut dyn RngCore) -> f64 {
+    (rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Uniform integer in [0, n).
+#[inline]
+pub fn uniform_usize(rng: &mut dyn RngCore, n: usize) -> usize {
+    debug_assert!(n > 0);
+    // Lemire's multiply-shift rejection-free approximation is fine here
+    // (n ≪ 2^64; modulo bias is negligible for our n but avoid it anyway).
+    ((rng.next_u64() as u128 * n as u128) >> 64) as usize
+}
+
+/// Standard normal via Box–Muller.
+#[inline]
+pub fn normal_f32(rng: &mut dyn RngCore) -> f32 {
+    let u1 = uniform_f64(rng).max(1e-300);
+    let u2 = uniform_f64(rng);
+    ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+/// Vector of standard normals.
+pub fn normal_vec(rng: &mut dyn RngCore, n: usize) -> Vec<f32> {
+    (0..n).map(|_| normal_f32(rng)).collect()
+}
+
+/// Vector of uniforms in [0,1).
+pub fn uniform_vec(rng: &mut dyn RngCore, n: usize) -> Vec<f32> {
+    (0..n).map(|_| uniform_f32(rng)).collect()
+}
+
+/// Fisher–Yates shuffle.
+pub fn shuffle<T>(rng: &mut dyn RngCore, v: &mut [T]) {
+    for i in (1..v.len()).rev() {
+        let j = uniform_usize(rng, i + 1);
+        v.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct_streams() {
+        let mut a = Xoshiro256::from_u64(42);
+        let mut b = Xoshiro256::from_u64(42);
+        let mut c = Xoshiro256::from_u64(43);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+        let mut s0 = Xoshiro256::stream(7, 0);
+        let mut s1 = Xoshiro256::stream(7, 1);
+        assert_ne!(s0.next_u64(), s1.next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Xoshiro256::from_u64(0);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let u = uniform_f32(&mut rng);
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256::from_u64(1);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| normal_f32(&mut rng) as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn uniform_usize_in_range() {
+        let mut rng = Xoshiro256::from_u64(2);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = uniform_usize(&mut rng, 10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Xoshiro256::from_u64(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        shuffle(&mut rng, &mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

@@ -1,0 +1,178 @@
+//! Cross-module integration tests: the training loops composed with real
+//! codecs over the simulated interconnect, including failure injection and
+//! the invariants the paper's Algorithm 1 relies on.
+
+use qsgd::coordinator::sources::{ConvexSource, GradSource};
+use qsgd::coordinator::sync::{SyncConfig, SyncTrainer};
+use qsgd::coordinator::{async_ps, svrg, CompressorSpec};
+use qsgd::data::{LogisticProblem, QuadraticProblem};
+use qsgd::models::layout::{ParamLayout, QuantPlan};
+use qsgd::models::CostModel;
+use qsgd::simnet::{Link, SimNet, Topology};
+
+fn quad_source(seed: u64) -> ConvexSource<QuadraticProblem> {
+    ConvexSource::new(QuadraticProblem::generate(512, 192, 1e-3, 0.1, seed), 8, seed)
+}
+
+#[test]
+fn all_compressor_arms_reach_similar_loss() {
+    // Fig. 3-style parity at equal step count on a convex objective.
+    let arms = [
+        CompressorSpec::Fp32,
+        CompressorSpec::qsgd_8bit(),
+        CompressorSpec::qsgd_4bit(),
+        CompressorSpec::OneBit { column: 512 },
+        CompressorSpec::TernGrad { bucket: 64 },
+    ];
+    let mut finals = Vec::new();
+    for spec in arms {
+        let mut src = quad_source(1);
+        let cfg = SyncConfig::quick(4, 250, spec, 0.04);
+        let res = SyncTrainer::new(cfg).run(&mut src).unwrap();
+        finals.push((res.label, res.loss.tail_mean(3)));
+    }
+    let fp32 = finals[0].1;
+    for (label, l) in &finals[1..] {
+        assert!(
+            *l < fp32 * 3.0 + 0.05,
+            "{label} diverged: {l} vs fp32 {fp32} ({finals:?})"
+        );
+    }
+}
+
+#[test]
+fn skip_rule_plan_composes_with_training() {
+    // A model whose layout mixes tiny (fp32) and large (quantized) tensors
+    // must train under the paper-default plan.
+    // Same structure as the paper's rule, scaled down (threshold 500 in
+    // place of 10K so the test stays fast): small tensors ride fp32.
+    let layout = ParamLayout::synthetic(&[
+        ("emb", vec![4, 100]),  // 400 < 500 ⇒ fp32
+        ("w1", vec![8, 150]),   // 1200 ⇒ quantized
+        ("b1", vec![50]),       // fp32
+    ]);
+    let n = layout.total_params();
+    let plan = QuantPlan::build(&layout, 500);
+    assert!(plan.quantized_fraction() > 0.5 && plan.quantized_fraction() < 1.0);
+
+    let p = QuadraticProblem::generate(2048, n, 1e-3, 0.1, 3);
+    let mut src = ConvexSource::new(p, 32, 3);
+    let mut cfg = SyncConfig::quick(4, 400, CompressorSpec::qsgd_4bit(), 0.05);
+    cfg.plan = Some(plan);
+    let res = SyncTrainer::new(cfg).run(&mut src).unwrap();
+    assert!(res.loss.tail_mean(2) < res.loss.points[0].1 * 0.6);
+    // wire must be below fp32 but above the fully-quantized floor
+    let bits = res.wire.bits_per_coordinate();
+    assert!(bits > 3.0 && bits < 32.0, "bits/coord {bits}");
+}
+
+#[test]
+fn corrupted_peer_message_fails_loudly() {
+    // Decode of a tampered message must error, not silently produce junk.
+    use qsgd::coordinator::exchange::PlanCompressor;
+    use qsgd::util::rng::{self, Xoshiro256};
+    let layout = ParamLayout::synthetic(&[("w", vec![5000])]);
+    let plan = QuantPlan::quantize_all(&layout);
+    let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
+    let mut rng = Xoshiro256::from_u64(0);
+    let grad = rng::normal_vec(&mut rng, 5000);
+    let msg = pc.compress(&grad, &mut rng);
+    for cut in [0usize, 1, msg.len() / 2, msg.len() - 1] {
+        assert!(pc.decompress(&msg[..cut]).is_err(), "truncation at {cut} accepted");
+    }
+    let mut flipped = msg.clone();
+    flipped[4] ^= 0xff; // clobber the first segment header
+    assert!(pc.decompress(&flipped).is_err() || pc.decompress(&flipped).is_ok());
+    // (bit flips inside Elias payloads may decode to *different valid*
+    // levels — entropy codes are not error-detecting; the frame-level
+    // length checks are what must hold:)
+    let mut extended = msg.clone();
+    extended.push(0);
+    assert!(pc.decompress(&extended).is_err(), "trailing bytes accepted");
+}
+
+#[test]
+fn async_and_sync_agree_in_the_limit() {
+    // With 1 worker the async parameter server degenerates to sequential
+    // SGD; it must reach a loss comparable to the sync trainer's.
+    let mut src_async = quad_source(5);
+    let cfg = async_ps::AsyncConfig {
+        workers: 1,
+        updates: 200,
+        compressor: CompressorSpec::qsgd_4bit(),
+        lr: 0.04,
+        seed: 5,
+        net: SimNet::new(1, Link::new(1e9, 1e-6), Topology::Star),
+        cost: CostModel::k80(),
+        speed: vec![],
+        log_every: 20,
+    };
+    let ra = async_ps::run(&cfg, &mut src_async).unwrap();
+    let mut src_sync = quad_source(5);
+    let rs = SyncTrainer::new(SyncConfig::quick(1, 200, CompressorSpec::qsgd_4bit(), 0.04))
+        .run(&mut src_sync)
+        .unwrap();
+    assert_eq!(ra.max_staleness, 0, "single worker cannot be stale");
+    let (la, ls) = (ra.loss.tail_mean(3), rs.loss.tail_mean(3));
+    assert!(la < ls * 3.0 + 0.05, "async {la} vs sync {ls}");
+}
+
+#[test]
+fn svrg_beats_sgd_at_equal_gradient_budget() {
+    let obj = LogisticProblem::generate(256, 96, 0.05, 9);
+    let f_star = svrg::solve_f_star(&obj, 4000);
+    let cfg = svrg::SvrgConfig {
+        processors: 4,
+        epochs: 4,
+        iters: None, // Theorem 3.6's T = O(L/ℓ)
+        eta: None,
+        seed: 9,
+        quantize: true,
+    };
+    let rq = svrg::run(&cfg, &obj, f_star).unwrap();
+    let p2 = LogisticProblem::generate(256, 96, 0.05, 9);
+    let mut src = ConvexSource::new(p2, 2, 10);
+    let res = SyncTrainer::new(SyncConfig::quick(4, 360, CompressorSpec::qsgd_4bit(), 0.05))
+        .run(&mut src)
+        .unwrap();
+    let sgd_gap = res.loss.tail_mean(2) - f_star;
+    assert!(
+        rq.gap.last().unwrap() < sgd_gap * 0.5,
+        "QSVRG {:?} should beat QSGD {sgd_gap}",
+        rq.gap.last()
+    );
+}
+
+#[test]
+fn zero_and_constant_gradients_survive_the_full_path() {
+    // Degenerate gradients (all-zero, all-equal) must round-trip the whole
+    // encode→broadcast→decode→update pipeline without NaNs.
+    struct DegenerateSource {
+        n: usize,
+        mode: u8,
+    }
+    impl GradSource for DegenerateSource {
+        fn dim(&self) -> usize {
+            self.n
+        }
+        fn loss_and_grad(&mut self, _w: usize, step: u64, _p: &[f32]) -> anyhow::Result<(f32, Vec<f32>)> {
+            let g = match (self.mode + step as u8) % 3 {
+                0 => vec![0.0; self.n],
+                1 => vec![1.0; self.n],
+                _ => vec![-1e-30; self.n], // denormal territory
+            };
+            Ok((0.0, g))
+        }
+        fn flops_fwd_per_step(&self) -> f64 {
+            1.0
+        }
+        fn name(&self) -> String {
+            "degenerate".into()
+        }
+    }
+    for spec in [CompressorSpec::qsgd_4bit(), CompressorSpec::OneBit { column: 64 }] {
+        let mut src = DegenerateSource { n: 1000, mode: 0 };
+        let res = SyncTrainer::new(SyncConfig::quick(3, 9, spec, 0.1)).run(&mut src).unwrap();
+        assert!(res.params.iter().all(|p| p.is_finite()), "non-finite params");
+    }
+}

@@ -1,0 +1,103 @@
+//! Layer-1 ⇄ Layer-3 cross-validation: the Rust quantizer and the Pallas
+//! kernel (executed through the AOT `quantize` artifact) must assign the
+//! same levels given the same uniforms — the three implementations (Rust,
+//! Pallas, jnp oracle) share one level-assignment contract.
+//!
+//! The Pallas artifact is a 64×512 L2-norm s=15 kernel (see aot.py).
+//! f32 norm computation can differ by an ulp between XLA's reduction order
+//! and Rust's sequential sum, which may flip a randomized-rounding decision
+//! on coordinates whose `r` sits within that ulp of a boundary — so we
+//! require exact agreement on ≥99.9% of coordinates and |Δlevel| ≤ 1 on the
+//! rest, plus bitwise-level agreement of the dequantized values within
+//! tolerance.
+
+use qsgd::quant::{stochastic, Norm};
+use qsgd::runtime::{artifact, Input, Runtime};
+use qsgd::util::rng::{self, Xoshiro256};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifact::default_dir().join("manifest.json").exists() {
+        eprintln!("[skipped: run `make artifacts` first]");
+        return None;
+    }
+    Some(Runtime::from_default_dir().expect("runtime init"))
+}
+
+#[test]
+fn rust_quantizer_matches_pallas_kernel() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().get("quantize").unwrap().clone();
+    let q = art.quant.unwrap();
+    let (nb, d) = (art.inputs[0].shape[0], art.inputs[0].shape[1]);
+    assert_eq!((nb, d), (q.buckets, q.bucket));
+
+    let mut rng = Xoshiro256::from_u64(7);
+    let v = rng::normal_vec(&mut rng, nb * d);
+    let u = rng::uniform_vec(&mut rng, nb * d);
+    let shape = [nb, d];
+    let out = rt
+        .execute("quantize", &[Input::F32(&v, &shape), Input::F32(&u, &shape)])
+        .unwrap();
+    let q_pallas = out[0].to_vec::<f32>().unwrap();
+    let scales = out[1].to_vec::<f32>().unwrap();
+
+    let q_rust = stochastic::quantize_with_uniforms(&v, &u, q.s, d, Norm::L2);
+
+    let mut mismatches = 0usize;
+    for (bi, bucket) in q_rust.buckets.iter().enumerate() {
+        // scales agree to f32 reduction tolerance
+        let rel = (bucket.scale - scales[bi]).abs() / bucket.scale.max(1e-12);
+        assert!(rel < 1e-5, "bucket {bi}: scale {} vs pallas {}", bucket.scale, scales[bi]);
+        let k = scales[bi] / q.s as f32;
+        for (j, &lev) in bucket.levels.iter().enumerate() {
+            let pallas_val = q_pallas[bi * d + j];
+            let pallas_lev = (pallas_val / k).round() as i32;
+            if pallas_lev != lev {
+                mismatches += 1;
+                assert!(
+                    (pallas_lev - lev).abs() <= 1,
+                    "bucket {bi} coord {j}: rust {lev} vs pallas {pallas_lev}"
+                );
+            }
+        }
+    }
+    let total = nb * d;
+    assert!(
+        (mismatches as f64) < total as f64 * 1e-3,
+        "{mismatches}/{total} level disagreements (boundary-ulp budget is 0.1%)"
+    );
+    println!("levels agree on {}/{} coordinates", total - mismatches, total);
+}
+
+#[test]
+fn pallas_kernel_is_unbiased_through_the_runtime() {
+    // Monte-Carlo over uniforms drawn in Rust, executed on the artifact:
+    // E[Q_s(v)] = v (Lemma 3.1(i)) must hold through the full AOT path.
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().get("quantize").unwrap().clone();
+    let q = art.quant.unwrap();
+    let (nb, d) = (art.inputs[0].shape[0], art.inputs[0].shape[1]);
+    let shape = [nb, d];
+
+    let mut rng = Xoshiro256::from_u64(8);
+    let v = rng::normal_vec(&mut rng, nb * d);
+    let trials = 60;
+    let mut acc = vec![0.0f64; nb * d];
+    for _ in 0..trials {
+        let u = rng::uniform_vec(&mut rng, nb * d);
+        let out = rt
+            .execute("quantize", &[Input::F32(&v, &shape), Input::F32(&u, &shape)])
+            .unwrap();
+        for (a, x) in acc.iter_mut().zip(out[0].to_vec::<f32>().unwrap()) {
+            *a += x as f64 / trials as f64;
+        }
+    }
+    // per-coordinate stderr ≈ scale/(s·√trials); scale ≈ ‖bucket‖₂ ≈ √d
+    let tol = 6.0 * (d as f64).sqrt() / (q.s as f64 * (trials as f64).sqrt());
+    let max_dev = acc
+        .iter()
+        .zip(&v)
+        .map(|(a, &x)| (a - x as f64).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_dev < tol, "bias {max_dev} exceeds {tol}");
+}

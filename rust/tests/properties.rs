@@ -1,0 +1,203 @@
+//! Property-based tests over the coding and quantization substrates
+//! (randomised inputs with seeded replay + size shrinking — see
+//! `qsgd::util::check`; the offline build has no proptest).
+
+use qsgd::coding::bitstream::{BitReader, BitWriter};
+use qsgd::coding::{elias, gradient};
+use qsgd::coordinator::exchange::PlanCompressor;
+use qsgd::coordinator::CompressorSpec;
+use qsgd::models::layout::{ParamLayout, QuantPlan};
+use qsgd::prop_assert;
+use qsgd::quant::{deterministic, stochastic, Norm};
+use qsgd::util::check::forall;
+use qsgd::util::rng;
+
+#[test]
+fn prop_bitstream_roundtrip_random_ops() {
+    forall("bitstream", 200, 2000, |g| {
+        let n_ops = g.usize_in(1, g.size.max(1));
+        let ops: Vec<(u64, u32)> = (0..n_ops)
+            .map(|_| {
+                let width = 1 + (g.u32() % 64);
+                let v = (g.u32() as u64) << 32 | g.u32() as u64;
+                let v = if width == 64 { v } else { v & ((1u64 << width) - 1) };
+                (v, width)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, c) in &ops {
+            w.write_bits(v, c);
+        }
+        let expect_bits: u64 = ops.iter().map(|&(_, c)| c as u64).sum();
+        prop_assert!(w.len_bits() == expect_bits, "len_bits mismatch");
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, c) in &ops {
+            let got = r.read_bits(c).map_err(|e| e.to_string())?;
+            prop_assert!(got == v, "read {got} != wrote {v} (width {c})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_elias_roundtrip_and_length() {
+    forall("elias", 300, 64, |g| {
+        let n = g.usize_in(1, 200);
+        let ks: Vec<u64> = (0..n)
+            .map(|_| {
+                let bits = 1 + (g.u32() % 63);
+                1 + ((g.u32() as u64) << 32 | g.u32() as u64) % (1u64 << bits)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &k in &ks {
+            elias::encode(&mut w, k);
+        }
+        let total: u64 = ks.iter().map(|&k| elias::len(k)).sum();
+        prop_assert!(w.len_bits() == total, "len() disagrees with encode()");
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &k in &ks {
+            let got = elias::decode(&mut r).map_err(|e| e.to_string())?;
+            prop_assert!(got == k, "decode {got} != {k}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gradient_codec_roundtrip() {
+    forall("gradient-codec", 120, 4000, |g| {
+        let n = g.usize_in(0, g.size);
+        let v = g.f32_vec(n);
+        let s = [1u32, 2, 7, 15, 127][g.usize_in(0, 4)];
+        let bucket = [16usize, 64, 512, 4096][g.usize_in(0, 3)];
+        let norm = if g.bool() { Norm::L2 } else { Norm::Max };
+        let u = rng::uniform_vec(g.rng, n);
+        let q = stochastic::quantize_with_uniforms(&v, &u, s, bucket, norm);
+        for regime in [gradient::Regime::Sparse, gradient::Regime::Dense] {
+            let bytes = gradient::encode(&q, regime);
+            let back = gradient::decode(&bytes).map_err(|e| e.to_string())?;
+            prop_assert!(back == q, "roundtrip mismatch {regime:?} n={n} s={s} d={bucket}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizer_invariants() {
+    forall("quantizer", 150, 3000, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let v = g.f32_vec(n);
+        let s = 1 + g.u32() % 200;
+        let bucket = 1 + g.usize_in(0, n);
+        let norm = if g.bool() { Norm::L2 } else { Norm::Max };
+        let q = stochastic::quantize(&v, s, bucket, norm, g.rng);
+        prop_assert!(q.n == n, "length");
+        let d = q.dequantize();
+        let mut off = 0;
+        for b in &q.buckets {
+            prop_assert!(
+                b.levels.iter().all(|&l| l.unsigned_abs() <= s),
+                "level exceeds s"
+            );
+            let tol = b.scale / s as f32 + 1e-5;
+            for i in 0..b.levels.len() {
+                prop_assert!(
+                    (d[off + i] - v[off + i]).abs() <= tol,
+                    "error beyond one level at {}",
+                    off + i
+                );
+                // sign preservation: a nonzero reconstruction keeps the sign
+                if d[off + i] != 0.0 && v[off + i] != 0.0 {
+                    prop_assert!(
+                        (d[off + i] > 0.0) == (v[off + i] > 0.0),
+                        "sign flipped"
+                    );
+                }
+            }
+            off += b.levels.len();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deterministic_quantizer_lemma_f1() {
+    forall("appendix-f", 150, 2000, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let v = g.f32_vec(n);
+        let q = deterministic::quantize(&v);
+        let d = q.dequantize();
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+        let dot: f64 = v.iter().zip(&d).map(|(&a, &b)| a as f64 * b as f64).sum();
+        prop_assert!(dot >= vnorm2 * 0.999, "vᵀQ(v) < ‖v‖²");
+        prop_assert!(
+            q.indices.len() as f64 <= (n as f64).sqrt() + 1.0,
+            "|I(v)| > √n: {} vs {}",
+            q.indices.len(),
+            (n as f64).sqrt()
+        );
+        let bytes = q.encode();
+        let q2 = deterministic::TopQuantized::decode(&bytes, n).map_err(|e| e.to_string())?;
+        prop_assert!(q2 == q, "encode/decode mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_compressor_roundtrip_random_layouts() {
+    forall("plan-compressor", 60, 8, |g| {
+        // random layout of 1..6 tensors with mixed sizes
+        let nt = g.usize_in(1, 6);
+        let tensors: Vec<(String, Vec<usize>)> = (0..nt)
+            .map(|i| {
+                let big = g.bool();
+                let size = if big { g.usize_in(200, 2000) } else { g.usize_in(1, 80) };
+                (format!("t{i}"), vec![size])
+            })
+            .collect();
+        let refs: Vec<(&str, Vec<usize>)> =
+            tensors.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+        let layout = ParamLayout::synthetic(&refs);
+        let n = layout.total_params();
+        let plan = QuantPlan::build(&layout, 100);
+        let grad = g.f32_vec(n);
+        let specs = [
+            CompressorSpec::Fp32,
+            CompressorSpec::qsgd_4bit(),
+            CompressorSpec::qsgd_2bit(),
+            CompressorSpec::OneBit { column: 64 },
+            CompressorSpec::TernGrad { bucket: 64 },
+        ];
+        let spec = &specs[g.usize_in(0, specs.len() - 1)];
+        let mut pc = PlanCompressor::from_spec(plan.clone(), spec);
+        let msg = pc.compress(&grad, g.rng);
+        let back = pc.decompress(&msg).map_err(|e| e.to_string())?;
+        prop_assert!(back.len() == n, "length");
+        // fp32 segments must be bit-exact
+        for seg in plan.segments.iter().filter(|s| !s.quantized) {
+            for i in seg.offset..seg.offset + seg.len {
+                prop_assert!(back[i] == grad[i], "fp32 segment not exact at {i}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encoded_size_beats_fp32_for_low_bits() {
+    forall("wire-size", 40, 1, |g| {
+        let n = 4096 + g.usize_in(0, 1000);
+        let v = g.f32_vec(n);
+        let mut c2 = CompressorSpec::qsgd_2bit().build(n);
+        let mut c4 = CompressorSpec::qsgd_4bit().build(n);
+        let m2 = c2.compress(&v, g.rng);
+        let m4 = c4.compress(&v, g.rng);
+        prop_assert!(m2.len() * 8 < n * 4, "2-bit not <25% of fp32: {}", m2.len());
+        prop_assert!(m4.len() * 6 < n * 4, "4-bit not well below fp32: {}", m4.len());
+        prop_assert!(m2.len() < m4.len(), "2-bit must beat 4-bit on size");
+        Ok(())
+    });
+}

@@ -1,0 +1,181 @@
+//! Integration tests over the PJRT runtime and the AOT artifacts — the
+//! Rust ⇄ JAX contract. Require `make artifacts`; each test is skipped
+//! (with a notice) when the artifacts directory is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use qsgd::coordinator::sources::{GradSource, RuntimeSource, Workload};
+use qsgd::coordinator::sync::{SyncConfig, SyncTrainer};
+use qsgd::coordinator::CompressorSpec;
+use qsgd::data::{ClassifyData, TokenCorpus};
+use qsgd::models::layout::QuantPlan;
+use qsgd::runtime::{artifact, Input, Runtime};
+use qsgd::util::rng::{self, Xoshiro256};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifact::default_dir().join("manifest.json").exists() {
+        eprintln!("[skipped: run `make artifacts` first]");
+        return None;
+    }
+    Some(Runtime::from_default_dir().expect("runtime init"))
+}
+
+#[test]
+fn manifest_covers_all_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in ["logreg_grad", "mlp_grad", "mlp_grad_q", "tfm_grad", "tfm_grad_q", "quantize"] {
+        let a = rt.manifest().get(name).unwrap();
+        assert!(a.path.exists(), "{name} HLO file missing");
+        assert!(!a.inputs.is_empty() && !a.outputs.is_empty());
+    }
+}
+
+#[test]
+fn logreg_gradient_matches_finite_differences() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().get("logreg_grad").unwrap().clone();
+    let n = art.params.unwrap();
+    let dim = art.inputs[1].shape[1];
+    let batch = art.batch.unwrap();
+
+    let mut rng = Xoshiro256::from_u64(0);
+    let params: Vec<f32> = rng::normal_vec(&mut rng, n).iter().map(|x| x * 0.2).collect();
+    let x = rng::normal_vec(&mut rng, batch * dim);
+    let y: Vec<f32> = (0..batch).map(|_| (rng::uniform_f32(&mut rng) > 0.5) as u8 as f32).collect();
+    let xs = [batch, dim];
+    let ys = [batch];
+    let inputs = [Input::F32(&x, &xs), Input::F32(&y, &ys)];
+
+    let (loss, grad) = rt.grad("logreg_grad", &params, &inputs).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(grad.len(), n);
+
+    // central differences on a few coordinates
+    let eps = 1e-2f32;
+    for j in [0usize, 1, n / 2, n - 1] {
+        let mut pp = params.clone();
+        let mut pm = params.clone();
+        pp[j] += eps;
+        pm[j] -= eps;
+        let (lp, _) = rt.grad("logreg_grad", &pp, &inputs).unwrap();
+        let (lm, _) = rt.grad("logreg_grad", &pm, &inputs).unwrap();
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (fd - grad[j]).abs() < 2e-2 + 0.05 * grad[j].abs(),
+            "coord {j}: fd {fd} vs grad {}",
+            grad[j]
+        );
+    }
+}
+
+#[test]
+fn fused_quantized_gradient_is_on_grid_and_loss_matches() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().get("mlp_grad_q").unwrap().clone();
+    let q = art.quant.unwrap();
+    let n = art.params.unwrap();
+    let dim = art.inputs[2].shape[1];
+    let batch = art.batch.unwrap();
+
+    let mut rng = Xoshiro256::from_u64(1);
+    let params: Vec<f32> = rng::normal_vec(&mut rng, n).iter().map(|x| x * 0.1).collect();
+    let uniforms = rng::uniform_vec(&mut rng, n);
+    let x = rng::normal_vec(&mut rng, batch * dim);
+    let y: Vec<i32> = (0..batch).map(|_| (rng::uniform_f32(&mut rng) * 10.0) as i32).collect();
+    let xs = [batch, dim];
+    let ys = [batch];
+    let inputs = [Input::F32(&x, &xs), Input::I32(&y, &ys)];
+
+    let (loss_raw, grad_raw) = rt.grad("mlp_grad", &params, &inputs).unwrap();
+    let (loss_q, qgrad, scales) = rt.grad_q("mlp_grad_q", &params, &uniforms, &inputs).unwrap();
+
+    // same forward pass ⇒ identical loss
+    assert!((loss_raw - loss_q).abs() < 1e-6, "{loss_raw} vs {loss_q}");
+    assert_eq!(qgrad.len(), n);
+    assert_eq!(scales.len(), q.buckets);
+
+    // every qgrad value lies on the level grid of its bucket, within one
+    // level of the raw gradient (max-norm fused artifact)
+    for (bi, chunk) in qgrad.chunks(q.bucket).enumerate() {
+        let scale = scales[bi];
+        let raw = &grad_raw[bi * q.bucket..(bi * q.bucket + chunk.len()).min(n)];
+        if scale == 0.0 {
+            assert!(chunk.iter().all(|&v| v == 0.0));
+            continue;
+        }
+        for (j, (&qv, &rv)) in chunk.iter().zip(raw).enumerate() {
+            let lev = qv.abs() * q.s as f32 / scale;
+            assert!(
+                (lev - lev.round()).abs() < 1e-3,
+                "bucket {bi} coord {j}: off-grid level {lev}"
+            );
+            assert!(
+                (qv - rv).abs() <= scale / q.s as f32 + 1e-6,
+                "bucket {bi} coord {j}: more than one level from raw"
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_training_reduces_heldout_loss_under_all_compressors() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().get("mlp_grad").unwrap().clone();
+    let dim = art.inputs[1].shape[1];
+    let batch = art.batch.unwrap();
+
+    let mut finals = Vec::new();
+    for spec in [CompressorSpec::Fp32, CompressorSpec::qsgd_4bit(), CompressorSpec::OneBit { column: 512 }] {
+        let mut src = RuntimeSource::new(
+            &rt,
+            "mlp_grad",
+            Workload::Classify { data: ClassifyData::mnist_like(dim, 10, 3), batch },
+        )
+        .unwrap();
+        let first = src.eval(&vec![0.01; art.params.unwrap()]).unwrap();
+        let mut cfg = SyncConfig::quick(4, 40, spec, 0.15);
+        cfg.eval_every = 10;
+        cfg.plan = art.layout.as_ref().map(QuantPlan::quantize_all);
+        let res = SyncTrainer::new(cfg).run(&mut src).unwrap();
+        let last = res.eval.last().unwrap();
+        assert!(last < first * 0.5, "{}: eval {first} -> {last}", res.label);
+        finals.push((res.label, last));
+    }
+    // parity: QSGD 4-bit within 20% of fp32's held-out loss
+    let fp = finals[0].1;
+    assert!(finals[1].1 < fp * 1.2 + 0.05, "{:?}", finals);
+}
+
+#[test]
+fn transformer_loss_starts_near_uniform_and_drops() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().get("tfm_grad").unwrap().clone();
+    let batch = art.batch.unwrap();
+    let seq_plus_1 = art.inputs[1].shape[1];
+    let mut src = RuntimeSource::new(
+        &rt,
+        "tfm_grad",
+        Workload::Lm { corpus: TokenCorpus::new(512, 0), batch, seq_plus_1 },
+    )
+    .unwrap();
+
+    let mut cfg = SyncConfig::quick(2, 30, CompressorSpec::qsgd_4bit(), 0.25);
+    cfg.init_scale = 0.05;
+    cfg.log_every = 1;
+    let res = SyncTrainer::new(cfg).run(&mut src).unwrap();
+    let first = res.loss.points[0].1;
+    let last = res.loss.tail_mean(3);
+    // untrained ≈ ln(512) ≈ 6.24
+    assert!((first - 512f64.ln()).abs() < 1.0, "initial loss {first}");
+    assert!(last < first - 0.3, "no learning: {first} -> {last}");
+}
+
+#[test]
+fn wrong_input_arity_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let err = match rt.execute("mlp_grad", &[]) {
+        Err(e) => e,
+        Ok(_) => panic!("empty input list accepted"),
+    };
+    assert!(err.to_string().contains("expects"), "{err}");
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
