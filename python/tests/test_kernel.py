@@ -10,7 +10,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property sweep skipped"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import ref
 from compile.kernels.quantize import quantize_flat, quantize_pallas

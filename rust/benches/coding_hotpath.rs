@@ -1,14 +1,52 @@
 //! L3 hot-path microbenchmarks: quantization, Elias coding, end-to-end
-//! encode/decode throughput. These numbers feed `CostModel` calibration and
-//! the §Perf log in EXPERIMENTS.md.
+//! encode/decode throughput, and the fused zero-allocation pipeline vs the
+//! two-phase oracle (single-thread and 8-worker parallel). These numbers
+//! feed `CostModel` calibration and the §Perf log in EXPERIMENTS.md.
+//!
+//! A counting global allocator verifies the tentpole invariant: the fused
+//! encode loop performs **zero** steady-state heap allocations.
 //!
 //! Run: `cargo bench --bench coding_hotpath`
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use qsgd::bench::{section, Bench};
 use qsgd::coding::gradient::{self, Regime};
+use qsgd::coding::FusedEncoder;
 use qsgd::coordinator::CompressorSpec;
-use qsgd::quant::{stochastic, Norm};
+use qsgd::quant::{stochastic, Compressor, Norm};
+use qsgd::util::par;
 use qsgd::util::rng::{self, Xoshiro256};
+
+/// Counts every allocation and reallocation (frees are not interesting for
+/// the zero-alloc steady-state check).
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 fn main() {
     let b = Bench::default();
@@ -50,6 +88,81 @@ fn main() {
     dec.report_throughput(coords * 4.0);
     let dec2 = b.run("decode dense", || gradient::decode(&bytes_dense).unwrap());
     dec2.report_throughput(coords * 4.0);
+
+    section("fused pipeline (tentpole): zero-alloc encode vs two-phase");
+    let spec = CompressorSpec::qsgd_4bit();
+    let mut two_phase = spec.build_two_phase(n);
+    let mut r = Xoshiro256::from_u64(5);
+    let s_two = b.run("two-phase compress 4-bit/512", || two_phase.compress(&grad, &mut r));
+    s_two.report_throughput(coords * 4.0);
+
+    let mut fused = FusedEncoder::new(7, 512, Norm::Max, None);
+    fused.reserve(n); // pre-size the bitstream: zero allocs from call one
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut r = Xoshiro256::from_u64(5);
+    let s_fused = b.run("fused encode_into 4-bit/512", || {
+        fused.encode_into(&grad, &mut r, &mut out);
+        out.len()
+    });
+    s_fused.report_throughput(coords * 4.0);
+    println!(
+        "  fused vs two-phase, single thread: {:.2}x",
+        s_two.median() / s_fused.median()
+    );
+
+    // Zero-allocation steady state: one warm call sizes the level/word
+    // scratch, then a measured window must not touch the heap at all.
+    fused.encode_into(&grad, &mut r, &mut out);
+    let before = alloc_count();
+    for _ in 0..16 {
+        fused.encode_into(&grad, &mut r, &mut out);
+    }
+    let allocs = alloc_count() - before;
+    println!("  steady-state heap allocations over 16 fused encodes: {allocs} (must be 0)");
+    assert_eq!(allocs, 0, "fused encode loop must not allocate in steady state");
+
+    section("8-worker parallel encode (acceptance: ≥2x vs sequential two-phase)");
+    const K: usize = 8;
+    struct Lane {
+        c: Box<dyn Compressor>,
+        rng: Xoshiro256,
+    }
+    let mk_lanes = |two_phase: bool| -> Vec<Lane> {
+        (0..K)
+            .map(|w| Lane {
+                c: if two_phase { spec.build_two_phase(n) } else { spec.build(n) },
+                rng: Xoshiro256::stream(99, w as u64),
+            })
+            .collect()
+    };
+    let mut seq_lanes = mk_lanes(true);
+    let s_seq = b.run("sequential two-phase x8", || {
+        let mut total = 0usize;
+        for lane in seq_lanes.iter_mut() {
+            total += lane.c.compress(&grad, &mut lane.rng).len();
+        }
+        total
+    });
+    s_seq.report_throughput(coords * 4.0 * K as f64);
+    let mut par_lanes = mk_lanes(false);
+    let s_par = b.run("parallel fused x8 (scoped pool)", || {
+        par::par_map_mut(&mut par_lanes, |_, lane| lane.c.compress(&grad, &mut lane.rng).len())
+            .iter()
+            .sum::<usize>()
+    });
+    s_par.report_throughput(coords * 4.0 * K as f64);
+    let speedup = s_seq.median() / s_par.median();
+    println!("  parallel fused x8 vs sequential two-phase x8: {speedup:.2}x (target ≥2x)");
+    // Same seeds ⇒ the two paths must also agree byte-for-byte.
+    let mut a = mk_lanes(true);
+    let mut c = mk_lanes(false);
+    for (la, lc) in a.iter_mut().zip(c.iter_mut()) {
+        assert_eq!(
+            la.c.compress(&grad, &mut la.rng),
+            lc.c.compress(&grad, &mut lc.rng),
+            "fused wire bytes diverged from two-phase"
+        );
+    }
 
     section("end-to-end Compressor (quantize+code / decode+dequant)");
     for spec in [
@@ -98,7 +211,7 @@ fn main() {
         acc
     });
     agg2.report_throughput(coords * 4.0 * 8.0);
-    let dense_msgs: Vec<Vec<u8>> = qs.iter().map(|q| gradient::encode_auto(q)).collect();
+    let dense_msgs: Vec<Vec<u8>> = qs.iter().map(gradient::encode_auto).collect();
     let agg3 = b.run("decode_add x8 (4-bit/512, from wire)", || {
         let mut acc = vec![0.0f32; n];
         for m in &dense_msgs {
@@ -107,4 +220,14 @@ fn main() {
         acc
     });
     agg3.report_throughput(coords * 4.0 * 8.0);
+    // Parallel grouped decode (collectives::par_decode_mean drives this in
+    // the trainer); decode-side parallelism beyond grouping is a ROADMAP
+    // open item.
+    let agg4 = b.run("par_decode_mean x8 (4-bit/512)", || {
+        qsgd::collectives::par_decode_mean(&dense_msgs, n, 1.0 / 8.0, |m, a, acc| {
+            gradient::decode_add(m, a, acc).map(|_| ())
+        })
+        .unwrap()
+    });
+    agg4.report_throughput(coords * 4.0 * 8.0);
 }

@@ -62,8 +62,11 @@ impl BitWriter {
         self.write_bits(x.to_bits() as u64, 32);
     }
 
-    /// Flush (zero-padding the final partial byte) and return the bytes.
-    pub fn into_bytes(mut self) -> Vec<u8> {
+    /// Flush pending bits (zero-padding the final partial byte) and expose
+    /// the encoded bytes without consuming the writer — the reusable-buffer
+    /// path of the fused pipeline ([`crate::coding::pipeline`]). Identical
+    /// byte output to [`Self::into_bytes`].
+    pub fn finish(&mut self) -> &[u8] {
         while self.fill >= 8 {
             self.fill -= 8;
             self.buf.push((self.acc >> self.fill) as u8);
@@ -73,6 +76,24 @@ impl BitWriter {
             self.buf.push(((self.acc << pad) & 0xff) as u8);
             self.fill = 0;
         }
+        &self.buf
+    }
+
+    /// Reset to an empty stream, keeping the allocated capacity.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.acc = 0;
+        self.fill = 0;
+    }
+
+    /// Pre-size the byte buffer (zero-allocation steady state from call one).
+    pub fn reserve(&mut self, bytes: usize) {
+        self.buf.reserve(bytes);
+    }
+
+    /// Flush (zero-padding the final partial byte) and return the bytes.
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        self.finish();
         self.buf
     }
 }
@@ -222,6 +243,23 @@ mod tests {
         // padding bits are readable (zero), but not beyond the byte
         assert_eq!(r.read_bits(8).unwrap(), 0b1010_0000);
         assert_eq!(r.read_bit(), Err(BitstreamExhausted));
+    }
+
+    #[test]
+    fn finish_matches_into_bytes_and_reset_reuses() {
+        let mut reused = BitWriter::new();
+        reused.reserve(64);
+        for round in 0..3u64 {
+            reused.reset();
+            let mut owned = BitWriter::new();
+            for i in 0..50 + round {
+                owned.write_bits(i % 31, 5);
+                reused.write_bits(i % 31, 5);
+            }
+            owned.write_bits(round, 3);
+            reused.write_bits(round, 3);
+            assert_eq!(reused.finish(), owned.into_bytes().as_slice());
+        }
     }
 
     #[test]

@@ -47,15 +47,11 @@ impl Compressor for QsgdCompressor {
     }
 
     fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
-        let q = gradient::decode(msg)?;
-        anyhow::ensure!(q.n == n, "decoded length {} != expected {n}", q.n);
-        Ok(q.dequantize())
+        gradient::decode_expecting(msg, n)
     }
 
     fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
-        let n = gradient::decode_add(msg, alpha, acc)?;
-        anyhow::ensure!(n == acc.len(), "decoded length {n} != expected {}", acc.len());
-        Ok(())
+        gradient::decode_add_expecting(msg, alpha, acc)
     }
 
     fn name(&self) -> String {

@@ -59,11 +59,23 @@ pub fn encode_bucket_sparse(w: &mut BitWriter, b: &QuantBucket) {
 /// LUT-accelerated sparse encoder (the whole-gradient [`encode`] builds the
 /// table once and reuses it across buckets).
 pub fn encode_bucket_sparse_with(w: &mut BitWriter, b: &QuantBucket, lut: &elias::EliasLut) {
-    w.write_f32(b.scale);
-    let nnz = b.nnz() as u64;
+    encode_levels_sparse_with(w, b.scale, &b.levels, lut)
+}
+
+/// Sparse bucket body from a raw level slice — the fused pipeline's entry
+/// point ([`crate::coding::pipeline`]); shares every codeword decision with
+/// the [`QuantBucket`] path, so the wire bytes are bit-identical.
+pub fn encode_levels_sparse_with(
+    w: &mut BitWriter,
+    scale: f32,
+    levels: &[i32],
+    lut: &elias::EliasLut,
+) {
+    w.write_f32(scale);
+    let nnz = levels.iter().filter(|&&l| l != 0).count() as u64;
     lut.encode(w, nnz + 1); // Elias'(nnz)
     let mut prev: i64 = -1;
-    for (i, &l) in b.levels.iter().enumerate() {
+    for (i, &l) in levels.iter().enumerate() {
         if l == 0 {
             continue;
         }
@@ -126,8 +138,18 @@ pub fn encode_bucket_dense(w: &mut BitWriter, b: &QuantBucket) {
 /// LUT-accelerated dense encoder: per coordinate, `Elias'(|ℓ|)` and the
 /// optional sign bit are fused into a single `write_bits` call.
 pub fn encode_bucket_dense_with(w: &mut BitWriter, b: &QuantBucket, lut: &elias::EliasLut) {
-    w.write_f32(b.scale);
-    for &l in &b.levels {
+    encode_levels_dense_with(w, b.scale, &b.levels, lut)
+}
+
+/// Dense bucket body from a raw level slice (fused-pipeline entry point).
+pub fn encode_levels_dense_with(
+    w: &mut BitWriter,
+    scale: f32,
+    levels: &[i32],
+    lut: &elias::EliasLut,
+) {
+    w.write_f32(scale);
+    for &l in levels {
         let mag = l.unsigned_abs() as u64;
         match lut.get(mag + 1) {
             Some((pat, bits)) => {
@@ -185,14 +207,28 @@ pub fn decode_bucket_dense_with(
 pub const FRAME_MAGIC: u64 = 0xA5;
 pub const FRAME_VERSION: u64 = 1;
 
-fn write_header(w: &mut BitWriter, g: &QuantizedGradient, regime: Regime) {
+/// Write the self-describing frame header from its raw fields (shared by the
+/// two-phase [`encode`] and the fused [`crate::coding::pipeline`] so both
+/// emit byte-identical frames).
+pub fn write_frame_header(
+    w: &mut BitWriter,
+    s: u32,
+    n: usize,
+    bucket_size: usize,
+    norm: Norm,
+    regime: Regime,
+) {
     w.write_bits(FRAME_MAGIC, 8);
     w.write_bits(FRAME_VERSION, 4);
     w.write_bit(matches!(regime, Regime::Sparse));
-    w.write_bit(matches!(g.norm, Norm::Max));
-    elias::encode(w, g.s as u64);
-    elias::encode0(w, g.n as u64);
-    elias::encode(w, g.bucket_size as u64);
+    w.write_bit(matches!(norm, Norm::Max));
+    elias::encode(w, s as u64);
+    elias::encode0(w, n as u64);
+    elias::encode(w, bucket_size as u64);
+}
+
+fn write_header(w: &mut BitWriter, g: &QuantizedGradient, regime: Regime) {
+    write_frame_header(w, g.s, g.n, g.bucket_size, g.norm, regime)
 }
 
 struct Header {
@@ -215,15 +251,22 @@ fn read_header(r: &mut BitReader) -> Result<Header> {
     Ok(Header { regime, norm, s, n, bucket_size })
 }
 
+/// Size of the shared encoder codeword table for quantization level `s`:
+/// covers levels (≤ s) and typical run-length gaps; rare larger values fall
+/// back to recursion. Shared with the fused pipeline so both paths pick the
+/// same tabulated-vs-recursive codeword boundary.
+pub fn encode_lut_max(s: u32) -> u64 {
+    (s as u64 + 2).max(GAP_LUT).min((1 << 18) - 1)
+}
+
 /// Encode a quantized gradient with an explicit regime.
 pub fn encode(g: &QuantizedGradient, regime: Regime) -> Vec<u8> {
     // Dense regime lower-bounds at ~2.8 bits/coord; sparse at ~nnz·(log d).
     let cap = g.n / 2 + g.buckets.len() * 8 + 16;
     let mut w = BitWriter::with_capacity(cap);
     write_header(&mut w, g, regime);
-    // One codeword table shared across all buckets: covers levels (≤ s) and
-    // typical run-length gaps; rare larger values fall back to recursion.
-    let lut = elias::EliasLut::new((g.s as u64 + 2).max(GAP_LUT).min((1 << 18) - 1));
+    // One codeword table shared across all buckets.
+    let lut = elias::EliasLut::new(encode_lut_max(g.s));
     for b in &g.buckets {
         match regime {
             Regime::Sparse => encode_bucket_sparse_with(&mut w, b, &lut),
@@ -330,6 +373,23 @@ pub fn decode_add(bytes: &[u8], alpha: f32, acc: &mut [f32]) -> Result<usize> {
         remaining -= d;
     }
     Ok(h.n)
+}
+
+/// Decode a frame and dequantize, checking the decoded length against the
+/// caller's expectation — the shared decompress body of both the fused and
+/// two-phase compressors.
+pub fn decode_expecting(msg: &[u8], n: usize) -> Result<Vec<f32>> {
+    let q = decode(msg)?;
+    ensure!(q.n == n, "decoded length {} != expected {n}", q.n);
+    Ok(q.dequantize())
+}
+
+/// Fused decode-and-accumulate with the length check (shared decompress_add
+/// body of both compressors).
+pub fn decode_add_expecting(msg: &[u8], alpha: f32, acc: &mut [f32]) -> Result<()> {
+    let n = decode_add(msg, alpha, acc)?;
+    ensure!(n == acc.len(), "decoded length {n} != expected {}", acc.len());
+    Ok(())
 }
 
 // --------------------------------------------------------------------------

@@ -1,10 +1,13 @@
 //! Lossless coding of quantized gradients (paper §3.1 "Efficient Coding of
 //! Gradients", Appendices A.2/A.3): bit-level I/O, recursive Elias integer
-//! codes, and the sparse/dense gradient wire formats.
+//! codes, the sparse/dense gradient wire formats, and the fused
+//! zero-allocation quantize→encode pipeline ([`pipeline`]).
 
 pub mod bitstream;
 pub mod elias;
 pub mod gradient;
+pub mod pipeline;
 
 mod compressor;
 pub use compressor::QsgdCompressor;
+pub use pipeline::{FusedEncoder, FusedQsgd};

@@ -1,0 +1,309 @@
+//! Fused zero-allocation quantize→encode pipeline.
+//!
+//! The two-phase path (`quant::stochastic::quantize` → `gradient::encode`)
+//! materialises a [`crate::quant::QuantBucket`] — one `Vec<i32>` per bucket —
+//! purely so the encoder can re-walk it. On the encode hot path that is
+//! wasted work: the paper's §5 protocol overlaps quantize+code with backprop
+//! ("communication time includes time spent compressing and uncompressing
+//! gradients"), so the pipeline must stay allocation-free and cache-resident
+//! as schemes get richer (NUQSGD makes the same point about the
+//! quantize+code stage). [`FusedEncoder`] owns all per-worker scratch — the
+//! bitstream buffer, the batched RNG words, the bucket-level scratch, and
+//! the Elias codeword table — and streams levels into the bitstream
+//! bucket-by-bucket.
+//!
+//! Wire compatibility is a hard invariant: the fused path emits bytes
+//! **bit-identical** to the two-phase oracle for every `(s, bucket, norm,
+//! regime)` configuration, because it consumes the per-worker RNG stream in
+//! the same order (one `fill_bytes` per bucket), assigns levels with the
+//! same `quantize_bucket_into` arithmetic, and emits codewords through the
+//! same `encode_levels_*` routines and LUT sizing. `tests/fused_pipeline.rs`
+//! property-tests this; the two-phase [`crate::coding::QsgdCompressor`] is
+//! retained as the oracle.
+//!
+//! Regime selection mirrors `gradient::encode_auto`: with an explicit regime
+//! or a 2-norm (where the paper's rule is static in `(s, d)`), buckets
+//! stream straight into the bitstream; the §4 max-norm variant has no
+//! sparsity guarantee, so its regime comes from measured density — that path
+//! quantizes into a gradient-sized level scratch first (still zero
+//! steady-state allocations) and then encodes.
+
+use rand_core::RngCore;
+
+use super::bitstream::BitWriter;
+use super::elias::EliasLut;
+use super::gradient::{self, Regime};
+use crate::quant::{self, Compressor, Norm};
+
+/// Reusable per-worker fused quantize+encode state.
+pub struct FusedEncoder {
+    /// Quantization levels `s ≥ 1`.
+    pub s: u32,
+    /// Bucket size `d` (`usize::MAX` ⇒ whole-vector §3.1 scheme).
+    pub bucket: usize,
+    pub norm: Norm,
+    /// `None` ⇒ the paper's regime rule per gradient.
+    pub regime: Option<Regime>,
+    writer: BitWriter,
+    /// Batched RNG words, 4 bytes per coordinate of the current bucket.
+    words: Vec<u8>,
+    /// Level scratch: bucket-sized on the streaming path, gradient-sized on
+    /// the measured-density path.
+    levels: Vec<i32>,
+    /// Per-bucket scales (measured-density path only).
+    scales: Vec<f32>,
+    /// Codeword table shared across buckets, sized as the two-phase encoder
+    /// sizes it.
+    lut: EliasLut,
+}
+
+impl FusedEncoder {
+    pub fn new(s: u32, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
+        assert!(s >= 1 && bucket >= 1);
+        Self {
+            s,
+            bucket,
+            norm,
+            regime,
+            writer: BitWriter::new(),
+            words: Vec::new(),
+            levels: Vec::new(),
+            scales: Vec::new(),
+            lut: EliasLut::new(gradient::encode_lut_max(s)),
+        }
+    }
+
+    /// Pre-size the internal bitstream buffer so even the first encode runs
+    /// without reallocation.
+    pub fn reserve(&mut self, bytes: usize) {
+        self.writer.reserve(bytes);
+    }
+
+    /// Encode `grad` into `out` (cleared first), reusing every piece of
+    /// internal scratch. In steady state — after the scratch has grown to
+    /// the largest gradient seen — this performs zero heap allocations
+    /// (verified by the counting allocator in the `coding_hotpath` bench).
+    pub fn encode_into(&mut self, grad: &[f32], rng: &mut dyn RngCore, out: &mut Vec<u8>) {
+        let n = grad.len();
+        let bucket = self.bucket.min(n.max(1));
+        if self.words.len() < bucket * 4 {
+            self.words.resize(bucket * 4, 0);
+        }
+        self.writer.reset();
+        let static_regime = match (self.regime, self.norm) {
+            (Some(r), _) => Some(r),
+            (None, Norm::L2) => Some(gradient::preferred_regime(self.s, bucket)),
+            (None, Norm::Max) => None,
+        };
+        match static_regime {
+            Some(regime) => self.encode_streaming(grad, bucket, regime, rng),
+            None => self.encode_measured(grad, bucket, rng),
+        }
+        let bytes = self.writer.finish();
+        out.clear();
+        out.extend_from_slice(bytes);
+    }
+
+    /// Convenience wrapper allocating the output message.
+    pub fn encode(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(grad, rng, &mut out);
+        out
+    }
+
+    /// Regime known up front: each bucket is quantized into the bucket-sized
+    /// scratch and immediately streamed into the bitstream.
+    fn encode_streaming(
+        &mut self,
+        grad: &[f32],
+        bucket: usize,
+        regime: Regime,
+        rng: &mut dyn RngCore,
+    ) {
+        if self.levels.len() < bucket {
+            self.levels.resize(bucket, 0);
+        }
+        let Self { writer, words, levels, lut, s, norm, .. } = self;
+        gradient::write_frame_header(writer, *s, grad.len(), bucket, *norm, regime);
+        for c in grad.chunks(bucket) {
+            let wds = &mut words[..c.len() * 4];
+            rng.fill_bytes(wds);
+            let lv = &mut levels[..c.len()];
+            let scale = quant::stochastic::quantize_bucket_into(c, wds, *s, *norm, lv);
+            match regime {
+                Regime::Sparse => gradient::encode_levels_sparse_with(writer, scale, lv, lut),
+                Regime::Dense => gradient::encode_levels_dense_with(writer, scale, lv, lut),
+            }
+        }
+    }
+
+    /// Max-norm auto regime (measured density, as `encode_auto` does): one
+    /// quantization pass into the gradient-sized scratch, then encode.
+    fn encode_measured(&mut self, grad: &[f32], bucket: usize, rng: &mut dyn RngCore) {
+        let n = grad.len();
+        if self.levels.len() < n {
+            self.levels.resize(n, 0);
+        }
+        self.scales.clear();
+        let Self { writer, words, levels, scales, lut, s, norm, .. } = self;
+        let mut nnz = 0usize;
+        for (bi, c) in grad.chunks(bucket).enumerate() {
+            let wds = &mut words[..c.len() * 4];
+            rng.fill_bytes(wds);
+            let lv = &mut levels[bi * bucket..bi * bucket + c.len()];
+            scales.push(quant::stochastic::quantize_bucket_into(c, wds, *s, *norm, lv));
+            nnz += lv.iter().filter(|&&l| l != 0).count();
+        }
+        // encode_auto's max-norm rule: dense once ≳25% of levels are nonzero.
+        let regime = if nnz * 4 > n {
+            Regime::Dense
+        } else {
+            gradient::preferred_regime(*s, bucket)
+        };
+        gradient::write_frame_header(writer, *s, n, bucket, *norm, regime);
+        for (bi, c) in grad.chunks(bucket).enumerate() {
+            let lv = &levels[bi * bucket..bi * bucket + c.len()];
+            match regime {
+                Regime::Sparse => gradient::encode_levels_sparse_with(writer, scales[bi], lv, lut),
+                Regime::Dense => gradient::encode_levels_dense_with(writer, scales[bi], lv, lut),
+            }
+        }
+    }
+}
+
+/// Drop-in QSGD compressor over the fused pipeline — what
+/// [`crate::coordinator::CompressorSpec::build`] returns for QSGD arms. The
+/// two-phase [`crate::coding::QsgdCompressor`] stays available as the
+/// property-test oracle (`CompressorSpec::build_two_phase`).
+pub struct FusedQsgd {
+    enc: FusedEncoder,
+}
+
+impl FusedQsgd {
+    pub fn new(s: u32, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
+        Self { enc: FusedEncoder::new(s, bucket, norm, regime) }
+    }
+
+    /// Experiment-style constructor (paper §5: e.g. 4-bit/512, max-norm).
+    pub fn with_bits(bits: u32, bucket: usize) -> Self {
+        Self::new(quant::levels_for_bits(bits), bucket, Norm::Max, None)
+    }
+
+    /// Theory-style constructor: the §3.1 scheme (2-norm, single bucket).
+    pub fn paper(s: u32) -> Self {
+        Self::new(s, usize::MAX, Norm::L2, None)
+    }
+
+    pub fn encoder(&mut self) -> &mut FusedEncoder {
+        &mut self.enc
+    }
+}
+
+impl Compressor for FusedQsgd {
+    fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
+        // One exact-size allocation for the returned message; all pipeline
+        // scratch is reused across calls.
+        self.enc.encode(grad, rng)
+    }
+
+    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        gradient::decode_expecting(msg, n)
+    }
+
+    fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
+        gradient::decode_add_expecting(msg, alpha, acc)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "qsgd-fused(s={},bucket={},{:?})",
+            self.enc.s, self.enc.bucket, self.enc.norm
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::QsgdCompressor;
+    use crate::util::rng::{self, Xoshiro256};
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256::from_u64(seed);
+        rng::normal_vec(&mut r, n)
+    }
+
+    #[test]
+    fn fused_roundtrips_through_standard_decoder() {
+        let v = randn(3000, 0);
+        for (s, bucket, norm) in [
+            (1u32, 64usize, Norm::Max),
+            (7, 512, Norm::Max),
+            (127, 512, Norm::Max),
+            (15, 3000, Norm::L2),
+        ] {
+            let mut c = FusedQsgd::new(s, bucket, norm, None);
+            let mut r = Xoshiro256::from_u64(1);
+            let msg = c.compress(&v, &mut r);
+            let back = c.decompress(&msg, v.len()).unwrap();
+            assert_eq!(back.len(), v.len());
+            // reconstruction stays within one level per bucket
+            for (cg, cb) in v.chunks(bucket).zip(back.chunks(bucket)) {
+                let scale = match norm {
+                    Norm::Max => cg.iter().fold(0.0f32, |m, &x| m.max(x.abs())),
+                    Norm::L2 => cg.iter().map(|x| x * x).sum::<f32>().sqrt(),
+                };
+                for (g, b) in cg.iter().zip(cb) {
+                    assert!((g - b).abs() <= scale / s as f32 + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_two_phase_on_basic_configs() {
+        let v = randn(2500, 2);
+        for (s, bucket, norm, regime) in [
+            (7u32, 512usize, Norm::Max, None),
+            (1, 64, Norm::Max, None),
+            (15, 2500, Norm::L2, None),
+            (4, 128, Norm::L2, Some(Regime::Sparse)),
+            (4, 128, Norm::Max, Some(Regime::Dense)),
+        ] {
+            let mut oracle = QsgdCompressor { s, bucket, norm, regime };
+            let mut fused = FusedQsgd::new(s, bucket, norm, regime);
+            let a = oracle.compress(&v, &mut Xoshiro256::from_u64(3));
+            let b = fused.compress(&v, &mut Xoshiro256::from_u64(3));
+            assert_eq!(a, b, "s={s} bucket={bucket} {norm:?} {regime:?}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_gradients() {
+        let mut fused = FusedQsgd::with_bits(4, 512);
+        let mut oracle = QsgdCompressor::with_bits(4, 512);
+        for v in [vec![], vec![0.0f32; 100], vec![f32::NAN; 10]] {
+            let a = oracle.compress(&v, &mut Xoshiro256::from_u64(4));
+            let b = fused.compress(&v, &mut Xoshiro256::from_u64(4));
+            assert_eq!(a, b, "len={}", v.len());
+            let q = gradient::decode(&b).unwrap();
+            assert_eq!(q.n, v.len());
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_output_buffer() {
+        let v = randn(4096, 5);
+        let mut enc = FusedEncoder::new(7, 512, Norm::Max, None);
+        enc.reserve(4096);
+        let mut out = Vec::with_capacity(8192);
+        let mut r = Xoshiro256::from_u64(6);
+        enc.encode_into(&v, &mut r, &mut out);
+        let first = out.clone();
+        let cap = out.capacity();
+        let mut r = Xoshiro256::from_u64(6);
+        enc.encode_into(&v, &mut r, &mut out);
+        assert_eq!(out, first, "same seed must reproduce the same frame");
+        assert_eq!(out.capacity(), cap, "output buffer must be reused");
+    }
+}

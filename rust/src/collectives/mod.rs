@@ -3,8 +3,17 @@
 //! These move *real* encoded bytes between simulated workers (the decode
 //! side consumes exactly what the encode side produced — no shortcuts) and
 //! charge virtual transfer time on the [`crate::simnet::SimNet`] model.
+//!
+//! The K per-worker Encode/Decode jobs of Algorithm 1 are independent
+//! (per-worker compressor state, per-worker `Xoshiro256` RNG streams), so
+//! [`par_encode`] and [`par_decode_mean`] fan them out on the scoped pool
+//! ([`crate::util::par`]); wire bytes stay bit-identical to a sequential
+//! pass and the decode merge order is fixed, so results are deterministic.
+
+use anyhow::Result;
 
 use crate::simnet::{SimNet, VTime};
+use crate::util::par;
 
 /// Result of an all-broadcast: every worker sees all K messages, in worker
 /// order (a worker's own message included, as in Algorithm 1 where the local
@@ -21,6 +30,62 @@ pub fn all_broadcast(net: &SimNet, messages: Vec<Vec<u8>>) -> BroadcastResult {
     let sizes: Vec<usize> = messages.iter().map(Vec::len).collect();
     let time = net.exchange_time(&sizes);
     BroadcastResult { time, messages }
+}
+
+/// Encode K independent per-worker messages in parallel (Algorithm 1 line 3
+/// across simulated workers). Each job owns its compressor state and RNG
+/// stream, so the produced bytes are bit-identical to a sequential loop in
+/// worker order.
+pub fn par_encode<W, F>(workers: &mut [W], encode: F) -> Vec<Vec<u8>>
+where
+    W: Send,
+    F: Fn(usize, &mut W) -> Vec<u8> + Sync,
+{
+    par::par_map_mut(workers, encode)
+}
+
+/// Message groups for the parallel decode merge. Fixed (not derived from the
+/// machine's core count) so the float accumulation order — groups are summed
+/// in index order — is identical on every host. With K ≤ this many peers
+/// each group holds one message and the result is bit-identical to the
+/// sequential decode-accumulate loop.
+pub const DECODE_MERGE_GROUPS: usize = 8;
+
+/// Decode K peer messages and average them into a fresh accumulator
+/// (Algorithm 1 lines 7–8): `out = Σ_k alpha · decode(messages[k])`.
+/// Groups of messages decode concurrently into private partial accumulators
+/// (via the caller's fused `decode_add`), which are then merged in fixed
+/// group order.
+pub fn par_decode_mean<F>(
+    messages: &[Vec<u8>],
+    n: usize,
+    alpha: f32,
+    decode_add: F,
+) -> Result<Vec<f32>>
+where
+    F: Fn(&[u8], f32, &mut [f32]) -> Result<()> + Sync,
+{
+    let mut acc = vec![0.0f32; n];
+    if messages.is_empty() {
+        return Ok(acc);
+    }
+    let groups = DECODE_MERGE_GROUPS.min(messages.len());
+    let chunk = messages.len().div_ceil(groups);
+    let grouped: Vec<&[Vec<u8>]> = messages.chunks(chunk).collect();
+    let partials = par::par_map(&grouped, |_, group| -> Result<Vec<f32>> {
+        let mut part = vec![0.0f32; n];
+        for msg in group.iter() {
+            decode_add(msg, alpha, &mut part)?;
+        }
+        Ok(part)
+    });
+    for p in partials {
+        let p = p?;
+        for (a, &x) in acc.iter_mut().zip(&p) {
+            *a += x;
+        }
+    }
+    Ok(acc)
 }
 
 /// Dense fp32 ring allreduce (the 32-bit baseline's transport): averages the
@@ -71,5 +136,75 @@ mod tests {
     fn allreduce_rejects_ragged() {
         let grads = vec![vec![1.0f32], vec![1.0, 2.0]];
         ring_allreduce_mean(&net(2, Topology::RingAllReduce), &grads);
+    }
+
+    #[test]
+    fn par_encode_matches_sequential_worker_loop() {
+        use crate::coordinator::CompressorSpec;
+        use crate::util::rng::{self, Xoshiro256};
+
+        struct Lane {
+            c: Box<dyn crate::quant::Compressor>,
+            rng: Xoshiro256,
+            grad: Vec<f32>,
+        }
+        let n = 2000usize;
+        let spec = CompressorSpec::qsgd_4bit();
+        let mk = || -> Vec<Lane> {
+            (0..6)
+                .map(|w| {
+                    let mut gr = Xoshiro256::stream(7, w as u64);
+                    Lane {
+                        c: spec.build(n),
+                        rng: Xoshiro256::stream(11, w as u64),
+                        grad: rng::normal_vec(&mut gr, n),
+                    }
+                })
+                .collect()
+        };
+        let mut seq = mk();
+        let expect: Vec<Vec<u8>> =
+            seq.iter_mut().map(|l| l.c.compress(&l.grad, &mut l.rng)).collect();
+        let mut par_lanes = mk();
+        let got = par_encode(&mut par_lanes, |_, l| l.c.compress(&l.grad, &mut l.rng));
+        assert_eq!(got, expect, "parallel encode must be bit-identical");
+    }
+
+    #[test]
+    fn par_decode_mean_matches_sequential_accumulation() {
+        use crate::coding::gradient;
+        use crate::quant::{stochastic, Norm};
+        use crate::util::rng::{self, Xoshiro256};
+
+        let n = 3000usize;
+        let k = 8usize;
+        let mut rng = Xoshiro256::from_u64(3);
+        let msgs: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let g = rng::normal_vec(&mut rng, n);
+                let q = stochastic::quantize(&g, 7, 512, Norm::Max, &mut rng);
+                gradient::encode_auto(&q)
+            })
+            .collect();
+        let alpha = 1.0 / k as f32;
+        let mut seq = vec![0.0f32; n];
+        for m in &msgs {
+            gradient::decode_add(m, alpha, &mut seq).unwrap();
+        }
+        let par = par_decode_mean(&msgs, n, alpha, |m, a, acc| {
+            gradient::decode_add(m, a, acc).map(|_| ())
+        })
+        .unwrap();
+        // K ≤ DECODE_MERGE_GROUPS ⇒ one message per group ⇒ the merge order
+        // equals the sequential accumulation order exactly.
+        assert!(k <= DECODE_MERGE_GROUPS);
+        assert_eq!(par, seq);
+        // corrupt message propagates the error
+        let mut bad = msgs.clone();
+        bad[3][0] ^= 0xff;
+        assert!(par_decode_mean(&bad, n, alpha, |m, a, acc| {
+            gradient::decode_add(m, a, acc).map(|_| ())
+        })
+        .is_err());
     }
 }

@@ -6,6 +6,15 @@
 //! event-driven simulation over the virtual clock produces bounded-staleness
 //! behaviour: a worker's delay is its pull + compute + push interval, so the
 //! maximum staleness T of Theorem D.1 is set by the slowest round trip.
+//!
+//! Encoding is batched onto the scoped pool: a worker's gradient is fixed at
+//! pull time (it depends only on the parameters it pulled), so its Encode
+//! job is independent of every event that fires before its own push. The
+//! event loop therefore encodes lazily — when the next event's message is
+//! not ready, *all* pending Encode jobs run concurrently
+//! ([`crate::util::par`]). Per-worker RNG streams make the wire bytes
+//! bit-identical to encoding at pop time, and arrival order, staleness and
+//! the applied updates are unchanged.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -16,7 +25,9 @@ use super::sources::GradSource;
 use super::CompressorSpec;
 use crate::metrics::{Curve, WireStats};
 use crate::models::CostModel;
+use crate::quant::Compressor;
 use crate::simnet::SimNet;
+use crate::util::par;
 use crate::util::rng::Xoshiro256;
 
 pub struct AsyncConfig {
@@ -69,17 +80,31 @@ impl PartialOrd for Event {
     }
 }
 
+/// One worker's in-flight state: the gradient it computed on its last pull,
+/// and the lazily (batch-)encoded push message.
+struct WorkerState {
+    compressor: Box<dyn Compressor>,
+    rng: Xoshiro256,
+    grad: Vec<f32>,
+    loss: f32,
+    msg: Option<Vec<u8>>,
+}
+
 pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult> {
     let n = source.dim();
     let mut params: Vec<f32> = {
         let mut r = Xoshiro256::stream(cfg.seed, 0xA54C);
         crate::util::rng::normal_vec(&mut r, n).into_iter().map(|x| x * 0.1).collect()
     };
-    let mut compressors: Vec<_> = (0..cfg.workers).map(|_| cfg.compressor.build(n)).collect();
-    let mut rngs: Vec<_> =
-        (0..cfg.workers).map(|w| Xoshiro256::stream(cfg.seed ^ 0xAB5, w as u64)).collect();
-    // Snapshot each worker computed its gradient on.
-    let mut snapshots: Vec<Vec<f32>> = vec![params.clone(); cfg.workers];
+    let mut states: Vec<WorkerState> = (0..cfg.workers)
+        .map(|w| WorkerState {
+            compressor: cfg.compressor.build(n),
+            rng: Xoshiro256::stream(cfg.seed ^ 0xAB5, w as u64),
+            grad: Vec::new(),
+            loss: 0.0,
+            msg: None,
+        })
+        .collect();
 
     let speed = |w: usize| -> f64 {
         cfg.speed.get(w).copied().unwrap_or(1.0).max(1e-6)
@@ -87,8 +112,14 @@ pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult
     let pull_bytes = n * 4; // dense param pull
     let compute_s = cfg.cost.step_compute_s(source.flops_fwd_per_step(), 1);
 
+    // Initial pulls: every worker computes its first gradient on the initial
+    // parameters (identical inputs to computing at pop time — the snapshot a
+    // worker pulled cannot change before its own push fires).
     let mut heap = BinaryHeap::new();
     for w in 0..cfg.workers {
+        let (loss, grad) = source.loss_and_grad(w, 0, &params)?;
+        states[w].loss = loss;
+        states[w].grad = grad;
         let t = cfg.net.p2p_time(pull_bytes).secs() + compute_s / speed(w);
         heap.push(Event { at: t, worker: w, pulled_version: 0, step: 0 });
     }
@@ -105,14 +136,23 @@ pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult
         now = ev.at;
         let w = ev.worker;
 
-        // Worker w finished computing on its snapshot; push encoded gradient.
-        let (loss, grad) = source.loss_and_grad(w, ev.step, &snapshots[w])?;
-        let msg = compressors[w].compress(&grad, &mut rngs[w]);
+        // Lazy batched encode: if this worker's push message is not ready,
+        // every pending Encode job runs concurrently on the scoped pool. In
+        // the homogeneous steady state this encodes all K messages in one
+        // K-way parallel batch per K events.
+        if states[w].msg.is_none() {
+            par::par_map_mut(&mut states, |_, st| {
+                if st.msg.is_none() {
+                    st.msg = Some(st.compressor.compress(&st.grad, &mut st.rng));
+                }
+            });
+        }
+        let msg = states[w].msg.take().expect("encode batch filled this worker");
         wire.record(msg.len(), n);
         let push_t = cfg.net.p2p_time(msg.len()).secs();
 
         // Server receives and applies (arrival order = heap order here).
-        let decoded = compressors[w].decompress(&msg, n)?;
+        let decoded = states[w].compressor.decompress(&msg, n)?;
         for (p, &g) in params.iter_mut().zip(&decoded) {
             *p -= cfg.lr * g;
         }
@@ -122,13 +162,21 @@ pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult
         version += 1;
 
         if version % cfg.log_every.max(1) == 0 || version == cfg.updates {
-            loss_curve.push(version, loss as f64);
+            loss_curve.push(version, states[w].loss as f64);
         }
 
-        // Worker pulls fresh params and starts the next round.
-        snapshots[w] = params.clone();
-        let next = now + push_t + cfg.net.p2p_time(pull_bytes).secs() + compute_s / speed(w);
-        heap.push(Event { at: next, worker: w, pulled_version: version, step: ev.step + 1 });
+        // Worker pulls fresh params and immediately computes its next
+        // gradient (deterministic in (worker, step, params) per the
+        // GradSource contract), leaving the encode for a later batch. Once
+        // the update budget is spent the pending events are abandoned, so
+        // skip the (possibly expensive) gradient evaluation too.
+        if version < cfg.updates {
+            let (loss, grad) = source.loss_and_grad(w, ev.step + 1, &params)?;
+            states[w].loss = loss;
+            states[w].grad = grad;
+            let next = now + push_t + cfg.net.p2p_time(pull_bytes).secs() + compute_s / speed(w);
+            heap.push(Event { at: next, worker: w, pulled_version: version, step: ev.step + 1 });
+        }
     }
 
     Ok(AsyncResult {

@@ -19,7 +19,7 @@ pub mod svrg;
 pub mod sync;
 
 use crate::coding::gradient::Regime;
-use crate::coding::QsgdCompressor;
+use crate::coding::{FusedQsgd, QsgdCompressor};
 use crate::quant::{self, Compressor, Norm};
 
 /// Which gradient compression the coordinator applies — mirrors the paper's
@@ -48,18 +48,34 @@ impl CompressorSpec {
         CompressorSpec::Qsgd { bits: 8, bucket: 512, norm: Norm::Max, regime: None }
     }
 
-    /// Instantiate a (possibly stateful) compressor for one worker.
+    /// Instantiate a (possibly stateful) compressor for one worker. QSGD
+    /// arms ride the fused zero-allocation pipeline
+    /// ([`crate::coding::pipeline`]) — bit-identical on the wire to the
+    /// two-phase path, which [`Self::build_two_phase`] keeps as the oracle.
     pub fn build(&self, n: usize) -> Box<dyn Compressor> {
         match *self {
             CompressorSpec::Fp32 => Box::new(quant::Fp32),
+            CompressorSpec::Qsgd { bits, bucket, norm, regime } => {
+                Box::new(FusedQsgd::new(quant::levels_for_bits(bits), bucket, norm, regime))
+            }
+            CompressorSpec::OneBit { column } => Box::new(quant::onebit::OneBitSgd::new(n, column)),
+            CompressorSpec::TernGrad { bucket } => Box::new(quant::terngrad::TernGrad::new(bucket)),
+        }
+    }
+
+    /// The pre-fusion two-phase QSGD path (quantize, then encode as a
+    /// separate pass over materialised buckets). Kept as the property-test
+    /// oracle for the fused pipeline; non-QSGD arms fall through to
+    /// [`Self::build`].
+    pub fn build_two_phase(&self, n: usize) -> Box<dyn Compressor> {
+        match *self {
             CompressorSpec::Qsgd { bits, bucket, norm, regime } => Box::new(QsgdCompressor {
                 s: quant::levels_for_bits(bits),
                 bucket,
                 norm,
                 regime,
             }),
-            CompressorSpec::OneBit { column } => Box::new(quant::onebit::OneBitSgd::new(n, column)),
-            CompressorSpec::TernGrad { bucket } => Box::new(quant::terngrad::TernGrad::new(bucket)),
+            _ => self.build(n),
         }
     }
 

@@ -9,11 +9,16 @@
 //! model); with `double_buffer` the per-step total is
 //! `max(compute, communication)` as in the paper's overlapped pipeline.
 //!
-//! Workers are time-multiplexed on the driver thread (PJRT handles are
-//! !Send); cluster parallelism is accounted in *virtual* time. Because
-//! decoding is deterministic, each message is decoded once and the decoded
-//! gradient is shared — mathematically identical to every worker decoding
-//! its own copy, which per-step parameter-consistency checks enforce.
+//! Gradient *computation* is time-multiplexed on the driver thread (PJRT
+//! handles are !Send); cluster parallelism is accounted in *virtual* time.
+//! The K Encode jobs, however, are pure Rust with per-worker state, so they
+//! run concurrently on the scoped pool ([`crate::collectives::par_encode`])
+//! — bit-identical bytes to a sequential pass, since each worker owns its
+//! `Xoshiro256` stream. Because decoding is deterministic, each message is
+//! decoded once (concurrently, merged in fixed order —
+//! [`crate::collectives::par_decode_mean`]) and the decoded gradient is
+//! shared — mathematically identical to every worker decoding its own copy,
+//! which per-step parameter-consistency checks enforce.
 
 use anyhow::Result;
 
@@ -158,13 +163,16 @@ impl SyncTrainer {
             }
             breakdown.compute += VTime(cfg.cost.step_compute_s(source.flops_fwd_per_step(), 1));
 
-            // 2. encode (parallel across workers in virtual time)
-            let mut messages = Vec::with_capacity(cfg.workers);
-            for (w, grad) in grads.iter().enumerate() {
-                let worker = &mut workers[w];
-                let msg = worker.compressor.compress(grad, &mut worker.rng);
+            // 2. encode — K independent fused quantize+code jobs on the
+            // scoped pool (wall-clock parallelism; virtual time still
+            // charges one overlapped encode pass). Per-worker compressor
+            // state and RNG streams keep the bytes bit-identical to a
+            // sequential loop.
+            let messages = collectives::par_encode(&mut workers, |w, worker: &mut Worker| {
+                worker.compressor.compress(&grads[w], &mut worker.rng)
+            });
+            for msg in &messages {
                 wire.record(msg.len(), n);
-                messages.push(msg);
             }
             breakdown.encode += VTime(cfg.cost.encode_s(n));
 
@@ -173,12 +181,14 @@ impl SyncTrainer {
             breakdown.transfer += bc.time;
 
             // 4. decode + average (decode each message once; see module doc).
-            // Fused decode-into-accumulator — O(nnz) per sparse message.
-            let mut mean_grad = vec![0.0f32; n];
+            // Fused decode-into-accumulator — O(nnz) per sparse message —
+            // with message groups decoded concurrently and merged in fixed
+            // order, so the mean is deterministic.
             let alpha = 1.0 / cfg.workers as f32;
-            for msg in &bc.messages {
-                workers[0].compressor.decompress_add(msg, alpha, &mut mean_grad)?;
-            }
+            let decoder = &workers[0].compressor;
+            let mean_grad = collectives::par_decode_mean(&bc.messages, n, alpha, |msg, a, acc| {
+                decoder.decompress_add(msg, a, acc)
+            })?;
             breakdown.decode += VTime(cfg.cost.decode_s(n, cfg.workers));
 
             // 5. apply identical update on every worker

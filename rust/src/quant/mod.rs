@@ -149,8 +149,10 @@ pub fn variance_bound(d: usize, s: u32) -> f64 {
 
 /// A gradient compressor as plugged into the coordinator's exchange step
 /// (Algorithm 1 lines 3/7). Implementations may be stateful (1BitSGD keeps
-/// per-worker error-feedback residuals).
-pub trait Compressor: Send {
+/// per-worker error-feedback residuals). `Send + Sync` so K per-worker
+/// instances encode on the scoped pool and one shared instance serves the
+/// parallel decode path (all `&self` methods are read-only).
+pub trait Compressor: Send + Sync {
     /// Encode `grad` into a wire message.
     fn compress(&mut self, grad: &[f32], rng: &mut dyn rand_core::RngCore) -> Vec<u8>;
     /// Decode a peer's message back into a dense gradient of length `n`.

@@ -69,36 +69,41 @@ pub fn quantize_bucket(v: &[f32], s: u32, norm: Norm, rng: &mut dyn RngCore) -> 
     QuantBucket { scale, levels }
 }
 
-/// Hot-path bucket quantizer over pre-drawn random words: one `fill_bytes`
-/// virtual call per bucket instead of one `next_u32` per coordinate (the
-/// per-coordinate dyn dispatch was ~40% of quantize time — EXPERIMENTS §Perf).
+/// Allocation-free hot-path bucket quantizer over pre-drawn random words:
+/// one `fill_bytes` virtual call per bucket instead of one `next_u32` per
+/// coordinate (the per-coordinate dyn dispatch was ~40% of quantize time —
+/// EXPERIMENTS §Perf). Writes signed levels into `levels` and returns the
+/// transmitted scale (0.0 for degenerate buckets). This is the level
+/// assignment the fused encode pipeline ([`crate::coding::pipeline`])
+/// streams from, so it must stay bit-identical to [`quantize_bucket`].
 #[inline]
-fn quantize_bucket_from_words(v: &[f32], words: &[u8], s: u32, norm: Norm) -> QuantBucket {
+pub fn quantize_bucket_into(v: &[f32], words: &[u8], s: u32, norm: Norm, levels: &mut [i32]) -> f32 {
     debug_assert_eq!(words.len(), v.len() * 4);
+    debug_assert_eq!(levels.len(), v.len());
     let scale = norm.scale(v);
     if scale <= 0.0 || !scale.is_finite() {
-        return QuantBucket { scale: 0.0, levels: vec![0; v.len()] };
+        levels.fill(0);
+        return 0.0;
     }
     let k = s as f32 / scale;
     let smax = s as f32;
-    let levels = v
-        .iter()
-        .zip(words.chunks_exact(4))
-        .map(|(&x, c)| {
-            let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-            let u = (word >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
-            let r = (x.abs() * k).min(smax);
-            // r ≥ 0 ⇒ truncation == floor, and r ≤ s keeps it in i32 range
-            let lo = r as i32;
-            let p = r - lo as f32;
-            let lev = lo + ((u < p) as i32);
-            if x.is_sign_negative() {
-                -lev
-            } else {
-                lev
-            }
-        })
-        .collect();
+    for ((l, &x), c) in levels.iter_mut().zip(v).zip(words.chunks_exact(4)) {
+        let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        let u = (word >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
+        let r = (x.abs() * k).min(smax);
+        // r ≥ 0 ⇒ truncation == floor, and r ≤ s keeps it in i32 range
+        let lo = r as i32;
+        let p = r - lo as f32;
+        let lev = lo + ((u < p) as i32);
+        *l = if x.is_sign_negative() { -lev } else { lev };
+    }
+    scale
+}
+
+#[inline]
+fn quantize_bucket_from_words(v: &[f32], words: &[u8], s: u32, norm: Norm) -> QuantBucket {
+    let mut levels = vec![0i32; v.len()];
+    let scale = quantize_bucket_into(v, words, s, norm, &mut levels);
     QuantBucket { scale, levels }
 }
 

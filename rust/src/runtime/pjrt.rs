@@ -1,0 +1,176 @@
+//! The real PJRT-backed runtime (requires the `xla` feature and the
+//! vendored `xla` / xla_extension crate).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5 64-bit-id protos; the text parser
+//! reassigns ids).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{self, Manifest};
+
+/// Output tensor type (re-exported so callers need not name the xla crate).
+pub type Literal = xla::Literal;
+
+/// A host-side input tensor.
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl Input<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Input::F32(data, shape) => {
+                anyhow::ensure!(
+                    data.len() == shape.iter().product::<usize>(),
+                    "f32 input length {} != shape {:?}",
+                    data.len(),
+                    shape
+                );
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    bytes,
+                )?
+            }
+            Input::I32(data, shape) => {
+                anyhow::ensure!(
+                    data.len() == shape.iter().product::<usize>(),
+                    "i32 input length {} != shape {:?}",
+                    data.len(),
+                    shape
+                );
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// The runtime: one PJRT CPU client plus an executable cache.
+///
+/// PJRT handles are raw pointers (`!Send`); the coordinator owns one runtime
+/// on its driver thread and time-multiplexes simulated workers over it —
+/// parallelism across simulated devices is accounted in virtual time by
+/// `simnet`, not wall time (see DESIGN.md).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over the given artifacts directory.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory (env `QSGD_ARTIFACTS` or repo-relative).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(artifact::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for `name`.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&art.path)
+            .with_context(|| format!("loading {}", art.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name`; returns the flattened tuple elements.
+    /// (All our graphs are lowered with `return_tuple=True`.)
+    pub fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Literal>> {
+        let art = self.manifest.get(name)?;
+        anyhow::ensure!(
+            inputs.len() == art.inputs.len(),
+            "artifact '{name}' expects {} inputs, got {}",
+            art.inputs.len(),
+            inputs.len()
+        );
+        let exe = self.load(name)?;
+        let lits = inputs.iter().map(|i| i.to_literal()).collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Convenience: run a `(params, *batch) -> (loss, grad)` artifact.
+    pub fn grad(&self, name: &str, params: &[f32], batch: &[Input]) -> Result<(f32, Vec<f32>)> {
+        let mut inputs: Vec<Input> = Vec::with_capacity(batch.len() + 1);
+        let pshape = [params.len()];
+        inputs.push(Input::F32(params, &pshape));
+        inputs.extend(batch.iter().map(reborrow));
+        let out = self.execute(name, &inputs)?;
+        anyhow::ensure!(out.len() == 2, "grad artifact must return (loss, grad)");
+        let loss = out[0].to_vec::<f32>()?[0];
+        let grad = out[1].to_vec::<f32>()?;
+        Ok((loss, grad))
+    }
+
+    /// Convenience: run a fused `(params, uniforms, *batch) -> (loss, qgrad,
+    /// scales)` artifact (the Layer-1 Pallas kernel runs inside the graph).
+    pub fn grad_q(
+        &self,
+        name: &str,
+        params: &[f32],
+        uniforms: &[f32],
+        batch: &[Input],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let mut inputs: Vec<Input> = Vec::with_capacity(batch.len() + 2);
+        let pshape = [params.len()];
+        let ushape = [uniforms.len()];
+        inputs.push(Input::F32(params, &pshape));
+        inputs.push(Input::F32(uniforms, &ushape));
+        inputs.extend(batch.iter().map(reborrow));
+        let out = self.execute(name, &inputs)?;
+        anyhow::ensure!(out.len() == 3, "grad_q artifact must return (loss, qgrad, scales)");
+        let loss = out[0].to_vec::<f32>()?[0];
+        let qgrad = out[1].to_vec::<f32>()?;
+        let scales = out[2].to_vec::<f32>()?;
+        Ok((loss, qgrad, scales))
+    }
+}
+
+fn reborrow<'a>(i: &'a Input) -> Input<'a> {
+    match i {
+        Input::F32(d, s) => Input::F32(d, s),
+        Input::I32(d, s) => Input::I32(d, s),
+    }
+}
+
+// Integration tests that execute real artifacts live in rust/tests/
+// (they require `make artifacts` to have run).

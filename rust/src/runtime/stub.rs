@@ -1,0 +1,84 @@
+//! API-compatible stand-in for the PJRT runtime (default build, no `xla`
+//! feature). Constructors fail with a descriptive error; every caller in
+//! the tree goes through `Runtime::new`/`from_default_dir` and handles the
+//! `Err`, and the integration tests skip when `manifest.json` is absent, so
+//! the stub's execute paths are never reached.
+
+use anyhow::{bail, Result};
+
+use super::artifact::{self, Manifest};
+
+/// A host-side input tensor (mirrors `pjrt::Input`).
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// Opaque output tensor (mirrors `xla::Literal`'s used surface).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        bail!("PJRT runtime unavailable: built without the `xla` feature")
+    }
+}
+
+/// Stub runtime: construction always fails (there is no PJRT client to
+/// build), with an error that tells the user how to get the real one.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        bail!(
+            "PJRT runtime unavailable: this binary was built without the `xla` \
+             feature (the offline toolchain does not vendor the xla crate). \
+             Rebuild with `--features xla` in an environment that provides it."
+        )
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(artifact::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[Input]) -> Result<Vec<Literal>> {
+        bail!("PJRT runtime unavailable (stub build)")
+    }
+
+    pub fn grad(&self, _name: &str, _params: &[f32], _batch: &[Input]) -> Result<(f32, Vec<f32>)> {
+        bail!("PJRT runtime unavailable (stub build)")
+    }
+
+    pub fn grad_q(
+        &self,
+        _name: &str,
+        _params: &[f32],
+        _uniforms: &[f32],
+        _batch: &[Input],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        bail!("PJRT runtime unavailable (stub build)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_fails_with_guidance() {
+        let err = Runtime::from_default_dir().err().expect("stub must fail");
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

@@ -1,8 +1,10 @@
 //! Offline-environment substrates: PRNG + distributions ([`rng`]), a minimal
-//! JSON parser ([`json`]), summary statistics ([`stats`]), and a small
-//! property-testing harness ([`check`]).
+//! JSON parser ([`json`]), summary statistics ([`stats`]), a small
+//! property-testing harness ([`check`]), and a dependency-free scoped
+//! thread pool ([`par`]).
 
 pub mod check;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,108 @@
+//! Dependency-free scoped thread pool: parallel indexed maps over slices.
+//!
+//! The coordinator runs K simulated workers whose encode/decode jobs are
+//! fully independent (per-worker compressor state and RNG streams), so a
+//! plain fork/join over `std::thread::scope` is all the parallelism the hot
+//! path needs. The offline build vendors neither rayon nor crossbeam; this
+//! module is the substrate `collectives` and the coordinator loops build on.
+//! Work is split into contiguous chunks in index order, so results (and any
+//! floating-point reduction built on them) are deterministic and independent
+//! of thread scheduling.
+
+/// Upper bound on useful worker threads for this process.
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parallel indexed map over a mutable slice: `out[i] = f(i, &mut items[i])`.
+/// Results come back in item order. Falls back to a sequential loop for
+/// zero/one items or single-core hosts.
+pub fn par_map_mut<T, R, F>(items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = max_threads().min(n);
+    if threads <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        for (ci, (items_c, out_c)) in
+            items.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()
+        {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, (t, o)) in items_c.iter_mut().zip(out_c.iter_mut()).enumerate() {
+                    *o = Some(f(ci * chunk + j, t));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map_mut fills every slot")).collect()
+}
+
+/// Parallel indexed map over a shared slice: `out[i] = f(i, &items[i])`.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = max_threads().min(n);
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        for (ci, (items_c, out_c)) in items.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, (t, o)) in items_c.iter().zip(out_c.iter_mut()).enumerate() {
+                    *o = Some(f(ci * chunk + j, t));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map fills every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_mut_preserves_order_and_mutates() {
+        let mut v: Vec<u64> = (0..257).collect();
+        let out = par_map_mut(&mut v, |i, x| {
+            *x += 1;
+            (i as u64) * 2
+        });
+        assert_eq!(out, (0..257).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(v[0], 1);
+        assert_eq!(v[256], 257);
+    }
+
+    #[test]
+    fn map_matches_sequential() {
+        let v: Vec<i64> = (0..100).map(|i| i * 7 - 50).collect();
+        let par = par_map(&v, |i, x| x * x + i as i64);
+        let seq: Vec<i64> = v.iter().enumerate().map(|(i, x)| x * x + i as i64).collect();
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut e: Vec<u8> = vec![];
+        assert!(par_map_mut(&mut e, |_, _| 0u8).is_empty());
+        let mut one = vec![5u8];
+        assert_eq!(par_map_mut(&mut one, |i, x| (*x as usize) + i), vec![5]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Tentpole invariants of the fused quantize→encode pipeline:
+//!
+//! * wire bytes **bit-identical** to the two-phase quantize-then-encode
+//!   oracle across regimes (sparse/dense/auto), bucket sizes, norms and
+//!   `s ∈ {1, 4, 15, 255}` — same RNG stream in, same bytes out;
+//! * scratch reuse across many gradients of varying size never leaks state
+//!   into the stream;
+//! * `quantize_bucket` is statistically unbiased (Lemma 3.1(i) at the
+//!   bucket level — the property the whole pipeline inherits).
+
+use qsgd::coding::gradient;
+use qsgd::coding::gradient::Regime;
+use qsgd::coding::{FusedQsgd, QsgdCompressor};
+use qsgd::coordinator::CompressorSpec;
+use qsgd::prop_assert;
+use qsgd::quant::{stochastic, Compressor, Norm};
+use qsgd::util::check::forall;
+use qsgd::util::rng::{self, Xoshiro256};
+
+#[test]
+fn prop_fused_wire_bytes_bit_identical_to_two_phase() {
+    forall("fused-vs-two-phase", 140, 4000, |g| {
+        let n = g.usize_in(0, g.size);
+        let v = g.f32_vec(n);
+        let s = [1u32, 4, 15, 255][g.usize_in(0, 3)];
+        let bucket = [16usize, 64, 512, 4096, usize::MAX][g.usize_in(0, 4)];
+        let norm = if g.bool() { Norm::L2 } else { Norm::Max };
+        let regime = match g.usize_in(0, 2) {
+            0 => None,
+            1 => Some(Regime::Sparse),
+            _ => Some(Regime::Dense),
+        };
+        let seed = (g.u32() as u64) << 16 | n as u64;
+        let mut oracle = QsgdCompressor { s, bucket, norm, regime };
+        let mut fused = FusedQsgd::new(s, bucket, norm, regime);
+        let a = oracle.compress(&v, &mut Xoshiro256::from_u64(seed));
+        let b = fused.compress(&v, &mut Xoshiro256::from_u64(seed));
+        prop_assert!(
+            a == b,
+            "wire bytes differ: n={n} s={s} bucket={bucket} {norm:?} {regime:?}"
+        );
+        // both frames decode to the same quantized gradient
+        let qa = gradient::decode(&a).map_err(|e| e.to_string())?;
+        prop_assert!(qa.n == n, "decoded length");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spec_built_fused_matches_two_phase_oracle() {
+    // Through the coordinator's factory (the path the trainers take).
+    forall("spec-fused-oracle", 60, 3000, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let v = g.f32_vec(n);
+        let spec = [
+            CompressorSpec::qsgd_2bit(),
+            CompressorSpec::qsgd_4bit(),
+            CompressorSpec::qsgd_8bit(),
+        ][g.usize_in(0, 2)]
+        .clone();
+        let seed = g.u32() as u64;
+        let mut fused = spec.build(n);
+        let mut oracle = spec.build_two_phase(n);
+        let a = fused.compress(&v, &mut Xoshiro256::from_u64(seed));
+        let b = oracle.compress(&v, &mut Xoshiro256::from_u64(seed));
+        prop_assert!(a == b, "{}: build() and build_two_phase() bytes differ", spec.label());
+        // decompress_add agreement on the same accumulator
+        let mut acc_a = vec![0.5f32; n];
+        let mut acc_b = vec![0.5f32; n];
+        fused.decompress_add(&a, 0.25, &mut acc_a).map_err(|e| e.to_string())?;
+        oracle.decompress_add(&b, 0.25, &mut acc_b).map_err(|e| e.to_string())?;
+        prop_assert!(acc_a == acc_b, "decode-accumulate differs");
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_scratch_reuse_stays_bit_identical_across_varied_lengths() {
+    let mut fused = FusedQsgd::new(7, 512, Norm::Max, None);
+    let mut oracle = QsgdCompressor { s: 7, bucket: 512, norm: Norm::Max, regime: None };
+    let mut ra = Xoshiro256::from_u64(42);
+    let mut rb = Xoshiro256::from_u64(42);
+    let mut data_rng = Xoshiro256::from_u64(1);
+    // shrink after growing: stale scratch beyond the live prefix must never
+    // leak into the frame
+    for (round, base) in [0usize, 1, 5, 511, 512, 513, 6000, 100, 512, 3].iter().enumerate() {
+        let n = base + round;
+        let v: Vec<f32> = (0..n).map(|_| rng::normal_f32(&mut data_rng)).collect();
+        let a = oracle.compress(&v, &mut ra);
+        let b = fused.compress(&v, &mut rb);
+        assert_eq!(a, b, "round {round} (n={n})");
+    }
+}
+
+#[test]
+fn fused_l2_and_forced_regimes_match_oracle() {
+    // The streaming (static-regime) code path, explicitly.
+    let mut data_rng = Xoshiro256::from_u64(2);
+    let v: Vec<f32> = (0..5000).map(|_| rng::normal_f32(&mut data_rng)).collect();
+    for (s, bucket, norm, regime) in [
+        (1u32, usize::MAX, Norm::L2, None),          // paper §3.1, sparse rule
+        (255, 256, Norm::L2, None),                  // dense rule
+        (4, 512, Norm::Max, Some(Regime::Sparse)),   // forced sparse
+        (4, 512, Norm::Max, Some(Regime::Dense)),    // forced dense
+        (15, 64, Norm::L2, Some(Regime::Sparse)),
+    ] {
+        let mut oracle = QsgdCompressor { s, bucket, norm, regime };
+        let mut fused = FusedQsgd::new(s, bucket, norm, regime);
+        let a = oracle.compress(&v, &mut Xoshiro256::from_u64(7));
+        let b = fused.compress(&v, &mut Xoshiro256::from_u64(7));
+        assert_eq!(a, b, "s={s} bucket={bucket} {norm:?} {regime:?}");
+    }
+}
+
+#[test]
+fn quantize_bucket_is_statistically_unbiased() {
+    // Lemma 3.1(i) at bucket granularity: the mean of dequantized samples
+    // converges to the input coordinate-wise, for both norms.
+    let mut rng = Xoshiro256::from_u64(9);
+    let v: Vec<f32> = (0..48).map(|_| rng::normal_f32(&mut rng)).collect();
+    let s = 3u32;
+    let trials = 6000usize;
+    for norm in [Norm::L2, Norm::Max] {
+        let mut acc = vec![0.0f64; v.len()];
+        let mut out = vec![0.0f32; v.len()];
+        for _ in 0..trials {
+            let b = stochastic::quantize_bucket(&v, s, norm, &mut rng);
+            b.dequantize_into(s, &mut out);
+            for (a, &x) in acc.iter_mut().zip(&out) {
+                *a += x as f64;
+            }
+        }
+        let scale = norm.scale(&v) as f64;
+        // per-coordinate stderr ≤ (scale/s)/(2·√trials); allow 10 stderr
+        let tol = 5.0 * scale / (s as f64 * (trials as f64).sqrt());
+        for (i, (&a, &x)) in acc.iter().zip(&v).enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - x as f64).abs() < tol,
+                "{norm:?} coordinate {i} biased: mean {mean} vs {x} (tol {tol})"
+            );
+        }
+    }
+}
