@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
         ("1BitSGD", EpochArm::onebit()),
         ("QSGD 2bit", EpochArm::qsgd(2, 64)),
         ("QSGD 4bit", EpochArm::qsgd(4, 512)),
+        ("NUQ 4bit", EpochArm::nuqsgd(4, 512)),
     ];
 
     for net in &nets {

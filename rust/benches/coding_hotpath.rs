@@ -15,7 +15,7 @@ use qsgd::bench::{section, Bench};
 use qsgd::coding::gradient::{self, Regime};
 use qsgd::coding::FusedEncoder;
 use qsgd::coordinator::CompressorSpec;
-use qsgd::quant::{stochastic, Compressor, Norm};
+use qsgd::quant::{stochastic, Compressor, LevelGrid, Norm};
 use qsgd::util::par;
 use qsgd::util::rng::{self, Xoshiro256};
 
@@ -121,6 +121,47 @@ fn main() {
     println!("  steady-state heap allocations over 16 fused encodes: {allocs} (must be 0)");
     assert_eq!(allocs, 0, "fused encode loop must not allocate in steady state");
 
+    section("NUQSGD (exponential grid) through the fused pipeline");
+    let nu_spec = CompressorSpec::nuqsgd_4bit();
+    let mut nu_two = nu_spec.build_two_phase(n);
+    let mut r = Xoshiro256::from_u64(6);
+    let s_nu_two = b.run("two-phase NUQSGD 4-bit/512", || nu_two.compress(&grad, &mut r));
+    s_nu_two.report_throughput(coords * 4.0);
+    let mut nu_fused = FusedEncoder::with_grid(LevelGrid::exponential(7), 512, Norm::Max, None);
+    nu_fused.reserve(n * 2);
+    let mut nu_out: Vec<u8> = Vec::with_capacity(n * 2);
+    let mut r = Xoshiro256::from_u64(6);
+    let s_nu_fused = b.run("fused NUQSGD encode_into 4-bit/512", || {
+        nu_fused.encode_into(&grad, &mut r, &mut nu_out);
+        nu_out.len()
+    });
+    s_nu_fused.report_throughput(coords * 4.0);
+    println!(
+        "  NUQSGD fused vs two-phase, single thread: {:.2}x",
+        s_nu_two.median() / s_nu_fused.median()
+    );
+    // Bit-identity on the wire, same seeds.
+    {
+        let mut a = nu_spec.build_two_phase(n);
+        let mut c = nu_spec.build(n);
+        assert_eq!(
+            a.compress(&grad, &mut Xoshiro256::from_u64(7)),
+            c.compress(&grad, &mut Xoshiro256::from_u64(7)),
+            "NUQSGD fused wire bytes diverged from two-phase"
+        );
+    }
+    // Zero-allocation steady state for the non-uniform grid path too: the
+    // grid's point table is Arc-shared scratch, so the fused loop must stay
+    // off the heap exactly like the uniform path.
+    nu_fused.encode_into(&grad, &mut r, &mut nu_out);
+    let before = alloc_count();
+    for _ in 0..16 {
+        nu_fused.encode_into(&grad, &mut r, &mut nu_out);
+    }
+    let allocs = alloc_count() - before;
+    println!("  steady-state heap allocations over 16 fused NUQSGD encodes: {allocs} (must be 0)");
+    assert_eq!(allocs, 0, "fused NUQSGD encode loop must not allocate in steady state");
+
     section("8-worker parallel encode (acceptance: ≥2x vs sequential two-phase)");
     const K: usize = 8;
     struct Lane {
@@ -169,6 +210,7 @@ fn main() {
         CompressorSpec::qsgd_2bit(),
         CompressorSpec::qsgd_4bit(),
         CompressorSpec::qsgd_8bit(),
+        CompressorSpec::nuqsgd_4bit(),
         CompressorSpec::OneBit { column: 512 },
         CompressorSpec::TernGrad { bucket: 512 },
     ] {

@@ -4,7 +4,7 @@
 use rand_core::RngCore;
 
 use super::gradient::{self, Regime};
-use crate::quant::{self, Compressor, Norm};
+use crate::quant::{self, Compressor, LevelGrid, Norm};
 
 /// QSGD Encode/Decode (quantize → entropy-code). Stateless (the paper:
 /// "quantization on the fly, without error accumulation").
@@ -57,6 +57,61 @@ impl Compressor for QsgdCompressor {
     fn name(&self) -> String {
         let b = (self.s + 1).next_power_of_two().trailing_zeros() + 1;
         format!("qsgd(s={},~{}bit,bucket={},{:?})", self.s, b, self.bucket, self.norm)
+    }
+}
+
+/// Two-phase NUQSGD / arbitrary-grid compressor: quantize onto a
+/// [`LevelGrid`] into materialised buckets, then encode as a separate pass.
+/// Mirrors [`QsgdCompressor`] exactly — it exists as the property-test
+/// *oracle* for the fused grid pipeline ([`crate::coding::FusedQsgd`]),
+/// which must emit bit-identical wire bytes for every grid.
+#[derive(Debug, Clone)]
+pub struct NuqsgdCompressor {
+    pub grid: LevelGrid,
+    /// Bucket size `d` (`usize::MAX` ⇒ whole-vector scheme).
+    pub bucket: usize,
+    pub norm: Norm,
+    /// `None` ⇒ the paper's regime rule per gradient.
+    pub regime: Option<Regime>,
+}
+
+impl NuqsgdCompressor {
+    /// NUQSGD arm at the same bit budget as [`QsgdCompressor::with_bits`]:
+    /// exponential grid with `2^(b−1) − 1` nonzero levels, max-norm.
+    pub fn with_bits(bits: u32, bucket: usize) -> Self {
+        Self {
+            grid: LevelGrid::exponential(quant::levels_for_bits(bits)),
+            bucket,
+            norm: Norm::Max,
+            regime: None,
+        }
+    }
+
+    pub fn quantize(&self, grad: &[f32], rng: &mut dyn RngCore) -> quant::QuantizedGradient {
+        let bucket = self.bucket.min(grad.len().max(1));
+        quant::stochastic::quantize_grid(grad, &self.grid, bucket, self.norm, rng)
+    }
+}
+
+impl Compressor for NuqsgdCompressor {
+    fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
+        let q = self.quantize(grad, rng);
+        match self.regime {
+            Some(r) => gradient::encode(&q, r),
+            None => gradient::encode_auto(&q),
+        }
+    }
+
+    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        gradient::decode_expecting(msg, n)
+    }
+
+    fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
+        gradient::decode_add_expecting(msg, alpha, acc)
+    }
+
+    fn name(&self) -> String {
+        format!("{}(bucket={},{:?})", self.grid.label(), self.bucket, self.norm)
     }
 }
 

@@ -14,11 +14,11 @@
 //! (`s² + √d ≤ d/2` ⇒ sparse) and records the choice in a 1-bit flag so the
 //! decoder is self-describing.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::bitstream::{BitReader, BitWriter};
 use super::elias;
-use crate::quant::{Norm, QuantBucket, QuantizedGradient};
+use crate::quant::{LevelGrid, Norm, QuantBucket, QuantizedGradient};
 
 /// Which coding regime a bucket was encoded with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,15 +109,22 @@ pub fn decode_bucket_sparse_with(
     let scale = r.read_f32()?;
     let nnz = lut.decode0(r)? as usize;
     ensure!(nnz <= d, "nnz {nnz} exceeds bucket size {d}");
+    // every nonzero costs ≥ 3 bits (gap + sign + magnitude) — reject
+    // length-lying headers before touching the levels
+    ensure!((nnz as u64) * 3 <= r.bits_remaining(), "nnz exceeds remaining stream");
     let mut levels = vec![0i32; d];
     let mut prev: i64 = -1;
     for _ in 0..nnz {
-        let gap = lut.decode(r)? as i64;
-        let idx = prev + gap;
+        let gap = lut.decode(r)?;
+        // gaps are 1-based positions within the bucket; a hostile stream can
+        // encode anything up to u64::MAX, so bound before the i64 cast
+        ensure!(gap >= 1 && gap <= d as u64, "gap {gap} out of bucket");
+        let idx = prev + gap as i64;
         ensure!(idx >= 0 && (idx as usize) < d, "nonzero index out of bucket");
         let neg = r.read_bit()?;
         let mag = lut.decode(r)?;
-        ensure!(mag <= s as u64, "level {mag} exceeds s={s}");
+        // the sparse encoder only emits nonzeros, so mag = 0 is malformed
+        ensure!(mag >= 1 && mag <= s as u64, "level {mag} out of range (s={s})");
         levels[idx as usize] = if neg { -(mag as i32) } else { mag as i32 };
         prev = idx;
     }
@@ -180,6 +187,9 @@ pub fn decode_bucket_dense_with(
     lut: &elias::DecodeLut,
 ) -> Result<QuantBucket> {
     let scale = r.read_f32()?;
+    // every coordinate costs ≥ 1 bit — reject length-lying headers before
+    // the d-sized allocation (a hostile header cannot force an OOM)
+    ensure!(d as u64 <= r.bits_remaining(), "bucket size exceeds remaining stream");
     let mut levels = Vec::with_capacity(d);
     for _ in 0..d {
         let mag = lut.decode0(r)?;
@@ -203,13 +213,36 @@ pub fn decode_bucket_dense_with(
 /// server may receive messages from heterogeneously-configured workers).
 ///
 /// Layout: magic(8) | version(4) | regime(1) | norm(1) | s via Elias |
-/// n via Elias' | bucket_size via Elias.
+/// n via Elias' | bucket_size via Elias | [v2 only: grid tag via Elias,
+/// then for custom grids the s grid points as raw f32s].
+///
+/// Version 1 is exactly the pre-grid (uniform QSGD) format — uniform frames
+/// are emitted as v1, byte-identical to what PR 1 shipped. Non-uniform
+/// grids bump the version nibble to 2 and append the grid tag, so old
+/// decoders fail loudly on frames they cannot dequantize.
 pub const FRAME_MAGIC: u64 = 0xA5;
 pub const FRAME_VERSION: u64 = 1;
+/// Frame version carrying an in-band [`LevelGrid`] tag.
+pub const FRAME_VERSION_GRID: u64 = 2;
 
-/// Write the self-describing frame header from its raw fields (shared by the
-/// two-phase [`encode`] and the fused [`crate::coding::pipeline`] so both
-/// emit byte-identical frames).
+/// Grid tags in v2 frames.
+const GRID_TAG_EXPONENTIAL: u64 = 1;
+const GRID_TAG_CUSTOM: u64 = 2;
+
+/// Hard ceiling on the dimension a frame header may declare. Protects the
+/// unchecked [`decode`] path from hostile headers that would otherwise drive
+/// gigantic allocations; `decode_expecting`/`decode_add` additionally bound
+/// by the caller's true length. 2^28 coords ≈ 1 GiB of levels, comfortably
+/// above every model shape in `models::zoo`.
+pub const MAX_FRAME_DIM: usize = 1 << 28;
+
+/// Hard ceiling on the declared level count `s` (levels must fit `i32` with
+/// slack; the biggest legitimate `s` is `√n` for the §3.1 scheme).
+pub const MAX_FRAME_S: u64 = 1 << 24;
+
+/// Write the self-describing frame header from its raw fields, uniform-grid
+/// (v1) layout. Shared by the two-phase [`encode`] and the fused
+/// [`crate::coding::pipeline`] so both emit byte-identical frames.
 pub fn write_frame_header(
     w: &mut BitWriter,
     s: u32,
@@ -218,37 +251,101 @@ pub fn write_frame_header(
     norm: Norm,
     regime: Regime,
 ) {
+    write_frame_header_grid(w, &LevelGrid::Uniform { s }, n, bucket_size, norm, regime)
+}
+
+/// Grid-aware frame header: uniform grids emit the v1 layout unchanged;
+/// non-uniform grids emit v2 with the grid described in-band.
+pub fn write_frame_header_grid(
+    w: &mut BitWriter,
+    grid: &LevelGrid,
+    n: usize,
+    bucket_size: usize,
+    norm: Norm,
+    regime: Regime,
+) {
     w.write_bits(FRAME_MAGIC, 8);
-    w.write_bits(FRAME_VERSION, 4);
+    w.write_bits(
+        if grid.is_uniform() { FRAME_VERSION } else { FRAME_VERSION_GRID },
+        4,
+    );
     w.write_bit(matches!(regime, Regime::Sparse));
     w.write_bit(matches!(norm, Norm::Max));
-    elias::encode(w, s as u64);
+    elias::encode(w, grid.s() as u64);
     elias::encode0(w, n as u64);
     elias::encode(w, bucket_size as u64);
+    match grid {
+        LevelGrid::Uniform { .. } => {}
+        LevelGrid::Exponential { .. } => elias::encode(w, GRID_TAG_EXPONENTIAL),
+        LevelGrid::Custom { points } => {
+            elias::encode(w, GRID_TAG_CUSTOM);
+            for &p in points.iter() {
+                w.write_f32(p);
+            }
+        }
+    }
 }
 
 fn write_header(w: &mut BitWriter, g: &QuantizedGradient, regime: Regime) {
-    write_frame_header(w, g.s, g.n, g.bucket_size, g.norm, regime)
+    debug_assert_eq!(g.s, g.grid.s());
+    write_frame_header_grid(w, &g.grid, g.n, g.bucket_size, g.norm, regime)
 }
 
 struct Header {
     regime: Regime,
     norm: Norm,
     s: u32,
+    grid: LevelGrid,
     n: usize,
     bucket_size: usize,
 }
 
 fn read_header(r: &mut BitReader) -> Result<Header> {
     ensure!(r.read_bits(8)? == FRAME_MAGIC, "bad frame magic");
-    ensure!(r.read_bits(4)? == FRAME_VERSION, "unsupported frame version");
+    let version = r.read_bits(4)?;
+    ensure!(
+        version == FRAME_VERSION || version == FRAME_VERSION_GRID,
+        "unsupported frame version {version}"
+    );
     let regime = if r.read_bit()? { Regime::Sparse } else { Regime::Dense };
     let norm = if r.read_bit()? { Norm::Max } else { Norm::L2 };
-    let s = elias::decode(r)? as u32;
-    let n = elias::decode0(r)? as usize;
+    let s64 = elias::decode(r)?;
+    ensure!((1..=MAX_FRAME_S).contains(&s64), "level count {s64} out of range");
+    let s = s64 as u32;
+    let n64 = elias::decode0(r)?;
+    ensure!(n64 <= MAX_FRAME_DIM as u64, "frame dimension {n64} out of range");
+    let n = n64 as usize;
     let bucket_size = elias::decode(r)? as usize;
     ensure!(bucket_size >= 1, "zero bucket size");
-    Ok(Header { regime, norm, s, n, bucket_size })
+    let grid = if version == FRAME_VERSION {
+        LevelGrid::Uniform { s }
+    } else {
+        match elias::decode(r)? {
+            GRID_TAG_EXPONENTIAL => {
+                ensure!(
+                    s <= crate::quant::grid::MAX_EXPONENTIAL_LEVELS,
+                    "exponential grid too deep: s={s}"
+                );
+                LevelGrid::exponential(s)
+            }
+            GRID_TAG_CUSTOM => {
+                ensure!(
+                    s as usize <= crate::quant::grid::MAX_CUSTOM_LEVELS,
+                    "custom grid too large: s={s}"
+                );
+                // 32 bits per point — bound against the stream before
+                // allocating, then re-validate the grid shape end-to-end
+                ensure!(s as u64 * 32 <= r.bits_remaining(), "grid points exceed stream");
+                let mut pts = Vec::with_capacity(s as usize);
+                for _ in 0..s {
+                    pts.push(r.read_f32()?);
+                }
+                LevelGrid::custom(pts)?
+            }
+            tag => bail!("unknown grid tag {tag}"),
+        }
+    };
+    Ok(Header { regime, norm, s, grid, n, bucket_size })
 }
 
 /// Size of the shared encoder codeword table for quantization level `s`:
@@ -296,12 +393,23 @@ pub fn encode_auto(g: &QuantizedGradient) -> Vec<u8> {
     encode(g, regime)
 }
 
-/// Decode a frame produced by [`encode`]/[`encode_auto`].
+/// Decode a frame produced by [`encode`]/[`encode_auto`]. The declared
+/// dimension is capped at [`MAX_FRAME_DIM`]; when the expected length is
+/// known, prefer [`decode_expecting`], which bounds hostile headers by it.
 pub fn decode(bytes: &[u8]) -> Result<QuantizedGradient> {
+    decode_with_limit(bytes, MAX_FRAME_DIM)
+}
+
+/// [`decode`] with a caller-supplied ceiling on the declared dimension —
+/// the defense `decode_expecting` applies before any size-proportional
+/// allocation happens.
+pub fn decode_with_limit(bytes: &[u8], max_n: usize) -> Result<QuantizedGradient> {
     let mut r = BitReader::new(bytes);
     let h = read_header(&mut r)?;
+    ensure!(h.n <= max_n, "declared dimension {} exceeds limit {max_n}", h.n);
     let lut = decode_lut();
-    let mut buckets = Vec::with_capacity(h.n.div_ceil(h.bucket_size));
+    // capacity clamp: a hostile header must not size this by bucket count
+    let mut buckets = Vec::with_capacity(h.n.div_ceil(h.bucket_size).min(1024));
     let mut remaining = h.n;
     while remaining > 0 {
         let d = remaining.min(h.bucket_size);
@@ -312,7 +420,14 @@ pub fn decode(bytes: &[u8]) -> Result<QuantizedGradient> {
         buckets.push(b);
         remaining -= d;
     }
-    Ok(QuantizedGradient { s: h.s, bucket_size: h.bucket_size, norm: h.norm, n: h.n, buckets })
+    Ok(QuantizedGradient {
+        s: h.s,
+        grid: h.grid,
+        bucket_size: h.bucket_size,
+        norm: h.norm,
+        n: h.n,
+        buckets,
+    })
 }
 
 /// Process-wide decoder prefix table (immutable after first use).
@@ -334,25 +449,36 @@ pub fn decode_add(bytes: &[u8], alpha: f32, acc: &mut [f32]) -> Result<usize> {
     let h = read_header(&mut r)?;
     ensure!(h.n <= acc.len(), "accumulator too small: {} < {}", acc.len(), h.n);
     let lut = decode_lut();
+    // non-uniform grids dequantize via the point table; `mag ≥ 1` is
+    // enforced below before indexing it
+    let pts = h.grid.nonzero_points();
     let mut off = 0usize;
     let mut remaining = h.n;
     while remaining > 0 {
         let d = remaining.min(h.bucket_size);
         let scale = r.read_f32()?;
         let k = alpha * scale / h.s as f32;
+        let ka = alpha * scale;
+        let value = |mag: u64| -> f32 {
+            match pts {
+                None => mag as f32 * k,
+                Some(p) => ka * p[(mag - 1) as usize],
+            }
+        };
         match h.regime {
             Regime::Sparse => {
                 let nnz = lut.decode0(&mut r)? as usize;
                 ensure!(nnz <= d, "nnz {nnz} exceeds bucket size {d}");
                 let mut prev: i64 = -1;
                 for _ in 0..nnz {
-                    let gap = lut.decode(&mut r)? as i64;
-                    let idx = prev + gap;
+                    let gap = lut.decode(&mut r)?;
+                    ensure!(gap >= 1 && gap <= d as u64, "gap {gap} out of bucket");
+                    let idx = prev + gap as i64;
                     ensure!(idx >= 0 && (idx as usize) < d, "nonzero index out of bucket");
                     let neg = r.read_bit()?;
                     let mag = lut.decode(&mut r)?;
-                    ensure!(mag <= h.s as u64, "level exceeds s");
-                    let val = mag as f32 * k;
+                    ensure!(mag >= 1 && mag <= h.s as u64, "level out of range");
+                    let val = value(mag);
                     acc[off + idx as usize] += if neg { -val } else { val };
                     prev = idx;
                 }
@@ -363,7 +489,7 @@ pub fn decode_add(bytes: &[u8], alpha: f32, acc: &mut [f32]) -> Result<usize> {
                     ensure!(mag <= h.s as u64, "level exceeds s");
                     if mag != 0 {
                         let neg = r.read_bit()?;
-                        let val = mag as f32 * k;
+                        let val = value(mag);
                         acc[off + j] += if neg { -val } else { val };
                     }
                 }
@@ -379,7 +505,9 @@ pub fn decode_add(bytes: &[u8], alpha: f32, acc: &mut [f32]) -> Result<usize> {
 /// caller's expectation — the shared decompress body of both the fused and
 /// two-phase compressors.
 pub fn decode_expecting(msg: &[u8], n: usize) -> Result<Vec<f32>> {
-    let q = decode(msg)?;
+    // bound hostile headers by the *expected* length before any
+    // size-proportional allocation
+    let q = decode_with_limit(msg, n)?;
     ensure!(q.n == n, "decoded length {} != expected {n}", q.n);
     Ok(q.dequantize())
 }

@@ -9,5 +9,5 @@ pub mod gradient;
 pub mod pipeline;
 
 mod compressor;
-pub use compressor::QsgdCompressor;
+pub use compressor::{NuqsgdCompressor, QsgdCompressor};
 pub use pipeline::{FusedEncoder, FusedQsgd};

@@ -33,12 +33,18 @@ use rand_core::RngCore;
 use super::bitstream::BitWriter;
 use super::elias::EliasLut;
 use super::gradient::{self, Regime};
-use crate::quant::{self, Compressor, Norm};
+use crate::quant::{self, Compressor, LevelGrid, Norm};
 
-/// Reusable per-worker fused quantize+encode state.
+/// Reusable per-worker fused quantize+encode state, generic over the
+/// quantization [`LevelGrid`] (uniform QSGD, NUQSGD exponential, custom).
 pub struct FusedEncoder {
-    /// Quantization levels `s ≥ 1`.
+    /// Quantization levels `s ≥ 1` (`== grid.s()`, kept for display and
+    /// LUT sizing).
     pub s: u32,
+    /// Which level grid coordinates round onto. Carried in the scratch
+    /// state; non-uniform point tables are `Arc`-shared, so the encode loop
+    /// stays allocation-free.
+    pub grid: LevelGrid,
     /// Bucket size `d` (`usize::MAX` ⇒ whole-vector §3.1 scheme).
     pub bucket: usize,
     pub norm: Norm,
@@ -59,9 +65,16 @@ pub struct FusedEncoder {
 
 impl FusedEncoder {
     pub fn new(s: u32, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
-        assert!(s >= 1 && bucket >= 1);
+        Self::with_grid(LevelGrid::uniform(s), bucket, norm, regime)
+    }
+
+    /// Grid-generic constructor — the fused pipeline as a compressor family.
+    pub fn with_grid(grid: LevelGrid, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
+        assert!(bucket >= 1);
+        let s = grid.s();
         Self {
             s,
+            grid,
             bucket,
             norm,
             regime,
@@ -123,13 +136,13 @@ impl FusedEncoder {
         if self.levels.len() < bucket {
             self.levels.resize(bucket, 0);
         }
-        let Self { writer, words, levels, lut, s, norm, .. } = self;
-        gradient::write_frame_header(writer, *s, grad.len(), bucket, *norm, regime);
+        let Self { writer, words, levels, lut, grid, norm, .. } = self;
+        gradient::write_frame_header_grid(writer, grid, grad.len(), bucket, *norm, regime);
         for c in grad.chunks(bucket) {
             let wds = &mut words[..c.len() * 4];
             rng.fill_bytes(wds);
             let lv = &mut levels[..c.len()];
-            let scale = quant::stochastic::quantize_bucket_into(c, wds, *s, *norm, lv);
+            let scale = quant::stochastic::quantize_bucket_into_grid(c, wds, grid, *norm, lv);
             match regime {
                 Regime::Sparse => gradient::encode_levels_sparse_with(writer, scale, lv, lut),
                 Regime::Dense => gradient::encode_levels_dense_with(writer, scale, lv, lut),
@@ -145,13 +158,13 @@ impl FusedEncoder {
             self.levels.resize(n, 0);
         }
         self.scales.clear();
-        let Self { writer, words, levels, scales, lut, s, norm, .. } = self;
+        let Self { writer, words, levels, scales, lut, s, grid, norm, .. } = self;
         let mut nnz = 0usize;
         for (bi, c) in grad.chunks(bucket).enumerate() {
             let wds = &mut words[..c.len() * 4];
             rng.fill_bytes(wds);
             let lv = &mut levels[bi * bucket..bi * bucket + c.len()];
-            scales.push(quant::stochastic::quantize_bucket_into(c, wds, *s, *norm, lv));
+            scales.push(quant::stochastic::quantize_bucket_into_grid(c, wds, grid, *norm, lv));
             nnz += lv.iter().filter(|&&l| l != 0).count();
         }
         // encode_auto's max-norm rule: dense once ≳25% of levels are nonzero.
@@ -160,7 +173,7 @@ impl FusedEncoder {
         } else {
             gradient::preferred_regime(*s, bucket)
         };
-        gradient::write_frame_header(writer, *s, n, bucket, *norm, regime);
+        gradient::write_frame_header_grid(writer, grid, n, bucket, *norm, regime);
         for (bi, c) in grad.chunks(bucket).enumerate() {
             let lv = &levels[bi * bucket..bi * bucket + c.len()];
             match regime {
@@ -181,12 +194,28 @@ pub struct FusedQsgd {
 
 impl FusedQsgd {
     pub fn new(s: u32, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
-        Self { enc: FusedEncoder::new(s, bucket, norm, regime) }
+        Self::with_grid(LevelGrid::uniform(s), bucket, norm, regime)
+    }
+
+    /// Grid-generic constructor (NUQSGD exponential grids, custom grids).
+    pub fn with_grid(grid: LevelGrid, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
+        Self { enc: FusedEncoder::with_grid(grid, bucket, norm, regime) }
     }
 
     /// Experiment-style constructor (paper §5: e.g. 4-bit/512, max-norm).
     pub fn with_bits(bits: u32, bucket: usize) -> Self {
         Self::new(quant::levels_for_bits(bits), bucket, Norm::Max, None)
+    }
+
+    /// NUQSGD arm at the same bit budget as `with_bits`: exponential grid
+    /// with `2^(b−1) − 1` nonzero levels.
+    pub fn nuqsgd_with_bits(bits: u32, bucket: usize) -> Self {
+        Self::with_grid(
+            LevelGrid::exponential(quant::levels_for_bits(bits)),
+            bucket,
+            Norm::Max,
+            None,
+        )
     }
 
     /// Theory-style constructor: the §3.1 scheme (2-norm, single bucket).
@@ -216,8 +245,10 @@ impl Compressor for FusedQsgd {
 
     fn name(&self) -> String {
         format!(
-            "qsgd-fused(s={},bucket={},{:?})",
-            self.enc.s, self.enc.bucket, self.enc.norm
+            "{}-fused(bucket={},{:?})",
+            self.enc.grid.label(),
+            self.enc.bucket,
+            self.enc.norm
         )
     }
 }

@@ -225,6 +225,17 @@ mod tests {
     }
 
     #[test]
+    fn async_nuqsgd_converges() {
+        // The self-describing v2 frames (grid tag in-band) flow through the
+        // parameter server exactly like uniform frames.
+        let mut src = source();
+        let r = run(&cfg(4, 400, CompressorSpec::nuqsgd_4bit()), &mut src).unwrap();
+        let first = r.loss.points[0].1;
+        let last = r.loss.tail_mean(3);
+        assert!(last < first * 0.45, "{first} -> {last}");
+    }
+
+    #[test]
     fn staleness_bounded_by_worker_count() {
         let mut src = source();
         let r = run(&cfg(4, 300, CompressorSpec::qsgd_4bit()), &mut src).unwrap();

@@ -48,6 +48,15 @@ impl EpochArm {
         }
     }
 
+    /// NUQSGD arm at the same bit budget as [`Self::qsgd`] — the
+    /// uniform-vs-non-uniform comparison rides the same simulator.
+    pub fn nuqsgd(bits: u32, bucket: usize) -> Self {
+        Self {
+            compressor: CompressorSpec::Nuqsgd { bits, bucket, norm: Norm::Max, regime: None },
+            dense_transport: false,
+        }
+    }
+
     pub fn onebit() -> Self {
         Self { compressor: CompressorSpec::OneBit { column: 512 }, dense_transport: false }
     }
@@ -206,6 +215,25 @@ mod tests {
         let sr = sim(&r, 8, &EpochArm::fp32()).epoch_time() / sim(&r, 8, &EpochArm::qsgd(4, 512)).epoch_time();
         assert!(sa > sr, "alexnet {sa} vs resnet {sr}");
         assert!(sr >= 1.0, "resnet should not slow down: {sr}");
+    }
+
+    #[test]
+    fn nuqsgd_arm_rides_the_same_simulator() {
+        // Uniform-vs-non-uniform at the same bit budget, end to end through
+        // the plan compressor + interconnect model: both compress far below
+        // fp32, and the denser exponential-grid levels stay the same order
+        // of magnitude as the uniform arm on the wire.
+        let net = zoo::alexnet();
+        let q4 = sim(&net, 8, &EpochArm::qsgd(4, 512));
+        let nu4 = sim(&net, 8, &EpochArm::nuqsgd(4, 512));
+        let fp_bytes = net.params() * 4;
+        assert!(nu4.message_bytes * 3 < fp_bytes, "NUQSGD msg {}", nu4.message_bytes);
+        assert!(
+            nu4.message_bytes < q4.message_bytes * 4,
+            "NUQSGD {} vs QSGD {}",
+            nu4.message_bytes,
+            q4.message_bytes
+        );
     }
 
     #[test]

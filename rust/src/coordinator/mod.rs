@@ -19,15 +19,19 @@ pub mod svrg;
 pub mod sync;
 
 use crate::coding::gradient::Regime;
-use crate::coding::{FusedQsgd, QsgdCompressor};
-use crate::quant::{self, Compressor, Norm};
+use crate::coding::{FusedQsgd, NuqsgdCompressor, QsgdCompressor};
+use crate::quant::{self, Compressor, LevelGrid, Norm};
 
 /// Which gradient compression the coordinator applies — mirrors the paper's
-/// experimental arms (32-bit, QSGD b-bit/bucket, 1BitSGD, TernGrad).
+/// experimental arms (32-bit, QSGD b-bit/bucket, 1BitSGD, TernGrad) plus the
+/// NUQSGD non-uniform-grid arm for uniform-vs-non-uniform comparisons.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CompressorSpec {
     Fp32,
     Qsgd { bits: u32, bucket: usize, norm: Norm, regime: Option<Regime> },
+    /// NUQSGD: same bit budget as `Qsgd { bits, .. }` but levels on the
+    /// exponential grid `{0, 2^-(s-1), …, 1/2, 1}`.
+    Nuqsgd { bits: u32, bucket: usize, norm: Norm, regime: Option<Regime> },
     OneBit { column: usize },
     TernGrad { bucket: usize },
 }
@@ -48,6 +52,16 @@ impl CompressorSpec {
         CompressorSpec::Qsgd { bits: 8, bucket: 512, norm: Norm::Max, regime: None }
     }
 
+    /// NUQSGD at the headline 4-bit/512 configuration.
+    pub fn nuqsgd_4bit() -> Self {
+        CompressorSpec::Nuqsgd { bits: 4, bucket: 512, norm: Norm::Max, regime: None }
+    }
+
+    /// The exponential grid a `Nuqsgd { bits, .. }` arm quantizes onto.
+    pub fn nuqsgd_grid(bits: u32) -> LevelGrid {
+        LevelGrid::exponential(quant::levels_for_bits(bits))
+    }
+
     /// Instantiate a (possibly stateful) compressor for one worker. QSGD
     /// arms ride the fused zero-allocation pipeline
     /// ([`crate::coding::pipeline`]) — bit-identical on the wire to the
@@ -58,19 +72,28 @@ impl CompressorSpec {
             CompressorSpec::Qsgd { bits, bucket, norm, regime } => {
                 Box::new(FusedQsgd::new(quant::levels_for_bits(bits), bucket, norm, regime))
             }
+            CompressorSpec::Nuqsgd { bits, bucket, norm, regime } => {
+                Box::new(FusedQsgd::with_grid(Self::nuqsgd_grid(bits), bucket, norm, regime))
+            }
             CompressorSpec::OneBit { column } => Box::new(quant::onebit::OneBitSgd::new(n, column)),
             CompressorSpec::TernGrad { bucket } => Box::new(quant::terngrad::TernGrad::new(bucket)),
         }
     }
 
-    /// The pre-fusion two-phase QSGD path (quantize, then encode as a
-    /// separate pass over materialised buckets). Kept as the property-test
-    /// oracle for the fused pipeline; non-QSGD arms fall through to
-    /// [`Self::build`].
+    /// The pre-fusion two-phase path (quantize, then encode as a separate
+    /// pass over materialised buckets). Kept as the property-test oracle for
+    /// the fused pipeline — one oracle per fused arm (QSGD and NUQSGD);
+    /// remaining arms fall through to [`Self::build`].
     pub fn build_two_phase(&self, n: usize) -> Box<dyn Compressor> {
         match *self {
             CompressorSpec::Qsgd { bits, bucket, norm, regime } => Box::new(QsgdCompressor {
                 s: quant::levels_for_bits(bits),
+                bucket,
+                norm,
+                regime,
+            }),
+            CompressorSpec::Nuqsgd { bits, bucket, norm, regime } => Box::new(NuqsgdCompressor {
+                grid: Self::nuqsgd_grid(bits),
                 bucket,
                 norm,
                 regime,
@@ -83,13 +106,14 @@ impl CompressorSpec {
         match *self {
             CompressorSpec::Fp32 => "32bit".into(),
             CompressorSpec::Qsgd { bits, bucket, .. } => format!("QSGD {bits}bit/{bucket}"),
+            CompressorSpec::Nuqsgd { bits, bucket, .. } => format!("NUQSGD {bits}bit/{bucket}"),
             CompressorSpec::OneBit { .. } => "1BitSGD".into(),
             CompressorSpec::TernGrad { .. } => "TernGrad".into(),
         }
     }
 
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        // e.g. "fp32", "qsgd4", "qsgd2:64", "qsgd8:512", "1bit", "terngrad"
+        // e.g. "fp32", "qsgd4", "qsgd2:64", "nuqsgd4:512", "1bit", "terngrad"
         let s = s.to_lowercase();
         if s == "fp32" || s == "32bit" {
             return Ok(CompressorSpec::Fp32);
@@ -100,7 +124,11 @@ impl CompressorSpec {
         if s == "terngrad" {
             return Ok(CompressorSpec::TernGrad { bucket: 512 });
         }
-        if let Some(rest) = s.strip_prefix("qsgd") {
+        let (prefix, nonuniform) = match s.strip_prefix("nuqsgd") {
+            Some(rest) => (Some(rest), true),
+            None => (s.strip_prefix("qsgd"), false),
+        };
+        if let Some(rest) = prefix {
             let (bits_s, bucket_s) = match rest.split_once(':') {
                 Some((b, d)) => (b, Some(d)),
                 None => (rest, None),
@@ -110,9 +138,19 @@ impl CompressorSpec {
                 Some(d) => d.parse()?,
                 None => if bits <= 2 { 64 } else { 512 },
             };
-            return Ok(CompressorSpec::Qsgd { bits, bucket, norm: Norm::Max, regime: None });
+            return Ok(if nonuniform {
+                // the exponential grid needs 2^-(s-1) to stay a normal f32,
+                // which caps NUQSGD at an 8-bit budget (s = 127)
+                anyhow::ensure!(
+                    (2..=8).contains(&bits),
+                    "nuqsgd supports 2..=8 bits, got {bits}"
+                );
+                CompressorSpec::Nuqsgd { bits, bucket, norm: Norm::Max, regime: None }
+            } else {
+                CompressorSpec::Qsgd { bits, bucket, norm: Norm::Max, regime: None }
+            });
         }
-        anyhow::bail!("unknown compressor '{s}' (fp32|qsgdN[:bucket]|1bit|terngrad)")
+        anyhow::bail!("unknown compressor '{s}' (fp32|qsgdN[:bucket]|nuqsgdN[:bucket]|1bit|terngrad)")
     }
 }
 
@@ -132,6 +170,15 @@ mod tests {
             CompressorSpec::Qsgd { bits: 2, bucket: 128, norm: Norm::Max, regime: None }
         );
         assert!(matches!(CompressorSpec::parse("1bit").unwrap(), CompressorSpec::OneBit { .. }));
+        assert!(CompressorSpec::parse("nuqsgd16").is_err());
+        assert_eq!(
+            CompressorSpec::parse("nuqsgd4").unwrap(),
+            CompressorSpec::Nuqsgd { bits: 4, bucket: 512, norm: Norm::Max, regime: None }
+        );
+        assert_eq!(
+            CompressorSpec::parse("nuqsgd2:128").unwrap(),
+            CompressorSpec::Nuqsgd { bits: 2, bucket: 128, norm: Norm::Max, regime: None }
+        );
         assert!(CompressorSpec::parse("zstd").is_err());
     }
 
@@ -144,6 +191,8 @@ mod tests {
             CompressorSpec::qsgd_2bit(),
             CompressorSpec::qsgd_4bit(),
             CompressorSpec::qsgd_8bit(),
+            CompressorSpec::nuqsgd_4bit(),
+            CompressorSpec::Nuqsgd { bits: 2, bucket: 64, norm: Norm::Max, regime: None },
             CompressorSpec::OneBit { column: 128 },
             CompressorSpec::TernGrad { bucket: 128 },
         ] {

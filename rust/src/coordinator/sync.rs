@@ -286,6 +286,21 @@ mod tests {
     }
 
     #[test]
+    fn nuqsgd_converges_and_compresses() {
+        // Non-uniform grid end-to-end through Algorithm 1: converges at the
+        // same bit budget as 4-bit QSGD and still compresses well below fp32.
+        let r = run_with(CompressorSpec::nuqsgd_4bit(), 150, 0.05);
+        let first = r.loss.points[0].1;
+        let last = r.loss.tail_mean(3);
+        // slightly looser floor than the uniform arm: the exponential grid's
+        // coarse top segment raises worst-case per-coordinate noise
+        assert!(last < first * 0.45, "{first} -> {last}");
+        let fp = run_with(CompressorSpec::Fp32, 20, 0.05);
+        let nu = run_with(CompressorSpec::nuqsgd_4bit(), 20, 0.05);
+        assert!(nu.wire.payload_bytes * 2 < fp.wire.payload_bytes);
+    }
+
+    #[test]
     fn onebit_and_terngrad_converge() {
         for spec in [CompressorSpec::OneBit { column: 32 }, CompressorSpec::TernGrad { bucket: 32 }] {
             let r = run_with(spec.clone(), 200, 0.03);

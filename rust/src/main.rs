@@ -49,7 +49,7 @@ fn print_help() {
         "qsgd — QSGD (NIPS'17) reproduction\n\n\
          USAGE: qsgd <info|train|simulate|svrg|async|validate> [--flags]\n\n\
          train    --model <logreg|mlp|tfm|quadratic|logreg-native> \\\n\
-                  --compressor <fp32|qsgdN[:bucket]|1bit|terngrad> \\\n\
+                  --compressor <fp32|qsgdN[:bucket]|nuqsgdN[:bucket]|1bit|terngrad> \\\n\
                   --workers K --steps N --lr F --seed S [--eval-every N]\n\
          simulate --network <alexnet|vgg19|resnet50|resnet152|resnet110|bn-inception|lstm>\n\
                   --gpus K [--preset k80|10gbe|nvlink]\n\

@@ -84,18 +84,36 @@ impl TopQuantized {
         let norm = r.read_f32()?;
         let nnz = elias::decode0(&mut r)? as usize;
         anyhow::ensure!(nnz <= n, "nnz {nnz} exceeds n {n}");
+        // each kept coordinate costs ≥ 2 bits (gap + sign): reject
+        // length-lying headers before allocating
+        anyhow::ensure!((nnz as u64) * 2 <= r.bits_remaining(), "nnz exceeds stream");
         let mut indices = Vec::with_capacity(nnz);
         let mut signs = Vec::with_capacity(nnz);
         let mut prev: i64 = -1;
         for _ in 0..nnz {
-            let gap = elias::decode(&mut r)? as i64;
-            let idx = prev + gap;
+            let gap = elias::decode(&mut r)?;
+            // bound before the i64 cast: a hostile stream can encode any u64
+            anyhow::ensure!(gap >= 1 && gap <= n as u64, "gap out of range");
+            let idx = prev + gap as i64;
             anyhow::ensure!(idx >= 0 && (idx as usize) < n, "index out of range");
             indices.push(idx as u32);
             signs.push(if r.read_bit()? { -1 } else { 1 });
             prev = idx;
         }
         Ok(Self { n, norm, indices, signs })
+    }
+
+    /// Exact wire size of [`Self::encode`] in bits (for the cost model and
+    /// the Theorem F.4 bound checks): 32-bit norm + Elias'(nnz) + per kept
+    /// coordinate an Elias-coded gap and a sign bit.
+    pub fn message_bits(&self) -> u64 {
+        let mut bits = 32 + elias::len(self.indices.len() as u64 + 1);
+        let mut prev: i64 = -1;
+        for &i in &self.indices {
+            bits += elias::len((i as i64 - prev) as u64) + 1;
+            prev = i as i64;
+        }
+        bits
     }
 }
 

@@ -1,0 +1,301 @@
+//! Quantization level grids — the generalization that turns the fused
+//! pipeline into a compressor *family*.
+//!
+//! QSGD (§3.1) places its `s + 1` levels uniformly on `[0, 1]`; NUQSGD
+//! (Ramezani-Kebrya et al., PAPERS.md) shows that for normalized gradients an
+//! *exponentially spaced* grid `{0, 2^-p, …, 1/2, 1}` strictly improves the
+//! variance bound at the same bit budget, because stochastic-rounding noise
+//! on a coordinate is proportional to the local grid gap and most normalized
+//! coordinates are small. [`LevelGrid`] captures all three shapes the stack
+//! supports:
+//!
+//! * [`LevelGrid::Uniform`] — the paper's `{0, 1/s, …, 1}`. Quantization and
+//!   dequantization ride the *original* QSGD arithmetic (`r = |v|·s/F(b)`),
+//!   so uniform frames and levels are bit-identical to the pre-grid code.
+//! * [`LevelGrid::Exponential`] — NUQSGD's `{0, 2^-(s-1), …, 1/2, 1}` with
+//!   `s` nonzero levels (all exact powers of two, exactly representable).
+//! * [`LevelGrid::Custom`] — any strictly increasing set of nonzero
+//!   normalized levels ending at 1 (validated; transmitted in-band on the
+//!   wire, see `coding::gradient`).
+//!
+//! A grid only changes *which* level a coordinate rounds to and *what value*
+//! a level dequantizes to. Level indices stay signed integers in `[-s, s]`,
+//! so the shared Elias codecs (`coding::gradient::encode_levels_*`) are
+//! untouched — that is the extension point every later scheme reuses.
+
+use std::sync::Arc;
+
+/// The set of normalized magnitude levels `0 = ℓ_0 < ℓ_1 < … < ℓ_s = 1` a
+/// quantizer rounds onto. Cheap to clone (non-uniform point sets are
+/// `Arc`-shared), so per-worker compressors can carry their own copy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LevelGrid {
+    /// Uniform QSGD grid `{0, 1/s, …, 1}`.
+    Uniform { s: u32 },
+    /// NUQSGD exponential grid: nonzero levels `{2^-(s-1), …, 1/2, 1}`.
+    Exponential { points: Arc<[f32]> },
+    /// User-supplied monotone grid: nonzero levels, strictly increasing,
+    /// last exactly 1.0.
+    Custom { points: Arc<[f32]> },
+}
+
+/// Largest custom-grid size accepted (bounds what a frame header may ask the
+/// decoder to allocate; also keeps levels well inside the Elias LUT range).
+pub const MAX_CUSTOM_LEVELS: usize = 4096;
+
+/// Largest exponential-grid size: `2^-(s-1)` must stay a *normal* f32.
+pub const MAX_EXPONENTIAL_LEVELS: u32 = 127;
+
+impl LevelGrid {
+    /// The paper's uniform grid with `s ≥ 1` levels.
+    pub fn uniform(s: u32) -> Self {
+        assert!(s >= 1, "need at least one nonzero level");
+        LevelGrid::Uniform { s }
+    }
+
+    /// Exponential grid with `s` nonzero levels `{2^-(s-1), …, 1/2, 1}`.
+    pub fn exponential(s: u32) -> Self {
+        assert!(
+            (1..=MAX_EXPONENTIAL_LEVELS).contains(&s),
+            "exponential grid needs 1..={MAX_EXPONENTIAL_LEVELS} levels, got {s}"
+        );
+        let points: Vec<f32> = (0..s).map(|i| 2.0f32.powi(i as i32 + 1 - s as i32)).collect();
+        LevelGrid::Exponential { points: points.into() }
+    }
+
+    /// NUQSGD's grid as written in the paper: `{0, 1/2^p, …, 1/2, 1}`
+    /// (`p + 1` nonzero levels).
+    pub fn nuqsgd(p: u32) -> Self {
+        Self::exponential(p + 1)
+    }
+
+    /// Arbitrary monotone grid from its nonzero levels. Validates the shape
+    /// the codecs and the stochastic rounding rely on; also used to vet
+    /// grids arriving *from the wire*, so it must reject rather than panic.
+    pub fn custom(points: Vec<f32>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!points.is_empty(), "custom grid needs at least one level");
+        anyhow::ensure!(
+            points.len() <= MAX_CUSTOM_LEVELS,
+            "custom grid too large: {} > {MAX_CUSTOM_LEVELS}",
+            points.len()
+        );
+        anyhow::ensure!(
+            points.iter().all(|p| p.is_finite()),
+            "custom grid levels must be finite"
+        );
+        anyhow::ensure!(points[0] > 0.0, "custom grid levels must be positive");
+        anyhow::ensure!(
+            points.windows(2).all(|w| w[0] < w[1]),
+            "custom grid levels must be strictly increasing"
+        );
+        anyhow::ensure!(
+            *points.last().unwrap() == 1.0,
+            "custom grid must end at 1.0 (levels are normalized)"
+        );
+        Ok(LevelGrid::Custom { points: points.into() })
+    }
+
+    /// Number of nonzero levels `s` (level indices span `[-s, s]`).
+    pub fn s(&self) -> u32 {
+        match self {
+            LevelGrid::Uniform { s } => *s,
+            LevelGrid::Exponential { points } | LevelGrid::Custom { points } => {
+                points.len() as u32
+            }
+        }
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, LevelGrid::Uniform { .. })
+    }
+
+    /// The nonzero level values, or `None` for the uniform grid (whose
+    /// levels are computed arithmetically on the hot paths).
+    pub fn nonzero_points(&self) -> Option<&[f32]> {
+        match self {
+            LevelGrid::Uniform { .. } => None,
+            LevelGrid::Exponential { points } | LevelGrid::Custom { points } => Some(points),
+        }
+    }
+
+    /// Normalized value of level `j ∈ [0, s]`.
+    pub fn value(&self, j: u32) -> f32 {
+        debug_assert!(j <= self.s());
+        match self {
+            LevelGrid::Uniform { s } => j as f32 / *s as f32,
+            LevelGrid::Exponential { points } | LevelGrid::Custom { points } => {
+                if j == 0 {
+                    0.0
+                } else {
+                    points[j as usize - 1]
+                }
+            }
+        }
+    }
+
+    /// Reference level assignment: stochastically round normalized magnitude
+    /// `a ∈ [0, 1]` onto the grid with uniform draw `u ∈ [0, 1)`. Unbiased:
+    /// `E[value(level)] = a`.
+    ///
+    /// NOTE: the bucket quantizers ([`crate::quant::stochastic`]) short-circuit
+    /// `Uniform` through the original `r = a·s` arithmetic so existing frames
+    /// stay bit-identical; this method is the grid-agnostic semantics used by
+    /// the non-uniform hot path and by tests.
+    pub fn level_of(&self, a: f32, u: f32) -> u32 {
+        match self {
+            LevelGrid::Uniform { s } => {
+                let r = (a * *s as f32).min(*s as f32);
+                let lo = r as u32;
+                lo + (u < r - lo as f32) as u32
+            }
+            LevelGrid::Exponential { points } | LevelGrid::Custom { points } => {
+                nonuniform_level(points, a, u)
+            }
+        }
+    }
+
+    /// Exact conditional variance of the *normalized* rounded value at
+    /// magnitude `a ∈ [0, 1]`: `(a − ℓ_j)(ℓ_{j+1} − a)` for the bracketing
+    /// levels (0 when `a` sits on a grid point). Multiply by `F(b)²` for the
+    /// per-coordinate quantization variance.
+    pub fn rounding_variance(&self, a: f32) -> f64 {
+        let a = f64::from(a.clamp(0.0, 1.0));
+        let s = self.s();
+        // bracketing levels via the deterministic assignment (u = 1 never
+        // rounds up, so level_of(a, 1.0) is the lower bracket)
+        let j = self.level_of(a as f32, 1.0);
+        if j >= s {
+            return 0.0;
+        }
+        let lo = f64::from(self.value(j));
+        let hi = f64::from(self.value(j + 1));
+        (a - lo).max(0.0) * (hi - a).max(0.0)
+    }
+
+    /// Rigorous envelope on the relative quantization variance
+    /// `E‖Q(v) − v‖² / ‖v‖²` for a 2-norm bucket of dimension `d`.
+    ///
+    /// * Uniform: the paper's Lemma 3.1(ii), `min(d/s², √d/s)`.
+    /// * Non-uniform: per-coordinate stochastic rounding gives variance
+    ///   `(ℓ_{j+1} − ℓ_j)²/4` above the smallest level (each gap is at most
+    ///   `ε·ℓ_j` with `ε = max gap ratio`, so the sum telescopes against
+    ///   `Σ a_i² = 1`), plus `ℓ_1·Σ a_i ≤ ℓ_1·√d` below it:
+    ///   `ε²/4 + ℓ_1·√d`. For the exponential grid `ε = 1`, recovering the
+    ///   NUQSGD-style `1/4 + 2^-(s-1)·√d` shape.
+    pub fn variance_bound(&self, d: usize) -> f64 {
+        match self {
+            LevelGrid::Uniform { s } => super::variance_bound(d, *s),
+            LevelGrid::Exponential { points } | LevelGrid::Custom { points } => {
+                let mut eps: f64 = 1.0; // gap below the first level, relative to it
+                for w in points.windows(2) {
+                    eps = eps.max(f64::from(w[1] - w[0]) / f64::from(w[0]));
+                }
+                eps * eps / 4.0 + f64::from(points[0]) * (d as f64).sqrt()
+            }
+        }
+    }
+
+    /// Human-readable tag used in compressor names.
+    pub fn label(&self) -> String {
+        match self {
+            LevelGrid::Uniform { s } => format!("uniform(s={s})"),
+            LevelGrid::Exponential { points } => format!("nuqsgd(s={})", points.len()),
+            LevelGrid::Custom { points } => format!("custom(s={})", points.len()),
+        }
+    }
+}
+
+/// Stochastic rounding onto a non-uniform point set: find the bracketing
+/// levels by binary search, round up with probability proportional to the
+/// position inside the gap. `pts` is strictly increasing with last == 1.0;
+/// `a ∈ [0, 1]` (callers clamp). Allocation-free — safe for the fused
+/// zero-alloc pipeline.
+#[inline]
+pub(crate) fn nonuniform_level(pts: &[f32], a: f32, u: f32) -> u32 {
+    // j = number of nonzero levels ≤ a, i.e. the lower bracketing level.
+    let j = pts.partition_point(|&g| g <= a);
+    if j == pts.len() {
+        return j as u32; // a == 1.0 (top level; NaN inputs clamp here too)
+    }
+    let lo = if j == 0 { 0.0 } else { pts[j - 1] };
+    let hi = pts[j];
+    let p = (a - lo) / (hi - lo);
+    j as u32 + (u < p) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_points_are_powers_of_two() {
+        let g = LevelGrid::exponential(4);
+        assert_eq!(g.s(), 4);
+        assert_eq!(g.nonzero_points().unwrap(), [0.125, 0.25, 0.5, 1.0]);
+        assert_eq!(g.value(0), 0.0);
+        assert_eq!(g.value(4), 1.0);
+        // the ISSUE's notation: {0, 1/2^p, …, 1/2, 1}
+        assert_eq!(LevelGrid::nuqsgd(3), LevelGrid::exponential(4));
+    }
+
+    #[test]
+    fn uniform_matches_arithmetic_grid() {
+        let g = LevelGrid::uniform(4);
+        for j in 0..=4 {
+            assert!((g.value(j) - j as f32 / 4.0).abs() < 1e-9);
+        }
+        assert_eq!(g.level_of(0.5, 0.99), 2);
+        assert_eq!(g.level_of(0.6, 0.39), 3); // r = 2.4, p = 0.4 > u
+        assert_eq!(g.level_of(0.6, 0.41), 2);
+        assert_eq!(g.level_of(1.0, 0.0), 4);
+    }
+
+    #[test]
+    fn custom_validation() {
+        assert!(LevelGrid::custom(vec![]).is_err());
+        assert!(LevelGrid::custom(vec![0.5]).is_err()); // doesn't end at 1
+        assert!(LevelGrid::custom(vec![0.5, 0.5, 1.0]).is_err()); // not strict
+        assert!(LevelGrid::custom(vec![-0.5, 1.0]).is_err());
+        assert!(LevelGrid::custom(vec![0.0, 1.0]).is_err()); // zero is implicit
+        assert!(LevelGrid::custom(vec![f32::NAN, 1.0]).is_err());
+        assert!(LevelGrid::custom(vec![0.1, 0.7, 1.0]).is_ok());
+        assert!(LevelGrid::custom(vec![1.0]).is_ok());
+    }
+
+    #[test]
+    fn nonuniform_rounding_brackets_and_is_exact_on_points() {
+        let g = LevelGrid::exponential(3); // {0, 0.25, 0.5, 1}
+        // exact grid points map to themselves regardless of u
+        for (a, want) in [(0.0, 0), (0.25, 1), (0.5, 2), (1.0, 3)] {
+            assert_eq!(g.level_of(a, 0.0), want, "a={a}");
+            assert_eq!(g.level_of(a, 0.999), want, "a={a}");
+        }
+        // 0.375 is halfway between levels 1 and 2
+        assert_eq!(g.level_of(0.375, 0.49), 2);
+        assert_eq!(g.level_of(0.375, 0.51), 1);
+        // below the smallest nonzero level
+        assert_eq!(g.level_of(0.1, 0.39), 1); // p = 0.4
+        assert_eq!(g.level_of(0.1, 0.41), 0);
+    }
+
+    #[test]
+    fn rounding_variance_matches_closed_form() {
+        let g = LevelGrid::exponential(2); // {0, 0.5, 1}
+        assert_eq!(g.rounding_variance(0.5), 0.0);
+        assert!((g.rounding_variance(0.75) - 0.0625).abs() < 1e-9);
+        assert!((g.rounding_variance(0.25) - 0.0625).abs() < 1e-9);
+        assert_eq!(g.rounding_variance(1.0), 0.0);
+    }
+
+    #[test]
+    fn variance_bound_shapes() {
+        // uniform delegates to Lemma 3.1(ii)
+        assert_eq!(
+            LevelGrid::uniform(4).variance_bound(256),
+            crate::quant::variance_bound(256, 4)
+        );
+        // exponential: ε = 1 ⇒ 1/4 + 2^-(s-1)·√d
+        let b = LevelGrid::exponential(8).variance_bound(256);
+        assert!((b - (0.25 + (1.0 / 128.0) * 16.0)).abs() < 1e-9);
+    }
+}

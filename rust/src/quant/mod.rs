@@ -2,9 +2,12 @@
 //! quantizer (Appendix F), and the 1BitSGD / TernGrad baselines.
 
 pub mod deterministic;
+pub mod grid;
 pub mod onebit;
 pub mod stochastic;
 pub mod terngrad;
+
+pub use grid::LevelGrid;
 
 
 
@@ -78,6 +81,31 @@ impl QuantBucket {
         }
     }
 
+    /// Grid-aware reconstruction: `Q(b)_i = F(b)·sgn·ℓ(|level|)`. The uniform
+    /// grid takes the original arithmetic path (bit-identical to
+    /// [`Self::dequantize_into`]); non-uniform grids look level values up in
+    /// the grid's point table.
+    pub fn dequantize_grid_into(&self, grid: &LevelGrid, out: &mut [f32]) {
+        match grid.nonzero_points() {
+            None => self.dequantize_into(grid.s(), out),
+            Some(pts) => {
+                debug_assert_eq!(out.len(), self.levels.len());
+                for (o, &l) in out.iter_mut().zip(&self.levels) {
+                    *o = if l == 0 {
+                        0.0
+                    } else {
+                        let v = self.scale * pts[(l.unsigned_abs() - 1) as usize];
+                        if l < 0 {
+                            -v
+                        } else {
+                            v
+                        }
+                    };
+                }
+            }
+        }
+    }
+
     pub fn nnz(&self) -> usize {
         self.levels.iter().filter(|&&l| l != 0).count()
     }
@@ -88,8 +116,12 @@ impl QuantBucket {
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantizedGradient {
     /// Quantization levels `s ≥ 1` (bit width b ⇒ `s = 2^(b−1) − 1` signed
-    /// levels plus sign, see [`levels_for_bits`]).
+    /// levels plus sign, see [`levels_for_bits`]). Invariant:
+    /// `s == grid.s()` — kept as a plain field because the wire codecs and
+    /// cost models key on it constantly.
     pub s: u32,
+    /// Which level grid the levels index into (uniform ⇒ classic QSGD).
+    pub grid: LevelGrid,
     /// Bucket size `d` (§4); the final bucket may be shorter.
     pub bucket_size: usize,
     pub norm: Norm,
@@ -104,7 +136,7 @@ impl QuantizedGradient {
         let mut off = 0;
         for b in &self.buckets {
             let end = off + b.levels.len();
-            b.dequantize_into(self.s, &mut out[off..end]);
+            b.dequantize_grid_into(&self.grid, &mut out[off..end]);
             off = end;
         }
         debug_assert_eq!(off, self.n);
@@ -115,11 +147,25 @@ impl QuantizedGradient {
     /// the decode-side hot path when averaging K peers' gradients.
     pub fn dequantize_add(&self, alpha: f32, acc: &mut [f32]) {
         assert_eq!(acc.len(), self.n);
+        let pts = self.grid.nonzero_points();
         let mut off = 0;
         for b in &self.buckets {
-            let k = alpha * b.scale / self.s as f32;
-            for (a, &l) in acc[off..off + b.levels.len()].iter_mut().zip(&b.levels) {
-                *a += l as f32 * k;
+            match pts {
+                None => {
+                    let k = alpha * b.scale / self.s as f32;
+                    for (a, &l) in acc[off..off + b.levels.len()].iter_mut().zip(&b.levels) {
+                        *a += l as f32 * k;
+                    }
+                }
+                Some(pts) => {
+                    let k = alpha * b.scale;
+                    for (a, &l) in acc[off..off + b.levels.len()].iter_mut().zip(&b.levels) {
+                        if l != 0 {
+                            let v = k * pts[(l.unsigned_abs() - 1) as usize];
+                            *a += if l < 0 { -v } else { v };
+                        }
+                    }
+                }
             }
             off += b.levels.len();
         }
@@ -235,6 +281,7 @@ mod tests {
     fn dequantize_add_matches_dequantize() {
         let qg = QuantizedGradient {
             s: 4,
+            grid: LevelGrid::uniform(4),
             bucket_size: 3,
             norm: Norm::Max,
             n: 5,
@@ -251,5 +298,25 @@ mod tests {
             assert!((acc[i] - (1.0 + 0.5 * d[i])).abs() < 1e-6);
         }
         assert_eq!(qg.nnz(), 4);
+    }
+
+    #[test]
+    fn dequantize_nonuniform_grid_uses_point_table() {
+        // grid {0, 1/4, 1/2, 1}: level ±3 ⇒ ±scale, level ±1 ⇒ ±scale/4
+        let qg = QuantizedGradient {
+            s: 3,
+            grid: LevelGrid::exponential(3),
+            bucket_size: 4,
+            norm: Norm::Max,
+            n: 4,
+            buckets: vec![QuantBucket { scale: 2.0, levels: vec![3, -1, 0, 2] }],
+        };
+        let d = qg.dequantize();
+        assert_eq!(d, vec![2.0, -0.5, 0.0, 1.0]);
+        let mut acc = vec![0.0f32; 4];
+        qg.dequantize_add(2.0, &mut acc);
+        for i in 0..4 {
+            assert!((acc[i] - 2.0 * d[i]).abs() < 1e-6);
+        }
     }
 }

@@ -8,6 +8,7 @@
 
 use rand_core::RngCore;
 
+use super::grid::{nonuniform_level, LevelGrid};
 use super::{Norm, QuantBucket, QuantizedGradient};
 
 /// Quantize one bucket given externally supplied uniforms (deterministic;
@@ -19,6 +20,13 @@ pub fn quantize_bucket_with_uniforms(v: &[f32], u: &[f32], s: u32, norm: Norm) -
         return QuantBucket { scale: 0.0, levels: vec![0; v.len()] };
     }
     // Match the jnp oracle's operation order: k = s/scale, r = |v|·k.
+    // Known quirk, frozen for kernel/wire bit-compatibility: when s/scale
+    // overflows to +inf (scale tiny but normal, e.g. 2e-38 at s=255), zero
+    // coordinates hit 0·inf = NaN and round to level ±s, i.e. to ±scale on
+    // reconstruction — an error bounded by the (tiny) scale itself. The
+    // grid-generic path (`quantize_bucket_into_grid`) instead treats such
+    // buckets as degenerate; changing this one would break bit-identity
+    // with the Pallas artifact and PR 1 frames.
     let k = s as f32 / scale;
     let levels = v
         .iter()
@@ -28,6 +36,45 @@ pub fn quantize_bucket_with_uniforms(v: &[f32], u: &[f32], s: u32, norm: Norm) -
             let lo = r.floor();
             let p = r - lo;
             let lev = lo as i32 + (ui < p) as i32;
+            if x.is_sign_negative() {
+                -lev
+            } else {
+                lev
+            }
+        })
+        .collect();
+    QuantBucket { scale, levels }
+}
+
+/// Grid-aware variant of [`quantize_bucket_with_uniforms`]: levels are picked
+/// by stochastic rounding between *adjacent grid points*. The uniform grid
+/// takes the original arithmetic path, so its buckets are bit-identical to
+/// the pre-grid quantizer; non-uniform grids bracket `|v|/F(b)` in the
+/// grid's point table.
+pub fn quantize_bucket_with_uniforms_grid(
+    v: &[f32],
+    u: &[f32],
+    grid: &LevelGrid,
+    norm: Norm,
+) -> QuantBucket {
+    let pts = match grid.nonzero_points() {
+        None => return quantize_bucket_with_uniforms(v, u, grid.s(), norm),
+        Some(pts) => pts,
+    };
+    debug_assert_eq!(v.len(), u.len());
+    let scale = norm.scale(v);
+    // a subnormal scale would overflow `inv` to +inf (0·inf = NaN sends
+    // zeros to the top level), so such buckets are degenerate too
+    if !scale.is_normal() {
+        return QuantBucket { scale: 0.0, levels: vec![0; v.len()] };
+    }
+    let inv = 1.0 / scale;
+    let levels = v
+        .iter()
+        .zip(u)
+        .map(|(&x, &ui)| {
+            let a = (x.abs() * inv).min(1.0);
+            let lev = nonuniform_level(pts, a, ui) as i32;
             if x.is_sign_negative() {
                 -lev
             } else {
@@ -100,10 +147,47 @@ pub fn quantize_bucket_into(v: &[f32], words: &[u8], s: u32, norm: Norm, levels:
     scale
 }
 
+/// Grid-aware hot-path bucket quantizer — the single level-assignment
+/// routine both the two-phase and fused pipelines stream from, for *every*
+/// grid (which is what makes fused-vs-two-phase bit-identity hold per grid).
+/// Uniform grids dispatch to [`quantize_bucket_into`] unchanged; non-uniform
+/// grids stochastically round `|v|/F(b)` between adjacent grid points.
+/// Allocation-free on both paths.
 #[inline]
-fn quantize_bucket_from_words(v: &[f32], words: &[u8], s: u32, norm: Norm) -> QuantBucket {
+pub fn quantize_bucket_into_grid(
+    v: &[f32],
+    words: &[u8],
+    grid: &LevelGrid,
+    norm: Norm,
+    levels: &mut [i32],
+) -> f32 {
+    let pts = match grid.nonzero_points() {
+        None => return quantize_bucket_into(v, words, grid.s(), norm, levels),
+        Some(pts) => pts,
+    };
+    debug_assert_eq!(words.len(), v.len() * 4);
+    debug_assert_eq!(levels.len(), v.len());
+    let scale = norm.scale(v);
+    // subnormal scales are degenerate (see quantize_bucket_with_uniforms_grid)
+    if !scale.is_normal() {
+        levels.fill(0);
+        return 0.0;
+    }
+    let inv = 1.0 / scale;
+    for ((l, &x), c) in levels.iter_mut().zip(v).zip(words.chunks_exact(4)) {
+        let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        let u = (word >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
+        let a = (x.abs() * inv).min(1.0);
+        let lev = nonuniform_level(pts, a, u) as i32;
+        *l = if x.is_sign_negative() { -lev } else { lev };
+    }
+    scale
+}
+
+#[inline]
+fn quantize_bucket_from_words(v: &[f32], words: &[u8], grid: &LevelGrid, norm: Norm) -> QuantBucket {
     let mut levels = vec![0i32; v.len()];
-    let scale = quantize_bucket_into(v, words, s, norm, &mut levels);
+    let scale = quantize_bucket_into_grid(v, words, grid, norm, &mut levels);
     QuantBucket { scale, levels }
 }
 
@@ -118,7 +202,21 @@ pub fn quantize(
     norm: Norm,
     rng: &mut dyn RngCore,
 ) -> QuantizedGradient {
-    assert!(s >= 1 && bucket_size >= 1);
+    quantize_grid(v, &LevelGrid::uniform(s), bucket_size, norm, rng)
+}
+
+/// Grid-aware full-gradient quantization — [`quantize`] generalized over
+/// [`LevelGrid`]. Consumes the RNG stream exactly as [`quantize`] does (one
+/// `fill_bytes` per bucket), which the fused pipeline relies on for wire
+/// bit-identity.
+pub fn quantize_grid(
+    v: &[f32],
+    grid: &LevelGrid,
+    bucket_size: usize,
+    norm: Norm,
+    rng: &mut dyn RngCore,
+) -> QuantizedGradient {
+    assert!(bucket_size >= 1);
     let chunk = bucket_size.min(v.len()).max(1);
     let mut words = vec![0u8; chunk * 4];
     let buckets = v
@@ -126,10 +224,17 @@ pub fn quantize(
         .map(|c| {
             let w = &mut words[..c.len() * 4];
             rng.fill_bytes(w);
-            quantize_bucket_from_words(c, w, s, norm)
+            quantize_bucket_from_words(c, w, grid, norm)
         })
         .collect();
-    QuantizedGradient { s, bucket_size, norm, n: v.len(), buckets }
+    QuantizedGradient {
+        s: grid.s(),
+        grid: grid.clone(),
+        bucket_size,
+        norm,
+        n: v.len(),
+        buckets,
+    }
 }
 
 /// Deterministic variant of [`quantize`] with caller-supplied uniforms
@@ -141,13 +246,31 @@ pub fn quantize_with_uniforms(
     bucket_size: usize,
     norm: Norm,
 ) -> QuantizedGradient {
+    quantize_grid_with_uniforms(v, u, &LevelGrid::uniform(s), bucket_size, norm)
+}
+
+/// Deterministic grid-aware variant with caller-supplied uniforms.
+pub fn quantize_grid_with_uniforms(
+    v: &[f32],
+    u: &[f32],
+    grid: &LevelGrid,
+    bucket_size: usize,
+    norm: Norm,
+) -> QuantizedGradient {
     assert_eq!(v.len(), u.len());
     let buckets = v
         .chunks(bucket_size)
         .zip(u.chunks(bucket_size))
-        .map(|(c, uc)| quantize_bucket_with_uniforms(c, uc, s, norm))
+        .map(|(c, uc)| quantize_bucket_with_uniforms_grid(c, uc, grid, norm))
         .collect();
-    QuantizedGradient { s, bucket_size, norm, n: v.len(), buckets }
+    QuantizedGradient {
+        s: grid.s(),
+        grid: grid.clone(),
+        bucket_size,
+        norm,
+        n: v.len(),
+        buckets,
+    }
 }
 
 /// The paper's full-vector `Q_s` (no bucketing: d = n, 2-norm) — the object
@@ -177,6 +300,20 @@ mod tests {
         let q = quantize_paper(&[0.0; 16], 4, &mut rng(0));
         assert_eq!(q.dequantize(), vec![0.0; 16]);
         assert_eq!(q.nnz(), 0);
+    }
+
+    #[test]
+    fn subnormal_scale_bucket_is_degenerate_on_nonuniform_grids() {
+        // scale = 1e-45 (subnormal) would overflow 1/scale to +inf, sending
+        // the zero coordinate to the top level; such buckets must transmit
+        // all-zero instead.
+        let grid = LevelGrid::exponential(4);
+        let v = [1e-45f32, 0.0, -1e-45];
+        let q = quantize_grid(&v, &grid, 3, Norm::Max, &mut rng(1));
+        assert_eq!(q.buckets[0].scale, 0.0);
+        assert_eq!(q.buckets[0].levels, vec![0, 0, 0]);
+        let b = quantize_bucket_with_uniforms_grid(&v, &[0.5; 3], &grid, Norm::Max);
+        assert_eq!(b.levels, vec![0, 0, 0]);
     }
 
     #[test]

@@ -34,13 +34,29 @@ impl<'a> Gen<'a> {
     }
 }
 
-/// Run `prop` on `cases` random inputs. On a failure at (seed, size), retry
-/// with smaller sizes to find a smaller reproduction, then panic with the
-/// replay coordinates.
+/// Multiplier on every property's base case count, from the
+/// `QSGD_PROPTEST_CASES` environment variable (default 1, capped at 1000).
+/// CI's fast lane leaves it unset so PR runs stay cheap; the thorough lane
+/// on main sets it to run the same properties at greater depth.
+fn case_multiplier() -> u64 {
+    use std::sync::OnceLock;
+    static MULT: OnceLock<u64> = OnceLock::new();
+    *MULT.get_or_init(|| {
+        std::env::var("QSGD_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map_or(1, |m| m.clamp(1, 1000))
+    })
+}
+
+/// Run `prop` on `cases` random inputs (scaled by [`case_multiplier`]). On a
+/// failure at (seed, size), retry with smaller sizes to find a smaller
+/// reproduction, then panic with the replay coordinates.
 pub fn forall<F>(name: &str, cases: u64, max_size: usize, mut prop: F)
 where
     F: FnMut(&mut Gen) -> Result<(), String>,
 {
+    let cases = cases.saturating_mul(case_multiplier());
     let run = |prop: &mut F, seed: u64, size: usize| -> Result<(), String> {
         let mut rng = Xoshiro256::stream(0xC0FFEE ^ seed, seed);
         let mut g = Gen { rng: &mut rng, size };
@@ -100,7 +116,8 @@ mod tests {
                 Err("length".into())
             }
         });
-        assert_eq!(count, 50);
+        // the thorough CI lane scales the base count via QSGD_PROPTEST_CASES
+        assert!(count >= 50 && count % 50 == 0, "ran {count} cases");
     }
 
     #[test]

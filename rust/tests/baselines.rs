@@ -1,0 +1,142 @@
+//! Round-trip + message-size properties for the baseline compressors that
+//! predate the property harness: TernGrad, 1BitSGD (including the
+//! error-feedback residual across steps) and the deterministic Appendix-F
+//! top-k quantizer. Each advertises an exact `message_bits` — the cost
+//! models in `models::cost`/`simnet` rely on it, so it must match the real
+//! encoded length.
+
+mod common;
+
+use qsgd::prop_assert;
+use qsgd::quant::deterministic;
+use qsgd::quant::onebit::OneBitSgd;
+use qsgd::quant::terngrad::TernGrad;
+use qsgd::util::check::forall;
+
+#[test]
+fn prop_terngrad_roundtrip_and_message_size() {
+    forall("terngrad", 120, 2000, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let v = common::gen_vec(g, n);
+        let bucket = [1usize, 16, 64, 512][g.usize_in(0, 3)];
+        let t = TernGrad::new(bucket);
+        let msg = t.compress(&v, g.rng);
+        prop_assert!(
+            msg.len() as u64 == t.message_bits(n).div_ceil(8),
+            "message_bits {} disagrees with encoded length {}",
+            t.message_bits(n),
+            msg.len()
+        );
+        let d = t.decompress(&msg, n).map_err(|e| e.to_string())?;
+        prop_assert!(d.len() == n, "length");
+        // every reconstruction is ternary on the bucket scale
+        for (cb, cv) in d.chunks(bucket).zip(v.chunks(bucket)) {
+            let scale = cv.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for &y in cb {
+                prop_assert!(
+                    y == 0.0 || (y.abs() - scale).abs() <= scale * 1e-6,
+                    "non-ternary value {y} (scale {scale})"
+                );
+            }
+        }
+        // truncated messages must be rejected, not mis-decoded
+        if msg.len() > 4 {
+            prop_assert!(
+                t.decompress(&msg[..msg.len() / 2], n).is_err(),
+                "truncated terngrad message decoded"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_onebit_roundtrip_and_message_size() {
+    forall("onebit", 100, 1500, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let column = [1usize, 32, 512][g.usize_in(0, 2)];
+        let mut q = OneBitSgd::new(n, column);
+        // several steps so the error-feedback residual is in play
+        let mut prev_residual = vec![0.0f32; n];
+        for step in 0..3 {
+            // clamp extremes: the delta-sigma bookkeeping below is only
+            // numerically meaningful while sums stay inside f32 range
+            let v: Vec<f32> =
+                common::gen_vec(g, n).iter().map(|x| x.clamp(-1e30, 1e30)).collect();
+            let msg = q.compress(&v);
+            prop_assert!(
+                msg.len() as u64 == OneBitSgd::message_bits(n, column).div_ceil(8),
+                "step {step}: message_bits disagrees with encoded length"
+            );
+            let d = OneBitSgd::decompress(&msg, n, column).map_err(|e| e.to_string())?;
+            prop_assert!(d.len() == n, "length");
+            // delta-sigma invariant: decoded + new residual == grad + old
+            // residual (no gradient mass lost), coordinate-wise
+            for i in 0..n {
+                let eff = v[i] + prev_residual[i];
+                let got = d[i] + q.residual()[i];
+                // magnitude-aware tolerance: `eff − recon` cancels
+                // catastrophically when the column mixes magnitudes
+                let tol = 1e-3 * (eff.abs() + d[i].abs()).max(1.0);
+                prop_assert!(
+                    (got - eff).abs() <= tol,
+                    "step {step}: mass lost at {i}: {got} vs {eff}"
+                );
+            }
+            prev_residual.copy_from_slice(q.residual());
+        }
+        // reset clears the carried state
+        q.reset();
+        prop_assert!(q.residual().iter().all(|&r| r == 0.0), "reset left residual");
+        Ok(())
+    });
+}
+
+#[test]
+fn onebit_residual_carries_across_steps() {
+    // A coordinate too small to flip its column's sign on step one must be
+    // transmitted eventually — and the residual is what carries it.
+    let mut q = OneBitSgd::new(4, 4);
+    let g = [2.0f32, 0.05, -2.0, -0.05];
+    let first = q.compress(&g);
+    let d1 = OneBitSgd::decompress(&first, 4, 4).unwrap();
+    // second step sees grad + residual, so its message differs
+    let second = q.compress(&g);
+    let d2 = OneBitSgd::decompress(&second, 4, 4).unwrap();
+    let mean1: f32 = (d1[1] + d2[1]) / 2.0;
+    // two-step average of the small positive coordinate moves toward 0.05
+    assert!(
+        (mean1 - 0.05).abs() < (d1[1] - 0.05).abs() + 1e-6,
+        "error feedback did not pull the small coordinate toward its value"
+    );
+    // stateless decompress: same message decodes identically twice
+    assert_eq!(OneBitSgd::decompress(&first, 4, 4).unwrap(), d1);
+}
+
+#[test]
+fn prop_topk_roundtrip_and_message_size() {
+    forall("topk", 120, 2000, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let v = common::gen_vec(g, n);
+        // the Appendix-F quantizer is defined for finite inputs
+        let v: Vec<f32> = v.iter().map(|x| x.clamp(-1e30, 1e30)).collect();
+        let q = deterministic::quantize(&v);
+        let bytes = q.encode();
+        prop_assert!(
+            bytes.len() as u64 == q.message_bits().div_ceil(8),
+            "message_bits {} disagrees with encoded length {}",
+            q.message_bits(),
+            bytes.len()
+        );
+        let q2 = deterministic::TopQuantized::decode(&bytes, n).map_err(|e| e.to_string())?;
+        prop_assert!(q2 == q, "roundtrip mismatch");
+        // truncation is rejected
+        if bytes.len() > 5 && !q.indices.is_empty() {
+            prop_assert!(
+                deterministic::TopQuantized::decode(&bytes[..bytes.len() / 2], n).is_err(),
+                "truncated top-k message decoded"
+            );
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,121 @@
+//! Shared case generators for the integration property tests
+//! (`fused_pipeline.rs`, `properties.rs`, `nuqsgd.rs`, `robustness.rs`,
+//! `baselines.rs`). Everything is driven by the seeded
+//! [`qsgd::util::check::Gen`] context, so failures replay deterministically
+//! from the (seed, size) coordinates `forall` reports.
+//!
+//! Each test binary compiles its own copy of this module and uses a
+//! different slice of it, hence the file-level dead_code allowance.
+#![allow(dead_code)]
+
+use qsgd::coding::gradient::Regime;
+use qsgd::quant::{LevelGrid, Norm};
+use qsgd::util::check::Gen;
+use qsgd::util::rng;
+
+/// Adversarial coordinate values: signed zeros, subnormals, magnitudes near
+/// both ends of the f32 range. (NaN/±inf are exercised separately where the
+/// property under test is defined for them.)
+pub const ADVERSARIAL_VALUES: &[f32] = &[
+    0.0,
+    -0.0,
+    // smallest normal and smallest subnormal, both signs
+    f32::MIN_POSITIVE,
+    -f32::MIN_POSITIVE,
+    1e-45,
+    -1e-45,
+    1e-38,
+    -1e-38,
+    1e-30,
+    -1e-30,
+    // near the top of the f32 range (squares overflow to inf under L2)
+    3e38,
+    -3e38,
+    1.0,
+    -1.0,
+];
+
+/// A gradient of length `n`: Gaussian base with adversarial values sprinkled
+/// in, occasionally rescaled to huge/tiny magnitude, occasionally all-zero.
+pub fn gen_vec(g: &mut Gen, n: usize) -> Vec<f32> {
+    let mut v = g.f32_vec(n);
+    match g.usize_in(0, 7) {
+        // all-zero gradient (degenerate buckets end-to-end)
+        0 => v.iter_mut().for_each(|x| *x = 0.0),
+        // whole-vector magnitude stress (scale under/overflow in Norm::scale)
+        1 => {
+            let k = if g.bool() { 1e30 } else { 1e-30 };
+            v.iter_mut().for_each(|x| *x *= k);
+        }
+        _ => {}
+    }
+    // sprinkle adversarial coordinates over ~1/8 of positions
+    if n > 0 {
+        let hits = g.usize_in(0, n.div_ceil(8));
+        for _ in 0..hits {
+            let i = g.usize_in(0, n - 1);
+            let a = ADVERSARIAL_VALUES[g.usize_in(0, ADVERSARIAL_VALUES.len() - 1)];
+            v[i] = a;
+        }
+    }
+    v
+}
+
+/// Dimension + bucket size: small, bucket-boundary-straddling and
+/// whole-vector shapes all get coverage.
+pub fn gen_dims(g: &mut Gen) -> (usize, usize) {
+    let n = g.usize_in(0, g.size);
+    let bucket = [1usize, 3, 16, 64, 512, 4096, usize::MAX][g.usize_in(0, 6)];
+    (n, bucket)
+}
+
+pub fn gen_norm(g: &mut Gen) -> Norm {
+    if g.bool() {
+        Norm::L2
+    } else {
+        Norm::Max
+    }
+}
+
+pub fn gen_regime(g: &mut Gen) -> Option<Regime> {
+    match g.usize_in(0, 2) {
+        0 => None,
+        1 => Some(Regime::Sparse),
+        _ => Some(Regime::Dense),
+    }
+}
+
+/// A level grid of any family: uniform (QSGD), exponential (NUQSGD), or a
+/// random strictly-increasing custom grid.
+pub fn gen_grid(g: &mut Gen) -> LevelGrid {
+    match g.usize_in(0, 2) {
+        0 => LevelGrid::uniform([1u32, 4, 15, 255][g.usize_in(0, 3)]),
+        1 => LevelGrid::exponential([1u32, 2, 4, 8, 16][g.usize_in(0, 4)]),
+        _ => gen_custom_grid(g),
+    }
+}
+
+/// A random valid custom grid: up to 12 strictly increasing levels in
+/// (0, 1), always ending at exactly 1.0.
+pub fn gen_custom_grid(g: &mut Gen) -> LevelGrid {
+    let k = g.usize_in(0, 11);
+    let mut pts: Vec<f32> = (0..k)
+        .map(|_| rng::uniform_f32(g.rng))
+        .filter(|&x| x > 1e-6 && x < 0.999)
+        .collect();
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pts.dedup();
+    pts.push(1.0);
+    LevelGrid::custom(pts).expect("generated grid must be valid")
+}
+
+/// Caller-supplied uniforms in [0, 1) for the deterministic quantizers.
+pub fn gen_uniforms(g: &mut Gen, n: usize) -> Vec<f32> {
+    rng::uniform_vec(g.rng, n)
+}
+
+/// A fresh RNG seed derived from the generation context (so the property
+/// can seed twin compressors identically).
+pub fn gen_seed(g: &mut Gen) -> u64 {
+    (g.u32() as u64) << 32 | g.u32() as u64
+}

@@ -8,6 +8,8 @@
 //! * `quantize_bucket` is statistically unbiased (Lemma 3.1(i) at the
 //!   bucket level — the property the whole pipeline inherits).
 
+mod common;
+
 use qsgd::coding::gradient;
 use qsgd::coding::gradient::Regime;
 use qsgd::coding::{FusedQsgd, QsgdCompressor};
@@ -20,16 +22,11 @@ use qsgd::util::rng::{self, Xoshiro256};
 #[test]
 fn prop_fused_wire_bytes_bit_identical_to_two_phase() {
     forall("fused-vs-two-phase", 140, 4000, |g| {
-        let n = g.usize_in(0, g.size);
-        let v = g.f32_vec(n);
+        let (n, bucket) = common::gen_dims(g);
+        let v = common::gen_vec(g, n);
         let s = [1u32, 4, 15, 255][g.usize_in(0, 3)];
-        let bucket = [16usize, 64, 512, 4096, usize::MAX][g.usize_in(0, 4)];
-        let norm = if g.bool() { Norm::L2 } else { Norm::Max };
-        let regime = match g.usize_in(0, 2) {
-            0 => None,
-            1 => Some(Regime::Sparse),
-            _ => Some(Regime::Dense),
-        };
+        let norm = common::gen_norm(g);
+        let regime = common::gen_regime(g);
         let seed = (g.u32() as u64) << 16 | n as u64;
         let mut oracle = QsgdCompressor { s, bucket, norm, regime };
         let mut fused = FusedQsgd::new(s, bucket, norm, regime);
@@ -51,7 +48,7 @@ fn prop_spec_built_fused_matches_two_phase_oracle() {
     // Through the coordinator's factory (the path the trainers take).
     forall("spec-fused-oracle", 60, 3000, |g| {
         let n = g.usize_in(1, g.size.max(1));
-        let v = g.f32_vec(n);
+        let v = common::gen_vec(g, n);
         let spec = [
             CompressorSpec::qsgd_2bit(),
             CompressorSpec::qsgd_4bit(),

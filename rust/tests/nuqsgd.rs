@@ -1,0 +1,372 @@
+//! NUQSGD / non-uniform level grids through the fused pipeline.
+//!
+//! The validation template from PR 1, generalized per grid:
+//!
+//! * fused and two-phase compressors emit **bit-identical** wire bytes for
+//!   every grid family (uniform, exponential, custom), across regimes,
+//!   norms, bucket sizes and adversarial inputs;
+//! * uniform frames remain **byte-identical to PR 1's v1 wire format**
+//!   (pinned by golden frames computed independently of the encoder);
+//! * quantization onto any grid is statistically unbiased and its empirical
+//!   variance respects the grid's analytic envelope (NUQSGD-style bound for
+//!   the exponential grid);
+//! * v2 frames (in-band grid tag) round-trip through `decode`, `decode_add`
+//!   and the `Compressor` trait.
+
+mod common;
+
+use qsgd::coding::gradient::{self, Regime};
+use qsgd::coding::{FusedQsgd, NuqsgdCompressor, QsgdCompressor};
+use qsgd::coordinator::CompressorSpec;
+use qsgd::prop_assert;
+use qsgd::quant::{stochastic, Compressor, LevelGrid, Norm, QuantBucket, QuantizedGradient};
+use qsgd::util::check::forall;
+use qsgd::util::rng::{self, Xoshiro256};
+
+#[test]
+fn prop_fused_bit_identical_to_two_phase_for_every_grid() {
+    forall("grid-fused-vs-two-phase", 160, 4000, |g| {
+        let (n, bucket) = common::gen_dims(g);
+        let v = common::gen_vec(g, n);
+        let grid = common::gen_grid(g);
+        let norm = common::gen_norm(g);
+        let regime = common::gen_regime(g);
+        let seed = common::gen_seed(g);
+        let mut oracle =
+            NuqsgdCompressor { grid: grid.clone(), bucket, norm, regime };
+        let mut fused = FusedQsgd::with_grid(grid.clone(), bucket, norm, regime);
+        let a = oracle.compress(&v, &mut Xoshiro256::from_u64(seed));
+        let b = fused.compress(&v, &mut Xoshiro256::from_u64(seed));
+        prop_assert!(
+            a == b,
+            "wire bytes differ: n={n} bucket={bucket} {norm:?} {regime:?} grid={}",
+            grid.label()
+        );
+        // the frame decodes, reports the right length, and carries the grid
+        let q = gradient::decode(&a).map_err(|e| e.to_string())?;
+        prop_assert!(q.n == n, "decoded length {} != {n}", q.n);
+        prop_assert!(q.grid == grid, "decoded grid mismatch");
+        // decode_add agrees with decode-then-dequantize for every grid
+        let mut acc1 = vec![0.25f32; n];
+        gradient::decode_add(&a, 0.5, &mut acc1).map_err(|e| e.to_string())?;
+        let mut acc2 = vec![0.25f32; n];
+        q.dequantize_add(0.5, &mut acc2);
+        for i in 0..n {
+            prop_assert!(
+                (acc1[i] - acc2[i]).abs() <= 1e-6 * acc2[i].abs().max(1.0)
+                    || (acc1[i].is_nan() && acc2[i].is_nan()),
+                "decode_add diverges at {i}: {} vs {}",
+                acc1[i],
+                acc2[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_grid_matches_legacy_qsgd_oracle() {
+    // The grid machinery must be invisible for uniform grids: FusedQsgd over
+    // LevelGrid::uniform(s) == the PR 1 QsgdCompressor, byte for byte.
+    forall("uniform-grid-legacy", 80, 3000, |g| {
+        let (n, bucket) = common::gen_dims(g);
+        let v = common::gen_vec(g, n);
+        let s = [1u32, 4, 15, 255][g.usize_in(0, 3)];
+        let norm = common::gen_norm(g);
+        let regime = common::gen_regime(g);
+        let seed = common::gen_seed(g);
+        let mut legacy = QsgdCompressor { s, bucket, norm, regime };
+        let mut grid = FusedQsgd::with_grid(LevelGrid::uniform(s), bucket, norm, regime);
+        let a = legacy.compress(&v, &mut Xoshiro256::from_u64(seed));
+        let b = grid.compress(&v, &mut Xoshiro256::from_u64(seed));
+        prop_assert!(a == b, "uniform grid diverged from legacy: n={n} s={s}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spec_built_nuqsgd_matches_two_phase_oracle() {
+    // Through the coordinator's factory (the path the trainers take).
+    forall("spec-nuqsgd-oracle", 60, 3000, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let v = common::gen_vec(g, n);
+        let spec = [
+            CompressorSpec::nuqsgd_4bit(),
+            CompressorSpec::Nuqsgd { bits: 2, bucket: 64, norm: Norm::Max, regime: None },
+            CompressorSpec::Nuqsgd { bits: 8, bucket: 512, norm: Norm::L2, regime: None },
+        ][g.usize_in(0, 2)]
+        .clone();
+        let seed = common::gen_seed(g);
+        let mut fused = spec.build(n);
+        let mut oracle = spec.build_two_phase(n);
+        let a = fused.compress(&v, &mut Xoshiro256::from_u64(seed));
+        let b = oracle.compress(&v, &mut Xoshiro256::from_u64(seed));
+        prop_assert!(a == b, "{}: build() and build_two_phase() bytes differ", spec.label());
+        let mut acc_a = vec![0.5f32; n];
+        let mut acc_b = vec![0.5f32; n];
+        fused.decompress_add(&a, 0.25, &mut acc_a).map_err(|e| e.to_string())?;
+        oracle.decompress_add(&b, 0.25, &mut acc_b).map_err(|e| e.to_string())?;
+        prop_assert!(acc_a == acc_b, "decode-accumulate differs");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_quantizer_invariants() {
+    forall("grid-quantizer", 120, 2000, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let v = common::gen_vec(g, n);
+        let grid = common::gen_grid(g);
+        let bucket = 1 + g.usize_in(0, n);
+        let norm = common::gen_norm(g);
+        let q = stochastic::quantize_grid(&v, &grid, bucket, norm, g.rng);
+        prop_assert!(q.n == n, "length");
+        prop_assert!(q.s == grid.s(), "s mismatch");
+        let s = grid.s();
+        let d = q.dequantize();
+        let mut off = 0;
+        for b in &q.buckets {
+            prop_assert!(
+                b.levels.iter().all(|&l| l.unsigned_abs() <= s),
+                "level exceeds s"
+            );
+            for i in 0..b.levels.len() {
+                let (x, y) = (v[off + i], d[off + i]);
+                // reconstruction stays inside [0, scale] in magnitude and
+                // preserves sign
+                if b.scale > 0.0 && y != 0.0 {
+                    prop_assert!(y.abs() <= b.scale * 1.0001, "|recon| beyond scale");
+                    if x != 0.0 && !x.is_nan() {
+                        prop_assert!((y > 0.0) == (x > 0.0), "sign flipped at {}", off + i);
+                    }
+                }
+            }
+            off += b.levels.len();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn grid_quantization_is_statistically_unbiased() {
+    // E[Q(v)] = v for both the uniform and the exponential grid (and the
+    // same stochastic-rounding argument covers custom grids).
+    let mut data_rng = Xoshiro256::from_u64(31);
+    let v: Vec<f32> = (0..48).map(|_| rng::normal_f32(&mut data_rng)).collect();
+    let trials = 6000usize;
+    for (grid, norm) in [
+        (LevelGrid::uniform(3), Norm::L2),
+        (LevelGrid::exponential(4), Norm::L2),
+        (LevelGrid::exponential(4), Norm::Max),
+        (LevelGrid::custom(vec![0.17, 0.42, 1.0]).unwrap(), Norm::Max),
+    ] {
+        let mut r = Xoshiro256::stream(7, grid.s() as u64);
+        let mut acc = vec![0.0f64; v.len()];
+        for _ in 0..trials {
+            let q = stochastic::quantize_grid(&v, &grid, v.len(), norm, &mut r);
+            for (a, x) in acc.iter_mut().zip(q.dequantize()) {
+                *a += x as f64;
+            }
+        }
+        let scale = norm.scale(&v) as f64;
+        // worst-case per-coordinate stderr is (gap/2)/√trials with gap ≤
+        // scale; allow a generous 6σ
+        let tol = 6.0 * 0.5 * scale / (trials as f64).sqrt();
+        for (i, (&a, &x)) in acc.iter().zip(&v).enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - x as f64).abs() < tol,
+                "{} coordinate {i} biased: mean {mean} vs {x} (tol {tol})",
+                grid.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn grid_variance_respects_analytic_envelope() {
+    // Empirical E‖Q(v) − v‖² against each grid's rigorous bound for 2-norm
+    // buckets (Lemma 3.1(ii) for uniform; the ε²/4 + ℓ₁√d envelope — the
+    // NUQSGD-style bound — for non-uniform grids). Also cross-check against
+    // the exact sum of per-coordinate rounding variances.
+    let n = 256;
+    let mut data_rng = Xoshiro256::from_u64(33);
+    let v: Vec<f32> = (0..n).map(|_| rng::normal_f32(&mut data_rng)).collect();
+    let vnorm = Norm::L2.scale(&v) as f64;
+    let vnorm2 = vnorm * vnorm;
+    for grid in [
+        LevelGrid::uniform(4),
+        LevelGrid::exponential(4),
+        LevelGrid::exponential(8),
+        LevelGrid::custom(vec![0.05, 0.3, 0.6, 1.0]).unwrap(),
+    ] {
+        // exact expected variance: Σ_i F² · var(a_i) with a_i = |v_i|/F
+        let exact: f64 = v
+            .iter()
+            .map(|&x| vnorm2 * grid.rounding_variance((x.abs() as f64 / vnorm) as f32))
+            .sum();
+        let bound = grid.variance_bound(n) * vnorm2;
+        assert!(
+            exact <= bound,
+            "{}: exact {exact} beats bound {bound}?",
+            grid.label()
+        );
+        let trials = 600;
+        let mut r = Xoshiro256::stream(11, grid.s() as u64);
+        let mut tot = 0.0f64;
+        for _ in 0..trials {
+            let q = stochastic::quantize_grid(&v, &grid, n, Norm::L2, &mut r);
+            let d = q.dequantize();
+            tot += v
+                .iter()
+                .zip(&d)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+        }
+        let emp = tot / trials as f64;
+        assert!(
+            emp <= exact * 1.15 + 1e-12,
+            "{}: empirical {emp} vs exact {exact}",
+            grid.label()
+        );
+        assert!(emp <= bound * 1.05, "{}: empirical {emp} vs bound {bound}", grid.label());
+    }
+}
+
+#[test]
+fn exponential_grid_refines_small_coordinates() {
+    // The NUQSGD rationale: for normalized gradients most coordinates are
+    // far below the bucket scale, where the exponential grid's gaps (and so
+    // its rounding variance) are much finer than the uniform grid's at the
+    // same level count.
+    let uni = LevelGrid::uniform(8);
+    let exp = LevelGrid::exponential(8);
+    for a in [0.002f32, 0.004, 0.01] {
+        assert!(
+            exp.rounding_variance(a) < uni.rounding_variance(a),
+            "a={a}: exp {} vs uniform {}",
+            exp.rounding_variance(a),
+            uni.rounding_variance(a)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire-format goldens: frames assembled from known levels (no RNG), with the
+// expected bytes computed independently of the encoder. These pin the
+// formats: v1 (uniform, PR 1's exact layout) and v2 (in-band grid tag).
+// ---------------------------------------------------------------------------
+
+fn frame(
+    grid: LevelGrid,
+    bucket_size: usize,
+    norm: Norm,
+    n: usize,
+    buckets: Vec<QuantBucket>,
+) -> QuantizedGradient {
+    QuantizedGradient { s: grid.s(), grid, bucket_size, norm, n, buckets }
+}
+
+#[test]
+fn golden_v1_uniform_frames_stay_byte_identical_to_pr1() {
+    // s=1, n=2, bucket=2, max-norm, levels [0, -1], scale 1.0.
+    let q = frame(
+        LevelGrid::uniform(1),
+        2,
+        Norm::Max,
+        2,
+        vec![QuantBucket { scale: 1.0, levels: vec![0, -1] }],
+    );
+    // magic | v1 | regime | norm | Elias(1) | Elias'(2) | Elias(2) | bucket
+    assert_eq!(gradient::encode(&q, Regime::Dense), hex("a515a1fc00000240"));
+    assert_eq!(gradient::encode(&q, Regime::Sparse), hex("a51da1fc00000490"));
+    // and they decode back to the same object
+    assert_eq!(gradient::decode(&hex("a515a1fc00000240")).unwrap(), q);
+}
+
+#[test]
+fn golden_v2_nuqsgd_frame() {
+    // exponential grid s=2 ({0, 1/2, 1}), n=3, bucket=3, max-norm, dense,
+    // levels [1, 0, -2], scale 2.0. Grid tag Elias(1) after the v1 fields.
+    let q = frame(
+        LevelGrid::exponential(2),
+        3,
+        Norm::Max,
+        3,
+        vec![QuantBucket { scale: 2.0, levels: vec![1, 0, -2] }],
+    );
+    let bytes = gradient::encode(&q, Regime::Dense);
+    assert_eq!(bytes, hex("a526518800000010d0"));
+    assert_eq!(gradient::decode(&bytes).unwrap(), q);
+    // dequantizes through the grid's point table: ±scale·{1/2, 1}
+    assert_eq!(gradient::decode(&bytes).unwrap().dequantize(), vec![1.0, 0.0, -2.0]);
+}
+
+#[test]
+fn golden_v2_custom_grid_frame() {
+    // custom grid {0.25, 1.0} (s=2), n=2, bucket=2, L2 norm, sparse,
+    // levels [2, 0], scale 4.0. Grid tag Elias(2), then the two points.
+    let q = frame(
+        LevelGrid::custom(vec![0.25, 1.0]).unwrap(),
+        2,
+        Norm::L2,
+        2,
+        vec![QuantBucket { scale: 4.0, levels: vec![2, 0] }],
+    );
+    let bytes = gradient::encode(&q, Regime::Sparse);
+    assert_eq!(bytes, hex("a52a690fa000000fe00000102000002100"));
+    assert_eq!(gradient::decode(&bytes).unwrap(), q);
+    assert_eq!(gradient::decode(&bytes).unwrap().dequantize(), vec![4.0, 0.0]);
+}
+
+fn hex(s: &str) -> Vec<u8> {
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end trait plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nuqsgd_compressor_roundtrips_and_reports_reasonable_size() {
+    let mut data_rng = Xoshiro256::from_u64(40);
+    let v: Vec<f32> = (0..3000).map(|_| rng::normal_f32(&mut data_rng)).collect();
+    let mut c = FusedQsgd::nuqsgd_with_bits(4, 512);
+    let mut r = Xoshiro256::from_u64(41);
+    let msg = c.compress(&v, &mut r);
+    let back = c.decompress(&msg, v.len()).unwrap();
+    assert_eq!(back.len(), v.len());
+    // reconstruction is bounded by the bucket scale, per coordinate
+    for (cg, cb) in v.chunks(512).zip(back.chunks(512)) {
+        let scale = cg.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for (g, b) in cg.iter().zip(cb) {
+            assert!((g - b).abs() <= scale + 1e-6);
+            // one-sided check: rounding moves at most one grid gap, and the
+            // largest gap of the exponential grid is scale/2
+            assert!((g - b).abs() <= scale / 2.0 + 1e-6);
+        }
+    }
+    // 4-bit-budget NUQSGD stays well below fp32 on the wire
+    assert!(msg.len() * 3 < v.len() * 4, "msg {} bytes", msg.len());
+    // wrong expected length is rejected
+    assert!(c.decompress(&msg, v.len() + 1).is_err());
+}
+
+#[test]
+fn fused_nuqsgd_scratch_reuse_stays_bit_identical_across_varied_lengths() {
+    let mut fused = FusedQsgd::nuqsgd_with_bits(4, 512);
+    let mut oracle = NuqsgdCompressor::with_bits(4, 512);
+    let mut ra = Xoshiro256::from_u64(42);
+    let mut rb = Xoshiro256::from_u64(42);
+    let mut data_rng = Xoshiro256::from_u64(1);
+    for (round, base) in [0usize, 1, 5, 511, 512, 513, 6000, 100, 512, 3].iter().enumerate() {
+        let n = base + round;
+        let v: Vec<f32> = (0..n).map(|_| rng::normal_f32(&mut data_rng)).collect();
+        let a = oracle.compress(&v, &mut ra);
+        let b = fused.compress(&v, &mut rb);
+        assert_eq!(a, b, "round {round} (n={n})");
+    }
+}

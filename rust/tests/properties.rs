@@ -1,6 +1,10 @@
 //! Property-based tests over the coding and quantization substrates
 //! (randomised inputs with seeded replay + size shrinking — see
-//! `qsgd::util::check`; the offline build has no proptest).
+//! `qsgd::util::check`; the offline build has no proptest). Case generators
+//! live in `tests/common` and are shared with `fused_pipeline.rs` and
+//! `nuqsgd.rs`.
+
+mod common;
 
 use qsgd::coding::bitstream::{BitReader, BitWriter};
 use qsgd::coding::{elias, gradient};
@@ -8,7 +12,7 @@ use qsgd::coordinator::exchange::PlanCompressor;
 use qsgd::coordinator::CompressorSpec;
 use qsgd::models::layout::{ParamLayout, QuantPlan};
 use qsgd::prop_assert;
-use qsgd::quant::{deterministic, stochastic, Norm};
+use qsgd::quant::{deterministic, stochastic};
 use qsgd::util::check::forall;
 use qsgd::util::rng;
 
@@ -68,18 +72,24 @@ fn prop_elias_roundtrip_and_length() {
 
 #[test]
 fn prop_gradient_codec_roundtrip() {
+    // Over every grid family: what encode emits, decode reproduces exactly
+    // (levels, scales, dims and the grid itself, via the v1/v2 headers).
     forall("gradient-codec", 120, 4000, |g| {
         let n = g.usize_in(0, g.size);
-        let v = g.f32_vec(n);
-        let s = [1u32, 2, 7, 15, 127][g.usize_in(0, 4)];
+        let v = common::gen_vec(g, n);
+        let grid = common::gen_grid(g);
         let bucket = [16usize, 64, 512, 4096][g.usize_in(0, 3)];
-        let norm = if g.bool() { Norm::L2 } else { Norm::Max };
+        let norm = common::gen_norm(g);
         let u = rng::uniform_vec(g.rng, n);
-        let q = stochastic::quantize_with_uniforms(&v, &u, s, bucket, norm);
+        let q = stochastic::quantize_grid_with_uniforms(&v, &u, &grid, bucket, norm);
         for regime in [gradient::Regime::Sparse, gradient::Regime::Dense] {
             let bytes = gradient::encode(&q, regime);
             let back = gradient::decode(&bytes).map_err(|e| e.to_string())?;
-            prop_assert!(back == q, "roundtrip mismatch {regime:?} n={n} s={s} d={bucket}");
+            prop_assert!(
+                back == q,
+                "roundtrip mismatch {regime:?} n={n} d={bucket} grid={}",
+                grid.label()
+            );
         }
         Ok(())
     });
@@ -89,10 +99,10 @@ fn prop_gradient_codec_roundtrip() {
 fn prop_quantizer_invariants() {
     forall("quantizer", 150, 3000, |g| {
         let n = g.usize_in(1, g.size.max(1));
-        let v = g.f32_vec(n);
+        let v = common::gen_vec(g, n);
         let s = 1 + g.u32() % 200;
         let bucket = 1 + g.usize_in(0, n);
-        let norm = if g.bool() { Norm::L2 } else { Norm::Max };
+        let norm = common::gen_norm(g);
         let q = stochastic::quantize(&v, s, bucket, norm, g.rng);
         prop_assert!(q.n == n, "length");
         let d = q.dequantize();
@@ -102,6 +112,13 @@ fn prop_quantizer_invariants() {
                 b.levels.iter().all(|&l| l.unsigned_abs() <= s),
                 "level exceeds s"
             );
+            if b.scale == 0.0 {
+                // degenerate bucket (zero or non-finite norm, e.g. L2
+                // overflow on adversarial magnitudes): transmits all zeros
+                prop_assert!(b.levels.iter().all(|&l| l == 0), "degenerate bucket nonzero");
+                off += b.levels.len();
+                continue;
+            }
             let tol = b.scale / s as f32 + 1e-5;
             for i in 0..b.levels.len() {
                 prop_assert!(

@@ -1,0 +1,169 @@
+//! Decoder robustness: truncated, bit-flipped and length-lying frames must
+//! come back as `Err` — never a panic, and allocations always bounded by a
+//! dimension cap: the caller's expected length on the
+//! `decode_expecting`/`decode_add` paths the coordinators use, and
+//! `MAX_FRAME_DIM` on raw `decode`. (The sparse regime can legitimately
+//! encode a huge all-zero bucket in ~33 bits, so raw `decode` of an
+//! in-cap sparse header is *by design* allowed to allocate up to the cap —
+//! no stream-length bound exists for it, unlike the dense regime's
+//! one-bit-per-coordinate check.)
+//!
+//! `decode` is deterministic and reads a strict prefix of the stream, so any
+//! truncation below the encoded length must hit exhaustion; bit flips may
+//! legitimately decode (e.g. a flipped scale bit is still a valid frame),
+//! so for those the contract is "Err or a self-consistent Ok".
+
+use qsgd::coding::bitstream::BitWriter;
+use qsgd::coding::gradient::{self, Regime, FRAME_MAGIC, FRAME_VERSION, FRAME_VERSION_GRID};
+use qsgd::coding::{elias, FusedQsgd};
+use qsgd::quant::{Compressor, LevelGrid, Norm};
+use qsgd::util::check::forall;
+use qsgd::util::rng::{self, Xoshiro256};
+
+fn sample_frames() -> Vec<(Vec<u8>, usize)> {
+    let mut data_rng = Xoshiro256::from_u64(5);
+    let v: Vec<f32> = (0..700).map(|_| rng::normal_f32(&mut data_rng)).collect();
+    let mut frames = Vec::new();
+    for (grid, norm, regime) in [
+        (LevelGrid::uniform(7), Norm::Max, Some(Regime::Dense)),
+        (LevelGrid::uniform(1), Norm::L2, Some(Regime::Sparse)),
+        (LevelGrid::exponential(7), Norm::Max, Some(Regime::Dense)),
+        (LevelGrid::custom(vec![0.1, 0.5, 1.0]).unwrap(), Norm::Max, Some(Regime::Sparse)),
+    ] {
+        let mut c = FusedQsgd::with_grid(grid, 64, norm, regime);
+        frames.push((c.compress(&v, &mut Xoshiro256::from_u64(9)), v.len()));
+    }
+    frames
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    for (bytes, n) in sample_frames() {
+        assert!(gradient::decode(&bytes).is_ok(), "baseline frame must decode");
+        for k in 0..bytes.len() {
+            let cut = &bytes[..k];
+            assert!(gradient::decode(cut).is_err(), "truncation at {k}/{} decoded", bytes.len());
+            assert!(gradient::decode_expecting(cut, n).is_err());
+            let mut acc = vec![0.0f32; n];
+            assert!(gradient::decode_add(cut, 1.0, &mut acc).is_err());
+        }
+    }
+}
+
+#[test]
+fn bit_flips_never_panic_and_any_ok_is_self_consistent() {
+    for (bytes, n) in sample_frames() {
+        for bit in 0..bytes.len() * 8 {
+            let mut m = bytes.clone();
+            m[bit / 8] ^= 1 << (7 - bit % 8);
+            // must not panic or OOM; Ok frames must uphold their own header
+            if let Ok(q) = gradient::decode(&m) {
+                let total: usize = q.buckets.iter().map(|b| b.levels.len()).sum();
+                assert_eq!(total, q.n, "bit {bit}: inconsistent decoded shape");
+                assert!(
+                    q.buckets.iter().all(|b| b.levels.iter().all(|&l| l.unsigned_abs() <= q.s)),
+                    "bit {bit}: level beyond s"
+                );
+            }
+            let mut acc = vec![0.0f32; n];
+            let _ = gradient::decode_add(&m, 0.5, &mut acc);
+            let _ = gradient::decode_expecting(&m, n);
+        }
+        // flips inside the first two bytes corrupt magic/version: always Err
+        for bit in 0..12 {
+            let mut m = bytes.clone();
+            m[bit / 8] ^= 1 << (7 - bit % 8);
+            assert!(gradient::decode(&m).is_err(), "header bit {bit} accepted");
+        }
+    }
+}
+
+/// Hand-assemble a frame header lying about its dimensions.
+fn lying_header(s: u64, n: u64, bucket: u64, version: u64, sparse: bool) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write_bits(FRAME_MAGIC, 8);
+    w.write_bits(version, 4);
+    w.write_bit(sparse);
+    w.write_bit(true); // max norm
+    elias::encode(&mut w, s);
+    elias::encode0(&mut w, n);
+    elias::encode(&mut w, bucket);
+    w.into_bytes()
+}
+
+#[test]
+fn hostile_header_dimensions_are_rejected_without_oom() {
+    // n far beyond any plausible model: rejected by the frame cap, cheaply.
+    let huge = lying_header(7, 1 << 50, 1 << 50, FRAME_VERSION, true);
+    assert!(gradient::decode(&huge).is_err());
+    let mut acc = vec![0.0f32; 16];
+    assert!(gradient::decode_add(&huge, 1.0, &mut acc).is_err());
+    assert!(gradient::decode_expecting(&huge, 16).is_err());
+
+    // n within the cap but far beyond the message: decode_expecting bounds
+    // it by the caller's length before any size-proportional allocation...
+    let lying = lying_header(7, 1 << 27, 1 << 27, FRAME_VERSION, true);
+    assert!(gradient::decode_expecting(&lying, 1024).is_err());
+    assert!(gradient::decode_add(&lying, 1.0, &mut acc).is_err());
+    // ...and the dense regime is caught by the bits-remaining check.
+    let lying_dense = lying_header(7, 1 << 27, 512, FRAME_VERSION, false);
+    assert!(gradient::decode(&lying_dense).is_err());
+
+    // s = 0 and absurd s
+    assert!(gradient::decode(&lying_header(0, 8, 8, FRAME_VERSION, false)).is_err());
+    assert!(gradient::decode(&lying_header(1 << 40, 8, 8, FRAME_VERSION, false)).is_err());
+    // zero bucket size
+    assert!(gradient::decode(&lying_header(7, 8, 0, FRAME_VERSION, false)).is_err());
+    // unsupported version
+    assert!(gradient::decode(&lying_header(7, 8, 8, 3, false)).is_err());
+}
+
+#[test]
+fn hostile_grid_tags_are_rejected() {
+    let with_tag = |tag: u64, s: u64, points: &[f32]| -> Vec<u8> {
+        let mut w = BitWriter::new();
+        w.write_bits(FRAME_MAGIC, 8);
+        w.write_bits(FRAME_VERSION_GRID, 4);
+        w.write_bit(false);
+        w.write_bit(true);
+        elias::encode(&mut w, s);
+        elias::encode0(&mut w, 4);
+        elias::encode(&mut w, 4);
+        elias::encode(&mut w, tag);
+        for &p in points {
+            w.write_f32(p);
+        }
+        w.into_bytes()
+    };
+    // unknown tag
+    assert!(gradient::decode(&with_tag(9, 2, &[])).is_err());
+    // exponential grid deeper than f32 can represent
+    assert!(gradient::decode(&with_tag(1, 200, &[])).is_err());
+    // custom grid: non-monotone, non-positive, NaN, not ending at 1, and a
+    // point count the stream cannot back
+    assert!(gradient::decode(&with_tag(2, 2, &[0.5, 0.25])).is_err());
+    assert!(gradient::decode(&with_tag(2, 2, &[-0.5, 1.0])).is_err());
+    assert!(gradient::decode(&with_tag(2, 2, &[f32::NAN, 1.0])).is_err());
+    assert!(gradient::decode(&with_tag(2, 2, &[0.25, 0.5])).is_err());
+    assert!(gradient::decode(&with_tag(2, 4096, &[0.25, 1.0])).is_err());
+    // a truncated-but-valid-shape grid still decodes the grid, then fails on
+    // the missing bucket data
+    assert!(gradient::decode(&with_tag(2, 2, &[0.25, 1.0])).is_err());
+}
+
+#[test]
+fn prop_random_bytes_never_panic() {
+    forall("fuzz-decode", 300, 600, |g| {
+        let len = g.usize_in(0, g.size);
+        let mut bytes = vec![0u8; len];
+        for b in bytes.iter_mut() {
+            *b = (g.u32() & 0xff) as u8;
+        }
+        // fully random streams: almost always Err; required: no panic/OOM
+        let _ = gradient::decode(&bytes);
+        let mut acc = vec![0.0f32; 64];
+        let _ = gradient::decode_add(&bytes, 1.0, &mut acc);
+        let _ = gradient::decode_expecting(&bytes, 64);
+        Ok(())
+    });
+}
