@@ -1,23 +1,32 @@
-//! L3 hot-path microbenchmarks: quantization, Elias coding, end-to-end
-//! encode/decode throughput, and the fused zero-allocation pipeline vs the
-//! two-phase oracle (single-thread and 8-worker parallel). These numbers
-//! feed `CostModel` calibration and the §Perf log in EXPERIMENTS.md.
+//! L3 hot-path microbenchmarks: quantization (SIMD vs scalar oracle), Elias
+//! coding, end-to-end encode/decode throughput, the fused zero-allocation
+//! pipeline vs the two-phase oracle (single-thread and 8-worker parallel),
+//! and intra-message parallel decode over directory-bearing frames. These
+//! numbers feed `CostModel` calibration and the §Perf log in EXPERIMENTS.md.
 //!
 //! A counting global allocator verifies the tentpole invariant: the fused
-//! encode loop performs **zero** steady-state heap allocations.
+//! encode loop performs **zero** steady-state heap allocations (directory
+//! emission included).
 //!
-//! Run: `cargo bench --bench coding_hotpath`
+//! Every section is recorded into `BENCH_coding_hotpath.json`
+//! (median/p10/p90 ns, ns/coord, alloc counts) so the perf trajectory is
+//! machine-readable across PRs; CI uploads it as an artifact and compares
+//! `ns_per_coord` against the committed baseline.
+//!
+//! Run: `cargo bench --bench coding_hotpath` (pin `QSGD_THREADS` for
+//! reproducible parallel sections).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use qsgd::bench::{section, Bench};
+use qsgd::bench::{section, Bench, Report, Sampled};
 use qsgd::coding::gradient::{self, Regime};
 use qsgd::coding::FusedEncoder;
 use qsgd::coordinator::CompressorSpec;
 use qsgd::quant::{stochastic, Compressor, LevelGrid, Norm};
 use qsgd::util::par;
 use qsgd::util::rng::{self, Xoshiro256};
+use rand_core::RngCore;
 
 /// Counts every allocation and reallocation (frees are not interesting for
 /// the zero-alloc steady-state check).
@@ -50,6 +59,7 @@ fn alloc_count() -> u64 {
 
 fn main() {
     let b = Bench::default();
+    let mut report = Report::new("coding_hotpath");
     let mut rng = Xoshiro256::from_u64(0);
     let n = 1 << 20; // 1M coordinates ≈ a mid-size model shard
     let grad = rng::normal_vec(&mut rng, n);
@@ -67,6 +77,49 @@ fn main() {
             stochastic::quantize(&grad, s, bucket, norm, &mut r)
         });
         s1.report_throughput(coords * 4.0);
+        report.add("quantize", &s1, Some(coords));
+    }
+
+    section("SIMD level assignment vs scalar oracle (1M coords, tentpole)");
+    {
+        let bucket = 512usize;
+        let mut words = vec![0u8; bucket * 4];
+        let mut levels = vec![0i32; bucket];
+        let mut r = Xoshiro256::from_u64(11);
+        // identical RNG consumption in both variants ⇒ identical work
+        let mut run_grid = |name: &str, grid: &LevelGrid, simd: bool| -> Sampled {
+            let sampled = b.run(name, || {
+                let mut nz = 0i64;
+                for c in grad.chunks(bucket) {
+                    let wds = &mut words[..c.len() * 4];
+                    r.fill_bytes(wds);
+                    let lv = &mut levels[..c.len()];
+                    let scale = if simd {
+                        stochastic::quantize_bucket_into_grid(c, wds, grid, Norm::Max, lv)
+                    } else {
+                        stochastic::quantize_bucket_into_grid_scalar(c, wds, grid, Norm::Max, lv)
+                    };
+                    nz += lv.iter().filter(|&&l| l != 0).count() as i64 + scale as i64;
+                }
+                nz
+            });
+            sampled.report_throughput(coords * 4.0);
+            sampled
+        };
+        let uni_simd = run_grid("uniform s=7 SIMD (8-lane)", &LevelGrid::uniform(7), true);
+        let uni_scalar = run_grid("uniform s=7 scalar oracle", &LevelGrid::uniform(7), false);
+        let exp = LevelGrid::exponential(7);
+        let exp_simd = run_grid("nuqsgd s=7 exponent fast path", &exp, true);
+        let exp_scalar = run_grid("nuqsgd s=7 partition_point oracle", &exp, false);
+        let uni_speedup = uni_scalar.median() / uni_simd.median();
+        let exp_speedup = exp_scalar.median() / exp_simd.median();
+        println!("  uniform SIMD vs scalar: {uni_speedup:.2}x");
+        println!("  exponential fast path vs binary search: {exp_speedup:.2}x");
+        for s in [&uni_simd, &uni_scalar, &exp_simd, &exp_scalar] {
+            report.add("simd_levels", s, Some(coords));
+        }
+        report.add_metric("simd_levels", "uniform_simd_speedup", uni_speedup);
+        report.add_metric("simd_levels", "exponential_fastpath_speedup", exp_speedup);
     }
 
     section("entropy code (quantized 4-bit/512, 1M coords)");
@@ -74,8 +127,10 @@ fn main() {
     let q = stochastic::quantize(&grad, 7, 512, Norm::Max, &mut r);
     let enc_sparse = b.run("encode sparse", || gradient::encode(&q, Regime::Sparse));
     enc_sparse.report_throughput(coords * 4.0);
+    report.add("entropy_code", &enc_sparse, Some(coords));
     let enc_dense = b.run("encode dense", || gradient::encode(&q, Regime::Dense));
     enc_dense.report_throughput(coords * 4.0);
+    report.add("entropy_code", &enc_dense, Some(coords));
     let bytes_sparse = gradient::encode(&q, Regime::Sparse);
     let bytes_dense = gradient::encode(&q, Regime::Dense);
     println!(
@@ -84,10 +139,48 @@ fn main() {
         bytes_dense.len(),
         n
     );
+    report.add_metric("entropy_code", "sparse_wire_bytes", bytes_sparse.len() as f64);
+    report.add_metric("entropy_code", "dense_wire_bytes", bytes_dense.len() as f64);
     let dec = b.run("decode sparse", || gradient::decode(&bytes_sparse).unwrap());
     dec.report_throughput(coords * 4.0);
+    report.add("entropy_code", &dec, Some(coords));
     let dec2 = b.run("decode dense", || gradient::decode(&bytes_dense).unwrap());
     dec2.report_throughput(coords * 4.0);
+    report.add("entropy_code", &dec2, Some(coords));
+
+    section("intra-message parallel decode (1M coords, directory frame)");
+    {
+        // at 1M coords / 512-bucket the default rule emits the directory
+        assert_eq!(bytes_dense[1] >> 4, gradient::FRAME_VERSION_DIR as u8);
+        let mut serial_acc = vec![0.0f32; n];
+        gradient::decode_add(&bytes_dense, 0.125, &mut serial_acc).unwrap();
+        // one reused accumulator: the timed body is fill + decode, never an
+        // allocation, so ns/coord tracks the decoder rather than the heap
+        let mut acc = vec![0.0f32; n];
+        let s_serial = b.run("decode_add serial (dense 4-bit/512)", || {
+            acc.fill(0.0);
+            gradient::decode_add(&bytes_dense, 0.125, &mut acc).unwrap();
+            (acc[0], acc[n - 1])
+        });
+        s_serial.report_throughput(coords * 4.0);
+        report.add("intra_decode", &s_serial, Some(coords));
+        for threads in [2usize, 4, 8] {
+            let s_par = b.run(&format!("par_decode_add {threads} threads"), || {
+                acc.fill(0.0);
+                gradient::par_decode_add_threads(&bytes_dense, 0.125, &mut acc, threads).unwrap();
+                (acc[0], acc[n - 1])
+            });
+            s_par.report_throughput(coords * 4.0);
+            report.add("intra_decode", &s_par, Some(coords));
+            let speedup = s_serial.median() / s_par.median();
+            println!("  par_decode_add x{threads} vs serial: {speedup:.2}x");
+            report.add_metric("intra_decode", &format!("speedup_{threads}t"), speedup);
+            // and it is bit-identical to the serial walk
+            acc.fill(0.0);
+            gradient::par_decode_add_threads(&bytes_dense, 0.125, &mut acc, threads).unwrap();
+            assert_eq!(acc, serial_acc, "parallel decode diverged at {threads} threads");
+        }
+    }
 
     section("fused pipeline (tentpole): zero-alloc encode vs two-phase");
     let spec = CompressorSpec::qsgd_4bit();
@@ -95,6 +188,7 @@ fn main() {
     let mut r = Xoshiro256::from_u64(5);
     let s_two = b.run("two-phase compress 4-bit/512", || two_phase.compress(&grad, &mut r));
     s_two.report_throughput(coords * 4.0);
+    report.add("fused_pipeline", &s_two, Some(coords));
 
     let mut fused = FusedEncoder::new(7, 512, Norm::Max, None);
     fused.reserve(n); // pre-size the bitstream: zero allocs from call one
@@ -105,13 +199,16 @@ fn main() {
         out.len()
     });
     s_fused.report_throughput(coords * 4.0);
+    report.add("fused_pipeline", &s_fused, Some(coords));
     println!(
         "  fused vs two-phase, single thread: {:.2}x",
         s_two.median() / s_fused.median()
     );
+    report.add_metric("fused_pipeline", "fused_speedup", s_two.median() / s_fused.median());
 
     // Zero-allocation steady state: one warm call sizes the level/word
-    // scratch, then a measured window must not touch the heap at all.
+    // scratch (and the directory staging buffer), then a measured window
+    // must not touch the heap at all.
     fused.encode_into(&grad, &mut r, &mut out);
     let before = alloc_count();
     for _ in 0..16 {
@@ -119,6 +216,7 @@ fn main() {
     }
     let allocs = alloc_count() - before;
     println!("  steady-state heap allocations over 16 fused encodes: {allocs} (must be 0)");
+    report.add_metric("fused_pipeline", "steady_state_allocs", allocs as f64);
     assert_eq!(allocs, 0, "fused encode loop must not allocate in steady state");
 
     section("NUQSGD (exponential grid) through the fused pipeline");
@@ -127,6 +225,7 @@ fn main() {
     let mut r = Xoshiro256::from_u64(6);
     let s_nu_two = b.run("two-phase NUQSGD 4-bit/512", || nu_two.compress(&grad, &mut r));
     s_nu_two.report_throughput(coords * 4.0);
+    report.add("nuqsgd", &s_nu_two, Some(coords));
     let mut nu_fused = FusedEncoder::with_grid(LevelGrid::exponential(7), 512, Norm::Max, None);
     nu_fused.reserve(n * 2);
     let mut nu_out: Vec<u8> = Vec::with_capacity(n * 2);
@@ -136,6 +235,7 @@ fn main() {
         nu_out.len()
     });
     s_nu_fused.report_throughput(coords * 4.0);
+    report.add("nuqsgd", &s_nu_fused, Some(coords));
     println!(
         "  NUQSGD fused vs two-phase, single thread: {:.2}x",
         s_nu_two.median() / s_nu_fused.median()
@@ -160,6 +260,7 @@ fn main() {
     }
     let allocs = alloc_count() - before;
     println!("  steady-state heap allocations over 16 fused NUQSGD encodes: {allocs} (must be 0)");
+    report.add_metric("nuqsgd", "steady_state_allocs", allocs as f64);
     assert_eq!(allocs, 0, "fused NUQSGD encode loop must not allocate in steady state");
 
     section("8-worker parallel encode (acceptance: ≥2x vs sequential two-phase)");
@@ -185,6 +286,7 @@ fn main() {
         total
     });
     s_seq.report_throughput(coords * 4.0 * K as f64);
+    report.add("par_encode", &s_seq, Some(coords * K as f64));
     let mut par_lanes = mk_lanes(false);
     let s_par = b.run("parallel fused x8 (scoped pool)", || {
         par::par_map_mut(&mut par_lanes, |_, lane| lane.c.compress(&grad, &mut lane.rng).len())
@@ -192,8 +294,10 @@ fn main() {
             .sum::<usize>()
     });
     s_par.report_throughput(coords * 4.0 * K as f64);
+    report.add("par_encode", &s_par, Some(coords * K as f64));
     let speedup = s_seq.median() / s_par.median();
     println!("  parallel fused x8 vs sequential two-phase x8: {speedup:.2}x (target ≥2x)");
+    report.add_metric("par_encode", "speedup_x8", speedup);
     // Same seeds ⇒ the two paths must also agree byte-for-byte.
     let mut a = mk_lanes(true);
     let mut c = mk_lanes(false);
@@ -218,11 +322,13 @@ fn main() {
         let mut r = Xoshiro256::from_u64(3);
         let enc = b.run(&format!("compress {}", spec.label()), || c.compress(&grad, &mut r));
         enc.report_throughput(coords * 4.0);
+        report.add("end_to_end", &enc, Some(coords));
         let msg = c.compress(&grad, &mut r);
         let dec = b.run(&format!("decompress {}", spec.label()), || {
             c.decompress(&msg, n).unwrap()
         });
         dec.report_throughput(coords * 4.0);
+        report.add("end_to_end", &dec, Some(coords));
     }
 
     section("decode-side aggregation (K=8 peers)");
@@ -237,6 +343,7 @@ fn main() {
         acc
     });
     agg.report_throughput(coords * 4.0 * 8.0);
+    report.add("aggregation", &agg, Some(coords * 8.0));
     // Fused wire→accumulator path (§6 sparsity exploitation): sparse s=1
     // messages aggregate in O(nnz) per peer.
     let sparse_msgs: Vec<Vec<u8>> = (0..8)
@@ -253,6 +360,7 @@ fn main() {
         acc
     });
     agg2.report_throughput(coords * 4.0 * 8.0);
+    report.add("aggregation", &agg2, Some(coords * 8.0));
     let dense_msgs: Vec<Vec<u8>> = qs.iter().map(gradient::encode_auto).collect();
     let agg3 = b.run("decode_add x8 (4-bit/512, from wire)", || {
         let mut acc = vec![0.0f32; n];
@@ -262,14 +370,22 @@ fn main() {
         acc
     });
     agg3.report_throughput(coords * 4.0 * 8.0);
-    // Parallel grouped decode (collectives::par_decode_mean drives this in
-    // the trainer); decode-side parallelism beyond grouping is a ROADMAP
-    // open item.
+    report.add("aggregation", &agg3, Some(coords * 8.0));
+    // Both levels of decode parallelism: message groups on the pool, and
+    // each directory-bearing frame's buckets under the leftover budget.
     let agg4 = b.run("par_decode_mean x8 (4-bit/512)", || {
-        qsgd::collectives::par_decode_mean(&dense_msgs, n, 1.0 / 8.0, |m, a, acc| {
-            gradient::decode_add(m, a, acc).map(|_| ())
+        qsgd::collectives::par_decode_mean(&dense_msgs, n, 1.0 / 8.0, |m, a, acc, t| {
+            gradient::par_decode_add_threads(m, a, acc, t).map(|_| ())
         })
         .unwrap()
     });
     agg4.report_throughput(coords * 4.0 * 8.0);
+    report.add("aggregation", &agg4, Some(coords * 8.0));
+    report.add_metric(
+        "aggregation",
+        "par_decode_mean_speedup_vs_serial",
+        agg3.median() / agg4.median(),
+    );
+
+    report.write("BENCH_coding_hotpath.json").expect("bench report must be writable");
 }

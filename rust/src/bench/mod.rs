@@ -3,7 +3,10 @@
 //! `cargo bench` targets declare `harness = false` and drive this module:
 //! warmup, calibrated iteration counts, multiple samples, median/p10/p90
 //! reporting, and optional throughput lines. Output is plain text tables so
-//! bench logs read like the paper's.
+//! bench logs read like the paper's. [`Report`] additionally collects every
+//! section into a machine-readable JSON file (e.g.
+//! `BENCH_coding_hotpath.json`) so the perf trajectory is diffable across
+//! PRs and checkable in CI.
 
 use std::time::Instant;
 
@@ -67,6 +70,12 @@ impl Bench {
     /// Benchmark `f`, which performs ONE unit of work per call. Returns
     /// per-iteration timings. A `black_box`-style sink prevents the optimizer
     /// from eliding the closure's result: return something observable.
+    ///
+    /// Every section takes the same shape: timed warmup + calibration, one
+    /// discarded full-length warmup sample (cold caches and frequency ramps
+    /// on shared CI runners otherwise pollute the first measurement), then
+    /// `samples` measured samples reported as median/p10/p90 — never a
+    /// single timed pass.
     pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Sampled {
         // Warmup + calibration.
         let t0 = Instant::now();
@@ -78,6 +87,10 @@ impl Bench {
         let per_iter = t0.elapsed().as_secs_f64() / iters_done as f64;
         let iters = ((self.sample_target_s / per_iter).ceil() as u64).max(1);
 
+        // Discarded warmup sample at the measured length.
+        for _ in 0..iters {
+            sink(f());
+        }
         let mut samples = Vec::with_capacity(self.samples);
         for _ in 0..self.samples {
             let t = Instant::now();
@@ -87,6 +100,110 @@ impl Bench {
             samples.push(t.elapsed().as_secs_f64() / iters as f64);
         }
         Sampled { name: name.to_string(), samples }
+    }
+}
+
+/// Machine-readable bench results: every timed section plus scalar metrics
+/// (alloc counts, speedups, wire sizes), serialized as JSON so the perf
+/// trajectory is trackable across PRs. The advisory CI perf lane compares
+/// the emitted file against a committed baseline.
+///
+/// Schema (`"schema": 1`):
+/// ```json
+/// {"bench": "...", "schema": 1,
+///  "results": [{"section": "...", "name": "...", "median_ns": 1.0,
+///               "p10_ns": 1.0, "p90_ns": 1.0, "samples": 12,
+///               "coords": 1048576, "ns_per_coord": 1.0}],
+///  "metrics": [{"section": "...", "name": "...", "value": 1.0}]}
+/// ```
+pub struct Report {
+    bench: String,
+    results: Vec<String>,
+    metrics: Vec<String>,
+}
+
+impl Report {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), results: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Record a timed section. `coords` (work items per iteration) adds the
+    /// normalized `ns_per_coord` field the regression check keys on.
+    pub fn add(&mut self, section: &str, s: &Sampled, coords: Option<f64>) {
+        let med_ns = s.median() * 1e9;
+        let mut row = format!(
+            "{{\"section\": {}, \"name\": {}, \"median_ns\": {}, \"p10_ns\": {}, \
+             \"p90_ns\": {}, \"samples\": {}",
+            json_str(section),
+            json_str(&s.name),
+            json_num(med_ns),
+            json_num(stats::percentile(&s.samples, 10.0) * 1e9),
+            json_num(stats::percentile(&s.samples, 90.0) * 1e9),
+            s.samples.len()
+        );
+        if let Some(c) = coords {
+            row.push_str(&format!(
+                ", \"coords\": {}, \"ns_per_coord\": {}",
+                json_num(c),
+                json_num(med_ns / c)
+            ));
+        }
+        row.push('}');
+        self.results.push(row);
+    }
+
+    /// Record a scalar metric (alloc count, speedup, message bytes, …).
+    pub fn add_metric(&mut self, section: &str, name: &str, value: f64) {
+        self.metrics.push(format!(
+            "{{\"section\": {}, \"name\": {}, \"value\": {}}}",
+            json_str(section),
+            json_str(name),
+            json_num(value)
+        ));
+    }
+
+    /// Serialize to the JSON document described above.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"bench\": {},\n  \"schema\": 1,\n  \"results\": [\n    {}\n  ],\n  \
+             \"metrics\": [\n    {}\n  ]\n}}\n",
+            json_str(&self.bench),
+            self.results.join(",\n    "),
+            self.metrics.join(",\n    ")
+        )
+    }
+
+    /// Write the JSON next to the bench's working directory (cargo runs
+    /// benches from the workspace root) and echo the path.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("\nwrote {path}");
+        Ok(())
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: finite floats only (NaN/inf are not valid JSON → null).
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -114,6 +231,28 @@ pub fn row(cols: &[String], widths: &[usize]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn report_emits_valid_json() {
+        let mut rep = Report::new("unit");
+        let s = Sampled { name: "q \"x\"\n".into(), samples: vec![1e-6, 2e-6, 3e-6] };
+        rep.add("sec", &s, Some(1024.0));
+        rep.add("sec2", &s, None);
+        rep.add_metric("sec", "allocs", 0.0);
+        rep.add_metric("sec", "nan-guard", f64::NAN);
+        let doc = crate::util::json::parse(&rep.to_json()).expect("report must parse");
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(doc.get("schema").unwrap().as_usize().unwrap(), 1);
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("coords").unwrap().as_f64(), Some(1024.0));
+        let npc = results[0].get("ns_per_coord").unwrap().as_f64().unwrap();
+        assert!((npc - 2e3 / 1024.0).abs() < 1e-9, "ns/coord {npc}");
+        assert!(results[1].get("coords").is_none());
+        let metrics = doc.get("metrics").unwrap().as_arr().unwrap();
+        assert_eq!(metrics.len(), 2);
+        assert_eq!(metrics[1].get("value").unwrap(), &crate::util::json::Json::Null);
+    }
 
     #[test]
     fn bench_produces_samples() {

@@ -79,6 +79,28 @@ impl BitWriter {
         &self.buf
     }
 
+    /// Zero-pad to the next byte boundary (no-op when already aligned).
+    /// Directory frames byte-align each bucket payload so decoders can
+    /// jump to any bucket by byte offset.
+    #[inline]
+    pub fn align_to_byte(&mut self) {
+        let rem = self.fill % 8;
+        if rem != 0 {
+            self.write_bits(0, 8 - rem);
+        }
+    }
+
+    /// Append whole bytes to a byte-aligned stream (the directory frame
+    /// splices the pre-encoded bucket payload after the header this way).
+    pub fn extend_aligned(&mut self, bytes: &[u8]) {
+        debug_assert_eq!(self.fill % 8, 0, "stream must be byte-aligned");
+        while self.fill >= 8 {
+            self.fill -= 8;
+            self.buf.push((self.acc >> self.fill) as u8);
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
     /// Reset to an empty stream, keeping the allocated capacity.
     pub fn reset(&mut self) {
         self.buf.clear();
@@ -161,6 +183,21 @@ impl<'a> BitReader<'a> {
     #[inline]
     pub fn read_f32(&mut self) -> Result<f32, BitstreamExhausted> {
         Ok(f32::from_bits(self.read_bits(32)? as u32))
+    }
+
+    /// Skip ahead to the next byte boundary (never past the end: the
+    /// stream's total bit count is itself byte-aligned).
+    #[inline]
+    pub fn align_to_byte(&mut self) {
+        self.pos = (self.pos + 7) & !7;
+    }
+
+    /// Current byte offset into the stream. Only meaningful on a
+    /// byte-aligned reader (directory frames align before the payload).
+    #[inline]
+    pub fn byte_pos(&self) -> usize {
+        debug_assert_eq!(self.pos % 8, 0, "reader not byte-aligned");
+        (self.pos / 8) as usize
     }
 
     /// Peek the next `count ≤ 32` bits without consuming, zero-padded past
@@ -260,6 +297,29 @@ mod tests {
             reused.write_bits(round, 3);
             assert_eq!(reused.finish(), owned.into_bytes().as_slice());
         }
+    }
+
+    #[test]
+    fn alignment_and_aligned_extend() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.align_to_byte();
+        assert_eq!(w.len_bits(), 8);
+        w.align_to_byte(); // idempotent
+        assert_eq!(w.len_bits(), 8);
+        w.extend_aligned(&[0xde, 0xad]);
+        w.write_bits(0b1, 1);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes, vec![0b1010_0000, 0xde, 0xad, 0b1000_0000]);
+
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        r.align_to_byte();
+        assert_eq!(r.byte_pos(), 1);
+        r.align_to_byte(); // idempotent
+        assert_eq!(r.byte_pos(), 1);
+        assert_eq!(r.read_bits(16).unwrap(), 0xdead);
+        assert!(r.read_bit().unwrap());
     }
 
     #[test]

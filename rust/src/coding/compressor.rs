@@ -54,6 +54,16 @@ impl Compressor for QsgdCompressor {
         gradient::decode_add_expecting(msg, alpha, acc)
     }
 
+    fn decompress_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        gradient::par_decode_add_expecting(msg, alpha, acc, threads)
+    }
+
     fn name(&self) -> String {
         let b = (self.s + 1).next_power_of_two().trailing_zeros() + 1;
         format!("qsgd(s={},~{}bit,bucket={},{:?})", self.s, b, self.bucket, self.norm)
@@ -108,6 +118,16 @@ impl Compressor for NuqsgdCompressor {
 
     fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
         gradient::decode_add_expecting(msg, alpha, acc)
+    }
+
+    fn decompress_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        gradient::par_decode_add_expecting(msg, alpha, acc, threads)
     }
 
     fn name(&self) -> String {

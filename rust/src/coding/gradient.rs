@@ -19,6 +19,7 @@ use anyhow::{bail, ensure, Result};
 use super::bitstream::{BitReader, BitWriter};
 use super::elias;
 use crate::quant::{LevelGrid, Norm, QuantBucket, QuantizedGradient};
+use crate::util::par;
 
 /// Which coding regime a bucket was encoded with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -213,21 +214,46 @@ pub fn decode_bucket_dense_with(
 /// server may receive messages from heterogeneously-configured workers).
 ///
 /// Layout: magic(8) | version(4) | regime(1) | norm(1) | s via Elias |
-/// n via Elias' | bucket_size via Elias | [v2 only: grid tag via Elias,
-/// then for custom grids the s grid points as raw f32s].
+/// n via Elias' | bucket_size via Elias | [v2/v3: grid tag via Elias,
+/// then for custom grids the s grid points as raw f32s] | [v3 only: the
+/// bucket-offset directory — one Elias(byte_len + 1) per bucket — then
+/// zero-padding to the next byte boundary, then the bucket payloads, each
+/// starting byte-aligned at the cumulative offset].
 ///
 /// Version 1 is exactly the pre-grid (uniform QSGD) format — uniform frames
 /// are emitted as v1, byte-identical to what PR 1 shipped. Non-uniform
 /// grids bump the version nibble to 2 and append the grid tag, so old
-/// decoders fail loudly on frames they cannot dequantize.
+/// decoders fail loudly on frames they cannot dequantize. Version 3 frames
+/// additionally carry the bucket-offset directory (emitted past
+/// [`use_directory_default`]'s size threshold), which lets a decoder fan
+/// per-bucket work lists out across threads ([`par_decode_add`]) instead
+/// of walking the entropy-coded stream serially.
 pub const FRAME_MAGIC: u64 = 0xA5;
 pub const FRAME_VERSION: u64 = 1;
 /// Frame version carrying an in-band [`LevelGrid`] tag.
 pub const FRAME_VERSION_GRID: u64 = 2;
+/// Frame version carrying a grid tag *and* a bucket-offset directory.
+pub const FRAME_VERSION_DIR: u64 = 3;
 
-/// Grid tags in v2 frames.
+/// Grid tags in v2/v3 frames (`GRID_TAG_UNIFORM` appears only in v3:
+/// uniform grids without a directory stay on the tagless v1 layout).
 const GRID_TAG_EXPONENTIAL: u64 = 1;
 const GRID_TAG_CUSTOM: u64 = 2;
+const GRID_TAG_UNIFORM: u64 = 3;
+
+/// Frames at or above this many coordinates (with ≥ 2 buckets) carry the
+/// bucket-offset directory by default. Below it the ~1–2 bytes/bucket of
+/// directory plus padding outweighs any decode-parallelism win; above it
+/// the overhead is <1% of the payload at the paper's 4-bit/512
+/// configuration.
+pub const DIRECTORY_MIN_COORDS: usize = 1 << 16;
+
+/// The shared default rule for emitting the bucket-offset directory. Both
+/// the two-phase [`encode`] and the fused pipeline apply exactly this rule,
+/// which is what keeps their wire bytes bit-identical at every size.
+pub fn use_directory_default(n: usize, bucket_size: usize) -> bool {
+    n >= DIRECTORY_MIN_COORDS && n.div_ceil(bucket_size.max(1)) >= 2
+}
 
 /// Hard ceiling on the dimension a frame header may declare. Protects the
 /// unchecked [`decode`] path from hostile headers that would otherwise drive
@@ -286,6 +312,37 @@ pub fn write_frame_header_grid(
     }
 }
 
+/// v3 header: the v2 fields with the version nibble bumped, plus a grid
+/// tag for *every* grid family (uniform included — v3 is not tagless). The
+/// directory itself follows the header; [`encode_with_directory`] and the
+/// fused pipeline write it from their recorded per-bucket byte lengths.
+pub fn write_frame_header_dir(
+    w: &mut BitWriter,
+    grid: &LevelGrid,
+    n: usize,
+    bucket_size: usize,
+    norm: Norm,
+    regime: Regime,
+) {
+    w.write_bits(FRAME_MAGIC, 8);
+    w.write_bits(FRAME_VERSION_DIR, 4);
+    w.write_bit(matches!(regime, Regime::Sparse));
+    w.write_bit(matches!(norm, Norm::Max));
+    elias::encode(w, grid.s() as u64);
+    elias::encode0(w, n as u64);
+    elias::encode(w, bucket_size as u64);
+    match grid {
+        LevelGrid::Uniform { .. } => elias::encode(w, GRID_TAG_UNIFORM),
+        LevelGrid::Exponential { .. } => elias::encode(w, GRID_TAG_EXPONENTIAL),
+        LevelGrid::Custom { points } => {
+            elias::encode(w, GRID_TAG_CUSTOM);
+            for &p in points.iter() {
+                w.write_f32(p);
+            }
+        }
+    }
+}
+
 fn write_header(w: &mut BitWriter, g: &QuantizedGradient, regime: Regime) {
     debug_assert_eq!(g.s, g.grid.s());
     write_frame_header_grid(w, &g.grid, g.n, g.bucket_size, g.norm, regime)
@@ -298,13 +355,17 @@ struct Header {
     grid: LevelGrid,
     n: usize,
     bucket_size: usize,
+    /// Version 3: a bucket-offset directory follows the header.
+    dir: bool,
 }
 
 fn read_header(r: &mut BitReader) -> Result<Header> {
     ensure!(r.read_bits(8)? == FRAME_MAGIC, "bad frame magic");
     let version = r.read_bits(4)?;
     ensure!(
-        version == FRAME_VERSION || version == FRAME_VERSION_GRID,
+        version == FRAME_VERSION
+            || version == FRAME_VERSION_GRID
+            || version == FRAME_VERSION_DIR,
         "unsupported frame version {version}"
     );
     let regime = if r.read_bit()? { Regime::Sparse } else { Regime::Dense };
@@ -321,6 +382,7 @@ fn read_header(r: &mut BitReader) -> Result<Header> {
         LevelGrid::Uniform { s }
     } else {
         match elias::decode(r)? {
+            GRID_TAG_UNIFORM if version == FRAME_VERSION_DIR => LevelGrid::Uniform { s },
             GRID_TAG_EXPONENTIAL => {
                 ensure!(
                     s <= crate::quant::grid::MAX_EXPONENTIAL_LEVELS,
@@ -345,7 +407,55 @@ fn read_header(r: &mut BitReader) -> Result<Header> {
             tag => bail!("unknown grid tag {tag}"),
         }
     };
-    Ok(Header { regime, norm, s, grid, n, bucket_size })
+    Ok(Header { regime, norm, s, grid, n, bucket_size, dir: version == FRAME_VERSION_DIR })
+}
+
+/// Smallest byte length a legitimate bucket payload can have: the 32-bit
+/// scale plus at least one bit of level data (dense `d ≥ 1` coordinates, or
+/// sparse `Elias'(nnz)`), byte-aligned ⇒ 40 bits. Directory entries below
+/// this are hostile; rejecting them up front bounds the directory Vec by
+/// `message_len / 5` entries (without it, a 1-bit-per-entry all-zero
+/// directory could claim `8 × message_len` entries and drive a ~200×
+/// allocation amplification before any payload validation).
+const MIN_BUCKET_PAYLOAD_BYTES: u64 = 5;
+
+/// Read a v3 frame's bucket-offset directory and byte-align the reader at
+/// the payload base. Returns absolute `(byte_offset, byte_len)` per bucket,
+/// every range verified to lie inside `bytes`. Hostile headers are bounded
+/// before any size-proportional work: the bucket count must fit the
+/// remaining stream, and every entry must be at least
+/// [`MIN_BUCKET_PAYLOAD_BYTES`], so cumulative length checks fail fast.
+fn read_directory(
+    r: &mut BitReader,
+    bytes: &[u8],
+    n: usize,
+    bucket_size: usize,
+) -> Result<Vec<(usize, usize)>> {
+    let nb = if n == 0 { 0 } else { n.div_ceil(bucket_size) };
+    ensure!(nb as u64 <= r.bits_remaining(), "directory exceeds stream");
+    let mut lens = Vec::with_capacity(nb.min(1 << 16));
+    let mut total = 0u64;
+    for _ in 0..nb {
+        let len = elias::decode0(r)?;
+        ensure!(len >= MIN_BUCKET_PAYLOAD_BYTES, "bucket payload too short: {len} bytes");
+        total = total
+            .checked_add(len)
+            .ok_or_else(|| anyhow::anyhow!("directory length overflow"))?;
+        ensure!(total <= bytes.len() as u64, "directory overruns message");
+        lens.push(len as usize);
+    }
+    r.align_to_byte();
+    let base = r.byte_pos();
+    ensure!(base as u64 + total <= bytes.len() as u64, "directory overruns message");
+    let mut off = base;
+    Ok(lens
+        .into_iter()
+        .map(|l| {
+            let entry = (off, l);
+            off += l;
+            entry
+        })
+        .collect())
 }
 
 /// Size of the shared encoder codeword table for quantization level `s`:
@@ -356,20 +466,73 @@ pub fn encode_lut_max(s: u32) -> u64 {
     (s as u64 + 2).max(GAP_LUT).min((1 << 18) - 1)
 }
 
-/// Encode a quantized gradient with an explicit regime.
+/// Encode a quantized gradient with an explicit regime. The bucket-offset
+/// directory follows [`use_directory_default`]; [`encode_with_directory`]
+/// overrides it.
 pub fn encode(g: &QuantizedGradient, regime: Regime) -> Vec<u8> {
+    encode_with_directory(g, regime, use_directory_default(g.n, g.bucket_size))
+}
+
+/// Record one staged bucket's byte length for the directory: align the
+/// staging writer to a byte boundary and push the delta since the previous
+/// bucket. Shared by the two-phase encoder below and both fused paths
+/// ([`crate::coding::pipeline`]), so the staging convention — and with it
+/// the fused-vs-two-phase bit-identity — cannot drift between copies.
+pub(crate) fn record_bucket_len(payload: &mut BitWriter, lens: &mut Vec<u64>, prev: &mut u64) {
+    payload.align_to_byte();
+    let now = payload.len_bits() / 8;
+    lens.push(now - *prev);
+    *prev = now;
+}
+
+/// Emit the directory entries (`Elias'(byte len)` each) and splice the
+/// byte-aligned staged payload after them — the assembly tail shared with
+/// the fused pipeline. The caller has already written the v3 header.
+pub(crate) fn splice_directory_payload(
+    w: &mut BitWriter,
+    payload: &mut BitWriter,
+    lens: &[u64],
+    lut: &elias::EliasLut,
+) {
+    for &l in lens {
+        lut.encode(w, l + 1);
+    }
+    w.align_to_byte();
+    w.extend_aligned(payload.finish());
+}
+
+/// [`encode`] with the bucket-offset directory forced on or off. With the
+/// directory, each bucket is entropy-coded into a staging buffer
+/// (byte-aligned) so its byte length can precede it in the directory; the
+/// payload bits are otherwise identical to the directory-less frame.
+pub fn encode_with_directory(g: &QuantizedGradient, regime: Regime, directory: bool) -> Vec<u8> {
     // Dense regime lower-bounds at ~2.8 bits/coord; sparse at ~nnz·(log d).
-    let cap = g.n / 2 + g.buckets.len() * 8 + 16;
+    let cap = g.n / 2 + g.buckets.len() * 10 + 16;
     let mut w = BitWriter::with_capacity(cap);
-    write_header(&mut w, g, regime);
     // One codeword table shared across all buckets.
     let lut = elias::EliasLut::new(encode_lut_max(g.s));
+    if !directory {
+        write_header(&mut w, g, regime);
+        for b in &g.buckets {
+            match regime {
+                Regime::Sparse => encode_bucket_sparse_with(&mut w, b, &lut),
+                Regime::Dense => encode_bucket_dense_with(&mut w, b, &lut),
+            }
+        }
+        return w.into_bytes();
+    }
+    let mut payload = BitWriter::with_capacity(cap);
+    let mut lens = Vec::with_capacity(g.buckets.len());
+    let mut prev = 0u64;
     for b in &g.buckets {
         match regime {
-            Regime::Sparse => encode_bucket_sparse_with(&mut w, b, &lut),
-            Regime::Dense => encode_bucket_dense_with(&mut w, b, &lut),
+            Regime::Sparse => encode_bucket_sparse_with(&mut payload, b, &lut),
+            Regime::Dense => encode_bucket_dense_with(&mut payload, b, &lut),
         }
+        record_bucket_len(&mut payload, &mut lens, &mut prev);
     }
+    write_frame_header_dir(&mut w, &g.grid, g.n, g.bucket_size, g.norm, regime);
+    splice_directory_payload(&mut w, &mut payload, &lens, &lut);
     w.into_bytes()
 }
 
@@ -410,15 +573,30 @@ pub fn decode_with_limit(bytes: &[u8], max_n: usize) -> Result<QuantizedGradient
     let lut = decode_lut();
     // capacity clamp: a hostile header must not size this by bucket count
     let mut buckets = Vec::with_capacity(h.n.div_ceil(h.bucket_size).min(1024));
-    let mut remaining = h.n;
-    while remaining > 0 {
-        let d = remaining.min(h.bucket_size);
-        let b = match h.regime {
-            Regime::Sparse => decode_bucket_sparse_with(&mut r, d, h.s, lut)?,
-            Regime::Dense => decode_bucket_dense_with(&mut r, d, h.s, lut)?,
-        };
-        buckets.push(b);
-        remaining -= d;
+    if h.dir {
+        let dir = read_directory(&mut r, bytes, h.n, h.bucket_size)?;
+        let mut remaining = h.n;
+        for &(off, len) in &dir {
+            let d = remaining.min(h.bucket_size);
+            let mut br = BitReader::new(&bytes[off..off + len]);
+            let b = match h.regime {
+                Regime::Sparse => decode_bucket_sparse_with(&mut br, d, h.s, lut)?,
+                Regime::Dense => decode_bucket_dense_with(&mut br, d, h.s, lut)?,
+            };
+            buckets.push(b);
+            remaining -= d;
+        }
+    } else {
+        let mut remaining = h.n;
+        while remaining > 0 {
+            let d = remaining.min(h.bucket_size);
+            let b = match h.regime {
+                Regime::Sparse => decode_bucket_sparse_with(&mut r, d, h.s, lut)?,
+                Regime::Dense => decode_bucket_dense_with(&mut r, d, h.s, lut)?,
+            };
+            buckets.push(b);
+            remaining -= d;
+        }
     }
     Ok(QuantizedGradient {
         s: h.s,
@@ -437,6 +615,65 @@ fn decode_lut() -> &'static elias::DecodeLut {
     LUT.get_or_init(|| elias::DecodeLut::new(DECODE_LUT_W))
 }
 
+/// Decode one bucket payload and accumulate `alpha·Q(bucket)` into `acc`
+/// (whose length is the bucket dimension) — the shared kernel of the
+/// serial and parallel decode-add paths. Per coordinate the float ops are
+/// identical, so any work split over buckets produces a bit-identical
+/// accumulator.
+fn decode_bucket_add(
+    r: &mut BitReader,
+    regime: Regime,
+    s: u32,
+    pts: Option<&[f32]>,
+    alpha: f32,
+    acc: &mut [f32],
+    lut: &elias::DecodeLut,
+) -> Result<()> {
+    let d = acc.len();
+    let scale = r.read_f32()?;
+    let k = alpha * scale / s as f32;
+    let ka = alpha * scale;
+    // non-uniform grids dequantize via the point table; `mag ≥ 1` is
+    // enforced below before indexing it
+    let value = |mag: u64| -> f32 {
+        match pts {
+            None => mag as f32 * k,
+            Some(p) => ka * p[(mag - 1) as usize],
+        }
+    };
+    match regime {
+        Regime::Sparse => {
+            let nnz = lut.decode0(r)? as usize;
+            ensure!(nnz <= d, "nnz {nnz} exceeds bucket size {d}");
+            let mut prev: i64 = -1;
+            for _ in 0..nnz {
+                let gap = lut.decode(r)?;
+                ensure!(gap >= 1 && gap <= d as u64, "gap {gap} out of bucket");
+                let idx = prev + gap as i64;
+                ensure!(idx >= 0 && (idx as usize) < d, "nonzero index out of bucket");
+                let neg = r.read_bit()?;
+                let mag = lut.decode(r)?;
+                ensure!(mag >= 1 && mag <= s as u64, "level out of range");
+                let val = value(mag);
+                acc[idx as usize] += if neg { -val } else { val };
+                prev = idx;
+            }
+        }
+        Regime::Dense => {
+            for a in acc.iter_mut() {
+                let mag = lut.decode0(r)?;
+                ensure!(mag <= s as u64, "level exceeds s");
+                if mag != 0 {
+                    let neg = r.read_bit()?;
+                    let val = value(mag);
+                    *a += if neg { -val } else { val };
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Fused decode-and-accumulate: `acc += alpha · Q_s(v)` straight from the
 /// wire bytes, without materialising the levels.
 ///
@@ -444,59 +681,93 @@ fn decode_lut() -> &'static elias::DecodeLut {
 /// ("current implementations of MPI do not provide support for sparse
 /// types"): in the sparse regime the cost is O(nnz) per message instead of
 /// O(n) — for s=1, ~√n work per peer. Returns the decoded length.
+/// Directory-bearing (v3) frames can instead fan their buckets out across
+/// threads — see [`par_decode_add`]; this entry point stays serial.
 pub fn decode_add(bytes: &[u8], alpha: f32, acc: &mut [f32]) -> Result<usize> {
+    par_decode_add_threads(bytes, alpha, acc, 1)
+}
+
+/// [`decode_add`] with intra-message parallelism: for v3 frames the
+/// bucket-offset directory yields per-bucket byte ranges, which map to
+/// disjoint accumulator chunks and decode concurrently on the scoped pool
+/// ([`crate::util::par`]) — bit-identical to the serial walk, since bucket
+/// payloads are independent and every per-coordinate op is unchanged.
+/// Frames without a directory fall back to the serial walk.
+pub fn par_decode_add(bytes: &[u8], alpha: f32, acc: &mut [f32]) -> Result<usize> {
+    par_decode_add_threads(bytes, alpha, acc, par::max_threads())
+}
+
+/// [`par_decode_add`] with an explicit thread budget (`≤ 1` ⇒ serial) —
+/// the knob `collectives::par_decode_mean` uses to split cores between
+/// concurrent messages and buckets within a message.
+pub fn par_decode_add_threads(
+    bytes: &[u8],
+    alpha: f32,
+    acc: &mut [f32],
+    threads: usize,
+) -> Result<usize> {
     let mut r = BitReader::new(bytes);
     let h = read_header(&mut r)?;
     ensure!(h.n <= acc.len(), "accumulator too small: {} < {}", acc.len(), h.n);
     let lut = decode_lut();
-    // non-uniform grids dequantize via the point table; `mag ≥ 1` is
-    // enforced below before indexing it
     let pts = h.grid.nonzero_points();
-    let mut off = 0usize;
-    let mut remaining = h.n;
-    while remaining > 0 {
-        let d = remaining.min(h.bucket_size);
-        let scale = r.read_f32()?;
-        let k = alpha * scale / h.s as f32;
-        let ka = alpha * scale;
-        let value = |mag: u64| -> f32 {
-            match pts {
-                None => mag as f32 * k,
-                Some(p) => ka * p[(mag - 1) as usize],
-            }
-        };
-        match h.regime {
-            Regime::Sparse => {
-                let nnz = lut.decode0(&mut r)? as usize;
-                ensure!(nnz <= d, "nnz {nnz} exceeds bucket size {d}");
-                let mut prev: i64 = -1;
-                for _ in 0..nnz {
-                    let gap = lut.decode(&mut r)?;
-                    ensure!(gap >= 1 && gap <= d as u64, "gap {gap} out of bucket");
-                    let idx = prev + gap as i64;
-                    ensure!(idx >= 0 && (idx as usize) < d, "nonzero index out of bucket");
-                    let neg = r.read_bit()?;
-                    let mag = lut.decode(&mut r)?;
-                    ensure!(mag >= 1 && mag <= h.s as u64, "level out of range");
-                    let val = value(mag);
-                    acc[off + idx as usize] += if neg { -val } else { val };
-                    prev = idx;
-                }
-            }
-            Regime::Dense => {
-                for j in 0..d {
-                    let mag = lut.decode0(&mut r)?;
-                    ensure!(mag <= h.s as u64, "level exceeds s");
-                    if mag != 0 {
-                        let neg = r.read_bit()?;
-                        let val = value(mag);
-                        acc[off + j] += if neg { -val } else { val };
-                    }
-                }
-            }
+    if !h.dir {
+        // v1/v2: no bucket boundaries in-band — walk the stream serially.
+        let mut off = 0usize;
+        let mut remaining = h.n;
+        while remaining > 0 {
+            let d = remaining.min(h.bucket_size);
+            decode_bucket_add(&mut r, h.regime, h.s, pts, alpha, &mut acc[off..off + d], lut)?;
+            off += d;
+            remaining -= d;
         }
-        off += d;
-        remaining -= d;
+        return Ok(h.n);
+    }
+    let dir = read_directory(&mut r, bytes, h.n, h.bucket_size)?;
+    let nb = dir.len();
+    let jobs_n = threads.max(1).min(nb.max(1));
+    if jobs_n <= 1 {
+        let mut off = 0usize;
+        let mut remaining = h.n;
+        for &(o, l) in &dir {
+            let d = remaining.min(h.bucket_size);
+            let mut br = BitReader::new(&bytes[o..o + l]);
+            decode_bucket_add(&mut br, h.regime, h.s, pts, alpha, &mut acc[off..off + d], lut)?;
+            off += d;
+            remaining -= d;
+        }
+        return Ok(h.n);
+    }
+    // Contiguous bucket ranges paired with disjoint accumulator chunks.
+    // nb ≥ 2 implies bucket_size < n ≤ MAX_FRAME_DIM, so the chunk width
+    // below cannot overflow.
+    let bpj = nb.div_ceil(jobs_n);
+    let chunk_coords = bpj * h.bucket_size;
+    struct Job<'a> {
+        acc: &'a mut [f32],
+        first_bucket: usize,
+    }
+    let mut jobs: Vec<Job> = acc[..h.n]
+        .chunks_mut(chunk_coords)
+        .enumerate()
+        .map(|(i, c)| Job { acc: c, first_bucket: i * bpj })
+        .collect();
+    let results = par::par_map_mut(&mut jobs, |_, job| -> Result<()> {
+        let mut off = 0usize;
+        let mut bi = job.first_bucket;
+        while off < job.acc.len() {
+            let d = (job.acc.len() - off).min(h.bucket_size);
+            let (o, l) = dir[bi];
+            let mut br = BitReader::new(&bytes[o..o + l]);
+            let chunk = &mut job.acc[off..off + d];
+            decode_bucket_add(&mut br, h.regime, h.s, pts, alpha, chunk, lut)?;
+            off += d;
+            bi += 1;
+        }
+        Ok(())
+    });
+    for res in results {
+        res?;
     }
     Ok(h.n)
 }
@@ -516,6 +787,19 @@ pub fn decode_expecting(msg: &[u8], n: usize) -> Result<Vec<f32>> {
 /// body of both compressors).
 pub fn decode_add_expecting(msg: &[u8], alpha: f32, acc: &mut [f32]) -> Result<()> {
     let n = decode_add(msg, alpha, acc)?;
+    ensure!(n == acc.len(), "decoded length {n} != expected {}", acc.len());
+    Ok(())
+}
+
+/// Intra-message-parallel decode-and-accumulate with the length check
+/// (shared `decompress_add_threads` body of the QSGD compressors).
+pub fn par_decode_add_expecting(
+    msg: &[u8],
+    alpha: f32,
+    acc: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    let n = par_decode_add_threads(msg, alpha, acc, threads)?;
     ensure!(n == acc.len(), "decoded length {n} != expected {}", acc.len());
     Ok(())
 }
@@ -669,6 +953,53 @@ mod tests {
         let q = stochastic::quantize(&v, 7, 512, Norm::Max, &mut rng);
         let bytes = encode_auto(&q);
         assert!(decode_add(&bytes, 1.0, &mut vec![0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn directory_frames_roundtrip_and_parallel_decode_matches_serial() {
+        let v = randn(7000, 20);
+        let mut rng = Xoshiro256::from_u64(21);
+        for (grid, norm) in [
+            (LevelGrid::uniform(7), Norm::Max),
+            (LevelGrid::exponential(4), Norm::Max),
+            (LevelGrid::custom(vec![0.2, 0.6, 1.0]).unwrap(), Norm::L2),
+        ] {
+            let q = stochastic::quantize_grid(&v, &grid, 512, norm, &mut rng);
+            for regime in [Regime::Sparse, Regime::Dense] {
+                let plain = encode_with_directory(&q, regime, false);
+                let dirred = encode_with_directory(&q, regime, true);
+                assert_ne!(plain, dirred);
+                // version nibble: high 4 bits of byte 1
+                assert_eq!(dirred[1] >> 4, FRAME_VERSION_DIR as u8);
+                // both decode to the same quantized gradient
+                assert_eq!(decode(&dirred).unwrap(), decode(&plain).unwrap());
+                assert_eq!(decode(&dirred).unwrap(), q);
+                // serial and parallel decode-add agree bit-for-bit at every
+                // thread budget, and with the directory-less frame
+                let mut base = vec![0.125f32; 7000];
+                decode_add(&plain, 0.5, &mut base).unwrap();
+                for threads in [1usize, 2, 3, 8, 64] {
+                    let mut acc = vec![0.125f32; 7000];
+                    let n = par_decode_add_threads(&dirred, 0.5, &mut acc, threads).unwrap();
+                    assert_eq!(n, 7000);
+                    assert_eq!(acc, base, "threads={threads} {regime:?} {}", grid.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn directory_rule_is_size_thresholded() {
+        assert!(!use_directory_default(0, 512));
+        assert!(!use_directory_default(DIRECTORY_MIN_COORDS - 1, 512));
+        assert!(use_directory_default(DIRECTORY_MIN_COORDS, 512));
+        // a single bucket has nothing to parallelize
+        assert!(!use_directory_default(DIRECTORY_MIN_COORDS, usize::MAX));
+        // and encode() applies the rule: small frames stay v1
+        let v = randn(64, 22);
+        let q = stochastic::quantize(&v, 7, 64, Norm::Max, &mut Xoshiro256::from_u64(23));
+        let bytes = encode(&q, Regime::Dense);
+        assert_eq!(bytes[1] >> 4, FRAME_VERSION as u8);
     }
 
     #[test]

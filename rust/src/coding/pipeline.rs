@@ -50,6 +50,11 @@ pub struct FusedEncoder {
     pub norm: Norm,
     /// `None` ⇒ the paper's regime rule per gradient.
     pub regime: Option<Regime>,
+    /// Bucket-offset directory: `None` ⇒ the shared
+    /// [`gradient::use_directory_default`] size rule (what the two-phase
+    /// oracle applies, keeping the wire bytes bit-identical); `Some(_)`
+    /// forces it on or off.
+    pub directory: Option<bool>,
     writer: BitWriter,
     /// Batched RNG words, 4 bytes per coordinate of the current bucket.
     words: Vec<u8>,
@@ -58,6 +63,12 @@ pub struct FusedEncoder {
     levels: Vec<i32>,
     /// Per-bucket scales (measured-density path only).
     scales: Vec<f32>,
+    /// Directory-frame staging: bucket payloads stream here (byte-aligned)
+    /// so their byte lengths can precede them in the final frame. Reused
+    /// across encodes like every other piece of scratch.
+    payload: BitWriter,
+    /// Per-bucket payload byte lengths of the current directory frame.
+    dir_lens: Vec<u64>,
     /// Codeword table shared across buckets, sized as the two-phase encoder
     /// sizes it.
     lut: EliasLut,
@@ -78,10 +89,13 @@ impl FusedEncoder {
             bucket,
             norm,
             regime,
+            directory: None,
             writer: BitWriter::new(),
             words: Vec::new(),
             levels: Vec::new(),
             scales: Vec::new(),
+            payload: BitWriter::new(),
+            dir_lens: Vec::new(),
             lut: EliasLut::new(gradient::encode_lut_max(s)),
         }
     }
@@ -95,7 +109,9 @@ impl FusedEncoder {
     /// Encode `grad` into `out` (cleared first), reusing every piece of
     /// internal scratch. In steady state — after the scratch has grown to
     /// the largest gradient seen — this performs zero heap allocations
-    /// (verified by the counting allocator in the `coding_hotpath` bench).
+    /// (verified by the counting allocator in the `coding_hotpath` bench);
+    /// this holds on the directory path too, whose staging buffer and
+    /// length vector are part of the owned scratch.
     pub fn encode_into(&mut self, grad: &[f32], rng: &mut dyn RngCore, out: &mut Vec<u8>) {
         let n = grad.len();
         let bucket = self.bucket.min(n.max(1));
@@ -103,14 +119,17 @@ impl FusedEncoder {
             self.words.resize(bucket * 4, 0);
         }
         self.writer.reset();
+        let dir = self
+            .directory
+            .unwrap_or_else(|| gradient::use_directory_default(n, bucket));
         let static_regime = match (self.regime, self.norm) {
             (Some(r), _) => Some(r),
             (None, Norm::L2) => Some(gradient::preferred_regime(self.s, bucket)),
             (None, Norm::Max) => None,
         };
         match static_regime {
-            Some(regime) => self.encode_streaming(grad, bucket, regime, rng),
-            None => self.encode_measured(grad, bucket, rng),
+            Some(regime) => self.encode_streaming(grad, bucket, regime, rng, dir),
+            None => self.encode_measured(grad, bucket, rng, dir),
         }
         let bytes = self.writer.finish();
         out.clear();
@@ -124,62 +143,109 @@ impl FusedEncoder {
         out
     }
 
+    /// Assemble the final v3 frame once the bucket payloads have been staged
+    /// (byte-aligned) in `self.payload` with their byte lengths in
+    /// `self.dir_lens`: header, then the shared
+    /// [`gradient::splice_directory_payload`] assembly — the same routine
+    /// the two-phase encoder uses, which is what keeps the paths
+    /// bit-identical.
+    fn emit_directory_frame(&mut self, n: usize, bucket: usize, regime: Regime) {
+        let Self { writer, payload, dir_lens, lut, grid, norm, .. } = self;
+        gradient::write_frame_header_dir(writer, grid, n, bucket, *norm, regime);
+        gradient::splice_directory_payload(writer, payload, dir_lens, lut);
+    }
+
     /// Regime known up front: each bucket is quantized into the bucket-sized
-    /// scratch and immediately streamed into the bitstream.
+    /// scratch and immediately streamed into the bitstream (or, on the
+    /// directory path, into the byte-aligned staging buffer whose per-bucket
+    /// lengths become the directory).
     fn encode_streaming(
         &mut self,
         grad: &[f32],
         bucket: usize,
         regime: Regime,
         rng: &mut dyn RngCore,
+        dir: bool,
     ) {
         if self.levels.len() < bucket {
             self.levels.resize(bucket, 0);
         }
-        let Self { writer, words, levels, lut, grid, norm, .. } = self;
-        gradient::write_frame_header_grid(writer, grid, grad.len(), bucket, *norm, regime);
-        for c in grad.chunks(bucket) {
-            let wds = &mut words[..c.len() * 4];
-            rng.fill_bytes(wds);
-            let lv = &mut levels[..c.len()];
-            let scale = quant::stochastic::quantize_bucket_into_grid(c, wds, grid, *norm, lv);
-            match regime {
-                Regime::Sparse => gradient::encode_levels_sparse_with(writer, scale, lv, lut),
-                Regime::Dense => gradient::encode_levels_dense_with(writer, scale, lv, lut),
+        {
+            let Self { writer, payload, dir_lens, words, levels, lut, grid, norm, .. } = self;
+            if dir {
+                payload.reset();
+                dir_lens.clear();
+            } else {
+                gradient::write_frame_header_grid(writer, grid, grad.len(), bucket, *norm, regime);
             }
+            let out: &mut BitWriter = if dir { &mut *payload } else { &mut *writer };
+            let mut prev = 0u64;
+            for c in grad.chunks(bucket) {
+                let wds = &mut words[..c.len() * 4];
+                rng.fill_bytes(wds);
+                let lv = &mut levels[..c.len()];
+                let scale = quant::stochastic::quantize_bucket_into_grid(c, wds, grid, *norm, lv);
+                match regime {
+                    Regime::Sparse => gradient::encode_levels_sparse_with(out, scale, lv, lut),
+                    Regime::Dense => gradient::encode_levels_dense_with(out, scale, lv, lut),
+                }
+                if dir {
+                    gradient::record_bucket_len(out, dir_lens, &mut prev);
+                }
+            }
+        }
+        if dir {
+            self.emit_directory_frame(grad.len(), bucket, regime);
         }
     }
 
     /// Max-norm auto regime (measured density, as `encode_auto` does): one
     /// quantization pass into the gradient-sized scratch, then encode.
-    fn encode_measured(&mut self, grad: &[f32], bucket: usize, rng: &mut dyn RngCore) {
+    fn encode_measured(&mut self, grad: &[f32], bucket: usize, rng: &mut dyn RngCore, dir: bool) {
         let n = grad.len();
         if self.levels.len() < n {
             self.levels.resize(n, 0);
         }
         self.scales.clear();
-        let Self { writer, words, levels, scales, lut, s, grid, norm, .. } = self;
-        let mut nnz = 0usize;
-        for (bi, c) in grad.chunks(bucket).enumerate() {
-            let wds = &mut words[..c.len() * 4];
-            rng.fill_bytes(wds);
-            let lv = &mut levels[bi * bucket..bi * bucket + c.len()];
-            scales.push(quant::stochastic::quantize_bucket_into_grid(c, wds, grid, *norm, lv));
-            nnz += lv.iter().filter(|&&l| l != 0).count();
-        }
-        // encode_auto's max-norm rule: dense once ≳25% of levels are nonzero.
-        let regime = if nnz * 4 > n {
-            Regime::Dense
-        } else {
-            gradient::preferred_regime(*s, bucket)
-        };
-        gradient::write_frame_header_grid(writer, grid, n, bucket, *norm, regime);
-        for (bi, c) in grad.chunks(bucket).enumerate() {
-            let lv = &levels[bi * bucket..bi * bucket + c.len()];
-            match regime {
-                Regime::Sparse => gradient::encode_levels_sparse_with(writer, scales[bi], lv, lut),
-                Regime::Dense => gradient::encode_levels_dense_with(writer, scales[bi], lv, lut),
+        let regime;
+        {
+            let Self { writer, payload, dir_lens, words, levels, scales, lut, s, grid, norm, .. } =
+                self;
+            let mut nnz = 0usize;
+            for (bi, c) in grad.chunks(bucket).enumerate() {
+                let wds = &mut words[..c.len() * 4];
+                rng.fill_bytes(wds);
+                let lv = &mut levels[bi * bucket..bi * bucket + c.len()];
+                scales.push(quant::stochastic::quantize_bucket_into_grid(c, wds, grid, *norm, lv));
+                nnz += lv.iter().filter(|&&l| l != 0).count();
             }
+            // encode_auto's max-norm rule: dense once ≳25% of levels are nonzero.
+            regime = if nnz * 4 > n {
+                Regime::Dense
+            } else {
+                gradient::preferred_regime(*s, bucket)
+            };
+            if dir {
+                payload.reset();
+                dir_lens.clear();
+            } else {
+                gradient::write_frame_header_grid(writer, grid, n, bucket, *norm, regime);
+            }
+            let out: &mut BitWriter = if dir { &mut *payload } else { &mut *writer };
+            let mut prev = 0u64;
+            for (bi, c) in grad.chunks(bucket).enumerate() {
+                let lv = &levels[bi * bucket..bi * bucket + c.len()];
+                match regime {
+                    Regime::Sparse => gradient::encode_levels_sparse_with(out, scales[bi], lv, lut),
+                    Regime::Dense => gradient::encode_levels_dense_with(out, scales[bi], lv, lut),
+                }
+                if dir {
+                    gradient::record_bucket_len(out, dir_lens, &mut prev);
+                }
+            }
+        }
+        if dir {
+            self.emit_directory_frame(n, bucket, regime);
         }
     }
 }
@@ -241,6 +307,16 @@ impl Compressor for FusedQsgd {
 
     fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
         gradient::decode_add_expecting(msg, alpha, acc)
+    }
+
+    fn decompress_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        gradient::par_decode_add_expecting(msg, alpha, acc, threads)
     }
 
     fn name(&self) -> String {
@@ -320,6 +396,48 @@ mod tests {
             let q = gradient::decode(&b).unwrap();
             assert_eq!(q.n, v.len());
         }
+    }
+
+    #[test]
+    fn forced_directory_matches_two_phase_assembly() {
+        // The fused single-pass staging (quantize → staged bucket payloads →
+        // header + directory + splice) must emit exactly the bytes of the
+        // two-phase quantize-then-encode_with_directory path.
+        let v = randn(3000, 7);
+        for regime in [Regime::Sparse, Regime::Dense] {
+            let mut enc = FusedEncoder::new(7, 512, Norm::Max, Some(regime));
+            enc.directory = Some(true);
+            let mut r = Xoshiro256::from_u64(8);
+            let a = enc.encode(&v, &mut r);
+            let q = crate::quant::stochastic::quantize(
+                &v,
+                7,
+                512,
+                Norm::Max,
+                &mut Xoshiro256::from_u64(8),
+            );
+            let b = gradient::encode_with_directory(&q, regime, true);
+            assert_eq!(a, b, "{regime:?}");
+            assert_eq!(gradient::decode(&a).unwrap(), q);
+        }
+        // measured-density path (max-norm auto regime) with the directory
+        let mut enc = FusedEncoder::new(7, 512, Norm::Max, None);
+        enc.directory = Some(true);
+        let a = enc.encode(&v, &mut Xoshiro256::from_u64(9));
+        let q = crate::quant::stochastic::quantize(
+            &v,
+            7,
+            512,
+            Norm::Max,
+            &mut Xoshiro256::from_u64(9),
+        );
+        // encode_auto's regime rule, then force the directory on
+        let regime = if q.nnz() * 4 > q.n {
+            Regime::Dense
+        } else {
+            gradient::preferred_regime(q.s, q.bucket_size)
+        };
+        assert_eq!(a, gradient::encode_with_directory(&q, regime, true));
     }
 
     #[test]

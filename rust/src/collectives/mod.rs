@@ -56,6 +56,16 @@ pub const DECODE_MERGE_GROUPS: usize = 8;
 /// Groups of messages decode concurrently into private partial accumulators
 /// (via the caller's fused `decode_add`), which are then merged in fixed
 /// group order.
+///
+/// Two levels of parallelism: across message groups, and *within* one
+/// message — the closure receives the per-group intra-message thread
+/// budget (leftover cores once the groups are staffed) to spend on
+/// directory-bearing frames via
+/// [`decompress_add_threads`](crate::quant::Compressor::decompress_add_threads).
+/// Small K on a many-core host ⇒ the budget goes to buckets within each
+/// message; large K ⇒ the groups already saturate the pool and the budget
+/// degrades to 1 (serial per message). Either way the result is
+/// bit-identical to the sequential decode-accumulate of each group.
 pub fn par_decode_mean<F>(
     messages: &[Vec<u8>],
     n: usize,
@@ -63,19 +73,20 @@ pub fn par_decode_mean<F>(
     decode_add: F,
 ) -> Result<Vec<f32>>
 where
-    F: Fn(&[u8], f32, &mut [f32]) -> Result<()> + Sync,
+    F: Fn(&[u8], f32, &mut [f32], usize) -> Result<()> + Sync,
 {
     let mut acc = vec![0.0f32; n];
     if messages.is_empty() {
         return Ok(acc);
     }
     let groups = DECODE_MERGE_GROUPS.min(messages.len());
+    let intra = (par::max_threads() / groups).max(1);
     let chunk = messages.len().div_ceil(groups);
     let grouped: Vec<&[Vec<u8>]> = messages.chunks(chunk).collect();
     let partials = par::par_map(&grouped, |_, group| -> Result<Vec<f32>> {
         let mut part = vec![0.0f32; n];
         for msg in group.iter() {
-            decode_add(msg, alpha, &mut part)?;
+            decode_add(msg, alpha, &mut part, intra)?;
         }
         Ok(part)
     });
@@ -191,8 +202,8 @@ mod tests {
         for m in &msgs {
             gradient::decode_add(m, alpha, &mut seq).unwrap();
         }
-        let par = par_decode_mean(&msgs, n, alpha, |m, a, acc| {
-            gradient::decode_add(m, a, acc).map(|_| ())
+        let par = par_decode_mean(&msgs, n, alpha, |m, a, acc, t| {
+            gradient::par_decode_add_threads(m, a, acc, t).map(|_| ())
         })
         .unwrap();
         // K ≤ DECODE_MERGE_GROUPS ⇒ one message per group ⇒ the merge order
@@ -202,9 +213,39 @@ mod tests {
         // corrupt message propagates the error
         let mut bad = msgs.clone();
         bad[3][0] ^= 0xff;
-        assert!(par_decode_mean(&bad, n, alpha, |m, a, acc| {
-            gradient::decode_add(m, a, acc).map(|_| ())
+        assert!(par_decode_mean(&bad, n, alpha, |m, a, acc, t| {
+            gradient::par_decode_add_threads(m, a, acc, t).map(|_| ())
         })
         .is_err());
+    }
+
+    #[test]
+    fn par_decode_mean_intra_message_parallelism_is_bit_identical() {
+        // Directory-bearing frames: few large messages, so the intra-message
+        // budget actually engages. The mean must equal the fully serial
+        // accumulation bit-for-bit.
+        use crate::coding::gradient::{self, Regime};
+        use crate::quant::{stochastic, Norm};
+        use crate::util::rng::{self, Xoshiro256};
+
+        let n = 20_000usize;
+        let mut rng = Xoshiro256::from_u64(9);
+        let msgs: Vec<Vec<u8>> = (0..2)
+            .map(|_| {
+                let g = rng::normal_vec(&mut rng, n);
+                let q = stochastic::quantize(&g, 7, 512, Norm::Max, &mut rng);
+                gradient::encode_with_directory(&q, Regime::Dense, true)
+            })
+            .collect();
+        let alpha = 0.5f32;
+        let mut seq = vec![0.0f32; n];
+        for m in &msgs {
+            gradient::decode_add(m, alpha, &mut seq).unwrap();
+        }
+        let par = par_decode_mean(&msgs, n, alpha, |m, a, acc, t| {
+            gradient::par_decode_add_threads(m, a, acc, t.max(4)).map(|_| ())
+        })
+        .unwrap();
+        assert_eq!(par, seq);
     }
 }

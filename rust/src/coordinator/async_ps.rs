@@ -152,10 +152,13 @@ pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult
         let push_t = cfg.net.p2p_time(msg.len()).secs();
 
         // Server receives and applies (arrival order = heap order here).
-        let decoded = states[w].compressor.decompress(&msg, n)?;
-        for (p, &g) in params.iter_mut().zip(&decoded) {
-            *p -= cfg.lr * g;
-        }
+        // Fused decode-straight-into-params with α = −lr — no intermediate
+        // gradient vector, and a directory-bearing frame decodes its
+        // buckets in parallel: the PS handles one message at a time, so
+        // intra-message parallelism is the only level available to it.
+        states[w]
+            .compressor
+            .decompress_add_threads(&msg, -cfg.lr, &mut params, par::max_threads())?;
         let staleness = version - ev.pulled_version;
         max_stale = max_stale.max(staleness);
         stale_sum += staleness;

@@ -104,6 +104,21 @@ impl PlanCompressor {
     /// `acc += alpha · decode(msg)`. Uses each inner compressor's sparse
     /// `decompress_add` path (the §6 sparsity optimisation).
     pub fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> Result<()> {
+        self.decompress_add_threads(msg, alpha, acc, 1)
+    }
+
+    /// [`Self::decompress_add`] with an intra-message thread budget, passed
+    /// through to each quantized segment's
+    /// [`Compressor::decompress_add_threads`] — directory-bearing segments
+    /// decode their buckets in parallel; the accumulator is bit-identical
+    /// at every budget.
+    pub fn decompress_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        threads: usize,
+    ) -> Result<()> {
         anyhow::ensure!(acc.len() == self.plan.total_len(), "accumulator/plan mismatch");
         let mut pos = 0usize;
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
@@ -129,7 +144,7 @@ impl PlanCompressor {
                 }
                 1 => {
                     ensure!(seg.quantized, "compressed payload for fp32 segment");
-                    self.inner[qi].decompress_add(payload, alpha, dst)?;
+                    self.inner[qi].decompress_add_threads(payload, alpha, dst, threads)?;
                     qi += 1;
                 }
                 k => anyhow::bail!("unknown segment kind {k}"),

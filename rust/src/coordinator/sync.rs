@@ -182,13 +182,16 @@ impl SyncTrainer {
 
             // 4. decode + average (decode each message once; see module doc).
             // Fused decode-into-accumulator — O(nnz) per sparse message —
-            // with message groups decoded concurrently and merged in fixed
-            // order, so the mean is deterministic.
+            // with message groups decoded concurrently, each message's
+            // buckets decoded in parallel under the leftover-core budget
+            // (directory frames), and partials merged in fixed order, so
+            // the mean is deterministic at any thread count.
             let alpha = 1.0 / cfg.workers as f32;
             let decoder = &workers[0].compressor;
-            let mean_grad = collectives::par_decode_mean(&bc.messages, n, alpha, |msg, a, acc| {
-                decoder.decompress_add(msg, a, acc)
-            })?;
+            let mean_grad =
+                collectives::par_decode_mean(&bc.messages, n, alpha, |msg, a, acc, t| {
+                    decoder.decompress_add_threads(msg, a, acc, t)
+                })?;
             breakdown.decode += VTime(cfg.cost.decode_s(n, cfg.workers));
 
             // 5. apply identical update on every worker

@@ -212,8 +212,38 @@ impl LevelGrid {
 /// zero-alloc pipeline.
 #[inline]
 pub(crate) fn nonuniform_level(pts: &[f32], a: f32, u: f32) -> u32 {
-    // j = number of nonzero levels ≤ a, i.e. the lower bracketing level.
-    let j = pts.partition_point(|&g| g <= a);
+    let j = lower_bracket(pts, a);
+    round_in_bracket(pts, a, u, j)
+}
+
+/// Lower bracketing level of `a` by binary search: the number of nonzero
+/// grid points ≤ `a`.
+#[inline]
+fn lower_bracket(pts: &[f32], a: f32) -> usize {
+    pts.partition_point(|&g| g <= a)
+}
+
+/// Exponent-extraction variant of [`nonuniform_level`] for the
+/// *exponential* grid `pts[i] = 2^(i+1-s)`: the lower bracket of `a` is
+/// just `clamp(e + s, 0, s)` with `e` = `a`'s biased-corrected IEEE
+/// exponent, replacing the per-coordinate binary search with two integer
+/// ops. Bit-identical to [`nonuniform_level`] on exponential points for
+/// every `a ∈ [0, 1]`: exact powers of two carry a zero mantissa so the
+/// `≤` boundary lands on the same side, and ±0/subnormal `a` fall in
+/// bracket 0 because the smallest grid point `2^(1-s)` (`s ≤ 127`) is
+/// normal. The rounding arithmetic is shared, so `p` is the same float.
+#[inline(always)]
+pub(crate) fn exponential_level(pts: &[f32], a: f32, u: f32) -> u32 {
+    let s = pts.len() as i32;
+    let e = ((a.to_bits() >> 23) & 0xff) as i32 - 127;
+    let j = (e + s).clamp(0, s) as usize;
+    round_in_bracket(pts, a, u, j)
+}
+
+/// Shared stochastic-rounding tail: given the lower bracket `j`, round up
+/// with probability equal to `a`'s position inside the gap.
+#[inline(always)]
+fn round_in_bracket(pts: &[f32], a: f32, u: f32, j: usize) -> u32 {
     if j == pts.len() {
         return j as u32; // a == 1.0 (top level; NaN inputs clamp here too)
     }
@@ -276,6 +306,32 @@ mod tests {
         // below the smallest nonzero level
         assert_eq!(g.level_of(0.1, 0.39), 1); // p = 0.4
         assert_eq!(g.level_of(0.1, 0.41), 0);
+    }
+
+    #[test]
+    fn exponential_level_matches_binary_search_everywhere() {
+        // The SIMD fast path must agree with partition_point on every
+        // bracket boundary: exact grid points, values straddling them,
+        // subnormals, ±0 and 1.0, for shallow and maximal grids.
+        for s in [1u32, 2, 3, 4, 7, 8, 64, 127] {
+            let g = LevelGrid::exponential(s);
+            let pts = g.nonzero_points().unwrap();
+            let mut probes: Vec<f32> = vec![0.0, 1.0, f32::MIN_POSITIVE, 1e-45, 1e-40, 0.3, 0.7];
+            for &p in pts {
+                probes.push(p);
+                probes.push(f32::from_bits(p.to_bits() - 1)); // just below
+                probes.push((f32::from_bits(p.to_bits() + 1)).min(1.0)); // just above
+            }
+            for &a in &probes {
+                for u in [0.0f32, 0.25, 0.5, 0.9999] {
+                    assert_eq!(
+                        exponential_level(pts, a, u),
+                        nonuniform_level(pts, a, u),
+                        "s={s} a={a:e} u={u}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -214,6 +214,22 @@ pub trait Compressor: Send + Sync {
         }
         Ok(())
     }
+    /// [`Self::decompress_add`] with a thread budget the implementation may
+    /// spend on intra-message parallelism (QSGD overrides this: the v3
+    /// frame's bucket-offset directory fans per-bucket work out on the
+    /// scoped pool). Contract: the accumulator must be **bit-identical** at
+    /// every budget — `threads` only buys wall-clock. The default ignores
+    /// the budget.
+    fn decompress_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        let _ = threads;
+        self.decompress_add(msg, alpha, acc)
+    }
     fn name(&self) -> String;
 }
 

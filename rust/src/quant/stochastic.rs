@@ -8,8 +8,13 @@
 
 use rand_core::RngCore;
 
-use super::grid::{nonuniform_level, LevelGrid};
+use super::grid::{exponential_level, nonuniform_level, LevelGrid};
 use super::{Norm, QuantBucket, QuantizedGradient};
+
+/// Lane width of the vectorized level-assignment loops: 8 × f32 fills one
+/// AVX2 register (the width `Norm::scale` already reduces at); narrower
+/// ISAs split the lane loop without changing results.
+const LANES: usize = 8;
 
 /// Quantize one bucket given externally supplied uniforms (deterministic;
 /// this is the function cross-checked level-for-level against Pallas).
@@ -116,6 +121,31 @@ pub fn quantize_bucket(v: &[f32], s: u32, norm: Norm, rng: &mut dyn RngCore) -> 
     QuantBucket { scale, levels }
 }
 
+/// Uniform in [0, 1) from one pre-drawn RNG word — the batched twin of
+/// [`next_uniform`], consuming the same 24 mantissa bits.
+#[inline(always)]
+fn word_uniform(word: u32) -> f32 {
+    (word >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+}
+
+/// One coordinate of the uniform-grid level assignment, written branch-free
+/// so the 8-lane loop below vectorizes: the sign select negates `lev` via
+/// the IEEE sign bit instead of a branch (matching
+/// `if x.is_sign_negative() { -lev } else { lev }` for every input, NaN
+/// included), and every float op is the exact op of the scalar oracle, so
+/// lane-wise evaluation is bit-identical.
+#[inline(always)]
+fn uniform_level_lane(x: f32, word: u32, k: f32, smax: f32) -> i32 {
+    let u = word_uniform(word);
+    let r = (x.abs() * k).min(smax);
+    // r ≥ 0 ⇒ truncation == floor, and r ≤ s keeps it in i32 range
+    let lo = r as i32;
+    let p = r - lo as f32;
+    let lev = lo + ((u < p) as i32);
+    let neg = (x.to_bits() >> 31) as i32;
+    (lev ^ -neg).wrapping_add(neg)
+}
+
 /// Allocation-free hot-path bucket quantizer over pre-drawn random words:
 /// one `fill_bytes` virtual call per bucket instead of one `next_u32` per
 /// coordinate (the per-coordinate dyn dispatch was ~40% of quantize time —
@@ -123,8 +153,57 @@ pub fn quantize_bucket(v: &[f32], s: u32, norm: Norm, rng: &mut dyn RngCore) -> 
 /// transmitted scale (0.0 for degenerate buckets). This is the level
 /// assignment the fused encode pipeline ([`crate::coding::pipeline`])
 /// streams from, so it must stay bit-identical to [`quantize_bucket`].
+///
+/// The abs/scale/floor/compare chain runs in 8-lane chunks (fixed-size
+/// array views so LLVM vectorizes the lane loop); the wire contract —
+/// coordinate `i` consumes `words[4i..4i+4]`, same arithmetic per lane —
+/// is that of [`quantize_bucket_into_scalar`], which
+/// `tests/simd_levels.rs` holds as the bit-identity oracle.
 #[inline]
 pub fn quantize_bucket_into(v: &[f32], words: &[u8], s: u32, norm: Norm, levels: &mut [i32]) -> f32 {
+    debug_assert_eq!(words.len(), v.len() * 4);
+    debug_assert_eq!(levels.len(), v.len());
+    let scale = norm.scale(v);
+    if scale <= 0.0 || !scale.is_finite() {
+        levels.fill(0);
+        return 0.0;
+    }
+    let k = s as f32 / scale;
+    let smax = s as f32;
+    let n8 = v.len() - v.len() % LANES;
+    for ((lc, vc), wc) in levels[..n8]
+        .chunks_exact_mut(LANES)
+        .zip(v[..n8].chunks_exact(LANES))
+        .zip(words[..n8 * 4].chunks_exact(LANES * 4))
+    {
+        let lc: &mut [i32; LANES] = lc.try_into().unwrap();
+        let vc: &[f32; LANES] = vc.try_into().unwrap();
+        for ((l, &x), c) in lc.iter_mut().zip(vc).zip(wc.chunks_exact(4)) {
+            let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            *l = uniform_level_lane(x, word, k, smax);
+        }
+    }
+    for ((l, &x), c) in levels[n8..]
+        .iter_mut()
+        .zip(&v[n8..])
+        .zip(words[n8 * 4..].chunks_exact(4))
+    {
+        let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        *l = uniform_level_lane(x, word, k, smax);
+    }
+    scale
+}
+
+/// Scalar reference for [`quantize_bucket_into`] — the pre-SIMD loop, kept
+/// verbatim as the bit-identity oracle for the property tests and the
+/// SIMD-vs-scalar section of the `coding_hotpath` bench.
+pub fn quantize_bucket_into_scalar(
+    v: &[f32],
+    words: &[u8],
+    s: u32,
+    norm: Norm,
+    levels: &mut [i32],
+) -> f32 {
     debug_assert_eq!(words.len(), v.len() * 4);
     debug_assert_eq!(levels.len(), v.len());
     let scale = norm.scale(v);
@@ -138,7 +217,6 @@ pub fn quantize_bucket_into(v: &[f32], words: &[u8], s: u32, norm: Norm, levels:
         let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
         let u = (word >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
         let r = (x.abs() * k).min(smax);
-        // r ≥ 0 ⇒ truncation == floor, and r ≤ s keeps it in i32 range
         let lo = r as i32;
         let p = r - lo as f32;
         let lev = lo + ((u < p) as i32);
@@ -147,12 +225,60 @@ pub fn quantize_bucket_into(v: &[f32], words: &[u8], s: u32, norm: Norm, levels:
     scale
 }
 
+/// One coordinate of a non-uniform level assignment (shared chunked driver
+/// below): normalize, bracket via `level_of`, branch-free sign select.
+#[inline(always)]
+fn grid_level_lane<F: Fn(f32, f32) -> u32>(x: f32, word: u32, inv: f32, level_of: &F) -> i32 {
+    let u = word_uniform(word);
+    let a = (x.abs() * inv).min(1.0);
+    let lev = level_of(a, u) as i32;
+    let neg = (x.to_bits() >> 31) as i32;
+    (lev ^ -neg).wrapping_add(neg)
+}
+
+/// 8-lane chunked driver over a per-coordinate bracket function. The
+/// exponential grid's `level_of` is pure arithmetic (exponent extraction),
+/// so its lane loop vectorizes; custom grids keep the binary search per
+/// lane but still gain the unrolled normalize/select pipeline.
+#[inline(always)]
+fn assign_grid_levels<F: Fn(f32, f32) -> u32>(
+    v: &[f32],
+    words: &[u8],
+    inv: f32,
+    levels: &mut [i32],
+    level_of: F,
+) {
+    let n8 = v.len() - v.len() % LANES;
+    for ((lc, vc), wc) in levels[..n8]
+        .chunks_exact_mut(LANES)
+        .zip(v[..n8].chunks_exact(LANES))
+        .zip(words[..n8 * 4].chunks_exact(LANES * 4))
+    {
+        let lc: &mut [i32; LANES] = lc.try_into().unwrap();
+        let vc: &[f32; LANES] = vc.try_into().unwrap();
+        for ((l, &x), c) in lc.iter_mut().zip(vc).zip(wc.chunks_exact(4)) {
+            let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            *l = grid_level_lane(x, word, inv, &level_of);
+        }
+    }
+    for ((l, &x), c) in levels[n8..]
+        .iter_mut()
+        .zip(&v[n8..])
+        .zip(words[n8 * 4..].chunks_exact(4))
+    {
+        let word = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        *l = grid_level_lane(x, word, inv, &level_of);
+    }
+}
+
 /// Grid-aware hot-path bucket quantizer — the single level-assignment
 /// routine both the two-phase and fused pipelines stream from, for *every*
 /// grid (which is what makes fused-vs-two-phase bit-identity hold per grid).
 /// Uniform grids dispatch to [`quantize_bucket_into`] unchanged; non-uniform
-/// grids stochastically round `|v|/F(b)` between adjacent grid points.
-/// Allocation-free on both paths.
+/// grids stochastically round `|v|/F(b)` between adjacent grid points —
+/// the exponential grid through the exponent-extraction bracket
+/// ([`exponential_level`]), bit-identical to the binary search it replaces.
+/// Allocation-free on every path; oracle: [`quantize_bucket_into_grid_scalar`].
 #[inline]
 pub fn quantize_bucket_into_grid(
     v: &[f32],
@@ -169,6 +295,36 @@ pub fn quantize_bucket_into_grid(
     debug_assert_eq!(levels.len(), v.len());
     let scale = norm.scale(v);
     // subnormal scales are degenerate (see quantize_bucket_with_uniforms_grid)
+    if !scale.is_normal() {
+        levels.fill(0);
+        return 0.0;
+    }
+    let inv = 1.0 / scale;
+    if matches!(grid, LevelGrid::Exponential { .. }) {
+        assign_grid_levels(v, words, inv, levels, |a, u| exponential_level(pts, a, u));
+    } else {
+        assign_grid_levels(v, words, inv, levels, |a, u| nonuniform_level(pts, a, u));
+    }
+    scale
+}
+
+/// Scalar reference for [`quantize_bucket_into_grid`] — the pre-SIMD loop
+/// (binary-search bracket for every non-uniform grid), kept verbatim as
+/// the bit-identity oracle.
+pub fn quantize_bucket_into_grid_scalar(
+    v: &[f32],
+    words: &[u8],
+    grid: &LevelGrid,
+    norm: Norm,
+    levels: &mut [i32],
+) -> f32 {
+    let pts = match grid.nonzero_points() {
+        None => return quantize_bucket_into_scalar(v, words, grid.s(), norm, levels),
+        Some(pts) => pts,
+    };
+    debug_assert_eq!(words.len(), v.len() * 4);
+    debug_assert_eq!(levels.len(), v.len());
+    let scale = norm.scale(v);
     if !scale.is_normal() {
         levels.fill(0);
         return 0.0;
@@ -425,6 +581,33 @@ mod tests {
         let qa = quantize_bucket_with_uniforms(&v[..64], &u[..64], 7, Norm::L2);
         let qb = quantize_bucket_with_uniforms(&v[64..], &u[64..], 7, Norm::L2);
         assert_eq!(q.buckets, vec![qa, qb]);
+    }
+
+    #[test]
+    fn simd_paths_match_scalar_oracles_on_awkward_tails() {
+        // Full adversarial coverage lives in tests/simd_levels.rs; this
+        // pins the lane/tail split itself for every length around the
+        // 8-lane boundary, per grid family.
+        let mut r = rng(21);
+        for n in 0..=33usize {
+            let v = randn(n, 100 + n as u64);
+            let mut words = vec![0u8; n * 4];
+            r.fill_bytes(&mut words);
+            for grid in [
+                LevelGrid::uniform(7),
+                LevelGrid::exponential(4),
+                LevelGrid::custom(vec![0.1, 0.45, 1.0]).unwrap(),
+            ] {
+                for norm in [Norm::L2, Norm::Max] {
+                    let mut a = vec![0i32; n];
+                    let mut b = vec![0i32; n];
+                    let sa = quantize_bucket_into_grid(&v, &words, &grid, norm, &mut a);
+                    let sb = quantize_bucket_into_grid_scalar(&v, &words, &grid, norm, &mut b);
+                    assert_eq!(sa.to_bits(), sb.to_bits(), "scale n={n} {}", grid.label());
+                    assert_eq!(a, b, "levels n={n} {norm:?} {}", grid.label());
+                }
+            }
+        }
     }
 
     #[test]

@@ -9,9 +9,25 @@
 //! floating-point reduction built on them) are deterministic and independent
 //! of thread scheduling.
 
-/// Upper bound on useful worker threads for this process.
+/// Upper bound on useful worker threads for this process: the
+/// `QSGD_THREADS` environment variable when set to a positive integer
+/// (pinning it makes bench and CI numbers reproducible across hosts —
+/// results are bit-identical at any thread count by construction, but
+/// timings are not), else the machine's available parallelism. Read once
+/// and cached for the life of the process.
 pub fn max_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Some(n) = std::env::var("QSGD_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+        {
+            return n;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Parallel indexed map over a mutable slice: `out[i] = f(i, &mut items[i])`.

@@ -1,0 +1,235 @@
+//! The v3 bucket-offset directory frame: format pinning, threshold
+//! behavior, and serial-vs-parallel decode identity.
+//!
+//! * frames below the directory threshold stay **byte-identical** to the
+//!   v1/v2 formats (golden frames in `nuqsgd.rs` pin the exact bytes; here
+//!   we pin the version nibble and the fused/two-phase agreement around the
+//!   threshold);
+//! * directory-bearing frames are pinned by goldens whose bytes are
+//!   assembled independently of the encoder (BitWriter + Elias primitives);
+//! * serial decode, parallel decode at every thread budget, and the
+//!   directory-less frame of the same quantized gradient all produce
+//!   bit-identical results;
+//! * the fused pipeline and the two-phase oracle agree byte-for-byte above
+//!   the threshold, where both emit the directory.
+
+mod common;
+
+use qsgd::coding::bitstream::BitWriter;
+use qsgd::coding::gradient::{
+    self, Regime, FRAME_MAGIC, FRAME_VERSION, FRAME_VERSION_DIR, FRAME_VERSION_GRID,
+};
+use qsgd::coding::{elias, FusedQsgd, NuqsgdCompressor, QsgdCompressor};
+use qsgd::prop_assert;
+use qsgd::quant::{stochastic, Compressor, LevelGrid, Norm, QuantBucket, QuantizedGradient};
+use qsgd::util::check::forall;
+use qsgd::util::rng::{self, Xoshiro256};
+
+fn frame(
+    grid: LevelGrid,
+    bucket_size: usize,
+    norm: Norm,
+    n: usize,
+    buckets: Vec<QuantBucket>,
+) -> QuantizedGradient {
+    QuantizedGradient { s: grid.s(), grid, bucket_size, norm, n, buckets }
+}
+
+fn hex(s: &str) -> Vec<u8> {
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+/// Assemble the expected v3 bytes for a *dense* single-level-stream frame,
+/// independently of the encoder: header fields, grid tag, Elias'(byte len)
+/// directory, byte alignment, then the given pre-encoded bucket payloads.
+fn assemble_v3_dense(
+    grid_tag: u64,
+    s: u64,
+    n: u64,
+    bucket: u64,
+    payloads: &[Vec<u8>],
+) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write_bits(FRAME_MAGIC, 8);
+    w.write_bits(FRAME_VERSION_DIR, 4);
+    w.write_bit(false); // dense
+    w.write_bit(true); // max norm
+    elias::encode(&mut w, s);
+    elias::encode0(&mut w, n);
+    elias::encode(&mut w, bucket);
+    elias::encode(&mut w, grid_tag);
+    for p in payloads {
+        elias::encode0(&mut w, p.len() as u64);
+    }
+    w.align_to_byte();
+    for p in payloads {
+        w.extend_aligned(p);
+    }
+    w.into_bytes()
+}
+
+/// Encode one dense bucket body (scale + per-coordinate Elias'(|ℓ|) + sign
+/// bit for nonzeros) to padded bytes, with the bit-level primitives only.
+fn dense_bucket_payload(scale: f32, levels: &[i32]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write_f32(scale);
+    for &l in levels {
+        elias::encode0(&mut w, l.unsigned_abs() as u64);
+        if l != 0 {
+            w.write_bit(l < 0);
+        }
+    }
+    w.into_bytes()
+}
+
+#[test]
+fn golden_v3_uniform_directory_frame() {
+    // The v1 golden frame's quantized gradient, with the directory forced:
+    // s=1, n=2, bucket=2, max-norm, dense, levels [0, -1], scale 1.0.
+    let q = frame(
+        LevelGrid::uniform(1),
+        2,
+        Norm::Max,
+        2,
+        vec![QuantBucket { scale: 1.0, levels: vec![0, -1] }],
+    );
+    let bytes = gradient::encode_with_directory(&q, Regime::Dense, true);
+    // magic | v3 | dense | max | Elias(1) | Elias'(2) | Elias(2) |
+    // tag Elias(3) | dir Elias'(5) | pad | payload (5 bytes)
+    assert_eq!(bytes, hex("a535a6b03f80000048"));
+    // and the independently assembled bytes agree
+    let payload = dense_bucket_payload(1.0, &[0, -1]);
+    assert_eq!(payload, hex("3f80000048"));
+    assert_eq!(bytes, assemble_v3_dense(3, 1, 2, 2, &[payload]));
+    // round-trip through both decoders
+    assert_eq!(gradient::decode(&bytes).unwrap(), q);
+    let mut acc = vec![0.0f32; 2];
+    assert_eq!(gradient::par_decode_add(&bytes, 1.0, &mut acc).unwrap(), 2);
+    assert_eq!(acc, q.dequantize());
+    // the directory-less encoding of the same gradient is the v1 golden
+    assert_eq!(gradient::encode_with_directory(&q, Regime::Dense, false), hex("a515a1fc00000240"));
+}
+
+#[test]
+fn golden_v3_multi_bucket_exponential_frame() {
+    // Exponential grid s=2 ({0, 1/2, 1}), n=3, bucket=2 ⇒ two buckets
+    // ([1, -2] scale 2.0 and [1] scale 0.5): exercises multiple directory
+    // entries and the ragged tail bucket.
+    let q = frame(
+        LevelGrid::exponential(2),
+        2,
+        Norm::Max,
+        3,
+        vec![
+            QuantBucket { scale: 2.0, levels: vec![1, -2] },
+            QuantBucket { scale: 0.5, levels: vec![1] },
+        ],
+    );
+    let bytes = gradient::encode_with_directory(&q, Regime::Dense, true);
+    let payloads = vec![dense_bucket_payload(2.0, &[1, -2]), dense_bucket_payload(0.5, &[1])];
+    assert_eq!(bytes, assemble_v3_dense(1, 2, 3, 2, &payloads));
+    assert_eq!(gradient::decode(&bytes).unwrap(), q);
+    assert_eq!(gradient::decode(&bytes).unwrap().dequantize(), vec![1.0, -2.0, 0.25]);
+}
+
+#[test]
+fn version_nibble_tracks_the_threshold_rule() {
+    let mut r = Xoshiro256::from_u64(1);
+    let below = rng::normal_vec(&mut r, gradient::DIRECTORY_MIN_COORDS - 1);
+    let above = rng::normal_vec(&mut r, gradient::DIRECTORY_MIN_COORDS);
+    for (grid, want_plain) in [
+        (LevelGrid::uniform(7), FRAME_VERSION),
+        (LevelGrid::exponential(7), FRAME_VERSION_GRID),
+    ] {
+        let mut c = FusedQsgd::with_grid(grid.clone(), 512, Norm::Max, None);
+        let small = c.compress(&below, &mut Xoshiro256::from_u64(2));
+        assert_eq!((small[1] >> 4) as u64, want_plain, "{}", grid.label());
+        let big = c.compress(&above, &mut Xoshiro256::from_u64(3));
+        assert_eq!((big[1] >> 4) as u64, FRAME_VERSION_DIR, "{}", grid.label());
+        // single-bucket frames never carry a directory, however large
+        let mut whole = FusedQsgd::with_grid(grid.clone(), usize::MAX, Norm::Max, None);
+        let one = whole.compress(&above, &mut Xoshiro256::from_u64(4));
+        assert_eq!((one[1] >> 4) as u64, want_plain, "{}", grid.label());
+    }
+}
+
+#[test]
+fn fused_matches_two_phase_above_the_threshold() {
+    // Both encoders must flip to the directory at exactly the same size and
+    // produce identical bytes on both sides of it.
+    let mut r = Xoshiro256::from_u64(5);
+    for n in [
+        gradient::DIRECTORY_MIN_COORDS - 1,
+        gradient::DIRECTORY_MIN_COORDS,
+        gradient::DIRECTORY_MIN_COORDS + 513,
+    ] {
+        let v = rng::normal_vec(&mut r, n);
+        let mut fused = FusedQsgd::new(7, 512, Norm::Max, None);
+        let mut oracle = QsgdCompressor { s: 7, bucket: 512, norm: Norm::Max, regime: None };
+        let a = fused.compress(&v, &mut Xoshiro256::from_u64(n as u64));
+        let b = oracle.compress(&v, &mut Xoshiro256::from_u64(n as u64));
+        assert_eq!(a, b, "n={n}");
+        let mut nu_fused = FusedQsgd::nuqsgd_with_bits(4, 512);
+        let mut nu_oracle = NuqsgdCompressor::with_bits(4, 512);
+        let a = nu_fused.compress(&v, &mut Xoshiro256::from_u64(n as u64 ^ 0xF));
+        let b = nu_oracle.compress(&v, &mut Xoshiro256::from_u64(n as u64 ^ 0xF));
+        assert_eq!(a, b, "nuqsgd n={n}");
+    }
+}
+
+#[test]
+fn prop_directory_roundtrip_serial_equals_parallel() {
+    forall("directory-roundtrip", 80, 2500, |g| {
+        let n = g.usize_in(1, g.size.max(1));
+        let v = common::gen_vec(g, n);
+        let grid = common::gen_grid(g);
+        let bucket = [1usize, 3, 64, 512][g.usize_in(0, 3)];
+        let norm = common::gen_norm(g);
+        let regime = if g.bool() { Regime::Sparse } else { Regime::Dense };
+        let q = stochastic::quantize_grid(&v, &grid, bucket, norm, g.rng);
+        let plain = gradient::encode_with_directory(&q, regime, false);
+        let dirred = gradient::encode_with_directory(&q, regime, true);
+        let qd = gradient::decode(&dirred).map_err(|e| e.to_string())?;
+        prop_assert!(qd == q, "directory frame decode mismatch (n={n})");
+        let mut base = vec![0.5f32; n];
+        gradient::decode_add(&plain, 0.25, &mut base).map_err(|e| e.to_string())?;
+        for threads in [1usize, 2, 5, 16] {
+            let mut acc = vec![0.5f32; n];
+            gradient::par_decode_add_threads(&dirred, 0.25, &mut acc, threads)
+                .map_err(|e| e.to_string())?;
+            let same = acc
+                .iter()
+                .zip(&base)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            prop_assert!(same, "parallel decode diverged (n={n}, threads={threads})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_compressor_threads_path_is_bit_identical() {
+    // Through the coordinator's segment framing: a plan whose quantized
+    // segment is large enough to carry the directory must decode the same
+    // under any intra-message budget.
+    use qsgd::coordinator::exchange::PlanCompressor;
+    use qsgd::coordinator::CompressorSpec;
+    use qsgd::models::layout::{ParamLayout, QuantPlan};
+
+    let l = ParamLayout::synthetic(&[("small", vec![64]), ("big", vec![400, 200])]);
+    let plan = QuantPlan::build(&l, 10_000);
+    let mut rng = Xoshiro256::from_u64(8);
+    let grad = rng::normal_vec(&mut rng, l.total_params());
+    let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
+    let msg = pc.compress(&grad, &mut rng);
+    let mut base = vec![0.0f32; grad.len()];
+    pc.decompress_add(&msg, 1.0, &mut base).unwrap();
+    for threads in [2usize, 4, 32] {
+        let mut acc = vec![0.0f32; grad.len()];
+        pc.decompress_add_threads(&msg, 1.0, &mut acc, threads).unwrap();
+        assert_eq!(acc, base, "threads={threads}");
+    }
+}

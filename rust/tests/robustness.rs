@@ -14,7 +14,9 @@
 //! so for those the contract is "Err or a self-consistent Ok".
 
 use qsgd::coding::bitstream::BitWriter;
-use qsgd::coding::gradient::{self, Regime, FRAME_MAGIC, FRAME_VERSION, FRAME_VERSION_GRID};
+use qsgd::coding::gradient::{
+    self, Regime, FRAME_MAGIC, FRAME_VERSION, FRAME_VERSION_DIR, FRAME_VERSION_GRID,
+};
 use qsgd::coding::{elias, FusedQsgd};
 use qsgd::quant::{Compressor, LevelGrid, Norm};
 use qsgd::util::check::forall;
@@ -31,6 +33,16 @@ fn sample_frames() -> Vec<(Vec<u8>, usize)> {
         (LevelGrid::custom(vec![0.1, 0.5, 1.0]).unwrap(), Norm::Max, Some(Regime::Sparse)),
     ] {
         let mut c = FusedQsgd::with_grid(grid, 64, norm, regime);
+        frames.push((c.compress(&v, &mut Xoshiro256::from_u64(9)), v.len()));
+    }
+    // v3 (bucket-offset directory) frames, forced below the size threshold
+    // so the whole truncation/bit-flip sweep stays cheap
+    for (grid, regime) in [
+        (LevelGrid::uniform(7), Some(Regime::Dense)),
+        (LevelGrid::exponential(7), Some(Regime::Sparse)),
+    ] {
+        let mut c = FusedQsgd::with_grid(grid, 64, Norm::Max, regime);
+        c.encoder().directory = Some(true);
         frames.push((c.compress(&v, &mut Xoshiro256::from_u64(9)), v.len()));
     }
     frames
@@ -69,11 +81,15 @@ fn bit_flips_never_panic_and_any_ok_is_self_consistent() {
             let _ = gradient::decode_add(&m, 0.5, &mut acc);
             let _ = gradient::decode_expecting(&m, n);
         }
-        // flips inside the first two bytes corrupt magic/version: always Err
-        for bit in 0..12 {
+        // flips inside the first byte corrupt the magic: always Err. (The
+        // version nibble is no longer always-Err: with v1/v2/v3 all valid,
+        // a single flipped bit can map one version onto another, and the
+        // reinterpreted stream falls under the generic "Err or
+        // self-consistent Ok" contract checked above.)
+        for bit in 0..8 {
             let mut m = bytes.clone();
             m[bit / 8] ^= 1 << (7 - bit % 8);
-            assert!(gradient::decode(&m).is_err(), "header bit {bit} accepted");
+            assert!(gradient::decode(&m).is_err(), "magic bit {bit} accepted");
         }
     }
 }
@@ -115,6 +131,8 @@ fn hostile_header_dimensions_are_rejected_without_oom() {
     // zero bucket size
     assert!(gradient::decode(&lying_header(7, 8, 0, FRAME_VERSION, false)).is_err());
     // unsupported version
+    assert!(gradient::decode(&lying_header(7, 8, 8, 15, false)).is_err());
+    // v3 without the mandatory grid tag + directory: exhausts the stream
     assert!(gradient::decode(&lying_header(7, 8, 8, 3, false)).is_err());
 }
 
@@ -149,6 +167,94 @@ fn hostile_grid_tags_are_rejected() {
     // a truncated-but-valid-shape grid still decodes the grid, then fails on
     // the missing bucket data
     assert!(gradient::decode(&with_tag(2, 2, &[0.25, 1.0])).is_err());
+}
+
+/// Hand-assemble a v3 frame: header, uniform grid tag, the given directory
+/// byte lengths (Elias'), alignment, then raw payload bytes.
+fn v3_frame(s: u64, n: u64, bucket: u64, dir_lens: &[u64], payload: &[u8]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write_bits(FRAME_MAGIC, 8);
+    w.write_bits(FRAME_VERSION_DIR, 4);
+    w.write_bit(false); // dense
+    w.write_bit(true); // max norm
+    elias::encode(&mut w, s);
+    elias::encode0(&mut w, n);
+    elias::encode(&mut w, bucket);
+    elias::encode(&mut w, 3); // GRID_TAG_UNIFORM
+    for &l in dir_lens {
+        elias::encode(&mut w, l + 1);
+    }
+    w.align_to_byte();
+    w.extend_aligned(payload);
+    w.into_bytes()
+}
+
+#[test]
+fn corrupt_directories_are_rejected_without_panic_or_oom() {
+    let assert_all_reject = |bytes: &[u8], what: &str| {
+        assert!(gradient::decode(bytes).is_err(), "{what}: decode accepted");
+        let mut acc = vec![0.0f32; 128];
+        assert!(gradient::decode_add(bytes, 1.0, &mut acc).is_err(), "{what}: decode_add");
+        assert!(
+            gradient::par_decode_add_threads(bytes, 1.0, &mut acc, 4).is_err(),
+            "{what}: par_decode_add"
+        );
+        assert!(gradient::decode_expecting(bytes, 128).is_err(), "{what}: decode_expecting");
+    };
+
+    // a valid 128-coord / 64-bucket dense payload to splice under lying dirs
+    let mut c = FusedQsgd::new(7, 64, Norm::Max, Some(Regime::Dense));
+    c.encoder().directory = Some(true);
+    let v: Vec<f32> = (0..128).map(|i| (i as f32 - 64.0) / 64.0).collect();
+    let good = c.compress(&v, &mut Xoshiro256::from_u64(1));
+    assert!(gradient::decode(&good).is_ok());
+
+    // directory lengths that overrun the message
+    assert_all_reject(&v3_frame(7, 128, 64, &[1 << 40, 1 << 40], &[0; 8]), "overrun");
+    // u64-overflowing cumulative length
+    assert_all_reject(&v3_frame(7, 128, 64, &[u64::MAX - 2, 8], &[0; 8]), "overflow");
+    // zero-length buckets: below the 5-byte scale+levels floor
+    assert_all_reject(&v3_frame(7, 128, 64, &[0, 0], &[]), "zero-length");
+    // lengths lying short: also below the per-bucket payload floor
+    assert_all_reject(&v3_frame(7, 128, 64, &[2, 2], &[0x3f, 0x80, 0x00, 0x00]), "short");
+    // allocation amplification: n = 2^20 at bucket 1 claims 2^20 directory
+    // entries, and an all-zero directory body decodes every entry as len 0
+    // (one bit each) — the per-entry payload floor must reject this at the
+    // FIRST entry, long before a 2^20-entry directory Vec is built
+    let mut amp = v3_frame(7, 1 << 20, 1, &[], &[]);
+    amp.extend_from_slice(&vec![0u8; 1 << 18]); // ~2 Mbit of zero "entries"
+    assert!(gradient::decode(&amp).is_err(), "amplification vector accepted");
+    // truncated inside the directory varints
+    let full = v3_frame(7, 128, 64, &[40, 40], &[0u8; 80]);
+    assert_all_reject(&full[..3], "truncated dir");
+    // directory entry count mismatch is not representable (count is derived
+    // from n and bucket), but a bucket count lying huge must be bounded by
+    // the stream before any allocation: n = 2^27 coords at bucket 1 claims
+    // 2^27 directory entries against a ~16-byte message.
+    assert_all_reject(&v3_frame(7, 1 << 27, 1, &[], &[]), "huge bucket count");
+
+    // uniform grid tag is only valid in v3 — a v2 frame carrying it fails
+    let mut w = BitWriter::new();
+    w.write_bits(FRAME_MAGIC, 8);
+    w.write_bits(FRAME_VERSION_GRID, 4);
+    w.write_bit(false);
+    w.write_bit(true);
+    elias::encode(&mut w, 7);
+    elias::encode0(&mut w, 4);
+    elias::encode(&mut w, 4);
+    elias::encode(&mut w, 3); // GRID_TAG_UNIFORM — v3-only
+    assert!(gradient::decode(&w.into_bytes()).is_err());
+
+    // flipping any single bit of a valid directory frame never panics and
+    // keeps Ok decodes self-consistent (exhaustive sweep runs in
+    // bit_flips_never_panic_and_any_ok_is_self_consistent; here we also
+    // drive the *parallel* decoder over the corrupted frames)
+    for bit in 0..good.len() * 8 {
+        let mut m = good.clone();
+        m[bit / 8] ^= 1 << (7 - bit % 8);
+        let mut acc = vec![0.0f32; 128];
+        let _ = gradient::par_decode_add_threads(&m, 1.0, &mut acc, 4);
+    }
 }
 
 #[test]

@@ -1,0 +1,196 @@
+//! SIMD-vs-scalar bit-identity for the level-assignment hot path.
+//!
+//! The vectorized `quantize_bucket_into`/`quantize_bucket_into_grid`
+//! (8-lane chunks, branch-free sign select, exponent-extraction bracket for
+//! the exponential grid) must produce the **exact** levels and scale of the
+//! scalar oracles they replaced, for every grid family, over the shared
+//! adversarial generators (±0, subnormals, huge/tiny magnitudes, all-zero
+//! buckets) and every tail length — byte-level wire identity of the whole
+//! stack rides on this (the fused pipeline streams these levels straight
+//! into the Elias coder).
+
+mod common;
+
+use qsgd::prop_assert;
+use qsgd::quant::{stochastic, LevelGrid, Norm};
+use qsgd::util::check::forall;
+use qsgd::util::rng::Xoshiro256;
+use rand_core::RngCore;
+
+/// Compare SIMD vs scalar on one bucket; scales are compared bitwise.
+fn assert_bucket_identical(
+    v: &[f32],
+    words: &[u8],
+    grid: &LevelGrid,
+    norm: Norm,
+) -> Result<(), String> {
+    let mut simd = vec![0i32; v.len()];
+    let mut scalar = vec![0i32; v.len()];
+    let ss = stochastic::quantize_bucket_into_grid(v, words, grid, norm, &mut simd);
+    let sc = stochastic::quantize_bucket_into_grid_scalar(v, words, grid, norm, &mut scalar);
+    prop_assert!(
+        ss.to_bits() == sc.to_bits(),
+        "scale diverged: {ss} vs {sc} (n={}, {}, {norm:?})",
+        v.len(),
+        grid.label()
+    );
+    for i in 0..v.len() {
+        prop_assert!(
+            simd[i] == scalar[i],
+            "level {i} diverged: {} vs {} (x={:e}, n={}, {}, {norm:?})",
+            simd[i],
+            scalar[i],
+            v[i],
+            v.len(),
+            grid.label()
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_simd_levels_bit_identical_to_scalar_per_grid() {
+    forall("simd-vs-scalar-levels", 250, 3000, |g| {
+        let n = g.usize_in(0, g.size);
+        let v = common::gen_vec(g, n);
+        let grid = common::gen_grid(g);
+        let norm = common::gen_norm(g);
+        let mut words = vec![0u8; n * 4];
+        g.rng.fill_bytes(&mut words);
+        assert_bucket_identical(&v, &words, &grid, norm)
+    });
+}
+
+#[test]
+fn prop_uniform_entry_point_matches_scalar() {
+    // The uniform fast entry (`quantize_bucket_into`) directly, including
+    // large s values the grid generator does not emit.
+    forall("simd-vs-scalar-uniform", 150, 3000, |g| {
+        let n = g.usize_in(0, g.size);
+        let v = common::gen_vec(g, n);
+        let s = [1u32, 7, 255, 65535][g.usize_in(0, 3)];
+        let norm = common::gen_norm(g);
+        let mut words = vec![0u8; n * 4];
+        g.rng.fill_bytes(&mut words);
+        let mut simd = vec![0i32; n];
+        let mut scalar = vec![0i32; n];
+        let ss = stochastic::quantize_bucket_into(&v, &words, s, norm, &mut simd);
+        let sc = stochastic::quantize_bucket_into_scalar(&v, &words, s, norm, &mut scalar);
+        prop_assert!(ss.to_bits() == sc.to_bits(), "scale diverged (s={s})");
+        prop_assert!(simd == scalar, "levels diverged (n={n}, s={s}, {norm:?})");
+        Ok(())
+    });
+}
+
+#[test]
+fn every_tail_length_and_adversarial_fill() {
+    // Deterministic sweep of lengths around the 8-lane boundary, with the
+    // bucket made *entirely* of adversarial values (the property test only
+    // sprinkles them).
+    let adv = common::ADVERSARIAL_VALUES;
+    let mut r = Xoshiro256::from_u64(77);
+    for n in 0..=40usize {
+        let v: Vec<f32> = (0..n).map(|i| adv[(i * 5 + n) % adv.len()]).collect();
+        let mut words = vec![0u8; n * 4];
+        r.fill_bytes(&mut words);
+        for grid in [
+            LevelGrid::uniform(1),
+            LevelGrid::uniform(255),
+            LevelGrid::exponential(1),
+            LevelGrid::exponential(7),
+            LevelGrid::exponential(127),
+            LevelGrid::custom(vec![1.0]).unwrap(),
+            LevelGrid::custom(vec![0.03, 0.2, 0.21, 0.9, 1.0]).unwrap(),
+        ] {
+            for norm in [Norm::L2, Norm::Max] {
+                assert_bucket_identical(&v, &words, &grid, norm).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn nan_and_inf_inputs_stay_identical() {
+    // NaN/±inf coordinates are outside the quantizer's contract but must
+    // still be deterministic and identical across the two implementations
+    // (the scalar semantics — NaN rides the min() clamp — are frozen).
+    let mut r = Xoshiro256::from_u64(78);
+    let v = [
+        f32::NAN,
+        -f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        1.0,
+        -0.5,
+        0.0,
+        -0.0,
+        3e38,
+        1e-45,
+        f32::NAN,
+    ];
+    let mut words = vec![0u8; v.len() * 4];
+    for _ in 0..50 {
+        r.fill_bytes(&mut words);
+        for grid in [LevelGrid::uniform(7), LevelGrid::exponential(4)] {
+            for norm in [Norm::L2, Norm::Max] {
+                assert_bucket_identical(&v, &words, &grid, norm).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn all_zero_and_degenerate_scale_buckets() {
+    let mut r = Xoshiro256::from_u64(79);
+    let cases: Vec<Vec<f32>> = vec![
+        vec![0.0; 19],
+        vec![-0.0; 8],
+        vec![1e-45, 0.0, -1e-45, 0.0, 1e-45, -0.0, 0.0, 1e-45, 0.0],
+        vec![3e38; 17], // L2 scale overflows to inf ⇒ degenerate
+    ];
+    for v in &cases {
+        let mut words = vec![0u8; v.len() * 4];
+        r.fill_bytes(&mut words);
+        for grid in [
+            LevelGrid::uniform(7),
+            LevelGrid::exponential(4),
+            LevelGrid::custom(vec![0.5, 1.0]).unwrap(),
+        ] {
+            for norm in [Norm::L2, Norm::Max] {
+                assert_bucket_identical(v, &words, &grid, norm).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_full_pipeline_wire_bytes_unchanged_by_simd() {
+    // End-to-end: the SIMD quantizer feeds the fused encoder; the frames it
+    // emits must decode to quantized gradients whose levels equal a
+    // reconstruction from the scalar oracle run bucket-by-bucket over the
+    // same RNG stream.
+    forall("simd-wire-equivalence", 60, 2000, |g| {
+        let (n, bucket) = common::gen_dims(g);
+        let v = common::gen_vec(g, n);
+        let grid = common::gen_grid(g);
+        let seed = common::gen_seed(g);
+        let mut qrng = Xoshiro256::from_u64(seed);
+        let q = stochastic::quantize_grid(&v, &grid, bucket, Norm::Max, &mut qrng);
+        // scalar replay of the same RNG stream (one fill_bytes per bucket)
+        let mut rng = Xoshiro256::from_u64(seed);
+        let chunk = bucket.min(v.len()).max(1);
+        let mut words = vec![0u8; chunk * 4];
+        for (bi, c) in v.chunks(bucket).enumerate() {
+            let w = &mut words[..c.len() * 4];
+            rng.fill_bytes(w);
+            let mut lv = vec![0i32; c.len()];
+            let sc = stochastic::quantize_bucket_into_grid_scalar(c, w, &grid, Norm::Max, &mut lv);
+            prop_assert!(
+                q.buckets[bi].scale.to_bits() == sc.to_bits(),
+                "bucket {bi} scale diverged"
+            );
+            prop_assert!(q.buckets[bi].levels == lv, "bucket {bi} levels diverged");
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_*.json against the committed baseline.
+
+Usage: check_bench_regression.py NEW_JSON BASELINE_JSON [--threshold 1.25]
+
+Matches (section, name) rows between the two reports and fails (exit 1)
+when any `ns_per_coord` (falling back to `median_ns`) regresses by more
+than the threshold factor. Rows present on only one side are reported but
+never fail the check (sections come and go across PRs). A missing baseline
+file is a soft skip (exit 0) so the advisory lane stays green until a
+baseline is committed from a trusted runner's artifact.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_rows(path: Path) -> dict:
+    doc = json.loads(path.read_text())
+    rows = {}
+    for row in doc.get("results", []):
+        key = (row.get("section"), row.get("name"))
+        value = row.get("ns_per_coord") or row.get("median_ns")
+        if value is not None:
+            rows[key] = float(value)
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new_json", type=Path)
+    ap.add_argument("baseline_json", type=Path)
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when new/baseline exceeds this factor")
+    args = ap.parse_args()
+
+    if not args.baseline_json.exists():
+        print(f"no baseline at {args.baseline_json} — skipping comparison.")
+        print(f"To seed one, commit this run's {args.new_json} to that path.")
+        return 0
+
+    new = load_rows(args.new_json)
+    base = load_rows(args.baseline_json)
+
+    regressions = []
+    for key, base_v in sorted(base.items()):
+        if base_v <= 0:
+            continue
+        new_v = new.get(key)
+        if new_v is None:
+            print(f"  [gone]    {key[0]} / {key[1]}")
+            continue
+        ratio = new_v / base_v
+        marker = "REGRESSED" if ratio > args.threshold else "ok"
+        print(f"  [{marker:9}] {key[0]} / {key[1]}: "
+              f"{base_v:.3f} -> {new_v:.3f} ns/coord ({ratio:.2f}x)")
+        if ratio > args.threshold:
+            regressions.append((key, ratio))
+    for key in sorted(set(new) - set(base)):
+        print(f"  [new]     {key[0]} / {key[1]}")
+
+    if regressions:
+        print(f"\n{len(regressions)} section(s) regressed beyond "
+              f"{args.threshold:.2f}x vs the committed baseline.")
+        return 1
+    print("\nno regressions beyond threshold.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
