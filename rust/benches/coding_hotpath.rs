@@ -23,7 +23,7 @@ use qsgd::bench::{section, Bench, Report, Sampled};
 use qsgd::coding::gradient::{self, Regime};
 use qsgd::coding::FusedEncoder;
 use qsgd::coordinator::CompressorSpec;
-use qsgd::quant::{stochastic, Compressor, LevelGrid, Norm};
+use qsgd::quant::{stochastic, Codec, EncodeSession, LevelGrid, Norm};
 use qsgd::util::par;
 use qsgd::util::rng::{self, Xoshiro256};
 use rand_core::RngCore;
@@ -184,9 +184,8 @@ fn main() {
 
     section("fused pipeline (tentpole): zero-alloc encode vs two-phase");
     let spec = CompressorSpec::qsgd_4bit();
-    let mut two_phase = spec.build_two_phase(n);
-    let mut r = Xoshiro256::from_u64(5);
-    let s_two = b.run("two-phase compress 4-bit/512", || two_phase.compress(&grad, &mut r));
+    let mut two_phase = spec.codec_two_phase().session(Xoshiro256::from_u64(5));
+    let s_two = b.run("two-phase compress 4-bit/512", || two_phase.compress(&grad));
     s_two.report_throughput(coords * 4.0);
     report.add("fused_pipeline", &s_two, Some(coords));
 
@@ -221,9 +220,8 @@ fn main() {
 
     section("NUQSGD (exponential grid) through the fused pipeline");
     let nu_spec = CompressorSpec::nuqsgd_4bit();
-    let mut nu_two = nu_spec.build_two_phase(n);
-    let mut r = Xoshiro256::from_u64(6);
-    let s_nu_two = b.run("two-phase NUQSGD 4-bit/512", || nu_two.compress(&grad, &mut r));
+    let mut nu_two = nu_spec.codec_two_phase().session(Xoshiro256::from_u64(6));
+    let s_nu_two = b.run("two-phase NUQSGD 4-bit/512", || nu_two.compress(&grad));
     s_nu_two.report_throughput(coords * 4.0);
     report.add("nuqsgd", &s_nu_two, Some(coords));
     let mut nu_fused = FusedEncoder::with_grid(LevelGrid::exponential(7), 512, Norm::Max, None);
@@ -242,11 +240,11 @@ fn main() {
     );
     // Bit-identity on the wire, same seeds.
     {
-        let mut a = nu_spec.build_two_phase(n);
-        let mut c = nu_spec.build(n);
+        let mut a = nu_spec.codec_two_phase().session(Xoshiro256::from_u64(7));
+        let mut c = nu_spec.codec().session(Xoshiro256::from_u64(7));
         assert_eq!(
-            a.compress(&grad, &mut Xoshiro256::from_u64(7)),
-            c.compress(&grad, &mut Xoshiro256::from_u64(7)),
+            a.compress(&grad),
+            c.compress(&grad),
             "NUQSGD fused wire bytes diverged from two-phase"
         );
     }
@@ -266,22 +264,19 @@ fn main() {
     section("8-worker parallel encode (acceptance: ≥2x vs sequential two-phase)");
     const K: usize = 8;
     struct Lane {
-        c: Box<dyn Compressor>,
-        rng: Xoshiro256,
+        sess: Box<dyn EncodeSession>,
     }
     let mk_lanes = |two_phase: bool| -> Vec<Lane> {
+        let codec = if two_phase { spec.codec_two_phase() } else { spec.codec() };
         (0..K)
-            .map(|w| Lane {
-                c: if two_phase { spec.build_two_phase(n) } else { spec.build(n) },
-                rng: Xoshiro256::stream(99, w as u64),
-            })
+            .map(|w| Lane { sess: codec.session(Xoshiro256::stream(99, w as u64)) })
             .collect()
     };
     let mut seq_lanes = mk_lanes(true);
     let s_seq = b.run("sequential two-phase x8", || {
         let mut total = 0usize;
         for lane in seq_lanes.iter_mut() {
-            total += lane.c.compress(&grad, &mut lane.rng).len();
+            total += lane.sess.compress(&grad).len();
         }
         total
     });
@@ -289,7 +284,7 @@ fn main() {
     report.add("par_encode", &s_seq, Some(coords * K as f64));
     let mut par_lanes = mk_lanes(false);
     let s_par = b.run("parallel fused x8 (scoped pool)", || {
-        par::par_map_mut(&mut par_lanes, |_, lane| lane.c.compress(&grad, &mut lane.rng).len())
+        par::par_map_mut(&mut par_lanes, |_, lane| lane.sess.compress(&grad).len())
             .iter()
             .sum::<usize>()
     });
@@ -303,13 +298,13 @@ fn main() {
     let mut c = mk_lanes(false);
     for (la, lc) in a.iter_mut().zip(c.iter_mut()) {
         assert_eq!(
-            la.c.compress(&grad, &mut la.rng),
-            lc.c.compress(&grad, &mut lc.rng),
+            la.sess.compress(&grad),
+            lc.sess.compress(&grad),
             "fused wire bytes diverged from two-phase"
         );
     }
 
-    section("end-to-end Compressor (quantize+code / decode+dequant)");
+    section("end-to-end codec (quantize+code / decode+dequant)");
     for spec in [
         CompressorSpec::qsgd_2bit(),
         CompressorSpec::qsgd_4bit(),
@@ -318,14 +313,14 @@ fn main() {
         CompressorSpec::OneBit { column: 512 },
         CompressorSpec::TernGrad { bucket: 512 },
     ] {
-        let mut c = spec.build(n);
-        let mut r = Xoshiro256::from_u64(3);
-        let enc = b.run(&format!("compress {}", spec.label()), || c.compress(&grad, &mut r));
+        let codec = spec.codec();
+        let mut sess = codec.session(Xoshiro256::from_u64(3));
+        let enc = b.run(&format!("compress {}", spec.label()), || sess.compress(&grad));
         enc.report_throughput(coords * 4.0);
         report.add("end_to_end", &enc, Some(coords));
-        let msg = c.compress(&grad, &mut r);
+        let msg = sess.compress(&grad);
         let dec = b.run(&format!("decompress {}", spec.label()), || {
-            c.decompress(&msg, n).unwrap()
+            codec.decode(&msg, n).unwrap()
         });
         dec.report_throughput(coords * 4.0);
         report.add("end_to_end", &dec, Some(coords));
@@ -373,8 +368,9 @@ fn main() {
     report.add("aggregation", &agg3, Some(coords * 8.0));
     // Both levels of decode parallelism: message groups on the pool, and
     // each directory-bearing frame's buckets under the leftover budget.
+    let threads = par::max_threads();
     let agg4 = b.run("par_decode_mean x8 (4-bit/512)", || {
-        qsgd::collectives::par_decode_mean(&dense_msgs, n, 1.0 / 8.0, |m, a, acc, t| {
+        qsgd::collectives::par_decode_mean(&dense_msgs, n, 1.0 / 8.0, threads, |m, a, acc, t| {
             gradient::par_decode_add_threads(m, a, acc, t).map(|_| ())
         })
         .unwrap()

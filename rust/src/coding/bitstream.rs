@@ -142,6 +142,20 @@ impl<'a> BitReader<'a> {
         Self { buf, pos: 0 }
     }
 
+    /// Reader positioned at an arbitrary bit offset — how
+    /// [`FrameView`](crate::coding::gradient::FrameView) resumes payload
+    /// decoding after having parsed the header once. `pos` past the end is
+    /// allowed (every read then reports exhaustion).
+    pub fn at(buf: &'a [u8], pos: u64) -> Self {
+        Self { buf, pos }
+    }
+
+    /// Current absolute bit offset into the stream.
+    #[inline]
+    pub fn bit_pos(&self) -> u64 {
+        self.pos
+    }
+
     #[inline]
     pub fn bits_remaining(&self) -> u64 {
         (self.buf.len() as u64 * 8).saturating_sub(self.pos)

@@ -1,126 +1,91 @@
-//! The end-to-end QSGD compressor: stochastic quantization + Elias coding,
-//! as plugged into Algorithm 1's Encode/Decode steps.
+//! The two-phase QSGD/NUQSGD codec: quantize onto a [`LevelGrid`] into
+//! materialised buckets, then entropy-code as a separate pass — the
+//! *oracle* for the fused pipeline ([`crate::coding::QsgdCodec`]), which
+//! must emit bit-identical wire bytes for every grid and configuration.
+//! One grid-generic type covers both classic QSGD (uniform grid — the
+//! quantizer dispatches to the legacy arithmetic, bit-identical to the
+//! pre-grid code) and NUQSGD/custom grids.
 
 use rand_core::RngCore;
 
 use super::gradient::{self, Regime};
-use crate::quant::{self, Compressor, LevelGrid, Norm};
+use crate::config::CodecOptions;
+use crate::quant::{self, Codec, EncodeSession, LevelGrid, Norm, WireFormat};
+use crate::util::rng::Xoshiro256;
 
-/// QSGD Encode/Decode (quantize → entropy-code). Stateless (the paper:
-/// "quantization on the fly, without error accumulation").
+/// Two-phase quantize-then-encode codec (the property-test oracle).
+/// Mirrors [`crate::coding::QsgdCodec`]'s configuration surface exactly;
+/// only the encode execution differs (materialised [`crate::quant::QuantBucket`]s
+/// and a second encoding pass instead of the fused streaming path).
 #[derive(Debug, Clone)]
-pub struct QsgdCompressor {
-    /// Number of quantization levels `s`.
-    pub s: u32,
-    /// Bucket size `d` (paper §4; `usize::MAX` ⇒ whole-vector §3.1 scheme).
-    pub bucket: usize,
-    pub norm: Norm,
-    /// `None` ⇒ the paper's regime rule per gradient ([`gradient::preferred_regime`]).
-    pub regime: Option<Regime>,
-}
-
-impl QsgdCompressor {
-    /// Experiment-style constructor: `bits`-bit QSGD with the given bucket
-    /// (paper §5 uses e.g. 4-bit/512-bucket, 2-bit/64-bucket, max-norm).
-    pub fn with_bits(bits: u32, bucket: usize) -> Self {
-        Self { s: quant::levels_for_bits(bits), bucket, norm: Norm::Max, regime: None }
-    }
-
-    /// Theory-style constructor: the §3.1 scheme (2-norm, single bucket).
-    pub fn paper(s: u32) -> Self {
-        Self { s, bucket: usize::MAX, norm: Norm::L2, regime: None }
-    }
-
-    pub fn quantize(&self, grad: &[f32], rng: &mut dyn RngCore) -> quant::QuantizedGradient {
-        let bucket = self.bucket.min(grad.len().max(1));
-        quant::stochastic::quantize(grad, self.s, bucket, self.norm, rng)
-    }
-}
-
-impl Compressor for QsgdCompressor {
-    fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
-        let q = self.quantize(grad, rng);
-        match self.regime {
-            Some(r) => gradient::encode(&q, r),
-            None => gradient::encode_auto(&q),
-        }
-    }
-
-    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
-        gradient::decode_expecting(msg, n)
-    }
-
-    fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
-        gradient::decode_add_expecting(msg, alpha, acc)
-    }
-
-    fn decompress_add_threads(
-        &self,
-        msg: &[u8],
-        alpha: f32,
-        acc: &mut [f32],
-        threads: usize,
-    ) -> anyhow::Result<()> {
-        gradient::par_decode_add_expecting(msg, alpha, acc, threads)
-    }
-
-    fn name(&self) -> String {
-        let b = (self.s + 1).next_power_of_two().trailing_zeros() + 1;
-        format!("qsgd(s={},~{}bit,bucket={},{:?})", self.s, b, self.bucket, self.norm)
-    }
-}
-
-/// Two-phase NUQSGD / arbitrary-grid compressor: quantize onto a
-/// [`LevelGrid`] into materialised buckets, then encode as a separate pass.
-/// Mirrors [`QsgdCompressor`] exactly — it exists as the property-test
-/// *oracle* for the fused grid pipeline ([`crate::coding::FusedQsgd`]),
-/// which must emit bit-identical wire bytes for every grid.
-#[derive(Debug, Clone)]
-pub struct NuqsgdCompressor {
+pub struct TwoPhaseQsgd {
     pub grid: LevelGrid,
     /// Bucket size `d` (`usize::MAX` ⇒ whole-vector scheme).
     pub bucket: usize,
     pub norm: Norm,
     /// `None` ⇒ the paper's regime rule per gradient.
     pub regime: Option<Regime>,
+    /// Directory threshold + decode thread budget — must match the fused
+    /// codec under comparison, or the wire bytes legitimately differ.
+    pub opts: CodecOptions,
 }
 
-impl NuqsgdCompressor {
-    /// NUQSGD arm at the same bit budget as [`QsgdCompressor::with_bits`]:
-    /// exponential grid with `2^(b−1) − 1` nonzero levels, max-norm.
-    pub fn with_bits(bits: u32, bucket: usize) -> Self {
-        Self {
-            grid: LevelGrid::exponential(quant::levels_for_bits(bits)),
-            bucket,
-            norm: Norm::Max,
-            regime: None,
-        }
+impl TwoPhaseQsgd {
+    /// Uniform-grid (classic QSGD) constructor.
+    pub fn new(s: u32, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
+        Self::with_grid(LevelGrid::uniform(s), bucket, norm, regime)
     }
 
+    pub fn with_grid(grid: LevelGrid, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
+        assert!(bucket >= 1);
+        Self { grid, bucket, norm, regime, opts: CodecOptions::default() }
+    }
+
+    /// Experiment-style constructor: `bits`-bit QSGD with the given bucket
+    /// (paper §5 uses e.g. 4-bit/512-bucket, 2-bit/64-bucket, max-norm).
+    pub fn with_bits(bits: u32, bucket: usize) -> Self {
+        Self::new(quant::levels_for_bits(bits), bucket, Norm::Max, None)
+    }
+
+    /// NUQSGD arm at the same bit budget as [`Self::with_bits`]:
+    /// exponential grid with `2^(b−1) − 1` nonzero levels, max-norm.
+    pub fn nuqsgd_with_bits(bits: u32, bucket: usize) -> Self {
+        Self::with_grid(
+            LevelGrid::exponential(quant::levels_for_bits(bits)),
+            bucket,
+            Norm::Max,
+            None,
+        )
+    }
+
+    /// Theory-style constructor: the §3.1 scheme (2-norm, single bucket).
+    pub fn paper(s: u32) -> Self {
+        Self::new(s, usize::MAX, Norm::L2, None)
+    }
+
+    /// Builder-style [`CodecOptions`] override.
+    pub fn with_options(mut self, opts: CodecOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Phase one: materialise the quantized gradient.
     pub fn quantize(&self, grad: &[f32], rng: &mut dyn RngCore) -> quant::QuantizedGradient {
         let bucket = self.bucket.min(grad.len().max(1));
         quant::stochastic::quantize_grid(grad, &self.grid, bucket, self.norm, rng)
     }
 }
 
-impl Compressor for NuqsgdCompressor {
-    fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
-        let q = self.quantize(grad, rng);
-        match self.regime {
-            Some(r) => gradient::encode(&q, r),
-            None => gradient::encode_auto(&q),
-        }
+impl Codec for TwoPhaseQsgd {
+    fn session(&self, rng: Xoshiro256) -> Box<dyn EncodeSession> {
+        Box::new(TwoPhaseSession { codec: self.clone(), rng })
     }
 
-    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+    fn decode(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
         gradient::decode_expecting(msg, n)
     }
 
-    fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
-        gradient::decode_add_expecting(msg, alpha, acc)
-    }
-
-    fn decompress_add_threads(
+    fn decode_add_threads(
         &self,
         msg: &[u8],
         alpha: f32,
@@ -130,8 +95,47 @@ impl Compressor for NuqsgdCompressor {
         gradient::par_decode_add_expecting(msg, alpha, acc, threads)
     }
 
+    fn decode_threads(&self) -> usize {
+        self.opts.decode_threads()
+    }
+
+    fn encoded_size_hint(&self, n: usize) -> usize {
+        let bucket = self.bucket.min(n.max(1));
+        gradient::encoded_size_hint(
+            n,
+            &self.grid,
+            bucket,
+            self.norm,
+            self.regime,
+            self.opts.use_directory(n, bucket),
+        )
+    }
+
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::EliasFrame { grid: self.grid.clone() }
+    }
+
     fn name(&self) -> String {
-        format!("{}(bucket={},{:?})", self.grid.label(), self.bucket, self.norm)
+        format!("{}-two-phase(bucket={},{:?})", self.grid.label(), self.bucket, self.norm)
+    }
+}
+
+/// Two-phase encode session. Deliberately *not* zero-alloc (phase one
+/// materialises one `Vec<i32>` per bucket) — its job is to be an
+/// independently-derived reference implementation, not to be fast.
+struct TwoPhaseSession {
+    codec: TwoPhaseQsgd,
+    rng: Xoshiro256,
+}
+
+impl EncodeSession for TwoPhaseSession {
+    fn encode_into(&mut self, grad: &[f32], out: &mut Vec<u8>) {
+        let q = self.codec.quantize(grad, &mut self.rng);
+        let regime = self.codec.regime.unwrap_or_else(|| gradient::auto_regime(&q));
+        let dir = self.codec.opts.use_directory(q.n, q.bucket_size);
+        let bytes = gradient::encode_with_directory(&q, regime, dir);
+        out.clear();
+        out.extend_from_slice(&bytes);
     }
 }
 
@@ -139,16 +143,15 @@ impl Compressor for NuqsgdCompressor {
 mod tests {
     use super::*;
     use crate::util::rng::Xoshiro256;
-    
 
     #[test]
     fn end_to_end_error_bound() {
-        
         let mut r = Xoshiro256::from_u64(0);
-        let grad: Vec<f32> = (0..5000).map(|_| crate::util::rng::uniform_f32(&mut r) - 0.5).collect();
-        let mut c = QsgdCompressor::with_bits(4, 512);
-        let msg = c.compress(&grad, &mut r);
-        let back = c.decompress(&msg, grad.len()).unwrap();
+        let grad: Vec<f32> =
+            (0..5000).map(|_| crate::util::rng::uniform_f32(&mut r) - 0.5).collect();
+        let codec = TwoPhaseQsgd::with_bits(4, 512);
+        let msg = codec.session(Xoshiro256::from_u64(7)).compress(&grad);
+        let back = codec.decode(&msg, grad.len()).unwrap();
         // per-coordinate error ≤ bucket-max / s
         for (chunk_g, chunk_b) in grad.chunks(512).zip(back.chunks(512)) {
             let scale = chunk_g.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
@@ -158,13 +161,36 @@ mod tests {
         }
         // 4-bit QSGD must compress well below fp32
         assert!(msg.len() * 4 < grad.len() * 4);
+        // and the no-encode size hint bounds the measured size
+        assert!(msg.len() <= codec.encoded_size_hint(grad.len()), "hint too small");
     }
 
     #[test]
     fn wrong_length_rejected() {
-        let mut c = QsgdCompressor::paper(4);
-        let mut r = Xoshiro256::from_u64(1);
-        let msg = c.compress(&[1.0, 2.0, 3.0], &mut r);
-        assert!(c.decompress(&msg, 4).is_err());
+        let codec = TwoPhaseQsgd::paper(4);
+        let msg = codec.session(Xoshiro256::from_u64(1)).compress(&[1.0, 2.0, 3.0]);
+        assert!(codec.decode(&msg, 4).is_err());
+        assert!(codec.decode(&msg, 3).is_ok());
+    }
+
+    #[test]
+    fn uniform_grid_session_matches_legacy_arithmetic() {
+        // The merged grid-generic oracle must reproduce the pre-grid QSGD
+        // bytes: quantize_grid dispatches uniform grids to the original
+        // arithmetic, so frames stay v1 byte-identical (golden frames in
+        // tests/nuqsgd.rs pin this across releases).
+        let mut r = Xoshiro256::from_u64(2);
+        let grad = crate::util::rng::normal_vec(&mut r, 1500);
+        let via_grid = TwoPhaseQsgd::with_grid(LevelGrid::uniform(7), 512, Norm::Max, None)
+            .session(Xoshiro256::from_u64(3))
+            .compress(&grad);
+        let q = crate::quant::stochastic::quantize(
+            &grad,
+            7,
+            512,
+            Norm::Max,
+            &mut Xoshiro256::from_u64(3),
+        );
+        assert_eq!(via_grid, gradient::encode_auto(&q));
     }
 }

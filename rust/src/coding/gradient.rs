@@ -248,11 +248,14 @@ const GRID_TAG_UNIFORM: u64 = 3;
 /// configuration.
 pub const DIRECTORY_MIN_COORDS: usize = 1 << 16;
 
-/// The shared default rule for emitting the bucket-offset directory. Both
-/// the two-phase [`encode`] and the fused pipeline apply exactly this rule,
-/// which is what keeps their wire bytes bit-identical at every size.
+/// The shared default rule for emitting the bucket-offset directory —
+/// [`crate::config::CodecOptions::use_directory`] at the default threshold.
+/// Both the two-phase [`encode`] and the fused pipeline apply exactly this
+/// rule, which is what keeps their wire bytes bit-identical at every size;
+/// codecs built with non-default [`CodecOptions`](crate::config::CodecOptions)
+/// carry their own threshold instead.
 pub fn use_directory_default(n: usize, bucket_size: usize) -> bool {
-    n >= DIRECTORY_MIN_COORDS && n.div_ceil(bucket_size.max(1)) >= 2
+    crate::config::CodecOptions::default().use_directory(n, bucket_size)
 }
 
 /// Hard ceiling on the dimension a frame header may declare. Protects the
@@ -536,14 +539,15 @@ pub fn encode_with_directory(g: &QuantizedGradient, regime: Regime, directory: b
     w.into_bytes()
 }
 
-/// Encode with the paper's regime rule applied per gradient.
+/// The regime [`encode_auto`] picks for a quantized gradient.
 ///
 /// For the §4 max-norm variant the sparse analysis does not apply ("max
 /// normalization no longer provides any sparsity guarantees"), so the
 /// regime is chosen from the *measured* density: dense coding wins both on
-/// size and decode speed once ≳25% of levels are nonzero.
-pub fn encode_auto(g: &QuantizedGradient) -> Vec<u8> {
-    let regime = match g.norm {
+/// size and decode speed once ≳25% of levels are nonzero. Shared with the
+/// two-phase codec so oracle and fused pipeline cannot drift.
+pub fn auto_regime(g: &QuantizedGradient) -> Regime {
+    match g.norm {
         Norm::L2 => preferred_regime(g.s, g.bucket_size),
         Norm::Max => {
             if g.nnz() * 4 > g.n {
@@ -552,8 +556,295 @@ pub fn encode_auto(g: &QuantizedGradient) -> Vec<u8> {
                 preferred_regime(g.s, g.bucket_size)
             }
         }
-    };
-    encode(g, regime)
+    }
+}
+
+/// Encode with the paper's regime rule ([`auto_regime`]) applied per
+/// gradient.
+pub fn encode_auto(g: &QuantizedGradient) -> Vec<u8> {
+    encode(g, auto_regime(g))
+}
+
+// --------------------------------------------------------------------------
+// FrameView — the borrowed decode type
+// --------------------------------------------------------------------------
+
+/// A parsed, borrowed view of one encoded gradient frame: the v1/v2/v3
+/// header (and, for v3, the bucket-offset directory) is parsed **once**,
+/// after which every decode path — materialise, dequantize, fused
+/// decode-add, intra-message-parallel decode-add — walks the payload
+/// without copying it.
+///
+/// This is the single decode entry point of the stack: the module-level
+/// [`decode`]/[`decode_add`]/[`par_decode_add_threads`] functions are thin
+/// wrappers, and the QSGD codecs, `collectives::par_decode_mean`, the async
+/// parameter server and the plan codec's segment decode all land here.
+///
+/// Hostile-input bounds are unchanged from the wrapper functions: the
+/// declared dimension is capped ([`parse_with_limit`](Self::parse_with_limit)),
+/// and a v3 directory is bounded by the stream before any
+/// size-proportional allocation.
+pub struct FrameView<'a> {
+    bytes: &'a [u8],
+    regime: Regime,
+    norm: Norm,
+    s: u32,
+    grid: LevelGrid,
+    n: usize,
+    bucket_size: usize,
+    /// Absolute bit offset where the serial payload begins (v1/v2 frames;
+    /// for v3 frames the directory has already been consumed and bucket
+    /// payloads are addressed by byte offset instead).
+    payload_bit: u64,
+    /// v3 frames: absolute `(byte offset, byte length)` of each bucket
+    /// payload, every range verified to lie inside `bytes`.
+    directory: Option<Vec<(usize, usize)>>,
+}
+
+impl<'a> FrameView<'a> {
+    /// Parse a frame header (and directory, if v3). The declared dimension
+    /// is capped at [`MAX_FRAME_DIM`]; when the expected gradient length is
+    /// known, prefer [`Self::parse_with_limit`], which bounds hostile
+    /// headers by it.
+    pub fn parse(bytes: &'a [u8]) -> Result<Self> {
+        Self::parse_with_limit(bytes, MAX_FRAME_DIM)
+    }
+
+    /// [`Self::parse`] with a caller-supplied ceiling on the declared
+    /// dimension — applied before any size-proportional allocation.
+    pub fn parse_with_limit(bytes: &'a [u8], max_n: usize) -> Result<Self> {
+        let mut r = BitReader::new(bytes);
+        let h = read_header(&mut r)?;
+        ensure!(h.n <= max_n, "declared dimension {} exceeds limit {max_n}", h.n);
+        let directory = if h.dir {
+            Some(read_directory(&mut r, bytes, h.n, h.bucket_size)?)
+        } else {
+            None
+        };
+        Ok(FrameView {
+            bytes,
+            regime: h.regime,
+            norm: h.norm,
+            s: h.s,
+            grid: h.grid,
+            n: h.n,
+            bucket_size: h.bucket_size,
+            payload_bit: r.bit_pos(),
+            directory,
+        })
+    }
+
+    /// Decoded gradient length declared by the header.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of quantization levels `s`.
+    pub fn s(&self) -> u32 {
+        self.s
+    }
+
+    /// The level grid the frame's levels index into (parsed from the wire
+    /// for v2/v3 frames; uniform for v1).
+    pub fn grid(&self) -> &LevelGrid {
+        &self.grid
+    }
+
+    pub fn norm(&self) -> Norm {
+        self.norm
+    }
+
+    pub fn regime(&self) -> Regime {
+        self.regime
+    }
+
+    /// Bucket size `d` (the final bucket may be shorter).
+    pub fn bucket_size(&self) -> usize {
+        self.bucket_size
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            self.n.div_ceil(self.bucket_size)
+        }
+    }
+
+    /// Dimension of bucket `i` (the last bucket may be shorter than
+    /// [`Self::bucket_size`]).
+    pub fn bucket_dim(&self, i: usize) -> usize {
+        debug_assert!(i < self.bucket_count());
+        (self.n - i * self.bucket_size).min(self.bucket_size)
+    }
+
+    /// Whether the frame carries the v3 bucket-offset directory (and can
+    /// therefore decode its buckets in parallel).
+    pub fn has_directory(&self) -> bool {
+        self.directory.is_some()
+    }
+
+    /// The verified `(byte offset, byte length)` ranges of a v3 frame's
+    /// bucket payloads, in bucket order.
+    pub fn directory(&self) -> Option<&[(usize, usize)]> {
+        self.directory.as_deref()
+    }
+
+    /// Zero-copy iteration over a v3 frame's bucket payloads as borrowed
+    /// byte slices (bucket `i`'s slice decodes independently of every
+    /// other). `None` for v1/v2 frames, whose bucket boundaries are only
+    /// discovered by decoding.
+    pub fn bucket_payloads(&self) -> Option<impl Iterator<Item = &'a [u8]> + '_> {
+        let bytes = self.bytes;
+        self.directory
+            .as_ref()
+            .map(move |d| d.iter().map(move |&(off, len)| &bytes[off..off + len]))
+    }
+
+    /// Materialise the quantized gradient (levels and scales).
+    pub fn decode(&self) -> Result<QuantizedGradient> {
+        let lut = decode_lut();
+        // capacity clamp: a hostile header must not size this by bucket count
+        let mut buckets = Vec::with_capacity(self.bucket_count().min(1024));
+        let mut remaining = self.n;
+        match &self.directory {
+            Some(dir) => {
+                for &(off, len) in dir {
+                    let d = remaining.min(self.bucket_size);
+                    let mut br = BitReader::new(&self.bytes[off..off + len]);
+                    buckets.push(self.decode_bucket(&mut br, d, lut)?);
+                    remaining -= d;
+                }
+            }
+            None => {
+                let mut r = BitReader::at(self.bytes, self.payload_bit);
+                while remaining > 0 {
+                    let d = remaining.min(self.bucket_size);
+                    buckets.push(self.decode_bucket(&mut r, d, lut)?);
+                    remaining -= d;
+                }
+            }
+        }
+        Ok(QuantizedGradient {
+            s: self.s,
+            grid: self.grid.clone(),
+            bucket_size: self.bucket_size,
+            norm: self.norm,
+            n: self.n,
+            buckets,
+        })
+    }
+
+    fn decode_bucket(
+        &self,
+        r: &mut BitReader,
+        d: usize,
+        lut: &elias::DecodeLut,
+    ) -> Result<QuantBucket> {
+        match self.regime {
+            Regime::Sparse => decode_bucket_sparse_with(r, d, self.s, lut),
+            Regime::Dense => decode_bucket_dense_with(r, d, self.s, lut),
+        }
+    }
+
+    /// Fused decode-and-accumulate: `acc[..n] += alpha · Q(v)` straight from
+    /// the borrowed payload, without materialising levels (the paper's §6
+    /// sparsity exploitation: O(nnz) per sparse bucket).
+    pub fn decode_add(&self, alpha: f32, acc: &mut [f32]) -> Result<()> {
+        self.decode_add_threads(alpha, acc, 1)
+    }
+
+    /// [`Self::decode_add`] with a thread budget: a directory-bearing frame
+    /// maps contiguous bucket ranges to disjoint accumulator chunks and
+    /// decodes them concurrently on the scoped pool
+    /// ([`crate::util::par`]) — bit-identical to the serial walk at every
+    /// budget, since bucket payloads are independent and the
+    /// per-coordinate float ops are unchanged. Frames without a directory
+    /// always walk serially.
+    pub fn decode_add_threads(&self, alpha: f32, acc: &mut [f32], threads: usize) -> Result<()> {
+        ensure!(self.n <= acc.len(), "accumulator too small: {} < {}", acc.len(), self.n);
+        let lut = decode_lut();
+        let pts = self.grid.nonzero_points();
+        let dir = match &self.directory {
+            None => {
+                // v1/v2: no bucket boundaries in-band — serial stream walk.
+                let mut r = BitReader::at(self.bytes, self.payload_bit);
+                let mut off = 0usize;
+                let mut remaining = self.n;
+                while remaining > 0 {
+                    let d = remaining.min(self.bucket_size);
+                    decode_bucket_add(
+                        &mut r,
+                        self.regime,
+                        self.s,
+                        pts,
+                        alpha,
+                        &mut acc[off..off + d],
+                        lut,
+                    )?;
+                    off += d;
+                    remaining -= d;
+                }
+                return Ok(());
+            }
+            Some(dir) => dir,
+        };
+        let nb = dir.len();
+        let jobs_n = threads.max(1).min(nb.max(1));
+        if jobs_n <= 1 {
+            let mut off = 0usize;
+            let mut remaining = self.n;
+            for &(o, l) in dir {
+                let d = remaining.min(self.bucket_size);
+                let mut br = BitReader::new(&self.bytes[o..o + l]);
+                decode_bucket_add(
+                    &mut br,
+                    self.regime,
+                    self.s,
+                    pts,
+                    alpha,
+                    &mut acc[off..off + d],
+                    lut,
+                )?;
+                off += d;
+                remaining -= d;
+            }
+            return Ok(());
+        }
+        // Contiguous bucket ranges paired with disjoint accumulator chunks.
+        // nb ≥ 2 implies bucket_size < n ≤ MAX_FRAME_DIM, so the chunk width
+        // below cannot overflow.
+        let bpj = nb.div_ceil(jobs_n);
+        let chunk_coords = bpj * self.bucket_size;
+        struct Job<'b> {
+            acc: &'b mut [f32],
+            first_bucket: usize,
+        }
+        let mut jobs: Vec<Job> = acc[..self.n]
+            .chunks_mut(chunk_coords)
+            .enumerate()
+            .map(|(i, c)| Job { acc: c, first_bucket: i * bpj })
+            .collect();
+        let bytes = self.bytes;
+        let results = par::par_map_mut(&mut jobs, |_, job| -> Result<()> {
+            let mut off = 0usize;
+            let mut bi = job.first_bucket;
+            while off < job.acc.len() {
+                let d = (job.acc.len() - off).min(self.bucket_size);
+                let (o, l) = dir[bi];
+                let mut br = BitReader::new(&bytes[o..o + l]);
+                let chunk = &mut job.acc[off..off + d];
+                decode_bucket_add(&mut br, self.regime, self.s, pts, alpha, chunk, lut)?;
+                off += d;
+                bi += 1;
+            }
+            Ok(())
+        });
+        for res in results {
+            res?;
+        }
+        Ok(())
+    }
 }
 
 /// Decode a frame produced by [`encode`]/[`encode_auto`]. The declared
@@ -567,45 +858,7 @@ pub fn decode(bytes: &[u8]) -> Result<QuantizedGradient> {
 /// the defense `decode_expecting` applies before any size-proportional
 /// allocation happens.
 pub fn decode_with_limit(bytes: &[u8], max_n: usize) -> Result<QuantizedGradient> {
-    let mut r = BitReader::new(bytes);
-    let h = read_header(&mut r)?;
-    ensure!(h.n <= max_n, "declared dimension {} exceeds limit {max_n}", h.n);
-    let lut = decode_lut();
-    // capacity clamp: a hostile header must not size this by bucket count
-    let mut buckets = Vec::with_capacity(h.n.div_ceil(h.bucket_size).min(1024));
-    if h.dir {
-        let dir = read_directory(&mut r, bytes, h.n, h.bucket_size)?;
-        let mut remaining = h.n;
-        for &(off, len) in &dir {
-            let d = remaining.min(h.bucket_size);
-            let mut br = BitReader::new(&bytes[off..off + len]);
-            let b = match h.regime {
-                Regime::Sparse => decode_bucket_sparse_with(&mut br, d, h.s, lut)?,
-                Regime::Dense => decode_bucket_dense_with(&mut br, d, h.s, lut)?,
-            };
-            buckets.push(b);
-            remaining -= d;
-        }
-    } else {
-        let mut remaining = h.n;
-        while remaining > 0 {
-            let d = remaining.min(h.bucket_size);
-            let b = match h.regime {
-                Regime::Sparse => decode_bucket_sparse_with(&mut r, d, h.s, lut)?,
-                Regime::Dense => decode_bucket_dense_with(&mut r, d, h.s, lut)?,
-            };
-            buckets.push(b);
-            remaining -= d;
-        }
-    }
-    Ok(QuantizedGradient {
-        s: h.s,
-        grid: h.grid,
-        bucket_size: h.bucket_size,
-        norm: h.norm,
-        n: h.n,
-        buckets,
-    })
+    FrameView::parse_with_limit(bytes, max_n)?.decode()
 }
 
 /// Process-wide decoder prefix table (immutable after first use).
@@ -675,7 +928,8 @@ fn decode_bucket_add(
 }
 
 /// Fused decode-and-accumulate: `acc += alpha · Q_s(v)` straight from the
-/// wire bytes, without materialising the levels.
+/// wire bytes, without materialising the levels — a thin wrapper over
+/// [`FrameView::decode_add`].
 ///
 /// This is the sparsity exploitation the paper's §6 names as future work
 /// ("current implementations of MPI do not provide support for sparse
@@ -687,12 +941,12 @@ pub fn decode_add(bytes: &[u8], alpha: f32, acc: &mut [f32]) -> Result<usize> {
     par_decode_add_threads(bytes, alpha, acc, 1)
 }
 
-/// [`decode_add`] with intra-message parallelism: for v3 frames the
-/// bucket-offset directory yields per-bucket byte ranges, which map to
-/// disjoint accumulator chunks and decode concurrently on the scoped pool
-/// ([`crate::util::par`]) — bit-identical to the serial walk, since bucket
-/// payloads are independent and every per-coordinate op is unchanged.
-/// Frames without a directory fall back to the serial walk.
+/// [`decode_add`] with intra-message parallelism
+/// ([`FrameView::decode_add_threads`] at the process-wide budget): for v3
+/// frames the bucket-offset directory yields per-bucket byte ranges, which
+/// map to disjoint accumulator chunks and decode concurrently on the scoped
+/// pool ([`crate::util::par`]) — bit-identical to the serial walk. Frames
+/// without a directory fall back to the serial walk.
 pub fn par_decode_add(bytes: &[u8], alpha: f32, acc: &mut [f32]) -> Result<usize> {
     par_decode_add_threads(bytes, alpha, acc, par::max_threads())
 }
@@ -706,75 +960,14 @@ pub fn par_decode_add_threads(
     acc: &mut [f32],
     threads: usize,
 ) -> Result<usize> {
-    let mut r = BitReader::new(bytes);
-    let h = read_header(&mut r)?;
-    ensure!(h.n <= acc.len(), "accumulator too small: {} < {}", acc.len(), h.n);
-    let lut = decode_lut();
-    let pts = h.grid.nonzero_points();
-    if !h.dir {
-        // v1/v2: no bucket boundaries in-band — walk the stream serially.
-        let mut off = 0usize;
-        let mut remaining = h.n;
-        while remaining > 0 {
-            let d = remaining.min(h.bucket_size);
-            decode_bucket_add(&mut r, h.regime, h.s, pts, alpha, &mut acc[off..off + d], lut)?;
-            off += d;
-            remaining -= d;
-        }
-        return Ok(h.n);
-    }
-    let dir = read_directory(&mut r, bytes, h.n, h.bucket_size)?;
-    let nb = dir.len();
-    let jobs_n = threads.max(1).min(nb.max(1));
-    if jobs_n <= 1 {
-        let mut off = 0usize;
-        let mut remaining = h.n;
-        for &(o, l) in &dir {
-            let d = remaining.min(h.bucket_size);
-            let mut br = BitReader::new(&bytes[o..o + l]);
-            decode_bucket_add(&mut br, h.regime, h.s, pts, alpha, &mut acc[off..off + d], lut)?;
-            off += d;
-            remaining -= d;
-        }
-        return Ok(h.n);
-    }
-    // Contiguous bucket ranges paired with disjoint accumulator chunks.
-    // nb ≥ 2 implies bucket_size < n ≤ MAX_FRAME_DIM, so the chunk width
-    // below cannot overflow.
-    let bpj = nb.div_ceil(jobs_n);
-    let chunk_coords = bpj * h.bucket_size;
-    struct Job<'a> {
-        acc: &'a mut [f32],
-        first_bucket: usize,
-    }
-    let mut jobs: Vec<Job> = acc[..h.n]
-        .chunks_mut(chunk_coords)
-        .enumerate()
-        .map(|(i, c)| Job { acc: c, first_bucket: i * bpj })
-        .collect();
-    let results = par::par_map_mut(&mut jobs, |_, job| -> Result<()> {
-        let mut off = 0usize;
-        let mut bi = job.first_bucket;
-        while off < job.acc.len() {
-            let d = (job.acc.len() - off).min(h.bucket_size);
-            let (o, l) = dir[bi];
-            let mut br = BitReader::new(&bytes[o..o + l]);
-            let chunk = &mut job.acc[off..off + d];
-            decode_bucket_add(&mut br, h.regime, h.s, pts, alpha, chunk, lut)?;
-            off += d;
-            bi += 1;
-        }
-        Ok(())
-    });
-    for res in results {
-        res?;
-    }
-    Ok(h.n)
+    let view = FrameView::parse(bytes)?;
+    view.decode_add_threads(alpha, acc, threads)?;
+    Ok(view.n())
 }
 
 /// Decode a frame and dequantize, checking the decoded length against the
-/// caller's expectation — the shared decompress body of both the fused and
-/// two-phase compressors.
+/// caller's expectation — the shared `decode` body of both the fused and
+/// two-phase codecs.
 pub fn decode_expecting(msg: &[u8], n: usize) -> Result<Vec<f32>> {
     // bound hostile headers by the *expected* length before any
     // size-proportional allocation
@@ -783,8 +976,8 @@ pub fn decode_expecting(msg: &[u8], n: usize) -> Result<Vec<f32>> {
     Ok(q.dequantize())
 }
 
-/// Fused decode-and-accumulate with the length check (shared decompress_add
-/// body of both compressors).
+/// Fused decode-and-accumulate with the length check (shared `decode_add`
+/// body of both QSGD codecs).
 pub fn decode_add_expecting(msg: &[u8], alpha: f32, acc: &mut [f32]) -> Result<()> {
     let n = decode_add(msg, alpha, acc)?;
     ensure!(n == acc.len(), "decoded length {n} != expected {}", acc.len());
@@ -792,7 +985,7 @@ pub fn decode_add_expecting(msg: &[u8], alpha: f32, acc: &mut [f32]) -> Result<(
 }
 
 /// Intra-message-parallel decode-and-accumulate with the length check
-/// (shared `decompress_add_threads` body of the QSGD compressors).
+/// (shared `decode_add_threads` body of the QSGD codecs).
 pub fn par_decode_add_expecting(
     msg: &[u8],
     alpha: f32,
@@ -829,6 +1022,77 @@ pub fn dense_bits_bound(d: usize, s: u32) -> f64 {
     let d = d as f64;
     let s = s as f64;
     32.0 + (0.5 * ((1.0 + (s * s + d.min(s * d.sqrt())) / d).log2() + 1.0) + 2.0) * d
+}
+
+/// Estimate of the encoded size in bytes for an `n`-coordinate gradient
+/// quantized onto `grid` over `bucket_size`-sized buckets (with an
+/// optionally forced `regime`, as the codecs carry it), without encoding
+/// anything. Backs
+/// [`Codec::encoded_size_hint`](crate::quant::Codec::encoded_size_hint) for
+/// byte accounting and buffer pre-sizing.
+///
+/// * `Norm::L2` with the auto regime: the paper's expectation bounds per
+///   bucket ([`sparse_bits_bound`] / [`dense_bits_bound`] under the regime
+///   rule) — an expectation, not a per-draw bound.
+/// * `Norm::Max` (no sparsity guarantee) or any *forced* regime: a
+///   **worst-case** per-coordinate budget covering both codecs — dense
+///   costs at most `|Elias'(s)| + 1` bits/coordinate; sparse at most
+///   `|Elias(s)| + 2` (a fully dense bucket has all-ones gaps) plus the
+///   `Elias'(nnz)` field. This makes the hint a safe `Vec` pre-size for
+///   every max-norm or pinned-regime session.
+///
+/// The header term is computed from the actual Elias field widths (magic,
+/// version, flags, `s`, `n`, bucket size, grid tag) and includes the
+/// in-band grid points a custom grid ships (32 bits per level — see
+/// [`write_frame_header_grid`]); when `directory`, the v3 overhead (one
+/// `Elias'(byte len)` entry and byte alignment per bucket) is added.
+pub fn encoded_size_hint(
+    n: usize,
+    grid: &LevelGrid,
+    bucket_size: usize,
+    norm: Norm,
+    regime: Option<Regime>,
+    directory: bool,
+) -> usize {
+    let s = grid.s();
+    let bucket = bucket_size.min(n.max(1)).max(1);
+    // magic + version + regime/norm flags + Elias(s) + Elias'(n) +
+    // Elias(bucket) + the largest grid tag any frame version carries
+    // (uniform v1 frames are tagless — budgeting the v3 tag keeps this an
+    // upper bound for them too).
+    let tag_bits = match grid {
+        LevelGrid::Uniform { .. } => elias::len(GRID_TAG_UNIFORM),
+        LevelGrid::Exponential { .. } => elias::len(GRID_TAG_EXPONENTIAL),
+        LevelGrid::Custom { points } => elias::len(GRID_TAG_CUSTOM) + points.len() as u64 * 32,
+    };
+    let header_bits = (8 + 4 + 1 + 1) as u64
+        + elias::len(s as u64)
+        + elias::len(n as u64 + 1)
+        + elias::len(bucket as u64)
+        + tag_bits;
+    if n == 0 {
+        return (header_bits as f64 / 8.0).ceil() as usize;
+    }
+    let nb = n.div_ceil(bucket);
+    let per_bucket = if norm == Norm::L2 && regime.is_none() {
+        match preferred_regime(s, bucket) {
+            Regime::Sparse => sparse_bits_bound(bucket, s),
+            Regime::Dense => dense_bits_bound(bucket, s),
+        }
+    } else {
+        // worst case over whichever codec can run: per coordinate, dense is
+        // Elias'(level) + sign; sparse is gap + sign + Elias(level), with
+        // all-ones gaps (1 bit) at full density dominating by concavity of
+        // the Elias length in the gap.
+        let dense_coord = (elias::len(s as u64 + 1) + 1) as f64;
+        let sparse_coord = (elias::len(s as u64) + 2) as f64;
+        32.0 + elias::len(bucket as u64 + 1) as f64 + bucket as f64 * dense_coord.max(sparse_coord)
+    };
+    let mut bits = header_bits as f64 + per_bucket * nb as f64;
+    if directory {
+        bits += 32.0 * nb as f64;
+    }
+    (bits / 8.0).ceil() as usize
 }
 
 #[cfg(test)]
@@ -1009,5 +1273,75 @@ mod tests {
         let q2 = decode(&bytes).unwrap();
         assert_eq!(q2.n, 0);
         assert!(q2.dequantize().is_empty());
+        let view = FrameView::parse(&bytes).unwrap();
+        assert_eq!(view.n(), 0);
+        assert_eq!(view.bucket_count(), 0);
+    }
+
+    #[test]
+    fn frame_view_exposes_header_and_buckets_without_copying() {
+        let v = randn(2000, 30);
+        let mut rng = Xoshiro256::from_u64(31);
+        let grid = LevelGrid::exponential(7);
+        let q = stochastic::quantize_grid(&v, &grid, 512, Norm::Max, &mut rng);
+        for (directory, version) in [(false, FRAME_VERSION_GRID), (true, FRAME_VERSION_DIR)] {
+            let bytes = encode_with_directory(&q, Regime::Dense, directory);
+            assert_eq!(bytes[1] >> 4, version as u8);
+            let view = FrameView::parse(&bytes).unwrap();
+            assert_eq!(view.n(), 2000);
+            assert_eq!(view.s(), 7);
+            assert_eq!(view.bucket_size(), 512);
+            assert_eq!(view.bucket_count(), 4);
+            assert_eq!(view.bucket_dim(3), 2000 - 3 * 512);
+            assert_eq!(view.norm(), Norm::Max);
+            assert_eq!(view.regime(), Regime::Dense);
+            assert_eq!(view.grid(), &grid);
+            assert_eq!(view.has_directory(), directory);
+            // one parse, many decodes — all equal to the one-shot decode
+            assert_eq!(view.decode().unwrap(), q);
+            assert_eq!(view.decode().unwrap(), decode(&bytes).unwrap());
+            let mut a = vec![0.5f32; 2000];
+            let mut b = vec![0.5f32; 2000];
+            view.decode_add(0.25, &mut a).unwrap();
+            decode_add(&bytes, 0.25, &mut b).unwrap();
+            assert_eq!(a, b);
+            if directory {
+                // bucket payload slices borrow the frame and tile it exactly
+                let dir = view.directory().unwrap();
+                assert_eq!(dir.len(), 4);
+                let payloads: Vec<&[u8]> = view.bucket_payloads().unwrap().collect();
+                assert_eq!(payloads.len(), 4);
+                let total: usize = dir.iter().map(|&(_, l)| l).sum();
+                assert_eq!(dir[0].0 + total, bytes.len());
+                // each payload decodes independently to the matching bucket
+                for (i, p) in payloads.iter().enumerate() {
+                    let mut br = crate::coding::bitstream::BitReader::new(p);
+                    let b =
+                        decode_bucket_dense_with(&mut br, view.bucket_dim(i), 7, decode_lut())
+                            .unwrap();
+                    assert_eq!(b, q.buckets[i]);
+                }
+            } else {
+                assert!(view.directory().is_none());
+                assert!(view.bucket_payloads().is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn frame_view_limit_bounds_hostile_headers() {
+        let v = randn(300, 32);
+        let q = stochastic::quantize(&v, 7, 64, Norm::Max, &mut Xoshiro256::from_u64(33));
+        let bytes = encode_auto(&q);
+        assert!(FrameView::parse_with_limit(&bytes, 299).is_err());
+        assert!(FrameView::parse_with_limit(&bytes, 300).is_ok());
+        // accumulator shorter than n is rejected by decode_add
+        let view = FrameView::parse(&bytes).unwrap();
+        let mut small = vec![0.0f32; 299];
+        assert!(view.decode_add(1.0, &mut small).is_err());
+        // a longer accumulator only receives the first n coordinates
+        let mut long = vec![1.0f32; 301];
+        view.decode_add(1.0, &mut long).unwrap();
+        assert_eq!(long[300], 1.0);
     }
 }

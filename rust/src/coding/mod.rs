@@ -9,5 +9,6 @@ pub mod gradient;
 pub mod pipeline;
 
 mod compressor;
-pub use compressor::{NuqsgdCompressor, QsgdCompressor};
-pub use pipeline::{FusedEncoder, FusedQsgd};
+pub use compressor::TwoPhaseQsgd;
+pub use gradient::FrameView;
+pub use pipeline::{FusedEncoder, QsgdCodec, QsgdSession};

@@ -18,7 +18,7 @@
 //! the same order (one `fill_bytes` per bucket), assigns levels with the
 //! same `quantize_bucket_into` arithmetic, and emits codewords through the
 //! same `encode_levels_*` routines and LUT sizing. `tests/fused_pipeline.rs`
-//! property-tests this; the two-phase [`crate::coding::QsgdCompressor`] is
+//! property-tests this; the two-phase [`crate::coding::TwoPhaseQsgd`] is
 //! retained as the oracle.
 //!
 //! Regime selection mirrors `gradient::encode_auto`: with an explicit regime
@@ -33,7 +33,9 @@ use rand_core::RngCore;
 use super::bitstream::BitWriter;
 use super::elias::EliasLut;
 use super::gradient::{self, Regime};
-use crate::quant::{self, Compressor, LevelGrid, Norm};
+use crate::config::CodecOptions;
+use crate::quant::{self, Codec, EncodeSession, LevelGrid, Norm, WireFormat};
+use crate::util::rng::Xoshiro256;
 
 /// Reusable per-worker fused quantize+encode state, generic over the
 /// quantization [`LevelGrid`] (uniform QSGD, NUQSGD exponential, custom).
@@ -50,11 +52,11 @@ pub struct FusedEncoder {
     pub norm: Norm,
     /// `None` ⇒ the paper's regime rule per gradient.
     pub regime: Option<Regime>,
-    /// Bucket-offset directory: `None` ⇒ the shared
-    /// [`gradient::use_directory_default`] size rule (what the two-phase
-    /// oracle applies, keeping the wire bytes bit-identical); `Some(_)`
-    /// forces it on or off.
-    pub directory: Option<bool>,
+    /// Wire-format knobs ([`CodecOptions`]): the bucket-offset-directory
+    /// size rule (default: the shared [`gradient::use_directory_default`]
+    /// threshold the two-phase oracle also applies, keeping the wire bytes
+    /// bit-identical) and the decode thread budget.
+    pub opts: CodecOptions,
     writer: BitWriter,
     /// Batched RNG words, 4 bytes per coordinate of the current bucket.
     words: Vec<u8>,
@@ -89,7 +91,7 @@ impl FusedEncoder {
             bucket,
             norm,
             regime,
-            directory: None,
+            opts: CodecOptions::default(),
             writer: BitWriter::new(),
             words: Vec::new(),
             levels: Vec::new(),
@@ -119,9 +121,7 @@ impl FusedEncoder {
             self.words.resize(bucket * 4, 0);
         }
         self.writer.reset();
-        let dir = self
-            .directory
-            .unwrap_or_else(|| gradient::use_directory_default(n, bucket));
+        let dir = self.opts.use_directory(n, bucket);
         let static_regime = match (self.regime, self.norm) {
             (Some(r), _) => Some(r),
             (None, Norm::L2) => Some(gradient::preferred_regime(self.s, bucket)),
@@ -250,22 +250,35 @@ impl FusedEncoder {
     }
 }
 
-/// Drop-in QSGD compressor over the fused pipeline — what
-/// [`crate::coordinator::CompressorSpec::build`] returns for QSGD arms. The
-/// two-phase [`crate::coding::QsgdCompressor`] stays available as the
-/// property-test oracle (`CompressorSpec::build_two_phase`).
-pub struct FusedQsgd {
-    enc: FusedEncoder,
+/// The QSGD codec over the fused pipeline — what
+/// [`crate::coordinator::CompressorSpec::codec`] returns for QSGD/NUQSGD
+/// arms. Shared and immutable: decoding goes through
+/// [`gradient::FrameView`], and [`Codec::session`] hands each worker a
+/// [`QsgdSession`] owning a [`FusedEncoder`] plus its RNG stream. The
+/// two-phase [`crate::coding::TwoPhaseQsgd`] stays available as the
+/// bit-identity oracle (`CompressorSpec::codec_two_phase`).
+#[derive(Debug, Clone)]
+pub struct QsgdCodec {
+    pub grid: LevelGrid,
+    /// Bucket size `d` (`usize::MAX` ⇒ whole-vector §3.1 scheme).
+    pub bucket: usize,
+    pub norm: Norm,
+    /// `None` ⇒ the paper's regime rule per gradient.
+    pub regime: Option<Regime>,
+    /// Directory threshold + decode thread budget, shared with every
+    /// session this codec creates.
+    pub opts: CodecOptions,
 }
 
-impl FusedQsgd {
+impl QsgdCodec {
     pub fn new(s: u32, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
         Self::with_grid(LevelGrid::uniform(s), bucket, norm, regime)
     }
 
     /// Grid-generic constructor (NUQSGD exponential grids, custom grids).
     pub fn with_grid(grid: LevelGrid, bucket: usize, norm: Norm, regime: Option<Regime>) -> Self {
-        Self { enc: FusedEncoder::with_grid(grid, bucket, norm, regime) }
+        assert!(bucket >= 1);
+        Self { grid, bucket, norm, regime, opts: CodecOptions::default() }
     }
 
     /// Experiment-style constructor (paper §5: e.g. 4-bit/512, max-norm).
@@ -289,27 +302,27 @@ impl FusedQsgd {
         Self::new(s, usize::MAX, Norm::L2, None)
     }
 
-    pub fn encoder(&mut self) -> &mut FusedEncoder {
-        &mut self.enc
+    /// Builder-style [`CodecOptions`] override (directory threshold, decode
+    /// thread budget).
+    pub fn with_options(mut self, opts: CodecOptions) -> Self {
+        self.opts = opts;
+        self
     }
 }
 
-impl Compressor for FusedQsgd {
-    fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
-        // One exact-size allocation for the returned message; all pipeline
-        // scratch is reused across calls.
-        self.enc.encode(grad, rng)
+impl Codec for QsgdCodec {
+    fn session(&self, rng: Xoshiro256) -> Box<dyn EncodeSession> {
+        let mut enc =
+            FusedEncoder::with_grid(self.grid.clone(), self.bucket, self.norm, self.regime);
+        enc.opts = self.opts.clone();
+        Box::new(QsgdSession { enc, rng })
     }
 
-    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+    fn decode(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
         gradient::decode_expecting(msg, n)
     }
 
-    fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
-        gradient::decode_add_expecting(msg, alpha, acc)
-    }
-
-    fn decompress_add_threads(
+    fn decode_add_threads(
         &self,
         msg: &[u8],
         alpha: f32,
@@ -319,20 +332,58 @@ impl Compressor for FusedQsgd {
         gradient::par_decode_add_expecting(msg, alpha, acc, threads)
     }
 
-    fn name(&self) -> String {
-        format!(
-            "{}-fused(bucket={},{:?})",
-            self.enc.grid.label(),
-            self.enc.bucket,
-            self.enc.norm
+    fn decode_threads(&self) -> usize {
+        self.opts.decode_threads()
+    }
+
+    fn encoded_size_hint(&self, n: usize) -> usize {
+        let bucket = self.bucket.min(n.max(1));
+        gradient::encoded_size_hint(
+            n,
+            &self.grid,
+            bucket,
+            self.norm,
+            self.regime,
+            self.opts.use_directory(n, bucket),
         )
+    }
+
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::EliasFrame { grid: self.grid.clone() }
+    }
+
+    fn name(&self) -> String {
+        format!("{}-fused(bucket={},{:?})", self.grid.label(), self.bucket, self.norm)
+    }
+}
+
+/// Per-worker fused encode session: owns the [`FusedEncoder`] scratch and
+/// the worker's RNG stream. Zero heap allocations in steady state —
+/// including the v3 directory path — verified by the counting allocator in
+/// the `coding_hotpath` bench and `tests/codec_conformance.rs`.
+pub struct QsgdSession {
+    enc: FusedEncoder,
+    rng: Xoshiro256,
+}
+
+impl QsgdSession {
+    /// Direct access to the underlying encoder (pre-sizing via
+    /// [`FusedEncoder::reserve`], wire-format overrides in tests).
+    pub fn encoder(&mut self) -> &mut FusedEncoder {
+        &mut self.enc
+    }
+}
+
+impl EncodeSession for QsgdSession {
+    fn encode_into(&mut self, grad: &[f32], out: &mut Vec<u8>) {
+        self.enc.encode_into(grad, &mut self.rng, out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coding::QsgdCompressor;
+    use crate::coding::TwoPhaseQsgd;
     use crate::util::rng::{self, Xoshiro256};
 
     fn randn(n: usize, seed: u64) -> Vec<f32> {
@@ -349,10 +400,10 @@ mod tests {
             (127, 512, Norm::Max),
             (15, 3000, Norm::L2),
         ] {
-            let mut c = FusedQsgd::new(s, bucket, norm, None);
-            let mut r = Xoshiro256::from_u64(1);
-            let msg = c.compress(&v, &mut r);
-            let back = c.decompress(&msg, v.len()).unwrap();
+            let codec = QsgdCodec::new(s, bucket, norm, None);
+            let mut sess = codec.session(Xoshiro256::from_u64(1));
+            let msg = sess.compress(&v);
+            let back = codec.decode(&msg, v.len()).unwrap();
             assert_eq!(back.len(), v.len());
             // reconstruction stays within one level per bucket
             for (cg, cb) in v.chunks(bucket).zip(back.chunks(bucket)) {
@@ -377,21 +428,23 @@ mod tests {
             (4, 128, Norm::L2, Some(Regime::Sparse)),
             (4, 128, Norm::Max, Some(Regime::Dense)),
         ] {
-            let mut oracle = QsgdCompressor { s, bucket, norm, regime };
-            let mut fused = FusedQsgd::new(s, bucket, norm, regime);
-            let a = oracle.compress(&v, &mut Xoshiro256::from_u64(3));
-            let b = fused.compress(&v, &mut Xoshiro256::from_u64(3));
+            let mut oracle =
+                TwoPhaseQsgd::new(s, bucket, norm, regime).session(Xoshiro256::from_u64(3));
+            let mut fused =
+                QsgdCodec::new(s, bucket, norm, regime).session(Xoshiro256::from_u64(3));
+            let a = oracle.compress(&v);
+            let b = fused.compress(&v);
             assert_eq!(a, b, "s={s} bucket={bucket} {norm:?} {regime:?}");
         }
     }
 
     #[test]
     fn empty_and_degenerate_gradients() {
-        let mut fused = FusedQsgd::with_bits(4, 512);
-        let mut oracle = QsgdCompressor::with_bits(4, 512);
+        let mut fused = QsgdCodec::with_bits(4, 512).session(Xoshiro256::from_u64(4));
+        let mut oracle = TwoPhaseQsgd::with_bits(4, 512).session(Xoshiro256::from_u64(4));
         for v in [vec![], vec![0.0f32; 100], vec![f32::NAN; 10]] {
-            let a = oracle.compress(&v, &mut Xoshiro256::from_u64(4));
-            let b = fused.compress(&v, &mut Xoshiro256::from_u64(4));
+            let a = oracle.compress(&v);
+            let b = fused.compress(&v);
             assert_eq!(a, b, "len={}", v.len());
             let q = gradient::decode(&b).unwrap();
             assert_eq!(q.n, v.len());
@@ -406,7 +459,7 @@ mod tests {
         let v = randn(3000, 7);
         for regime in [Regime::Sparse, Regime::Dense] {
             let mut enc = FusedEncoder::new(7, 512, Norm::Max, Some(regime));
-            enc.directory = Some(true);
+            enc.opts.directory = Some(true);
             let mut r = Xoshiro256::from_u64(8);
             let a = enc.encode(&v, &mut r);
             let q = crate::quant::stochastic::quantize(
@@ -422,7 +475,7 @@ mod tests {
         }
         // measured-density path (max-norm auto regime) with the directory
         let mut enc = FusedEncoder::new(7, 512, Norm::Max, None);
-        enc.directory = Some(true);
+        enc.opts.directory = Some(true);
         let a = enc.encode(&v, &mut Xoshiro256::from_u64(9));
         let q = crate::quant::stochastic::quantize(
             &v,

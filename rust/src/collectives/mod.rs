@@ -5,10 +5,13 @@
 //! charge virtual transfer time on the [`crate::simnet::SimNet`] model.
 //!
 //! The K per-worker Encode/Decode jobs of Algorithm 1 are independent
-//! (per-worker compressor state, per-worker `Xoshiro256` RNG streams), so
-//! [`par_encode`] and [`par_decode_mean`] fan them out on the scoped pool
-//! ([`crate::util::par`]); wire bytes stay bit-identical to a sequential
-//! pass and the decode merge order is fixed, so results are deterministic.
+//! (per-worker [`EncodeSession`](crate::quant::EncodeSession) state with its
+//! own `Xoshiro256` RNG stream), so the coordinators fan encode jobs out
+//! directly on the scoped pool ([`crate::util::par::par_map_mut`] over
+//! session/buffer pairs — see `coordinator::sync`) and [`par_decode_mean`]
+//! does the same for the decode merge; wire bytes stay bit-identical to a
+//! sequential pass and the merge order is fixed, so results are
+//! deterministic.
 
 use anyhow::Result;
 
@@ -18,30 +21,20 @@ use crate::util::par;
 /// Result of an all-broadcast: every worker sees all K messages, in worker
 /// order (a worker's own message included, as in Algorithm 1 where the local
 /// gradient also passes through Encode/Decode — quantization noise applies
-/// to one's own contribution too).
-pub struct BroadcastResult {
+/// to one's own contribution too). Messages are *borrowed*: the broadcast
+/// only charges virtual transfer time, so senders keep ownership of their
+/// (reusable) encode buffers — no per-step copies of the wire bytes.
+pub struct BroadcastResult<'a> {
     pub time: VTime,
-    pub messages: Vec<Vec<u8>>,
+    pub messages: &'a [Vec<u8>],
 }
 
 /// All-to-all broadcast of per-worker messages (Algorithm 1 lines 4–8).
-pub fn all_broadcast(net: &SimNet, messages: Vec<Vec<u8>>) -> BroadcastResult {
+pub fn all_broadcast<'a>(net: &SimNet, messages: &'a [Vec<u8>]) -> BroadcastResult<'a> {
     assert_eq!(messages.len(), net.workers);
     let sizes: Vec<usize> = messages.iter().map(Vec::len).collect();
     let time = net.exchange_time(&sizes);
     BroadcastResult { time, messages }
-}
-
-/// Encode K independent per-worker messages in parallel (Algorithm 1 line 3
-/// across simulated workers). Each job owns its compressor state and RNG
-/// stream, so the produced bytes are bit-identical to a sequential loop in
-/// worker order.
-pub fn par_encode<W, F>(workers: &mut [W], encode: F) -> Vec<Vec<u8>>
-where
-    W: Send,
-    F: Fn(usize, &mut W) -> Vec<u8> + Sync,
-{
-    par::par_map_mut(workers, encode)
 }
 
 /// Message groups for the parallel decode merge. Fixed (not derived from the
@@ -59,17 +52,23 @@ pub const DECODE_MERGE_GROUPS: usize = 8;
 ///
 /// Two levels of parallelism: across message groups, and *within* one
 /// message — the closure receives the per-group intra-message thread
-/// budget (leftover cores once the groups are staffed) to spend on
-/// directory-bearing frames via
-/// [`decompress_add_threads`](crate::quant::Compressor::decompress_add_threads).
+/// budget (the caller's total `threads` budget, less what the groups
+/// consume) to spend on directory-bearing frames via
+/// [`decode_add_threads`](crate::quant::Codec::decode_add_threads).
 /// Small K on a many-core host ⇒ the budget goes to buckets within each
 /// message; large K ⇒ the groups already saturate the pool and the budget
 /// degrades to 1 (serial per message). Either way the result is
 /// bit-identical to the sequential decode-accumulate of each group.
+///
+/// `threads` is the *total* budget, normally the decoding codec's
+/// [`decode_threads`](crate::quant::Codec::decode_threads) — the codec
+/// carries the configured budget ([`crate::config::CodecOptions`]) so
+/// call sites stop consulting env vars.
 pub fn par_decode_mean<F>(
     messages: &[Vec<u8>],
     n: usize,
     alpha: f32,
+    threads: usize,
     decode_add: F,
 ) -> Result<Vec<f32>>
 where
@@ -80,7 +79,7 @@ where
         return Ok(acc);
     }
     let groups = DECODE_MERGE_GROUPS.min(messages.len());
-    let intra = (par::max_threads() / groups).max(1);
+    let intra = (threads.max(1) / groups).max(1);
     let chunk = messages.len().div_ceil(groups);
     let grouped: Vec<&[Vec<u8>]> = messages.chunks(chunk).collect();
     let partials = par::par_map(&grouped, |_, group| -> Result<Vec<f32>> {
@@ -129,8 +128,8 @@ mod tests {
     #[test]
     fn broadcast_preserves_bytes() {
         let msgs: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8; 10 + i]).collect();
-        let r = all_broadcast(&net(4, Topology::P2pBroadcast), msgs.clone());
-        assert_eq!(r.messages, msgs);
+        let r = all_broadcast(&net(4, Topology::P2pBroadcast), &msgs);
+        assert_eq!(r.messages, msgs.as_slice());
         assert!(r.time.secs() > 0.0);
     }
 
@@ -150,34 +149,41 @@ mod tests {
     }
 
     #[test]
-    fn par_encode_matches_sequential_worker_loop() {
+    fn pooled_session_encode_matches_sequential_worker_loop() {
+        // The coordinators' encode fan-out shape: per-worker sessions paired
+        // with reusable output buffers on the scoped pool must produce the
+        // bytes of a sequential worker loop, bit for bit.
         use crate::coordinator::CompressorSpec;
+        use crate::quant::{Codec, EncodeSession};
         use crate::util::rng::{self, Xoshiro256};
 
         struct Lane {
-            c: Box<dyn crate::quant::Compressor>,
-            rng: Xoshiro256,
+            sess: Box<dyn EncodeSession>,
             grad: Vec<f32>,
+            out: Vec<u8>,
         }
         let n = 2000usize;
-        let spec = CompressorSpec::qsgd_4bit();
-        let mk = || -> Vec<Lane> {
+        let codec = CompressorSpec::qsgd_4bit().codec();
+        let mk = |codec: &dyn Codec| -> Vec<Lane> {
             (0..6)
                 .map(|w| {
                     let mut gr = Xoshiro256::stream(7, w as u64);
                     Lane {
-                        c: spec.build(n),
-                        rng: Xoshiro256::stream(11, w as u64),
+                        sess: codec.session(Xoshiro256::stream(11, w as u64)),
                         grad: rng::normal_vec(&mut gr, n),
+                        out: Vec::new(),
                     }
                 })
                 .collect()
         };
-        let mut seq = mk();
-        let expect: Vec<Vec<u8>> =
-            seq.iter_mut().map(|l| l.c.compress(&l.grad, &mut l.rng)).collect();
-        let mut par_lanes = mk();
-        let got = par_encode(&mut par_lanes, |_, l| l.c.compress(&l.grad, &mut l.rng));
+        let mut seq = mk(codec.as_ref());
+        let expect: Vec<Vec<u8>> = seq.iter_mut().map(|l| l.sess.compress(&l.grad)).collect();
+        let mut par_lanes = mk(codec.as_ref());
+        par::par_map_mut(&mut par_lanes, |_, l| {
+            let Lane { sess, grad, out } = l;
+            sess.encode_into(grad, out)
+        });
+        let got: Vec<Vec<u8>> = par_lanes.into_iter().map(|l| l.out).collect();
         assert_eq!(got, expect, "parallel encode must be bit-identical");
     }
 
@@ -202,7 +208,7 @@ mod tests {
         for m in &msgs {
             gradient::decode_add(m, alpha, &mut seq).unwrap();
         }
-        let par = par_decode_mean(&msgs, n, alpha, |m, a, acc, t| {
+        let par = par_decode_mean(&msgs, n, alpha, par::max_threads(), |m, a, acc, t| {
             gradient::par_decode_add_threads(m, a, acc, t).map(|_| ())
         })
         .unwrap();
@@ -213,7 +219,7 @@ mod tests {
         // corrupt message propagates the error
         let mut bad = msgs.clone();
         bad[3][0] ^= 0xff;
-        assert!(par_decode_mean(&bad, n, alpha, |m, a, acc, t| {
+        assert!(par_decode_mean(&bad, n, alpha, par::max_threads(), |m, a, acc, t| {
             gradient::par_decode_add_threads(m, a, acc, t).map(|_| ())
         })
         .is_err());
@@ -242,7 +248,7 @@ mod tests {
         for m in &msgs {
             gradient::decode_add(m, alpha, &mut seq).unwrap();
         }
-        let par = par_decode_mean(&msgs, n, alpha, |m, a, acc, t| {
+        let par = par_decode_mean(&msgs, n, alpha, par::max_threads(), |m, a, acc, t| {
             gradient::par_decode_add_threads(m, a, acc, t.max(4)).map(|_| ())
         })
         .unwrap();

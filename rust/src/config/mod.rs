@@ -1,7 +1,69 @@
-//! Tiny CLI argument parser (the offline environment has no clap): supports
-//! `--key value`, `--flag`, and positional arguments, with typed getters.
+//! Run configuration: the tiny CLI argument parser (the offline environment
+//! has no clap) and [`CodecOptions`], the knobs a
+//! [`Codec`](crate::quant::Codec) constructor carries so callers stop
+//! reaching for env vars and module constants.
 
 use std::collections::BTreeMap;
+
+/// Tuning knobs carried by a codec instead of read from globals: the v3
+/// bucket-offset-directory size rule and the decode-side thread budget.
+///
+/// The defaults reproduce the wire format and behaviour of the pre-options
+/// code exactly (directory at/above
+/// [`DIRECTORY_MIN_COORDS`](crate::coding::gradient::DIRECTORY_MIN_COORDS)
+/// coordinates, thread budget from the process-wide
+/// [`max_threads`](crate::util::par::max_threads), which honours
+/// `QSGD_THREADS`) — so `CodecOptions::default()` codecs emit bit-identical
+/// bytes to the committed golden frames.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecOptions {
+    /// Emit the v3 bucket-offset directory for gradients with at least this
+    /// many coordinates (and ≥ 2 buckets). Changing it changes the wire
+    /// bytes for sizes between the old and new thresholds — encoder and
+    /// oracle must agree, which is why it rides the codec rather than a
+    /// module constant.
+    pub directory_min_coords: usize,
+    /// Force the directory on/off regardless of size; `None` ⇒ the size
+    /// rule above.
+    pub directory: Option<bool>,
+    /// Decode-side thread budget for
+    /// [`decode_add_threads`](crate::quant::Codec::decode_add_threads);
+    /// `None` ⇒ the process default (machine parallelism, capped by
+    /// `QSGD_THREADS` when set).
+    pub threads: Option<usize>,
+}
+
+impl Default for CodecOptions {
+    fn default() -> Self {
+        Self {
+            directory_min_coords: crate::coding::gradient::DIRECTORY_MIN_COORDS,
+            directory: None,
+            threads: None,
+        }
+    }
+}
+
+impl CodecOptions {
+    /// Single-threaded decode, default wire format — for oracles and tests
+    /// that must be deterministic in wall-clock-independent ways.
+    pub fn serial() -> Self {
+        Self { threads: Some(1), ..Self::default() }
+    }
+
+    /// Should an encoder emit the v3 bucket-offset directory for an
+    /// `n`-coordinate gradient at this bucket size? (The explicit override
+    /// wins; otherwise the size rule: past the threshold with ≥ 2 buckets.)
+    pub fn use_directory(&self, n: usize, bucket_size: usize) -> bool {
+        self.directory.unwrap_or_else(|| {
+            n >= self.directory_min_coords && n.div_ceil(bucket_size.max(1)) >= 2
+        })
+    }
+
+    /// The effective decode-side thread budget.
+    pub fn decode_threads(&self) -> usize {
+        self.threads.unwrap_or_else(crate::util::par::max_threads).max(1)
+    }
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -95,5 +157,26 @@ mod tests {
         let a = parse("--quiet");
         assert!(a.flag("quiet"));
         assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn codec_options_directory_rule() {
+        let d = CodecOptions::default();
+        let min = crate::coding::gradient::DIRECTORY_MIN_COORDS;
+        assert!(!d.use_directory(min - 1, 512));
+        assert!(d.use_directory(min, 512));
+        // a single bucket has nothing to parallelize
+        assert!(!d.use_directory(min, usize::MAX));
+        // explicit override wins in both directions
+        let on = CodecOptions { directory: Some(true), ..CodecOptions::default() };
+        assert!(on.use_directory(16, 4));
+        let off = CodecOptions { directory: Some(false), ..CodecOptions::default() };
+        assert!(!off.use_directory(min * 2, 512));
+        // a custom threshold moves the boundary
+        let low = CodecOptions { directory_min_coords: 100, ..CodecOptions::default() };
+        assert!(low.use_directory(100, 10));
+        assert!(!low.use_directory(99, 10));
+        assert_eq!(CodecOptions::serial().decode_threads(), 1);
+        assert!(d.decode_threads() >= 1);
     }
 }

@@ -25,7 +25,7 @@ use super::sources::GradSource;
 use super::CompressorSpec;
 use crate::metrics::{Curve, WireStats};
 use crate::models::CostModel;
-use crate::quant::Compressor;
+use crate::quant::{Codec, EncodeSession};
 use crate::simnet::SimNet;
 use crate::util::par;
 use crate::util::rng::Xoshiro256;
@@ -81,13 +81,17 @@ impl PartialOrd for Event {
 }
 
 /// One worker's in-flight state: the gradient it computed on its last pull,
-/// and the lazily (batch-)encoded push message.
+/// and the lazily (batch-)encoded push message. The encode session owns the
+/// worker's RNG stream and scratch; `msg` is the worker's reusable wire
+/// buffer (`ready` marks whether it holds the current gradient's encoding),
+/// so the steady-state encode path performs no allocations. Decoding — the
+/// server side — goes through the one shared codec.
 struct WorkerState {
-    compressor: Box<dyn Compressor>,
-    rng: Xoshiro256,
+    session: Box<dyn EncodeSession>,
     grad: Vec<f32>,
     loss: f32,
-    msg: Option<Vec<u8>>,
+    msg: Vec<u8>,
+    ready: bool,
 }
 
 pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult> {
@@ -96,13 +100,15 @@ pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult
         let mut r = Xoshiro256::stream(cfg.seed, 0xA54C);
         crate::util::rng::normal_vec(&mut r, n).into_iter().map(|x| x * 0.1).collect()
     };
+    let codec = cfg.compressor.codec();
+    let msg_cap = codec.encoded_size_hint(n);
     let mut states: Vec<WorkerState> = (0..cfg.workers)
         .map(|w| WorkerState {
-            compressor: cfg.compressor.build(n),
-            rng: Xoshiro256::stream(cfg.seed ^ 0xAB5, w as u64),
+            session: codec.session(Xoshiro256::stream(cfg.seed ^ 0xAB5, w as u64)),
             grad: Vec::new(),
             loss: 0.0,
-            msg: None,
+            msg: Vec::with_capacity(msg_cap),
+            ready: false,
         })
         .collect();
 
@@ -139,26 +145,28 @@ pub fn run(cfg: &AsyncConfig, source: &mut dyn GradSource) -> Result<AsyncResult
         // Lazy batched encode: if this worker's push message is not ready,
         // every pending Encode job runs concurrently on the scoped pool. In
         // the homogeneous steady state this encodes all K messages in one
-        // K-way parallel batch per K events.
-        if states[w].msg.is_none() {
+        // K-way parallel batch per K events. Each session encodes into its
+        // worker's reusable buffer.
+        if !states[w].ready {
             par::par_map_mut(&mut states, |_, st| {
-                if st.msg.is_none() {
-                    st.msg = Some(st.compressor.compress(&st.grad, &mut st.rng));
+                if !st.ready {
+                    st.session.encode_into(&st.grad, &mut st.msg);
+                    st.ready = true;
                 }
             });
         }
-        let msg = states[w].msg.take().expect("encode batch filled this worker");
-        wire.record(msg.len(), n);
-        let push_t = cfg.net.p2p_time(msg.len()).secs();
+        wire.record(states[w].msg.len(), n);
+        let push_t = cfg.net.p2p_time(states[w].msg.len()).secs();
 
         // Server receives and applies (arrival order = heap order here).
         // Fused decode-straight-into-params with α = −lr — no intermediate
         // gradient vector, and a directory-bearing frame decodes its
         // buckets in parallel: the PS handles one message at a time, so
-        // intra-message parallelism is the only level available to it.
-        states[w]
-            .compressor
-            .decompress_add_threads(&msg, -cfg.lr, &mut params, par::max_threads())?;
+        // intra-message parallelism is the only level available to it. The
+        // thread budget comes from the shared codec's options instead of a
+        // global env lookup.
+        codec.decode_add_threads(&states[w].msg, -cfg.lr, &mut params, codec.decode_threads())?;
+        states[w].ready = false;
         let staleness = version - ev.pulled_version;
         max_stale = max_stale.max(staleness);
         stale_sum += staleness;

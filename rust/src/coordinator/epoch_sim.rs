@@ -9,12 +9,12 @@
 //! model. The fp32 arm rides the dense transport; compressed arms use the
 //! all-to-all broadcast of variable-size messages, as in CNTK's MPI path.
 
-use crate::coordinator::exchange::PlanCompressor;
+use crate::coordinator::exchange::PlanCodec;
 use crate::coordinator::CompressorSpec;
 use crate::metrics::Breakdown;
 use crate::models::layout::QuantPlan;
 use crate::models::{CostModel, NetworkShape};
-use crate::quant::Norm;
+use crate::quant::{Codec, EncodeSession, Norm};
 use crate::simnet::{SimNet, VTime};
 use crate::util::rng::{self, Xoshiro256};
 
@@ -122,15 +122,22 @@ pub fn simulate_epoch(
     let qfrac = plan.quantized_fraction();
     let mut rng = Xoshiro256::stream(seed, 0xE90C);
 
-    // Measure the real encoded size.
+    // Measure the real encoded size. The fp32 arm's size is exact without
+    // encoding (raw transport, no segment framing on the dense path), so
+    // the codec's size hint suffices; compressed arms run the real
+    // pipeline through one reused session + output buffer — measure-only,
+    // no per-trial message materialised and discarded.
     let msg_bytes = if matches!(arm.compressor, CompressorSpec::Fp32) {
-        n * 4
+        arm.compressor.codec().encoded_size_hint(n)
     } else {
-        let mut pc = PlanCompressor::from_spec(plan, &arm.compressor);
+        let pc = PlanCodec::from_spec(plan, &arm.compressor);
+        let mut sess = pc.session(Xoshiro256::stream(seed, 0xEC0D));
+        let mut out = Vec::with_capacity(pc.encoded_size_hint(n));
         let mut total = 0usize;
         for _ in 0..measure_trials.max(1) {
             let g = synthetic_gradient(net, &mut rng);
-            total += pc.compress(&g, &mut rng).len();
+            sess.encode_into(&g, &mut out);
+            total += out.len();
         }
         total / measure_trials.max(1)
     };

@@ -5,62 +5,66 @@
 //! Frame layout (byte-aligned, little-endian):
 //!   u32 segment_count, then per segment: u32 payload_len | u8 kind | payload
 //! where kind 0 = fp32 raw, 1 = compressed.
+//!
+//! Split along the session API: [`PlanCodec`] is the shared, immutable
+//! decode half (one `Arc` serves every worker's decode concurrently), and
+//! its [`Codec::session`] creates a per-worker [`PlanSession`] holding one
+//! inner [`EncodeSession`] per quantized segment — stateful compressors
+//! (1BitSGD's error-feedback residual) track per-coordinate state, so their
+//! sessions must be segment-local.
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 use rand_core::RngCore;
 
+use crate::config::CodecOptions;
 use crate::coordinator::CompressorSpec;
 use crate::models::layout::QuantPlan;
-use crate::quant::Compressor;
+use crate::quant::{Codec, EncodeSession, WireFormat};
+use crate::util::rng::Xoshiro256;
 
-/// Compressor wrapper that honours a [`QuantPlan`]. Each quantized segment
-/// gets its *own* inner compressor instance sized to the segment — stateful
-/// compressors (1BitSGD's error-feedback residual) track per-coordinate
-/// state, so they must be segment-local.
-pub struct PlanCompressor {
+/// Codec wrapper that honours a [`QuantPlan`]: raw fp32 for skip segments,
+/// the spec's codec for quantized ones. All decode paths are `&self`.
+pub struct PlanCodec {
     pub plan: QuantPlan,
-    inner: Vec<Box<dyn Compressor>>,
+    /// The shared inner codec for quantized segments (stateless decode; the
+    /// per-segment encode state lives in [`PlanSession`]).
+    inner: Arc<dyn Codec>,
+    opts: CodecOptions,
 }
 
-impl PlanCompressor {
+impl PlanCodec {
     pub fn from_spec(plan: QuantPlan, spec: &CompressorSpec) -> Self {
-        let inner = plan
-            .segments
-            .iter()
-            .filter(|s| s.quantized)
-            .map(|s| spec.build(s.len))
+        Self::from_spec_with(plan, spec, CodecOptions::default())
+    }
+
+    /// [`Self::from_spec`] with explicit [`CodecOptions`] threaded into the
+    /// inner codec (directory threshold, decode thread budget).
+    pub fn from_spec_with(plan: QuantPlan, spec: &CompressorSpec, opts: CodecOptions) -> Self {
+        let inner = spec.codec_with(opts.clone());
+        Self { plan, inner, opts }
+    }
+
+    fn quantized_segments(&self) -> usize {
+        self.plan.segments.iter().filter(|s| s.quantized).count()
+    }
+}
+
+impl Codec for PlanCodec {
+    fn session(&self, mut rng: Xoshiro256) -> Box<dyn EncodeSession> {
+        // Fork one independent RNG stream per quantized segment off the
+        // worker's stream, so segment sessions stay deterministic in
+        // (seed, segment index) regardless of how often each encodes.
+        let sessions: Vec<Box<dyn EncodeSession>> = (0..self.quantized_segments())
+            .map(|_| self.inner.session(Xoshiro256::from_u64(rng.next_u64())))
             .collect();
-        Self { plan, inner }
+        Box::new(PlanSession { plan: self.plan.clone(), sessions, scratch: Vec::new() })
     }
 
-    /// Encode a full gradient following the plan.
-    pub fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
-        assert_eq!(grad.len(), self.plan.total_len(), "gradient/plan mismatch");
-        let mut out = Vec::with_capacity(grad.len() / 2 + 64);
-        out.extend_from_slice(&(self.plan.segments.len() as u32).to_le_bytes());
-        let mut qi = 0usize;
-        for seg in &self.plan.segments.clone() {
-            let slice = &grad[seg.offset..seg.offset + seg.len];
-            let (kind, payload): (u8, Vec<u8>) = if seg.quantized {
-                let c = &mut self.inner[qi];
-                qi += 1;
-                (1, c.compress(slice, rng))
-            } else {
-                let mut raw = Vec::with_capacity(slice.len() * 4);
-                for &x in slice {
-                    raw.extend_from_slice(&x.to_le_bytes());
-                }
-                (0, raw)
-            };
-            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-            out.push(kind);
-            out.extend_from_slice(&payload);
-        }
-        out
-    }
-
-    /// Decode a message produced by [`Self::compress`] under the same plan.
-    pub fn decompress(&self, msg: &[u8]) -> Result<Vec<f32>> {
+    /// Decode a message produced by a [`PlanSession`] under the same plan.
+    fn decode(&self, msg: &[u8], n: usize) -> Result<Vec<f32>> {
+        ensure!(n == self.plan.total_len(), "expected length does not match the plan");
         let mut pos = 0usize;
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
             ensure!(*pos + n <= msg.len(), "truncated message");
@@ -71,7 +75,6 @@ impl PlanCompressor {
         let nseg = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
         ensure!(nseg == self.plan.segments.len(), "segment count mismatch");
         let mut out = vec![0.0f32; self.plan.total_len()];
-        let mut qi = 0usize;
         for seg in &self.plan.segments {
             let len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
             let kind = take(&mut pos, 1)?[0];
@@ -87,10 +90,10 @@ impl PlanCompressor {
                 }
                 1 => {
                     ensure!(seg.quantized, "compressed payload for fp32 segment");
-                    let dec = self.inner[qi]
-                        .decompress(payload, seg.len)
+                    let dec = self
+                        .inner
+                        .decode(payload, seg.len)
                         .context("segment decompress")?;
-                    qi += 1;
                     dst.copy_from_slice(&dec);
                 }
                 k => anyhow::bail!("unknown segment kind {k}"),
@@ -101,25 +104,19 @@ impl PlanCompressor {
     }
 
     /// Fused decode-and-accumulate across the plan's segments:
-    /// `acc += alpha · decode(msg)`. Uses each inner compressor's sparse
-    /// `decompress_add` path (the §6 sparsity optimisation).
-    pub fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> Result<()> {
-        self.decompress_add_threads(msg, alpha, acc, 1)
-    }
-
-    /// [`Self::decompress_add`] with an intra-message thread budget, passed
-    /// through to each quantized segment's
-    /// [`Compressor::decompress_add_threads`] — directory-bearing segments
-    /// decode their buckets in parallel; the accumulator is bit-identical
-    /// at every budget.
-    pub fn decompress_add_threads(
+    /// `acc += alpha · decode(msg)`, with the thread budget passed through
+    /// to each quantized segment's
+    /// [`Codec::decode_add_threads`] — directory-bearing segments decode
+    /// their buckets in parallel; the accumulator is bit-identical at every
+    /// budget.
+    fn decode_add_threads(
         &self,
         msg: &[u8],
         alpha: f32,
         acc: &mut [f32],
         threads: usize,
     ) -> Result<()> {
-        anyhow::ensure!(acc.len() == self.plan.total_len(), "accumulator/plan mismatch");
+        ensure!(acc.len() == self.plan.total_len(), "accumulator/plan mismatch");
         let mut pos = 0usize;
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
             ensure!(*pos + n <= msg.len(), "truncated message");
@@ -129,7 +126,6 @@ impl PlanCompressor {
         };
         let nseg = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
         ensure!(nseg == self.plan.segments.len(), "segment count mismatch");
-        let mut qi = 0usize;
         for seg in &self.plan.segments {
             let len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
             let kind = take(&mut pos, 1)?[0];
@@ -144,8 +140,7 @@ impl PlanCompressor {
                 }
                 1 => {
                     ensure!(seg.quantized, "compressed payload for fp32 segment");
-                    self.inner[qi].decompress_add_threads(payload, alpha, dst, threads)?;
-                    qi += 1;
+                    self.inner.decode_add_threads(payload, alpha, dst, threads)?;
                 }
                 k => anyhow::bail!("unknown segment kind {k}"),
             }
@@ -154,8 +149,76 @@ impl PlanCompressor {
         Ok(())
     }
 
-    pub fn name(&self) -> String {
-        format!("plan[{}seg]x{}", self.plan.segments.len(), self.inner.len())
+    fn decode_threads(&self) -> usize {
+        self.opts.decode_threads()
+    }
+
+    /// Byte estimate for one full-plan message: the 4-byte segment count,
+    /// 5 bytes of framing per segment, exact fp32 payloads for skip
+    /// segments, and the inner codec's hint for quantized ones.
+    fn encoded_size_hint(&self, n: usize) -> usize {
+        debug_assert_eq!(n, self.plan.total_len());
+        let _ = n;
+        4 + self
+            .plan
+            .segments
+            .iter()
+            .map(|seg| {
+                5 + if seg.quantized {
+                    self.inner.encoded_size_hint(seg.len)
+                } else {
+                    seg.len * 4
+                }
+            })
+            .sum::<usize>()
+    }
+
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::Segments
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "plan[{}seg]x{} over {}",
+            self.plan.segments.len(),
+            self.quantized_segments(),
+            self.inner.name()
+        )
+    }
+}
+
+/// Per-worker plan encode session: one inner session per quantized segment
+/// plus a reusable payload staging buffer — zero steady-state allocations
+/// when the inner sessions are (fp32/QSGD/NUQSGD/1bit/TernGrad all are).
+pub struct PlanSession {
+    plan: QuantPlan,
+    sessions: Vec<Box<dyn EncodeSession>>,
+    scratch: Vec<u8>,
+}
+
+impl EncodeSession for PlanSession {
+    fn encode_into(&mut self, grad: &[f32], out: &mut Vec<u8>) {
+        let Self { plan, sessions, scratch } = self;
+        assert_eq!(grad.len(), plan.total_len(), "gradient/plan mismatch");
+        out.clear();
+        out.extend_from_slice(&(plan.segments.len() as u32).to_le_bytes());
+        let mut qi = 0usize;
+        for seg in &plan.segments {
+            let slice = &grad[seg.offset..seg.offset + seg.len];
+            if seg.quantized {
+                sessions[qi].encode_into(slice, scratch);
+                qi += 1;
+                out.extend_from_slice(&(scratch.len() as u32).to_le_bytes());
+                out.push(1);
+                out.extend_from_slice(scratch);
+            } else {
+                out.extend_from_slice(&((seg.len * 4) as u32).to_le_bytes());
+                out.push(0);
+                for &x in slice {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
     }
 }
 
@@ -180,9 +243,10 @@ mod tests {
         let plan = QuantPlan::build(&l, 10_000);
         let mut rng = Xoshiro256::from_u64(0);
         let grad = rng::normal_vec(&mut rng, l.total_params());
-        let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
-        let msg = pc.compress(&grad, &mut rng);
-        let back = pc.decompress(&msg).unwrap();
+        let pc = PlanCodec::from_spec(plan, &CompressorSpec::qsgd_4bit());
+        let mut sess = pc.session(Xoshiro256::from_u64(1));
+        let msg = sess.compress(&grad);
+        let back = pc.decode(&msg, grad.len()).unwrap();
         // fp32 segments: exact
         assert_eq!(&back[..100], &grad[..100]);
         assert_eq!(&back[20100..], &grad[20100..]);
@@ -196,14 +260,19 @@ mod tests {
     }
 
     #[test]
-    fn message_smaller_than_fp32() {
+    fn message_smaller_than_fp32_and_hint_bounds_it() {
         let l = layout();
         let plan = QuantPlan::build(&l, 10_000);
         let mut rng = Xoshiro256::from_u64(1);
         let grad = rng::normal_vec(&mut rng, l.total_params());
-        let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
-        let msg = pc.compress(&grad, &mut rng);
+        let pc = PlanCodec::from_spec(plan, &CompressorSpec::qsgd_4bit());
+        let msg = pc.session(Xoshiro256::from_u64(2)).compress(&grad);
         assert!(msg.len() < l.total_params() * 4 / 3, "msg {} bytes", msg.len());
+        // the no-encode estimate upper-bounds the measured message
+        let hint = pc.encoded_size_hint(grad.len());
+        assert!(msg.len() <= hint, "measured {} > hint {hint}", msg.len());
+        // ... and not absurdly: within the fp32 ceiling plus framing
+        assert!(hint <= l.total_params() * 4 + 5 * pc.plan.segments.len() + 4);
     }
 
     #[test]
@@ -212,13 +281,14 @@ mod tests {
         let plan = QuantPlan::build(&l, 10_000);
         let mut rng = Xoshiro256::from_u64(2);
         let grad = rng::normal_vec(&mut rng, l.total_params());
-        let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
-        let msg = pc.compress(&grad, &mut rng);
-        assert!(pc.decompress(&msg[..msg.len() - 3]).is_err());
+        let pc = PlanCodec::from_spec(plan, &CompressorSpec::qsgd_4bit());
+        let n = grad.len();
+        let msg = pc.session(Xoshiro256::from_u64(3)).compress(&grad);
+        assert!(pc.decode(&msg[..msg.len() - 3], n).is_err());
         let mut extra = msg.clone();
         extra.extend_from_slice(&[0, 1, 2]);
-        assert!(pc.decompress(&extra).is_err());
-        assert!(pc.decompress(&[]).is_err());
+        assert!(pc.decode(&extra, n).is_err());
+        assert!(pc.decode(&[], n).is_err());
     }
 
     #[test]
@@ -227,8 +297,30 @@ mod tests {
         let plan = QuantPlan::build(&l, usize::MAX); // nothing quantized
         let mut rng = Xoshiro256::from_u64(3);
         let grad = rng::normal_vec(&mut rng, l.total_params());
-        let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::Fp32);
-        let msg = pc.compress(&grad, &mut rng);
-        assert_eq!(pc.decompress(&msg).unwrap(), grad);
+        let pc = PlanCodec::from_spec(plan, &CompressorSpec::Fp32);
+        let msg = pc.session(Xoshiro256::from_u64(4)).compress(&grad);
+        assert_eq!(pc.decode(&msg, grad.len()).unwrap(), grad);
+        // nothing quantized ⇒ the hint is exact
+        assert_eq!(pc.encoded_size_hint(grad.len()), msg.len());
+    }
+
+    #[test]
+    fn session_reuses_buffers_and_is_deterministic() {
+        let l = layout();
+        let plan = QuantPlan::build(&l, 10_000);
+        let mut rng = Xoshiro256::from_u64(4);
+        let grad = rng::normal_vec(&mut rng, l.total_params());
+        let pc = PlanCodec::from_spec(plan, &CompressorSpec::qsgd_4bit());
+        let a = pc.session(Xoshiro256::from_u64(5)).compress(&grad);
+        let b = pc.session(Xoshiro256::from_u64(5)).compress(&grad);
+        assert_eq!(a, b, "same session seed must reproduce the same message");
+        let mut sess = pc.session(Xoshiro256::from_u64(6));
+        // pre-size above any plausible message so capacity equality below
+        // tests reuse rather than growth policy
+        let mut out = Vec::with_capacity(l.total_params() * 4 + 64);
+        sess.encode_into(&grad, &mut out);
+        let cap = out.capacity();
+        sess.encode_into(&grad, &mut out);
+        assert_eq!(out.capacity(), cap, "output buffer must be reused");
     }
 }

@@ -18,9 +18,12 @@ pub mod sources;
 pub mod svrg;
 pub mod sync;
 
+use std::sync::Arc;
+
 use crate::coding::gradient::Regime;
-use crate::coding::{FusedQsgd, NuqsgdCompressor, QsgdCompressor};
-use crate::quant::{self, Compressor, LevelGrid, Norm};
+use crate::coding::{QsgdCodec, TwoPhaseQsgd};
+use crate::config::CodecOptions;
+use crate::quant::{self, Codec, LevelGrid, Norm};
 
 /// Which gradient compression the coordinator applies — mirrors the paper's
 /// experimental arms (32-bit, QSGD b-bit/bucket, 1BitSGD, TernGrad) plus the
@@ -62,43 +65,63 @@ impl CompressorSpec {
         LevelGrid::exponential(quant::levels_for_bits(bits))
     }
 
-    /// Instantiate a (possibly stateful) compressor for one worker. QSGD
-    /// arms ride the fused zero-allocation pipeline
+    /// Instantiate the shared [`Codec`] for this arm (default
+    /// [`CodecOptions`]). QSGD arms ride the fused zero-allocation pipeline
     /// ([`crate::coding::pipeline`]) — bit-identical on the wire to the
-    /// two-phase path, which [`Self::build_two_phase`] keeps as the oracle.
-    pub fn build(&self, n: usize) -> Box<dyn Compressor> {
+    /// two-phase path, which [`Self::codec_two_phase`] keeps as the oracle.
+    /// Per-worker encode state comes from [`Codec::session`].
+    pub fn codec(&self) -> Arc<dyn Codec> {
+        self.codec_with(CodecOptions::default())
+    }
+
+    /// [`Self::codec`] with explicit [`CodecOptions`] (directory threshold,
+    /// decode thread budget) carried by the codec. Arms whose wire format
+    /// has no option-sensitive knobs (fp32/1bit/TernGrad) still honour the
+    /// decode thread budget via a thin adapter.
+    pub fn codec_with(&self, opts: CodecOptions) -> Arc<dyn Codec> {
         match *self {
-            CompressorSpec::Fp32 => Box::new(quant::Fp32),
-            CompressorSpec::Qsgd { bits, bucket, norm, regime } => {
-                Box::new(FusedQsgd::new(quant::levels_for_bits(bits), bucket, norm, regime))
+            CompressorSpec::Fp32 => Arc::new(WithOptions { inner: quant::Fp32, opts }),
+            CompressorSpec::Qsgd { bits, bucket, norm, regime } => Arc::new(
+                QsgdCodec::new(quant::levels_for_bits(bits), bucket, norm, regime)
+                    .with_options(opts),
+            ),
+            CompressorSpec::Nuqsgd { bits, bucket, norm, regime } => Arc::new(
+                QsgdCodec::with_grid(Self::nuqsgd_grid(bits), bucket, norm, regime)
+                    .with_options(opts),
+            ),
+            CompressorSpec::OneBit { column } => {
+                Arc::new(WithOptions { inner: quant::onebit::OneBitCodec::new(column), opts })
             }
-            CompressorSpec::Nuqsgd { bits, bucket, norm, regime } => {
-                Box::new(FusedQsgd::with_grid(Self::nuqsgd_grid(bits), bucket, norm, regime))
+            CompressorSpec::TernGrad { bucket } => {
+                Arc::new(WithOptions { inner: quant::terngrad::TernGrad::new(bucket), opts })
             }
-            CompressorSpec::OneBit { column } => Box::new(quant::onebit::OneBitSgd::new(n, column)),
-            CompressorSpec::TernGrad { bucket } => Box::new(quant::terngrad::TernGrad::new(bucket)),
         }
     }
 
     /// The pre-fusion two-phase path (quantize, then encode as a separate
     /// pass over materialised buckets). Kept as the property-test oracle for
-    /// the fused pipeline — one oracle per fused arm (QSGD and NUQSGD);
-    /// remaining arms fall through to [`Self::build`].
-    pub fn build_two_phase(&self, n: usize) -> Box<dyn Compressor> {
+    /// the fused pipeline — one oracle covering both QSGD and NUQSGD arms
+    /// ([`TwoPhaseQsgd`] is grid-generic); remaining arms fall through to
+    /// [`Self::codec`].
+    pub fn codec_two_phase(&self) -> Arc<dyn Codec> {
+        self.codec_two_phase_with(CodecOptions::default())
+    }
+
+    /// [`Self::codec_two_phase`] with explicit [`CodecOptions`] — the
+    /// oracle must carry the *same* options as the fused codec under
+    /// comparison, or the wire bytes legitimately differ (e.g. a custom
+    /// directory threshold flips the v3 frame at a different size).
+    pub fn codec_two_phase_with(&self, opts: CodecOptions) -> Arc<dyn Codec> {
         match *self {
-            CompressorSpec::Qsgd { bits, bucket, norm, regime } => Box::new(QsgdCompressor {
-                s: quant::levels_for_bits(bits),
-                bucket,
-                norm,
-                regime,
-            }),
-            CompressorSpec::Nuqsgd { bits, bucket, norm, regime } => Box::new(NuqsgdCompressor {
-                grid: Self::nuqsgd_grid(bits),
-                bucket,
-                norm,
-                regime,
-            }),
-            _ => self.build(n),
+            CompressorSpec::Qsgd { bits, bucket, norm, regime } => Arc::new(
+                TwoPhaseQsgd::new(quant::levels_for_bits(bits), bucket, norm, regime)
+                    .with_options(opts),
+            ),
+            CompressorSpec::Nuqsgd { bits, bucket, norm, regime } => Arc::new(
+                TwoPhaseQsgd::with_grid(Self::nuqsgd_grid(bits), bucket, norm, regime)
+                    .with_options(opts),
+            ),
+            _ => self.codec_with(opts),
         }
     }
 
@@ -154,6 +177,51 @@ impl CompressorSpec {
     }
 }
 
+/// Adapter pinning [`CodecOptions`] (today: the decode thread budget) onto
+/// codecs whose wire format has no option-sensitive knobs — keeps
+/// [`CompressorSpec::codec_with`] honest for every arm instead of silently
+/// dropping the options on fp32/1bit/TernGrad.
+struct WithOptions<C: Codec> {
+    inner: C,
+    opts: CodecOptions,
+}
+
+impl<C: Codec> Codec for WithOptions<C> {
+    fn session(&self, rng: crate::util::rng::Xoshiro256) -> Box<dyn quant::EncodeSession> {
+        self.inner.session(rng)
+    }
+
+    fn decode(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        self.inner.decode(msg, n)
+    }
+
+    fn decode_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        self.inner.decode_add_threads(msg, alpha, acc, threads)
+    }
+
+    fn decode_threads(&self) -> usize {
+        self.opts.decode_threads()
+    }
+
+    fn encoded_size_hint(&self, n: usize) -> usize {
+        self.inner.encoded_size_hint(n)
+    }
+
+    fn wire_format(&self) -> quant::WireFormat {
+        self.inner.wire_format()
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,8 +251,9 @@ mod tests {
     }
 
     #[test]
-    fn build_and_roundtrip_all() {
-        let mut rng = crate::util::rng::Xoshiro256::from_u64(0);
+    fn codec_and_roundtrip_all() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::from_u64(0);
         let grad: Vec<f32> = crate::util::rng::normal_vec(&mut rng, 700);
         for spec in [
             CompressorSpec::Fp32,
@@ -196,10 +265,49 @@ mod tests {
             CompressorSpec::OneBit { column: 128 },
             CompressorSpec::TernGrad { bucket: 128 },
         ] {
-            let mut c = spec.build(grad.len());
-            let msg = c.compress(&grad, &mut rng);
-            let back = c.decompress(&msg, grad.len()).unwrap();
+            let codec = spec.codec();
+            let msg = codec.session(Xoshiro256::from_u64(1)).compress(&grad);
+            let back = codec.decode(&msg, grad.len()).unwrap();
             assert_eq!(back.len(), grad.len(), "{}", spec.label());
+            assert!(codec.decode_threads() >= 1);
         }
+    }
+
+    #[test]
+    fn codec_options_reach_every_arm() {
+        // The decode thread budget must not be silently dropped for any
+        // arm, and the two-phase oracle must carry the same options as the
+        // fused codec under comparison (here: a tiny directory threshold
+        // flips both to v3 frames at the same size).
+        use crate::config::CodecOptions;
+        use crate::util::rng::Xoshiro256;
+        let serial = CodecOptions::serial();
+        for spec in [
+            CompressorSpec::Fp32,
+            CompressorSpec::qsgd_4bit(),
+            CompressorSpec::nuqsgd_4bit(),
+            CompressorSpec::OneBit { column: 64 },
+            CompressorSpec::TernGrad { bucket: 64 },
+        ] {
+            assert_eq!(spec.codec_with(serial.clone()).decode_threads(), 1, "{}", spec.label());
+        }
+        let opts = CodecOptions { directory_min_coords: 256, ..CodecOptions::default() };
+        let mut rng = Xoshiro256::from_u64(2);
+        let grad = crate::util::rng::normal_vec(&mut rng, 1000);
+        let spec = CompressorSpec::qsgd_4bit();
+        let a = spec.codec_with(opts.clone()).session(Xoshiro256::from_u64(3)).compress(&grad);
+        let b = spec
+            .codec_two_phase_with(opts)
+            .session(Xoshiro256::from_u64(3))
+            .compress(&grad);
+        assert_eq!(a, b, "oracle must track the fused codec's options");
+        // 1000 ≥ 256 with ≥ 2 buckets ⇒ both emit the v3 directory frame
+        assert_eq!(a[1] >> 4, crate::coding::gradient::FRAME_VERSION_DIR as u8);
+        // custom grids account their in-band point table in the size hint
+        let grid = crate::quant::LevelGrid::custom((1..=64).map(|i| i as f32 / 64.0).collect())
+            .unwrap();
+        let c = crate::coding::QsgdCodec::with_grid(grid, 64, Norm::Max, None);
+        let msg = c.session(Xoshiro256::from_u64(4)).compress(&grad[..64]);
+        assert!(msg.len() <= c.encoded_size_hint(64), "hint must cover the grid header");
     }
 }

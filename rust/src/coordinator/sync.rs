@@ -11,18 +11,22 @@
 //!
 //! Gradient *computation* is time-multiplexed on the driver thread (PJRT
 //! handles are !Send); cluster parallelism is accounted in *virtual* time.
-//! The K Encode jobs, however, are pure Rust with per-worker state, so they
-//! run concurrently on the scoped pool ([`crate::collectives::par_encode`])
-//! — bit-identical bytes to a sequential pass, since each worker owns its
+//! The K Encode jobs, however, are pure Rust with per-worker
+//! [`EncodeSession`] state, so they run concurrently on the scoped pool
+//! ([`crate::util::par`]) into per-worker reusable wire buffers —
+//! bit-identical bytes to a sequential pass, since each session owns its
 //! `Xoshiro256` stream. Because decoding is deterministic, each message is
-//! decoded once (concurrently, merged in fixed order —
-//! [`crate::collectives::par_decode_mean`]) and the decoded gradient is
-//! shared — mathematically identical to every worker decoding its own copy,
-//! which per-step parameter-consistency checks enforce.
+//! decoded once through the one shared [`PlanCodec`] (concurrently, merged
+//! in fixed order — [`crate::collectives::par_decode_mean`]) and the
+//! decoded gradient is shared — mathematically identical to every worker
+//! decoding its own copy, which per-step parameter-consistency checks
+//! enforce.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::exchange::PlanCompressor;
+use super::exchange::PlanCodec;
 use super::sources::GradSource;
 use super::CompressorSpec;
 use crate::collectives;
@@ -30,7 +34,9 @@ use crate::metrics::{Breakdown, Curve, WireStats};
 use crate::models::layout::QuantPlan;
 use crate::models::CostModel;
 use crate::optim::Sgd;
+use crate::quant::{Codec, EncodeSession};
 use crate::simnet::{SimNet, VTime};
+use crate::util::par;
 use crate::util::rng::{self, Xoshiro256};
 
 /// Configuration of one synchronous training run.
@@ -99,12 +105,22 @@ impl RunResult {
     }
 }
 
-/// One simulated worker's state.
+/// One simulated worker's state. The encode session owns the worker's RNG
+/// stream and all compression scratch (plus any error-feedback residuals).
+/// Decoding needs no per-worker state at all — the trainer shares one
+/// [`PlanCodec`] across all replicas.
 struct Worker {
     params: Vec<f32>,
     opt: Sgd,
-    compressor: PlanCompressor,
-    rng: Xoshiro256,
+    session: Box<dyn EncodeSession>,
+}
+
+/// One worker's encode job for the scoped pool: its session paired with
+/// its reusable wire buffer (the buffers live in the trainer so the
+/// broadcast can borrow them as one contiguous slice).
+struct EncodeJob<'a> {
+    session: &'a mut dyn EncodeSession,
+    out: &'a mut Vec<u8>,
 }
 
 /// The synchronous trainer.
@@ -126,6 +142,13 @@ impl SyncTrainer {
             .unwrap_or_else(|| QuantPlan::build(&one_tensor_layout(n), 0));
         anyhow::ensure!(plan.total_len() == n, "plan does not cover the gradient");
 
+        // One shared codec (decode side, `&self` only) serves every worker;
+        // each worker gets its own encode session seeded from a per-worker
+        // RNG stream, so parallel encode stays bit-identical to a
+        // sequential worker loop.
+        let codec = Arc::new(PlanCodec::from_spec(plan, &cfg.compressor));
+        let msg_cap = codec.encoded_size_hint(n);
+
         // Identical init on every worker (same seed), per-worker RNG streams
         // for quantization randomness.
         let mut init_rng = Xoshiro256::stream(cfg.seed, 0x1417);
@@ -142,10 +165,13 @@ impl SyncTrainer {
                     0.0,
                     n,
                 ),
-                compressor: PlanCompressor::from_spec(plan.clone(), &cfg.compressor),
-                rng: Xoshiro256::stream(cfg.seed ^ 0xF00D, w as u64),
+                session: codec.session(Xoshiro256::stream(cfg.seed ^ 0xF00D, w as u64)),
             })
             .collect();
+        // Per-worker wire buffers, reused every step (sized once from the
+        // codec's estimate, so even step one stays off the heap).
+        let mut msgs: Vec<Vec<u8>> =
+            (0..cfg.workers).map(|_| Vec::with_capacity(msg_cap)).collect();
 
         let mut loss_curve = Curve::default();
         let mut eval_curve = Curve::default();
@@ -165,33 +191,42 @@ impl SyncTrainer {
 
             // 2. encode — K independent fused quantize+code jobs on the
             // scoped pool (wall-clock parallelism; virtual time still
-            // charges one overlapped encode pass). Per-worker compressor
-            // state and RNG streams keep the bytes bit-identical to a
-            // sequential loop.
-            let messages = collectives::par_encode(&mut workers, |w, worker: &mut Worker| {
-                worker.compressor.compress(&grads[w], &mut worker.rng)
-            });
-            for msg in &messages {
+            // charges one overlapped encode pass). Per-session RNG streams
+            // keep the bytes bit-identical to a sequential loop, and each
+            // session encodes into its worker's reusable wire buffer —
+            // zero steady-state allocations on the encode path.
+            let mut jobs: Vec<EncodeJob> = workers
+                .iter_mut()
+                .zip(msgs.iter_mut())
+                .map(|(w, out)| EncodeJob { session: w.session.as_mut(), out })
+                .collect();
+            par::par_map_mut(&mut jobs, |w, job| job.session.encode_into(&grads[w], job.out));
+            drop(jobs);
+            for msg in &msgs {
                 wire.record(msg.len(), n);
             }
             breakdown.encode += VTime(cfg.cost.encode_s(n));
 
-            // 3. exchange
-            let bc = collectives::all_broadcast(&cfg.net, messages);
+            // 3. exchange (messages are borrowed — the broadcast charges
+            // virtual transfer time, senders keep their buffers)
+            let bc = collectives::all_broadcast(&cfg.net, &msgs);
             breakdown.transfer += bc.time;
 
             // 4. decode + average (decode each message once; see module doc).
             // Fused decode-into-accumulator — O(nnz) per sparse message —
             // with message groups decoded concurrently, each message's
-            // buckets decoded in parallel under the leftover-core budget
-            // (directory frames), and partials merged in fixed order, so
-            // the mean is deterministic at any thread count.
+            // buckets decoded in parallel under the leftover budget of the
+            // codec's thread allowance (directory frames), and partials
+            // merged in fixed order, so the mean is deterministic at any
+            // thread count. One shared codec decodes for all replicas.
             let alpha = 1.0 / cfg.workers as f32;
-            let decoder = &workers[0].compressor;
-            let mean_grad =
-                collectives::par_decode_mean(&bc.messages, n, alpha, |msg, a, acc, t| {
-                    decoder.decompress_add_threads(msg, a, acc, t)
-                })?;
+            let mean_grad = collectives::par_decode_mean(
+                bc.messages,
+                n,
+                alpha,
+                codec.decode_threads(),
+                |msg, a, acc, t| codec.decode_add_threads(msg, a, acc, t),
+            )?;
             breakdown.decode += VTime(cfg.cost.decode_s(n, cfg.workers));
 
             // 5. apply identical update on every worker

@@ -1,0 +1,227 @@
+//! The session-based compression API: [`Codec`] + [`EncodeSession`].
+//!
+//! QSGD's value proposition is that the coding step is cheap relative to
+//! communication, so the API is split along the axis that matters for a
+//! production coordinator:
+//!
+//! * A **[`Codec`]** is shared and immutable (`&self` only): frame parsing,
+//!   the fused decode-and-accumulate paths, size estimation, wire-format
+//!   metadata. One instance serves every parallel decode path with no
+//!   locking — coordinators hold it in an `Arc` and clone the handle.
+//! * An **[`EncodeSession`]** is per-worker and mutable: it owns the RNG
+//!   stream, all encode scratch (bitstream buffers, batched RNG words,
+//!   level staging) and any stateful residuals (1BitSGD error feedback).
+//!   [`EncodeSession::encode_into`] reuses the caller's output buffer, so
+//!   *every* compressor family reaches the zero-allocation steady state the
+//!   fused pipeline pioneered — not just QSGD.
+//!
+//! Migration from the pre-session `Compressor` trait:
+//!
+//! | old (`Compressor`) | new |
+//! |---|---|
+//! | `compress(&mut self, grad, &mut rng) -> Vec<u8>` | [`EncodeSession::encode_into`] (or the [`EncodeSession::compress`] shim); the session owns the RNG, seeded at [`Codec::session`] |
+//! | `decompress(&self, msg, n) -> Vec<f32>` | [`Codec::decode`] |
+//! | `decompress_add(&self, msg, α, acc)` | [`Codec::decode_add`] (QSGD frames: [`crate::coding::gradient::FrameView`]) |
+//! | `decompress_add_threads(…, threads)` | [`Codec::decode_add_threads`] |
+//! | `name(&self)` | [`Codec::name`] |
+
+use anyhow::Result;
+
+use super::LevelGrid;
+use crate::util::rng::Xoshiro256;
+
+/// Wire-format metadata: which byte layout a codec's sessions emit. Lets
+/// plan assembly, telemetry and heterogeneous receivers reason about
+/// messages without decoding them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireFormat {
+    /// Raw little-endian f32s (the 32-bit baseline).
+    RawF32,
+    /// The self-describing Elias frame family (v1 uniform / v2 grid-tagged /
+    /// v3 directory-bearing), carrying this level grid. The grid tag on the
+    /// wire follows the grid family (`coding::gradient` owns the tag space).
+    EliasFrame { grid: LevelGrid },
+    /// 1 sign bit per coordinate plus two reconstruction means per column
+    /// (1BitSGD).
+    SignColumns { column: usize },
+    /// 2-bit ternary codes with a 32-bit scale per bucket (TernGrad).
+    Ternary { bucket: usize },
+    /// Segment container: `u32 count`, then per segment
+    /// `u32 len | u8 kind | payload` over inner formats (the plan codec).
+    Segments,
+}
+
+/// A shared, immutable gradient codec — the decode half plus a factory for
+/// per-worker encode sessions. All methods take `&self`, so one instance
+/// behind an `Arc` serves K workers' concurrent decodes lock-free.
+pub trait Codec: Send + Sync {
+    /// Create a per-worker [`EncodeSession`] owning `rng` and all encode
+    /// scratch. Per-worker RNG streams are what keep parallel encode
+    /// bit-identical to a sequential worker loop.
+    fn session(&self, rng: Xoshiro256) -> Box<dyn EncodeSession>;
+
+    /// Decode a message back into a dense gradient of length `n`. The
+    /// expected length bounds hostile headers *before* any
+    /// size-proportional allocation.
+    fn decode(&self, msg: &[u8], n: usize) -> Result<Vec<f32>>;
+
+    /// Fused decode-and-accumulate: `acc += alpha · decode(msg)`, without
+    /// materialising an intermediate vector. QSGD implementations exploit
+    /// wire-level sparsity (O(nnz) per sparse message — the paper's §6
+    /// future-work optimisation).
+    fn decode_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> Result<()> {
+        self.decode_add_threads(msg, alpha, acc, 1)
+    }
+
+    /// [`Self::decode_add`] with a thread budget the implementation may
+    /// spend on intra-message parallelism (QSGD v3 frames fan their
+    /// bucket-offset directory out on the scoped pool). Contract: the
+    /// accumulator is **bit-identical** at every budget — `threads` only
+    /// buys wall-clock. The default decodes then adds, ignoring the budget.
+    fn decode_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        threads: usize,
+    ) -> Result<()> {
+        let _ = threads;
+        let g = self.decode(msg, acc.len())?;
+        for (a, &x) in acc.iter_mut().zip(&g) {
+            *a += alpha * x;
+        }
+        Ok(())
+    }
+
+    /// The decode-side thread budget this codec is configured for —
+    /// [`crate::config::CodecOptions::threads`] when set, else the
+    /// process-wide default ([`crate::util::par::max_threads`]). Callers
+    /// pass it to [`Self::decode_add_threads`] instead of reaching for env
+    /// vars themselves.
+    fn decode_threads(&self) -> usize {
+        crate::util::par::max_threads()
+    }
+
+    /// Estimated encoded size in bytes for an `n`-coordinate gradient,
+    /// without encoding anything. Exact for fixed-rate formats (fp32,
+    /// 1BitSGD, TernGrad); an expectation-level bound for the entropy-coded
+    /// QSGD frames (Theorem 3.2 / Lemma A.6). Used for byte accounting and
+    /// buffer pre-sizing.
+    fn encoded_size_hint(&self, n: usize) -> usize;
+
+    /// Which wire format this codec's sessions emit.
+    fn wire_format(&self) -> WireFormat;
+
+    fn name(&self) -> String;
+}
+
+/// Per-worker encode state: RNG stream, scratch buffers, stateful residuals.
+/// Created by [`Codec::session`]; `Send` so K sessions fan out on the
+/// scoped pool.
+pub trait EncodeSession: Send {
+    /// Encode `grad` into `out` (cleared first, capacity reused). In steady
+    /// state — once the session scratch and `out` have grown to the largest
+    /// gradient seen — this performs **zero** heap allocations for every
+    /// in-tree codec (enforced by the counting allocator in
+    /// `tests/codec_conformance.rs` and the `coding_hotpath` bench).
+    fn encode_into(&mut self, grad: &[f32], out: &mut Vec<u8>);
+
+    /// Convenience shim allocating one exact-size message.
+    fn compress(&mut self, grad: &[f32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(grad, &mut out);
+        out
+    }
+}
+
+/// Identity codec: raw little-endian f32s (the 32-bit baseline).
+pub struct Fp32;
+
+impl Codec for Fp32 {
+    fn session(&self, _rng: Xoshiro256) -> Box<dyn EncodeSession> {
+        Box::new(Fp32Session)
+    }
+
+    fn decode(&self, msg: &[u8], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(msg.len() == n * 4, "fp32 message length mismatch");
+        Ok(msg
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn decode_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        _threads: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(msg.len() == acc.len() * 4, "fp32 message length mismatch");
+        for (a, c) in acc.iter_mut().zip(msg.chunks_exact(4)) {
+            *a += alpha * f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    }
+
+    fn encoded_size_hint(&self, n: usize) -> usize {
+        n * 4
+    }
+
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::RawF32
+    }
+
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+}
+
+/// Stateless fp32 session (no RNG, no scratch beyond the caller's buffer).
+struct Fp32Session;
+
+impl EncodeSession for Fp32Session {
+    fn encode_into(&mut self, grad: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(grad.len() * 4);
+        for &g in grad {
+            out.extend_from_slice(&g.to_le_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_roundtrip_and_reuse() {
+        let g = vec![1.0f32, -2.5, 0.0, f32::MIN_POSITIVE];
+        let codec = Fp32;
+        let mut sess = codec.session(Xoshiro256::from_u64(0));
+        let msg = sess.compress(&g);
+        assert_eq!(msg.len(), 16);
+        assert_eq!(codec.decode(&msg, 4).unwrap(), g);
+        assert!(codec.decode(&msg, 5).is_err());
+        // decode_add matches decode-then-add exactly
+        let mut acc = vec![1.0f32; 4];
+        codec.decode_add(&msg, 0.5, &mut acc).unwrap();
+        for (a, &x) in acc.iter().zip(&g) {
+            assert_eq!(*a, 1.0 + 0.5 * x);
+        }
+        assert!(codec.decode_add(&msg, 1.0, &mut vec![0.0f32; 3]).is_err());
+        // output buffer is reused across encodes
+        let mut out = Vec::new();
+        sess.encode_into(&g, &mut out);
+        let cap = out.capacity();
+        sess.encode_into(&g, &mut out);
+        assert_eq!(out, msg);
+        assert_eq!(out.capacity(), cap);
+    }
+
+    #[test]
+    fn size_hint_is_exact_for_fp32() {
+        assert_eq!(Fp32.encoded_size_hint(100), 400);
+        assert_eq!(Fp32.wire_format(), WireFormat::RawF32);
+    }
+}

@@ -1,12 +1,14 @@
 //! Gradient quantizers: QSGD (stochastic, §3.1/§4), the deterministic GD
 //! quantizer (Appendix F), and the 1BitSGD / TernGrad baselines.
 
+pub mod codec;
 pub mod deterministic;
 pub mod grid;
 pub mod onebit;
 pub mod stochastic;
 pub mod terngrad;
 
+pub use codec::{Codec, EncodeSession, Fp32, WireFormat};
 pub use grid::LevelGrid;
 
 
@@ -193,71 +195,6 @@ pub fn variance_bound(d: usize, s: u32) -> f64 {
     (d / (s * s)).min(d.sqrt() / s)
 }
 
-/// A gradient compressor as plugged into the coordinator's exchange step
-/// (Algorithm 1 lines 3/7). Implementations may be stateful (1BitSGD keeps
-/// per-worker error-feedback residuals). `Send + Sync` so K per-worker
-/// instances encode on the scoped pool and one shared instance serves the
-/// parallel decode path (all `&self` methods are read-only).
-pub trait Compressor: Send + Sync {
-    /// Encode `grad` into a wire message.
-    fn compress(&mut self, grad: &[f32], rng: &mut dyn rand_core::RngCore) -> Vec<u8>;
-    /// Decode a peer's message back into a dense gradient of length `n`.
-    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>>;
-    /// Fused decode-and-accumulate: `acc[..n] += alpha · decode(msg)`.
-    /// Implementations may exploit wire-level sparsity (QSGD overrides this
-    /// with an O(nnz) path — the paper's §6 future-work optimisation);
-    /// the default decodes then adds.
-    fn decompress_add(&self, msg: &[u8], alpha: f32, acc: &mut [f32]) -> anyhow::Result<()> {
-        let g = self.decompress(msg, acc.len())?;
-        for (a, &x) in acc.iter_mut().zip(&g) {
-            *a += alpha * x;
-        }
-        Ok(())
-    }
-    /// [`Self::decompress_add`] with a thread budget the implementation may
-    /// spend on intra-message parallelism (QSGD overrides this: the v3
-    /// frame's bucket-offset directory fans per-bucket work out on the
-    /// scoped pool). Contract: the accumulator must be **bit-identical** at
-    /// every budget — `threads` only buys wall-clock. The default ignores
-    /// the budget.
-    fn decompress_add_threads(
-        &self,
-        msg: &[u8],
-        alpha: f32,
-        acc: &mut [f32],
-        threads: usize,
-    ) -> anyhow::Result<()> {
-        let _ = threads;
-        self.decompress_add(msg, alpha, acc)
-    }
-    fn name(&self) -> String;
-}
-
-/// Identity "compressor": raw little-endian f32s (the 32-bit baseline).
-pub struct Fp32;
-
-impl Compressor for Fp32 {
-    fn compress(&mut self, grad: &[f32], _rng: &mut dyn rand_core::RngCore) -> Vec<u8> {
-        let mut out = Vec::with_capacity(grad.len() * 4);
-        for &g in grad {
-            out.extend_from_slice(&g.to_le_bytes());
-        }
-        out
-    }
-
-    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(msg.len() == n * 4, "fp32 message length mismatch");
-        Ok(msg
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-
-    fn name(&self) -> String {
-        "fp32".into()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -273,16 +210,6 @@ mod tests {
     fn variance_knob_example() {
         // Paper §4 example, stated with s = 2^bits: √512/2⁴ ≈ 1.41.
         assert!((variance_bound(512, 16) - 1.414).abs() < 0.01);
-    }
-
-    #[test]
-    fn fp32_roundtrip() {
-        let g = vec![1.0f32, -2.5, 0.0, f32::MIN_POSITIVE];
-        let mut c = Fp32;
-        let msg = c.compress(&g, &mut crate::util::rng::Xoshiro256::from_u64(0));
-        assert_eq!(msg.len(), 16);
-        assert_eq!(c.decompress(&msg, 4).unwrap(), g);
-        assert!(c.decompress(&msg, 5).is_err());
     }
 
     #[test]

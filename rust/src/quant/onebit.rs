@@ -14,36 +14,55 @@
 //! of n bits and two floats per iteration" for column = n).
 
 use crate::coding::bitstream::{BitReader, BitWriter};
+use crate::quant::{Codec, EncodeSession, WireFormat};
+use crate::util::rng::Xoshiro256;
 
-/// Stateful 1BitSGD quantizer (holds the error-feedback residual).
+/// Stateful 1BitSGD quantizer (holds the error-feedback residual and the
+/// reusable output bitstream — one instance per worker session).
 pub struct OneBitSgd {
     /// Column length used for the two reconstruction means.
     pub column: usize,
     residual: Vec<f32>,
+    writer: BitWriter,
 }
 
 impl OneBitSgd {
     pub fn new(n: usize, column: usize) -> Self {
         assert!(column >= 1);
-        Self { column, residual: vec![0.0; n] }
+        Self { column, residual: vec![0.0; n], writer: BitWriter::new() }
     }
 
-    /// Quantize `grad + residual`, update the residual, return the message.
-    pub fn compress(&mut self, grad: &[f32]) -> Vec<u8> {
-        assert_eq!(grad.len(), self.residual.len());
+    /// Quantize `grad + residual`, update the residual, write the message
+    /// into `out` (cleared first). All scratch — the residual and the
+    /// bitstream buffer — is owned and reused, so steady-state encodes
+    /// perform zero heap allocations. The residual sizes itself to the
+    /// *first* gradient encoded (sessions are created before the layout is
+    /// known); any later length change is a caller bug — error feedback is
+    /// only meaningful against a fixed layout — and panics rather than
+    /// silently discarding the carried error.
+    pub fn encode_into(&mut self, grad: &[f32], out: &mut Vec<u8>) {
         let n = grad.len();
-        let mut w = BitWriter::with_capacity(n / 8 + (n / self.column + 1) * 8 + 16);
+        if self.residual.len() != n {
+            assert!(
+                self.residual.is_empty(),
+                "1BitSGD session fed a different gradient length: {} then {n}",
+                self.residual.len()
+            );
+            self.residual.resize(n, 0.0);
+        }
+        let column = self.column;
+        let Self { residual, writer, .. } = self;
+        writer.reset();
+        writer.reserve(n / 8 + (n / column + 1) * 8 + 16);
         // Header: none needed (n, column are out-of-band via config).
-        for (ci, chunk) in grad.chunks(self.column).enumerate() {
-            let off = ci * self.column;
-            // effective gradient = grad + carried error
-            let eff: Vec<f32> = chunk
-                .iter()
-                .zip(&self.residual[off..off + chunk.len()])
-                .map(|(&g, &r)| g + r)
-                .collect();
+        for (ci, chunk) in grad.chunks(column).enumerate() {
+            let off = ci * column;
+            // effective gradient = grad + carried error (computed on the
+            // fly — no materialised `eff` buffer)
+            let res = &mut residual[off..off + chunk.len()];
             let (mut psum, mut pcnt, mut nsum, mut ncnt) = (0.0f64, 0usize, 0.0f64, 0usize);
-            for &x in &eff {
+            for (&g, &r) in chunk.iter().zip(res.iter()) {
+                let x = g + r;
                 if x >= 0.0 {
                     psum += x as f64;
                     pcnt += 1;
@@ -54,16 +73,25 @@ impl OneBitSgd {
             }
             let pmean = if pcnt > 0 { (psum / pcnt as f64) as f32 } else { 0.0 };
             let nmean = if ncnt > 0 { (nsum / ncnt as f64) as f32 } else { 0.0 };
-            w.write_f32(pmean);
-            w.write_f32(nmean);
-            for (j, &x) in eff.iter().enumerate() {
+            writer.write_f32(pmean);
+            writer.write_f32(nmean);
+            for (&g, r) in chunk.iter().zip(res.iter_mut()) {
+                let x = g + *r;
                 let neg = x < 0.0;
-                w.write_bit(neg);
+                writer.write_bit(neg);
                 let recon = if neg { nmean } else { pmean };
-                self.residual[off + j] = x - recon;
+                *r = x - recon;
             }
         }
-        w.into_bytes()
+        out.clear();
+        out.extend_from_slice(writer.finish());
+    }
+
+    /// [`Self::encode_into`] allocating the returned message.
+    pub fn compress(&mut self, grad: &[f32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(grad, &mut out);
+        out
     }
 
     /// Decode a peer's message into a dense gradient.
@@ -99,17 +127,74 @@ impl OneBitSgd {
     }
 }
 
-impl super::Compressor for OneBitSgd {
-    fn compress(&mut self, grad: &[f32], _rng: &mut dyn rand_core::RngCore) -> Vec<u8> {
-        OneBitSgd::compress(self, grad)
+/// Shared 1BitSGD codec. The decode side is stateless (`&self`); the error
+/// feedback — 1BitSGD's defining per-worker state — lives in the session,
+/// which is exactly the split the session API exists for.
+pub struct OneBitCodec {
+    pub column: usize,
+}
+
+impl OneBitCodec {
+    pub fn new(column: usize) -> Self {
+        assert!(column >= 1);
+        Self { column }
+    }
+}
+
+impl Codec for OneBitCodec {
+    fn session(&self, _rng: Xoshiro256) -> Box<dyn EncodeSession> {
+        // Deterministic scheme — the RNG is unused; the residual sizes
+        // itself to the first gradient encoded.
+        Box::new(OneBitSession { q: OneBitSgd::new(0, self.column) })
     }
 
-    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+    fn decode(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
         OneBitSgd::decompress(msg, n, self.column)
+    }
+
+    fn decode_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        _threads: usize,
+    ) -> anyhow::Result<()> {
+        let mut r = BitReader::new(msg);
+        let mut off = 0usize;
+        let n = acc.len();
+        while off < n {
+            let len = (n - off).min(self.column);
+            let pmean = r.read_f32()?;
+            let nmean = r.read_f32()?;
+            for a in &mut acc[off..off + len] {
+                *a += alpha * if r.read_bit()? { nmean } else { pmean };
+            }
+            off += len;
+        }
+        Ok(())
+    }
+
+    fn encoded_size_hint(&self, n: usize) -> usize {
+        OneBitSgd::message_bits(n, self.column).div_ceil(8) as usize
+    }
+
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::SignColumns { column: self.column }
     }
 
     fn name(&self) -> String {
         format!("1bit(col={})", self.column)
+    }
+}
+
+/// Per-worker 1BitSGD session: owns the residual and the bitstream scratch.
+struct OneBitSession {
+    q: OneBitSgd,
+}
+
+impl EncodeSession for OneBitSession {
+    fn encode_into(&mut self, grad: &[f32], out: &mut Vec<u8>) {
+        self.q.encode_into(grad, out)
     }
 }
 
@@ -173,5 +258,24 @@ mod tests {
         let msg = q.compress(&[0.0; 8]);
         let d = OneBitSgd::decompress(&msg, 8, 4).unwrap();
         assert_eq!(d, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn codec_decode_add_matches_decode_then_add() {
+        let g: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 10.0).collect();
+        let codec = OneBitCodec::new(32);
+        let mut sess = codec.session(crate::util::rng::Xoshiro256::from_u64(0));
+        let msg = sess.compress(&g);
+        assert_eq!(msg.len(), codec.encoded_size_hint(100), "hint is exact for 1bit");
+        let dec = codec.decode(&msg, 100).unwrap();
+        let mut acc = vec![0.25f32; 100];
+        codec.decode_add(&msg, 0.5, &mut acc).unwrap();
+        for (a, &x) in acc.iter().zip(&dec) {
+            assert_eq!(*a, 0.25 + 0.5 * x);
+        }
+        // truncation is rejected
+        assert!(codec.decode(&msg[..msg.len() - 1], 100).is_err());
+        let mut acc = vec![0.0f32; 100];
+        assert!(codec.decode_add(&msg[..msg.len() - 1], 1.0, &mut acc).is_err());
     }
 }

@@ -10,8 +10,13 @@
 use rand_core::RngCore;
 
 use crate::coding::bitstream::{BitReader, BitWriter};
+use crate::quant::{Codec, EncodeSession, WireFormat};
+use crate::util::rng::Xoshiro256;
 
-/// TernGrad quantizer configuration.
+/// TernGrad quantizer configuration. Implements [`Codec`] directly — the
+/// scheme is stateless on the decode side, and encode scratch (bitstream,
+/// clip buffer) plus the RNG live in the per-worker session.
+#[derive(Debug, Clone)]
 pub struct TernGrad {
     pub bucket: usize,
     /// Optional gradient clipping at `c·σ` (Wen et al. §4.1); `None` = off.
@@ -23,20 +28,25 @@ impl TernGrad {
         Self { bucket, clip_sigmas: None }
     }
 
-    pub fn compress(&self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
-        let mut w = BitWriter::with_capacity(grad.len() / 4 + 8);
+    /// Encode into a caller-managed writer, reusing `clip_buf` as the
+    /// clipping scratch — the allocation-free core both [`Self::compress`]
+    /// and the encode session build on.
+    fn encode_to(
+        &self,
+        grad: &[f32],
+        rng: &mut dyn RngCore,
+        w: &mut BitWriter,
+        clip_buf: &mut Vec<f32>,
+    ) {
         for chunk in grad.chunks(self.bucket) {
-            let mut buf_storage;
             let chunk = if let Some(c) = self.clip_sigmas {
                 let mean = chunk.iter().sum::<f32>() / chunk.len() as f32;
                 let var =
                     chunk.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / chunk.len() as f32;
                 let lim = c * var.sqrt();
-                buf_storage = chunk.to_vec();
-                for x in &mut buf_storage {
-                    *x = x.clamp(-lim, lim);
-                }
-                &buf_storage[..]
+                clip_buf.clear();
+                clip_buf.extend(chunk.iter().map(|x| x.clamp(-lim, lim)));
+                &clip_buf[..]
             } else {
                 chunk
             };
@@ -63,6 +73,12 @@ impl TernGrad {
                 w.write_bits(code, 2);
             }
         }
+    }
+
+    pub fn compress(&self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity(grad.len() / 4 + 8);
+        let mut clip_buf = Vec::new();
+        self.encode_to(grad, rng, &mut w, &mut clip_buf);
         w.into_bytes()
     }
 
@@ -94,17 +110,75 @@ impl TernGrad {
     }
 }
 
-impl super::Compressor for TernGrad {
-    fn compress(&mut self, grad: &[f32], rng: &mut dyn RngCore) -> Vec<u8> {
-        TernGrad::compress(self, grad, rng)
+impl Codec for TernGrad {
+    fn session(&self, rng: Xoshiro256) -> Box<dyn EncodeSession> {
+        Box::new(TernGradSession {
+            t: self.clone(),
+            rng,
+            writer: BitWriter::new(),
+            clip_buf: Vec::new(),
+        })
     }
 
-    fn decompress(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+    fn decode(&self, msg: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
         TernGrad::decompress(self, msg, n)
+    }
+
+    fn decode_add_threads(
+        &self,
+        msg: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        _threads: usize,
+    ) -> anyhow::Result<()> {
+        let mut r = BitReader::new(msg);
+        let mut off = 0usize;
+        let n = acc.len();
+        while off < n {
+            let len = (n - off).min(self.bucket);
+            let scale = r.read_f32()?;
+            for a in &mut acc[off..off + len] {
+                match r.read_bits(2)? {
+                    0 => {}
+                    1 => *a += alpha * scale,
+                    2 => *a -= alpha * scale,
+                    _ => anyhow::bail!("invalid ternary code"),
+                }
+            }
+            off += len;
+        }
+        Ok(())
+    }
+
+    fn encoded_size_hint(&self, n: usize) -> usize {
+        self.message_bits(n).div_ceil(8) as usize
+    }
+
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::Ternary { bucket: self.bucket }
     }
 
     fn name(&self) -> String {
         format!("terngrad(bucket={})", self.bucket)
+    }
+}
+
+/// Per-worker TernGrad session: owns the RNG stream and the bitstream/clip
+/// scratch, so steady-state encodes stay off the heap.
+struct TernGradSession {
+    t: TernGrad,
+    rng: Xoshiro256,
+    writer: BitWriter,
+    clip_buf: Vec<f32>,
+}
+
+impl EncodeSession for TernGradSession {
+    fn encode_into(&mut self, grad: &[f32], out: &mut Vec<u8>) {
+        self.writer.reset();
+        self.writer.reserve(grad.len() / 4 + 8);
+        self.t.encode_to(grad, &mut self.rng, &mut self.writer, &mut self.clip_buf);
+        out.clear();
+        out.extend_from_slice(self.writer.finish());
     }
 }
 

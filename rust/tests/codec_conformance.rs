@@ -1,0 +1,274 @@
+//! Trait-level conformance suite for the session-based codec API, run over
+//! every [`CompressorSpec`] arm (fp32, QSGD 2/4/8-bit, NUQSGD, 1BitSGD,
+//! TernGrad) plus the plan codec:
+//!
+//! * round-trip: `session.encode_into` → `Codec::decode` returns the right
+//!   length, and `decode_add` agrees with decode-then-accumulate;
+//! * **zero-allocation steady state**: repeated `encode_into` into a reused
+//!   buffer touches the heap exactly zero times once warm — for every arm,
+//!   not just the fused QSGD pipeline (counting global allocator with a
+//!   thread-local counter, so concurrently running tests don't pollute it);
+//! * `decode_add_threads` is **bit-identical** across thread budgets
+//!   {1, 2, 8};
+//! * truncated messages are rejected by every arm, and garbage (clobbered
+//!   magic) by the self-describing frame arms;
+//! * sessions are deterministic in their seed, and `encoded_size_hint`
+//!   upper-bounds the measured message for the max-norm arms (exactly for
+//!   the fixed-rate ones).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use qsgd::coordinator::exchange::PlanCodec;
+use qsgd::coordinator::CompressorSpec;
+use qsgd::models::layout::{ParamLayout, QuantPlan};
+use qsgd::quant::{Codec, EncodeSession, Norm, WireFormat};
+use qsgd::util::rng::{self, Xoshiro256};
+
+// ---------------------------------------------------------------------------
+// Thread-local counting allocator
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+std::thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocations made by *this* thread so far.
+fn local_allocs() -> u64 {
+    LOCAL_ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+/// Every compressor arm the coordinators can be configured with.
+fn all_specs() -> Vec<CompressorSpec> {
+    vec![
+        CompressorSpec::Fp32,
+        CompressorSpec::qsgd_2bit(),
+        CompressorSpec::qsgd_4bit(),
+        CompressorSpec::qsgd_8bit(),
+        CompressorSpec::nuqsgd_4bit(),
+        CompressorSpec::Nuqsgd { bits: 2, bucket: 64, norm: Norm::Max, regime: None },
+        CompressorSpec::OneBit { column: 512 },
+        CompressorSpec::TernGrad { bucket: 512 },
+    ]
+}
+
+/// Large enough that the QSGD arms emit the v3 bucket-offset directory
+/// (≥ 2^16 coords), so the threaded decode paths genuinely engage.
+const N: usize = 80_000;
+
+fn gradient(seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256::from_u64(seed);
+    rng::normal_vec(&mut r, N)
+}
+
+// ---------------------------------------------------------------------------
+// Conformance properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn round_trip_and_decode_add_agree_for_every_arm() {
+    let grad = gradient(1);
+    for spec in all_specs() {
+        let codec = spec.codec();
+        let msg = codec.session(Xoshiro256::from_u64(2)).compress(&grad);
+        let dec = codec.decode(&msg, N).unwrap_or_else(|e| panic!("{}: {e}", spec.label()));
+        assert_eq!(dec.len(), N, "{}", spec.label());
+        let mut acc = vec![0.125f32; N];
+        codec.decode_add(&msg, 0.5, &mut acc).unwrap();
+        for (i, (a, &x)) in acc.iter().zip(&dec).enumerate() {
+            let want = 0.125 + 0.5 * x;
+            assert!(
+                (a - want).abs() <= 1e-6 * want.abs().max(1.0),
+                "{}: decode_add diverges at {i}: {a} vs {want}",
+                spec.label()
+            );
+        }
+        // sessions are deterministic in their seed
+        let again = codec.session(Xoshiro256::from_u64(2)).compress(&grad);
+        assert_eq!(msg, again, "{}: same seed, different bytes", spec.label());
+        // the no-encode size estimate upper-bounds the measured message
+        // (all default arms are max-norm / fixed-rate, where the hint is a
+        // worst-case or exact figure)
+        let hint = codec.encoded_size_hint(N);
+        assert!(
+            msg.len() <= hint,
+            "{}: measured {} > hint {hint}",
+            spec.label(),
+            msg.len()
+        );
+        // wire-format metadata matches the arm family
+        let wf = codec.wire_format();
+        match &spec {
+            CompressorSpec::Fp32 => assert_eq!(wf, WireFormat::RawF32),
+            CompressorSpec::Qsgd { .. } | CompressorSpec::Nuqsgd { .. } => {
+                assert!(matches!(wf, WireFormat::EliasFrame { .. }), "{}", spec.label())
+            }
+            CompressorSpec::OneBit { column } => {
+                assert_eq!(wf, WireFormat::SignColumns { column: *column })
+            }
+            CompressorSpec::TernGrad { bucket } => {
+                assert_eq!(wf, WireFormat::Ternary { bucket: *bucket })
+            }
+        }
+    }
+}
+
+#[test]
+fn encode_into_steady_state_is_allocation_free_for_every_arm() {
+    let grad = gradient(3);
+    for spec in all_specs() {
+        let codec = spec.codec();
+        let mut sess = codec.session(Xoshiro256::from_u64(4));
+        let mut out = Vec::with_capacity(codec.encoded_size_hint(N));
+        // Warm: grow the session scratch and the output buffer to steady
+        // state (message sizes vary slightly with the RNG draw, so warm a
+        // few times — the same policy the coding_hotpath bench enforces).
+        for _ in 0..3 {
+            sess.encode_into(&grad, &mut out);
+        }
+        let before = local_allocs();
+        for _ in 0..8 {
+            sess.encode_into(&grad, &mut out);
+        }
+        let allocs = local_allocs() - before;
+        assert_eq!(
+            allocs,
+            0,
+            "{}: {allocs} steady-state allocations over 8 encode_into calls",
+            spec.label()
+        );
+        assert!(!out.is_empty());
+    }
+}
+
+#[test]
+fn plan_session_steady_state_is_allocation_free() {
+    // The segment container composes inner sessions; its staging scratch
+    // and the inner sessions' buffers must all reach steady state too.
+    let layout = ParamLayout::synthetic(&[
+        ("small", vec![100]), // fp32 skip segment
+        ("big", vec![400, 180]),
+        ("bias", vec![60]),
+    ]);
+    let plan = QuantPlan::build(&layout, 10_000);
+    let n = layout.total_params();
+    let mut r = Xoshiro256::from_u64(5);
+    let grad = rng::normal_vec(&mut r, n);
+    let specs =
+        [CompressorSpec::qsgd_4bit(), CompressorSpec::Fp32, CompressorSpec::OneBit { column: 512 }];
+    for spec in specs {
+        let pc = PlanCodec::from_spec(plan.clone(), &spec);
+        let mut sess = pc.session(Xoshiro256::from_u64(6));
+        let mut out = Vec::with_capacity(pc.encoded_size_hint(n));
+        for _ in 0..3 {
+            sess.encode_into(&grad, &mut out);
+        }
+        let before = local_allocs();
+        for _ in 0..8 {
+            sess.encode_into(&grad, &mut out);
+        }
+        let allocs = local_allocs() - before;
+        assert_eq!(allocs, 0, "plan over {}: {allocs} steady-state allocations", spec.label());
+        // and the framed message still decodes
+        assert_eq!(pc.decode(&out, n).unwrap().len(), n);
+    }
+}
+
+#[test]
+fn decode_add_threads_is_bit_identical_at_every_budget() {
+    let grad = gradient(7);
+    for spec in all_specs() {
+        let codec = spec.codec();
+        let msg = codec.session(Xoshiro256::from_u64(8)).compress(&grad);
+        let mut base = vec![0.25f32; N];
+        codec.decode_add_threads(&msg, 0.5, &mut base, 1).unwrap();
+        for threads in [2usize, 8] {
+            let mut acc = vec![0.25f32; N];
+            codec.decode_add_threads(&msg, 0.5, &mut acc, threads).unwrap();
+            let same = acc.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{}: budget {threads} diverged from serial", spec.label());
+        }
+    }
+}
+
+#[test]
+fn truncation_is_rejected_by_every_arm() {
+    let grad = gradient(9);
+    for spec in all_specs() {
+        let codec = spec.codec();
+        let msg = codec.session(Xoshiro256::from_u64(10)).compress(&grad);
+        for cut in [0usize, 1, msg.len() / 2, msg.len() - 1] {
+            assert!(
+                codec.decode(&msg[..cut], N).is_err(),
+                "{}: decode of {cut}/{} bytes accepted",
+                spec.label(),
+                msg.len()
+            );
+            let mut acc = vec![0.0f32; N];
+            assert!(
+                codec.decode_add(&msg[..cut], 1.0, &mut acc).is_err(),
+                "{}: decode_add of truncation at {cut} accepted",
+                spec.label()
+            );
+            assert!(
+                codec.decode_add_threads(&msg[..cut], 1.0, &mut acc, 4).is_err(),
+                "{}: threaded decode_add of truncation at {cut} accepted",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn garbage_is_rejected_by_the_self_describing_arms() {
+    // Headerless formats (fp32/1bit/terngrad) cannot detect payload bit
+    // flips by design; the Elias frame arms carry magic + version and must
+    // reject a clobbered header outright.
+    let grad = gradient(11);
+    for spec in [
+        CompressorSpec::qsgd_2bit(),
+        CompressorSpec::qsgd_4bit(),
+        CompressorSpec::qsgd_8bit(),
+        CompressorSpec::nuqsgd_4bit(),
+    ] {
+        let codec = spec.codec();
+        let mut msg = codec.session(Xoshiro256::from_u64(12)).compress(&grad);
+        msg[0] ^= 0xff; // magic
+        assert!(codec.decode(&msg, N).is_err(), "{}: bad magic accepted", spec.label());
+        let mut acc = vec![0.0f32; N];
+        assert!(codec.decode_add(&msg, 1.0, &mut acc).is_err(), "{}", spec.label());
+        // arbitrary bytes without the frame magic never panic, never decode
+        let mut r = Xoshiro256::from_u64(13);
+        let mut junk = rng::normal_vec(&mut r, 256)
+            .iter()
+            .map(|x| x.to_bits() as u8)
+            .collect::<Vec<u8>>();
+        junk[0] = 0x00; // definitely not FRAME_MAGIC
+        assert!(codec.decode(&junk, N).is_err(), "{}", spec.label());
+    }
+}

@@ -69,26 +69,27 @@ fn skip_rule_plan_composes_with_training() {
 #[test]
 fn corrupted_peer_message_fails_loudly() {
     // Decode of a tampered message must error, not silently produce junk.
-    use qsgd::coordinator::exchange::PlanCompressor;
+    use qsgd::coordinator::exchange::PlanCodec;
+    use qsgd::quant::{Codec, EncodeSession};
     use qsgd::util::rng::{self, Xoshiro256};
     let layout = ParamLayout::synthetic(&[("w", vec![5000])]);
     let plan = QuantPlan::quantize_all(&layout);
-    let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
+    let pc = PlanCodec::from_spec(plan, &CompressorSpec::qsgd_4bit());
     let mut rng = Xoshiro256::from_u64(0);
     let grad = rng::normal_vec(&mut rng, 5000);
-    let msg = pc.compress(&grad, &mut rng);
+    let msg = pc.session(Xoshiro256::from_u64(1)).compress(&grad);
     for cut in [0usize, 1, msg.len() / 2, msg.len() - 1] {
-        assert!(pc.decompress(&msg[..cut]).is_err(), "truncation at {cut} accepted");
+        assert!(pc.decode(&msg[..cut], 5000).is_err(), "truncation at {cut} accepted");
     }
     let mut flipped = msg.clone();
     flipped[4] ^= 0xff; // clobber the first segment header
-    assert!(pc.decompress(&flipped).is_err() || pc.decompress(&flipped).is_ok());
+    assert!(pc.decode(&flipped, 5000).is_err() || pc.decode(&flipped, 5000).is_ok());
     // (bit flips inside Elias payloads may decode to *different valid*
     // levels — entropy codes are not error-detecting; the frame-level
     // length checks are what must hold:)
     let mut extended = msg.clone();
     extended.push(0);
-    assert!(pc.decompress(&extended).is_err(), "trailing bytes accepted");
+    assert!(pc.decode(&extended, 5000).is_err(), "trailing bytes accepted");
 }
 
 #[test]

@@ -19,9 +19,11 @@ use qsgd::coding::bitstream::BitWriter;
 use qsgd::coding::gradient::{
     self, Regime, FRAME_MAGIC, FRAME_VERSION, FRAME_VERSION_DIR, FRAME_VERSION_GRID,
 };
-use qsgd::coding::{elias, FusedQsgd, NuqsgdCompressor, QsgdCompressor};
+use qsgd::coding::{elias, QsgdCodec, TwoPhaseQsgd};
 use qsgd::prop_assert;
-use qsgd::quant::{stochastic, Compressor, LevelGrid, Norm, QuantBucket, QuantizedGradient};
+use qsgd::quant::{
+    stochastic, Codec, EncodeSession, LevelGrid, Norm, QuantBucket, QuantizedGradient,
+};
 use qsgd::util::check::forall;
 use qsgd::util::rng::{self, Xoshiro256};
 
@@ -144,14 +146,14 @@ fn version_nibble_tracks_the_threshold_rule() {
         (LevelGrid::uniform(7), FRAME_VERSION),
         (LevelGrid::exponential(7), FRAME_VERSION_GRID),
     ] {
-        let mut c = FusedQsgd::with_grid(grid.clone(), 512, Norm::Max, None);
-        let small = c.compress(&below, &mut Xoshiro256::from_u64(2));
+        let c = QsgdCodec::with_grid(grid.clone(), 512, Norm::Max, None);
+        let small = c.session(Xoshiro256::from_u64(2)).compress(&below);
         assert_eq!((small[1] >> 4) as u64, want_plain, "{}", grid.label());
-        let big = c.compress(&above, &mut Xoshiro256::from_u64(3));
+        let big = c.session(Xoshiro256::from_u64(3)).compress(&above);
         assert_eq!((big[1] >> 4) as u64, FRAME_VERSION_DIR, "{}", grid.label());
         // single-bucket frames never carry a directory, however large
-        let mut whole = FusedQsgd::with_grid(grid.clone(), usize::MAX, Norm::Max, None);
-        let one = whole.compress(&above, &mut Xoshiro256::from_u64(4));
+        let whole = QsgdCodec::with_grid(grid.clone(), usize::MAX, Norm::Max, None);
+        let one = whole.session(Xoshiro256::from_u64(4)).compress(&above);
         assert_eq!((one[1] >> 4) as u64, want_plain, "{}", grid.label());
     }
 }
@@ -167,15 +169,19 @@ fn fused_matches_two_phase_above_the_threshold() {
         gradient::DIRECTORY_MIN_COORDS + 513,
     ] {
         let v = rng::normal_vec(&mut r, n);
-        let mut fused = FusedQsgd::new(7, 512, Norm::Max, None);
-        let mut oracle = QsgdCompressor { s: 7, bucket: 512, norm: Norm::Max, regime: None };
-        let a = fused.compress(&v, &mut Xoshiro256::from_u64(n as u64));
-        let b = oracle.compress(&v, &mut Xoshiro256::from_u64(n as u64));
+        let a = QsgdCodec::new(7, 512, Norm::Max, None)
+            .session(Xoshiro256::from_u64(n as u64))
+            .compress(&v);
+        let b = TwoPhaseQsgd::new(7, 512, Norm::Max, None)
+            .session(Xoshiro256::from_u64(n as u64))
+            .compress(&v);
         assert_eq!(a, b, "n={n}");
-        let mut nu_fused = FusedQsgd::nuqsgd_with_bits(4, 512);
-        let mut nu_oracle = NuqsgdCompressor::with_bits(4, 512);
-        let a = nu_fused.compress(&v, &mut Xoshiro256::from_u64(n as u64 ^ 0xF));
-        let b = nu_oracle.compress(&v, &mut Xoshiro256::from_u64(n as u64 ^ 0xF));
+        let a = QsgdCodec::nuqsgd_with_bits(4, 512)
+            .session(Xoshiro256::from_u64(n as u64 ^ 0xF))
+            .compress(&v);
+        let b = TwoPhaseQsgd::nuqsgd_with_bits(4, 512)
+            .session(Xoshiro256::from_u64(n as u64 ^ 0xF))
+            .compress(&v);
         assert_eq!(a, b, "nuqsgd n={n}");
     }
 }
@@ -211,11 +217,11 @@ fn prop_directory_roundtrip_serial_equals_parallel() {
 }
 
 #[test]
-fn plan_compressor_threads_path_is_bit_identical() {
+fn plan_codec_threads_path_is_bit_identical() {
     // Through the coordinator's segment framing: a plan whose quantized
     // segment is large enough to carry the directory must decode the same
     // under any intra-message budget.
-    use qsgd::coordinator::exchange::PlanCompressor;
+    use qsgd::coordinator::exchange::PlanCodec;
     use qsgd::coordinator::CompressorSpec;
     use qsgd::models::layout::{ParamLayout, QuantPlan};
 
@@ -223,13 +229,13 @@ fn plan_compressor_threads_path_is_bit_identical() {
     let plan = QuantPlan::build(&l, 10_000);
     let mut rng = Xoshiro256::from_u64(8);
     let grad = rng::normal_vec(&mut rng, l.total_params());
-    let mut pc = PlanCompressor::from_spec(plan, &CompressorSpec::qsgd_4bit());
-    let msg = pc.compress(&grad, &mut rng);
+    let pc = PlanCodec::from_spec(plan, &CompressorSpec::qsgd_4bit());
+    let msg = pc.session(Xoshiro256::from_u64(9)).compress(&grad);
     let mut base = vec![0.0f32; grad.len()];
-    pc.decompress_add(&msg, 1.0, &mut base).unwrap();
+    pc.decode_add(&msg, 1.0, &mut base).unwrap();
     for threads in [2usize, 4, 32] {
         let mut acc = vec![0.0f32; grad.len()];
-        pc.decompress_add_threads(&msg, 1.0, &mut acc, threads).unwrap();
+        pc.decode_add_threads(&msg, 1.0, &mut acc, threads).unwrap();
         assert_eq!(acc, base, "threads={threads}");
     }
 }

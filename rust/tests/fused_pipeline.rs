@@ -12,10 +12,10 @@ mod common;
 
 use qsgd::coding::gradient;
 use qsgd::coding::gradient::Regime;
-use qsgd::coding::{FusedQsgd, QsgdCompressor};
+use qsgd::coding::{QsgdCodec, TwoPhaseQsgd};
 use qsgd::coordinator::CompressorSpec;
 use qsgd::prop_assert;
-use qsgd::quant::{stochastic, Compressor, Norm};
+use qsgd::quant::{stochastic, Codec, EncodeSession, Norm};
 use qsgd::util::check::forall;
 use qsgd::util::rng::{self, Xoshiro256};
 
@@ -28,10 +28,12 @@ fn prop_fused_wire_bytes_bit_identical_to_two_phase() {
         let norm = common::gen_norm(g);
         let regime = common::gen_regime(g);
         let seed = (g.u32() as u64) << 16 | n as u64;
-        let mut oracle = QsgdCompressor { s, bucket, norm, regime };
-        let mut fused = FusedQsgd::new(s, bucket, norm, regime);
-        let a = oracle.compress(&v, &mut Xoshiro256::from_u64(seed));
-        let b = fused.compress(&v, &mut Xoshiro256::from_u64(seed));
+        let mut oracle = TwoPhaseQsgd::new(s, bucket, norm, regime)
+            .session(Xoshiro256::from_u64(seed));
+        let mut fused =
+            QsgdCodec::new(s, bucket, norm, regime).session(Xoshiro256::from_u64(seed));
+        let a = oracle.compress(&v);
+        let b = fused.compress(&v);
         prop_assert!(
             a == b,
             "wire bytes differ: n={n} s={s} bucket={bucket} {norm:?} {regime:?}"
@@ -56,16 +58,16 @@ fn prop_spec_built_fused_matches_two_phase_oracle() {
         ][g.usize_in(0, 2)]
         .clone();
         let seed = g.u32() as u64;
-        let mut fused = spec.build(n);
-        let mut oracle = spec.build_two_phase(n);
-        let a = fused.compress(&v, &mut Xoshiro256::from_u64(seed));
-        let b = oracle.compress(&v, &mut Xoshiro256::from_u64(seed));
-        prop_assert!(a == b, "{}: build() and build_two_phase() bytes differ", spec.label());
-        // decompress_add agreement on the same accumulator
+        let fused_codec = spec.codec();
+        let oracle_codec = spec.codec_two_phase();
+        let a = fused_codec.session(Xoshiro256::from_u64(seed)).compress(&v);
+        let b = oracle_codec.session(Xoshiro256::from_u64(seed)).compress(&v);
+        prop_assert!(a == b, "{}: codec() and codec_two_phase() bytes differ", spec.label());
+        // decode_add agreement on the same accumulator
         let mut acc_a = vec![0.5f32; n];
         let mut acc_b = vec![0.5f32; n];
-        fused.decompress_add(&a, 0.25, &mut acc_a).map_err(|e| e.to_string())?;
-        oracle.decompress_add(&b, 0.25, &mut acc_b).map_err(|e| e.to_string())?;
+        fused_codec.decode_add(&a, 0.25, &mut acc_a).map_err(|e| e.to_string())?;
+        oracle_codec.decode_add(&b, 0.25, &mut acc_b).map_err(|e| e.to_string())?;
         prop_assert!(acc_a == acc_b, "decode-accumulate differs");
         Ok(())
     });
@@ -73,18 +75,17 @@ fn prop_spec_built_fused_matches_two_phase_oracle() {
 
 #[test]
 fn fused_scratch_reuse_stays_bit_identical_across_varied_lengths() {
-    let mut fused = FusedQsgd::new(7, 512, Norm::Max, None);
-    let mut oracle = QsgdCompressor { s: 7, bucket: 512, norm: Norm::Max, regime: None };
-    let mut ra = Xoshiro256::from_u64(42);
-    let mut rb = Xoshiro256::from_u64(42);
+    let mut fused = QsgdCodec::new(7, 512, Norm::Max, None).session(Xoshiro256::from_u64(42));
+    let mut oracle =
+        TwoPhaseQsgd::new(7, 512, Norm::Max, None).session(Xoshiro256::from_u64(42));
     let mut data_rng = Xoshiro256::from_u64(1);
     // shrink after growing: stale scratch beyond the live prefix must never
     // leak into the frame
     for (round, base) in [0usize, 1, 5, 511, 512, 513, 6000, 100, 512, 3].iter().enumerate() {
         let n = base + round;
         let v: Vec<f32> = (0..n).map(|_| rng::normal_f32(&mut data_rng)).collect();
-        let a = oracle.compress(&v, &mut ra);
-        let b = fused.compress(&v, &mut rb);
+        let a = oracle.compress(&v);
+        let b = fused.compress(&v);
         assert_eq!(a, b, "round {round} (n={n})");
     }
 }
@@ -101,10 +102,11 @@ fn fused_l2_and_forced_regimes_match_oracle() {
         (4, 512, Norm::Max, Some(Regime::Dense)),    // forced dense
         (15, 64, Norm::L2, Some(Regime::Sparse)),
     ] {
-        let mut oracle = QsgdCompressor { s, bucket, norm, regime };
-        let mut fused = FusedQsgd::new(s, bucket, norm, regime);
-        let a = oracle.compress(&v, &mut Xoshiro256::from_u64(7));
-        let b = fused.compress(&v, &mut Xoshiro256::from_u64(7));
+        let mut oracle =
+            TwoPhaseQsgd::new(s, bucket, norm, regime).session(Xoshiro256::from_u64(7));
+        let mut fused = QsgdCodec::new(s, bucket, norm, regime).session(Xoshiro256::from_u64(7));
+        let a = oracle.compress(&v);
+        let b = fused.compress(&v);
         assert_eq!(a, b, "s={s} bucket={bucket} {norm:?} {regime:?}");
     }
 }

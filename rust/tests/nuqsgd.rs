@@ -11,15 +11,17 @@
 //!   variance respects the grid's analytic envelope (NUQSGD-style bound for
 //!   the exponential grid);
 //! * v2 frames (in-band grid tag) round-trip through `decode`, `decode_add`
-//!   and the `Compressor` trait.
+//!   and the session-based `Codec` API.
 
 mod common;
 
 use qsgd::coding::gradient::{self, Regime};
-use qsgd::coding::{FusedQsgd, NuqsgdCompressor, QsgdCompressor};
+use qsgd::coding::{QsgdCodec, TwoPhaseQsgd};
 use qsgd::coordinator::CompressorSpec;
 use qsgd::prop_assert;
-use qsgd::quant::{stochastic, Compressor, LevelGrid, Norm, QuantBucket, QuantizedGradient};
+use qsgd::quant::{
+    stochastic, Codec, EncodeSession, LevelGrid, Norm, QuantBucket, QuantizedGradient,
+};
 use qsgd::util::check::forall;
 use qsgd::util::rng::{self, Xoshiro256};
 
@@ -32,11 +34,12 @@ fn prop_fused_bit_identical_to_two_phase_for_every_grid() {
         let norm = common::gen_norm(g);
         let regime = common::gen_regime(g);
         let seed = common::gen_seed(g);
-        let mut oracle =
-            NuqsgdCompressor { grid: grid.clone(), bucket, norm, regime };
-        let mut fused = FusedQsgd::with_grid(grid.clone(), bucket, norm, regime);
-        let a = oracle.compress(&v, &mut Xoshiro256::from_u64(seed));
-        let b = fused.compress(&v, &mut Xoshiro256::from_u64(seed));
+        let mut oracle = TwoPhaseQsgd::with_grid(grid.clone(), bucket, norm, regime)
+            .session(Xoshiro256::from_u64(seed));
+        let mut fused = QsgdCodec::with_grid(grid.clone(), bucket, norm, regime)
+            .session(Xoshiro256::from_u64(seed));
+        let a = oracle.compress(&v);
+        let b = fused.compress(&v);
         prop_assert!(
             a == b,
             "wire bytes differ: n={n} bucket={bucket} {norm:?} {regime:?} grid={}",
@@ -66,8 +69,9 @@ fn prop_fused_bit_identical_to_two_phase_for_every_grid() {
 
 #[test]
 fn prop_uniform_grid_matches_legacy_qsgd_oracle() {
-    // The grid machinery must be invisible for uniform grids: FusedQsgd over
-    // LevelGrid::uniform(s) == the PR 1 QsgdCompressor, byte for byte.
+    // The grid machinery must be invisible for uniform grids: QsgdCodec over
+    // LevelGrid::uniform(s) == the PR 1 uniform QSGD encoder, byte for byte
+    // (the two-phase oracle quantizes via the legacy arithmetic).
     forall("uniform-grid-legacy", 80, 3000, |g| {
         let (n, bucket) = common::gen_dims(g);
         let v = common::gen_vec(g, n);
@@ -75,10 +79,12 @@ fn prop_uniform_grid_matches_legacy_qsgd_oracle() {
         let norm = common::gen_norm(g);
         let regime = common::gen_regime(g);
         let seed = common::gen_seed(g);
-        let mut legacy = QsgdCompressor { s, bucket, norm, regime };
-        let mut grid = FusedQsgd::with_grid(LevelGrid::uniform(s), bucket, norm, regime);
-        let a = legacy.compress(&v, &mut Xoshiro256::from_u64(seed));
-        let b = grid.compress(&v, &mut Xoshiro256::from_u64(seed));
+        let mut legacy =
+            TwoPhaseQsgd::new(s, bucket, norm, regime).session(Xoshiro256::from_u64(seed));
+        let mut grid = QsgdCodec::with_grid(LevelGrid::uniform(s), bucket, norm, regime)
+            .session(Xoshiro256::from_u64(seed));
+        let a = legacy.compress(&v);
+        let b = grid.compress(&v);
         prop_assert!(a == b, "uniform grid diverged from legacy: n={n} s={s}");
         Ok(())
     });
@@ -97,15 +103,15 @@ fn prop_spec_built_nuqsgd_matches_two_phase_oracle() {
         ][g.usize_in(0, 2)]
         .clone();
         let seed = common::gen_seed(g);
-        let mut fused = spec.build(n);
-        let mut oracle = spec.build_two_phase(n);
-        let a = fused.compress(&v, &mut Xoshiro256::from_u64(seed));
-        let b = oracle.compress(&v, &mut Xoshiro256::from_u64(seed));
-        prop_assert!(a == b, "{}: build() and build_two_phase() bytes differ", spec.label());
+        let fused_codec = spec.codec();
+        let oracle_codec = spec.codec_two_phase();
+        let a = fused_codec.session(Xoshiro256::from_u64(seed)).compress(&v);
+        let b = oracle_codec.session(Xoshiro256::from_u64(seed)).compress(&v);
+        prop_assert!(a == b, "{}: codec() and codec_two_phase() bytes differ", spec.label());
         let mut acc_a = vec![0.5f32; n];
         let mut acc_b = vec![0.5f32; n];
-        fused.decompress_add(&a, 0.25, &mut acc_a).map_err(|e| e.to_string())?;
-        oracle.decompress_add(&b, 0.25, &mut acc_b).map_err(|e| e.to_string())?;
+        fused_codec.decode_add(&a, 0.25, &mut acc_a).map_err(|e| e.to_string())?;
+        oracle_codec.decode_add(&b, 0.25, &mut acc_b).map_err(|e| e.to_string())?;
         prop_assert!(acc_a == acc_b, "decode-accumulate differs");
         Ok(())
     });
@@ -331,13 +337,12 @@ fn hex(s: &str) -> Vec<u8> {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn nuqsgd_compressor_roundtrips_and_reports_reasonable_size() {
+fn nuqsgd_codec_roundtrips_and_reports_reasonable_size() {
     let mut data_rng = Xoshiro256::from_u64(40);
     let v: Vec<f32> = (0..3000).map(|_| rng::normal_f32(&mut data_rng)).collect();
-    let mut c = FusedQsgd::nuqsgd_with_bits(4, 512);
-    let mut r = Xoshiro256::from_u64(41);
-    let msg = c.compress(&v, &mut r);
-    let back = c.decompress(&msg, v.len()).unwrap();
+    let c = QsgdCodec::nuqsgd_with_bits(4, 512);
+    let msg = c.session(Xoshiro256::from_u64(41)).compress(&v);
+    let back = c.decode(&msg, v.len()).unwrap();
     assert_eq!(back.len(), v.len());
     // reconstruction is bounded by the bucket scale, per coordinate
     for (cg, cb) in v.chunks(512).zip(back.chunks(512)) {
@@ -352,21 +357,19 @@ fn nuqsgd_compressor_roundtrips_and_reports_reasonable_size() {
     // 4-bit-budget NUQSGD stays well below fp32 on the wire
     assert!(msg.len() * 3 < v.len() * 4, "msg {} bytes", msg.len());
     // wrong expected length is rejected
-    assert!(c.decompress(&msg, v.len() + 1).is_err());
+    assert!(c.decode(&msg, v.len() + 1).is_err());
 }
 
 #[test]
 fn fused_nuqsgd_scratch_reuse_stays_bit_identical_across_varied_lengths() {
-    let mut fused = FusedQsgd::nuqsgd_with_bits(4, 512);
-    let mut oracle = NuqsgdCompressor::with_bits(4, 512);
-    let mut ra = Xoshiro256::from_u64(42);
-    let mut rb = Xoshiro256::from_u64(42);
+    let mut fused = QsgdCodec::nuqsgd_with_bits(4, 512).session(Xoshiro256::from_u64(42));
+    let mut oracle = TwoPhaseQsgd::nuqsgd_with_bits(4, 512).session(Xoshiro256::from_u64(42));
     let mut data_rng = Xoshiro256::from_u64(1);
     for (round, base) in [0usize, 1, 5, 511, 512, 513, 6000, 100, 512, 3].iter().enumerate() {
         let n = base + round;
         let v: Vec<f32> = (0..n).map(|_| rng::normal_f32(&mut data_rng)).collect();
-        let a = oracle.compress(&v, &mut ra);
-        let b = fused.compress(&v, &mut rb);
+        let a = oracle.compress(&v);
+        let b = fused.compress(&v);
         assert_eq!(a, b, "round {round} (n={n})");
     }
 }

@@ -8,13 +8,14 @@ mod common;
 
 use qsgd::coding::bitstream::{BitReader, BitWriter};
 use qsgd::coding::{elias, gradient};
-use qsgd::coordinator::exchange::PlanCompressor;
+use qsgd::coordinator::exchange::PlanCodec;
 use qsgd::coordinator::CompressorSpec;
 use qsgd::models::layout::{ParamLayout, QuantPlan};
 use qsgd::prop_assert;
-use qsgd::quant::{deterministic, stochastic};
+use qsgd::quant::{deterministic, stochastic, Codec, EncodeSession};
 use qsgd::util::check::forall;
 use qsgd::util::rng;
+use qsgd::util::rng::Xoshiro256;
 
 #[test]
 fn prop_bitstream_roundtrip_random_ops() {
@@ -189,9 +190,10 @@ fn prop_plan_compressor_roundtrip_random_layouts() {
             CompressorSpec::TernGrad { bucket: 64 },
         ];
         let spec = &specs[g.usize_in(0, specs.len() - 1)];
-        let mut pc = PlanCompressor::from_spec(plan.clone(), spec);
-        let msg = pc.compress(&grad, g.rng);
-        let back = pc.decompress(&msg).map_err(|e| e.to_string())?;
+        let pc = PlanCodec::from_spec(plan.clone(), spec);
+        let seed = common::gen_seed(g);
+        let msg = pc.session(Xoshiro256::from_u64(seed)).compress(&grad);
+        let back = pc.decode(&msg, n).map_err(|e| e.to_string())?;
         prop_assert!(back.len() == n, "length");
         // fp32 segments must be bit-exact
         for seg in plan.segments.iter().filter(|s| !s.quantized) {
@@ -208,10 +210,15 @@ fn prop_encoded_size_beats_fp32_for_low_bits() {
     forall("wire-size", 40, 1, |g| {
         let n = 4096 + g.usize_in(0, 1000);
         let v = g.f32_vec(n);
-        let mut c2 = CompressorSpec::qsgd_2bit().build(n);
-        let mut c4 = CompressorSpec::qsgd_4bit().build(n);
-        let m2 = c2.compress(&v, g.rng);
-        let m4 = c4.compress(&v, g.rng);
+        let seed = common::gen_seed(g);
+        let m2 = CompressorSpec::qsgd_2bit()
+            .codec()
+            .session(Xoshiro256::from_u64(seed))
+            .compress(&v);
+        let m4 = CompressorSpec::qsgd_4bit()
+            .codec()
+            .session(Xoshiro256::from_u64(seed ^ 1))
+            .compress(&v);
         prop_assert!(m2.len() * 8 < n * 4, "2-bit not <25% of fp32: {}", m2.len());
         prop_assert!(m4.len() * 6 < n * 4, "4-bit not well below fp32: {}", m4.len());
         prop_assert!(m2.len() < m4.len(), "2-bit must beat 4-bit on size");

@@ -17,8 +17,9 @@ use qsgd::coding::bitstream::BitWriter;
 use qsgd::coding::gradient::{
     self, Regime, FRAME_MAGIC, FRAME_VERSION, FRAME_VERSION_DIR, FRAME_VERSION_GRID,
 };
-use qsgd::coding::{elias, FusedQsgd};
-use qsgd::quant::{Compressor, LevelGrid, Norm};
+use qsgd::coding::{elias, QsgdCodec};
+use qsgd::config::CodecOptions;
+use qsgd::quant::{Codec, EncodeSession, LevelGrid, Norm};
 use qsgd::util::check::forall;
 use qsgd::util::rng::{self, Xoshiro256};
 
@@ -32,18 +33,18 @@ fn sample_frames() -> Vec<(Vec<u8>, usize)> {
         (LevelGrid::exponential(7), Norm::Max, Some(Regime::Dense)),
         (LevelGrid::custom(vec![0.1, 0.5, 1.0]).unwrap(), Norm::Max, Some(Regime::Sparse)),
     ] {
-        let mut c = FusedQsgd::with_grid(grid, 64, norm, regime);
-        frames.push((c.compress(&v, &mut Xoshiro256::from_u64(9)), v.len()));
+        let c = QsgdCodec::with_grid(grid, 64, norm, regime);
+        frames.push((c.session(Xoshiro256::from_u64(9)).compress(&v), v.len()));
     }
     // v3 (bucket-offset directory) frames, forced below the size threshold
-    // so the whole truncation/bit-flip sweep stays cheap
+    // (via CodecOptions) so the whole truncation/bit-flip sweep stays cheap
     for (grid, regime) in [
         (LevelGrid::uniform(7), Some(Regime::Dense)),
         (LevelGrid::exponential(7), Some(Regime::Sparse)),
     ] {
-        let mut c = FusedQsgd::with_grid(grid, 64, Norm::Max, regime);
-        c.encoder().directory = Some(true);
-        frames.push((c.compress(&v, &mut Xoshiro256::from_u64(9)), v.len()));
+        let c = QsgdCodec::with_grid(grid, 64, Norm::Max, regime)
+            .with_options(CodecOptions { directory: Some(true), ..CodecOptions::default() });
+        frames.push((c.session(Xoshiro256::from_u64(9)).compress(&v), v.len()));
     }
     frames
 }
@@ -203,10 +204,10 @@ fn corrupt_directories_are_rejected_without_panic_or_oom() {
     };
 
     // a valid 128-coord / 64-bucket dense payload to splice under lying dirs
-    let mut c = FusedQsgd::new(7, 64, Norm::Max, Some(Regime::Dense));
-    c.encoder().directory = Some(true);
+    let c = QsgdCodec::new(7, 64, Norm::Max, Some(Regime::Dense))
+        .with_options(CodecOptions { directory: Some(true), ..CodecOptions::default() });
     let v: Vec<f32> = (0..128).map(|i| (i as f32 - 64.0) / 64.0).collect();
-    let good = c.compress(&v, &mut Xoshiro256::from_u64(1));
+    let good = c.session(Xoshiro256::from_u64(1)).compress(&v);
     assert!(gradient::decode(&good).is_ok());
 
     // directory lengths that overrun the message
