@@ -1,0 +1,185 @@
+//! Collective-exchange benchmarks: per-algorithm wall time, simulated
+//! bytes-per-worker, simulated epoch time on the paper's 16-GPU AlexNet
+//! testbed, and the zero-steady-state-allocation invariant of the ring's
+//! hop re-encode path.
+//!
+//! Hard assertions (this bench doubles as the perf-lane enforcement of the
+//! subsystem's acceptance bar):
+//!   * ring allreduce at K=16 moves strictly fewer simulated bytes per
+//!     worker than all-to-all for the same `CompressorSpec`;
+//!   * the ring hop re-encode path performs zero steady-state heap
+//!     allocations (uniform-grid arm).
+//!
+//! Results land in `BENCH_collectives_exchange.json` (schema 1, like
+//! `BENCH_coding_hotpath.json`); CI uploads the file as an artifact and
+//! compares timed sections against the committed baseline in
+//! `rust/benches/baselines/`.
+//!
+//! Run: `cargo bench --bench collectives_exchange` (pin `QSGD_THREADS` for
+//! reproducible parallel sections).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use qsgd::bench::{section, Bench, Report};
+use qsgd::collectives;
+use qsgd::config::CollectiveSpec;
+use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm};
+use qsgd::coordinator::CompressorSpec;
+use qsgd::models::{zoo, CostModel};
+use qsgd::simnet::{Link, Preset, SimNet, Topology};
+use qsgd::util::rng::{self, Xoshiro256};
+use qsgd::util::stats;
+
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+fn main() {
+    let b = Bench::quick();
+    let mut report = Report::new("collectives_exchange");
+
+    let k = 16usize;
+    let n = 1usize << 19; // ~0.5M coords ≈ a mid-size model shard
+    let coords = n as f64;
+    let spec = CompressorSpec::qsgd_4bit();
+    let net = SimNet::new(k, Link::new(3.5e9, 50e-6), Topology::P2pBroadcast);
+    let grads: Vec<Vec<f32>> = (0..k)
+        .map(|w| {
+            let mut r = Xoshiro256::stream(5, w as u64);
+            rng::normal_vec(&mut r, n)
+        })
+        .collect();
+
+    let algos = [
+        CollectiveSpec::AllToAll,
+        CollectiveSpec::ring(),
+        CollectiveSpec::ring_ef(),
+        CollectiveSpec::hierarchical(4),
+    ];
+
+    // -- wall time + simulated traffic per algorithm ------------------------
+    section(&format!("collective exchange @K={k}, {} (1 step)", spec.label()));
+    let mut bytes_per_worker = Vec::new();
+    for col in &algos {
+        let mut algo = collectives::build(col, spec.codec(), k, 7);
+        algo.prepare(n);
+        let mut mean = Vec::new();
+        // one warm exchange so scratch and buffers are steady-state
+        let x0 = algo.exchange(&net, &grads, &mut mean).expect("exchange");
+        let s = b.run(&format!("exchange {}", col.label()), || {
+            algo.exchange(&net, &grads, &mut mean).expect("exchange").hops
+        });
+        s.report();
+        report.add("exchange", &s, Some(coords));
+        let bpw = x0.wire.payload_bytes as f64 / k as f64;
+        println!(
+            "  {:<9} bytes/worker {:>10}, sim transfer {:>9}, hops {:>2}, recompressions {}",
+            col.label(),
+            stats::fmt_bytes(bpw),
+            stats::fmt_duration(x0.time.secs()),
+            x0.hops,
+            x0.recompressions,
+        );
+        report.add_metric("traffic", &format!("{} bytes_per_worker", col.label()), bpw);
+        report.add_metric(
+            "traffic",
+            &format!("{} sim_transfer_s", col.label()),
+            x0.time.secs(),
+        );
+        report.add_metric(
+            "traffic",
+            &format!("{} recompress_err_sq", col.label()),
+            x0.recompress_err_sq,
+        );
+        bytes_per_worker.push((col.label(), bpw));
+    }
+    let a2a_bpw = bytes_per_worker[0].1;
+    let ring_bpw = bytes_per_worker[1].1;
+    assert!(
+        ring_bpw < a2a_bpw,
+        "ACCEPTANCE: ring must move strictly fewer bytes/worker than all-to-all \
+         (ring {ring_bpw} vs a2a {a2a_bpw})"
+    );
+    report.add_metric("traffic", "ring_vs_a2a_bytes_ratio", ring_bpw / a2a_bpw);
+
+    // -- zero-alloc steady state of the hop re-encode path ------------------
+    section("ring hop re-encode: steady-state allocations (tentpole invariant)");
+    {
+        let mut algo = collectives::build(&CollectiveSpec::ring(), spec.codec(), k, 11);
+        algo.prepare(n);
+        let mut mean = Vec::new();
+        for _ in 0..2 {
+            algo.exchange(&net, &grads, &mut mean).expect("warmup");
+        }
+        let before = alloc_count();
+        algo.exchange(&net, &grads, &mut mean).expect("steady");
+        let allocs = alloc_count() - before;
+        println!("  allocations in one steady-state ring exchange: {allocs}");
+        assert_eq!(allocs, 0, "ring hop re-encode path must be allocation-free");
+        report.add_metric("alloc", "ring_steady_state_allocs", allocs as f64);
+    }
+
+    // -- simulated epoch time per algorithm (paper testbed) -----------------
+    section("simulated AlexNet epoch @16 GPUs (K80-PCIe) per collective");
+    {
+        let alexnet = zoo::alexnet();
+        let simnet = SimNet::preset(16, Preset::K80Pcie);
+        let cost = CostModel::k80();
+        let fp = simulate_epoch(&alexnet, 16, &EpochArm::fp32(), &simnet, &cost, 1, 0);
+        println!(
+            "  {:<22} epoch {:>9}  comm {:>3.0}%",
+            "32bit a2a",
+            stats::fmt_duration(fp.epoch_time()),
+            fp.breakdown.comm_fraction() * 100.0
+        );
+        report.add_metric("epoch_sim", "fp32 a2a epoch_s", fp.epoch_time());
+        for col in &algos {
+            let arm = EpochArm::qsgd(4, 512).with_collective(col.clone());
+            let r = simulate_epoch(&alexnet, 16, &arm, &simnet, &cost, 1, 0);
+            println!(
+                "  {:<22} epoch {:>9}  comm {:>3.0}%  B/wkr {:>10}  speedup {:.2}x",
+                format!("QSGD 4bit {}", col.label()),
+                stats::fmt_duration(r.epoch_time()),
+                r.breakdown.comm_fraction() * 100.0,
+                stats::fmt_bytes(r.bytes_per_worker),
+                fp.epoch_time() / r.epoch_time()
+            );
+            report.add_metric(
+                "epoch_sim",
+                &format!("qsgd4 {} epoch_s", col.label()),
+                r.epoch_time(),
+            );
+            report.add_metric(
+                "epoch_sim",
+                &format!("qsgd4 {} bytes_per_worker", col.label()),
+                r.bytes_per_worker,
+            );
+        }
+    }
+
+    report.write("BENCH_collectives_exchange.json").expect("write bench json");
+}

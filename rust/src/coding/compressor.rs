@@ -115,6 +115,14 @@ impl Codec for TwoPhaseQsgd {
         WireFormat::EliasFrame { grid: self.grid.clone() }
     }
 
+    fn chunk_align(&self) -> usize {
+        if self.bucket == usize::MAX {
+            1
+        } else {
+            self.bucket
+        }
+    }
+
     fn name(&self) -> String {
         format!("{}-two-phase(bucket={},{:?})", self.grid.label(), self.bucket, self.norm)
     }

@@ -352,6 +352,16 @@ impl Codec for QsgdCodec {
         WireFormat::EliasFrame { grid: self.grid.clone() }
     }
 
+    fn chunk_align(&self) -> usize {
+        // usize::MAX encodes the whole-vector §3.1 scheme: no useful
+        // sub-gradient alignment exists, fall back to unaligned chunks.
+        if self.bucket == usize::MAX {
+            1
+        } else {
+            self.bucket
+        }
+    }
+
     fn name(&self) -> String {
         format!("{}-fused(bucket={},{:?})", self.grid.label(), self.bucket, self.norm)
     }

@@ -1,0 +1,987 @@
+//! Pluggable collective exchange algorithms: all-to-all broadcast, ring
+//! allreduce with per-hop recompression, and hierarchical two-level reduce.
+//!
+//! Every algorithm moves *real* wire bytes through the session codec stack
+//! ([`Codec`] / [`EncodeSession`] / the frame decoders) — the decode side
+//! consumes exactly the bytes the encode side produced, never a byte-count
+//! shortcut — and charges per-hop α–β virtual time on the [`SimNet`] link
+//! model ([`SimNet::hop_time`] and friends). All algorithms produce the
+//! **mean** of the K workers' gradients, bit-identical on every (simulated)
+//! worker, so the synchronous trainer's replica-consistency invariant holds
+//! under any of them.
+//!
+//! * [`AllToAll`] — Algorithm 1's broadcast (the CNTK MPI path): every
+//!   worker ships its full encoded gradient to all K−1 peers; traffic grows
+//!   as (K−1)·|msg| per worker.
+//! * [`RingAllreduce`] — reduce-scatter + allgather over bucket-aligned
+//!   gradient segments. Each reduce-scatter hop decodes the incoming
+//!   segment, adds the local contribution, and **re-encodes** the partial
+//!   sum through the hop owner's [`EncodeSession`] (ECQ-style error
+//!   feedback optionally carried across hops *and* steps); the completed
+//!   segments then circulate verbatim, so every worker decodes identical
+//!   bytes. Traffic is the bandwidth-optimal 2·(K−1)/K·|msg| per worker at
+//!   the price of K−1 recompressions per segment.
+//! * [`Hierarchical`] — the paper's multi-GPU-per-node testbed shape:
+//!   intra-group fan-in to a leader (which re-encodes the group sum), a
+//!   recompressing ring across leaders, then an intra-group fan-out of the
+//!   final frames (forwarded verbatim — one global set of bytes, so the
+//!   cross-group replica invariant survives).
+//!
+//! Determinism: the simulation walks hops and workers in fixed index order,
+//! per-worker sessions own independent RNG streams (forked via
+//! [`Xoshiro256::stream`] / [`Xoshiro256::fork`]), and the decode side is
+//! bit-identical at every thread budget by the [`Codec`] contract — so a
+//! fixed seed reproduces the final aggregate bits at any `QSGD_THREADS`.
+//!
+//! Steady-state allocation: the ring's hop re-encode path (decode →
+//! accumulate → re-encode) runs entirely in scratch owned by the algorithm
+//! (chunk accumulator, error-feedback staging, reusable wire buffers), so
+//! after the first exchange it performs zero heap allocations for the
+//! uniform-grid QSGD codecs — enforced by `tests/collectives_algos.rs` and
+//! the `collectives_exchange` bench. (Grid-tagged v2 frames allocate their
+//! in-band point table on *decode*; the uniform arms stay v1.)
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::CollectiveSpec;
+use crate::metrics::WireStats;
+use crate::quant::{Codec, EncodeSession};
+use crate::simnet::{SimNet, VTime};
+use crate::util::par;
+use crate::util::rng::Xoshiro256;
+
+/// Outcome of one collective exchange. `wire` counts every *link traversal*
+/// (an all-to-all message sent to K−1 peers is charged K−1 times), so
+/// byte totals are comparable across algorithms; compression ratios are
+/// unaffected (payload and fp32-equivalent scale together).
+#[derive(Debug, Clone, Default)]
+pub struct Exchange {
+    /// Total simulated transfer time (per-hop α–β terms summed).
+    pub time: VTime,
+    /// Cluster-wide wire traffic, per link traversal.
+    pub wire: WireStats,
+    /// Number of synchronous hops charged.
+    pub hops: usize,
+    /// Partial-sum re-encode events (0 for all-to-all).
+    pub recompressions: u64,
+    /// Cumulative recompression quantization error: Σ ‖decode(e) − input‖²
+    /// over every re-encode this exchange, where `input` is what was
+    /// actually encoded (the partial sum, plus the carried residual under
+    /// error feedback). Per-step this is the quantizer's noise either way;
+    /// what `ring:ef` buys is *bias* compensation — the residual makes the
+    /// errors telescope, so the time-averaged aggregate converges to the
+    /// exact mean (see `tests/collectives_algos.rs`).
+    pub recompress_err_sq: f64,
+    /// Max over workers of coordinates quantize+encoded (cost-model
+    /// charging: all workers encode in parallel in virtual time).
+    pub encode_coords: usize,
+    /// Max over workers of coordinates decoded.
+    pub decode_coords: usize,
+}
+
+/// One synchronous hop of the most recent exchange: which phase it belonged
+/// to, the bytes it moved (cluster-wide), and its α–β time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HopStat {
+    pub phase: &'static str,
+    pub bytes: u64,
+    pub time: VTime,
+}
+
+/// A collective exchange algorithm. Implementations own all per-worker
+/// mutable state (encode sessions, wire buffers, error-feedback residuals),
+/// so one instance drives one training run; construct via [`build`].
+pub trait CollectiveAlgo: Send {
+    fn name(&self) -> String;
+
+    /// Pre-size internal scratch for `n`-coordinate gradients so even the
+    /// first [`Self::exchange`] stays off the heap where possible.
+    fn prepare(&mut self, _n: usize) {}
+
+    /// Run one exchange: aggregate the K workers' dense gradients into
+    /// their mean (written into `mean`, reused across steps), moving real
+    /// encoded bytes and charging simulated transfer time. Every simulated
+    /// worker observes bit-identical aggregate values.
+    fn exchange(
+        &mut self,
+        net: &SimNet,
+        grads: &[Vec<f32>],
+        mean: &mut Vec<f32>,
+    ) -> Result<Exchange>;
+
+    /// Per-hop wire stats of the most recent [`Self::exchange`].
+    fn hop_stats(&self) -> &[HopStat];
+
+    /// Expected wire bytes per worker for one step, given a measured
+    /// full-gradient message of `msg_bytes` — the traffic model
+    /// `epoch_sim` byte accounting routes through (dense-vs-QSGD crossover
+    /// points are algorithm-aware).
+    fn bytes_per_worker(&self, k: usize, msg_bytes: usize) -> f64;
+
+    /// Modeled exchange time for one step at message size `msg_bytes`
+    /// (epoch-scale simulation: no real bytes move).
+    fn model_time(&self, net: &SimNet, msg_bytes: usize) -> VTime;
+}
+
+/// Instantiate the algorithm a [`CollectiveSpec`] names, with per-worker
+/// encode sessions forked off `(seed, worker)` streams of the shared codec.
+pub fn build(
+    spec: &CollectiveSpec,
+    codec: Arc<dyn Codec>,
+    workers: usize,
+    seed: u64,
+) -> Box<dyn CollectiveAlgo> {
+    match *spec {
+        CollectiveSpec::AllToAll => Box::new(AllToAll::new(codec, workers, seed)),
+        CollectiveSpec::Ring { recompress, error_feedback } => {
+            Box::new(RingAllreduce::new(codec, workers, seed, recompress, error_feedback))
+        }
+        CollectiveSpec::Hierarchical { group } => {
+            Box::new(Hierarchical::new(codec, workers, seed, group))
+        }
+    }
+}
+
+/// Recompression accounting shared by the re-encode helpers.
+#[derive(Debug, Clone, Copy, Default)]
+struct Recompress {
+    count: u64,
+    err_sq: f64,
+}
+
+/// Encode `v` through `session` into `out`, optionally compensated by an
+/// error-feedback residual (ECQ-style: encode `v + r`, then set
+/// `r ← (v + r) − decode(·)`), optionally accounting the quantization
+/// error ‖decode(·) − encoded input‖² into `stats` (the input is `v + r`
+/// under error feedback — measuring against `v` would conflate the
+/// deliberately re-injected residual with recompression noise). One decode
+/// of the fresh frame serves both; when neither is requested the decode is
+/// skipped entirely. All scratch (`staging`, `dec`) is caller-owned and
+/// reused.
+#[allow(clippy::too_many_arguments)]
+fn encode_lane(
+    codec: &dyn Codec,
+    session: &mut dyn EncodeSession,
+    mut residual: Option<&mut [f32]>,
+    staging: &mut Vec<f32>,
+    dec: &mut Vec<f32>,
+    v: &[f32],
+    out: &mut Vec<u8>,
+    stats: Option<&mut Recompress>,
+) -> Result<()> {
+    let ef = residual.is_some();
+    if let Some(res) = residual.as_deref() {
+        staging.clear();
+        staging.extend_from_slice(v);
+        for (s, r) in staging.iter_mut().zip(res) {
+            *s += *r;
+        }
+        session.encode_into(staging, out);
+    } else {
+        session.encode_into(v, out);
+    }
+    if !ef && stats.is_none() {
+        return Ok(());
+    }
+    dec.clear();
+    dec.resize(v.len(), 0.0);
+    codec.decode_add(out, 1.0, dec)?;
+    if let Some(res) = residual.as_deref_mut() {
+        for (r, (s, d)) in res.iter_mut().zip(staging.iter().zip(dec.iter())) {
+            *r = *s - *d;
+        }
+    }
+    if let Some(st) = stats {
+        st.count += 1;
+        let input: &[f32] = if ef { staging } else { v };
+        let mut e = 0.0f64;
+        for (x, d) in input.iter().zip(dec.iter()) {
+            e += (*x as f64 - *d as f64).powi(2);
+        }
+        st.err_sq += e;
+    }
+    Ok(())
+}
+
+/// Fan the per-worker encode jobs out on the scoped pool: `sessions[w]`
+/// encodes `grads[w]` into `msgs[w]`. Per-session RNG streams keep the
+/// bytes bit-identical to a sequential worker loop.
+fn par_encode_into(
+    sessions: &mut [Box<dyn EncodeSession>],
+    msgs: &mut [Vec<u8>],
+    grads: &[Vec<f32>],
+) {
+    struct Job<'a> {
+        session: &'a mut dyn EncodeSession,
+        out: &'a mut Vec<u8>,
+    }
+    let mut jobs: Vec<Job> = sessions
+        .iter_mut()
+        .zip(msgs.iter_mut())
+        .map(|(s, out)| Job { session: s.as_mut(), out })
+        .collect();
+    par::par_map_mut(&mut jobs, |w, job| job.session.encode_into(&grads[w], job.out));
+}
+
+/// Expected wire bytes per worker per step for a collective, given a
+/// measured full-gradient message size — the pure traffic model behind
+/// [`CollectiveAlgo::bytes_per_worker`]; `epoch_sim` calls this directly so
+/// epoch-scale accounting never constructs sessions.
+pub fn model_bytes_per_worker(spec: &CollectiveSpec, k: usize, msg_bytes: usize) -> f64 {
+    if k <= 1 {
+        return 0.0;
+    }
+    match *spec {
+        CollectiveSpec::AllToAll => ((k - 1) * msg_bytes) as f64,
+        // K−1 reduce-scatter + K−1 allgather hops of ~|msg|/K segments
+        CollectiveSpec::Ring { recompress: true, .. } => {
+            2.0 * (k - 1) as f64 * msg_bytes as f64 / k as f64
+        }
+        // store-and-forward of full frame sets — all-to-all traffic
+        CollectiveSpec::Ring { recompress: false, .. } => ((k - 1) * msg_bytes) as f64,
+        CollectiveSpec::Hierarchical { group } => {
+            let group = group.min(k).max(1);
+            let leaders = k.div_ceil(group);
+            let fan = (k - leaders) as f64 * msg_bytes as f64; // in = out
+            let ring = if leaders > 1 {
+                // leader ring: 2(L−1) hops of ~|msg|/L segments on L links
+                2.0 * (leaders - 1) as f64 * msg_bytes as f64
+            } else {
+                0.0
+            };
+            (2.0 * fan + ring) / k as f64
+        }
+    }
+}
+
+/// Modeled exchange time for one step at message size `msg_bytes` — the
+/// pure α–β model behind [`CollectiveAlgo::model_time`]. The all-to-all
+/// arm reproduces [`SimNet::exchange_time`]'s broadcast closed form
+/// exactly, so legacy epoch-sim numbers are unchanged.
+pub fn model_exchange_time(spec: &CollectiveSpec, net: &SimNet, msg_bytes: usize) -> VTime {
+    let k = net.workers;
+    if k <= 1 {
+        return VTime::ZERO;
+    }
+    match *spec {
+        CollectiveSpec::AllToAll => net.exchange_time(&vec![msg_bytes; k]),
+        CollectiveSpec::Ring { recompress, .. } => {
+            let mut t = VTime::ZERO;
+            if recompress {
+                let chunk = msg_bytes.div_ceil(k);
+                for _ in 0..2 * (k - 1) {
+                    t += net.hop_time(chunk);
+                }
+            } else {
+                for _ in 0..k - 1 {
+                    t += net.hop_time(msg_bytes);
+                }
+            }
+            t
+        }
+        CollectiveSpec::Hierarchical { group } => {
+            let group = group.min(k).max(1);
+            let leaders = k.div_ceil(group);
+            let mut t = VTime::ZERO;
+            if group > 1 {
+                t += net.fan_in_time((group - 1) * msg_bytes);
+            }
+            if leaders > 1 {
+                let chunk = msg_bytes.div_ceil(leaders);
+                for _ in 0..2 * (leaders - 1) {
+                    t += net.hop_time(chunk);
+                }
+            }
+            if group > 1 {
+                t += net.fan_out_time(msg_bytes, group - 1);
+            }
+            t
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// All-to-all broadcast (Algorithm 1, refactored in)
+// ---------------------------------------------------------------------------
+
+/// Algorithm 1's all-to-all broadcast behind the [`CollectiveAlgo`] trait:
+/// K parallel per-worker encodes into reusable wire buffers, one broadcast
+/// charge, and the grouped parallel decode-mean — byte- and bit-identical
+/// to the pre-subsystem synchronous trainer for the same seeds.
+pub struct AllToAll {
+    codec: Arc<dyn Codec>,
+    sessions: Vec<Box<dyn EncodeSession>>,
+    msgs: Vec<Vec<u8>>,
+    hop_log: Vec<HopStat>,
+}
+
+impl AllToAll {
+    pub fn new(codec: Arc<dyn Codec>, workers: usize, seed: u64) -> Self {
+        assert!(workers >= 1);
+        let sessions = (0..workers)
+            .map(|w| codec.session(Xoshiro256::stream(seed, w as u64)))
+            .collect();
+        let msgs = (0..workers).map(|_| Vec::new()).collect();
+        Self { codec, sessions, msgs, hop_log: Vec::new() }
+    }
+}
+
+impl CollectiveAlgo for AllToAll {
+    fn name(&self) -> String {
+        format!("a2a over {}", self.codec.name())
+    }
+
+    fn prepare(&mut self, n: usize) {
+        let cap = self.codec.encoded_size_hint(n);
+        for m in &mut self.msgs {
+            if m.capacity() < cap {
+                m.reserve(cap - m.len());
+            }
+        }
+    }
+
+    fn exchange(
+        &mut self,
+        net: &SimNet,
+        grads: &[Vec<f32>],
+        mean: &mut Vec<f32>,
+    ) -> Result<Exchange> {
+        let k = self.sessions.len();
+        assert_eq!(grads.len(), k, "gradient count != workers");
+        assert_eq!(net.workers, k, "net sized for a different worker count");
+        let n = grads.first().map(Vec::len).unwrap_or(0);
+        assert!(grads.iter().all(|g| g.len() == n), "equal gradient sizes required");
+
+        // K independent fused encode jobs on the scoped pool.
+        par_encode_into(&mut self.sessions, &mut self.msgs, grads);
+
+        let mut wire = WireStats::default();
+        for m in &self.msgs {
+            // each message traverses K−1 links (one per peer)
+            wire.record_fanout(m.len(), n, k - 1);
+        }
+        let bc = super::all_broadcast(net, &self.msgs);
+        let time = bc.time;
+        self.hop_log.clear();
+        self.hop_log.push(HopStat { phase: "broadcast", bytes: wire.payload_bytes, time });
+
+        let alpha = 1.0 / k as f32;
+        let codec = &self.codec;
+        *mean = super::par_decode_mean(
+            bc.messages,
+            n,
+            alpha,
+            codec.decode_threads(),
+            |msg, a, acc, t| codec.decode_add_threads(msg, a, acc, t),
+        )?;
+
+        Ok(Exchange {
+            time,
+            wire,
+            hops: 1,
+            recompressions: 0,
+            recompress_err_sq: 0.0,
+            encode_coords: n,
+            decode_coords: k * n,
+        })
+    }
+
+    fn hop_stats(&self) -> &[HopStat] {
+        &self.hop_log
+    }
+
+    fn bytes_per_worker(&self, k: usize, msg_bytes: usize) -> f64 {
+        model_bytes_per_worker(&CollectiveSpec::AllToAll, k, msg_bytes)
+    }
+
+    fn model_time(&self, net: &SimNet, msg_bytes: usize) -> VTime {
+        model_exchange_time(&CollectiveSpec::AllToAll, net, msg_bytes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring allreduce with per-hop recompression
+// ---------------------------------------------------------------------------
+
+/// Ring allreduce over bucket-aligned gradient segments.
+///
+/// `recompress = true` (the real algorithm): K−1 reduce-scatter hops — each
+/// worker decodes the incoming segment, adds its local contribution and
+/// re-encodes the partial sum through its own session — then K−1 allgather
+/// hops forwarding the completed segment frames verbatim, so every worker
+/// decodes one global set of bytes. `error_feedback` carries a per-worker
+/// residual (ECQ-style) across hops and steps to compensate the
+/// recompression error.
+///
+/// `recompress = false` (pure transport): every worker pre-encodes all K
+/// segments in segment order — bucket alignment plus the single per-worker
+/// session make the quantized levels identical to a whole-gradient encode —
+/// and the original frames circulate unchanged; the reduction happens
+/// locally in worker order. This is bit-identical to the [`AllToAll`] mean
+/// (property-tested), at all-to-all traffic: the variant isolates what
+/// recompression buys (bytes) and costs (variance).
+pub struct RingAllreduce {
+    codec: Arc<dyn Codec>,
+    pub recompress: bool,
+    pub error_feedback: bool,
+    /// Final-decode scaling; `None` ⇒ `1/K`. The hierarchical leader ring
+    /// overrides this with `1/K_total` so the global mean comes out of one
+    /// decode pass.
+    pub alpha: Option<f32>,
+    sessions: Vec<Box<dyn EncodeSession>>,
+    /// (offset, len) of each ring segment; boundaries are multiples of the
+    /// codec's [`Codec::chunk_align`] so segment quantization matches a
+    /// whole-gradient pass.
+    segs: Vec<(usize, usize)>,
+    cur_n: Option<usize>,
+    /// Message each worker sends this hop / staging for the next hop.
+    inflight: Vec<Vec<u8>>,
+    next: Vec<Vec<u8>>,
+    /// Completed (fully reduced) segment frames, decoded by every worker.
+    finals: Vec<Vec<u8>>,
+    /// `recompress = false`: per worker, per segment original encodings.
+    pre: Vec<Vec<Vec<u8>>>,
+    /// Chunk accumulator for the hop partial sum.
+    acc: Vec<f32>,
+    /// Error-feedback staging (`v + r`) and decode scratch.
+    staging: Vec<f32>,
+    dec: Vec<f32>,
+    /// Per-worker error-feedback residual, gradient-sized; persists across
+    /// steps (that is the point).
+    residual: Vec<Vec<f32>>,
+    hop_log: Vec<HopStat>,
+}
+
+impl RingAllreduce {
+    pub fn new(
+        codec: Arc<dyn Codec>,
+        workers: usize,
+        seed: u64,
+        recompress: bool,
+        error_feedback: bool,
+    ) -> Self {
+        assert!(workers >= 1);
+        let sessions: Vec<Box<dyn EncodeSession>> = (0..workers)
+            .map(|w| codec.session(Xoshiro256::stream(seed, w as u64)))
+            .collect();
+        Self {
+            codec,
+            recompress,
+            error_feedback,
+            alpha: None,
+            sessions,
+            segs: Vec::new(),
+            cur_n: None,
+            inflight: (0..workers).map(|_| Vec::new()).collect(),
+            next: (0..workers).map(|_| Vec::new()).collect(),
+            finals: (0..workers).map(|_| Vec::new()).collect(),
+            pre: Vec::new(),
+            acc: Vec::new(),
+            staging: Vec::new(),
+            dec: Vec::new(),
+            residual: Vec::new(),
+            hop_log: Vec::new(),
+        }
+    }
+
+    /// Completed segment frames of the most recent exchange (the bytes the
+    /// hierarchical fan-out forwards verbatim).
+    pub fn final_frames(&self) -> &[Vec<u8>] {
+        &self.finals
+    }
+
+    /// Segment layout of the most recent exchange.
+    pub fn segments(&self) -> &[(usize, usize)] {
+        &self.segs
+    }
+
+    fn ensure_layout(&mut self, n: usize) {
+        if self.cur_n == Some(n) {
+            return;
+        }
+        let k = self.sessions.len();
+        let align = self.codec.chunk_align().max(1);
+        self.segs.clear();
+        // smallest multiple of the alignment covering ceil(n/k) — trailing
+        // segments may be short or empty, which the codecs handle
+        let per = n.div_ceil(k).div_ceil(align).max(1).saturating_mul(align);
+        for i in 0..k {
+            let off = (i * per).min(n);
+            let end = ((i + 1) * per).min(n);
+            self.segs.push((off, end - off));
+        }
+        let max_len = self.segs.iter().map(|s| s.1).max().unwrap_or(0);
+        if self.acc.len() < max_len {
+            self.acc.resize(max_len, 0.0);
+        }
+        if self.error_feedback {
+            self.residual.clear();
+            self.residual.resize_with(k, || vec![0.0f32; n]);
+        }
+        if !self.recompress && self.pre.len() != k {
+            self.pre = (0..k).map(|_| (0..k).map(|_| Vec::new()).collect()).collect();
+        }
+        self.cur_n = Some(n);
+    }
+
+    fn run_recompress(
+        &mut self,
+        net: &SimNet,
+        grads: &[Vec<f32>],
+        mean: &mut Vec<f32>,
+        alpha: f32,
+    ) -> Result<Exchange> {
+        let k = grads.len();
+        let n = grads[0].len();
+        let mut ex = Exchange::default();
+        let mut stats = Recompress::default();
+        let ef = self.error_feedback;
+        let Self {
+            codec,
+            sessions,
+            segs,
+            inflight,
+            next,
+            finals,
+            acc,
+            staging,
+            dec,
+            residual,
+            hop_log,
+            ..
+        } = self;
+
+        // Hop-0 messages: every worker encodes its own segment (a first
+        // compression, not a recompression — not counted in the stats).
+        for w in 0..k {
+            let (off, len) = segs[w];
+            let res = if ef { Some(&mut residual[w][off..off + len]) } else { None };
+            encode_lane(
+                codec.as_ref(),
+                sessions[w].as_mut(),
+                res,
+                staging,
+                dec,
+                &grads[w][off..off + len],
+                &mut inflight[w],
+                None,
+            )?;
+        }
+
+        // Reduce-scatter: K−1 hops. At hop t worker i sends segment
+        // (i − t) mod K to worker i+1; the receiver decodes, adds its local
+        // contribution and re-encodes for the next hop (or emits the final
+        // frame on the last hop).
+        for t in 0..k - 1 {
+            let max_b = inflight.iter().map(Vec::len).max().unwrap_or(0);
+            let sum_b: u64 = inflight.iter().map(|m| m.len() as u64).sum();
+            let ht = net.hop_time(max_b);
+            for (i, m) in inflight.iter().enumerate() {
+                let lane = (i + k - t) % k;
+                ex.wire.record(m.len(), segs[lane].1);
+            }
+            hop_log.push(HopStat { phase: "reduce-scatter", bytes: sum_b, time: ht });
+            ex.time += ht;
+            ex.hops += 1;
+
+            for r in 0..k {
+                let src = (r + k - 1) % k;
+                let lane = (r + 2 * k - 1 - t) % k;
+                let (off, len) = segs[lane];
+                let a = &mut acc[..len];
+                a.fill(0.0);
+                codec.decode_add(&inflight[src], 1.0, a)?;
+                for (x, g) in a.iter_mut().zip(&grads[r][off..off + len]) {
+                    *x += *g;
+                }
+                let res = if ef { Some(&mut residual[r][off..off + len]) } else { None };
+                let out: &mut Vec<u8> =
+                    if t + 1 == k - 1 { &mut finals[lane] } else { &mut next[r] };
+                encode_lane(
+                    codec.as_ref(),
+                    sessions[r].as_mut(),
+                    res,
+                    staging,
+                    dec,
+                    a,
+                    out,
+                    Some(&mut stats),
+                )?;
+            }
+            std::mem::swap(inflight, next);
+        }
+
+        // Allgather: K−1 hops forwarding the completed frames verbatim.
+        let max_f = finals.iter().map(Vec::len).max().unwrap_or(0);
+        let sum_f: u64 = finals.iter().map(|m| m.len() as u64).sum();
+        for _ in 0..k - 1 {
+            let ht = net.hop_time(max_f);
+            hop_log.push(HopStat { phase: "allgather", bytes: sum_f, time: ht });
+            ex.time += ht;
+            ex.hops += 1;
+        }
+        for (j, f) in finals.iter().enumerate() {
+            ex.wire.record_fanout(f.len(), segs[j].1, k - 1);
+        }
+
+        // Every worker decodes the same final frames ⇒ identical bits on
+        // every replica; simulated once.
+        mean.clear();
+        mean.resize(n, 0.0);
+        for (j, f) in finals.iter().enumerate() {
+            let (off, len) = segs[j];
+            codec.decode_add(f, alpha, &mut mean[off..off + len])?;
+        }
+        ex.encode_coords = n;
+        ex.decode_coords = 2 * n;
+        ex.recompressions = stats.count;
+        ex.recompress_err_sq = stats.err_sq;
+        Ok(ex)
+    }
+
+    fn run_raw(
+        &mut self,
+        net: &SimNet,
+        grads: &[Vec<f32>],
+        mean: &mut Vec<f32>,
+        alpha: f32,
+    ) -> Result<Exchange> {
+        let k = grads.len();
+        let n = grads[0].len();
+        let mut ex = Exchange::default();
+        let Self { codec, sessions, segs, pre, hop_log, .. } = self;
+
+        // Pre-encode every segment in segment order: one session per worker
+        // over bucket-aligned boundaries consumes the RNG stream exactly as
+        // a whole-gradient encode would, so the levels match Algorithm 1.
+        for w in 0..k {
+            for j in 0..k {
+                let (off, len) = segs[j];
+                sessions[w].encode_into(&grads[w][off..off + len], &mut pre[w][j]);
+            }
+        }
+
+        // Store-and-forward around the ring: K−1 hops, each worker passing
+        // on one worker's full frame set.
+        let mut max_set = 0usize;
+        let mut total: u64 = 0;
+        for row in pre.iter() {
+            let b: usize = row.iter().map(Vec::len).sum();
+            max_set = max_set.max(b);
+            total += b as u64;
+        }
+        for _ in 0..k - 1 {
+            let ht = net.hop_time(max_set);
+            hop_log.push(HopStat { phase: "forward", bytes: total, time: ht });
+            ex.time += ht;
+            ex.hops += 1;
+        }
+        for row in pre.iter() {
+            for (j, m) in row.iter().enumerate() {
+                ex.wire.record_fanout(m.len(), segs[j].1, k - 1);
+            }
+        }
+
+        // Local reduction in worker order — the all-to-all accumulation
+        // order, hence the bit-identity property.
+        mean.clear();
+        mean.resize(n, 0.0);
+        for row in pre.iter() {
+            for (j, m) in row.iter().enumerate() {
+                let (off, len) = segs[j];
+                codec.decode_add(m, alpha, &mut mean[off..off + len])?;
+            }
+        }
+        ex.encode_coords = n;
+        ex.decode_coords = k * n;
+        Ok(ex)
+    }
+}
+
+impl CollectiveAlgo for RingAllreduce {
+    fn name(&self) -> String {
+        let mode = match (self.recompress, self.error_feedback) {
+            (true, true) => "ring+ef",
+            (true, false) => "ring",
+            (false, _) => "ring:raw",
+        };
+        format!("{mode} over {}", self.codec.name())
+    }
+
+    fn prepare(&mut self, n: usize) {
+        self.ensure_layout(n);
+        let hint = self
+            .segs
+            .iter()
+            .map(|&(_, len)| self.codec.encoded_size_hint(len))
+            .max()
+            .unwrap_or(0);
+        for buf in self.inflight.iter_mut().chain(&mut self.next).chain(&mut self.finals) {
+            if buf.capacity() < hint {
+                buf.reserve(hint - buf.len());
+            }
+        }
+    }
+
+    fn exchange(
+        &mut self,
+        net: &SimNet,
+        grads: &[Vec<f32>],
+        mean: &mut Vec<f32>,
+    ) -> Result<Exchange> {
+        let k = self.sessions.len();
+        assert_eq!(grads.len(), k, "gradient count != workers");
+        assert_eq!(net.workers, k, "net sized for a different worker count");
+        anyhow::ensure!(
+            self.codec.supports_chunked_encode(),
+            "{} sessions cannot encode ring segments (stateful fixed layout) — \
+             use the all-to-all collective for this codec",
+            self.codec.name()
+        );
+        let n = grads.first().map(Vec::len).unwrap_or(0);
+        assert!(grads.iter().all(|g| g.len() == n), "equal gradient sizes required");
+        self.ensure_layout(n);
+        self.hop_log.clear();
+        let alpha = self.alpha.unwrap_or(1.0 / k as f32);
+
+        if k == 1 {
+            // degenerate ring: own gradient through one encode/decode
+            let Self { codec, sessions, finals, staging, dec, residual, .. } = self;
+            let res = residual.first_mut().map(|r| &mut r[..]);
+            encode_lane(
+                codec.as_ref(),
+                sessions[0].as_mut(),
+                res,
+                staging,
+                dec,
+                &grads[0],
+                &mut finals[0],
+                None,
+            )?;
+            mean.clear();
+            mean.resize(n, 0.0);
+            codec.decode_add(&finals[0], alpha, mean)?;
+            return Ok(Exchange { encode_coords: n, decode_coords: n, ..Exchange::default() });
+        }
+        if self.recompress {
+            self.run_recompress(net, grads, mean, alpha)
+        } else {
+            self.run_raw(net, grads, mean, alpha)
+        }
+    }
+
+    fn hop_stats(&self) -> &[HopStat] {
+        &self.hop_log
+    }
+
+    fn bytes_per_worker(&self, k: usize, msg_bytes: usize) -> f64 {
+        let spec = CollectiveSpec::Ring {
+            recompress: self.recompress,
+            error_feedback: self.error_feedback,
+        };
+        model_bytes_per_worker(&spec, k, msg_bytes)
+    }
+
+    fn model_time(&self, net: &SimNet, msg_bytes: usize) -> VTime {
+        let spec = CollectiveSpec::Ring {
+            recompress: self.recompress,
+            error_feedback: self.error_feedback,
+        };
+        model_exchange_time(&spec, net, msg_bytes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical two-level reduce
+// ---------------------------------------------------------------------------
+
+/// Two-level reduce over contiguous groups of `group` workers (the paper's
+/// multi-GPU-per-node testbed): members encode full gradients and fan in to
+/// their group leader, leaders sum and ring-allreduce the group sums (with
+/// per-hop recompression), then the final frames fan out verbatim — every
+/// worker in every group decodes one global set of bytes.
+pub struct Hierarchical {
+    codec: Arc<dyn Codec>,
+    group: usize,
+    workers: usize,
+    sessions: Vec<Box<dyn EncodeSession>>,
+    ring: RingAllreduce,
+    msgs: Vec<Vec<u8>>,
+    sums: Vec<Vec<f32>>,
+    hop_log: Vec<HopStat>,
+}
+
+impl Hierarchical {
+    pub fn new(codec: Arc<dyn Codec>, workers: usize, seed: u64, group: usize) -> Self {
+        assert!(workers >= 1);
+        assert!(group >= 1);
+        let group = group.min(workers).max(1);
+        let leaders = workers.div_ceil(group);
+        let sessions: Vec<Box<dyn EncodeSession>> = (0..workers)
+            .map(|w| codec.session(Xoshiro256::stream(seed, w as u64)))
+            .collect();
+        // leader-ring sessions fork off a distinct stream family
+        let ring =
+            RingAllreduce::new(codec.clone(), leaders, seed ^ 0x9E3779B97F4A7C15, true, false);
+        Self {
+            codec,
+            group,
+            workers,
+            sessions,
+            ring,
+            msgs: (0..workers).map(|_| Vec::new()).collect(),
+            sums: Vec::new(),
+            hop_log: Vec::new(),
+        }
+    }
+
+    fn leaders(&self) -> usize {
+        self.workers.div_ceil(self.group)
+    }
+
+    /// Size of group `gi` (the last group may be short).
+    fn group_size(&self, gi: usize) -> usize {
+        let start = gi * self.group;
+        self.group.min(self.workers - start)
+    }
+}
+
+impl CollectiveAlgo for Hierarchical {
+    fn name(&self) -> String {
+        format!("hier:{} over {}", self.group, self.codec.name())
+    }
+
+    fn prepare(&mut self, n: usize) {
+        let cap = self.codec.encoded_size_hint(n);
+        for m in &mut self.msgs {
+            if m.capacity() < cap {
+                m.reserve(cap - m.len());
+            }
+        }
+        self.ring.prepare(n);
+    }
+
+    fn exchange(
+        &mut self,
+        net: &SimNet,
+        grads: &[Vec<f32>],
+        mean: &mut Vec<f32>,
+    ) -> Result<Exchange> {
+        let k = self.workers;
+        assert_eq!(grads.len(), k, "gradient count != workers");
+        assert_eq!(net.workers, k, "net sized for a different worker count");
+        anyhow::ensure!(
+            self.codec.supports_chunked_encode(),
+            "{} sessions cannot re-encode leader-ring segments (stateful fixed layout) — \
+             use the all-to-all collective for this codec",
+            self.codec.name()
+        );
+        let n = grads.first().map(Vec::len).unwrap_or(0);
+        assert!(grads.iter().all(|g| g.len() == n), "equal gradient sizes required");
+        let leaders = self.leaders();
+        self.hop_log.clear();
+        let mut ex = Exchange::default();
+
+        // Phase 1 — every worker encodes its full gradient (the leader's
+        // own message never crosses a link but still passes through
+        // encode/decode, as in Algorithm 1); members fan in to the leader.
+        par_encode_into(&mut self.sessions, &mut self.msgs, grads);
+
+        let mut fan_in = VTime::ZERO;
+        let mut fan_in_bytes: u64 = 0;
+        for gi in 0..leaders {
+            let start = gi * self.group;
+            let size = self.group_size(gi);
+            let mut bytes = 0usize;
+            for m in &self.msgs[start + 1..start + size] {
+                ex.wire.record(m.len(), n);
+                bytes += m.len();
+            }
+            if size > 1 {
+                fan_in = fan_in.max(net.fan_in_time(bytes));
+            }
+            fan_in_bytes += bytes as u64;
+        }
+        if leaders < k {
+            self.hop_log.push(HopStat { phase: "fan-in", bytes: fan_in_bytes, time: fan_in });
+            ex.time += fan_in;
+            ex.hops += 1;
+        }
+
+        // Leaders sum their group's decoded messages (worker order).
+        if self.sums.len() != leaders {
+            self.sums = (0..leaders).map(|_| Vec::new()).collect();
+        }
+        for gi in 0..leaders {
+            let start = gi * self.group;
+            let size = self.group_size(gi);
+            let sum = &mut self.sums[gi];
+            sum.clear();
+            sum.resize(n, 0.0);
+            for m in &self.msgs[start..start + size] {
+                self.codec.decode_add(m, 1.0, sum)?;
+            }
+        }
+
+        // Phase 2 — recompressing ring across the leaders; the final decode
+        // already averages over the *global* worker count.
+        self.ring.alpha = Some(1.0 / k as f32);
+        let leader_net = SimNet::new(leaders, net.link, net.topology);
+        let re = self.ring.exchange(&leader_net, &self.sums, mean)?;
+        ex.time += re.time;
+        ex.hops += re.hops;
+        ex.wire.add(&re.wire);
+        ex.recompressions += re.recompressions;
+        ex.recompress_err_sq += re.recompress_err_sq;
+        for h in self.ring.hop_stats() {
+            self.hop_log.push(*h);
+        }
+
+        // Phase 3 — leaders fan the final frames out to their members,
+        // verbatim: one global byte set, so every replica decodes identical
+        // values (already materialised in `mean` by the ring).
+        let final_bytes: usize = self.ring.final_frames().iter().map(Vec::len).sum();
+        let mut fan_out = VTime::ZERO;
+        let mut copies_total = 0usize;
+        for gi in 0..leaders {
+            let size = self.group_size(gi);
+            if size > 1 {
+                fan_out = fan_out.max(net.fan_out_time(final_bytes, size - 1));
+                copies_total += size - 1;
+            }
+        }
+        if copies_total > 0 {
+            for (j, f) in self.ring.final_frames().iter().enumerate() {
+                let seg_len = self.ring.segments()[j].1;
+                ex.wire.record_fanout(f.len(), seg_len, copies_total);
+            }
+            self.hop_log.push(HopStat {
+                phase: "fan-out",
+                bytes: (final_bytes * copies_total) as u64,
+                time: fan_out,
+            });
+            ex.time += fan_out;
+            ex.hops += 1;
+        }
+
+        // Leaders encode their own message plus the ring's shares; members
+        // decode the same final frames the leaders do.
+        ex.encode_coords = n + re.encode_coords;
+        ex.decode_coords = self.group * n + re.decode_coords;
+        Ok(ex)
+    }
+
+    fn hop_stats(&self) -> &[HopStat] {
+        &self.hop_log
+    }
+
+    fn bytes_per_worker(&self, k: usize, msg_bytes: usize) -> f64 {
+        model_bytes_per_worker(&CollectiveSpec::Hierarchical { group: self.group }, k, msg_bytes)
+    }
+
+    fn model_time(&self, net: &SimNet, msg_bytes: usize) -> VTime {
+        model_exchange_time(&CollectiveSpec::Hierarchical { group: self.group }, net, msg_bytes)
+    }
+}

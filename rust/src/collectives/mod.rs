@@ -13,6 +13,13 @@
 //! sequential pass and the merge order is fixed, so results are
 //! deterministic.
 
+pub mod algo;
+
+pub use algo::{
+    build, model_bytes_per_worker, model_exchange_time, AllToAll, CollectiveAlgo, Exchange,
+    Hierarchical, HopStat, RingAllreduce,
+};
+
 use anyhow::Result;
 
 use crate::simnet::{SimNet, VTime};

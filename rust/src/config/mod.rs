@@ -65,6 +65,86 @@ impl CodecOptions {
     }
 }
 
+/// Which collective exchange algorithm moves the encoded gradients —
+/// parsed from the CLI like
+/// [`CompressorSpec`](crate::coordinator::CompressorSpec), built into a
+/// [`CollectiveAlgo`](crate::collectives::CollectiveAlgo) by
+/// [`crate::collectives::build`]. The topology × codec matrix (which specs
+/// pair sensibly with which algorithms) is documented in the README's
+/// "Collective algorithms" section.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum CollectiveSpec {
+    /// Algorithm 1's all-to-all broadcast: every worker ships its full
+    /// encoded gradient to all K−1 peers (CNTK MPI path). Traffic grows as
+    /// (K−1)·|msg| per worker.
+    #[default]
+    AllToAll,
+    /// Ring allreduce over bucket-aligned gradient segments. With
+    /// `recompress`, each reduce-scatter hop decodes the incoming segment,
+    /// adds the local contribution and re-encodes the partial sum
+    /// (2·(K−1)/K·|msg| per worker); `error_feedback` carries an ECQ-style
+    /// residual across hops *and steps* to compensate recompression error.
+    /// Without `recompress`, the ring is pure transport: the original
+    /// encodings circulate unchanged and the reduction happens locally in
+    /// worker order — bit-identical to the all-to-all mean, at all-to-all
+    /// traffic.
+    Ring { recompress: bool, error_feedback: bool },
+    /// Hierarchical two-level reduce matching the paper's
+    /// multi-GPU-per-node testbed: intra-group fan-in to a leader (which
+    /// re-encodes the group sum), a recompressing ring across leaders, then
+    /// an intra-group fan-out of the final frames (forwarded verbatim, so
+    /// every worker decodes identical bytes).
+    Hierarchical { group: usize },
+}
+
+impl CollectiveSpec {
+    pub fn ring() -> Self {
+        CollectiveSpec::Ring { recompress: true, error_feedback: false }
+    }
+
+    pub fn ring_ef() -> Self {
+        CollectiveSpec::Ring { recompress: true, error_feedback: true }
+    }
+
+    pub fn hierarchical(group: usize) -> Self {
+        CollectiveSpec::Hierarchical { group }
+    }
+
+    /// `a2a` / `ring` / `ring:ef` / `ring:raw` / `hier[:G]`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.to_lowercase();
+        match s.as_str() {
+            "a2a" | "alltoall" | "all-to-all" | "broadcast" => {
+                return Ok(CollectiveSpec::AllToAll)
+            }
+            "ring" => return Ok(Self::ring()),
+            "ring:ef" => return Ok(Self::ring_ef()),
+            "ring:raw" => {
+                return Ok(CollectiveSpec::Ring { recompress: false, error_feedback: false })
+            }
+            "hier" | "hierarchical" => return Ok(Self::hierarchical(4)),
+            _ => {}
+        }
+        if let Some(g) = s.strip_prefix("hier:") {
+            let group: usize =
+                g.parse().map_err(|_| anyhow::anyhow!("bad hier group '{g}'"))?;
+            anyhow::ensure!(group >= 2, "hier group must be ≥ 2, got {group}");
+            return Ok(Self::hierarchical(group));
+        }
+        anyhow::bail!("unknown collective '{s}' (a2a|ring|ring:ef|ring:raw|hier[:G])")
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            CollectiveSpec::AllToAll => "a2a".into(),
+            CollectiveSpec::Ring { recompress: false, .. } => "ring:raw".into(),
+            CollectiveSpec::Ring { error_feedback: true, .. } => "ring:ef".into(),
+            CollectiveSpec::Ring { .. } => "ring".into(),
+            CollectiveSpec::Hierarchical { group } => format!("hier:{group}"),
+        }
+    }
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
@@ -157,6 +237,30 @@ mod tests {
         let a = parse("--quiet");
         assert!(a.flag("quiet"));
         assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn collective_spec_parse_and_label() {
+        assert_eq!(CollectiveSpec::parse("a2a").unwrap(), CollectiveSpec::AllToAll);
+        assert_eq!(CollectiveSpec::parse("broadcast").unwrap(), CollectiveSpec::AllToAll);
+        assert_eq!(CollectiveSpec::parse("ring").unwrap(), CollectiveSpec::ring());
+        assert_eq!(CollectiveSpec::parse("RING:EF").unwrap(), CollectiveSpec::ring_ef());
+        assert_eq!(
+            CollectiveSpec::parse("ring:raw").unwrap(),
+            CollectiveSpec::Ring { recompress: false, error_feedback: false }
+        );
+        assert_eq!(
+            CollectiveSpec::parse("hier").unwrap(),
+            CollectiveSpec::Hierarchical { group: 4 }
+        );
+        assert_eq!(CollectiveSpec::parse("hier:8").unwrap(), CollectiveSpec::hierarchical(8));
+        assert!(CollectiveSpec::parse("hier:1").is_err());
+        assert!(CollectiveSpec::parse("hier:x").is_err());
+        assert!(CollectiveSpec::parse("mesh").is_err());
+        assert_eq!(CollectiveSpec::default(), CollectiveSpec::AllToAll);
+        for s in ["a2a", "ring", "ring:ef", "ring:raw", "hier:4"] {
+            assert_eq!(CollectiveSpec::parse(s).unwrap().label(), s, "label round-trip");
+        }
     }
 
     #[test]

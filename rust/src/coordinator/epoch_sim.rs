@@ -9,6 +9,8 @@
 //! model. The fp32 arm rides the dense transport; compressed arms use the
 //! all-to-all broadcast of variable-size messages, as in CNTK's MPI path.
 
+use crate::collectives;
+use crate::config::CollectiveSpec;
 use crate::coordinator::exchange::PlanCodec;
 use crate::coordinator::CompressorSpec;
 use crate::metrics::Breakdown;
@@ -22,6 +24,12 @@ use crate::util::rng::{self, Xoshiro256};
 #[derive(Debug, Clone)]
 pub struct EpochArm {
     pub compressor: CompressorSpec,
+    /// Which collective algorithm carries the encoded messages — transfer
+    /// time and byte accounting route through its
+    /// [`collectives::CollectiveAlgo::model_time`] /
+    /// [`collectives::CollectiveAlgo::bytes_per_worker`], so dense-vs-QSGD
+    /// crossover points are algorithm-aware.
+    pub collective: CollectiveSpec,
     /// Use the dense ring-allreduce transport (only valid for Fp32 — the
     /// entropy-coded messages are variable-length).
     pub dense_transport: bool,
@@ -32,18 +40,27 @@ impl EpochArm {
     /// all-to-all broadcast of dense buffers — this, not an optimised ring
     /// allreduce, is what makes 16-GPU AlexNet >80% communication in Fig. 2).
     pub fn fp32() -> Self {
-        Self { compressor: CompressorSpec::Fp32, dense_transport: false }
+        Self {
+            compressor: CompressorSpec::Fp32,
+            collective: CollectiveSpec::AllToAll,
+            dense_transport: false,
+        }
     }
 
     /// Ablation: fp32 over a bandwidth-optimal ring allreduce (what a
     /// modern NCCL-style stack would give the baseline).
     pub fn fp32_allreduce() -> Self {
-        Self { compressor: CompressorSpec::Fp32, dense_transport: true }
+        Self {
+            compressor: CompressorSpec::Fp32,
+            collective: CollectiveSpec::AllToAll,
+            dense_transport: true,
+        }
     }
 
     pub fn qsgd(bits: u32, bucket: usize) -> Self {
         Self {
             compressor: CompressorSpec::Qsgd { bits, bucket, norm: Norm::Max, regime: None },
+            collective: CollectiveSpec::AllToAll,
             dense_transport: false,
         }
     }
@@ -53,12 +70,24 @@ impl EpochArm {
     pub fn nuqsgd(bits: u32, bucket: usize) -> Self {
         Self {
             compressor: CompressorSpec::Nuqsgd { bits, bucket, norm: Norm::Max, regime: None },
+            collective: CollectiveSpec::AllToAll,
             dense_transport: false,
         }
     }
 
     pub fn onebit() -> Self {
-        Self { compressor: CompressorSpec::OneBit { column: 512 }, dense_transport: false }
+        Self {
+            compressor: CompressorSpec::OneBit { column: 512 },
+            collective: CollectiveSpec::AllToAll,
+            dense_transport: false,
+        }
+    }
+
+    /// Same arm over a different collective (`.with_collective(ring())`
+    /// etc.) — the topology × codec matrix in one builder.
+    pub fn with_collective(mut self, collective: CollectiveSpec) -> Self {
+        self.collective = collective;
+        self
     }
 }
 
@@ -67,9 +96,15 @@ impl EpochArm {
 pub struct EpochSim {
     pub network: String,
     pub arm: String,
+    /// Collective the transfer/byte models were taken from.
+    pub collective: String,
     pub gpus: usize,
     pub breakdown: Breakdown,
     pub message_bytes: usize,
+    /// Expected wire bytes per worker per step under the arm's collective
+    /// (all-to-all: (K−1)·|msg|; recompressing ring: 2(K−1)/K·|msg|; …) —
+    /// the per-algorithm traffic the old K·|msg| accounting ignored.
+    pub bytes_per_worker: f64,
     pub steps: usize,
     pub quantized_fraction: f64,
 }
@@ -155,11 +190,23 @@ pub fn simulate_epoch(
     } else {
         (cost.encode_s(n), cost.decode_s(n, gpus))
     };
-    let step_transfer = if arm.dense_transport {
+    // Transfer time and per-worker traffic route through the arm's
+    // collective traffic model (pure functions — no sessions are built at
+    // epoch scale; the all-to-all model reproduces the broadcast closed
+    // form exactly, so legacy arms are unchanged).
+    let (step_transfer, bytes_per_worker) = if arm.dense_transport {
         let dense = SimNet { topology: crate::simnet::Topology::RingAllReduce, ..simnet.clone() };
-        dense.exchange_time(&vec![msg_bytes; gpus]).secs()
+        let bpw = if gpus > 1 {
+            2.0 * (gpus - 1) as f64 * msg_bytes as f64 / gpus as f64
+        } else {
+            0.0
+        };
+        (dense.exchange_time(&vec![msg_bytes; gpus]).secs(), bpw)
     } else {
-        simnet.exchange_time(&vec![msg_bytes; gpus]).secs()
+        (
+            collectives::model_exchange_time(&arm.collective, simnet, msg_bytes).secs(),
+            collectives::model_bytes_per_worker(&arm.collective, gpus, msg_bytes),
+        )
     };
 
     let breakdown = Breakdown {
@@ -173,9 +220,11 @@ pub fn simulate_epoch(
     EpochSim {
         network: net.name.to_string(),
         arm: arm.compressor.label(),
+        collective: arm.collective.label(),
         gpus,
         breakdown,
         message_bytes: msg_bytes,
+        bytes_per_worker,
         steps,
         quantized_fraction: qfrac,
     }
@@ -241,6 +290,35 @@ mod tests {
             nu4.message_bytes,
             q4.message_bytes
         );
+    }
+
+    #[test]
+    fn traffic_model_is_collective_aware() {
+        let net = zoo::alexnet();
+        let arm = EpochArm::qsgd(4, 512);
+        let a2a = sim(&net, 16, &arm);
+        let ring = sim(&net, 16, &arm.clone().with_collective(CollectiveSpec::ring()));
+        let hier = sim(&net, 16, &arm.clone().with_collective(CollectiveSpec::hierarchical(4)));
+        // the measured message is identical — only the exchange differs
+        assert_eq!(a2a.message_bytes, ring.message_bytes);
+        assert_eq!(a2a.message_bytes, hier.message_bytes);
+        // all-to-all: exactly (K−1)·|msg| per worker
+        assert!(
+            (a2a.bytes_per_worker - 15.0 * a2a.message_bytes as f64).abs() < 1e-6,
+            "a2a bpw {}",
+            a2a.bytes_per_worker
+        );
+        // recompressing ring: 2(K−1)/K·|msg| ≈ 1.875·|msg| — far below a2a
+        assert!(
+            ring.bytes_per_worker * 4.0 < a2a.bytes_per_worker,
+            "ring {} vs a2a {}",
+            ring.bytes_per_worker,
+            a2a.bytes_per_worker
+        );
+        assert!(hier.bytes_per_worker < a2a.bytes_per_worker);
+        // and the transfer-time model follows the bytes
+        assert!(ring.breakdown.transfer.secs() < a2a.breakdown.transfer.secs());
+        assert_eq!(ring.collective, "ring");
     }
 
     #[test]

@@ -16,7 +16,6 @@
 use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
-use rand_core::RngCore;
 
 use crate::config::CodecOptions;
 use crate::coordinator::CompressorSpec;
@@ -54,10 +53,11 @@ impl PlanCodec {
 impl Codec for PlanCodec {
     fn session(&self, mut rng: Xoshiro256) -> Box<dyn EncodeSession> {
         // Fork one independent RNG stream per quantized segment off the
-        // worker's stream, so segment sessions stay deterministic in
-        // (seed, segment index) regardless of how often each encodes.
+        // worker's stream ([`Xoshiro256::fork`]), so segment sessions stay
+        // deterministic in (seed, segment index) regardless of how often
+        // each encodes.
         let sessions: Vec<Box<dyn EncodeSession>> = (0..self.quantized_segments())
-            .map(|_| self.inner.session(Xoshiro256::from_u64(rng.next_u64())))
+            .map(|_| self.inner.session(rng.fork()))
             .collect();
         Box::new(PlanSession { plan: self.plan.clone(), sessions, scratch: Vec::new() })
     }

@@ -217,6 +217,14 @@ impl<C: Codec> Codec for WithOptions<C> {
         self.inner.wire_format()
     }
 
+    fn chunk_align(&self) -> usize {
+        self.inner.chunk_align()
+    }
+
+    fn supports_chunked_encode(&self) -> bool {
+        self.inner.supports_chunked_encode()
+    }
+
     fn name(&self) -> String {
         self.inner.name()
     }
@@ -271,6 +279,12 @@ mod tests {
             assert_eq!(back.len(), grad.len(), "{}", spec.label());
             assert!(codec.decode_threads() >= 1);
         }
+        // the segmented collectives align ring chunks to this; the options
+        // adapter must forward it rather than fall back to the default
+        assert_eq!(CompressorSpec::qsgd_4bit().codec().chunk_align(), 512);
+        assert_eq!(CompressorSpec::OneBit { column: 128 }.codec().chunk_align(), 128);
+        assert_eq!(CompressorSpec::TernGrad { bucket: 96 }.codec().chunk_align(), 96);
+        assert_eq!(CompressorSpec::Fp32.codec().chunk_align(), 1);
     }
 
     #[test]

@@ -11,16 +11,22 @@
 //!
 //! Gradient *computation* is time-multiplexed on the driver thread (PJRT
 //! handles are !Send); cluster parallelism is accounted in *virtual* time.
-//! The K Encode jobs, however, are pure Rust with per-worker
-//! [`EncodeSession`] state, so they run concurrently on the scoped pool
-//! ([`crate::util::par`]) into per-worker reusable wire buffers —
-//! bit-identical bytes to a sequential pass, since each session owns its
-//! `Xoshiro256` stream. Because decoding is deterministic, each message is
-//! decoded once through the one shared [`PlanCodec`] (concurrently, merged
-//! in fixed order — [`crate::collectives::par_decode_mean`]) and the
-//! decoded gradient is shared — mathematically identical to every worker
-//! decoding its own copy, which per-step parameter-consistency checks
-//! enforce.
+//! The whole encode → exchange → decode pipeline is delegated to a
+//! pluggable [`CollectiveAlgo`](crate::collectives::CollectiveAlgo)
+//! selected by [`SyncConfig::collective`]:
+//!
+//! * [`CollectiveSpec::AllToAll`] (the default) reproduces Algorithm 1
+//!   exactly as before the subsystem existed — K parallel per-worker
+//!   [`crate::quant::EncodeSession`] jobs, one broadcast, the grouped
+//!   parallel decode-mean through one shared [`PlanCodec`] — byte- and
+//!   bit-identical for the same seeds.
+//! * `Ring` / `Hierarchical` run the segmented algorithms over the *plain*
+//!   spec codec (bucket-aligned segments; the [`QuantPlan`] skip rule
+//!   applies to the all-to-all path only, where whole-model messages
+//!   exist), re-encoding partial sums at aggregation hops.
+//!
+//! Every algorithm yields the same mean bits on every replica, so the
+//! per-step parameter-consistency checks hold unchanged.
 
 use std::sync::Arc;
 
@@ -30,13 +36,13 @@ use super::exchange::PlanCodec;
 use super::sources::GradSource;
 use super::CompressorSpec;
 use crate::collectives;
+use crate::config::CollectiveSpec;
 use crate::metrics::{Breakdown, Curve, WireStats};
 use crate::models::layout::QuantPlan;
 use crate::models::CostModel;
 use crate::optim::Sgd;
-use crate::quant::{Codec, EncodeSession};
+use crate::quant::Codec;
 use crate::simnet::{SimNet, VTime};
-use crate::util::par;
 use crate::util::rng::{self, Xoshiro256};
 
 /// Configuration of one synchronous training run.
@@ -44,7 +50,12 @@ pub struct SyncConfig {
     pub workers: usize,
     pub steps: usize,
     pub compressor: CompressorSpec,
+    /// Which collective algorithm moves the encoded gradients (all-to-all
+    /// broadcast, recompressing ring, hierarchical two-level reduce).
+    pub collective: CollectiveSpec,
     /// Quantization plan (tensor-aware skip rule); `None` ⇒ quantize all.
+    /// Applies to the all-to-all path; the segmented collectives run the
+    /// plain spec codec over bucket-aligned segments.
     pub plan: Option<QuantPlan>,
     pub lr: f32,
     pub momentum: f32,
@@ -69,6 +80,7 @@ impl SyncConfig {
             workers,
             steps,
             compressor,
+            collective: CollectiveSpec::AllToAll,
             plan: None,
             lr,
             momentum: 0.0,
@@ -92,6 +104,17 @@ pub struct RunResult {
     pub wire: WireStats,
     pub params: Vec<f32>,
     pub label: String,
+    /// Which collective moved the bytes (`a2a`, `ring`, `ring:ef`, …).
+    pub collective: String,
+    /// Synchronous hops charged over the whole run.
+    pub hops: usize,
+    /// Partial-sum re-encode events over the whole run (0 for all-to-all).
+    pub recompressions: u64,
+    /// Cumulative recompression quantization error over the run
+    /// (Σ‖decode(e) − encoded input‖² across all partial-sum re-encodes).
+    /// `ring:ef` does not shrink this per-step number — its residual makes
+    /// the errors telescope so the *bias* cancels across steps.
+    pub recompress_err_sq: f64,
 }
 
 impl RunResult {
@@ -105,22 +128,12 @@ impl RunResult {
     }
 }
 
-/// One simulated worker's state. The encode session owns the worker's RNG
-/// stream and all compression scratch (plus any error-feedback residuals).
-/// Decoding needs no per-worker state at all — the trainer shares one
-/// [`PlanCodec`] across all replicas.
+/// One simulated worker's state. Encode sessions (and any error-feedback
+/// residuals) live inside the collective algorithm; decoding shares one
+/// codec across all replicas.
 struct Worker {
     params: Vec<f32>,
     opt: Sgd,
-    session: Box<dyn EncodeSession>,
-}
-
-/// One worker's encode job for the scoped pool: its session paired with
-/// its reusable wire buffer (the buffers live in the trainer so the
-/// broadcast can borrow them as one contiguous slice).
-struct EncodeJob<'a> {
-    session: &'a mut dyn EncodeSession,
-    out: &'a mut Vec<u8>,
 }
 
 /// The synchronous trainer.
@@ -141,13 +154,34 @@ impl SyncTrainer {
             .clone()
             .unwrap_or_else(|| QuantPlan::build(&one_tensor_layout(n), 0));
         anyhow::ensure!(plan.total_len() == n, "plan does not cover the gradient");
+        // A plan with skip segments only has meaning on the all-to-all path
+        // (whole-model messages). Refuse loudly rather than silently
+        // quantizing tensors the caller asked to keep full-precision.
+        if !matches!(cfg.collective, CollectiveSpec::AllToAll) {
+            if let Some(p) = &cfg.plan {
+                anyhow::ensure!(
+                    p.quantized_fraction() >= 1.0 - 1e-9,
+                    "the QuantPlan skip rule is honoured by the all-to-all collective only; \
+                     '{}' would quantize the skip segments — use a2a or drop the plan",
+                    cfg.collective.label()
+                );
+            }
+        }
 
         // One shared codec (decode side, `&self` only) serves every worker;
-        // each worker gets its own encode session seeded from a per-worker
-        // RNG stream, so parallel encode stays bit-identical to a
-        // sequential worker loop.
-        let codec = Arc::new(PlanCodec::from_spec(plan, &cfg.compressor));
-        let msg_cap = codec.encoded_size_hint(n);
+        // per-worker encode sessions (seeded `(seed ^ 0xF00D, w)` streams,
+        // exactly as the pre-subsystem trainer seeded them) live inside the
+        // collective algorithm, so parallel encode stays bit-identical to a
+        // sequential worker loop. The all-to-all arm honours the QuantPlan
+        // through the [`PlanCodec`]; the segmented arms run the plain spec
+        // codec over bucket-aligned segments.
+        let codec: Arc<dyn Codec> = match cfg.collective {
+            CollectiveSpec::AllToAll => Arc::new(PlanCodec::from_spec(plan, &cfg.compressor)),
+            _ => cfg.compressor.codec(),
+        };
+        let mut algo =
+            collectives::build(&cfg.collective, codec, cfg.workers, cfg.seed ^ 0xF00D);
+        algo.prepare(n);
 
         // Identical init on every worker (same seed), per-worker RNG streams
         // for quantization randomness.
@@ -157,7 +191,7 @@ impl SyncTrainer {
             .map(|x| x * cfg.init_scale)
             .collect();
         let mut workers: Vec<Worker> = (0..cfg.workers)
-            .map(|w| Worker {
+            .map(|_| Worker {
                 params: init.clone(),
                 opt: Sgd::new(
                     crate::optim::LrSchedule::Const(cfg.lr),
@@ -165,18 +199,17 @@ impl SyncTrainer {
                     0.0,
                     n,
                 ),
-                session: codec.session(Xoshiro256::stream(cfg.seed ^ 0xF00D, w as u64)),
             })
             .collect();
-        // Per-worker wire buffers, reused every step (sized once from the
-        // codec's estimate, so even step one stays off the heap).
-        let mut msgs: Vec<Vec<u8>> =
-            (0..cfg.workers).map(|_| Vec::with_capacity(msg_cap)).collect();
 
         let mut loss_curve = Curve::default();
         let mut eval_curve = Curve::default();
         let mut breakdown = Breakdown::default();
         let mut wire = WireStats::default();
+        let mut mean_grad: Vec<f32> = Vec::new();
+        let mut hops = 0usize;
+        let mut recompressions = 0u64;
+        let mut recompress_err_sq = 0.0f64;
 
         for step in 0..cfg.steps {
             // 1. local gradients (virtual: all workers compute in parallel)
@@ -189,45 +222,19 @@ impl SyncTrainer {
             }
             breakdown.compute += VTime(cfg.cost.step_compute_s(source.flops_fwd_per_step(), 1));
 
-            // 2. encode — K independent fused quantize+code jobs on the
-            // scoped pool (wall-clock parallelism; virtual time still
-            // charges one overlapped encode pass). Per-session RNG streams
-            // keep the bytes bit-identical to a sequential loop, and each
-            // session encodes into its worker's reusable wire buffer —
-            // zero steady-state allocations on the encode path.
-            let mut jobs: Vec<EncodeJob> = workers
-                .iter_mut()
-                .zip(msgs.iter_mut())
-                .map(|(w, out)| EncodeJob { session: w.session.as_mut(), out })
-                .collect();
-            par::par_map_mut(&mut jobs, |w, job| job.session.encode_into(&grads[w], job.out));
-            drop(jobs);
-            for msg in &msgs {
-                wire.record(msg.len(), n);
-            }
-            breakdown.encode += VTime(cfg.cost.encode_s(n));
-
-            // 3. exchange (messages are borrowed — the broadcast charges
-            // virtual transfer time, senders keep their buffers)
-            let bc = collectives::all_broadcast(&cfg.net, &msgs);
-            breakdown.transfer += bc.time;
-
-            // 4. decode + average (decode each message once; see module doc).
-            // Fused decode-into-accumulator — O(nnz) per sparse message —
-            // with message groups decoded concurrently, each message's
-            // buckets decoded in parallel under the leftover budget of the
-            // codec's thread allowance (directory frames), and partials
-            // merged in fixed order, so the mean is deterministic at any
-            // thread count. One shared codec decodes for all replicas.
-            let alpha = 1.0 / cfg.workers as f32;
-            let mean_grad = collectives::par_decode_mean(
-                bc.messages,
-                n,
-                alpha,
-                codec.decode_threads(),
-                |msg, a, acc, t| codec.decode_add_threads(msg, a, acc, t),
-            )?;
-            breakdown.decode += VTime(cfg.cost.decode_s(n, cfg.workers));
+            // 2.–4. encode → exchange → decode through the collective
+            // algorithm: real wire bytes move (reused per-worker buffers,
+            // per-session RNG streams), per-hop α–β time is charged, and
+            // the mean comes back bit-identical on every replica at any
+            // thread budget.
+            let x = algo.exchange(&cfg.net, &grads, &mut mean_grad)?;
+            wire.add(&x.wire);
+            hops += x.hops;
+            recompressions += x.recompressions;
+            recompress_err_sq += x.recompress_err_sq;
+            breakdown.encode += VTime(cfg.cost.encode_s(x.encode_coords));
+            breakdown.transfer += x.time;
+            breakdown.decode += VTime(cfg.cost.decode_s(x.decode_coords, 1));
 
             // 5. apply identical update on every worker
             for w in workers.iter_mut() {
@@ -256,6 +263,10 @@ impl SyncTrainer {
             wire,
             params: workers.swap_remove(0).params,
             label: cfg.compressor.label(),
+            collective: cfg.collective.label(),
+            hops,
+            recompressions,
+            recompress_err_sq,
         })
     }
 }
@@ -346,6 +357,81 @@ mod tests {
             let last = r.loss.tail_mean(3);
             assert!(last < first * 0.5, "{}: {first} -> {last}", spec.label());
         }
+    }
+
+    #[test]
+    fn segmented_collectives_converge_and_stay_consistent() {
+        // Ring (with and without error feedback) and hierarchical reduce
+        // through the full trainer: loss falls, the replica-consistency
+        // invariant holds (checked inside run), and the recompression
+        // telemetry is populated.
+        for col in [
+            CollectiveSpec::ring(),
+            CollectiveSpec::ring_ef(),
+            CollectiveSpec::hierarchical(2),
+        ] {
+            let p = QuadraticProblem::generate(256, 128, 1e-3, 0.05, 7);
+            let mut src = ConvexSource::new(p, 8, 3);
+            let mut cfg = SyncConfig::quick(4, 150, CompressorSpec::qsgd_4bit(), 0.05);
+            cfg.collective = col.clone();
+            let r = SyncTrainer::new(cfg).run(&mut src).unwrap();
+            let first = r.loss.points[0].1;
+            let last = r.loss.tail_mean(3);
+            assert!(last < first * 0.5, "{}: {first} -> {last}", col.label());
+            assert!(r.hops > 0, "{}", col.label());
+            assert!(r.recompressions > 0, "{}", col.label());
+            assert!(r.recompress_err_sq > 0.0, "{}", col.label());
+            assert_eq!(r.collective, col.label());
+        }
+    }
+
+    #[test]
+    fn ring_moves_fewer_wire_bytes_than_all_to_all() {
+        // The bandwidth argument end-to-end: same compressor, same steps,
+        // ring traffic (2(K−1)·|msg| cluster-wide) far below all-to-all
+        // (K(K−1)·|msg|) at K=8.
+        let run = |col: CollectiveSpec| {
+            let p = QuadraticProblem::generate(256, 128, 1e-3, 0.05, 7);
+            let mut src = ConvexSource::new(p, 8, 3);
+            let mut cfg = SyncConfig::quick(8, 10, CompressorSpec::qsgd_4bit(), 0.05);
+            cfg.collective = col;
+            SyncTrainer::new(cfg).run(&mut src).unwrap()
+        };
+        let a2a = run(CollectiveSpec::AllToAll);
+        let ring = run(CollectiveSpec::ring());
+        assert!(
+            ring.wire.payload_bytes * 2 < a2a.wire.payload_bytes,
+            "ring {} vs a2a {}",
+            ring.wire.payload_bytes,
+            a2a.wire.payload_bytes
+        );
+        // a2a reports no recompression
+        assert_eq!(a2a.recompressions, 0);
+        assert_eq!(a2a.recompress_err_sq, 0.0);
+    }
+
+    #[test]
+    fn segmented_collectives_reject_skip_plans_and_fixed_layout_codecs() {
+        use crate::models::layout::ParamLayout;
+        // skip-bearing plan + ring ⇒ loud error, not silent quantization of
+        // the segments the caller asked to keep full-precision
+        let p = QuadraticProblem::generate(256, 128, 1e-3, 0.05, 7);
+        let mut src = ConvexSource::new(p, 8, 3);
+        let layout = ParamLayout::synthetic(&[("a", vec![100]), ("b", vec![156])]);
+        let plan = QuantPlan::build(&layout, 128); // "a" (100 < 128) skipped
+        assert!(plan.quantized_fraction() < 1.0);
+        let mut cfg = SyncConfig::quick(4, 5, CompressorSpec::qsgd_4bit(), 0.05);
+        cfg.plan = Some(plan);
+        cfg.collective = CollectiveSpec::ring();
+        assert!(SyncTrainer::new(cfg).run(&mut src).is_err());
+        // 1BitSGD's session pins one gradient layout ⇒ segmented
+        // collectives refuse up front instead of panicking mid-hop
+        let p2 = QuadraticProblem::generate(256, 128, 1e-3, 0.05, 7);
+        let mut src2 = ConvexSource::new(p2, 8, 3);
+        let mut cfg2 = SyncConfig::quick(4, 5, CompressorSpec::OneBit { column: 32 }, 0.05);
+        cfg2.collective = CollectiveSpec::ring();
+        let err = SyncTrainer::new(cfg2).run(&mut src2).unwrap_err();
+        assert!(err.to_string().contains("all-to-all"), "{err:#}");
     }
 
     #[test]

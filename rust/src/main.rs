@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use qsgd::config::Args;
+use qsgd::config::{Args, CollectiveSpec};
 use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm};
 use qsgd::coordinator::sources::{ConvexSource, GradSource, RuntimeSource, Workload};
 use qsgd::coordinator::sync::{SyncConfig, SyncTrainer};
@@ -50,9 +50,10 @@ fn print_help() {
          USAGE: qsgd <info|train|simulate|svrg|async|validate> [--flags]\n\n\
          train    --model <logreg|mlp|tfm|quadratic|logreg-native> \\\n\
                   --compressor <fp32|qsgdN[:bucket]|nuqsgdN[:bucket]|1bit|terngrad> \\\n\
+                  --collective <a2a|ring|ring:ef|ring:raw|hier[:G]> \\\n\
                   --workers K --steps N --lr F --seed S [--eval-every N]\n\
          simulate --network <alexnet|vgg19|resnet50|resnet152|resnet110|bn-inception|lstm>\n\
-                  --gpus K [--preset k80|10gbe|nvlink]\n\
+                  --gpus K [--preset k80|10gbe|nvlink] [--collective <...>]\n\
          svrg     --processors K --epochs P [--exact]\n\
          async    --workers K --updates N --compressor <...>\n\
          validate [--n N] [--trials T]"
@@ -80,22 +81,25 @@ fn cmd_info(_args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let model = args.string("model", "mlp");
     let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
+    let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
     let workers = args.usize("workers", 4);
     let steps = args.usize("steps", 200);
     let lr = args.f32("lr", 0.1);
     let seed = args.u64("seed", 0);
 
     let mut cfg = SyncConfig::quick(workers, steps, spec, lr);
+    cfg.collective = collective;
     cfg.seed = seed;
     cfg.eval_every = args.usize("eval-every", 25);
     cfg.log_every = args.usize("log-every", 10);
 
     let run = |cfg: SyncConfig, src: &mut dyn GradSource| -> Result<()> {
         let label = cfg.compressor.label();
+        let col = cfg.collective.label();
         let db = cfg.double_buffer;
         let mut trainer = SyncTrainer::new(cfg);
         let res = trainer.run(src)?;
-        println!("== {} on {} ==", label, src.name());
+        println!("== {} via {} on {} ==", label, col, src.name());
         println!("loss: {}", res.loss.sparkline(12));
         if !res.eval.points.is_empty() {
             println!("eval: {}", res.eval.sparkline(12));
@@ -109,6 +113,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             res.wire.compression_ratio(),
             res.wire.bits_per_coordinate(),
         );
+        if res.recompressions > 0 {
+            println!(
+                "hops: {}, recompressions: {}, cumulative recompression err²: {:.3e}",
+                res.hops, res.recompressions, res.recompress_err_sq
+            );
+        }
         Ok(())
     };
 
@@ -168,15 +178,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         args.string("preset", "k80").parse().map_err(|e: String| anyhow::anyhow!(e))?;
     let simnet = SimNet::preset(gpus, preset);
     let cost = CostModel::k80();
+    let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
 
-    let mut table = Table::new(&["arm", "epoch", "comm%", "msg", "speedup"]);
+    let mut table = Table::new(&["arm", "via", "epoch", "comm%", "msg", "B/wkr", "speedup"]);
     let fp = simulate_epoch(&net, gpus, &EpochArm::fp32(), &simnet, &cost, 2, 0);
     let arms = [
         EpochArm::fp32(),
-        EpochArm::qsgd(2, 64),
-        EpochArm::qsgd(4, 512),
-        EpochArm::qsgd(8, 512),
-        EpochArm::onebit(),
+        EpochArm::qsgd(2, 64).with_collective(collective.clone()),
+        EpochArm::qsgd(4, 512).with_collective(collective.clone()),
+        EpochArm::qsgd(8, 512).with_collective(collective.clone()),
+        EpochArm::onebit().with_collective(collective.clone()),
         EpochArm::fp32_allreduce(),
     ];
     for arm in arms {
@@ -185,9 +196,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             if arm.dense_transport { format!("{} (ring)", r.arm) } else { r.arm.clone() };
         table.row(&[
             label,
+            r.collective.clone(),
             stats::fmt_duration(r.epoch_time()),
             format!("{:.0}%", r.breakdown.comm_fraction() * 100.0),
             stats::fmt_bytes(r.message_bytes as f64),
+            stats::fmt_bytes(r.bytes_per_worker),
             format!("{:.2}x", fp.epoch_time() / r.epoch_time()),
         ]);
     }

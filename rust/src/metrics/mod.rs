@@ -73,6 +73,16 @@ impl WireStats {
         self.fp32_equiv_bytes += n_coords as u64 * 4;
     }
 
+    /// Record one payload traversing `copies` links (a broadcast fan-out:
+    /// an all-to-all message reaches K−1 peers, a leader's frame reaches
+    /// its group). Payload and fp32-equivalent scale together, so
+    /// compression ratios are unaffected by the fan-out factor.
+    pub fn record_fanout(&mut self, payload: usize, n_coords: usize, copies: usize) {
+        self.messages += copies as u64;
+        self.payload_bytes += payload as u64 * copies as u64;
+        self.fp32_equiv_bytes += n_coords as u64 * 4 * copies as u64;
+    }
+
     /// Bandwidth saving factor vs fp32 (the paper's headline ~5.7× etc).
     pub fn compression_ratio(&self) -> f64 {
         if self.payload_bytes == 0 {
@@ -207,6 +217,15 @@ mod tests {
         assert_eq!(w.messages, 2);
         assert!((w.compression_ratio() - 40.0).abs() < 1e-12);
         assert!((w.bits_per_coordinate() - 0.8).abs() < 1e-12);
+        // fan-out scales payload and fp32-equivalent together: the ratio is
+        // invariant, the byte totals are not
+        let mut f = WireStats::default();
+        f.record_fanout(100, 1000, 3);
+        assert_eq!(f.messages, 3);
+        assert_eq!(f.payload_bytes, 300);
+        assert!((f.compression_ratio() - 40.0).abs() < 1e-12);
+        f.record_fanout(100, 1000, 0);
+        assert_eq!(f.messages, 3);
     }
 
     #[test]

@@ -112,6 +112,28 @@ pub trait Codec: Send + Sync {
     /// Which wire format this codec's sessions emit.
     fn wire_format(&self) -> WireFormat;
 
+    /// Preferred alignment (in coordinates) for splitting a gradient into
+    /// independently-encoded chunks: segmenting on multiples of this keeps
+    /// the chunked quantization identical to one whole-gradient pass
+    /// (bucket/column boundaries line up, and a single session encoding the
+    /// chunks in order consumes the same RNG stream). The segmented
+    /// collectives ([`crate::collectives`]) align ring segments to it.
+    fn chunk_align(&self) -> usize {
+        1
+    }
+
+    /// Whether one of this codec's sessions may encode a *sequence of
+    /// different-length chunks* (the segmented collectives' hop re-encode
+    /// pattern). True for codecs whose sessions are stateless across calls
+    /// (QSGD/NUQSGD, TernGrad, fp32); false for 1BitSGD, whose session pins
+    /// the gradient layout at first use (its error-feedback residual is
+    /// per-coordinate), so it only rides whole-gradient exchanges. The
+    /// segmented collectives check this and refuse with a clear error
+    /// instead of tripping a deep layout assert.
+    fn supports_chunked_encode(&self) -> bool {
+        true
+    }
+
     fn name(&self) -> String;
 }
 
@@ -223,5 +245,7 @@ mod tests {
     fn size_hint_is_exact_for_fp32() {
         assert_eq!(Fp32.encoded_size_hint(100), 400);
         assert_eq!(Fp32.wire_format(), WireFormat::RawF32);
+        // raw floats chunk anywhere
+        assert_eq!(Fp32.chunk_align(), 1);
     }
 }

@@ -182,6 +182,16 @@ impl Codec for OneBitCodec {
         WireFormat::SignColumns { column: self.column }
     }
 
+    fn chunk_align(&self) -> usize {
+        self.column
+    }
+
+    fn supports_chunked_encode(&self) -> bool {
+        // the session's error-feedback residual pins one gradient layout at
+        // first use — it cannot re-encode arbitrary partial-sum chunks
+        false
+    }
+
     fn name(&self) -> String {
         format!("1bit(col={})", self.column)
     }

@@ -158,6 +158,10 @@ impl Codec for TernGrad {
         WireFormat::Ternary { bucket: self.bucket }
     }
 
+    fn chunk_align(&self) -> usize {
+        self.bucket
+    }
+
     fn name(&self) -> String {
         format!("terngrad(bucket={})", self.bucket)
     }

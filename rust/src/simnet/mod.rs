@@ -124,6 +124,39 @@ impl SimNet {
     pub fn p2p_time(&self, bytes: usize) -> VTime {
         VTime(self.link.latency_s + bytes as f64 / self.link.bandwidth_bps)
     }
+
+    /// One synchronous hop of a segmented collective (ring reduce-scatter /
+    /// allgather step): every endpoint sends one message to its neighbour
+    /// concurrently on its own egress, so the hop completes when the largest
+    /// message lands — `α + β·max_bytes`. Multi-hop algorithms
+    /// ([`crate::collectives::CollectiveAlgo`]) accumulate one of these per
+    /// step.
+    pub fn hop_time(&self, max_bytes: usize) -> VTime {
+        if self.workers <= 1 {
+            return VTime::ZERO;
+        }
+        VTime(self.link.latency_s + max_bytes as f64 / self.link.bandwidth_bps)
+    }
+
+    /// Concurrent fan-in of several messages to one endpoint (hierarchical
+    /// intra-group reduce): the receiver's ingress serialises all payloads,
+    /// one latency term — `α + β·Σ bytes`.
+    pub fn fan_in_time(&self, total_bytes: usize) -> VTime {
+        if self.workers <= 1 {
+            return VTime::ZERO;
+        }
+        VTime(self.link.latency_s + total_bytes as f64 / self.link.bandwidth_bps)
+    }
+
+    /// Fan-out of one `bytes`-sized payload to `copies` receivers
+    /// (hierarchical intra-group broadcast): the sender's egress serialises
+    /// the copies — `α + β·bytes·copies`.
+    pub fn fan_out_time(&self, bytes: usize, copies: usize) -> VTime {
+        if self.workers <= 1 || copies == 0 {
+            return VTime::ZERO;
+        }
+        VTime(self.link.latency_s + (bytes * copies) as f64 / self.link.bandwidth_bps)
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +206,32 @@ mod tests {
         let t = n.exchange_time(&msgs).secs();
         // at least the time for the big sender to push 3 copies
         assert!(t >= 3.0 * 1_000_000.0 / 1e9);
+    }
+
+    #[test]
+    fn segmented_transfer_costs() {
+        let n = net(8, Topology::P2pBroadcast);
+        let a = n.link.latency_s;
+        let beta = 1.0 / n.link.bandwidth_bps;
+        assert!((n.hop_time(1000).secs() - (a + 1000.0 * beta)).abs() < 1e-15);
+        assert!((n.fan_in_time(3000).secs() - (a + 3000.0 * beta)).abs() < 1e-15);
+        assert!((n.fan_out_time(1000, 3).secs() - (a + 3000.0 * beta)).abs() < 1e-15);
+        assert_eq!(n.fan_out_time(1000, 0).secs(), 0.0);
+        // 2(K−1) ring hops at chunk size ≈ the RingAllReduce closed form
+        let k = 8usize;
+        let msg = 1 << 20usize;
+        let chunk = msg / k;
+        let mut hops = VTime::ZERO;
+        for _ in 0..2 * (k - 1) {
+            hops += n.hop_time(chunk);
+        }
+        let dense = net(8, Topology::RingAllReduce);
+        let closed = dense.exchange_time(&[msg; 8]).secs();
+        assert!((hops.secs() - closed).abs() / closed < 1e-9);
+        // a single worker pays nothing
+        let solo = net(1, Topology::P2pBroadcast);
+        assert_eq!(solo.hop_time(1 << 20).secs(), 0.0);
+        assert_eq!(solo.fan_in_time(1 << 20).secs(), 0.0);
     }
 
     #[test]

@@ -47,6 +47,15 @@ impl Xoshiro256 {
         let _ = splitmix64(&mut sm);
         Self::from_u64(splitmix64(&mut sm))
     }
+
+    /// Fork a child generator off this one: one draw of the parent seeds an
+    /// independent child via splitmix. This is how per-segment encode
+    /// sessions (plan codec) and per-hop re-encode sessions (collectives)
+    /// stay deterministic in the parent stream regardless of how much each
+    /// child consumes.
+    pub fn fork(&mut self) -> Self {
+        Self::from_u64(RngCore::next_u64(self))
+    }
 }
 
 impl RngCore for Xoshiro256 {

@@ -1,0 +1,442 @@
+//! Collective-algorithms conformance suite: determinism goldens (fixed seed
+//! ⇒ identical final aggregate bits across runs and across decode thread
+//! budgets {1, 2, 8} — the in-process stand-in for `QSGD_THREADS`, which the
+//! codec thread budget honours), the ring-without-recompression ≡ all-to-all
+//! mean bit-identity property, traffic ordering (recompressing ring moves
+//! strictly fewer bytes than all-to-all at K=16), error-feedback behaviour,
+//! and the zero-steady-state-allocation invariant of the ring's hop
+//! re-encode path (counting global allocator with a thread-local counter).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use qsgd::collectives::{self, AllToAll, CollectiveAlgo, Hierarchical, RingAllreduce};
+use qsgd::config::{CodecOptions, CollectiveSpec};
+use qsgd::coordinator::CompressorSpec;
+use qsgd::quant::Codec;
+use qsgd::simnet::{Link, SimNet, Topology};
+use qsgd::util::rng::{self, Xoshiro256};
+
+// ---------------------------------------------------------------------------
+// Thread-local counting allocator (same pattern as codec_conformance.rs)
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+std::thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn local_allocs() -> u64 {
+    LOCAL_ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+fn net(k: usize) -> SimNet {
+    SimNet::new(k, Link::new(3.5e9, 50e-6), Topology::P2pBroadcast)
+}
+
+fn grads(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|w| {
+            let mut r = Xoshiro256::stream(seed, w as u64);
+            rng::normal_vec(&mut r, n)
+        })
+        .collect()
+}
+
+fn all_collectives() -> Vec<CollectiveSpec> {
+    vec![
+        CollectiveSpec::AllToAll,
+        CollectiveSpec::ring(),
+        CollectiveSpec::ring_ef(),
+        CollectiveSpec::Ring { recompress: false, error_feedback: false },
+        CollectiveSpec::hierarchical(4),
+        CollectiveSpec::hierarchical(3), // ragged groups at k=8
+    ]
+}
+
+/// Run `steps` exchanges of fixed gradients through a fresh algorithm built
+/// with the given codec; returns the final mean and the cumulative wire
+/// payload bytes.
+fn run_algo(
+    spec: &CollectiveSpec,
+    codec: Arc<dyn Codec>,
+    k: usize,
+    n: usize,
+    steps: usize,
+    seed: u64,
+) -> (Vec<f32>, u64, collectives::Exchange) {
+    let g = grads(k, n, 99);
+    let mut algo = collectives::build(spec, codec, k, seed);
+    algo.prepare(n);
+    let mut mean = Vec::new();
+    let mut payload = 0u64;
+    let mut last = collectives::Exchange::default();
+    for _ in 0..steps {
+        last = algo.exchange(&net(k), &g, &mut mean).unwrap();
+        payload += last.wire.payload_bytes;
+    }
+    (mean, payload, last)
+}
+
+// ---------------------------------------------------------------------------
+// Determinism goldens
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixed_seed_reproduces_aggregate_bits_across_runs() {
+    let k = 8;
+    let n = 3 * 512 * 8 + 123; // ragged tail exercises short/empty segments
+    for spec in all_collectives() {
+        let c = CompressorSpec::qsgd_4bit();
+        let (m1, b1, x1) = run_algo(&spec, c.codec(), k, n, 3, 7);
+        let (m2, b2, x2) = run_algo(&spec, c.codec(), k, n, 3, 7);
+        assert_eq!(m1, m2, "{}: aggregate bits must be seed-deterministic", spec.label());
+        assert_eq!(b1, b2, "{}: wire bytes must be seed-deterministic", spec.label());
+        assert_eq!(x1.hops, x2.hops, "{}", spec.label());
+        assert_eq!(x1.recompressions, x2.recompressions, "{}", spec.label());
+        // a different seed moves the quantization randomness
+        let (m3, _, _) = run_algo(&spec, c.codec(), k, n, 3, 8);
+        assert_ne!(m1, m3, "{}: seed must matter", spec.label());
+    }
+}
+
+#[test]
+fn aggregate_bits_identical_across_thread_budgets() {
+    // The codec decode thread budget is the configured face of
+    // `QSGD_THREADS`; the Codec contract promises bit-identical
+    // accumulators at every budget, and no algorithm may break it.
+    let k = 8;
+    let n = 2 * 512 * 8;
+    for spec in all_collectives() {
+        let reference = {
+            let codec = CompressorSpec::qsgd_4bit()
+                .codec_with(CodecOptions { threads: Some(1), ..CodecOptions::default() });
+            run_algo(&spec, codec, k, n, 2, 11).0
+        };
+        for budget in [2usize, 8] {
+            let codec = CompressorSpec::qsgd_4bit().codec_with(CodecOptions {
+                threads: Some(budget),
+                ..CodecOptions::default()
+            });
+            let (m, _, _) = run_algo(&spec, codec, k, n, 2, 11);
+            assert_eq!(
+                m,
+                reference,
+                "{}: thread budget {budget} changed the aggregate bits",
+                spec.label()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring-without-recompression ≡ all-to-all mean (property)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_without_recompression_matches_all_to_all_mean() {
+    // Segments are bucket-aligned and each worker's single session encodes
+    // its segments in order, so the quantized levels equal a whole-gradient
+    // pass; the ring then only transports the original frames, and the
+    // local reduction accumulates in worker order — the all-to-all order.
+    let k = 8;
+    for (n, seed) in [(3 * 512 * 8, 1u64), (3 * 512 * 8 + 123, 2), (2048, 3), (640, 4)] {
+        let spec = CompressorSpec::qsgd_4bit();
+        let g = grads(k, n, seed);
+        let mut a2a = AllToAll::new(spec.codec(), k, 42);
+        let mut raw = RingAllreduce::new(spec.codec(), k, 42, false, false);
+        let (mut m1, mut m2) = (Vec::new(), Vec::new());
+        let x1 = a2a.exchange(&net(k), &g, &mut m1).unwrap();
+        let x2 = raw.exchange(&net(k), &g, &mut m2).unwrap();
+        assert_eq!(m1, m2, "n={n}: ring:raw must be bit-identical to the a2a mean");
+        // pure transport: no recompression on either side
+        assert_eq!(x1.recompressions, 0);
+        assert_eq!(x2.recompressions, 0);
+        assert_eq!(x2.recompress_err_sq, 0.0);
+    }
+}
+
+#[test]
+fn nuqsgd_ring_raw_matches_all_to_all_too() {
+    // The property is grid-independent: the exponential-grid codec rides
+    // the same aligned-segment argument.
+    let k = 4;
+    let n = 2 * 512 * 4 + 17;
+    let spec = CompressorSpec::nuqsgd_4bit();
+    let g = grads(k, n, 5);
+    let mut a2a = AllToAll::new(spec.codec(), k, 21);
+    let mut raw = RingAllreduce::new(spec.codec(), k, 21, false, false);
+    let (mut m1, mut m2) = (Vec::new(), Vec::new());
+    a2a.exchange(&net(k), &g, &mut m1).unwrap();
+    raw.exchange(&net(k), &g, &mut m2).unwrap();
+    assert_eq!(m1, m2);
+}
+
+// ---------------------------------------------------------------------------
+// Traffic and timing ordering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_moves_strictly_fewer_bytes_per_worker_than_all_to_all_at_k16() {
+    // The acceptance bar: K=16, same CompressorSpec — per-worker simulated
+    // wire bytes strictly below all-to-all's, and faster on the α–β model.
+    let k = 16;
+    let n = 1 << 16;
+    let spec = CompressorSpec::qsgd_4bit();
+    let (_, a2a_bytes, _) = run_algo(&CollectiveSpec::AllToAll, spec.codec(), k, n, 1, 9);
+    let (_, ring_bytes, _) = run_algo(&CollectiveSpec::ring(), spec.codec(), k, n, 1, 9);
+    let (a2a_pw, ring_pw) = (a2a_bytes as f64 / k as f64, ring_bytes as f64 / k as f64);
+    assert!(
+        ring_pw < a2a_pw,
+        "ring must move strictly fewer bytes/worker: ring {ring_pw} vs a2a {a2a_pw}"
+    );
+    // ~8× at K=16 (15·|msg| vs ~1.875·|msg|) — leave generous slack for
+    // per-segment framing and recompressed-sum entropy
+    assert!(ring_pw * 4.0 < a2a_pw, "ring {ring_pw} vs a2a {a2a_pw}");
+    // (ring is latency-bound at this small message size, so the *time*
+    // ordering is asserted on the traffic models with a large message in
+    // `traffic_models_match_measured_shape`, and in the bench at real
+    // model sizes — the bytes ordering is what this bar demands)
+    // hierarchical sits between: below all-to-all as well
+    let (_, hier_bytes, _) =
+        run_algo(&CollectiveSpec::hierarchical(4), spec.codec(), k, n, 1, 9);
+    assert!((hier_bytes as f64 / k as f64) < a2a_pw);
+}
+
+#[test]
+fn traffic_models_match_measured_shape() {
+    // bytes_per_worker (the epoch_sim accounting) must agree with the
+    // measured exchange to first order: same ordering, right K-scaling.
+    let k = 16;
+    let msg = 1_000_000usize;
+    let spec = CompressorSpec::qsgd_4bit();
+    let a2a = AllToAll::new(spec.codec(), k, 0);
+    let ring = RingAllreduce::new(spec.codec(), k, 0, true, false);
+    let hier = Hierarchical::new(spec.codec(), k, 0, 4);
+    let bpw_a2a = a2a.bytes_per_worker(k, msg);
+    let bpw_ring = ring.bytes_per_worker(k, msg);
+    let bpw_hier = hier.bytes_per_worker(k, msg);
+    assert_eq!(bpw_a2a, 15.0 * msg as f64);
+    assert!((bpw_ring - 2.0 * 15.0 / 16.0 * msg as f64).abs() < 1e-6);
+    // hier:4 at K=16 lands exactly on the ring's 2(K−1)/K·|msg| average
+    // (12 fan-ins + 12 fan-outs + a 4-leader ring, spread over 16 workers)
+    assert!(bpw_ring <= bpw_hier && bpw_hier < bpw_a2a, "{bpw_ring} {bpw_hier} {bpw_a2a}");
+    // model times follow the same ordering on the broadcast-hostile link
+    let nn = net(k);
+    let t_a2a = a2a.model_time(&nn, msg).secs();
+    let t_ring = ring.model_time(&nn, msg).secs();
+    assert!(t_ring < t_a2a, "{t_ring} vs {t_a2a}");
+    // single worker: everything is free
+    assert_eq!(ring.bytes_per_worker(1, msg), 0.0);
+    assert_eq!(a2a.model_time(&net(1), msg).secs(), 0.0);
+}
+
+#[test]
+fn hop_stats_cover_the_exchange() {
+    let k = 8;
+    let n = 512 * 8;
+    let spec = CompressorSpec::qsgd_4bit();
+    let g = grads(k, n, 31);
+    let mut mean = Vec::new();
+
+    let mut ring = RingAllreduce::new(spec.codec(), k, 3, true, false);
+    let x = ring.exchange(&net(k), &g, &mut mean).unwrap();
+    let hops = ring.hop_stats();
+    assert_eq!(hops.len(), x.hops);
+    assert_eq!(hops.len(), 2 * (k - 1));
+    assert!(hops.iter().take(k - 1).all(|h| h.phase == "reduce-scatter"));
+    assert!(hops.iter().skip(k - 1).all(|h| h.phase == "allgather"));
+    let t: f64 = hops.iter().map(|h| h.time.secs()).sum();
+    assert!((t - x.time.secs()).abs() < 1e-12);
+    assert!(hops.iter().all(|h| h.bytes > 0));
+    assert_eq!(x.recompressions as usize, k * (k - 1));
+
+    let mut hier = Hierarchical::new(spec.codec(), k, 3, 4);
+    let xh = hier.exchange(&net(k), &g, &mut mean).unwrap();
+    let hh = hier.hop_stats();
+    assert_eq!(hh.len(), xh.hops);
+    assert_eq!(hh.first().map(|h| h.phase), Some("fan-in"));
+    assert_eq!(hh.last().map(|h| h.phase), Some("fan-out"));
+    let th: f64 = hh.iter().map(|h| h.time.secs()).sum();
+    assert!((th - xh.time.secs()).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// Error feedback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn error_feedback_compensates_recompression_over_steps() {
+    // Repeatedly exchanging the *same* gradients: with an ECQ-style
+    // residual the time-averaged aggregate converges toward the exact mean
+    // (the carried error is re-injected and eventually quantized away);
+    // without it each step pays the full independent recompression noise.
+    let k = 8;
+    let n = 512 * 8;
+    let steps = 40;
+    let g = grads(k, n, 77);
+    let exact: Vec<f32> = {
+        let mut m = vec![0.0f32; n];
+        for gw in &g {
+            for (a, &x) in m.iter_mut().zip(gw) {
+                *a += x / k as f32;
+            }
+        }
+        m
+    };
+    let time_avg_err = |ef: bool| -> f64 {
+        let spec = CompressorSpec::qsgd_4bit();
+        let mut algo = RingAllreduce::new(spec.codec(), k, 13, true, ef);
+        let mut mean = Vec::new();
+        let mut avg = vec![0.0f64; n];
+        for _ in 0..steps {
+            algo.exchange(&net(k), &g, &mut mean).unwrap();
+            for (a, &m) in avg.iter_mut().zip(&mean) {
+                *a += m as f64 / steps as f64;
+            }
+        }
+        avg.iter().zip(&exact).map(|(a, &e)| (a - e as f64).powi(2)).sum::<f64>().sqrt()
+    };
+    let with_ef = time_avg_err(true);
+    let without = time_avg_err(false);
+    // EF's telescoping residual decays the time-averaged error ~1/T while
+    // independent recompression noise only averages down ~1/√T; allow a
+    // small margin so the assertion tests the mechanism, not one seed.
+    assert!(
+        with_ef <= without * 1.05,
+        "error feedback should not hurt the time-averaged aggregate: {with_ef} vs {without}"
+    );
+    // and the recompression error is actually being tracked
+    let codec = CompressorSpec::qsgd_4bit().codec();
+    let (_, _, x) = run_algo(&CollectiveSpec::ring(), codec, k, n, 1, 13);
+    assert!(x.recompress_err_sq > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degenerate_worker_counts_and_sizes() {
+    for spec in all_collectives() {
+        // single worker: the collective degrades to encode→decode of the
+        // own gradient, no wire traffic
+        let c = CompressorSpec::qsgd_4bit();
+        let (m, bytes, x) = run_algo(&spec, c.codec(), 1, 700, 2, 5);
+        assert_eq!(m.len(), 700, "{}", spec.label());
+        assert_eq!(bytes, 0, "{}: single worker must not touch the wire", spec.label());
+        assert_eq!(x.time.secs(), 0.0, "{}", spec.label());
+        // k=2 minimal ring / one-group hierarchy
+        let (m2, _, _) = run_algo(&spec, c.codec(), 2, 700, 2, 5);
+        assert_eq!(m2.len(), 700, "{}", spec.label());
+        assert!(m2.iter().all(|v| v.is_finite()), "{}", spec.label());
+        // n smaller than one bucket
+        let (m3, _, _) = run_algo(&spec, c.codec(), 4, 100, 1, 5);
+        assert_eq!(m3.len(), 100, "{}", spec.label());
+    }
+}
+
+#[test]
+fn fixed_layout_codecs_are_rejected_by_segmented_collectives() {
+    // 1BitSGD's session pins one gradient layout at first use, so the
+    // segmented collectives must refuse with a clear error instead of
+    // tripping the session's layout assert mid-hop.
+    let k = 4;
+    let g = grads(k, 256, 1);
+    let mut mean = Vec::new();
+    let codec = CompressorSpec::OneBit { column: 32 }.codec();
+    let mut ring = RingAllreduce::new(codec, k, 1, true, false);
+    let err = ring.exchange(&net(k), &g, &mut mean).unwrap_err();
+    assert!(err.to_string().contains("all-to-all"), "{err:#}");
+    let mut hier = Hierarchical::new(CompressorSpec::OneBit { column: 32 }.codec(), k, 1, 2);
+    assert!(hier.exchange(&net(k), &g, &mut mean).is_err());
+    // ...while the all-to-all arm carries 1BitSGD fine
+    let mut a2a = AllToAll::new(CompressorSpec::OneBit { column: 32 }.codec(), k, 1);
+    assert!(a2a.exchange(&net(k), &g, &mut mean).is_ok());
+    // TernGrad sessions are stateless per call — the segmented path works
+    let tern = CompressorSpec::TernGrad { bucket: 32 }.codec();
+    let mut tring = RingAllreduce::new(tern, k, 1, true, false);
+    let x = tring.exchange(&net(k), &g, &mut mean).unwrap();
+    assert!(x.recompressions > 0);
+}
+
+#[test]
+fn fp32_collectives_recover_the_exact_mean() {
+    // With the identity codec every algorithm must reproduce the exact
+    // arithmetic mean (ring hops add in a different order, so compare with
+    // a tolerance rather than bitwise).
+    let k = 4;
+    let n = 1000;
+    let g = grads(k, n, 55);
+    let mut exact = vec![0.0f32; n];
+    for gw in &g {
+        for (a, &x) in exact.iter_mut().zip(gw) {
+            *a += x / k as f32;
+        }
+    }
+    for spec in all_collectives() {
+        let (m, _, x) = run_algo(&spec, CompressorSpec::Fp32.codec(), k, n, 1, 5);
+        for (a, b) in m.iter().zip(&exact) {
+            assert!((a - b).abs() <= 1e-5, "{}: {a} vs {b}", spec.label());
+        }
+        // fp32 recompression is lossless: zero recompression error
+        assert!(x.recompress_err_sq < 1e-12, "{}", spec.label());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero steady-state allocations in the hop re-encode path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_hop_reencode_path_is_allocation_free_in_steady_state() {
+    // Uniform-grid QSGD (v1 frames: no in-band tables on decode). After a
+    // warmup exchange has grown all scratch, a full ring exchange — decode,
+    // accumulate, per-hop re-encode, final decode — must not touch the
+    // heap, with and without the error-feedback residual.
+    let k = 8;
+    let n = 2 * 512 * 8;
+    let g = grads(k, n, 17);
+    for ef in [false, true] {
+        let spec = CompressorSpec::qsgd_4bit();
+        let mut algo = RingAllreduce::new(spec.codec(), k, 23, true, ef);
+        algo.prepare(n);
+        let mut mean = Vec::new();
+        for _ in 0..2 {
+            algo.exchange(&net(k), &g, &mut mean).unwrap();
+        }
+        let before = local_allocs();
+        algo.exchange(&net(k), &g, &mut mean).unwrap();
+        let after = local_allocs();
+        assert_eq!(
+            after - before,
+            0,
+            "ring (ef={ef}) hop re-encode path allocated in steady state"
+        );
+    }
+}
