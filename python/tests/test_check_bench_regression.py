@@ -1,0 +1,130 @@
+"""Unit tests for scripts/check_bench_regression.py (stdlib-only — no JAX).
+
+The perf lane's gatekeeper has to be trustworthy in exactly the failure
+modes that would otherwise go unnoticed: a bench that silently produced
+garbage JSON, or produced nothing at all, must exit 2 — never read as "no
+regressions". These tests drive the script in-process via a subprocess-free
+import so the advisory python lane covers it without extra dependencies.
+"""
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+SCRIPT = (pathlib.Path(__file__).resolve().parents[2]
+          / "scripts" / "check_bench_regression.py")
+
+
+def load_module():
+    spec = importlib.util.spec_from_file_location("check_bench_regression", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+MOD = load_module()
+
+
+def report(rows):
+    """A minimal schema-1 bench report."""
+    return {"bench": "t", "schema": 1, "results": rows, "metrics": []}
+
+
+def row(section, name, ns_per_coord):
+    return {"section": section, "name": name, "median_ns": ns_per_coord * 100,
+            "p10_ns": 1.0, "p90_ns": 1.0, "samples": 7,
+            "coords": 100.0, "ns_per_coord": ns_per_coord}
+
+
+def run_main(argv):
+    old = sys.argv
+    sys.argv = ["check_bench_regression.py"] + argv
+    try:
+        return MOD.main()
+    finally:
+        sys.argv = old
+
+
+def write(path, obj):
+    path.write_text(json.dumps(obj) if not isinstance(obj, str) else obj)
+
+
+def test_pair_mode_ok_and_regression(tmp_path):
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    write(base, report([row("enc", "hot", 100.0)]))
+
+    write(new, report([row("enc", "hot", 110.0)]))  # 1.10x < 1.25x
+    assert run_main([str(new), str(base)]) == 0
+
+    write(new, report([row("enc", "hot", 200.0)]))  # 2.00x
+    assert run_main([str(new), str(base)]) == 1
+
+
+def test_missing_baseline_is_soft_skip(tmp_path):
+    new = tmp_path / "new.json"
+    write(new, report([row("enc", "hot", 1.0)]))
+    assert run_main([str(new), str(tmp_path / "absent.json")]) == 0
+
+
+def test_missing_results_file_is_hard_failure(tmp_path):
+    base = tmp_path / "base.json"
+    write(base, report([row("enc", "hot", 1.0)]))
+    assert run_main([str(tmp_path / "absent.json"), str(base)]) == 2
+
+
+@pytest.mark.parametrize("garbage", [
+    "not json at all {",
+    json.dumps([1, 2, 3]),                        # top level not an object
+    json.dumps({"results": "nope"}),              # results not a list
+    json.dumps({"results": [42]}),                # non-object row
+    json.dumps({"results": [{"section": "s", "name": "n",
+                             "ns_per_coord": "fast"}]}),  # non-numeric
+])
+def test_malformed_results_exit_2(tmp_path, garbage):
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    write(base, report([row("enc", "hot", 1.0)]))
+    write(new, garbage)
+    assert run_main([str(new), str(base)]) == 2
+
+
+def test_one_sided_rows_never_fail(tmp_path):
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    write(base, report([row("enc", "hot", 100.0), row("gone", "row", 1.0)]))
+    write(new, report([row("enc", "hot", 90.0), row("brand", "new", 9e9)]))
+    assert run_main([str(new), str(base)]) == 0
+
+
+def test_discovery_compares_every_bench(tmp_path):
+    results = tmp_path / "run"
+    baselines = tmp_path / "baselines"
+    results.mkdir()
+    baselines.mkdir()
+    write(results / "BENCH_alpha.json", report([row("s", "a", 100.0)]))
+    write(baselines / "alpha.json", report([row("s", "a", 100.0)]))
+    write(results / "BENCH_beta.json", report([row("s", "b", 100.0)]))
+    write(baselines / "beta.json", report([row("s", "b", 100.0)]))
+    args = ["--results-dir", str(results), "--baseline-dir", str(baselines)]
+    assert run_main(args) == 0
+
+    # a regression in ANY discovered bench fails the whole check
+    write(results / "BENCH_beta.json", report([row("s", "b", 500.0)]))
+    assert run_main(args) == 1
+
+    # malformed output from any bench dominates a clean comparison elsewhere
+    write(results / "BENCH_beta.json", "garbage{")
+    assert run_main(args) == 2
+
+    # a bench without a committed baseline is a soft skip, not a failure
+    write(results / "BENCH_beta.json", report([row("s", "b", 1.0)]))
+    (baselines / "beta.json").unlink()
+    assert run_main(args) == 0
+
+
+def test_discovery_with_no_results_is_hard_failure(tmp_path):
+    assert run_main(["--results-dir", str(tmp_path)]) == 2

@@ -1,0 +1,140 @@
+//! Socket-transport loopback benchmarks: framing overhead in memory, framed
+//! round trips over real loopback sockets (TCP and, on unix, UDS), and a
+//! full end-to-end `SocketExchange` all-to-all step at K=2 — the measured
+//! counterpart to the α–β *modeled* exchange times in
+//! `BENCH_collectives_exchange.json`.
+//!
+//! Loopback numbers are kernel- and scheduler-dependent, so the committed
+//! baseline envelope in `rust/benches/baselines/transport_loopback.json` is
+//! deliberately loose: the advisory perf lane catches order-of-magnitude
+//! regressions (a lost buffer reuse, an accidental per-hop allocation, a
+//! dropped TCP_NODELAY), not microsecond drift.
+//!
+//! Run: `cargo bench --bench transport_loopback`.
+
+use std::time::Duration;
+
+use qsgd::bench::{section, Bench, Report};
+use qsgd::config::CollectiveSpec;
+use qsgd::coordinator::CompressorSpec;
+use qsgd::transport::{write_frame, Endpoint, FrameReader, Mesh, MeshConfig, SocketExchange};
+use qsgd::util::rng::{self, Xoshiro256};
+use qsgd::util::stats;
+
+fn free_tcp_endpoint() -> Endpoint {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("probe socket");
+    Endpoint::Tcp(l.local_addr().expect("probe addr").to_string())
+}
+
+fn pair_cfg(rank: usize) -> MeshConfig {
+    MeshConfig {
+        rank,
+        world: 2,
+        io_timeout: Duration::from_secs(30),
+        connect_timeout: Duration::from_secs(30),
+    }
+}
+
+/// Connect a 2-rank mesh across two threads of this process and hand both
+/// ends back.
+fn mesh_pair(base: &Endpoint) -> (Mesh, Mesh) {
+    let b2 = base.clone();
+    let peer = std::thread::spawn(move || Mesh::connect(&b2, &pair_cfg(1)).expect("rank 1 mesh"));
+    let m0 = Mesh::connect(base, &pair_cfg(0)).expect("rank 0 mesh");
+    (m0, peer.join().expect("rank 1 thread"))
+}
+
+/// Time 1 MiB framed round trips on rank 0 while a peer thread echoes until
+/// the socket closes under it.
+fn bench_round_trip(b: &Bench, report: &mut Report, label: &str, base: &Endpoint) {
+    const MSG: usize = 1 << 20;
+    let (mut m0, mut m1) = mesh_pair(base);
+    let peer = std::thread::spawn(move || {
+        let payload = vec![0x5Au8; MSG];
+        while m1.send_recv(0, 0, &payload).is_ok() {}
+    });
+    let payload = vec![0xA5u8; MSG];
+    let s = b.run(&format!("send_recv 1MiB round trip ({label})"), || {
+        m0.send_recv(1, 1, &payload).expect("round trip").len()
+    });
+    s.report_throughput(2.0 * MSG as f64); // both directions cross the socket
+    report.add("round_trip", &s, Some(MSG as f64));
+    drop(m0); // closes the stream; the peer's next hop errors out
+    peer.join().expect("peer thread");
+}
+
+fn main() {
+    let b = Bench::quick();
+    let mut report = Report::new("transport_loopback");
+
+    // -- framing in memory: reusable-buffer write + chunked reassembly ------
+    section("length-prefixed framing (in memory)");
+    {
+        const MSG: usize = 1 << 20;
+        let payload = vec![0x5Au8; MSG];
+        let mut wire: Vec<u8> = Vec::with_capacity(MSG + 8);
+        let mut reader = FrameReader::new();
+        let s = b.run("frame 1MiB write+read", || {
+            wire.clear();
+            write_frame(&mut wire, &payload).expect("write");
+            let mut cur = std::io::Cursor::new(&wire[..]);
+            reader.read_frame(&mut cur).expect("read").expect("frame").len()
+        });
+        s.report_throughput(MSG as f64);
+        report.add("framing", &s, Some(MSG as f64));
+    }
+
+    // -- framed round trips over real loopback sockets ----------------------
+    section("framed round trips over loopback sockets");
+    bench_round_trip(&b, &mut report, "tcp", &free_tcp_endpoint());
+    #[cfg(unix)]
+    {
+        let path = std::env::temp_dir().join(format!("qsgd-bench-{}.sock", std::process::id()));
+        let base = Endpoint::Uds(path.clone());
+        bench_round_trip(&b, &mut report, "uds", &base);
+        qsgd::transport::net::cleanup_uds(&path, 2);
+    }
+
+    // -- end-to-end quantized exchange step at K=2 --------------------------
+    section("SocketExchange all-to-all step @K=2 (tcp loopback)");
+    {
+        let n = 1usize << 18;
+        let spec = CollectiveSpec::AllToAll;
+        let comp = CompressorSpec::qsgd_4bit();
+        let (m0, m1) = mesh_pair(&free_tcp_endpoint());
+        let spec1 = spec.clone();
+        let comp1 = comp.clone();
+        let peer = std::thread::spawn(move || {
+            let mut ex = SocketExchange::new(&spec1, comp1.codec(), m1, 7).expect("rank 1");
+            let grad = rng::normal_vec(&mut Xoshiro256::stream(5, 1), n);
+            let mut mean = Vec::new();
+            while ex.exchange(&grad, &mut mean).is_ok() {}
+        });
+        let mut ex = SocketExchange::new(&spec, comp.codec(), m0, 7).expect("rank 0");
+        let grad = rng::normal_vec(&mut Xoshiro256::stream(5, 0), n);
+        let mut mean = Vec::new();
+        let s = b.run(&format!("exchange {} {} K=2", spec.label(), comp.label()), || {
+            ex.exchange(&grad, &mut mean).expect("exchange").wire.payload_bytes
+        });
+        s.report();
+        report.add("exchange", &s, Some(n as f64));
+
+        // one more instrumented step for the measured phase split
+        let st = ex.exchange(&grad, &mut mean).expect("instrumented step");
+        println!(
+            "  wall split: encode {}, transfer {}, decode {}; {} outbound payload",
+            stats::fmt_duration(st.wall.encode_s),
+            stats::fmt_duration(st.wall.transfer_s),
+            stats::fmt_duration(st.wall.decode_s),
+            stats::fmt_bytes(st.wire.payload_bytes as f64),
+        );
+        report.add_metric("exchange", "a2a k2 encode_s", st.wall.encode_s);
+        report.add_metric("exchange", "a2a k2 transfer_s", st.wall.transfer_s);
+        report.add_metric("exchange", "a2a k2 decode_s", st.wall.decode_s);
+        report.add_metric("exchange", "a2a k2 payload_bytes", st.wire.payload_bytes as f64);
+        drop(ex);
+        peer.join().expect("peer thread");
+    }
+
+    report.write("BENCH_transport_loopback.json").expect("write bench json");
+}

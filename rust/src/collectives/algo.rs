@@ -144,11 +144,30 @@ pub fn build(
     }
 }
 
-/// Recompression accounting shared by the re-encode helpers.
+/// Recompression accounting shared by the re-encode helpers (the socket
+/// transport's distributed ring reuses it for parity with the simnet path).
 #[derive(Debug, Clone, Copy, Default)]
-struct Recompress {
-    count: u64,
-    err_sq: f64,
+pub(crate) struct Recompress {
+    pub(crate) count: u64,
+    pub(crate) err_sq: f64,
+}
+
+/// Bucket-aligned ring segment layout shared by the simulated ring and the
+/// socket transport: `(offset, len)` per lane, boundaries on multiples of
+/// `align` so per-segment quantization matches a whole-gradient pass.
+/// Trailing segments may be short or empty, which the codecs handle.
+pub fn ring_segments(n: usize, k: usize, align: usize) -> Vec<(usize, usize)> {
+    assert!(k >= 1, "ring needs at least one member");
+    let align = align.max(1);
+    // smallest multiple of the alignment covering ceil(n/k)
+    let per = n.div_ceil(k).div_ceil(align).max(1).saturating_mul(align);
+    (0..k)
+        .map(|i| {
+            let off = (i * per).min(n);
+            let end = ((i + 1) * per).min(n);
+            (off, end - off)
+        })
+        .collect()
 }
 
 /// Encode `v` through `session` into `out`, optionally compensated by an
@@ -161,7 +180,7 @@ struct Recompress {
 /// skipped entirely. All scratch (`staging`, `dec`) is caller-owned and
 /// reused.
 #[allow(clippy::too_many_arguments)]
-fn encode_lane(
+pub(crate) fn encode_lane(
     codec: &dyn Codec,
     session: &mut dyn EncodeSession,
     mut residual: Option<&mut [f32]>,
@@ -503,15 +522,7 @@ impl RingAllreduce {
         }
         let k = self.sessions.len();
         let align = self.codec.chunk_align().max(1);
-        self.segs.clear();
-        // smallest multiple of the alignment covering ceil(n/k) — trailing
-        // segments may be short or empty, which the codecs handle
-        let per = n.div_ceil(k).div_ceil(align).max(1).saturating_mul(align);
-        for i in 0..k {
-            let off = (i * per).min(n);
-            let end = ((i + 1) * per).min(n);
-            self.segs.push((off, end - off));
-        }
+        self.segs = ring_segments(n, k, align);
         let max_len = self.segs.iter().map(|s| s.1).max().unwrap_or(0);
         if self.acc.len() < max_len {
             self.acc.resize(max_len, 0.0);

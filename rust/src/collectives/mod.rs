@@ -16,8 +16,8 @@
 pub mod algo;
 
 pub use algo::{
-    build, model_bytes_per_worker, model_exchange_time, AllToAll, CollectiveAlgo, Exchange,
-    Hierarchical, HopStat, RingAllreduce,
+    build, model_bytes_per_worker, model_exchange_time, ring_segments, AllToAll, CollectiveAlgo,
+    Exchange, Hierarchical, HopStat, RingAllreduce,
 };
 
 use anyhow::Result;
@@ -71,14 +71,19 @@ pub const DECODE_MERGE_GROUPS: usize = 8;
 /// [`decode_threads`](crate::quant::Codec::decode_threads) — the codec
 /// carries the configured budget ([`crate::config::CodecOptions`]) so
 /// call sites stop consulting env vars.
-pub fn par_decode_mean<F>(
-    messages: &[Vec<u8>],
+///
+/// Generic over the message container (`Vec<u8>` for the simnet coordinators,
+/// `&[u8]` for the socket transport's borrowed receive buffers) so the
+/// zero-copy path needs no per-step copies just to share the merge.
+pub fn par_decode_mean<M, F>(
+    messages: &[M],
     n: usize,
     alpha: f32,
     threads: usize,
     decode_add: F,
 ) -> Result<Vec<f32>>
 where
+    M: AsRef<[u8]> + Sync,
     F: Fn(&[u8], f32, &mut [f32], usize) -> Result<()> + Sync,
 {
     let mut acc = vec![0.0f32; n];
@@ -88,11 +93,11 @@ where
     let groups = DECODE_MERGE_GROUPS.min(messages.len());
     let intra = (threads.max(1) / groups).max(1);
     let chunk = messages.len().div_ceil(groups);
-    let grouped: Vec<&[Vec<u8>]> = messages.chunks(chunk).collect();
+    let grouped: Vec<&[M]> = messages.chunks(chunk).collect();
     let partials = par::par_map(&grouped, |_, group| -> Result<Vec<f32>> {
         let mut part = vec![0.0f32; n];
         for msg in group.iter() {
-            decode_add(msg, alpha, &mut part, intra)?;
+            decode_add(msg.as_ref(), alpha, &mut part, intra)?;
         }
         Ok(part)
     });

@@ -145,6 +145,60 @@ impl CollectiveSpec {
     }
 }
 
+/// Which transport moves the encoded gradients between workers — the
+/// simulated interconnect (default, single process, virtual time) or the
+/// real socket transport ([`crate::transport`]: K OS processes, measured
+/// wall-clock). Parsed from `--transport sim|tcp:HOST:PORT|uds:PATH`, where
+/// the address names the *rendezvous point* rank 0 serves — per-rank data
+/// connections use ephemeral ports / derived socket paths.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum TransportSpec {
+    /// In-process simulated interconnect (virtual α–β time).
+    #[default]
+    Sim,
+    /// TCP rendezvous at `HOST:PORT` (e.g. `127.0.0.1:29500`).
+    Tcp { addr: String },
+    /// Unix-domain-socket rendezvous at this filesystem path (per-rank
+    /// listeners bind `PATH.r<rank>`). Unix only.
+    Uds { path: String },
+}
+
+impl TransportSpec {
+    /// `sim` / `tcp:HOST:PORT` / `uds:PATH`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if s.eq_ignore_ascii_case("sim") {
+            return Ok(TransportSpec::Sim);
+        }
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            anyhow::ensure!(
+                addr.rsplit_once(':').is_some_and(|(h, p)| {
+                    !h.is_empty() && p.parse::<u16>().is_ok()
+                }),
+                "tcp transport needs HOST:PORT, got '{addr}'"
+            );
+            return Ok(TransportSpec::Tcp { addr: addr.to_string() });
+        }
+        if let Some(path) = s.strip_prefix("uds:") {
+            anyhow::ensure!(!path.is_empty(), "uds transport needs a socket path");
+            anyhow::ensure!(cfg!(unix), "uds transport is only available on unix");
+            return Ok(TransportSpec::Uds { path: path.to_string() });
+        }
+        anyhow::bail!("unknown transport '{s}' (sim|tcp:HOST:PORT|uds:PATH)")
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            TransportSpec::Sim => "sim".into(),
+            TransportSpec::Tcp { addr } => format!("tcp:{addr}"),
+            TransportSpec::Uds { path } => format!("uds:{path}"),
+        }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self, TransportSpec::Sim)
+    }
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
@@ -260,6 +314,32 @@ mod tests {
         assert_eq!(CollectiveSpec::default(), CollectiveSpec::AllToAll);
         for s in ["a2a", "ring", "ring:ef", "ring:raw", "hier:4"] {
             assert_eq!(CollectiveSpec::parse(s).unwrap().label(), s, "label round-trip");
+        }
+    }
+
+    #[test]
+    fn transport_spec_parse_and_label() {
+        assert_eq!(TransportSpec::parse("sim").unwrap(), TransportSpec::Sim);
+        assert_eq!(TransportSpec::parse("SIM").unwrap(), TransportSpec::Sim);
+        assert!(TransportSpec::default().is_sim());
+        assert_eq!(
+            TransportSpec::parse("tcp:127.0.0.1:29500").unwrap(),
+            TransportSpec::Tcp { addr: "127.0.0.1:29500".into() }
+        );
+        // bad TCP shapes: no port, non-numeric port, empty host
+        assert!(TransportSpec::parse("tcp:localhost").is_err());
+        assert!(TransportSpec::parse("tcp:host:port").is_err());
+        assert!(TransportSpec::parse("tcp::123").is_err());
+        assert!(TransportSpec::parse("uds:").is_err());
+        assert!(TransportSpec::parse("mpi:whatever").is_err());
+        #[cfg(unix)]
+        {
+            let t = TransportSpec::parse("uds:/tmp/qsgd.sock").unwrap();
+            assert_eq!(t, TransportSpec::Uds { path: "/tmp/qsgd.sock".into() });
+            assert!(!t.is_sim());
+        }
+        for s in ["sim", "tcp:127.0.0.1:29500"] {
+            assert_eq!(TransportSpec::parse(s).unwrap().label(), s, "label round-trip");
         }
     }
 

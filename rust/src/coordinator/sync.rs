@@ -37,7 +37,7 @@ use super::sources::GradSource;
 use super::CompressorSpec;
 use crate::collectives;
 use crate::config::CollectiveSpec;
-use crate::metrics::{Breakdown, Curve, WireStats};
+use crate::metrics::{Breakdown, Curve, WallClock, WireStats};
 use crate::models::layout::QuantPlan;
 use crate::models::CostModel;
 use crate::optim::Sgd;
@@ -115,6 +115,9 @@ pub struct RunResult {
     /// `ring:ef` does not shrink this per-step number — its residual makes
     /// the errors telescope so the *bias* cancels across steps.
     pub recompress_err_sq: f64,
+    /// Measured wall-clock per-phase seconds, populated only by the socket
+    /// transport (`--transport tcp:…|uds:…`); all-zero on simnet runs.
+    pub wall: WallClock,
 }
 
 impl RunResult {
@@ -267,6 +270,7 @@ impl SyncTrainer {
             hops,
             recompressions,
             recompress_err_sq,
+            wall: WallClock::default(),
         })
     }
 }

@@ -5,8 +5,10 @@
 //! * **Layer 3 (this crate)** — the distributed-training coordinator: data-parallel
 //!   worker orchestration, gradient quantization ([`quant`]), lossless Elias coding
 //!   ([`coding`]), a simulated multi-GPU interconnect ([`simnet`]), collective
-//!   communication patterns ([`collectives`]), and the synchronous / asynchronous /
-//!   variance-reduced training loops ([`coordinator`]).
+//!   communication patterns ([`collectives`]), a real multi-process socket
+//!   transport running the same collectives across OS processes ([`transport`]),
+//!   and the synchronous / asynchronous / variance-reduced training loops
+//!   ([`coordinator`]).
 //! * **Layer 2 (JAX, build-time)** — model forward/backward graphs, AOT-lowered to
 //!   HLO text and executed from Rust via PJRT ([`runtime`]).
 //! * **Layer 1 (Pallas, build-time)** — the stochastic-quantization kernel, fused
@@ -27,4 +29,5 @@ pub mod optim;
 pub mod quant;
 pub mod runtime;
 pub mod simnet;
+pub mod transport;
 pub mod util;

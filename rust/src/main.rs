@@ -8,9 +8,11 @@
 //!   async                      — asynchronous parameter-server run
 //!   validate                   — quick Lemma 3.1 / Thm 3.2 empirical checks
 
-use anyhow::Result;
+use std::time::{Duration, Instant};
 
-use qsgd::config::{Args, CollectiveSpec};
+use anyhow::{Context, Result};
+
+use qsgd::config::{Args, CollectiveSpec, TransportSpec};
 use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm};
 use qsgd::coordinator::sources::{ConvexSource, GradSource, RuntimeSource, Workload};
 use qsgd::coordinator::sync::{SyncConfig, SyncTrainer};
@@ -21,6 +23,7 @@ use qsgd::models::layout::QuantPlan;
 use qsgd::models::{zoo, CostModel};
 use qsgd::runtime::Runtime;
 use qsgd::simnet::{Preset, SimNet};
+use qsgd::transport::{train_rank, DistTrainConfig, Endpoint, Mesh, MeshConfig, SocketExchange};
 use qsgd::util::stats;
 
 fn main() {
@@ -33,6 +36,9 @@ fn main() {
         "svrg" => cmd_svrg(&args),
         "async" => cmd_async(&args),
         "validate" => cmd_validate(&args),
+        // Internal: one rank of a raw collective exchange over sockets —
+        // spawned by the transport_e2e determinism goldens.
+        "exchange-worker" => cmd_exchange_worker(&args),
         _ => {
             print_help();
             Ok(())
@@ -51,7 +57,10 @@ fn print_help() {
          train    --model <logreg|mlp|tfm|quadratic|logreg-native> \\\n\
                   --compressor <fp32|qsgdN[:bucket]|nuqsgdN[:bucket]|1bit|terngrad> \\\n\
                   --collective <a2a|ring|ring:ef|ring:raw|hier[:G]> \\\n\
-                  --workers K --steps N --lr F --seed S [--eval-every N]\n\
+                  --workers K --steps N --lr F --seed S [--eval-every N] \\\n\
+                  [--transport sim|tcp:HOST:PORT|uds:PATH]   # sockets: K real\n\
+                  #  processes (spawned automatically; --rank R joins as one\n\
+                  #  rank instead). Native models only; see README.\n\
          simulate --network <alexnet|vgg19|resnet50|resnet152|resnet110|bn-inception|lstm>\n\
                   --gpus K [--preset k80|10gbe|nvlink] [--collective <...>]\n\
          svrg     --processors K --epochs P [--exact]\n\
@@ -79,6 +88,10 @@ fn cmd_info(_args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let transport = TransportSpec::parse(&args.string("transport", "sim"))?;
+    if !transport.is_sim() {
+        return cmd_train_dist(args, &transport);
+    }
     let model = args.string("model", "mlp");
     let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
     let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
@@ -143,6 +156,232 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown model '{other}'"),
     }
+}
+
+fn transport_endpoint(t: &TransportSpec) -> Result<Endpoint> {
+    match t {
+        TransportSpec::Sim => anyhow::bail!("sim transport has no socket endpoint"),
+        TransportSpec::Tcp { addr } => Ok(Endpoint::Tcp(addr.clone())),
+        TransportSpec::Uds { path } => {
+            #[cfg(unix)]
+            return Ok(Endpoint::Uds(path.into()));
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                anyhow::bail!("uds transport is only available on unix")
+            }
+        }
+    }
+}
+
+/// `train --transport tcp:…|uds:…`: real multi-process training. Without
+/// `--rank` this process is the launcher — it spawns `--workers` copies of
+/// itself (same argv plus `--rank R`) and waits for all of them; with
+/// `--rank` it joins the mesh as that rank and runs its share.
+fn cmd_train_dist(args: &Args, transport: &TransportSpec) -> Result<()> {
+    let world = args.usize("workers", 4);
+    anyhow::ensure!(world >= 1, "--workers must be at least 1");
+    if let Some(r) = args.get("rank") {
+        let rank: usize = r.parse().map_err(|_| anyhow::anyhow!("bad --rank '{r}'"))?;
+        return train_dist_rank(args, transport, rank, world);
+    }
+
+    let exe = std::env::current_exe().context("locating own executable")?;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut children = Vec::with_capacity(world);
+    for r in 0..world {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.args(&argv).arg("--rank").arg(r.to_string());
+        if r != 0 {
+            // Keep the console readable: replica output is identical by
+            // construction, so rank 0 speaks for the run.
+            cmd.stdout(std::process::Stdio::null());
+        }
+        children.push(cmd.spawn().with_context(|| format!("spawning rank {r}"))?);
+    }
+
+    let budget = Duration::from_secs(args.u64("spawn-timeout-s", 600));
+    let deadline = Instant::now() + budget;
+    let mut statuses: Vec<Option<std::process::ExitStatus>> = vec![None; world];
+    loop {
+        let mut pending = false;
+        for (i, ch) in children.iter_mut().enumerate() {
+            if statuses[i].is_none() {
+                match ch.try_wait().with_context(|| format!("waiting for rank {i}"))? {
+                    Some(st) => statuses[i] = Some(st),
+                    None => pending = true,
+                }
+            }
+        }
+        if !pending {
+            break;
+        }
+        if Instant::now() >= deadline {
+            for ch in children.iter_mut() {
+                let _ = ch.kill();
+            }
+            anyhow::bail!(
+                "multi-process train timed out after {}s (raise --spawn-timeout-s?)",
+                budget.as_secs()
+            );
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    #[cfg(unix)]
+    if let TransportSpec::Uds { path } = transport {
+        qsgd::transport::net::cleanup_uds(std::path::Path::new(path), world);
+    }
+    for (r, st) in statuses.iter().enumerate() {
+        let st = st.expect("loop exits only when all statuses are filled");
+        anyhow::ensure!(st.success(), "rank {r} exited with {st}");
+    }
+    Ok(())
+}
+
+/// One rank's share of a socket-transport training run.
+fn train_dist_rank(
+    args: &Args,
+    transport: &TransportSpec,
+    rank: usize,
+    world: usize,
+) -> Result<()> {
+    let model = args.string("model", "quadratic");
+    let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
+    let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
+    let steps = args.usize("steps", 200);
+    let lr = args.f32("lr", 0.1);
+    let seed = args.u64("seed", 0);
+
+    let mut cfg = DistTrainConfig::quick(world, steps, spec, lr);
+    cfg.collective = collective;
+    cfg.seed = seed;
+    cfg.eval_every = args.usize("eval-every", 25);
+    cfg.log_every = args.usize("log-every", 10);
+
+    // Every rank needs its own gradient source; the runtime-artifact models
+    // would mean one PJRT instance per process, which this path does not
+    // attempt yet — the native convex models cover the transport's job
+    // (checking modeled α–β time against measured wall-clock).
+    let mut src: Box<dyn GradSource> = match model.as_str() {
+        "quadratic" => {
+            let p = QuadraticProblem::generate(512, 256, 1e-3, 0.05, seed);
+            Box::new(ConvexSource::new(p, 8, seed))
+        }
+        "logreg-native" => {
+            let p = LogisticProblem::generate(512, 256, 1e-3, seed);
+            Box::new(ConvexSource::new(p, 8, seed))
+        }
+        other => anyhow::bail!(
+            "--transport {} supports the native models (quadratic|logreg-native), got '{other}'",
+            transport.label()
+        ),
+    };
+
+    let ep = transport_endpoint(transport)?;
+    let mesh_cfg = MeshConfig {
+        rank,
+        world,
+        io_timeout: Duration::from_millis(args.u64("io-timeout-ms", 30_000)),
+        connect_timeout: Duration::from_millis(args.u64("connect-timeout-ms", 60_000)),
+    };
+    let mesh = Mesh::connect(&ep, &mesh_cfg)
+        .with_context(|| format!("rank {rank}: connecting the {} mesh", transport.label()))?;
+    let res = train_rank(&cfg, mesh, src.as_mut())?;
+
+    println!(
+        "== rank {rank}/{world}: {} via {} over {} on {} ==",
+        res.label,
+        res.collective,
+        transport.label(),
+        src.name()
+    );
+    println!("loss: {}", res.loss.sparkline(12));
+    if !res.eval.points.is_empty() {
+        println!("eval: {}", res.eval.sparkline(12));
+    }
+    println!(
+        "wall: {:.3}s total (encode {:.3}s, transfer {:.3}s, decode {:.3}s) vs modeled comm {}",
+        res.wall.total_s(),
+        res.wall.encode_s,
+        res.wall.transfer_s,
+        res.wall.decode_s,
+        stats::fmt_duration(res.breakdown.communication().secs()),
+    );
+    println!(
+        "wire (this rank): {} msgs, {} payload, {:.2}x vs fp32, {:.2} bits/coord",
+        res.wire.messages,
+        stats::fmt_bytes(res.wire.payload_bytes as f64),
+        res.wire.compression_ratio(),
+        res.wire.bits_per_coordinate(),
+    );
+    if res.recompressions > 0 {
+        println!(
+            "hops: {}, recompressions: {}, cumulative recompression err²: {:.3e}",
+            res.hops, res.recompressions, res.recompress_err_sq
+        );
+    }
+    Ok(())
+}
+
+/// Internal subcommand behind the `transport_e2e` goldens: join a K-process
+/// mesh, run `--steps` collective exchanges of a fixed seeded gradient, and
+/// write the decoded mean (raw little-endian f32s) to `--out`. The test
+/// compares those bytes against the in-process simnet golden bit for bit.
+fn cmd_exchange_worker(args: &Args) -> Result<()> {
+    use qsgd::util::rng::{self, Xoshiro256};
+
+    let transport = TransportSpec::parse(&args.string("transport", "sim"))?;
+    let rank = args.usize("rank", 0);
+    let world = args.usize("world", 1);
+    let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
+    let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
+    let n = args.usize("n", 8192);
+    let steps = args.usize("steps", 1);
+    let seed = args.u64("seed", 7);
+    let gseed = args.u64("gseed", 99);
+
+    let ep = transport_endpoint(&transport)?;
+    let mesh_cfg = MeshConfig {
+        rank,
+        world,
+        io_timeout: Duration::from_millis(args.u64("io-timeout-ms", 20_000)),
+        connect_timeout: Duration::from_millis(args.u64("connect-timeout-ms", 30_000)),
+    };
+    let mesh = Mesh::connect(&ep, &mesh_cfg)
+        .with_context(|| format!("rank {rank}: connecting the exchange mesh"))?;
+    let mut ex = SocketExchange::new(&collective, spec.codec(), mesh, seed)?;
+
+    // Same gradient every step (the per-step variation under test is the
+    // sessions' RNG streams advancing), deterministic in (gseed, rank).
+    let grad = rng::normal_vec(&mut Xoshiro256::stream(gseed, rank as u64), n);
+    let mut mean: Vec<f32> = Vec::new();
+    let mut total = qsgd::transport::DistStats::default();
+    for _ in 0..steps {
+        let s = ex.exchange(&grad, &mut mean)?;
+        total.add(&s);
+    }
+
+    if let Some(path) = args.get("out") {
+        let mut bytes = Vec::with_capacity(mean.len() * 4);
+        for &x in &mean {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("writing decoded mean to {path}"))?;
+    }
+    println!(
+        "rank {rank}/{world}: {} exchanges of n={n} via {}; {} hops, \
+         wall {:.3}s (encode {:.3}s, transfer {:.3}s, decode {:.3}s), {} payload out",
+        steps,
+        ex.name(),
+        total.hops,
+        total.wall.total_s(),
+        total.wall.encode_s,
+        total.wall.transfer_s,
+        total.wall.decode_s,
+        stats::fmt_bytes(total.wire.payload_bytes as f64),
+    );
+    Ok(())
 }
 
 /// Map a model name to (artifact, workload) built from the manifest shapes.

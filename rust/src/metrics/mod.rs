@@ -57,6 +57,36 @@ impl Breakdown {
     }
 }
 
+/// Measured wall-clock seconds per communication phase, recorded by the
+/// socket transport next to the modeled α–β [`Breakdown`] so measured and
+/// modeled communication time are directly comparable in one `RunResult`.
+/// All-zero for simnet-only runs — nothing real was timed there.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WallClock {
+    /// Quantize + entropy-code (this rank only).
+    pub encode_s: f64,
+    /// Blocking socket sends/receives, including peer-skew wait time.
+    pub transfer_s: f64,
+    /// Decode + aggregate (this rank only).
+    pub decode_s: f64,
+}
+
+impl WallClock {
+    pub fn total_s(&self) -> f64 {
+        self.encode_s + self.transfer_s + self.decode_s
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.encode_s == 0.0 && self.transfer_s == 0.0 && self.decode_s == 0.0
+    }
+
+    pub fn add(&mut self, other: &WallClock) {
+        self.encode_s += other.encode_s;
+        self.transfer_s += other.transfer_s;
+        self.decode_s += other.decode_s;
+    }
+}
+
 /// Bits-on-wire accounting for one worker's outbound traffic.
 #[derive(Debug, Clone, Default)]
 pub struct WireStats {

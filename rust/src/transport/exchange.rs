@@ -1,0 +1,707 @@
+//! `SocketExchange`: the collective algorithms over real OS processes.
+//!
+//! One instance lives in each of K processes and runs *this rank's share* of
+//! the same algorithms the simnet coordinators run in-process — all-to-all
+//! broadcast, recompressing/raw ring allreduce, hierarchical two-level
+//! reduce — moving the same encoded wire bytes over the [`Mesh`] instead of
+//! charging virtual time.
+//!
+//! **Bit-parity is the contract** (pinned by `tests/transport_e2e.rs`): with
+//! the same seeds and gradients, the decoded mean out of a K-process socket
+//! run is bit-identical to the in-process simnet golden, arm by arm:
+//!
+//! * encode sessions are seeded exactly as the in-process algorithms seed
+//!   them — `Xoshiro256::stream(seed, rank)` per worker, the leader-ring
+//!   family forked at `seed ^ 0x9E3779B97F4A7C15`;
+//! * the ring reuses [`collectives::ring_segments`] (same bucket-aligned
+//!   layout) and the same `encode_lane` helper, so hop inputs, session RNG
+//!   consumption, and recompression bytes match hop for hop;
+//! * every float accumulation happens in the same order: ring lanes in lane
+//!   order, hierarchical fan-in in worker order, the all-to-all merge
+//!   through the same grouped [`collectives::par_decode_mean`].
+//!
+//! Decoding runs straight off each peer's receive buffer (the borrowed
+//! `FrameView` path inside `decode_add`) — frames are not copied out of the
+//! transport except where an algorithm must *hold* them across hops
+//! (allgather forwarding, member fan-out frames).
+//!
+//! Wall-clock per-phase seconds are measured around every encode, socket
+//! operation, and decode, and surface in [`DistStats`] next to the wire
+//! accounting, which here covers **this rank's outbound traffic** (the
+//! in-process `Exchange` sums all K workers).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::collectives::{self, algo};
+use crate::config::CollectiveSpec;
+use crate::metrics::{WallClock, WireStats};
+use crate::quant::{Codec, EncodeSession};
+use crate::util::rng::Xoshiro256;
+
+use super::net::Mesh;
+
+/// Telemetry from one (or many accumulated) socket exchanges.
+#[derive(Debug, Clone, Default)]
+pub struct DistStats {
+    /// Measured wall-clock seconds per phase, this rank.
+    pub wall: WallClock,
+    /// This rank's outbound traffic.
+    pub wire: WireStats,
+    /// Synchronous hops this rank participated in.
+    pub hops: usize,
+    pub recompressions: u64,
+    pub recompress_err_sq: f64,
+    pub encode_coords: usize,
+    pub decode_coords: usize,
+}
+
+impl DistStats {
+    pub fn add(&mut self, other: &DistStats) {
+        self.wall.add(&other.wall);
+        self.wire.add(&other.wire);
+        self.hops += other.hops;
+        self.recompressions += other.recompressions;
+        self.recompress_err_sq += other.recompress_err_sq;
+        self.encode_coords += other.encode_coords;
+        self.decode_coords += other.decode_coords;
+    }
+}
+
+/// This rank's state for the distributed ring allreduce (also the leader
+/// ring inside the hierarchical backend). Mirrors one worker's slice of
+/// [`collectives::RingAllreduce`].
+struct DistRing {
+    session: Box<dyn EncodeSession>,
+    /// Mesh ranks of the ring members, in ring order.
+    members: Vec<usize>,
+    /// Index of this rank within `members`.
+    pos: usize,
+    recompress: bool,
+    error_feedback: bool,
+    segs: Vec<(usize, usize)>,
+    cur_n: Option<usize>,
+    inflight: Vec<u8>,
+    next_buf: Vec<u8>,
+    /// Completed segment frames, by lane.
+    finals: Vec<Vec<u8>>,
+    acc: Vec<f32>,
+    staging: Vec<f32>,
+    dec: Vec<f32>,
+    /// Error-feedback residual (gradient-sized, persists across steps).
+    residual: Vec<f32>,
+    /// `recompress = false`: own per-segment encodings and the circulating
+    /// per-origin frame sets.
+    pre: Vec<Vec<u8>>,
+    sets: Vec<Vec<Vec<u8>>>,
+    packed: Vec<u8>,
+}
+
+impl DistRing {
+    fn new(
+        codec: &dyn Codec,
+        members: Vec<usize>,
+        pos: usize,
+        seed: u64,
+        recompress: bool,
+        error_feedback: bool,
+    ) -> Self {
+        assert!(pos < members.len());
+        // Same per-member session streams as the in-process ring.
+        let session = codec.session(Xoshiro256::stream(seed, pos as u64));
+        Self {
+            session,
+            members,
+            pos,
+            recompress,
+            error_feedback,
+            segs: Vec::new(),
+            cur_n: None,
+            inflight: Vec::new(),
+            next_buf: Vec::new(),
+            finals: Vec::new(),
+            acc: Vec::new(),
+            staging: Vec::new(),
+            dec: Vec::new(),
+            residual: Vec::new(),
+            pre: Vec::new(),
+            sets: Vec::new(),
+            packed: Vec::new(),
+        }
+    }
+
+    fn ensure_layout(&mut self, codec: &dyn Codec, n: usize) {
+        if self.cur_n == Some(n) {
+            return;
+        }
+        let k = self.members.len();
+        self.segs = collectives::ring_segments(n, k, codec.chunk_align().max(1));
+        let max_len = self.segs.iter().map(|s| s.1).max().unwrap_or(0);
+        if self.acc.len() < max_len {
+            self.acc.resize(max_len, 0.0);
+        }
+        if self.error_feedback {
+            self.residual.clear();
+            self.residual.resize(n, 0.0);
+        }
+        if self.finals.len() != k {
+            self.finals = (0..k).map(|_| Vec::new()).collect();
+        }
+        if !self.recompress {
+            if self.pre.len() != k {
+                self.pre = (0..k).map(|_| Vec::new()).collect();
+            }
+            if self.sets.len() != k {
+                self.sets = (0..k).map(|_| (0..k).map(|_| Vec::new()).collect()).collect();
+            }
+        }
+        self.cur_n = Some(n);
+    }
+
+    fn neighbors(&self) -> (usize, usize) {
+        let k = self.members.len();
+        let next = self.members[(self.pos + 1) % k];
+        let prev = self.members[(self.pos + k - 1) % k];
+        (next, prev)
+    }
+
+    /// Degenerate one-member ring: mirrors the in-process `k == 1` branch
+    /// (one encode/decode of the whole gradient, no traffic).
+    fn run_single(
+        &mut self,
+        codec: &dyn Codec,
+        grad: &[f32],
+        alpha: f32,
+        mean: &mut Vec<f32>,
+        stats: &mut DistStats,
+    ) -> Result<()> {
+        let n = grad.len();
+        let t = Instant::now();
+        let res = if self.error_feedback { Some(&mut self.residual[..]) } else { None };
+        algo::encode_lane(
+            codec,
+            self.session.as_mut(),
+            res,
+            &mut self.staging,
+            &mut self.dec,
+            grad,
+            &mut self.finals[0],
+            None,
+        )?;
+        stats.wall.encode_s += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        mean.clear();
+        mean.resize(n, 0.0);
+        codec.decode_add(&self.finals[0], alpha, mean)?;
+        stats.wall.decode_s += t.elapsed().as_secs_f64();
+        stats.encode_coords += n;
+        stats.decode_coords += n;
+        Ok(())
+    }
+
+    /// Recompressing ring: K−1 reduce-scatter hops (decode incoming, add
+    /// the local lane, re-encode) then K−1 allgather hops forwarding the
+    /// completed frames verbatim. Leaves the frames in `self.finals` (lane
+    /// order — the hierarchical fan-out sends them on) and decodes them
+    /// into `mean`.
+    fn run_recompress(
+        &mut self,
+        codec: &dyn Codec,
+        mesh: &mut Mesh,
+        grad: &[f32],
+        alpha: f32,
+        mean: &mut Vec<f32>,
+        stats: &mut DistStats,
+    ) -> Result<()> {
+        let n = grad.len();
+        self.ensure_layout(codec, n);
+        let k = self.members.len();
+        if k == 1 {
+            return self.run_single(codec, grad, alpha, mean, stats);
+        }
+        let r = self.pos;
+        let ef = self.error_feedback;
+        let (next, prev) = self.neighbors();
+        let mut rec = algo::Recompress::default();
+
+        // Hop-0 message: own segment (a first compression, not counted).
+        let t = Instant::now();
+        {
+            let (off, len) = self.segs[r];
+            let res = if ef { Some(&mut self.residual[off..off + len]) } else { None };
+            algo::encode_lane(
+                codec,
+                self.session.as_mut(),
+                res,
+                &mut self.staging,
+                &mut self.dec,
+                &grad[off..off + len],
+                &mut self.inflight,
+                None,
+            )?;
+        }
+        stats.wall.encode_s += t.elapsed().as_secs_f64();
+
+        // Reduce-scatter: at hop t this rank sends lane (r − t) mod K and
+        // receives lane (r − 1 − t) mod K from its predecessor.
+        for t in 0..k - 1 {
+            let lane_out = (r + k - t) % k;
+            stats.wire.record(self.inflight.len(), self.segs[lane_out].1);
+            let tt = Instant::now();
+            let incoming = mesh.send_recv(next, prev, &self.inflight)?;
+            stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+            stats.hops += 1;
+
+            let lane = (r + 2 * k - 1 - t) % k;
+            let (off, len) = self.segs[lane];
+            let td = Instant::now();
+            let a = &mut self.acc[..len];
+            a.fill(0.0);
+            codec.decode_add(incoming, 1.0, a)?;
+            for (x, g) in a.iter_mut().zip(&grad[off..off + len]) {
+                *x += *g;
+            }
+            stats.wall.decode_s += td.elapsed().as_secs_f64();
+
+            let te = Instant::now();
+            let res = if ef { Some(&mut self.residual[off..off + len]) } else { None };
+            let out: &mut Vec<u8> =
+                if t + 1 == k - 1 { &mut self.finals[lane] } else { &mut self.next_buf };
+            algo::encode_lane(
+                codec,
+                self.session.as_mut(),
+                res,
+                &mut self.staging,
+                &mut self.dec,
+                a,
+                out,
+                Some(&mut rec),
+            )?;
+            stats.wall.encode_s += te.elapsed().as_secs_f64();
+            if t + 1 < k - 1 {
+                std::mem::swap(&mut self.inflight, &mut self.next_buf);
+            }
+        }
+
+        // Allgather: K−1 hops forwarding completed frames verbatim. At hop
+        // h this rank sends the final for lane (r + 1 − h) mod K (hop 0:
+        // its own) and receives the final for lane (r − h) mod K.
+        for h in 0..k - 1 {
+            let lane_out = (r + 1 + k - h) % k;
+            let lane_in = (r + k - h) % k;
+            stats.wire.record(self.finals[lane_out].len(), self.segs[lane_out].1);
+            let tt = Instant::now();
+            let payload = &self.finals[lane_out];
+            let incoming = mesh.send_recv(next, prev, payload)?;
+            self.finals[lane_in].clear();
+            self.finals[lane_in].extend_from_slice(incoming);
+            stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+            stats.hops += 1;
+        }
+
+        // Same final decode as every in-process replica: lane order.
+        let td = Instant::now();
+        mean.clear();
+        mean.resize(n, 0.0);
+        for (j, f) in self.finals.iter().enumerate() {
+            let (off, len) = self.segs[j];
+            codec.decode_add(f, alpha, &mut mean[off..off + len])?;
+        }
+        stats.wall.decode_s += td.elapsed().as_secs_f64();
+        stats.encode_coords += n;
+        stats.decode_coords += 2 * n;
+        stats.recompressions += rec.count;
+        stats.recompress_err_sq += rec.err_sq;
+        Ok(())
+    }
+
+    /// Raw (no-recompression) ring: pre-encode all K segments in segment
+    /// order, circulate every origin's full frame set store-and-forward,
+    /// reduce locally in worker order — bit-identical to the all-to-all
+    /// mean, like the in-process variant.
+    fn run_raw(
+        &mut self,
+        codec: &dyn Codec,
+        mesh: &mut Mesh,
+        grad: &[f32],
+        alpha: f32,
+        mean: &mut Vec<f32>,
+        stats: &mut DistStats,
+    ) -> Result<()> {
+        let n = grad.len();
+        self.ensure_layout(codec, n);
+        let k = self.members.len();
+        if k == 1 {
+            return self.run_single(codec, grad, alpha, mean, stats);
+        }
+        let r = self.pos;
+        let (next, prev) = self.neighbors();
+
+        let t = Instant::now();
+        for j in 0..k {
+            let (off, len) = self.segs[j];
+            self.session.encode_into(&grad[off..off + len], &mut self.pre[j]);
+        }
+        stats.wall.encode_s += t.elapsed().as_secs_f64();
+        stats.encode_coords += n;
+        for (j, m) in self.pre.iter().enumerate() {
+            self.sets[r][j].clear();
+            self.sets[r][j].extend_from_slice(m);
+        }
+
+        // K−1 store-and-forward hops: at hop h send origin (r − h) mod K's
+        // set, receive origin (r − 1 − h) mod K's.
+        for h in 0..k - 1 {
+            let origin_out = (r + k - h) % k;
+            let origin_in = (r + 2 * k - 1 - h) % k;
+            pack_set(&self.sets[origin_out], &mut self.packed);
+            for (j, m) in self.sets[origin_out].iter().enumerate() {
+                stats.wire.record(m.len(), self.segs[j].1);
+            }
+            let tt = Instant::now();
+            let incoming = mesh.send_recv(next, prev, &self.packed)?;
+            unpack_set(incoming, k, &mut self.sets[origin_in])?;
+            stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+            stats.hops += 1;
+        }
+
+        // Local reduction in worker order, segments in segment order — the
+        // all-to-all accumulation order.
+        let td = Instant::now();
+        mean.clear();
+        mean.resize(n, 0.0);
+        for row in self.sets.iter() {
+            for (j, m) in row.iter().enumerate() {
+                let (off, len) = self.segs[j];
+                codec.decode_add(m, alpha, &mut mean[off..off + len])?;
+            }
+        }
+        stats.wall.decode_s += td.elapsed().as_secs_f64();
+        stats.decode_coords += k * n;
+        Ok(())
+    }
+}
+
+/// Concatenate a frame set into one transport frame: `u32` count, then per
+/// frame `u32` length + bytes (all LE).
+fn pack_set(frames: &[Vec<u8>], out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&(frames.len() as u32).to_le_bytes());
+    for f in frames {
+        out.extend_from_slice(&(f.len() as u32).to_le_bytes());
+        out.extend_from_slice(f);
+    }
+}
+
+fn unpack_set(bytes: &[u8], expect: usize, out: &mut [Vec<u8>]) -> Result<()> {
+    ensure!(bytes.len() >= 4, "frame set too short");
+    let count = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+    ensure!(count == expect, "frame set carries {count} frames, expected {expect}");
+    let mut at = 4usize;
+    for slot in out.iter_mut() {
+        ensure!(bytes.len() >= at + 4, "truncated frame set");
+        let len =
+            u32::from_le_bytes([bytes[at], bytes[at + 1], bytes[at + 2], bytes[at + 3]]) as usize;
+        at += 4;
+        ensure!(bytes.len() >= at + len, "truncated frame in set");
+        slot.clear();
+        slot.extend_from_slice(&bytes[at..at + len]);
+        at += len;
+    }
+    ensure!(at == bytes.len(), "trailing bytes after frame set");
+    Ok(())
+}
+
+/// Per-collective state behind [`SocketExchange`].
+enum Backend {
+    AllToAll {
+        session: Box<dyn EncodeSession>,
+        msg: Vec<u8>,
+    },
+    Ring {
+        ring: DistRing,
+    },
+    Hier {
+        session: Box<dyn EncodeSession>,
+        msg: Vec<u8>,
+        group: usize,
+        /// Leader ranks only: the recompressing ring over group sums.
+        ring: Option<DistRing>,
+        group_sum: Vec<f32>,
+        /// Member ranks: leader-ring segment layout + received final frames.
+        lsegs: Vec<(usize, usize)>,
+        lfinals: Vec<Vec<u8>>,
+        lcur_n: Option<usize>,
+    },
+}
+
+/// One rank's end of a multi-process collective exchange.
+pub struct SocketExchange {
+    codec: Arc<dyn Codec>,
+    mesh: Mesh,
+    backend: Backend,
+    label: String,
+}
+
+impl SocketExchange {
+    /// Build this rank's backend. `seed` must be the same value the
+    /// in-process golden passes to [`collectives::build`] (the trainer uses
+    /// `cfg.seed ^ 0xF00D`) for bit-parity.
+    pub fn new(
+        spec: &CollectiveSpec,
+        codec: Arc<dyn Codec>,
+        mesh: Mesh,
+        seed: u64,
+    ) -> Result<Self> {
+        let rank = mesh.rank;
+        let world = mesh.world;
+        let label = spec.label();
+        let backend = match *spec {
+            CollectiveSpec::AllToAll => Backend::AllToAll {
+                session: codec.session(Xoshiro256::stream(seed, rank as u64)),
+                msg: Vec::new(),
+            },
+            CollectiveSpec::Ring { recompress, error_feedback } => Backend::Ring {
+                ring: DistRing::new(
+                    codec.as_ref(),
+                    (0..world).collect(),
+                    rank,
+                    seed,
+                    recompress,
+                    error_feedback,
+                ),
+            },
+            CollectiveSpec::Hierarchical { group } => {
+                let group = group.min(world).max(1);
+                let leaders: Vec<usize> =
+                    (0..world.div_ceil(group)).map(|i| i * group).collect();
+                let ring = if rank % group == 0 {
+                    let li = rank / group;
+                    // Same forked stream family as the in-process leader ring.
+                    Some(DistRing::new(
+                        codec.as_ref(),
+                        leaders,
+                        li,
+                        seed ^ 0x9E3779B97F4A7C15,
+                        true,
+                        false,
+                    ))
+                } else {
+                    None
+                };
+                Backend::Hier {
+                    session: codec.session(Xoshiro256::stream(seed, rank as u64)),
+                    msg: Vec::new(),
+                    group,
+                    ring,
+                    group_sum: Vec::new(),
+                    lsegs: Vec::new(),
+                    lfinals: Vec::new(),
+                    lcur_n: None,
+                }
+            }
+        };
+        Ok(Self { codec, mesh, backend, label })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.mesh.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.mesh.world
+    }
+
+    pub fn name(&self) -> String {
+        format!("{} over {} ({} ranks)", self.label, self.codec.name(), self.mesh.world)
+    }
+
+    /// Run one synchronous exchange of this rank's gradient; `mean`
+    /// receives the decoded global mean (identical bits on every rank).
+    pub fn exchange(&mut self, grad: &[f32], mean: &mut Vec<f32>) -> Result<DistStats> {
+        let n = grad.len();
+        let mut stats = DistStats::default();
+        let SocketExchange { codec, mesh, backend, .. } = self;
+        let codec: &dyn Codec = &**codec;
+
+        match backend {
+            Backend::AllToAll { session, msg } => {
+                let k = mesh.world;
+                let t = Instant::now();
+                session.encode_into(grad, msg);
+                stats.wall.encode_s += t.elapsed().as_secs_f64();
+                stats.encode_coords += n;
+                stats.wire.record_fanout(msg.len(), n, k.saturating_sub(1));
+
+                let t = Instant::now();
+                mesh.exchange_all(msg)?;
+                stats.wall.transfer_s += t.elapsed().as_secs_f64();
+                stats.hops += 1;
+
+                // Same grouped merge as in-process: messages in worker
+                // order, this rank's own bytes included at its own index.
+                let t = Instant::now();
+                let rank = mesh.rank;
+                let msgs: Vec<&[u8]> = (0..k)
+                    .map(|w| if w == rank { msg.as_slice() } else { mesh.frame(w) })
+                    .collect();
+                *mean = collectives::par_decode_mean(
+                    &msgs,
+                    n,
+                    1.0 / k as f32,
+                    codec.decode_threads(),
+                    |m, a, acc, th| codec.decode_add_threads(m, a, acc, th),
+                )?;
+                stats.wall.decode_s += t.elapsed().as_secs_f64();
+                stats.decode_coords += k * n;
+            }
+
+            Backend::Ring { ring } => {
+                ensure!(
+                    codec.supports_chunked_encode(),
+                    "{} sessions cannot encode ring segments (stateful fixed layout) — \
+                     use the all-to-all collective for this codec",
+                    codec.name()
+                );
+                let alpha = 1.0 / mesh.world as f32;
+                if ring.recompress {
+                    ring.run_recompress(codec, mesh, grad, alpha, mean, &mut stats)?;
+                } else {
+                    ring.run_raw(codec, mesh, grad, alpha, mean, &mut stats)?;
+                }
+            }
+
+            Backend::Hier { session, msg, group, ring, group_sum, lsegs, lfinals, lcur_n } => {
+                ensure!(
+                    codec.supports_chunked_encode(),
+                    "{} sessions cannot re-encode leader-ring segments (stateful fixed \
+                     layout) — use the all-to-all collective for this codec",
+                    codec.name()
+                );
+                let world = mesh.world;
+                let rank = mesh.rank;
+                let g = *group;
+                let gi = rank / g;
+                let leader = gi * g;
+                let gsize = g.min(world - leader);
+                let lcount = world.div_ceil(g);
+
+                // Phase 1 — every rank encodes its full gradient.
+                let t = Instant::now();
+                session.encode_into(grad, msg);
+                stats.wall.encode_s += t.elapsed().as_secs_f64();
+                stats.encode_coords += n;
+
+                if let Some(ring) = ring.as_mut() {
+                    // Leader: fan-in, decode-sum in worker order (own
+                    // message first — it passes through encode/decode even
+                    // though it never crosses a link, as in Algorithm 1).
+                    let td = Instant::now();
+                    group_sum.clear();
+                    group_sum.resize(n, 0.0);
+                    codec.decode_add(msg, 1.0, group_sum)?;
+                    stats.wall.decode_s += td.elapsed().as_secs_f64();
+                    stats.decode_coords += n;
+                    for m in leader + 1..leader + gsize {
+                        let tt = Instant::now();
+                        mesh.recv_from(m)?;
+                        stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+                        let td = Instant::now();
+                        codec.decode_add(mesh.frame(m), 1.0, group_sum)?;
+                        stats.wall.decode_s += td.elapsed().as_secs_f64();
+                        stats.decode_coords += n;
+                    }
+                    if gsize > 1 {
+                        stats.hops += 1;
+                    }
+
+                    // Phase 2 — recompressing ring across leaders; the
+                    // final decode averages over the global worker count.
+                    ring.run_recompress(
+                        codec,
+                        mesh,
+                        group_sum,
+                        1.0 / world as f32,
+                        mean,
+                        &mut stats,
+                    )?;
+
+                    // Phase 3 — fan the final frames out verbatim, lane
+                    // order (`mean` is already materialised by the ring).
+                    if gsize > 1 {
+                        let tt = Instant::now();
+                        for m in leader + 1..leader + gsize {
+                            for f in ring.finals.iter() {
+                                mesh.send_to(m, f)?;
+                            }
+                        }
+                        stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+                        stats.hops += 1;
+                        for (j, f) in ring.finals.iter().enumerate() {
+                            stats.wire.record_fanout(f.len(), ring.segs[j].1, gsize - 1);
+                        }
+                    }
+                } else {
+                    // Member: send the full-gradient frame to the leader…
+                    stats.wire.record(msg.len(), n);
+                    let tt = Instant::now();
+                    mesh.send_to(leader, msg)?;
+                    stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+                    stats.hops += 1;
+
+                    // …then receive the leader ring's final frames (lane
+                    // order) and decode them exactly as the leaders do.
+                    if *lcur_n != Some(n) {
+                        *lsegs =
+                            collectives::ring_segments(n, lcount, codec.chunk_align().max(1));
+                        *lfinals = (0..lcount).map(|_| Vec::new()).collect();
+                        *lcur_n = Some(n);
+                    }
+                    let tt = Instant::now();
+                    for j in 0..lcount {
+                        mesh.recv_from(leader)?;
+                        let f = mesh.frame(leader);
+                        lfinals[j].clear();
+                        lfinals[j].extend_from_slice(f);
+                    }
+                    stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+                    stats.hops += 1;
+
+                    let td = Instant::now();
+                    mean.clear();
+                    mean.resize(n, 0.0);
+                    for (j, f) in lfinals.iter().enumerate() {
+                        let (off, len) = lsegs[j];
+                        codec.decode_add(f, 1.0 / world as f32, &mut mean[off..off + len])?;
+                    }
+                    stats.wall.decode_s += td.elapsed().as_secs_f64();
+                    stats.decode_coords += n;
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let frames = vec![vec![1u8, 2, 3], vec![], vec![9u8; 70000]];
+        let mut packed = Vec::new();
+        pack_set(&frames, &mut packed);
+        let mut out = vec![Vec::new(); 3];
+        unpack_set(&packed, 3, &mut out).unwrap();
+        assert_eq!(out, frames);
+        // wrong count, truncation, trailing garbage all rejected
+        assert!(unpack_set(&packed, 2, &mut out[..2].to_vec()).is_err());
+        assert!(unpack_set(&packed[..packed.len() - 1], 3, &mut out).is_err());
+        let mut extra = packed.clone();
+        extra.push(0);
+        assert!(unpack_set(&extra, 3, &mut out).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Length-prefixed framing over a byte stream.
+//!
+//! The wire unit is `[u32 LE payload length][payload bytes]`. The payload is
+//! an opaque blob — in practice an encoded gradient frame produced by an
+//! [`EncodeSession`](crate::quant::EncodeSession), which carries its own
+//! magic/version header and is validated by the hardened decoder after the
+//! transport hands it over. This module only guarantees that frame
+//! *boundaries* survive a stream that delivers bytes in arbitrary chunks.
+//!
+//! Two hostile-input properties are load-bearing (the streaming robustness
+//! suite pins both):
+//!
+//! * **No hangs**: every read loop forwards the underlying stream's errors,
+//!   so a socket with a read timeout surfaces `WouldBlock`/`TimedOut` as a
+//!   clean `Err` instead of blocking forever. EOF mid-prefix or mid-payload
+//!   is an error, not silence; EOF *between* frames is the clean
+//!   end-of-stream `Ok(None)`.
+//! * **No allocation blow-ups**: a length prefix is a claim, not a budget.
+//!   [`FrameReader`] grows its buffer at most [`READ_CHUNK`] bytes past what
+//!   the peer actually delivered, so a prefix lying about a huge payload
+//!   costs memory proportional to the bytes received, never to the claim.
+
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Hard cap on a single frame's payload. Far above any encoded-gradient
+/// frame the repo produces (a 1B-coordinate fp32 gradient is 4 GiB, but no
+/// collective ships whole fp32 gradients — QSGD frames are 4–32× smaller and
+/// segmented by the ring), yet small enough that a hostile length prefix is
+/// rejected before any allocation begins.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Growth step for the receive buffer while a frame's payload streams in.
+/// Also the bound on how far the buffer may extend past received bytes.
+pub const READ_CHUNK: usize = 64 * 1024;
+
+/// Write one framed payload: `u32` LE length prefix, payload bytes, flush.
+///
+/// Works over any [`Write`] — a `TcpStream`/`UnixStream` with a write
+/// timeout turns a stalled peer into an error here rather than a hang.
+pub fn write_frame<W: Write + ?Sized>(w: &mut W, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME,
+        "frame payload of {} bytes exceeds the {} byte cap",
+        payload.len(),
+        MAX_FRAME
+    );
+    let hdr = (payload.len() as u32).to_le_bytes();
+    w.write_all(&hdr).context("writing frame length prefix")?;
+    w.write_all(payload).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Incremental frame reader with a reusable receive buffer.
+///
+/// One `FrameReader` per peer stream: each [`read_frame`](Self::read_frame)
+/// call returns a borrowed view of the payload, valid until the next call —
+/// decoding runs straight off this buffer (the zero-copy
+/// `FrameView`/`decode_add` path), no per-frame allocation in steady state.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max_frame: usize,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::with_max(MAX_FRAME)
+    }
+
+    /// Reader with a custom payload cap (tests use small caps to exercise
+    /// the rejection path cheaply).
+    pub fn with_max(max_frame: usize) -> Self {
+        Self { buf: Vec::new(), max_frame }
+    }
+
+    /// Read the next frame. Returns:
+    ///
+    /// * `Ok(Some(payload))` — one complete frame, borrowed from the
+    ///   internal buffer (valid until the next call);
+    /// * `Ok(None)` — clean end of stream (EOF exactly on a frame boundary);
+    /// * `Err(..)` — EOF mid-prefix or mid-payload, a length prefix above
+    ///   the cap, or any underlying I/O error (including read timeouts).
+    ///
+    /// Partial reads are handled throughout: the stream may deliver one byte
+    /// at a time and the frame still reassembles byte-identically.
+    pub fn read_frame<R: Read + ?Sized>(&mut self, r: &mut R) -> Result<Option<&[u8]>> {
+        let mut hdr = [0u8; 4];
+        let mut got = 0usize;
+        while got < 4 {
+            match r.read(&mut hdr[got..]) {
+                Ok(0) => {
+                    if got == 0 {
+                        return Ok(None);
+                    }
+                    bail!("stream closed mid length prefix ({got}/4 bytes)");
+                }
+                Ok(k) => got += k,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(anyhow::Error::new(e).context("reading frame length prefix"))
+                }
+            }
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        ensure!(
+            len <= self.max_frame,
+            "frame length prefix claims {len} bytes, above the {} byte cap",
+            self.max_frame
+        );
+        // Grow chunkwise as bytes arrive: a lying prefix cannot make us
+        // allocate more than (received + READ_CHUNK) bytes.
+        self.buf.clear();
+        let mut filled = 0usize;
+        while filled < len {
+            let step = (len - filled).min(READ_CHUNK);
+            if self.buf.len() < filled + step {
+                self.buf.resize(filled + step, 0);
+            }
+            match r.read(&mut self.buf[filled..filled + step]) {
+                Ok(0) => bail!("stream closed mid frame: got {filled} of {len} payload bytes"),
+                Ok(k) => filled += k,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(anyhow::Error::new(e).context("reading frame payload")),
+            }
+        }
+        self.buf.truncate(len);
+        Ok(Some(&self.buf))
+    }
+
+    /// The most recently completed frame (empty before the first one).
+    /// Lets callers re-borrow a frame after the `&mut self` borrow of
+    /// [`read_frame`](Self::read_frame) has ended.
+    pub fn last(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Current receive-buffer capacity — the robustness suite asserts this
+    /// stays proportional to bytes received, not to hostile length claims.
+    pub fn buf_capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_and_reuse() {
+        let payloads: Vec<Vec<u8>> =
+            vec![vec![], vec![7u8; 1], (0..=255u8).collect(), vec![3u8; 200_000]];
+        let mut wire = Vec::new();
+        for p in &payloads {
+            write_frame(&mut wire, p).unwrap();
+        }
+        let mut rd = FrameReader::new();
+        let mut cur = Cursor::new(wire);
+        for p in &payloads {
+            let got = rd.read_frame(&mut cur).unwrap().expect("frame present");
+            assert_eq!(got, p.as_slice());
+        }
+        assert!(rd.read_frame(&mut cur).unwrap().is_none(), "clean EOF after last frame");
+    }
+
+    #[test]
+    fn eof_on_boundary_is_none_midframe_is_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[9u8; 50]).unwrap();
+        // Boundary EOF.
+        let mut rd = FrameReader::new();
+        let mut cur = Cursor::new(wire.clone());
+        assert!(rd.read_frame(&mut cur).unwrap().is_some());
+        assert!(rd.read_frame(&mut cur).unwrap().is_none());
+        // Every strict prefix is an error (mid-prefix or mid-payload), except
+        // the empty prefix which is a clean end of stream.
+        for cut in 0..wire.len() {
+            let mut rd = FrameReader::new();
+            let mut cur = Cursor::new(wire[..cut].to_vec());
+            let got = rd.read_frame(&mut cur);
+            if cut == 0 {
+                assert!(got.unwrap().is_none());
+            } else {
+                assert!(got.is_err(), "cut at {cut} must be rejected");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        wire.extend_from_slice(&[0u8; 16]);
+        let mut rd = FrameReader::new();
+        let err = rd.read_frame(&mut Cursor::new(wire)).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+        assert_eq!(rd.buf_capacity(), 0, "no allocation for a rejected prefix");
+    }
+
+    #[test]
+    fn lying_length_prefix_allocates_proportional_to_delivery() {
+        // Claims 512 MiB (under the cap), delivers 100 bytes, then EOF.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(512u32 << 20).to_le_bytes());
+        wire.extend_from_slice(&[1u8; 100]);
+        let mut rd = FrameReader::new();
+        let err = rd.read_frame(&mut Cursor::new(wire)).unwrap_err();
+        assert!(err.to_string().contains("mid frame"), "{err}");
+        assert!(
+            rd.buf_capacity() <= 2 * READ_CHUNK,
+            "buffer capacity {} must not track the 512MiB claim",
+            rd.buf_capacity()
+        );
+    }
+
+    #[test]
+    fn write_rejects_over_cap_payload() {
+        // Construct no actual huge buffer: check the guard arithmetic via a
+        // zero-length write with a fake length is impossible, so just assert
+        // the cap constant round-trips through u32.
+        assert!(MAX_FRAME <= u32::MAX as usize);
+    }
+}

@@ -1,0 +1,42 @@
+//! Real multi-process transport: the collective algorithms over OS sockets.
+//!
+//! Everything below `collectives` in this crate moves *real encoded bytes*
+//! but charges *virtual* time on a simulated interconnect. This module is
+//! the other half of that bargain: the same algorithms, the same wire
+//! bytes, across K actual processes connected by TCP or Unix-domain
+//! sockets — so the simnet's modeled α–β numbers can be checked against
+//! measured wall-clock on a real loopback (and, eventually, a real NIC).
+//!
+//! Layers, bottom up:
+//!
+//! * [`frame`] — length-prefixed message framing over any byte stream:
+//!   partial-read loops, a hard length cap *before* allocation, reusable
+//!   receive buffers that grow proportionally to bytes actually delivered
+//!   (a length-lying peer cannot OOM the receiver).
+//! * [`net`] — endpoints (`tcp:<addr>` / `uds:<path>`), connect with
+//!   bounded retry + backoff, accept with deadlines, and the [`net::Mesh`]:
+//!   a fully-connected K-process group built from one rendezvous address,
+//!   every blocking socket operation bounded by a configurable timeout —
+//!   a dead peer is a clean error, never a hang.
+//! * [`exchange`] — [`exchange::SocketExchange`], one rank's end of the
+//!   all-to-all / ring / hierarchical collectives, bit-identical to the
+//!   in-process implementations (same sessions, same segment layout, same
+//!   accumulation order), measuring real per-phase wall-clock.
+//! * [`trainer`] — [`trainer::train_rank`], one rank's synchronous SGD
+//!   loop producing the same `RunResult` the simnet trainer does, with the
+//!   measured [`crate::metrics::WallClock`] filled in next to the modeled
+//!   breakdown.
+//!
+//! The `transport_e2e` CI lane runs the cross-process determinism goldens
+//! (spawned `qsgd exchange-worker` processes over loopback TCP and UDS)
+//! under a hard timeout.
+
+pub mod exchange;
+pub mod frame;
+pub mod net;
+pub mod trainer;
+
+pub use exchange::{DistStats, SocketExchange};
+pub use frame::{write_frame, FrameReader, MAX_FRAME};
+pub use net::{connect_retry, Conn, Endpoint, Listener, Mesh, MeshConfig};
+pub use trainer::{train_rank, DistTrainConfig};

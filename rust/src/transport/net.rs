@@ -1,0 +1,704 @@
+//! Sockets, rendezvous, and the full-mesh peer fabric.
+//!
+//! [`Endpoint`] abstracts TCP (`host:port`) and Unix-domain (`path`)
+//! addresses behind one enum; [`Conn`]/[`Listener`] wrap the corresponding
+//! std socket types with uniform timeout control. [`Mesh::connect`] brings K
+//! processes to a fully connected peer fabric in three bounded steps:
+//!
+//! 1. every rank binds its own peer listener (TCP: ephemeral port on the
+//!    base host; UDS: `<path>.r<rank>`) **before** rendezvous, so later
+//!    dials land in the accept backlog rather than racing the listener;
+//! 2. rank 0 serves an address table at the base endpoint: ranks 1..K
+//!    register `(rank, listen address)` and block until the full table
+//!    arrives — which doubles as the startup barrier;
+//! 3. for every pair `i < j`, rank `j` dials rank `i` and announces itself
+//!    with a hello frame; rank `i` accepts `K−1−i` inbound connections.
+//!
+//! Every blocking operation here is bounded: connects retry with capped
+//! exponential backoff against a deadline, accepts poll a nonblocking
+//! listener against the same deadline, and established connections carry
+//! read/write timeouts. A wedged peer therefore surfaces as a clean `Err`
+//! within the configured budget — the CI lane's `timeout` wrapper is a
+//! backstop, never the mechanism.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::frame::{self, FrameReader};
+
+/// A dialable / bindable address for one side of the transport.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP `host:port` (port 0 binds an ephemeral port).
+    Tcp(String),
+    /// Unix-domain socket path.
+    #[cfg(unix)]
+    Uds(PathBuf),
+}
+
+impl Endpoint {
+    /// Human-readable form, also the wire form used in the address table.
+    pub fn describe(&self) -> String {
+        match self {
+            Endpoint::Tcp(a) => format!("tcp:{a}"),
+            #[cfg(unix)]
+            Endpoint::Uds(p) => format!("uds:{}", p.display()),
+        }
+    }
+
+    /// Parse the wire form emitted by [`describe`](Self::describe).
+    pub fn from_wire(s: &str) -> Result<Endpoint> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            return Ok(Endpoint::Tcp(addr.to_string()));
+        }
+        if let Some(path) = s.strip_prefix("uds:") {
+            #[cfg(unix)]
+            return Ok(Endpoint::Uds(PathBuf::from(path)));
+            #[cfg(not(unix))]
+            bail!("unix-domain endpoint '{path}' is not supported on this platform");
+        }
+        bail!("unrecognized endpoint '{s}' (expected tcp:<host:port> or uds:<path>)")
+    }
+
+    /// The listener endpoint rank `rank` binds for inbound mesh dials,
+    /// derived from the rendezvous base: TCP reuses the base host with an
+    /// ephemeral port (the actual port travels through the address table);
+    /// UDS appends a `.r<rank>` suffix.
+    pub fn listener_for_rank(&self, rank: usize) -> Result<Endpoint> {
+        match self {
+            Endpoint::Tcp(addr) => {
+                let host = addr
+                    .rsplit_once(':')
+                    .map(|(h, _)| h)
+                    .ok_or_else(|| anyhow!("tcp address '{addr}' must be host:port"))?;
+                let _ = rank;
+                Ok(Endpoint::Tcp(format!("{host}:0")))
+            }
+            #[cfg(unix)]
+            Endpoint::Uds(p) => {
+                let mut os = p.as_os_str().to_os_string();
+                os.push(format!(".r{rank}"));
+                Ok(Endpoint::Uds(PathBuf::from(os)))
+            }
+        }
+    }
+}
+
+/// One established stream connection, TCP or UDS.
+pub enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(UnixStream),
+}
+
+impl Conn {
+    /// Apply the same timeout to reads and writes (`None` clears both).
+    pub fn set_timeouts(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Conn::Tcp(s) => {
+                s.set_read_timeout(t).context("setting tcp read timeout")?;
+                s.set_write_timeout(t).context("setting tcp write timeout")?;
+            }
+            #[cfg(unix)]
+            Conn::Uds(s) => {
+                s.set_read_timeout(t).context("setting uds read timeout")?;
+                s.set_write_timeout(t).context("setting uds write timeout")?;
+            }
+        }
+        Ok(())
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    /// Independent handle over the same socket, so one thread can write
+    /// while another reads (the deadlock-free exchange schedule relies on
+    /// this split).
+    pub fn try_clone(&self) -> Result<Conn> {
+        Ok(match self {
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone().context("cloning tcp stream")?),
+            #[cfg(unix)]
+            Conn::Uds(s) => Conn::Uds(s.try_clone().context("cloning uds stream")?),
+        })
+    }
+
+    fn tune(&self) {
+        // Latency matters more than throughput for small quantized frames;
+        // Nagle would add a delayed-ack round trip per ring hop.
+        if let Conn::Tcp(s) = self {
+            let _ = s.set_nodelay(true);
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listening socket, TCP or UDS.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(UnixListener),
+}
+
+impl Listener {
+    pub fn bind(ep: &Endpoint) -> Result<Listener> {
+        match ep {
+            Endpoint::Tcp(addr) => Ok(Listener::Tcp(
+                TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("binding tcp listener at {addr}"))?,
+            )),
+            #[cfg(unix)]
+            Endpoint::Uds(p) => {
+                // A stale socket file from a previous crashed run would make
+                // bind fail with AddrInUse even though nothing listens.
+                if p.exists() {
+                    let _ = std::fs::remove_file(p);
+                }
+                Ok(Listener::Uds(
+                    UnixListener::bind(p)
+                        .with_context(|| format!("binding unix listener at {}", p.display()))?,
+                ))
+            }
+        }
+    }
+
+    /// The actual bound endpoint (resolves TCP port 0 to the real port).
+    pub fn local_endpoint(&self) -> Result<Endpoint> {
+        match self {
+            Listener::Tcp(l) => {
+                Ok(Endpoint::Tcp(l.local_addr().context("tcp local addr")?.to_string()))
+            }
+            #[cfg(unix)]
+            Listener::Uds(l) => {
+                let addr = l.local_addr().context("uds local addr")?;
+                let p =
+                    addr.as_pathname().ok_or_else(|| anyhow!("unnamed unix listener"))?;
+                Ok(Endpoint::Uds(p.to_path_buf()))
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept_raw(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.accept().map(|(s, _)| Conn::Uds(s)),
+        }
+    }
+
+    /// Accept one connection, polling a nonblocking listener so the wait is
+    /// bounded by `deadline` instead of blocking forever.
+    pub fn accept_deadline(&self, deadline: Instant) -> Result<Conn> {
+        self.set_nonblocking(true).context("marking listener nonblocking")?;
+        let conn = loop {
+            match self.accept_raw() {
+                Ok(c) => break c,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!("accept timed out waiting for a peer to connect");
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    return Err(anyhow::Error::new(e).context("accepting peer connection"))
+                }
+            }
+        };
+        self.set_nonblocking(false).context("restoring blocking listener")?;
+        conn.set_nonblocking(false).context("marking accepted stream blocking")?;
+        Ok(conn)
+    }
+}
+
+fn try_connect(ep: &Endpoint, deadline: Instant) -> io::Result<Conn> {
+    match ep {
+        Endpoint::Tcp(addr) => {
+            let sa = addr.to_socket_addrs()?.next().ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("no socket address resolves for '{addr}'"),
+                )
+            })?;
+            // Per-attempt budget: short enough to retry, never past deadline.
+            let budget = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(10))
+                .min(Duration::from_millis(500));
+            Ok(Conn::Tcp(TcpStream::connect_timeout(&sa, budget)?))
+        }
+        #[cfg(unix)]
+        Endpoint::Uds(p) => Ok(Conn::Uds(UnixStream::connect(p)?)),
+    }
+}
+
+/// Dial with bounded retry: capped exponential backoff (2ms doubling to
+/// 100ms) until `total` elapses. Tolerates the target rank binding its
+/// listener slightly later than us — the normal case at startup.
+pub fn connect_retry(ep: &Endpoint, total: Duration) -> Result<Conn> {
+    let deadline = Instant::now() + total;
+    let mut backoff = Duration::from_millis(2);
+    let mut last: Option<io::Error> = None;
+    loop {
+        match try_connect(ep, deadline) {
+            Ok(c) => {
+                c.tune();
+                return Ok(c);
+            }
+            Err(e) => last = Some(e),
+        }
+        if Instant::now() + backoff >= deadline {
+            bail!(
+                "connect to {} timed out after {:.1}s (last error: {})",
+                ep.describe(),
+                total.as_secs_f64(),
+                last.map(|e| e.to_string()).unwrap_or_else(|| "none".into())
+            );
+        }
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(Duration::from_millis(100));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous wire helpers (tiny hand-rolled frames; no serde in the build)
+// ---------------------------------------------------------------------------
+
+fn encode_hello(rank: usize, ep: &Endpoint) -> Vec<u8> {
+    let addr = ep.describe();
+    let mut out = Vec::with_capacity(4 + addr.len());
+    out.extend_from_slice(&(rank as u32).to_le_bytes());
+    out.extend_from_slice(addr.as_bytes());
+    out
+}
+
+fn decode_hello(b: &[u8]) -> Result<(usize, Endpoint)> {
+    ensure!(b.len() >= 4, "hello frame too short ({} bytes)", b.len());
+    let rank = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+    let addr = std::str::from_utf8(&b[4..]).context("hello address is not utf-8")?;
+    Ok((rank, Endpoint::from_wire(addr)?))
+}
+
+fn encode_table(eps: &[Endpoint]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(eps.len() as u32).to_le_bytes());
+    for ep in eps {
+        let s = ep.describe();
+        out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        out.extend_from_slice(s.as_bytes());
+    }
+    out
+}
+
+fn decode_table(b: &[u8]) -> Result<Vec<Endpoint>> {
+    ensure!(b.len() >= 4, "address table frame too short");
+    let world = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+    ensure!(world <= 1 << 16, "address table claims {world} ranks");
+    let mut eps = Vec::with_capacity(world);
+    let mut at = 4usize;
+    for _ in 0..world {
+        ensure!(b.len() >= at + 4, "truncated address table");
+        let len = u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]]) as usize;
+        at += 4;
+        ensure!(b.len() >= at + len, "truncated address table entry");
+        let s = std::str::from_utf8(&b[at..at + len]).context("table entry is not utf-8")?;
+        eps.push(Endpoint::from_wire(s)?);
+        at += len;
+    }
+    ensure!(at == b.len(), "trailing bytes after address table");
+    Ok(eps)
+}
+
+// ---------------------------------------------------------------------------
+// Mesh
+// ---------------------------------------------------------------------------
+
+/// Connection setup parameters for [`Mesh::connect`].
+#[derive(Debug, Clone)]
+pub struct MeshConfig {
+    pub rank: usize,
+    pub world: usize,
+    /// Read/write timeout on every established connection: the bound on any
+    /// single blocking exchange operation.
+    pub io_timeout: Duration,
+    /// Total budget for rendezvous + mesh dialing (covers the slowest rank's
+    /// process startup, so it is usually much larger than `io_timeout`).
+    pub connect_timeout: Duration,
+}
+
+struct Peer {
+    /// Read half (the original stream).
+    reader: Conn,
+    /// Write half (`try_clone` of the same socket).
+    writer: Conn,
+    rbuf: FrameReader,
+}
+
+impl Peer {
+    fn new(conn: Conn) -> Result<Peer> {
+        conn.tune();
+        let writer = conn.try_clone()?;
+        Ok(Peer { reader: conn, writer, rbuf: FrameReader::new() })
+    }
+}
+
+/// Fully connected peer fabric for one rank: a framed, timeout-bounded
+/// stream to every other rank, plus the concurrent send/receive schedules
+/// the collectives need (all-to-all exchange and ring hops).
+///
+/// Deadlock freedom: every schedule pushes writes onto a scoped helper
+/// thread while the calling thread drains reads, and both sides walk peers
+/// in ascending rank order. No rank ever blocks a read behind its own
+/// unsent writes, so the global wait graph stays acyclic; socket timeouts
+/// bound the damage if a peer dies anyway.
+pub struct Mesh {
+    pub rank: usize,
+    pub world: usize,
+    peers: Vec<Option<Peer>>,
+}
+
+impl Mesh {
+    /// Establish the full mesh (see module docs for the three-step dance).
+    pub fn connect(base: &Endpoint, cfg: &MeshConfig) -> Result<Mesh> {
+        ensure!(cfg.world >= 1, "world size must be at least 1");
+        ensure!(
+            cfg.rank < cfg.world,
+            "rank {} out of range for world size {}",
+            cfg.rank,
+            cfg.world
+        );
+        if cfg.world == 1 {
+            return Ok(Mesh { rank: 0, world: 1, peers: vec![None] });
+        }
+
+        let listener = Listener::bind(&base.listener_for_rank(cfg.rank)?)?;
+        let my_ep = listener.local_endpoint()?;
+        let deadline = Instant::now() + cfg.connect_timeout;
+
+        // Step 2: rendezvous through rank 0's address table.
+        let table: Vec<Endpoint> = if cfg.rank == 0 {
+            let store = Listener::bind(base).context("rank 0: binding rendezvous endpoint")?;
+            let mut eps: Vec<Option<Endpoint>> = vec![None; cfg.world];
+            eps[0] = Some(my_ep.clone());
+            let mut regs: Vec<Conn> = Vec::with_capacity(cfg.world - 1);
+            let mut fr = FrameReader::new();
+            while regs.len() < cfg.world - 1 {
+                let mut c = store
+                    .accept_deadline(deadline)
+                    .context("rendezvous: waiting for workers to register")?;
+                c.set_timeouts(Some(cfg.io_timeout))?;
+                let hello = fr
+                    .read_frame(&mut c)?
+                    .ok_or_else(|| anyhow!("rendezvous: peer closed before registering"))?;
+                let (r, ep) = decode_hello(hello)?;
+                ensure!(
+                    r > 0 && r < cfg.world,
+                    "rendezvous: rank {r} out of range for world size {}",
+                    cfg.world
+                );
+                ensure!(eps[r].is_none(), "rendezvous: duplicate registration for rank {r}");
+                eps[r] = Some(ep);
+                regs.push(c);
+            }
+            let eps: Vec<Endpoint> = eps.into_iter().map(|e| e.expect("all filled")).collect();
+            let tbl = encode_table(&eps);
+            for c in regs.iter_mut() {
+                frame::write_frame(c, &tbl).context("rendezvous: broadcasting address table")?;
+            }
+            eps
+        } else {
+            let mut c = connect_retry(base, cfg.connect_timeout)
+                .context("rendezvous: connecting to rank 0")?;
+            // The table only arrives once every rank has registered, so this
+            // read is bounded by the whole setup budget, not one io_timeout.
+            c.set_timeouts(Some(cfg.connect_timeout))?;
+            frame::write_frame(&mut c, &encode_hello(cfg.rank, &my_ep))
+                .context("rendezvous: registering with rank 0")?;
+            let mut fr = FrameReader::new();
+            let tbl = fr.read_frame(&mut c)?.ok_or_else(|| {
+                anyhow!("rendezvous: rank 0 closed before broadcasting the address table")
+            })?;
+            let t = decode_table(tbl)?;
+            ensure!(
+                t.len() == cfg.world,
+                "rendezvous: table has {} entries, expected {}",
+                t.len(),
+                cfg.world
+            );
+            t
+        };
+
+        // Step 3: full mesh. For each pair i < j, j dials i with a hello.
+        let mut peers: Vec<Option<Peer>> = (0..cfg.world).map(|_| None).collect();
+        for (peer, ep) in table.iter().enumerate().take(cfg.rank) {
+            let mut c = connect_retry(ep, cfg.connect_timeout)
+                .with_context(|| format!("dialing mesh peer {peer}"))?;
+            c.set_timeouts(Some(cfg.io_timeout))?;
+            frame::write_frame(&mut c, &(cfg.rank as u32).to_le_bytes())
+                .with_context(|| format!("announcing rank to peer {peer}"))?;
+            peers[peer] = Some(Peer::new(c)?);
+        }
+        let mut fr = FrameReader::new();
+        for _ in cfg.rank + 1..cfg.world {
+            let mut c =
+                listener.accept_deadline(deadline).context("accepting mesh peers")?;
+            c.set_timeouts(Some(cfg.io_timeout))?;
+            let hello = fr
+                .read_frame(&mut c)?
+                .ok_or_else(|| anyhow!("mesh peer closed before its hello frame"))?;
+            ensure!(hello.len() == 4, "bad mesh hello frame ({} bytes)", hello.len());
+            let r = u32::from_le_bytes([hello[0], hello[1], hello[2], hello[3]]) as usize;
+            ensure!(
+                r > cfg.rank && r < cfg.world,
+                "mesh hello from unexpected rank {r}"
+            );
+            ensure!(peers[r].is_none(), "duplicate mesh connection from rank {r}");
+            peers[r] = Some(Peer::new(c)?);
+        }
+
+        Ok(Mesh { rank: cfg.rank, world: cfg.world, peers })
+    }
+
+    fn peer_mut(&mut self, rank: usize) -> Result<&mut Peer> {
+        self.peers
+            .get_mut(rank)
+            .and_then(|p| p.as_mut())
+            .ok_or_else(|| anyhow!("no mesh connection to rank {rank}"))
+    }
+
+    /// Send one frame to `peer` (blocking, bounded by the write timeout).
+    pub fn send_to(&mut self, peer: usize, payload: &[u8]) -> Result<()> {
+        let p = self.peer_mut(peer)?;
+        frame::write_frame(&mut p.writer, payload)
+            .with_context(|| format!("sending frame to rank {peer}"))
+    }
+
+    /// Receive one frame from `peer` (blocking, bounded by the read
+    /// timeout). The returned slice is valid until the next receive from
+    /// the same peer.
+    pub fn recv_from(&mut self, peer: usize) -> Result<&[u8]> {
+        let rank = self.rank;
+        let p = self.peer_mut(peer)?;
+        match p.rbuf.read_frame(&mut p.reader) {
+            Ok(Some(_)) => Ok(p.rbuf.last()),
+            Ok(None) => bail!("rank {peer} closed its stream to rank {rank}"),
+            Err(e) => Err(e.context(format!("receiving frame from rank {peer}"))),
+        }
+    }
+
+    /// The last frame received from `peer` (empty before any exchange).
+    pub fn frame(&self, peer: usize) -> &[u8] {
+        self.peers[peer].as_ref().map(|p| p.rbuf.last()).unwrap_or(&[])
+    }
+
+    /// All-to-all step: send `payload` to every peer while receiving one
+    /// frame from every peer. Writes run on a scoped thread in ascending
+    /// rank order; reads drain on the calling thread in the same order.
+    /// Afterwards each peer's frame is available via [`frame`](Self::frame).
+    pub fn exchange_all(&mut self, payload: &[u8]) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        let mut writers: Vec<(usize, &mut Conn)> = Vec::new();
+        let mut readers: Vec<(usize, &mut Conn, &mut FrameReader)> = Vec::new();
+        for (r, slot) in self.peers.iter_mut().enumerate() {
+            if let Some(p) = slot {
+                writers.push((r, &mut p.writer));
+                readers.push((r, &mut p.reader, &mut p.rbuf));
+            }
+        }
+        std::thread::scope(|s| -> Result<()> {
+            let sender = s.spawn(move || -> Result<()> {
+                for (r, w) in writers.iter_mut() {
+                    frame::write_frame(&mut **w, payload)
+                        .with_context(|| format!("sending to rank {r}"))?;
+                }
+                Ok(())
+            });
+            let mut recv_err: Option<anyhow::Error> = None;
+            for (r, conn, rbuf) in readers.iter_mut() {
+                match rbuf.read_frame(&mut **conn) {
+                    Ok(Some(_)) => {}
+                    Ok(None) => {
+                        recv_err = Some(anyhow!("rank {r} closed mid-exchange"));
+                        break;
+                    }
+                    Err(e) => {
+                        recv_err = Some(e.context(format!("receiving from rank {r}")));
+                        break;
+                    }
+                }
+            }
+            // Join the sender even on receive failure: its writes are
+            // bounded by the socket write timeout, so this cannot hang.
+            let sent = sender.join().map_err(|_| anyhow!("mesh sender thread panicked"))?;
+            if let Some(e) = recv_err {
+                return Err(e);
+            }
+            sent
+        })
+    }
+
+    /// Ring hop: send `payload` to rank `to` while receiving one frame from
+    /// rank `from` (concurrently, write on a scoped thread). Returns the
+    /// received frame, valid until the next receive from `from`.
+    pub fn send_recv(&mut self, to: usize, from: usize, payload: &[u8]) -> Result<&[u8]> {
+        ensure!(to != self.rank && from != self.rank, "send_recv cannot target self");
+        if to == from {
+            // Two-rank ring: both halves of the same peer connection.
+            let p = self
+                .peers
+                .get_mut(to)
+                .and_then(|p| p.as_mut())
+                .ok_or_else(|| anyhow!("no mesh connection to rank {to}"))?;
+            let Peer { reader, writer, rbuf } = p;
+            std::thread::scope(|s| -> Result<()> {
+                let sender = s.spawn(move || frame::write_frame(writer, payload));
+                let got = rbuf.read_frame(reader);
+                let sent =
+                    sender.join().map_err(|_| anyhow!("ring sender thread panicked"))?;
+                sent.with_context(|| format!("sending ring frame to rank {to}"))?;
+                match got {
+                    Ok(Some(_)) => Ok(()),
+                    Ok(None) => bail!("rank {from} closed mid ring hop"),
+                    Err(e) => Err(e.context(format!("receiving ring frame from rank {from}"))),
+                }
+            })?;
+        } else {
+            let (a, b) = (to.min(from), to.max(from));
+            let (lo, hi) = self.peers.split_at_mut(b);
+            let pa = lo[a].as_mut().ok_or_else(|| anyhow!("no mesh connection to rank {a}"))?;
+            let pb =
+                hi[0].as_mut().ok_or_else(|| anyhow!("no mesh connection to rank {b}"))?;
+            let (wpeer, rpeer) = if to == a { (pa, pb) } else { (pb, pa) };
+            let writer = &mut wpeer.writer;
+            let Peer { reader, rbuf, .. } = rpeer;
+            std::thread::scope(|s| -> Result<()> {
+                let sender = s.spawn(move || frame::write_frame(writer, payload));
+                let got = rbuf.read_frame(reader);
+                let sent =
+                    sender.join().map_err(|_| anyhow!("ring sender thread panicked"))?;
+                sent.with_context(|| format!("sending ring frame to rank {to}"))?;
+                match got {
+                    Ok(Some(_)) => Ok(()),
+                    Ok(None) => bail!("rank {from} closed mid ring hop"),
+                    Err(e) => Err(e.context(format!("receiving ring frame from rank {from}"))),
+                }
+            })?;
+        }
+        Ok(self.peers[from].as_ref().expect("checked above").rbuf.last())
+    }
+}
+
+/// Remove the socket files a UDS rendezvous leaves behind (base + per-rank
+/// listeners). Best-effort; call after a run when the sockets live outside
+/// a tempdir.
+#[cfg(unix)]
+pub fn cleanup_uds(base: &Path, world: usize) {
+    let _ = std::fs::remove_file(base);
+    for r in 0..world {
+        let mut os = base.as_os_str().to_os_string();
+        os.push(format!(".r{r}"));
+        let _ = std::fs::remove_file(PathBuf::from(os));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_wire_roundtrip() {
+        let t = Endpoint::Tcp("127.0.0.1:29500".into());
+        assert_eq!(Endpoint::from_wire(&t.describe()).unwrap(), t);
+        #[cfg(unix)]
+        {
+            let u = Endpoint::Uds(PathBuf::from("/tmp/qsgd.sock"));
+            assert_eq!(Endpoint::from_wire(&u.describe()).unwrap(), u);
+        }
+        assert!(Endpoint::from_wire("carrier-pigeon:coop").is_err());
+    }
+
+    #[test]
+    fn listener_for_rank_shapes() {
+        let t = Endpoint::Tcp("127.0.0.1:29500".into());
+        assert_eq!(t.listener_for_rank(3).unwrap(), Endpoint::Tcp("127.0.0.1:0".into()));
+        let v6 = Endpoint::Tcp("[::1]:29500".into());
+        assert_eq!(v6.listener_for_rank(0).unwrap(), Endpoint::Tcp("[::1]:0".into()));
+        #[cfg(unix)]
+        {
+            let u = Endpoint::Uds(PathBuf::from("/tmp/qsgd.sock"));
+            assert_eq!(
+                u.listener_for_rank(2).unwrap(),
+                Endpoint::Uds(PathBuf::from("/tmp/qsgd.sock.r2"))
+            );
+        }
+    }
+
+    #[test]
+    fn hello_and_table_roundtrip() {
+        let ep = Endpoint::Tcp("10.0.0.7:1234".into());
+        let (r, got) = decode_hello(&encode_hello(5, &ep)).unwrap();
+        assert_eq!((r, got), (5, ep.clone()));
+        let table = vec![ep.clone(), Endpoint::Tcp("127.0.0.1:80".into())];
+        assert_eq!(decode_table(&encode_table(&table)).unwrap(), table);
+        assert!(decode_table(&[1, 0]).is_err());
+        assert!(decode_hello(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn connect_retry_reports_timeout_cleanly() {
+        // A port from the dynamic range with nothing listening; the retry
+        // loop must give up within the budget and name the endpoint.
+        let ep = Endpoint::Tcp("127.0.0.1:1".into());
+        let t0 = Instant::now();
+        let err = connect_retry(&ep, Duration::from_millis(120)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        assert!(err.to_string().contains("tcp:127.0.0.1:1"), "{err}");
+    }
+}

@@ -1,0 +1,167 @@
+//! One rank's synchronous training loop over the socket transport.
+//!
+//! The multi-process mirror of [`crate::coordinator::sync::SyncTrainer`]:
+//! the same Algorithm 1 step — local gradient, encode, collective exchange,
+//! decode, identical SGD update — but this process *is* one worker, and the
+//! exchange moves real bytes over the [`Mesh`] instead of charging simnet
+//! time. Seeding matches the in-process trainer exactly (init from
+//! `stream(seed, 0x1417)`, encode sessions from `seed ^ 0xF00D`, gradients
+//! deterministic in `(worker, step)` via the [`GradSource`] contract), so a
+//! K-rank socket run takes the same parameter trajectory, bit for bit, as a
+//! K-worker simnet run of the same config — the cross-process determinism
+//! golden in `tests/transport_e2e.rs` pins this.
+//!
+//! Two clocks fill the returned [`RunResult`]: the usual modeled α–β
+//! [`Breakdown`] (same [`CostModel`] + [`collectives::model_exchange_time`]
+//! charges as the simnet path, so runs stay comparable across transports)
+//! and the **measured** per-phase [`WallClock`] — real seconds this rank
+//! spent encoding, blocked on sockets, and decoding.
+//!
+//! One deliberate difference from the in-process trainer: the all-to-all
+//! arm runs the plain [`CompressorSpec`] codec, not a `QuantPlan`-aware
+//! assembly — plan-aware multi-process exchange is future work, and the
+//! quick-start configs here quantize everything anyway.
+
+use anyhow::Result;
+
+use crate::collectives;
+use crate::config::CollectiveSpec;
+use crate::coordinator::sources::GradSource;
+use crate::coordinator::sync::RunResult;
+use crate::coordinator::CompressorSpec;
+use crate::metrics::{Breakdown, Curve, WallClock, WireStats};
+use crate::models::CostModel;
+use crate::optim::Sgd;
+use crate::simnet::{SimNet, VTime};
+use crate::util::rng::{self, Xoshiro256};
+
+use super::exchange::SocketExchange;
+use super::net::Mesh;
+
+/// Configuration of one rank's distributed run. The *same values on every
+/// rank* (seed included) are a correctness requirement, not a convenience —
+/// replicas derive identical init and identical decoded means from them.
+pub struct DistTrainConfig {
+    pub steps: usize,
+    pub compressor: CompressorSpec,
+    pub collective: CollectiveSpec,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    pub init_scale: f32,
+    pub log_every: usize,
+    /// Evaluate held-out metric every N steps on rank 0 (0 = never).
+    pub eval_every: usize,
+    /// Simnet used only for the *modeled* transfer charge, so socket runs
+    /// report the same α–β breakdown a simnet run of this shape would.
+    pub net: SimNet,
+    pub cost: CostModel,
+}
+
+impl DistTrainConfig {
+    pub fn quick(world: usize, steps: usize, compressor: CompressorSpec, lr: f32) -> Self {
+        Self {
+            steps,
+            compressor,
+            collective: CollectiveSpec::AllToAll,
+            lr,
+            momentum: 0.0,
+            seed: 0,
+            init_scale: 0.1,
+            log_every: 10,
+            eval_every: 0,
+            net: SimNet::preset(world, crate::simnet::Preset::K80Pcie),
+            cost: CostModel::k80(),
+        }
+    }
+}
+
+/// Run this rank's share of a K-rank synchronous training job over an
+/// already-connected [`Mesh`]. Blocks until `cfg.steps` steps complete (or
+/// a peer failure surfaces as an error — socket timeouts bound every hop).
+pub fn train_rank(
+    cfg: &DistTrainConfig,
+    mesh: Mesh,
+    source: &mut dyn GradSource,
+) -> Result<RunResult> {
+    let n = source.dim();
+    let rank = mesh.rank;
+    let codec = cfg.compressor.codec();
+    let mut exchange =
+        SocketExchange::new(&cfg.collective, codec.clone(), mesh, cfg.seed ^ 0xF00D)?;
+
+    // Identical init on every rank: same seed ⇒ same stream ⇒ same bits.
+    let mut init_rng = Xoshiro256::stream(cfg.seed, 0x1417);
+    let mut params: Vec<f32> = rng::normal_vec(&mut init_rng, n)
+        .into_iter()
+        .map(|x| x * cfg.init_scale)
+        .collect();
+    let mut opt = Sgd::new(crate::optim::LrSchedule::Const(cfg.lr), cfg.momentum, 0.0, n);
+
+    let mut loss_curve = Curve::default();
+    let mut eval_curve = Curve::default();
+    let mut breakdown = Breakdown::default();
+    let mut wire = WireStats::default();
+    let mut wall = WallClock::default();
+    let mut mean_grad: Vec<f32> = Vec::new();
+    let mut hops = 0usize;
+    let mut recompressions = 0u64;
+    let mut recompress_err_sq = 0.0f64;
+
+    // One modeled transfer charge per step, the same formula the simnet
+    // benches use, sized by the codec's expected message size.
+    let modeled_transfer =
+        collectives::model_exchange_time(&cfg.collective, &cfg.net, codec.encoded_size_hint(n));
+
+    for step in 0..cfg.steps {
+        // 1. this rank's local gradient (the source is deterministic in
+        //    (worker, step), so rank-local compute is exact data parallelism)
+        let (loss, grad) = source.loss_and_grad(rank, step as u64, &params)?;
+        breakdown.compute += VTime(cfg.cost.step_compute_s(source.flops_fwd_per_step(), 1));
+
+        // 2.–4. encode → socket exchange → decode; every rank gets the same
+        //        mean bits back.
+        let stats = exchange.exchange(&grad, &mut mean_grad)?;
+        wire.add(&stats.wire);
+        wall.add(&stats.wall);
+        hops += stats.hops;
+        recompressions += stats.recompressions;
+        recompress_err_sq += stats.recompress_err_sq;
+        breakdown.encode += VTime(cfg.cost.encode_s(stats.encode_coords));
+        breakdown.transfer += modeled_transfer;
+        breakdown.decode += VTime(cfg.cost.decode_s(stats.decode_coords, 1));
+
+        // 5. identical update from the identical mean
+        opt.apply(&mut params, &mean_grad);
+        breakdown.steps += 1;
+
+        anyhow::ensure!(
+            params.iter().all(|p| p.is_finite()),
+            "rank {rank} parameters went non-finite at step {step} \
+             (learning rate above 1/L?)"
+        );
+        if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
+            loss_curve.push(step, loss as f64);
+        }
+        if rank == 0 && cfg.eval_every > 0 && (step % cfg.eval_every == 0 || step + 1 == cfg.steps)
+        {
+            if let Some(m) = source.eval(&params) {
+                eval_curve.push(step, m);
+            }
+        }
+    }
+
+    Ok(RunResult {
+        loss: loss_curve,
+        eval: eval_curve,
+        breakdown,
+        wire,
+        params,
+        label: cfg.compressor.label(),
+        collective: cfg.collective.label(),
+        hops,
+        recompressions,
+        recompress_err_sq,
+        wall,
+    })
+}

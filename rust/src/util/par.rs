@@ -9,22 +9,40 @@
 //! floating-point reduction built on them) are deterministic and independent
 //! of thread scheduling.
 
+/// Interpret a `QSGD_THREADS` value: `Ok(Some(n))` for a positive integer,
+/// `Ok(None)` when unset, `Err` (with the offending value) for anything
+/// else — empty, zero, negative, or garbage. Split out of [`max_threads`]
+/// so the rejection paths are unit-testable without mutating process env.
+fn parse_threads_env(value: Option<&str>) -> Result<Option<usize>, String> {
+    let Some(v) = value else { return Ok(None) };
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(Some(n)),
+        _ => Err(v.to_string()),
+    }
+}
+
 /// Upper bound on useful worker threads for this process: the
 /// `QSGD_THREADS` environment variable when set to a positive integer
 /// (pinning it makes bench and CI numbers reproducible across hosts —
 /// results are bit-identical at any thread count by construction, but
 /// timings are not), else the machine's available parallelism. Read once
 /// and cached for the life of the process.
+///
+/// An *unparsable* `QSGD_THREADS` (empty, `0`, garbage) falls back to the
+/// machine default with a loud one-time warning on stderr — a typo'd
+/// pinning must not silently unpin a benchmark run.
 pub fn max_threads() -> usize {
     use std::sync::OnceLock;
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        if let Some(n) = std::env::var("QSGD_THREADS")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-        {
-            return n;
+        let var = std::env::var("QSGD_THREADS").ok();
+        match parse_threads_env(var.as_deref()) {
+            Ok(Some(n)) => return n,
+            Ok(None) => {}
+            Err(bad) => eprintln!(
+                "warning: ignoring QSGD_THREADS='{bad}' (expected a positive \
+                 integer); using the machine's available parallelism"
+            ),
         }
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     })
@@ -112,6 +130,22 @@ mod tests {
         let par = par_map(&v, |i, x| x * x + i as i64);
         let seq: Vec<i64> = v.iter().enumerate().map(|(i, x)| x * x + i as i64).collect();
         assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn threads_env_parse_paths() {
+        // unset ⇒ no override
+        assert_eq!(parse_threads_env(None), Ok(None));
+        // valid pins, whitespace tolerated
+        assert_eq!(parse_threads_env(Some("1")), Ok(Some(1)));
+        assert_eq!(parse_threads_env(Some(" 16 ")), Ok(Some(16)));
+        // rejects (loud warning in max_threads, not a silent fallback):
+        // empty, zero, negative, garbage, fractional
+        for bad in ["", "  ", "0", "-2", "lots", "3.5"] {
+            assert_eq!(parse_threads_env(Some(bad)), Err(bad.to_string()), "{bad:?}");
+        }
+        // the cached process-wide value is always usable
+        assert!(max_threads() >= 1);
     }
 
     #[test]

@@ -274,3 +274,157 @@ fn prop_random_bytes_never_panic() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Streaming flavor: the same hostile vectors through the socket transport's
+// framed reader, delivered in adversarial chunk sizes. The framing layer
+// must reassemble partial reads faithfully, reject truncation and lying
+// length prefixes cleanly, and never let a prefix claim drive allocation
+// beyond what the peer actually delivers.
+// ---------------------------------------------------------------------------
+
+use qsgd::transport::{write_frame, FrameReader};
+
+/// A `Read` source that doles out an in-memory buffer in hostile chunk
+/// sizes: fixed k-byte slivers or seeded random splits — the shapes a
+/// loopback TCP stream legitimately produces under small MTUs and
+/// scheduling noise.
+struct ChunkReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    plan: ChunkPlan,
+}
+
+enum ChunkPlan {
+    Fixed(usize),
+    Random(Xoshiro256),
+}
+
+impl<'a> ChunkReader<'a> {
+    fn fixed(data: &'a [u8], k: usize) -> Self {
+        ChunkReader { data, pos: 0, plan: ChunkPlan::Fixed(k.max(1)) }
+    }
+
+    fn random(data: &'a [u8], seed: u64) -> Self {
+        ChunkReader { data, pos: 0, plan: ChunkPlan::Random(Xoshiro256::from_u64(seed)) }
+    }
+}
+
+impl std::io::Read for ChunkReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let left = self.data.len() - self.pos;
+        if left == 0 || buf.is_empty() {
+            return Ok(0);
+        }
+        let want = match &mut self.plan {
+            ChunkPlan::Fixed(k) => *k,
+            ChunkPlan::Random(rng) => 1 + rng::uniform_usize(rng, 7),
+        };
+        let n = want.min(left).min(buf.len());
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn streamed_frames_survive_one_byte_and_random_chunking() {
+    let frames = sample_frames();
+    let mut wire = Vec::new();
+    for (bytes, _) in &frames {
+        write_frame(&mut wire, bytes).unwrap();
+    }
+    for plan in 0..3 {
+        let mut src = match plan {
+            0 => ChunkReader::fixed(&wire, 1),
+            1 => ChunkReader::fixed(&wire, 3),
+            _ => ChunkReader::random(&wire, 42),
+        };
+        let mut reader = FrameReader::new();
+        for (bytes, n) in &frames {
+            let got = reader.read_frame(&mut src).unwrap().expect("frame present");
+            assert_eq!(got, &bytes[..], "plan {plan}: reassembled payload differs");
+            let q = gradient::decode(got).expect("reassembled frame must decode");
+            assert_eq!(q.n, *n);
+        }
+        assert!(reader.read_frame(&mut src).unwrap().is_none(), "plan {plan}: clean EOF");
+    }
+}
+
+#[test]
+fn streamed_truncations_reject_cleanly() {
+    let (bytes, _) = sample_frames().swap_remove(0);
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &bytes).unwrap();
+    // every proper prefix of the framed message, delivered byte by byte:
+    // zero bytes is a clean end-of-stream (Ok(None)); anything between is a
+    // mid-prefix or mid-frame truncation and must be an error, not a hang
+    // or a short Ok
+    for cut in 0..framed.len() {
+        let mut reader = FrameReader::new();
+        let res = reader.read_frame(&mut ChunkReader::fixed(&framed[..cut], 1));
+        if cut == 0 {
+            assert!(matches!(res, Ok(None)), "cut 0 must be clean EOF");
+        } else {
+            assert!(res.is_err(), "truncation at {cut}/{} accepted", framed.len());
+        }
+    }
+}
+
+#[test]
+fn streamed_corrupt_payloads_are_delivered_verbatim_then_rejected_by_decode() {
+    for (bytes, n) in sample_frames() {
+        // an honest frame around a truncated codec payload: the transport
+        // delivers it intact; the *decoder* is what rejects it
+        for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+            let mut wire = Vec::new();
+            write_frame(&mut wire, &bytes[..cut]).unwrap();
+            let mut reader = FrameReader::new();
+            let got = reader
+                .read_frame(&mut ChunkReader::random(&wire, cut as u64 + 1))
+                .unwrap()
+                .expect("framing is honest");
+            assert_eq!(got, &bytes[..cut]);
+            assert!(gradient::decode(got).is_err(), "truncated payload decoded");
+            let mut acc = vec![0.0f32; n];
+            assert!(gradient::decode_add(got, 1.0, &mut acc).is_err());
+        }
+        // single bit flip mid-payload: delivered verbatim; decode must not
+        // panic (Err or self-consistent Ok, as in the direct sweep above)
+        let mut m = bytes.clone();
+        m[bytes.len() / 2] ^= 0x10;
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &m).unwrap();
+        let mut reader = FrameReader::new();
+        let got =
+            reader.read_frame(&mut ChunkReader::fixed(&wire, 1)).unwrap().expect("frame present");
+        assert_eq!(got, &m[..]);
+        let _ = gradient::decode(got);
+        let mut acc = vec![0.0f32; n];
+        let _ = gradient::decode_add(got, 1.0, &mut acc);
+    }
+}
+
+#[test]
+fn streamed_lying_length_prefix_cannot_balloon_memory() {
+    // a prefix claiming 512 MiB (under the frame cap, so the cap check
+    // passes) with only 100 bytes behind it: the reader must grow its
+    // buffer proportionally to *delivery*, error out at EOF, and hold no
+    // more than a couple of read-chunks of capacity
+    let mut wire = Vec::new();
+    wire.extend_from_slice(&(512u32 << 20).to_le_bytes());
+    wire.extend_from_slice(&[0xAB; 100]);
+    for plan in 0..2 {
+        let mut src = match plan {
+            0 => ChunkReader::fixed(&wire, 1),
+            _ => ChunkReader::random(&wire, 7),
+        };
+        let mut reader = FrameReader::new();
+        assert!(reader.read_frame(&mut src).is_err(), "plan {plan}: lying prefix accepted");
+        assert!(
+            reader.buf_capacity() <= 256 * 1024,
+            "plan {plan}: allocated {} bytes against a 100-byte delivery",
+            reader.buf_capacity()
+        );
+    }
+}

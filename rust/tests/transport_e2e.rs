@@ -1,0 +1,388 @@
+//! Multi-process socket-transport goldens — the `transport_e2e` CI lane.
+//!
+//! The acceptance property of the transport subsystem: K real OS processes
+//! exchanging encoded gradients over loopback sockets produce decoded means
+//! **bit-identical** to the in-process simnet collectives at the same seeds.
+//! Each test spawns K copies of the `qsgd` binary (`exchange-worker`
+//! subcommand), points them at a shared rendezvous address, collects the
+//! per-rank decoded means from disk, and compares them f32-bit for f32-bit
+//! against `collectives::build(...)` run in this process.
+//!
+//! Nothing here may hang CI: every socket operation inside the transport is
+//! timeout-bounded, the spawner polls children against its own deadline and
+//! kills stragglers, and the workflow wraps the whole suite in a hard
+//! `timeout`. Per-rank stdout/stderr land under `CARGO_TARGET_TMPDIR` so the
+//! CI lane can upload them as artifacts when something fails.
+
+use std::fs::File;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use qsgd::collectives;
+use qsgd::config::CollectiveSpec;
+use qsgd::coordinator::CompressorSpec;
+use qsgd::simnet::{Link, SimNet, Topology};
+use qsgd::transport::{Endpoint, Mesh, MeshConfig};
+use qsgd::util::rng::{self, Xoshiro256};
+
+const WORLD: usize = 4;
+/// Ragged tail (not a multiple of bucket·K) exercises short final segments.
+const N: usize = 3 * 512 * 4 + 37;
+const STEPS: usize = 2;
+const SEED: u64 = 7;
+const GSEED: u64 = 99;
+/// Per-test budget for the spawned group; the CI lane's `timeout` wrapper
+/// sits above this as a backstop.
+const SPAWN_DEADLINE: Duration = Duration::from_secs(120);
+
+fn log_dir(tag: &str) -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("transport_e2e").join(tag);
+    std::fs::create_dir_all(&d).expect("creating log dir");
+    d
+}
+
+/// A free TCP port on loopback: bind :0, read the address, release it.
+/// (Racy in principle; rebinding immediately in a child is reliable in
+/// practice and the test fails loudly, not flakily silent, if it ever
+/// collides.)
+fn free_tcp_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("binding probe socket");
+    l.local_addr().expect("probe addr").to_string()
+}
+
+/// A short UDS base path (the 107-byte sun_path limit rules out
+/// CARGO_TARGET_TMPDIR's deep nesting).
+#[cfg(unix)]
+fn uds_base(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("qsgd-e2e-{}-{tag}.sock", std::process::id()))
+}
+
+fn golden_mean(
+    spec: &CollectiveSpec,
+    compressor: &CompressorSpec,
+    k: usize,
+    n: usize,
+    steps: usize,
+) -> Vec<f32> {
+    let grads: Vec<Vec<f32>> = (0..k)
+        .map(|w| rng::normal_vec(&mut Xoshiro256::stream(GSEED, w as u64), n))
+        .collect();
+    let net = SimNet::new(k, Link::new(1e9, 1e-6), Topology::P2pBroadcast);
+    let mut algo = collectives::build(spec, compressor.codec(), k, SEED);
+    algo.prepare(n);
+    let mut mean = Vec::new();
+    for _ in 0..steps {
+        algo.exchange(&net, &grads, &mut mean).expect("in-process golden exchange");
+    }
+    mean
+}
+
+fn read_mean(path: &PathBuf) -> Vec<f32> {
+    let bytes = std::fs::read(path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"));
+    assert_eq!(bytes.len() % 4, 0, "mean file {path:?} is not f32-aligned");
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn tail_of(path: &PathBuf) -> String {
+    let s = std::fs::read_to_string(path).unwrap_or_default();
+    let lines: Vec<&str> = s.lines().rev().take(12).collect();
+    lines.into_iter().rev().collect::<Vec<_>>().join("\n")
+}
+
+/// Spawn K `exchange-worker` ranks against `transport`, wait for all of
+/// them under a deadline, and return the per-rank decoded means.
+fn run_group(tag: &str, transport: &str, collective: &str, compressor: &str) -> Vec<Vec<f32>> {
+    let dir = log_dir(tag);
+    let mut children: Vec<Child> = Vec::with_capacity(WORLD);
+    let mut mean_paths = Vec::with_capacity(WORLD);
+    for r in 0..WORLD {
+        let out = dir.join(format!("rank{r}.mean"));
+        let stdout = File::create(dir.join(format!("rank{r}.out"))).expect("rank stdout log");
+        let stderr = File::create(dir.join(format!("rank{r}.err"))).expect("rank stderr log");
+        let child = Command::new(env!("CARGO_BIN_EXE_qsgd"))
+            .args([
+                "exchange-worker",
+                "--transport",
+                transport,
+                "--rank",
+                &r.to_string(),
+                "--world",
+                &WORLD.to_string(),
+                "--collective",
+                collective,
+                "--compressor",
+                compressor,
+                "--n",
+                &N.to_string(),
+                "--steps",
+                &STEPS.to_string(),
+                "--seed",
+                &SEED.to_string(),
+                "--gseed",
+                &GSEED.to_string(),
+                "--out",
+                out.to_str().expect("utf-8 tmpdir"),
+                "--io-timeout-ms",
+                "20000",
+                "--connect-timeout-ms",
+                "30000",
+            ])
+            .stdout(Stdio::from(stdout))
+            .stderr(Stdio::from(stderr))
+            .spawn()
+            .unwrap_or_else(|e| panic!("{tag}: spawning rank {r}: {e}"));
+        children.push(child);
+        mean_paths.push(out);
+    }
+
+    let deadline = Instant::now() + SPAWN_DEADLINE;
+    let mut statuses: Vec<Option<std::process::ExitStatus>> = vec![None; WORLD];
+    loop {
+        let mut pending = false;
+        for (r, ch) in children.iter_mut().enumerate() {
+            if statuses[r].is_none() {
+                match ch.try_wait().expect("try_wait") {
+                    Some(st) => statuses[r] = Some(st),
+                    None => pending = true,
+                }
+            }
+        }
+        if !pending {
+            break;
+        }
+        if Instant::now() >= deadline {
+            for ch in children.iter_mut() {
+                let _ = ch.kill();
+            }
+            let tails: Vec<String> = (0..WORLD)
+                .map(|r| format!("-- rank {r} --\n{}", tail_of(&dir.join(format!("rank{r}.err")))))
+                .collect();
+            panic!(
+                "{tag}: worker group did not finish within {SPAWN_DEADLINE:?}\n{}",
+                tails.join("\n")
+            );
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    for (r, st) in statuses.iter().enumerate() {
+        let st = st.expect("filled");
+        assert!(
+            st.success(),
+            "{tag}: rank {r} exited with {st}\nstderr tail:\n{}",
+            tail_of(&dir.join(format!("rank{r}.err")))
+        );
+    }
+    mean_paths.iter().map(read_mean).collect()
+}
+
+fn assert_bit_identical(tag: &str, got: &[Vec<f32>], want: &[f32]) {
+    assert!(want.iter().any(|&x| x != 0.0), "{tag}: golden mean is all zeros");
+    for (r, mean) in got.iter().enumerate() {
+        assert_eq!(mean.len(), want.len(), "{tag}: rank {r} mean length");
+        for (i, (a, b)) in mean.iter().zip(want).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{tag}: rank {r} diverges from the in-process golden at coord {i}: \
+                 {a} ({:#010x}) vs {b} ({:#010x})",
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+    }
+}
+
+fn check_arm(tag: &str, transport: &str, collective: &str, compressor: &str) {
+    let spec = CollectiveSpec::parse(collective).unwrap();
+    let comp = CompressorSpec::parse(compressor).unwrap();
+    let want = golden_mean(&spec, &comp, WORLD, N, STEPS);
+    let got = run_group(tag, transport, collective, compressor);
+    assert_bit_identical(tag, &got, &want);
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance goldens: K=4 real processes ≡ in-process, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_a2a_matches_inprocess_golden_uniform_and_nonuniform() {
+    check_arm("tcp-a2a-qsgd4", &format!("tcp:{}", free_tcp_addr()), "a2a", "qsgd4");
+    check_arm("tcp-a2a-nuqsgd4", &format!("tcp:{}", free_tcp_addr()), "a2a", "nuqsgd4");
+}
+
+#[test]
+fn tcp_ring_matches_inprocess_golden_uniform_and_nonuniform() {
+    check_arm("tcp-ring-qsgd4", &format!("tcp:{}", free_tcp_addr()), "ring", "qsgd4");
+    check_arm("tcp-ring-nuqsgd4", &format!("tcp:{}", free_tcp_addr()), "ring", "nuqsgd4");
+}
+
+#[test]
+fn tcp_ring_ef_and_raw_match_inprocess_golden() {
+    check_arm("tcp-ring-ef", &format!("tcp:{}", free_tcp_addr()), "ring:ef", "qsgd4");
+    check_arm("tcp-ring-raw", &format!("tcp:{}", free_tcp_addr()), "ring:raw", "qsgd4");
+}
+
+#[test]
+fn tcp_hier_matches_inprocess_golden() {
+    check_arm("tcp-hier2", &format!("tcp:{}", free_tcp_addr()), "hier:2", "qsgd4");
+    // group ≥ world degenerates to one fan-in group + a 1-member leader ring
+    check_arm("tcp-hier8", &format!("tcp:{}", free_tcp_addr()), "hier:8", "qsgd4");
+}
+
+#[cfg(unix)]
+#[test]
+fn uds_a2a_and_ring_match_inprocess_golden() {
+    for (tag, col) in [("uds-a2a", "a2a"), ("uds-ring", "ring")] {
+        let base = uds_base(tag);
+        let transport = format!("uds:{}", base.display());
+        check_arm(tag, &transport, col, "qsgd4");
+        qsgd::transport::net::cleanup_uds(&base, WORLD);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-process mesh + end-to-end launcher
+// ---------------------------------------------------------------------------
+
+#[test]
+fn world_of_one_needs_no_sockets() {
+    use qsgd::transport::SocketExchange;
+    let mesh = Mesh::connect(
+        &Endpoint::Tcp("127.0.0.1:0".into()),
+        &MeshConfig {
+            rank: 0,
+            world: 1,
+            io_timeout: Duration::from_secs(1),
+            connect_timeout: Duration::from_secs(1),
+        },
+    )
+    .expect("world=1 mesh");
+    let spec = CollectiveSpec::parse("ring").unwrap();
+    let mut ex =
+        SocketExchange::new(&spec, CompressorSpec::qsgd_4bit().codec(), mesh, SEED).unwrap();
+    let grad = rng::normal_vec(&mut Xoshiro256::stream(GSEED, 0), 700);
+    let mut mean = Vec::new();
+    ex.exchange(&grad, &mut mean).expect("degenerate exchange");
+    let want = golden_mean(&spec, &CompressorSpec::qsgd_4bit(), 1, 700, 1);
+    assert_bit_identical("world1-ring", &[mean], &want);
+}
+
+#[test]
+fn train_launcher_spawns_ranks_and_succeeds() {
+    // The user-facing path: `qsgd train --transport tcp:…` with no --rank
+    // spawns the whole group and aggregates exit codes.
+    let dir = log_dir("train-launcher");
+    let stdout = File::create(dir.join("launcher.out")).unwrap();
+    let stderr = File::create(dir.join("launcher.err")).unwrap();
+    let st = Command::new(env!("CARGO_BIN_EXE_qsgd"))
+        .args([
+            "train",
+            "--model",
+            "quadratic",
+            "--compressor",
+            "qsgd4",
+            "--collective",
+            "ring",
+            "--workers",
+            "2",
+            "--steps",
+            "5",
+            "--lr",
+            "0.05",
+            "--transport",
+            &format!("tcp:{}", free_tcp_addr()),
+            "--spawn-timeout-s",
+            "100",
+        ])
+        .stdout(Stdio::from(stdout))
+        .stderr(Stdio::from(stderr))
+        .status()
+        .expect("running train launcher");
+    assert!(
+        st.success(),
+        "train launcher failed ({st})\nstderr tail:\n{}",
+        tail_of(&dir.join("launcher.err"))
+    );
+    let out = std::fs::read_to_string(dir.join("launcher.out")).unwrap_or_default();
+    assert!(out.contains("wall:"), "launcher output missing wall-clock line:\n{out}");
+}
+
+// ---------------------------------------------------------------------------
+// Failure modes: dead or silent peers surface as clean errors, never hangs
+// ---------------------------------------------------------------------------
+
+fn two_rank_cfg(rank: usize, io_ms: u64) -> MeshConfig {
+    MeshConfig {
+        rank,
+        world: 2,
+        io_timeout: Duration::from_millis(io_ms),
+        connect_timeout: Duration::from_secs(20),
+    }
+}
+
+#[test]
+fn peer_disconnect_mid_hop_is_a_clean_error() {
+    let base = Endpoint::Tcp(free_tcp_addr());
+    let b2 = base.clone();
+    let peer = std::thread::spawn(move || {
+        // Rank 1 joins the mesh, then drops it without sending anything.
+        let mesh = Mesh::connect(&b2, &two_rank_cfg(1, 5_000)).expect("rank 1 mesh");
+        drop(mesh);
+    });
+    let mut mesh = Mesh::connect(&base, &two_rank_cfg(0, 5_000)).expect("rank 0 mesh");
+    let t0 = Instant::now();
+    let err = mesh.recv_from(1).expect_err("recv from a closed peer must fail");
+    assert!(t0.elapsed() < Duration::from_secs(10), "disconnect detection took too long");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 1"), "error should name the peer: {msg}");
+    peer.join().expect("peer thread");
+}
+
+#[test]
+fn silent_peer_times_out_instead_of_hanging() {
+    let base = Endpoint::Tcp(free_tcp_addr());
+    let b2 = base.clone();
+    let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+    let peer = std::thread::spawn(move || {
+        // Rank 1 connects, then sits silent (alive, sending nothing) until
+        // rank 0 has observed its read timeout.
+        let mesh = Mesh::connect(&b2, &two_rank_cfg(1, 10_000)).expect("rank 1 mesh");
+        let _ = release_rx.recv_timeout(Duration::from_secs(30));
+        drop(mesh);
+    });
+    let mut mesh = Mesh::connect(&base, &two_rank_cfg(0, 300)).expect("rank 0 mesh");
+    let t0 = Instant::now();
+    let err = mesh.recv_from(1).expect_err("read from a silent peer must time out");
+    let waited = t0.elapsed();
+    assert!(
+        waited >= Duration::from_millis(250) && waited < Duration::from_secs(10),
+        "timeout fired after {waited:?}, configured 300ms"
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 1"), "error should name the peer: {msg}");
+    release_tx.send(()).ok();
+    peer.join().expect("peer thread");
+}
+
+#[test]
+fn send_recv_survives_two_rank_ring_traffic() {
+    // The to == from send_recv path (2-rank ring): both sides exchange
+    // concurrently through the split read/write halves of one socket.
+    let base = Endpoint::Tcp(free_tcp_addr());
+    let b2 = base.clone();
+    let peer = std::thread::spawn(move || -> Vec<u8> {
+        let mut mesh = Mesh::connect(&b2, &two_rank_cfg(1, 10_000)).expect("rank 1 mesh");
+        let payload = vec![1u8; 200_000];
+        let got = mesh.send_recv(0, 0, &payload).expect("rank 1 hop");
+        got.to_vec()
+    });
+    let mut mesh = Mesh::connect(&base, &two_rank_cfg(0, 10_000)).expect("rank 0 mesh");
+    let payload = vec![2u8; 200_000];
+    let got = mesh.send_recv(1, 1, &payload).expect("rank 0 hop").to_vec();
+    let peer_got = peer.join().expect("peer thread");
+    assert_eq!(got, vec![1u8; 200_000]);
+    assert_eq!(peer_got, vec![2u8; 200_000]);
+}

@@ -1,14 +1,29 @@
 #!/usr/bin/env python3
-"""Compare a fresh BENCH_*.json against the committed baseline.
+"""Compare fresh BENCH_*.json reports against committed baselines.
 
-Usage: check_bench_regression.py NEW_JSON BASELINE_JSON [--threshold 1.25]
+Two modes:
 
-Matches (section, name) rows between the two reports and fails (exit 1)
-when any `ns_per_coord` (falling back to `median_ns`) regresses by more
-than the threshold factor. Rows present on only one side are reported but
-never fail the check (sections come and go across PRs). A missing baseline
-file is a soft skip (exit 0) so the advisory lane stays green until a
-baseline is committed from a trusted runner's artifact.
+  # explicit pair (legacy; kept for one-off local use)
+  check_bench_regression.py NEW_JSON BASELINE_JSON [--threshold 1.25]
+
+  # discovery: every BENCH_<name>.json under --results-dir is compared
+  # against --baseline-dir/<name>.json
+  check_bench_regression.py [--results-dir .] \
+      [--baseline-dir rust/benches/baselines] [--threshold 1.25]
+
+Matches (section, name) rows between the two reports and flags a regression
+when `ns_per_coord` (falling back to `median_ns`) exceeds the baseline by
+more than the threshold factor. Rows present on only one side are reported
+but never fail the check (sections come and go across PRs; a baseline row
+for a platform-gated bench section may legitimately be absent from a run).
+A *missing baseline file* is a soft skip so the advisory lane stays green
+until a baseline is committed from a trusted runner's artifact.
+
+Exit codes:
+  0  no regressions (including soft skips)
+  1  at least one row regressed beyond the threshold
+  2  a results file is missing, unreadable, or malformed — the bench lane
+     produced garbage, which must never read as "no regressions"
 """
 
 import argparse
@@ -17,32 +32,46 @@ import sys
 from pathlib import Path
 
 
+class BenchFormatError(Exception):
+    """A results/baseline file exists but is not a valid bench report."""
+
+
 def load_rows(path: Path) -> dict:
-    doc = json.loads(path.read_text())
+    """Parse a schema-1 bench report into {(section, name): ns_value}."""
+    try:
+        doc = json.loads(path.read_text())
+    except OSError as e:
+        raise BenchFormatError(f"{path}: unreadable ({e})") from e
+    except json.JSONDecodeError as e:
+        raise BenchFormatError(f"{path}: invalid JSON ({e})") from e
+    if not isinstance(doc, dict):
+        raise BenchFormatError(f"{path}: top level is not an object")
+    results = doc.get("results", [])
+    if not isinstance(results, list):
+        raise BenchFormatError(f"{path}: 'results' is not a list")
     rows = {}
-    for row in doc.get("results", []):
+    for row in results:
+        if not isinstance(row, dict):
+            raise BenchFormatError(f"{path}: non-object row in 'results'")
         key = (row.get("section"), row.get("name"))
-        value = row.get("ns_per_coord") or row.get("median_ns")
-        if value is not None:
+        value = row.get("ns_per_coord")
+        if value is None:
+            value = row.get("median_ns")
+        if value is None:
+            continue
+        try:
             rows[key] = float(value)
+        except (TypeError, ValueError) as e:
+            raise BenchFormatError(
+                f"{path}: row {key} has non-numeric timing {value!r}"
+            ) from e
     return rows
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("new_json", type=Path)
-    ap.add_argument("baseline_json", type=Path)
-    ap.add_argument("--threshold", type=float, default=1.25,
-                    help="fail when new/baseline exceeds this factor")
-    args = ap.parse_args()
-
-    if not args.baseline_json.exists():
-        print(f"no baseline at {args.baseline_json} — skipping comparison.")
-        print(f"To seed one, commit this run's {args.new_json} to that path.")
-        return 0
-
-    new = load_rows(args.new_json)
-    base = load_rows(args.baseline_json)
+def compare(new_json: Path, baseline_json: Path, threshold: float) -> list:
+    """Print the row-by-row comparison; return the regressed keys."""
+    new = load_rows(new_json)
+    base = load_rows(baseline_json)
 
     regressions = []
     for key, base_v in sorted(base.items()):
@@ -53,20 +82,74 @@ def main() -> int:
             print(f"  [gone]    {key[0]} / {key[1]}")
             continue
         ratio = new_v / base_v
-        marker = "REGRESSED" if ratio > args.threshold else "ok"
+        marker = "REGRESSED" if ratio > threshold else "ok"
         print(f"  [{marker:9}] {key[0]} / {key[1]}: "
               f"{base_v:.3f} -> {new_v:.3f} ns/coord ({ratio:.2f}x)")
-        if ratio > args.threshold:
+        if ratio > threshold:
             regressions.append((key, ratio))
     for key in sorted(set(new) - set(base)):
         print(f"  [new]     {key[0]} / {key[1]}")
+    return regressions
 
+
+def check_pair(new_json: Path, baseline_json: Path, threshold: float) -> int:
+    if not new_json.exists():
+        print(f"results file {new_json} does not exist — the bench lane "
+              f"did not produce it.")
+        return 2
+    if not baseline_json.exists():
+        print(f"no baseline at {baseline_json} — skipping comparison.")
+        print(f"To seed one, commit this run's {new_json} to that path.")
+        return 0
+    print(f"{new_json} vs {baseline_json}:")
+    try:
+        regressions = compare(new_json, baseline_json, threshold)
+    except BenchFormatError as e:
+        print(f"MALFORMED: {e}")
+        return 2
     if regressions:
-        print(f"\n{len(regressions)} section(s) regressed beyond "
-              f"{args.threshold:.2f}x vs the committed baseline.")
+        print(f"  {len(regressions)} row(s) regressed beyond "
+              f"{threshold:.2f}x vs the committed baseline.")
         return 1
-    print("\nno regressions beyond threshold.")
     return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("new_json", nargs="?", type=Path,
+                    help="single results file (pair mode)")
+    ap.add_argument("baseline_json", nargs="?", type=Path,
+                    help="its baseline (pair mode)")
+    ap.add_argument("--results-dir", type=Path, default=Path("."),
+                    help="directory to glob BENCH_*.json from (discovery mode)")
+    ap.add_argument("--baseline-dir", type=Path,
+                    default=Path("rust/benches/baselines"),
+                    help="directory of committed <name>.json baselines")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when new/baseline exceeds this factor")
+    args = ap.parse_args()
+
+    if args.new_json is not None and args.baseline_json is None:
+        ap.error("pair mode needs both NEW_JSON and BASELINE_JSON "
+                 "(or neither, for discovery mode)")
+
+    if args.new_json is not None:
+        pairs = [(args.new_json, args.baseline_json)]
+    else:
+        found = sorted(args.results_dir.glob("BENCH_*.json"))
+        if not found:
+            print(f"no BENCH_*.json under {args.results_dir} — the bench "
+                  f"lane produced no results to check.")
+            return 2
+        pairs = [(p, args.baseline_dir / p.name[len("BENCH_"):]) for p in found]
+
+    worst = 0
+    for new_json, baseline_json in pairs:
+        worst = max(worst, check_pair(new_json, baseline_json, args.threshold))
+    if worst == 0:
+        print("\nno regressions beyond threshold.")
+    return worst
 
 
 if __name__ == "__main__":
