@@ -45,8 +45,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::CollectiveSpec;
-use crate::metrics::WireStats;
+use crate::config::{CollectiveSpec, GroupSpec, ScenarioSpec};
+use crate::metrics::{FaultStats, WireStats};
 use crate::quant::{Codec, EncodeSession};
 use crate::simnet::{SimNet, VTime};
 use crate::util::par;
@@ -79,6 +79,9 @@ pub struct Exchange {
     pub encode_coords: usize,
     /// Max over workers of coordinates decoded.
     pub decode_coords: usize,
+    /// Fault/recovery events observed during this exchange (all-zero on the
+    /// classic full-participation path).
+    pub faults: FaultStats,
 }
 
 /// One synchronous hop of the most recent exchange: which phase it belonged
@@ -133,15 +136,47 @@ pub fn build(
     workers: usize,
     seed: u64,
 ) -> Box<dyn CollectiveAlgo> {
-    match *spec {
+    match spec {
         CollectiveSpec::AllToAll => Box::new(AllToAll::new(codec, workers, seed)),
         CollectiveSpec::Ring { recompress, error_feedback } => {
-            Box::new(RingAllreduce::new(codec, workers, seed, recompress, error_feedback))
+            Box::new(RingAllreduce::new(codec, workers, seed, *recompress, *error_feedback))
         }
-        CollectiveSpec::Hierarchical { group } => {
-            Box::new(Hierarchical::new(codec, workers, seed, group))
-        }
+        CollectiveSpec::Hierarchical { groups } => Box::new(
+            Hierarchical::new_with_groups(codec, workers, seed, groups)
+                .unwrap_or_else(|e| panic!("invalid hierarchical group spec: {e}")),
+        ),
     }
+}
+
+/// [`build`], plus a fault scenario. Participation scenarios (`drop:R@S`,
+/// `partial:K`) need per-worker skip support, which only [`AllToAll`]
+/// provides — ring and hierarchical reject them cleanly rather than
+/// silently dropping contributions. Time-only scenarios (hetero /
+/// straggler / corrupt) live in the [`SimNet`] and work under every
+/// collective. Unlike [`build`], an unsatisfiable group spec is a clean
+/// error here, so CLI paths should prefer this constructor.
+pub fn build_with_scenario(
+    spec: &CollectiveSpec,
+    scenario: &ScenarioSpec,
+    codec: Arc<dyn Codec>,
+    workers: usize,
+    seed: u64,
+) -> Result<Box<dyn CollectiveAlgo>> {
+    if matches!(scenario, ScenarioSpec::Drop { .. } | ScenarioSpec::Partial { .. }) {
+        anyhow::ensure!(
+            matches!(spec, CollectiveSpec::AllToAll),
+            "scenario '{}' requires the all-to-all collective (ring and hierarchical \
+             have no per-worker skip path and fail clean)",
+            scenario.label()
+        );
+        return Ok(Box::new(
+            AllToAll::new(codec, workers, seed).with_scenario(scenario.clone(), seed),
+        ));
+    }
+    if let CollectiveSpec::Hierarchical { groups } = spec {
+        return Ok(Box::new(Hierarchical::new_with_groups(codec, workers, seed, groups)?));
+    }
+    Ok(build(spec, codec, workers, seed))
 }
 
 /// Recompression accounting shared by the re-encode helpers (the socket
@@ -244,6 +279,30 @@ fn par_encode_into(
     par::par_map_mut(&mut jobs, |w, job| job.session.encode_into(&grads[w], job.out));
 }
 
+/// [`par_encode_into`] restricted to the workers in `subset` — the others
+/// do no work at all (a dead worker computes nothing), leaving their wire
+/// buffers and RNG streams untouched.
+fn par_encode_subset(
+    sessions: &mut [Box<dyn EncodeSession>],
+    msgs: &mut [Vec<u8>],
+    grads: &[Vec<f32>],
+    subset: &[usize],
+) {
+    struct Job<'a> {
+        w: usize,
+        session: &'a mut dyn EncodeSession,
+        out: &'a mut Vec<u8>,
+    }
+    let mut jobs: Vec<Job> = sessions
+        .iter_mut()
+        .zip(msgs.iter_mut())
+        .enumerate()
+        .filter(|(w, _)| subset.contains(w))
+        .map(|(w, (s, out))| Job { w, session: s.as_mut(), out })
+        .collect();
+    par::par_map_mut(&mut jobs, |_, job| job.session.encode_into(&grads[job.w], job.out));
+}
+
 /// Expected wire bytes per worker per step for a collective, given a
 /// measured full-gradient message size — the pure traffic model behind
 /// [`CollectiveAlgo::bytes_per_worker`]; `epoch_sim` calls this directly so
@@ -252,7 +311,7 @@ pub fn model_bytes_per_worker(spec: &CollectiveSpec, k: usize, msg_bytes: usize)
     if k <= 1 {
         return 0.0;
     }
-    match *spec {
+    match spec {
         CollectiveSpec::AllToAll => ((k - 1) * msg_bytes) as f64,
         // K−1 reduce-scatter + K−1 allgather hops of ~|msg|/K segments
         CollectiveSpec::Ring { recompress: true, .. } => {
@@ -260,9 +319,11 @@ pub fn model_bytes_per_worker(spec: &CollectiveSpec, k: usize, msg_bytes: usize)
         }
         // store-and-forward of full frame sets — all-to-all traffic
         CollectiveSpec::Ring { recompress: false, .. } => ((k - 1) * msg_bytes) as f64,
-        CollectiveSpec::Hierarchical { group } => {
-            let group = group.min(k).max(1);
-            let leaders = k.div_ceil(group);
+        CollectiveSpec::Hierarchical { groups } => {
+            let leaders = groups
+                .resolve(k)
+                .map(|gs| gs.len())
+                .unwrap_or_else(|e| panic!("invalid hierarchical group spec: {e}"));
             let fan = (k - leaders) as f64 * msg_bytes as f64; // in = out
             let ring = if leaders > 1 {
                 // leader ring: 2(L−1) hops of ~|msg|/L segments on L links
@@ -284,11 +345,11 @@ pub fn model_exchange_time(spec: &CollectiveSpec, net: &SimNet, msg_bytes: usize
     if k <= 1 {
         return VTime::ZERO;
     }
-    match *spec {
+    match spec {
         CollectiveSpec::AllToAll => net.exchange_time(&vec![msg_bytes; k]),
         CollectiveSpec::Ring { recompress, .. } => {
             let mut t = VTime::ZERO;
-            if recompress {
+            if *recompress {
                 let chunk = msg_bytes.div_ceil(k);
                 for _ in 0..2 * (k - 1) {
                     t += net.hop_time(chunk);
@@ -300,12 +361,17 @@ pub fn model_exchange_time(spec: &CollectiveSpec, net: &SimNet, msg_bytes: usize
             }
             t
         }
-        CollectiveSpec::Hierarchical { group } => {
-            let group = group.min(k).max(1);
-            let leaders = k.div_ceil(group);
+        CollectiveSpec::Hierarchical { groups } => {
+            let gs = groups
+                .resolve(k)
+                .unwrap_or_else(|e| panic!("invalid hierarchical group spec: {e}"));
+            let leaders = gs.len();
+            // the widest group bounds both fan phases (they run in parallel
+            // across groups in virtual time)
+            let widest = gs.iter().map(Vec::len).max().unwrap_or(1);
             let mut t = VTime::ZERO;
-            if group > 1 {
-                t += net.fan_in_time((group - 1) * msg_bytes);
+            if widest > 1 {
+                t += net.fan_in_time((widest - 1) * msg_bytes);
             }
             if leaders > 1 {
                 let chunk = msg_bytes.div_ceil(leaders);
@@ -313,8 +379,8 @@ pub fn model_exchange_time(spec: &CollectiveSpec, net: &SimNet, msg_bytes: usize
                     t += net.hop_time(chunk);
                 }
             }
-            if group > 1 {
-                t += net.fan_out_time(msg_bytes, group - 1);
+            if widest > 1 {
+                t += net.fan_out_time(msg_bytes, widest - 1);
             }
             t
         }
@@ -334,6 +400,11 @@ pub struct AllToAll {
     sessions: Vec<Box<dyn EncodeSession>>,
     msgs: Vec<Vec<u8>>,
     hop_log: Vec<HopStat>,
+    /// Participation scenario (`drop:R@S` / `partial:K`); [`ScenarioSpec::None`]
+    /// keeps the classic full-mean path byte-identical.
+    scenario: ScenarioSpec,
+    scenario_seed: u64,
+    step: u64,
 }
 
 impl AllToAll {
@@ -343,7 +414,83 @@ impl AllToAll {
             .map(|w| codec.session(Xoshiro256::stream(seed, w as u64)))
             .collect();
         let msgs = (0..workers).map(|_| Vec::new()).collect();
-        Self { codec, sessions, msgs, hop_log: Vec::new() }
+        Self {
+            codec,
+            sessions,
+            msgs,
+            hop_log: Vec::new(),
+            scenario: ScenarioSpec::None,
+            scenario_seed: 0,
+            step: 0,
+        }
+    }
+
+    /// Install a participation scenario: each step draws its contributor set
+    /// from the seeded schedule, and the mean is renormalized over the
+    /// workers that actually participated (skip-and-renormalize).
+    pub fn with_scenario(mut self, scenario: ScenarioSpec, seed: u64) -> Self {
+        self.scenario = scenario;
+        self.scenario_seed = seed;
+        self
+    }
+
+    /// One exchange where only `participants` contribute: live workers
+    /// encode and broadcast among themselves (the dead/unsampled ranks
+    /// neither transmit nor receive), and the mean is renormalized to
+    /// `1/|participants|` — the same skip-and-renormalize rule the socket
+    /// trainer applies when a worker is declared dead.
+    fn exchange_partial(
+        &mut self,
+        net: &SimNet,
+        grads: &[Vec<f32>],
+        mean: &mut Vec<f32>,
+        participants: &[usize],
+    ) -> Result<Exchange> {
+        let k = self.sessions.len();
+        let n = grads.first().map(Vec::len).unwrap_or(0);
+        par_encode_subset(&mut self.sessions, &mut self.msgs, grads, participants);
+
+        let mut wire = WireStats::default();
+        let mut sizes = vec![0usize; k];
+        for &w in participants {
+            sizes[w] = self.msgs[w].len();
+            // each live message traverses one link per live peer
+            wire.record_fanout(self.msgs[w].len(), n, participants.len() - 1);
+        }
+        let time = net.exchange_time(&sizes);
+        self.hop_log.clear();
+        self.hop_log.push(HopStat {
+            phase: "broadcast-partial",
+            bytes: wire.payload_bytes,
+            time,
+        });
+
+        let alpha = 1.0 / participants.len() as f32;
+        let subset: Vec<&[u8]> =
+            participants.iter().map(|&w| self.msgs[w].as_slice()).collect();
+        let codec = &self.codec;
+        *mean = super::par_decode_mean(
+            &subset,
+            n,
+            alpha,
+            codec.decode_threads(),
+            |msg, a, acc, t| codec.decode_add_threads(msg, a, acc, t),
+        )?;
+
+        Ok(Exchange {
+            time,
+            wire,
+            hops: 1,
+            recompressions: 0,
+            recompress_err_sq: 0.0,
+            encode_coords: n,
+            decode_coords: participants.len() * n,
+            faults: FaultStats {
+                dead_workers: (k - participants.len()) as u64,
+                renormalized_steps: 1,
+                ..FaultStats::default()
+            },
+        })
     }
 }
 
@@ -372,6 +519,15 @@ impl CollectiveAlgo for AllToAll {
         assert_eq!(net.workers, k, "net sized for a different worker count");
         let n = grads.first().map(Vec::len).unwrap_or(0);
         assert!(grads.iter().all(|g| g.len() == n), "equal gradient sizes required");
+
+        if !self.scenario.is_none() {
+            let step = self.step;
+            self.step += 1;
+            let participants = self.scenario.participants(k, self.scenario_seed, step);
+            if participants.len() < k {
+                return self.exchange_partial(net, grads, mean, &participants);
+            }
+        }
 
         // K independent fused encode jobs on the scoped pool.
         par_encode_into(&mut self.sessions, &mut self.msgs, grads);
@@ -404,6 +560,7 @@ impl CollectiveAlgo for AllToAll {
             recompress_err_sq: 0.0,
             encode_coords: n,
             decode_coords: k * n,
+            faults: FaultStats::default(),
         })
     }
 
@@ -808,14 +965,19 @@ impl CollectiveAlgo for RingAllreduce {
 // Hierarchical two-level reduce
 // ---------------------------------------------------------------------------
 
-/// Two-level reduce over contiguous groups of `group` workers (the paper's
+/// Two-level reduce over a declarative group structure (the paper's
 /// multi-GPU-per-node testbed): members encode full gradients and fan in to
-/// their group leader, leaders sum and ring-allreduce the group sums (with
-/// per-hop recompression), then the final frames fan out verbatim — every
-/// worker in every group decodes one global set of bytes.
+/// their group leader (the first rank listed in each group), leaders sum
+/// and ring-allreduce the group sums (with per-hop recompression), then the
+/// final frames fan out verbatim — every worker in every group decodes one
+/// global set of bytes. [`GroupSpec::Contiguous`] reproduces the old flat
+/// `hier:G` knob bit-for-bit; [`GroupSpec::Explicit`] describes arbitrary
+/// (e.g. rack-aware) memberships.
 pub struct Hierarchical {
     codec: Arc<dyn Codec>,
-    group: usize,
+    spec: GroupSpec,
+    /// Resolved member lists; `groups[gi][0]` is group `gi`'s leader.
+    groups: Vec<Vec<usize>>,
     workers: usize,
     sessions: Vec<Box<dyn EncodeSession>>,
     ring: RingAllreduce,
@@ -825,43 +987,51 @@ pub struct Hierarchical {
 }
 
 impl Hierarchical {
+    /// Contiguous groups of `group` workers — the legacy flat-knob shape.
     pub fn new(codec: Arc<dyn Codec>, workers: usize, seed: u64, group: usize) -> Self {
-        assert!(workers >= 1);
         assert!(group >= 1);
-        let group = group.min(workers).max(1);
-        let leaders = workers.div_ceil(group);
+        Self::new_with_groups(codec, workers, seed, &GroupSpec::Contiguous(group))
+            .expect("contiguous groups are always resolvable")
+    }
+
+    /// Build from a declarative [`GroupSpec`]; errors when the spec does not
+    /// cover `workers` ranks exactly once.
+    pub fn new_with_groups(
+        codec: Arc<dyn Codec>,
+        workers: usize,
+        seed: u64,
+        spec: &GroupSpec,
+    ) -> Result<Self> {
+        assert!(workers >= 1);
+        let groups = spec.resolve(workers)?;
+        let leaders = groups.len();
         let sessions: Vec<Box<dyn EncodeSession>> = (0..workers)
             .map(|w| codec.session(Xoshiro256::stream(seed, w as u64)))
             .collect();
         // leader-ring sessions fork off a distinct stream family
         let ring =
             RingAllreduce::new(codec.clone(), leaders, seed ^ 0x9E3779B97F4A7C15, true, false);
-        Self {
+        Ok(Self {
             codec,
-            group,
+            spec: spec.clone(),
+            groups,
             workers,
             sessions,
             ring,
             msgs: (0..workers).map(|_| Vec::new()).collect(),
             sums: Vec::new(),
             hop_log: Vec::new(),
-        }
+        })
     }
 
     fn leaders(&self) -> usize {
-        self.workers.div_ceil(self.group)
-    }
-
-    /// Size of group `gi` (the last group may be short).
-    fn group_size(&self, gi: usize) -> usize {
-        let start = gi * self.group;
-        self.group.min(self.workers - start)
+        self.groups.len()
     }
 }
 
 impl CollectiveAlgo for Hierarchical {
     fn name(&self) -> String {
-        format!("hier:{} over {}", self.group, self.codec.name())
+        format!("hier:{} over {}", self.spec.label_body(), self.codec.name())
     }
 
     fn prepare(&mut self, n: usize) {
@@ -902,15 +1072,14 @@ impl CollectiveAlgo for Hierarchical {
 
         let mut fan_in = VTime::ZERO;
         let mut fan_in_bytes: u64 = 0;
-        for gi in 0..leaders {
-            let start = gi * self.group;
-            let size = self.group_size(gi);
+        for members in &self.groups {
             let mut bytes = 0usize;
-            for m in &self.msgs[start + 1..start + size] {
+            for &w in &members[1..] {
+                let m = &self.msgs[w];
                 ex.wire.record(m.len(), n);
                 bytes += m.len();
             }
-            if size > 1 {
+            if members.len() > 1 {
                 fan_in = fan_in.max(net.fan_in_time(bytes));
             }
             fan_in_bytes += bytes as u64;
@@ -921,25 +1090,32 @@ impl CollectiveAlgo for Hierarchical {
             ex.hops += 1;
         }
 
-        // Leaders sum their group's decoded messages (worker order).
+        // Leaders sum their group's decoded messages (listed member order —
+        // ascending rank order for contiguous groups).
         if self.sums.len() != leaders {
             self.sums = (0..leaders).map(|_| Vec::new()).collect();
         }
         for gi in 0..leaders {
-            let start = gi * self.group;
-            let size = self.group_size(gi);
             let sum = &mut self.sums[gi];
             sum.clear();
             sum.resize(n, 0.0);
-            for m in &self.msgs[start..start + size] {
-                self.codec.decode_add(m, 1.0, sum)?;
+            for &w in &self.groups[gi] {
+                self.codec.decode_add(&self.msgs[w], 1.0, sum)?;
             }
         }
 
         // Phase 2 — recompressing ring across the leaders; the final decode
-        // already averages over the *global* worker count.
+        // already averages over the *global* worker count. Scenario state
+        // carries over: the fault schedule continues on the leader ring, and
+        // a leader rank's link override follows it to its ring position.
         self.ring.alpha = Some(1.0 / k as f32);
-        let leader_net = SimNet::new(leaders, net.link, net.topology);
+        let mut leader_net = SimNet::new(leaders, net.link, net.topology);
+        leader_net.faults = net.faults.clone();
+        for &(w, link) in &net.overrides {
+            if let Some(gi) = self.groups.iter().position(|g| g[0] == w) {
+                leader_net = leader_net.with_link_override(gi, link);
+            }
+        }
         let re = self.ring.exchange(&leader_net, &self.sums, mean)?;
         ex.time += re.time;
         ex.hops += re.hops;
@@ -956,8 +1132,8 @@ impl CollectiveAlgo for Hierarchical {
         let final_bytes: usize = self.ring.final_frames().iter().map(Vec::len).sum();
         let mut fan_out = VTime::ZERO;
         let mut copies_total = 0usize;
-        for gi in 0..leaders {
-            let size = self.group_size(gi);
+        for members in &self.groups {
+            let size = members.len();
             if size > 1 {
                 fan_out = fan_out.max(net.fan_out_time(final_bytes, size - 1));
                 copies_total += size - 1;
@@ -978,9 +1154,12 @@ impl CollectiveAlgo for Hierarchical {
         }
 
         // Leaders encode their own message plus the ring's shares; members
-        // decode the same final frames the leaders do.
+        // decode the same final frames the leaders do. The widest group's
+        // leader decodes the most.
+        let widest = self.groups.iter().map(Vec::len).max().unwrap_or(1);
         ex.encode_coords = n + re.encode_coords;
-        ex.decode_coords = self.group * n + re.decode_coords;
+        ex.decode_coords = widest * n + re.decode_coords;
+        ex.faults.add(&re.faults);
         Ok(ex)
     }
 
@@ -989,10 +1168,12 @@ impl CollectiveAlgo for Hierarchical {
     }
 
     fn bytes_per_worker(&self, k: usize, msg_bytes: usize) -> f64 {
-        model_bytes_per_worker(&CollectiveSpec::Hierarchical { group: self.group }, k, msg_bytes)
+        let spec = CollectiveSpec::Hierarchical { groups: self.spec.clone() };
+        model_bytes_per_worker(&spec, k, msg_bytes)
     }
 
     fn model_time(&self, net: &SimNet, msg_bytes: usize) -> VTime {
-        model_exchange_time(&CollectiveSpec::Hierarchical { group: self.group }, net, msg_bytes)
+        let spec = CollectiveSpec::Hierarchical { groups: self.spec.clone() };
+        model_exchange_time(&spec, net, msg_bytes)
     }
 }

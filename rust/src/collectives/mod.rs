@@ -16,8 +16,8 @@
 pub mod algo;
 
 pub use algo::{
-    build, model_bytes_per_worker, model_exchange_time, ring_segments, AllToAll, CollectiveAlgo,
-    Exchange, Hierarchical, HopStat, RingAllreduce,
+    build, build_with_scenario, model_bytes_per_worker, model_exchange_time, ring_segments,
+    AllToAll, CollectiveAlgo, Exchange, Hierarchical, HopStat, RingAllreduce,
 };
 
 use anyhow::Result;

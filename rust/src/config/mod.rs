@@ -93,8 +93,79 @@ pub enum CollectiveSpec {
     /// multi-GPU-per-node testbed: intra-group fan-in to a leader (which
     /// re-encodes the group sum), a recompressing ring across leaders, then
     /// an intra-group fan-out of the final frames (forwarded verbatim, so
-    /// every worker decodes identical bytes).
-    Hierarchical { group: usize },
+    /// every worker decodes identical bytes). The group structure is a
+    /// declarative [`GroupSpec`], not a flat size knob: `hier:G` still
+    /// parses (contiguous groups of G), and `hier:0,1/2,3` names explicit
+    /// member lists.
+    Hierarchical { groups: GroupSpec },
+}
+
+/// Declarative group structure for [`CollectiveSpec::Hierarchical`] — the
+/// topology-style description the hierarchical collective reads its shape
+/// from. Each group's first member is its leader.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GroupSpec {
+    /// Contiguous groups of this size over ranks `0..world` (the leader is
+    /// the lowest rank of each group). Wire form `hier:G`.
+    Contiguous(usize),
+    /// Explicit member lists, e.g. `hier:0,1/2,3`: groups separated by
+    /// `/`, members by `,`; the first member of each group leads it.
+    Explicit(Vec<Vec<usize>>),
+}
+
+impl GroupSpec {
+    /// Resolve into concrete member lists for a `world`-rank run: every
+    /// rank must appear in exactly one group. Contiguous sizes are clamped
+    /// to `[1, world]` the way the flat knob always was.
+    pub fn resolve(&self, world: usize) -> anyhow::Result<Vec<Vec<usize>>> {
+        anyhow::ensure!(world >= 1, "world size must be at least 1");
+        let groups: Vec<Vec<usize>> = match self {
+            GroupSpec::Contiguous(g) => {
+                let g = (*g).clamp(1, world);
+                (0..world)
+                    .step_by(g)
+                    .map(|lo| (lo..(lo + g).min(world)).collect())
+                    .collect()
+            }
+            GroupSpec::Explicit(gs) => gs.clone(),
+        };
+        let mut seen = vec![false; world];
+        let mut count = 0usize;
+        for grp in &groups {
+            anyhow::ensure!(!grp.is_empty(), "empty group in hierarchical spec");
+            for &m in grp {
+                anyhow::ensure!(
+                    m < world,
+                    "group member {m} out of range for {world} workers"
+                );
+                anyhow::ensure!(!seen[m], "rank {m} appears in two groups");
+                seen[m] = true;
+                count += 1;
+            }
+        }
+        anyhow::ensure!(
+            count == world,
+            "hierarchical groups cover {count} of {world} ranks"
+        );
+        Ok(groups)
+    }
+
+    /// The part of the label after `hier:`.
+    pub(crate) fn label_body(&self) -> String {
+        match self {
+            GroupSpec::Contiguous(g) => g.to_string(),
+            GroupSpec::Explicit(gs) => gs
+                .iter()
+                .map(|grp| {
+                    grp.iter()
+                        .map(|m| m.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                })
+                .collect::<Vec<_>>()
+                .join("/"),
+        }
+    }
 }
 
 impl CollectiveSpec {
@@ -107,10 +178,12 @@ impl CollectiveSpec {
     }
 
     pub fn hierarchical(group: usize) -> Self {
-        CollectiveSpec::Hierarchical { group }
+        CollectiveSpec::Hierarchical { groups: GroupSpec::Contiguous(group) }
     }
 
-    /// `a2a` / `ring` / `ring:ef` / `ring:raw` / `hier[:G]`.
+    /// `a2a` / `ring` / `ring:ef` / `ring:raw` / `hier[:G]` /
+    /// `hier:0,1/2,3` (explicit groups: `/` between groups, `,` between
+    /// members, first member leads).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         let s = s.to_lowercase();
         match s.as_str() {
@@ -126,21 +199,47 @@ impl CollectiveSpec {
             _ => {}
         }
         if let Some(g) = s.strip_prefix("hier:") {
+            if g.contains(',') || g.contains('/') {
+                let groups: Vec<Vec<usize>> = g
+                    .split('/')
+                    .map(|grp| {
+                        grp.split(',')
+                            .filter(|t| !t.is_empty())
+                            .map(|t| {
+                                t.parse::<usize>().map_err(|_| {
+                                    anyhow::anyhow!("bad group member '{t}' in '{g}'")
+                                })
+                            })
+                            .collect::<anyhow::Result<Vec<usize>>>()
+                    })
+                    .collect::<anyhow::Result<Vec<Vec<usize>>>>()?;
+                anyhow::ensure!(
+                    groups.iter().all(|grp| !grp.is_empty()),
+                    "empty group in '{g}'"
+                );
+                return Ok(CollectiveSpec::Hierarchical {
+                    groups: GroupSpec::Explicit(groups),
+                });
+            }
             let group: usize =
                 g.parse().map_err(|_| anyhow::anyhow!("bad hier group '{g}'"))?;
             anyhow::ensure!(group >= 2, "hier group must be ≥ 2, got {group}");
             return Ok(Self::hierarchical(group));
         }
-        anyhow::bail!("unknown collective '{s}' (a2a|ring|ring:ef|ring:raw|hier[:G])")
+        anyhow::bail!(
+            "unknown collective '{s}' (a2a|ring|ring:ef|ring:raw|hier[:G]|hier:0,1/2,3)"
+        )
     }
 
     pub fn label(&self) -> String {
-        match *self {
+        match self {
             CollectiveSpec::AllToAll => "a2a".into(),
             CollectiveSpec::Ring { recompress: false, .. } => "ring:raw".into(),
             CollectiveSpec::Ring { error_feedback: true, .. } => "ring:ef".into(),
             CollectiveSpec::Ring { .. } => "ring".into(),
-            CollectiveSpec::Hierarchical { group } => format!("hier:{group}"),
+            CollectiveSpec::Hierarchical { groups } => {
+                format!("hier:{}", groups.label_body())
+            }
         }
     }
 }
@@ -196,6 +295,163 @@ impl TransportSpec {
 
     pub fn is_sim(&self) -> bool {
         matches!(self, TransportSpec::Sim)
+    }
+}
+
+/// Fault-injection scenario for a run, parsed from `--scenario`. One arm
+/// drives both execution paths: on the simulated interconnect it configures
+/// [`SimNet`](crate::simnet::SimNet) link overrides and
+/// [`Faults`](crate::simnet::Faults); on the socket transport it configures
+/// the [`FaultInjector`](crate::transport::FaultInjector) and the trainer's
+/// recovery protocol. Every arm is seeded, so a `(scenario, seed)` pair is
+/// a determinism golden.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum ScenarioSpec {
+    /// No faults (the default).
+    #[default]
+    None,
+    /// Heterogeneous links: worker 0 runs at `1/factor` of the base
+    /// bandwidth. `hetero[:FACTOR]`, default factor 4.
+    Hetero { factor: f64 },
+    /// Seeded straggler: each charged network op slows `factor`× with
+    /// probability `prob`. `straggler[:PROB:FACTOR]`, default `0.1:5`.
+    Straggler { prob: f64, factor: f64 },
+    /// Seeded frame corruption with probability `prob` per data frame; the
+    /// socket trainer re-requests corrupt frames (bounded) from live
+    /// peers. `corrupt[:PROB]`, default 0.05.
+    Corrupt { prob: f64 },
+    /// Rank `rank` dies at step `step` (0-based); survivors skip it and
+    /// renormalize the mean. `drop:RANK@STEP`.
+    Drop { rank: usize, step: usize },
+    /// Partial participation: a seeded shared schedule samples `k` of the
+    /// N contributors each round, and the mean renormalizes over the
+    /// sample. `partial:K`.
+    Partial { k: usize },
+}
+
+impl ScenarioSpec {
+    /// `none` / `hetero[:FACTOR]` / `straggler[:PROB:FACTOR]` /
+    /// `corrupt[:PROB]` / `drop:RANK@STEP` / `partial:K`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.to_lowercase();
+        match s.as_str() {
+            "none" => return Ok(ScenarioSpec::None),
+            "hetero" => return Ok(ScenarioSpec::Hetero { factor: 4.0 }),
+            "straggler" => {
+                return Ok(ScenarioSpec::Straggler { prob: 0.1, factor: 5.0 })
+            }
+            "corrupt" => return Ok(ScenarioSpec::Corrupt { prob: 0.05 }),
+            _ => {}
+        }
+        if let Some(f) = s.strip_prefix("hetero:") {
+            let factor: f64 =
+                f.parse().map_err(|_| anyhow::anyhow!("bad hetero factor '{f}'"))?;
+            anyhow::ensure!(factor >= 1.0, "hetero factor must be ≥ 1, got {factor}");
+            return Ok(ScenarioSpec::Hetero { factor });
+        }
+        if let Some(pf) = s.strip_prefix("straggler:") {
+            let (p, f) = pf
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("straggler needs PROB:FACTOR, got '{pf}'"))?;
+            let prob: f64 =
+                p.parse().map_err(|_| anyhow::anyhow!("bad straggler prob '{p}'"))?;
+            let factor: f64 =
+                f.parse().map_err(|_| anyhow::anyhow!("bad straggler factor '{f}'"))?;
+            anyhow::ensure!((0.0..=1.0).contains(&prob), "straggler prob must be in [0,1]");
+            anyhow::ensure!(factor >= 1.0, "straggler factor must be ≥ 1");
+            return Ok(ScenarioSpec::Straggler { prob, factor });
+        }
+        if let Some(p) = s.strip_prefix("corrupt:") {
+            let prob: f64 =
+                p.parse().map_err(|_| anyhow::anyhow!("bad corrupt prob '{p}'"))?;
+            anyhow::ensure!((0.0..=1.0).contains(&prob), "corrupt prob must be in [0,1]");
+            return Ok(ScenarioSpec::Corrupt { prob });
+        }
+        if let Some(rs) = s.strip_prefix("drop:") {
+            let (r, st) = rs
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("drop needs RANK@STEP, got '{rs}'"))?;
+            let rank: usize =
+                r.parse().map_err(|_| anyhow::anyhow!("bad drop rank '{r}'"))?;
+            let step: usize =
+                st.parse().map_err(|_| anyhow::anyhow!("bad drop step '{st}'"))?;
+            return Ok(ScenarioSpec::Drop { rank, step });
+        }
+        if let Some(k) = s.strip_prefix("partial:") {
+            let k: usize =
+                k.parse().map_err(|_| anyhow::anyhow!("bad partial count '{k}'"))?;
+            anyhow::ensure!(k >= 1, "partial participation needs k ≥ 1");
+            return Ok(ScenarioSpec::Partial { k });
+        }
+        anyhow::bail!(
+            "unknown scenario '{s}' \
+             (none|hetero[:F]|straggler[:P:F]|corrupt[:P]|drop:R@S|partial:K)"
+        )
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            ScenarioSpec::None => "none".into(),
+            ScenarioSpec::Hetero { factor } => format!("hetero:{factor}"),
+            ScenarioSpec::Straggler { prob, factor } => {
+                format!("straggler:{prob}:{factor}")
+            }
+            ScenarioSpec::Corrupt { prob } => format!("corrupt:{prob}"),
+            ScenarioSpec::Drop { rank, step } => format!("drop:{rank}@{step}"),
+            ScenarioSpec::Partial { k } => format!("partial:{k}"),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, ScenarioSpec::None)
+    }
+
+    /// Configure a simulated interconnect for this scenario. `seed` feeds
+    /// the fault schedule, so `(scenario, seed)` pins the virtual-time
+    /// trace exactly.
+    pub fn apply_simnet(&self, net: crate::simnet::SimNet, seed: u64) -> crate::simnet::SimNet {
+        use crate::simnet::{Faults, Link};
+        match *self {
+            ScenarioSpec::Hetero { factor } => {
+                let slow =
+                    Link::new(net.link.bandwidth_bps / factor, net.link.latency_s);
+                net.with_link_override(0, slow)
+            }
+            ScenarioSpec::Straggler { prob, factor } => {
+                net.with_faults(Faults::new(seed).with_straggler(prob, factor))
+            }
+            ScenarioSpec::Corrupt { prob } => {
+                net.with_faults(Faults::new(seed).with_corruption(prob))
+            }
+            // Drop/partial change who contributes, not the link model.
+            ScenarioSpec::None
+            | ScenarioSpec::Drop { .. }
+            | ScenarioSpec::Partial { .. } => net,
+        }
+    }
+
+    /// The seeded shared participation schedule: which ranks contribute to
+    /// the mean at `step`. Every rank computes the same set from
+    /// `(seed, step)` alone — no agreement round needed.
+    pub fn participants(&self, world: usize, seed: u64, step: u64) -> Vec<usize> {
+        match *self {
+            ScenarioSpec::Partial { k } if world > 1 => {
+                let mut idx: Vec<usize> = (0..world).collect();
+                let mut s = seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                for i in (1..world).rev() {
+                    let j =
+                        (crate::util::rng::splitmix64(&mut s) % (i as u64 + 1)) as usize;
+                    idx.swap(i, j);
+                }
+                idx.truncate(k.clamp(1, world));
+                idx.sort_unstable();
+                idx
+            }
+            ScenarioSpec::Drop { rank, step: at } if world > 1 && step >= at as u64 => {
+                (0..world).filter(|&r| r != rank).collect()
+            }
+            _ => (0..world).collect(),
+        }
     }
 }
 
@@ -305,16 +561,109 @@ mod tests {
         );
         assert_eq!(
             CollectiveSpec::parse("hier").unwrap(),
-            CollectiveSpec::Hierarchical { group: 4 }
+            CollectiveSpec::Hierarchical { groups: GroupSpec::Contiguous(4) }
         );
         assert_eq!(CollectiveSpec::parse("hier:8").unwrap(), CollectiveSpec::hierarchical(8));
+        assert_eq!(
+            CollectiveSpec::parse("hier:0,1/2,3").unwrap(),
+            CollectiveSpec::Hierarchical {
+                groups: GroupSpec::Explicit(vec![vec![0, 1], vec![2, 3]])
+            }
+        );
         assert!(CollectiveSpec::parse("hier:1").is_err());
         assert!(CollectiveSpec::parse("hier:x").is_err());
+        assert!(CollectiveSpec::parse("hier:0,a/2").is_err());
         assert!(CollectiveSpec::parse("mesh").is_err());
         assert_eq!(CollectiveSpec::default(), CollectiveSpec::AllToAll);
-        for s in ["a2a", "ring", "ring:ef", "ring:raw", "hier:4"] {
+        for s in ["a2a", "ring", "ring:ef", "ring:raw", "hier:4", "hier:0,1/2,3"] {
             assert_eq!(CollectiveSpec::parse(s).unwrap().label(), s, "label round-trip");
         }
+    }
+
+    #[test]
+    fn group_spec_resolution() {
+        // Contiguous: the flat knob's semantics, including the final ragged
+        // group and the clamp to [1, world].
+        assert_eq!(
+            GroupSpec::Contiguous(4).resolve(8).unwrap(),
+            vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]
+        );
+        assert_eq!(
+            GroupSpec::Contiguous(3).resolve(8).unwrap(),
+            vec![vec![0, 1, 2], vec![3, 4, 5], vec![6, 7]]
+        );
+        assert_eq!(GroupSpec::Contiguous(16).resolve(4).unwrap(), vec![vec![0, 1, 2, 3]]);
+        // Explicit groups: arbitrary membership, first member leads.
+        let gs = GroupSpec::Explicit(vec![vec![2, 0], vec![1, 3]]);
+        assert_eq!(gs.resolve(4).unwrap(), vec![vec![2, 0], vec![1, 3]]);
+        // Validation: coverage must be exact.
+        assert!(GroupSpec::Explicit(vec![vec![0, 1]]).resolve(4).is_err(), "missing ranks");
+        assert!(
+            GroupSpec::Explicit(vec![vec![0, 1], vec![1, 2, 3]]).resolve(4).is_err(),
+            "duplicate rank"
+        );
+        assert!(
+            GroupSpec::Explicit(vec![vec![0, 4]]).resolve(2).is_err(),
+            "member out of range"
+        );
+        assert!(GroupSpec::Explicit(vec![vec![0], vec![]]).resolve(1).is_err(), "empty group");
+    }
+
+    #[test]
+    fn scenario_spec_parse_label_roundtrip() {
+        assert_eq!(ScenarioSpec::parse("none").unwrap(), ScenarioSpec::None);
+        assert!(ScenarioSpec::default().is_none());
+        assert_eq!(
+            ScenarioSpec::parse("hetero").unwrap(),
+            ScenarioSpec::Hetero { factor: 4.0 }
+        );
+        assert_eq!(
+            ScenarioSpec::parse("straggler").unwrap(),
+            ScenarioSpec::Straggler { prob: 0.1, factor: 5.0 }
+        );
+        assert_eq!(
+            ScenarioSpec::parse("drop:2@1").unwrap(),
+            ScenarioSpec::Drop { rank: 2, step: 1 }
+        );
+        assert_eq!(ScenarioSpec::parse("partial:3").unwrap(), ScenarioSpec::Partial { k: 3 });
+        assert!(ScenarioSpec::parse("hetero:0.5").is_err());
+        assert!(ScenarioSpec::parse("straggler:2:5").is_err());
+        assert!(ScenarioSpec::parse("corrupt:1.5").is_err());
+        assert!(ScenarioSpec::parse("drop:1").is_err());
+        assert!(ScenarioSpec::parse("partial:0").is_err());
+        assert!(ScenarioSpec::parse("meteor").is_err());
+        for s in
+            ["none", "hetero:4", "straggler:0.1:5", "corrupt:0.05", "drop:1@2", "partial:2"]
+        {
+            assert_eq!(ScenarioSpec::parse(s).unwrap().label(), s, "label round-trip");
+        }
+    }
+
+    #[test]
+    fn scenario_participation_schedule() {
+        let part = ScenarioSpec::Partial { k: 2 };
+        let a = part.participants(4, 7, 0);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a, part.participants(4, 7, 0), "schedule is a pure function");
+        // Across many steps every rank participates at least once and the
+        // schedule actually varies.
+        let mut seen = [false; 4];
+        let mut varied = false;
+        for step in 0..64 {
+            let p = part.participants(4, 7, step);
+            assert_eq!(p.len(), 2);
+            assert!(p.windows(2).all(|w| w[0] < w[1]), "sorted, deduped");
+            varied |= p != a;
+            for &r in &p {
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every rank gets sampled eventually");
+        assert!(varied, "the sample changes across steps");
+        let drop = ScenarioSpec::Drop { rank: 1, step: 2 };
+        assert_eq!(drop.participants(4, 0, 1), vec![0, 1, 2, 3]);
+        assert_eq!(drop.participants(4, 0, 2), vec![0, 2, 3]);
+        assert_eq!(ScenarioSpec::None.participants(3, 0, 9), vec![0, 1, 2]);
     }
 
     #[test]

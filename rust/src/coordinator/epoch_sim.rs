@@ -322,6 +322,43 @@ mod tests {
     }
 
     #[test]
+    fn fault_scenarios_have_deterministic_epoch_goldens() {
+        use crate::config::ScenarioSpec;
+        let net = zoo::alexnet();
+        let arm = EpochArm::qsgd(4, 512);
+        let run = |scenario: &str, seed: u64| {
+            let s = ScenarioSpec::parse(scenario).unwrap();
+            let simnet = s.apply_simnet(SimNet::preset(8, Preset::K80Pcie), seed);
+            simulate_epoch(&net, 8, &arm, &simnet, &CostModel::k80(), 1, 0).epoch_time()
+        };
+        let base = run("none", 1);
+        // prob-1.0 schedules so the (few) charges in one epoch model all
+        // bite; seed-sensitivity of stochastic schedules is pinned below.
+        for sc in ["hetero:4.0", "straggler:1.0:5.0", "corrupt:1.0"] {
+            let a = run(sc, 1);
+            let b = run(sc, 1);
+            assert_eq!(a.to_bits(), b.to_bits(), "{sc} must be seed-pinned");
+            assert!(a > base, "{sc}: {a} not above baseline {base}");
+        }
+    }
+
+    #[test]
+    fn scenario_schedules_are_seed_pinned_and_seed_sensitive() {
+        use crate::config::ScenarioSpec;
+        let total = |seed: u64| {
+            let s = ScenarioSpec::parse("straggler:0.5:5.0").unwrap();
+            let net = s.apply_simnet(SimNet::preset(4, Preset::K80Pcie), seed);
+            let mut t = 0.0f64;
+            for _ in 0..64 {
+                t += net.exchange_time(&vec![1 << 16; 4]).secs();
+            }
+            t
+        };
+        assert_eq!(total(7).to_bits(), total(7).to_bits(), "same seed, same trace");
+        assert!(total(7).to_bits() != total(8).to_bits(), "different seed, different trace");
+    }
+
+    #[test]
     fn comm_fraction_grows_with_gpus() {
         let net = zoo::alexnet();
         let f2 = sim(&net, 2, &EpochArm::fp32()).breakdown.comm_fraction();

@@ -36,8 +36,8 @@ use super::exchange::PlanCodec;
 use super::sources::GradSource;
 use super::CompressorSpec;
 use crate::collectives;
-use crate::config::CollectiveSpec;
-use crate::metrics::{Breakdown, Curve, WallClock, WireStats};
+use crate::config::{CollectiveSpec, ScenarioSpec};
+use crate::metrics::{Breakdown, Curve, FaultStats, WallClock, WireStats};
 use crate::models::layout::QuantPlan;
 use crate::models::CostModel;
 use crate::optim::Sgd;
@@ -67,6 +67,12 @@ pub struct SyncConfig {
     /// Evaluate held-out metric every `eval_every` steps (0 = never).
     pub eval_every: usize,
     pub net: SimNet,
+    /// Fault-injection scenario (`--scenario`): shapes the interconnect
+    /// (hetero links, seeded stragglers, corruption retransmits) and/or the
+    /// per-step participation schedule (`drop`, `partial`). `(scenario,
+    /// seed)` pins the whole faulted trace, so every scenario has a
+    /// determinism golden.
+    pub scenario: ScenarioSpec,
     pub cost: CostModel,
     /// Initial parameter scale (gaussian init · scale).
     pub init_scale: f32,
@@ -89,6 +95,7 @@ impl SyncConfig {
             log_every: 10,
             eval_every: 0,
             net: SimNet::preset(workers, crate::simnet::Preset::K80Pcie),
+            scenario: ScenarioSpec::None,
             cost: CostModel::k80(),
             init_scale: 0.1,
             consistency_every: 50,
@@ -118,6 +125,10 @@ pub struct RunResult {
     /// Measured wall-clock per-phase seconds, populated only by the socket
     /// transport (`--transport tcp:…|uds:…`); all-zero on simnet runs.
     pub wall: WallClock,
+    /// Fault and recovery events over the whole run: scenario-injected
+    /// faults on simnet runs, observed faults plus recovery activity on
+    /// socket runs. All-zero under `--scenario none` without recovery.
+    pub faults: FaultStats,
 }
 
 impl RunResult {
@@ -182,9 +193,17 @@ impl SyncTrainer {
             CollectiveSpec::AllToAll => Arc::new(PlanCodec::from_spec(plan, &cfg.compressor)),
             _ => cfg.compressor.codec(),
         };
-        let mut algo =
-            collectives::build(&cfg.collective, codec, cfg.workers, cfg.seed ^ 0xF00D);
+        let mut algo = collectives::build_with_scenario(
+            &cfg.collective,
+            &cfg.scenario,
+            codec,
+            cfg.workers,
+            cfg.seed ^ 0xF00D,
+        )?;
         algo.prepare(n);
+        // Scenario-shaped interconnect: link overrides and the seeded fault
+        // schedule live on this local copy; `cfg.net` stays pristine.
+        let net = cfg.scenario.apply_simnet(cfg.net.clone(), cfg.seed);
 
         // Identical init on every worker (same seed), per-worker RNG streams
         // for quantization randomness.
@@ -213,6 +232,7 @@ impl SyncTrainer {
         let mut hops = 0usize;
         let mut recompressions = 0u64;
         let mut recompress_err_sq = 0.0f64;
+        let mut faults = FaultStats::default();
 
         for step in 0..cfg.steps {
             // 1. local gradients (virtual: all workers compute in parallel)
@@ -230,8 +250,9 @@ impl SyncTrainer {
             // per-session RNG streams), per-hop α–β time is charged, and
             // the mean comes back bit-identical on every replica at any
             // thread budget.
-            let x = algo.exchange(&cfg.net, &grads, &mut mean_grad)?;
+            let x = algo.exchange(&net, &grads, &mut mean_grad)?;
             wire.add(&x.wire);
+            faults.add(&x.faults);
             hops += x.hops;
             recompressions += x.recompressions;
             recompress_err_sq += x.recompress_err_sq;
@@ -258,6 +279,9 @@ impl SyncTrainer {
             }
         }
         assert_consistent(&workers);
+        let (straggled, corrupted) = net.fault_counts();
+        faults.straggler_hops += straggled;
+        faults.corrupt_frames += corrupted;
 
         Ok(RunResult {
             loss: loss_curve,
@@ -271,6 +295,7 @@ impl SyncTrainer {
             recompressions,
             recompress_err_sq,
             wall: WallClock::default(),
+            faults,
         })
     }
 }
@@ -435,6 +460,68 @@ mod tests {
         let mut cfg2 = SyncConfig::quick(4, 5, CompressorSpec::OneBit { column: 32 }, 0.05);
         cfg2.collective = CollectiveSpec::ring();
         let err = SyncTrainer::new(cfg2).run(&mut src2).unwrap_err();
+        assert!(err.to_string().contains("all-to-all"), "{err:#}");
+    }
+
+    #[test]
+    fn fault_scenarios_renormalize_and_stay_deterministic() {
+        use crate::config::ScenarioSpec;
+        let run = |scenario: &str| {
+            let p = QuadraticProblem::generate(256, 128, 1e-3, 0.05, 7);
+            let mut src = ConvexSource::new(p, 8, 3);
+            let mut cfg = SyncConfig::quick(4, 40, CompressorSpec::qsgd_4bit(), 0.05);
+            cfg.scenario = ScenarioSpec::parse(scenario).unwrap();
+            SyncTrainer::new(cfg).run(&mut src).unwrap()
+        };
+        let clean = run("none");
+        assert_eq!(clean.faults, FaultStats::default());
+
+        // Partial participation: every step renormalizes over 3 of 4
+        // workers, the trace is seed-pinned, and the skipped contributions
+        // actually change the trajectory.
+        let a = run("partial:3");
+        let b = run("partial:3");
+        assert_eq!(a.params, b.params, "partial schedule must be deterministic");
+        assert_eq!(a.faults.renormalized_steps, 40);
+        assert_eq!(a.faults.dead_workers, 40);
+        assert!(a.params != clean.params, "partial must alter the trajectory");
+        let first = a.loss.points[0].1;
+        assert!(a.loss.tail_mean(3) < first, "loss must still fall");
+
+        // Drop: rank 1 leaves at step 10 and stays gone.
+        let d = run("drop:1@10");
+        assert_eq!(d.faults.renormalized_steps, 30);
+
+        // Straggler/corrupt/hetero shape virtual time only — wire bytes and
+        // the decoded means stay bit-identical to the clean run.
+        let s1 = run("straggler:0.5:5.0");
+        let s2 = run("straggler:0.5:5.0");
+        assert_eq!(s1.params, clean.params);
+        assert!(s1.faults.straggler_hops > 0);
+        assert!(s1.breakdown.transfer.secs() > clean.breakdown.transfer.secs());
+        assert_eq!(
+            s1.breakdown.transfer.secs().to_bits(),
+            s2.breakdown.transfer.secs().to_bits(),
+            "straggler schedule must pin the virtual-time trace"
+        );
+        let c = run("corrupt:0.5");
+        assert_eq!(c.params, clean.params);
+        assert!(c.faults.corrupt_frames > 0);
+        assert!(c.breakdown.transfer.secs() > clean.breakdown.transfer.secs());
+        let h = run("hetero:4.0");
+        assert_eq!(h.params, clean.params);
+        assert!(h.breakdown.transfer.secs() > clean.breakdown.transfer.secs());
+    }
+
+    #[test]
+    fn skip_scenarios_require_all_to_all() {
+        use crate::config::ScenarioSpec;
+        let p = QuadraticProblem::generate(256, 128, 1e-3, 0.05, 7);
+        let mut src = ConvexSource::new(p, 8, 3);
+        let mut cfg = SyncConfig::quick(4, 5, CompressorSpec::qsgd_4bit(), 0.05);
+        cfg.collective = CollectiveSpec::ring();
+        cfg.scenario = ScenarioSpec::parse("partial:3").unwrap();
+        let err = SyncTrainer::new(cfg).run(&mut src).unwrap_err();
         assert!(err.to_string().contains("all-to-all"), "{err:#}");
     }
 

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use qsgd::config::{Args, CollectiveSpec, TransportSpec};
+use qsgd::config::{Args, CollectiveSpec, ScenarioSpec, TransportSpec};
 use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm};
 use qsgd::coordinator::sources::{ConvexSource, GradSource, RuntimeSource, Workload};
 use qsgd::coordinator::sync::{SyncConfig, SyncTrainer};
@@ -23,7 +23,10 @@ use qsgd::models::layout::QuantPlan;
 use qsgd::models::{zoo, CostModel};
 use qsgd::runtime::Runtime;
 use qsgd::simnet::{Preset, SimNet};
-use qsgd::transport::{train_rank, DistTrainConfig, Endpoint, Mesh, MeshConfig, SocketExchange};
+use qsgd::transport::{
+    train_rank, DistTrainConfig, Endpoint, FaultInjector, Mesh, MeshConfig, RecoveryOptions,
+    SocketExchange,
+};
 use qsgd::util::stats;
 
 fn main() {
@@ -56,13 +59,18 @@ fn print_help() {
          USAGE: qsgd <info|train|simulate|svrg|async|validate> [--flags]\n\n\
          train    --model <logreg|mlp|tfm|quadratic|logreg-native> \\\n\
                   --compressor <fp32|qsgdN[:bucket]|nuqsgdN[:bucket]|1bit|terngrad> \\\n\
-                  --collective <a2a|ring|ring:ef|ring:raw|hier[:G]> \\\n\
+                  --collective <a2a|ring|ring:ef|ring:raw|hier[:G]|hier:0,1/2,3> \\\n\
                   --workers K --steps N --lr F --seed S [--eval-every N] \\\n\
+                  [--scenario none|hetero[:F]|straggler[:P:F]|corrupt[:P]|drop:R@S|partial:K] \\\n\
                   [--transport sim|tcp:HOST:PORT|uds:PATH]   # sockets: K real\n\
                   #  processes (spawned automatically; --rank R joins as one\n\
                   #  rank instead). Native models only; see README.\n\
+                  # socket fault injection: [--recover] [--die-at-step S]\n\
+                  #  [--corrupt-prob P] [--drop-prob P] [--fault-delay-ms MS]\n\
+                  #  [--fault-seed S] [--max-faults N]\n\
          simulate --network <alexnet|vgg19|resnet50|resnet152|resnet110|bn-inception|lstm>\n\
                   --gpus K [--preset k80|10gbe|nvlink] [--collective <...>]\n\
+                  [--scenario <...>]\n\
          svrg     --processors K --epochs P [--exact]\n\
          async    --workers K --updates N --compressor <...>\n\
          validate [--n N] [--trials T]"
@@ -105,6 +113,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = seed;
     cfg.eval_every = args.usize("eval-every", 25);
     cfg.log_every = args.usize("log-every", 10);
+    cfg.scenario = ScenarioSpec::parse(&args.string("scenario", "none"))?;
 
     let run = |cfg: SyncConfig, src: &mut dyn GradSource| -> Result<()> {
         let label = cfg.compressor.label();
@@ -130,6 +139,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             println!(
                 "hops: {}, recompressions: {}, cumulative recompression err²: {:.3e}",
                 res.hops, res.recompressions, res.recompress_err_sq
+            );
+        }
+        if res.faults.any() {
+            let f = &res.faults;
+            println!(
+                "faults: {} straggled hops, {} corrupt frames, {} dead workers, \
+                 {} renormalized steps",
+                f.straggler_hops, f.corrupt_frames, f.dead_workers, f.renormalized_steps
             );
         }
         Ok(())
@@ -238,6 +255,30 @@ fn cmd_train_dist(args: &Args, transport: &TransportSpec) -> Result<()> {
     Ok(())
 }
 
+/// Seeded outbound fault injector from the CLI knobs (`--corrupt-prob`,
+/// `--drop-prob`, `--fault-delay-ms`, `--fault-seed`, `--max-faults`).
+/// Per-rank salting keeps schedules independent across ranks while staying
+/// pinned by `--fault-seed`.
+fn fault_injector_from(args: &Args, rank: usize) -> Result<Option<FaultInjector>> {
+    let corrupt = args.f64("corrupt-prob", 0.0);
+    let drop = args.f64("drop-prob", 0.0);
+    let delay = args.u64("fault-delay-ms", 0);
+    if corrupt <= 0.0 && drop <= 0.0 && delay == 0 {
+        return Ok(None);
+    }
+    let seed =
+        args.u64("fault-seed", 0xFA17) ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut inj = FaultInjector::new(seed).with_corruption(corrupt).with_drops(drop);
+    if delay > 0 {
+        inj = inj.with_delay(Duration::from_millis(delay));
+    }
+    if let Some(m) = args.get("max-faults") {
+        let m: u64 = m.parse().map_err(|_| anyhow::anyhow!("bad --max-faults '{m}'"))?;
+        inj = inj.with_max_faults(m);
+    }
+    Ok(Some(inj))
+}
+
 /// One rank's share of a socket-transport training run.
 fn train_dist_rank(
     args: &Args,
@@ -257,6 +298,13 @@ fn train_dist_rank(
     cfg.seed = seed;
     cfg.eval_every = args.usize("eval-every", 25);
     cfg.log_every = args.usize("log-every", 10);
+    cfg.recovery = RecoveryOptions { enabled: args.flag("recover") };
+    cfg.die_at_step = match args.get("die-at-step") {
+        Some(s) => {
+            Some(s.parse().map_err(|_| anyhow::anyhow!("bad --die-at-step '{s}'"))?)
+        }
+        None => None,
+    };
 
     // Every rank needs its own gradient source; the runtime-artifact models
     // would mean one PJRT instance per process, which this path does not
@@ -284,8 +332,11 @@ fn train_dist_rank(
         io_timeout: Duration::from_millis(args.u64("io-timeout-ms", 30_000)),
         connect_timeout: Duration::from_millis(args.u64("connect-timeout-ms", 60_000)),
     };
-    let mesh = Mesh::connect(&ep, &mesh_cfg)
+    let mut mesh = Mesh::connect(&ep, &mesh_cfg)
         .with_context(|| format!("rank {rank}: connecting the {} mesh", transport.label()))?;
+    if let Some(inj) = fault_injector_from(args, rank)? {
+        mesh.set_fault_injector(inj);
+    }
     let res = train_rank(&cfg, mesh, src.as_mut())?;
 
     println!(
@@ -320,6 +371,15 @@ fn train_dist_rank(
             res.hops, res.recompressions, res.recompress_err_sq
         );
     }
+    if res.faults.any() {
+        let f = &res.faults;
+        println!(
+            "faults: {} corrupt frames, {} re-requested, {} resends served, \
+             {} dead workers, {} renormalized steps",
+            f.corrupt_frames, f.rerequests, f.resends_served, f.dead_workers,
+            f.renormalized_steps
+        );
+    }
     Ok(())
 }
 
@@ -347,16 +407,32 @@ fn cmd_exchange_worker(args: &Args) -> Result<()> {
         io_timeout: Duration::from_millis(args.u64("io-timeout-ms", 20_000)),
         connect_timeout: Duration::from_millis(args.u64("connect-timeout-ms", 30_000)),
     };
-    let mesh = Mesh::connect(&ep, &mesh_cfg)
+    let die_at_step = match args.get("die-at-step") {
+        Some(s) => {
+            Some(s.parse().map_err(|_| anyhow::anyhow!("bad --die-at-step '{s}'"))?)
+        }
+        None => None,
+    };
+
+    let mut mesh = Mesh::connect(&ep, &mesh_cfg)
         .with_context(|| format!("rank {rank}: connecting the exchange mesh"))?;
+    if let Some(inj) = fault_injector_from(args, rank)? {
+        mesh.set_fault_injector(inj);
+    }
     let mut ex = SocketExchange::new(&collective, spec.codec(), mesh, seed)?;
+    if args.flag("recover") {
+        ex = ex.with_recovery(RecoveryOptions::on())?;
+    }
 
     // Same gradient every step (the per-step variation under test is the
     // sessions' RNG streams advancing), deterministic in (gseed, rank).
     let grad = rng::normal_vec(&mut Xoshiro256::stream(gseed, rank as u64), n);
     let mut mean: Vec<f32> = Vec::new();
     let mut total = qsgd::transport::DistStats::default();
-    for _ in 0..steps {
+    for step in 0..steps {
+        if die_at_step == Some(step) {
+            anyhow::bail!("rank {rank}: dying at step {step} (--die-at-step churn injection)");
+        }
         let s = ex.exchange(&grad, &mut mean)?;
         total.add(&s);
     }
@@ -381,6 +457,15 @@ fn cmd_exchange_worker(args: &Args) -> Result<()> {
         total.wall.decode_s,
         stats::fmt_bytes(total.wire.payload_bytes as f64),
     );
+    if total.faults.any() {
+        let f = &total.faults;
+        println!(
+            "rank {rank} faults: {} corrupt, {} re-requested, {} resends served, \
+             {} dead, {} renormalized steps",
+            f.corrupt_frames, f.rerequests, f.resends_served, f.dead_workers,
+            f.renormalized_steps
+        );
+    }
     Ok(())
 }
 
@@ -415,7 +500,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let gpus = args.usize("gpus", 8);
     let preset: Preset =
         args.string("preset", "k80").parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let simnet = SimNet::preset(gpus, preset);
+    let scenario = ScenarioSpec::parse(&args.string("scenario", "none"))?;
+    // Scenario shapes the interconnect for *every* arm (fp32 baseline
+    // included), so speedups stay apples-to-apples under faults.
+    let simnet = scenario.apply_simnet(SimNet::preset(gpus, preset), args.u64("seed", 0));
     let cost = CostModel::k80();
     let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
 
@@ -450,6 +538,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         fp.quantized_fraction * 100.0,
         fp.steps
     );
+    if !scenario.is_none() {
+        let (straggled, corrupted) = simnet.fault_counts();
+        println!(
+            "scenario {}: {} straggled ops, {} corrupted ops across all arms",
+            scenario.label(),
+            straggled,
+            corrupted
+        );
+    }
     table.print();
     Ok(())
 }

@@ -135,6 +135,41 @@ impl WireStats {
     }
 }
 
+/// Per-run fault and recovery accounting, filled by the scenario layer:
+/// the simnet charges stragglers/corruption into virtual time and the
+/// socket transport counts real re-requests, resends, and renormalized
+/// steps. All-zero when no scenario is configured.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Frames that arrived damaged (failed decode validation).
+    pub corrupt_frames: u64,
+    /// Re-requests sent to a live peer for a damaged frame.
+    pub rerequests: u64,
+    /// Resends served to peers that asked for one.
+    pub resends_served: u64,
+    /// Workers declared dead (io-timeout or closed connection).
+    pub dead_workers: u64,
+    /// Steps whose mean was renormalized over a partial contributor set.
+    pub renormalized_steps: u64,
+    /// Simnet ops that drew a straggler slowdown.
+    pub straggler_hops: u64,
+}
+
+impl FaultStats {
+    pub fn any(&self) -> bool {
+        *self != FaultStats::default()
+    }
+
+    pub fn add(&mut self, other: &FaultStats) {
+        self.corrupt_frames += other.corrupt_frames;
+        self.rerequests += other.rerequests;
+        self.resends_served += other.resends_served;
+        self.dead_workers += other.dead_workers;
+        self.renormalized_steps += other.renormalized_steps;
+        self.straggler_hops += other.straggler_hops;
+    }
+}
+
 /// A (step → value) curve, e.g. loss or accuracy over training.
 #[derive(Debug, Clone, Default)]
 pub struct Curve {
@@ -256,6 +291,25 @@ mod tests {
         assert!((f.compression_ratio() - 40.0).abs() < 1e-12);
         f.record_fanout(100, 1000, 0);
         assert_eq!(f.messages, 3);
+    }
+
+    #[test]
+    fn fault_stats_accumulate() {
+        let mut a = FaultStats::default();
+        assert!(!a.any());
+        let b = FaultStats {
+            corrupt_frames: 2,
+            rerequests: 2,
+            resends_served: 1,
+            dead_workers: 1,
+            renormalized_steps: 3,
+            straggler_hops: 7,
+        };
+        a.add(&b);
+        a.add(&b);
+        assert!(a.any());
+        assert_eq!(a.corrupt_frames, 4);
+        assert_eq!(a.straggler_hops, 14);
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! Seeded fault distribution charged into the virtual clock.
+//!
+//! [`Faults`] models stragglers and in-flight frame corruption for
+//! [`SimNet`](crate::simnet::SimNet): every charged network operation draws
+//! from a counter-indexed hash stream, so a given seed yields exactly one
+//! schedule regardless of wall-clock timing — the property the scenario
+//! determinism goldens pin. A straggling op costs `straggle_factor`× its
+//! nominal time; a corrupted frame costs one retransmit (2×) and bumps the
+//! corruption counter that feeds the per-scenario recovery metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::rng::splitmix64;
+
+/// Seeded straggler + corruption schedule (see module docs).
+#[derive(Debug)]
+pub struct Faults {
+    /// Probability a charged op straggles.
+    pub straggle_prob: f64,
+    /// Multiplier on a straggling op's time.
+    pub straggle_factor: f64,
+    /// Probability a frame is corrupted/dropped in flight, charged as one
+    /// retransmit of the op.
+    pub corrupt_prob: f64,
+    seed: u64,
+    ops: AtomicU64,
+    straggled: AtomicU64,
+    corrupted: AtomicU64,
+}
+
+impl Clone for Faults {
+    fn clone(&self) -> Self {
+        Faults {
+            straggle_prob: self.straggle_prob,
+            straggle_factor: self.straggle_factor,
+            corrupt_prob: self.corrupt_prob,
+            seed: self.seed,
+            ops: AtomicU64::new(self.ops.load(Ordering::Relaxed)),
+            straggled: AtomicU64::new(self.straggled.load(Ordering::Relaxed)),
+            corrupted: AtomicU64::new(self.corrupted.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Faults {
+    pub fn new(seed: u64) -> Self {
+        Faults {
+            straggle_prob: 0.0,
+            straggle_factor: 1.0,
+            corrupt_prob: 0.0,
+            seed,
+            ops: AtomicU64::new(0),
+            straggled: AtomicU64::new(0),
+            corrupted: AtomicU64::new(0),
+        }
+    }
+
+    /// Straggle each charged op by `factor`× with probability `prob`.
+    pub fn with_straggler(mut self, prob: f64, factor: f64) -> Self {
+        assert!((0.0..=1.0).contains(&prob));
+        assert!(factor >= 1.0, "a straggler slows an op down, factor must be >= 1");
+        self.straggle_prob = prob;
+        self.straggle_factor = factor;
+        self
+    }
+
+    /// Corrupt each frame in flight with probability `prob` (charged as one
+    /// retransmit of the op).
+    pub fn with_corruption(mut self, prob: f64) -> Self {
+        assert!((0.0..=1.0).contains(&prob));
+        self.corrupt_prob = prob;
+        self
+    }
+
+    fn unit(&self, op: u64, salt: u64) -> f64 {
+        let mut s = self.seed ^ op.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ salt;
+        let h = splitmix64(&mut s);
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Time multiplier for the next charged op (advances the schedule).
+    pub fn multiplier(&self) -> f64 {
+        let op = self.ops.fetch_add(1, Ordering::Relaxed);
+        let mut m = 1.0;
+        if self.straggle_prob > 0.0 && self.unit(op, 0x57) < self.straggle_prob {
+            self.straggled.fetch_add(1, Ordering::Relaxed);
+            m *= self.straggle_factor;
+        }
+        if self.corrupt_prob > 0.0 && self.unit(op, 0xC0) < self.corrupt_prob {
+            self.corrupted.fetch_add(1, Ordering::Relaxed);
+            m *= 2.0; // retransmit once
+        }
+        m
+    }
+
+    /// Charged ops that straggled so far.
+    pub fn straggled(&self) -> u64 {
+        self.straggled.load(Ordering::Relaxed)
+    }
+
+    /// Charged ops whose frame was corrupted in flight so far.
+    pub fn corrupted(&self) -> u64 {
+        self.corrupted.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplier_schedule_is_seed_deterministic() {
+        let a = Faults::new(11).with_straggler(0.25, 5.0).with_corruption(0.1);
+        let b = Faults::new(11).with_straggler(0.25, 5.0).with_corruption(0.1);
+        let sa: Vec<f64> = (0..512).map(|_| a.multiplier()).collect();
+        let sb: Vec<f64> = (0..512).map(|_| b.multiplier()).collect();
+        assert_eq!(sa, sb);
+        assert!(a.straggled() > 0 && a.corrupted() > 0);
+        let c = Faults::new(12).with_straggler(0.25, 5.0).with_corruption(0.1);
+        let sc: Vec<f64> = (0..512).map(|_| c.multiplier()).collect();
+        assert_ne!(sa, sc);
+    }
+
+    #[test]
+    fn no_faults_means_unit_multiplier() {
+        let f = Faults::new(3);
+        assert!((0..64).all(|_| f.multiplier() == 1.0));
+        assert_eq!((f.straggled(), f.corrupted()), (0, 0));
+    }
+}

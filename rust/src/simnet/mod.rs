@@ -8,10 +8,12 @@
 //! computation times come from a per-network FLOPs cost model
 //! (`models::cost`). See DESIGN.md §Substitutions.
 
+pub mod fault;
 pub mod link;
 pub mod presets;
 pub mod topology;
 
+pub use fault::Faults;
 pub use link::Link;
 pub use presets::Preset;
 pub use topology::Topology;
@@ -53,24 +55,88 @@ impl std::ops::Sub for VTime {
     }
 }
 
-/// Cluster-level network model: K endpoints, a per-endpoint link (α–β), and
-/// a topology describing how collective exchanges are scheduled.
+/// Cluster-level network model: K endpoints, a per-endpoint link (α–β), a
+/// topology describing how collective exchanges are scheduled, and an
+/// optional fault-injection scenario (heterogeneous per-endpoint links,
+/// seeded stragglers, in-flight frame corruption).
 #[derive(Debug, Clone)]
 pub struct SimNet {
     pub workers: usize,
     pub link: Link,
     pub topology: Topology,
+    /// Per-endpoint link overrides `(worker, link)` for heterogeneous
+    /// clusters; endpoints without an entry use `link`. Empty by default,
+    /// in which case every cost below is bit-identical to the uniform
+    /// model.
+    pub overrides: Vec<(usize, Link)>,
+    /// Optional seeded straggler/corruption schedule charged into every
+    /// transfer cost.
+    pub faults: Option<Faults>,
 }
 
 impl SimNet {
     pub fn new(workers: usize, link: Link, topology: Topology) -> Self {
         assert!(workers >= 1);
-        Self { workers, link, topology }
+        Self { workers, link, topology, overrides: Vec::new(), faults: None }
     }
 
     pub fn preset(workers: usize, preset: Preset) -> Self {
         let (link, topology) = preset.build();
         Self::new(workers, link, topology)
+    }
+
+    /// Override the link of one endpoint (heterogeneous cluster).
+    pub fn with_link_override(mut self, worker: usize, link: Link) -> Self {
+        assert!(worker < self.workers, "override for worker {worker} out of range");
+        self.overrides.push((worker, link));
+        self
+    }
+
+    /// Attach a seeded fault schedule to every charged transfer.
+    pub fn with_faults(mut self, faults: Faults) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Effective link of one endpoint (the last override wins).
+    pub fn link_of(&self, worker: usize) -> Link {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|(w, _)| *w == worker)
+            .map(|(_, l)| *l)
+            .unwrap_or(self.link)
+    }
+
+    /// The bottleneck link across all endpoints: worst latency, worst
+    /// bandwidth. Synchronous collectives complete when the slowest
+    /// endpoint does, so aggregate costs are charged at this link.
+    fn bottleneck(&self) -> Link {
+        if self.overrides.is_empty() {
+            return self.link;
+        }
+        let mut l = self.link;
+        for w in 0..self.workers {
+            let lw = self.link_of(w);
+            l.latency_s = l.latency_s.max(lw.latency_s);
+            l.bandwidth_bps = l.bandwidth_bps.min(lw.bandwidth_bps);
+        }
+        l
+    }
+
+    /// Charge one network operation: apply the fault schedule's time
+    /// multiplier when a scenario is active, identity otherwise.
+    fn charge(&self, t: f64) -> VTime {
+        match &self.faults {
+            Some(f) => VTime(t * f.multiplier()),
+            None => VTime(t),
+        }
+    }
+
+    /// Straggled / corrupted op counts from the fault schedule (0, 0
+    /// without a scenario) — the simnet side of the recovery metrics.
+    pub fn fault_counts(&self) -> (u64, u64) {
+        self.faults.as_ref().map(|f| (f.straggled(), f.corrupted())).unwrap_or((0, 0))
     }
 
     /// Virtual time for the gradient exchange of one iteration, where worker
@@ -83,14 +149,26 @@ impl SimNet {
             return VTime::ZERO;
         }
         let k = self.workers as f64;
-        let alpha = self.link.latency_s;
-        let beta = 1.0 / self.link.bandwidth_bps;
+        let bl = self.bottleneck();
+        let alpha = bl.latency_s;
+        let beta = 1.0 / bl.bandwidth_bps;
         let t = match self.topology {
             // Each endpoint serialises its K−1 sends on its own egress and
             // its K−1 receives on its ingress; transfers between distinct
             // pairs overlap (GPUDirect P2P). The bottleneck endpoint is the
             // one sending its message K−1 times or receiving everyone
-            // else's, whichever is larger.
+            // else's, whichever is larger. Under heterogeneous links each
+            // endpoint serialises at its *own* β.
+            Topology::P2pBroadcast if !self.overrides.is_empty() => {
+                let total: usize = msg_bytes.iter().sum();
+                let per_endpoint = msg_bytes.iter().enumerate().map(|(w, &b)| {
+                    let bw = 1.0 / self.link_of(w).bandwidth_bps;
+                    let send = (self.workers - 1) as f64 * b as f64 * bw;
+                    let recv = (total - b) as f64 * bw;
+                    send.max(recv)
+                });
+                alpha * (k - 1.0) + per_endpoint.fold(0.0, f64::max)
+            }
             Topology::P2pBroadcast => {
                 let total: usize = msg_bytes.iter().sum();
                 let max_send = msg_bytes
@@ -117,12 +195,13 @@ impl SimNet {
                 2.0 * (k - 1.0) * alpha + 2.0 * (k - 1.0) / k * b * beta
             }
         };
-        VTime(t)
+        self.charge(t)
     }
 
     /// Time to move one point-to-point message (async parameter-server ops).
     pub fn p2p_time(&self, bytes: usize) -> VTime {
-        VTime(self.link.latency_s + bytes as f64 / self.link.bandwidth_bps)
+        let bl = self.bottleneck();
+        self.charge(bl.latency_s + bytes as f64 / bl.bandwidth_bps)
     }
 
     /// One synchronous hop of a segmented collective (ring reduce-scatter /
@@ -135,7 +214,8 @@ impl SimNet {
         if self.workers <= 1 {
             return VTime::ZERO;
         }
-        VTime(self.link.latency_s + max_bytes as f64 / self.link.bandwidth_bps)
+        let bl = self.bottleneck();
+        self.charge(bl.latency_s + max_bytes as f64 / bl.bandwidth_bps)
     }
 
     /// Concurrent fan-in of several messages to one endpoint (hierarchical
@@ -145,7 +225,8 @@ impl SimNet {
         if self.workers <= 1 {
             return VTime::ZERO;
         }
-        VTime(self.link.latency_s + total_bytes as f64 / self.link.bandwidth_bps)
+        let bl = self.bottleneck();
+        self.charge(bl.latency_s + total_bytes as f64 / bl.bandwidth_bps)
     }
 
     /// Fan-out of one `bytes`-sized payload to `copies` receivers
@@ -155,7 +236,8 @@ impl SimNet {
         if self.workers <= 1 || copies == 0 {
             return VTime::ZERO;
         }
-        VTime(self.link.latency_s + (bytes * copies) as f64 / self.link.bandwidth_bps)
+        let bl = self.bottleneck();
+        self.charge(bl.latency_s + (bytes * copies) as f64 / bl.bandwidth_bps)
     }
 }
 
@@ -232,6 +314,56 @@ mod tests {
         let solo = net(1, Topology::P2pBroadcast);
         assert_eq!(solo.hop_time(1 << 20).secs(), 0.0);
         assert_eq!(solo.fan_in_time(1 << 20).secs(), 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_override_slows_the_bottleneck() {
+        let base = net(4, Topology::P2pBroadcast);
+        let slow = base
+            .clone()
+            .with_link_override(0, Link { bandwidth_bps: 0.25e9, latency_s: 1e-5 });
+        let msgs = [1 << 20; 4];
+        let t0 = base.exchange_time(&msgs).secs();
+        let t1 = slow.exchange_time(&msgs).secs();
+        assert!(t1 > t0 * 2.0, "slow worker should dominate: {t0} vs {t1}");
+        // Hop costs are charged at the bottleneck link.
+        assert!(slow.hop_time(1 << 20).secs() > base.hop_time(1 << 20).secs() * 2.0);
+        // Overriding a non-bottleneck property leaves the default path
+        // intact: a faster-than-default worker changes nothing.
+        let fast = base
+            .clone()
+            .with_link_override(2, Link { bandwidth_bps: 4e9, latency_s: 1e-6 });
+        assert_eq!(fast.exchange_time(&msgs).secs(), t0);
+    }
+
+    #[test]
+    fn straggler_schedule_is_deterministic_and_charged() {
+        let mk = |seed: u64| {
+            net(4, Topology::P2pBroadcast)
+                .with_faults(Faults::new(seed).with_straggler(0.5, 10.0))
+        };
+        let (a, b) = (mk(9), mk(9));
+        let sa: Vec<f64> = (0..64).map(|_| a.hop_time(4096).secs()).collect();
+        let sb: Vec<f64> = (0..64).map(|_| b.hop_time(4096).secs()).collect();
+        assert_eq!(sa, sb, "same seed, same schedule");
+        let c = mk(10);
+        let sc: Vec<f64> = (0..64).map(|_| c.hop_time(4096).secs()).collect();
+        assert_ne!(sa, sc, "different seed, different schedule");
+        let nominal = net(4, Topology::P2pBroadcast).hop_time(4096).secs();
+        assert!(sa.iter().any(|&t| t > nominal * 5.0), "some hops straggle");
+        assert!(sa.iter().any(|&t| t == nominal), "some hops do not");
+        let (straggled, _) = a.fault_counts();
+        assert!(straggled > 0);
+    }
+
+    #[test]
+    fn corruption_charges_retransmits() {
+        let n = net(2, Topology::P2pBroadcast)
+            .with_faults(Faults::new(5).with_corruption(1.0));
+        let nominal = net(2, Topology::P2pBroadcast).hop_time(1000).secs();
+        assert_eq!(n.hop_time(1000).secs(), 2.0 * nominal);
+        let (_, corrupted) = n.fault_counts();
+        assert_eq!(corrupted, 1);
     }
 
     #[test]

@@ -37,7 +37,7 @@ use anyhow::{ensure, Result};
 
 use crate::collectives::{self, algo};
 use crate::config::CollectiveSpec;
-use crate::metrics::{WallClock, WireStats};
+use crate::metrics::{FaultStats, WallClock, WireStats};
 use crate::quant::{Codec, EncodeSession};
 use crate::util::rng::Xoshiro256;
 
@@ -56,6 +56,9 @@ pub struct DistStats {
     pub recompress_err_sq: f64,
     pub encode_coords: usize,
     pub decode_coords: usize,
+    /// Fault/recovery events this rank observed (all-zero without a
+    /// [`RecoveryOptions`]-enabled exchange).
+    pub faults: FaultStats,
 }
 
 impl DistStats {
@@ -67,6 +70,36 @@ impl DistStats {
         self.recompress_err_sq += other.recompress_err_sq;
         self.encode_coords += other.encode_coords;
         self.decode_coords += other.decode_coords;
+        self.faults.add(&other.faults);
+    }
+}
+
+/// Trainer-side fault recovery for the socket collectives.
+///
+/// When enabled, every received data frame is decode-validated; a frame
+/// that fails validation is re-requested from the (live) sender over a
+/// one-byte control round, and the resend bypasses the fault injector —
+/// one resend is always enough, which is what bounds recovery. A peer
+/// that stops responding (io-timeout, closed stream) is declared dead and
+/// the mean is renormalized over the ranks that actually contributed
+/// (skip-and-renormalize), matching the in-process partial-participation
+/// path bit for bit.
+///
+/// Supported by the all-to-all backend (full protocol: re-request, dead
+/// peers, renormalized mean) and the recompressing ring (per-hop
+/// re-request only — a dead ring member still fails the step cleanly);
+/// `ring:raw` and the hierarchical backend fail clean instead. The price
+/// is one extra validation decode per received frame and a one-byte
+/// control round per hop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryOptions {
+    pub enabled: bool,
+}
+
+impl RecoveryOptions {
+    /// Recovery switched on.
+    pub fn on() -> Self {
+        Self { enabled: true }
     }
 }
 
@@ -206,6 +239,14 @@ impl DistRing {
     /// completed frames verbatim. Leaves the frames in `self.finals` (lane
     /// order — the hierarchical fan-out sends them on) and decodes them
     /// into `mean`.
+    ///
+    /// With `recovery`, every hop is followed by a one-byte verdict round
+    /// (to the frame's sender, i.e. against ring direction) and, when a
+    /// frame failed decode validation, a bounded injector-bypassed resend:
+    /// the repaired hop carries the exact bytes the fault destroyed, so a
+    /// recovered exchange is bit-identical to a fault-free one (which is
+    /// how `ring:ef` residuals survive a recovered step unchanged).
+    #[allow(clippy::too_many_arguments)]
     fn run_recompress(
         &mut self,
         codec: &dyn Codec,
@@ -214,6 +255,7 @@ impl DistRing {
         alpha: f32,
         mean: &mut Vec<f32>,
         stats: &mut DistStats,
+        recovery: bool,
     ) -> Result<()> {
         let n = grad.len();
         self.ensure_layout(codec, n);
@@ -249,17 +291,43 @@ impl DistRing {
         for t in 0..k - 1 {
             let lane_out = (r + k - t) % k;
             stats.wire.record(self.inflight.len(), self.segs[lane_out].1);
-            let tt = Instant::now();
-            let incoming = mesh.send_recv(next, prev, &self.inflight)?;
-            stats.wall.transfer_s += tt.elapsed().as_secs_f64();
-            stats.hops += 1;
-
             let lane = (r + 2 * k - 1 - t) % k;
             let (off, len) = self.segs[lane];
-            let td = Instant::now();
             let a = &mut self.acc[..len];
             a.fill(0.0);
-            codec.decode_add(incoming, 1.0, a)?;
+            let decode_ok;
+            {
+                let tt = Instant::now();
+                let incoming = mesh.send_recv(next, prev, &self.inflight)?;
+                stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+                let td = Instant::now();
+                decode_ok = if recovery {
+                    codec.decode_add(incoming, 1.0, a).is_ok()
+                } else {
+                    codec.decode_add(incoming, 1.0, a)?;
+                    true
+                };
+                stats.wall.decode_s += td.elapsed().as_secs_f64();
+            }
+            stats.hops += 1;
+            if recovery {
+                let tr = Instant::now();
+                repair_hop(
+                    mesh,
+                    next,
+                    prev,
+                    decode_ok,
+                    &self.inflight,
+                    |inc| {
+                        a.fill(0.0);
+                        codec.decode_add(inc, 1.0, &mut a[..])
+                    },
+                    stats,
+                )?;
+                stats.wall.transfer_s += tr.elapsed().as_secs_f64();
+            }
+
+            let td = Instant::now();
             for (x, g) in a.iter_mut().zip(&grad[off..off + len]) {
                 *x += *g;
             }
@@ -293,12 +361,50 @@ impl DistRing {
             let lane_in = (r + k - h) % k;
             stats.wire.record(self.finals[lane_out].len(), self.segs[lane_out].1);
             let tt = Instant::now();
-            let payload = &self.finals[lane_out];
-            let incoming = mesh.send_recv(next, prev, payload)?;
-            self.finals[lane_in].clear();
-            self.finals[lane_in].extend_from_slice(incoming);
+            {
+                let payload = &self.finals[lane_out];
+                let incoming = mesh.send_recv(next, prev, payload)?;
+                self.finals[lane_in].clear();
+                self.finals[lane_in].extend_from_slice(incoming);
+            }
             stats.wall.transfer_s += tt.elapsed().as_secs_f64();
             stats.hops += 1;
+            if recovery {
+                // Validate the forwarded frame; repair it in place so the
+                // downstream hops (and the final decode) see clean bytes.
+                let len = self.segs[lane_in].1;
+                let a = &mut self.acc[..len];
+                a.fill(0.0);
+                let td = Instant::now();
+                let ok = codec.decode_add(&self.finals[lane_in], 1.0, a).is_ok();
+                stats.wall.decode_s += td.elapsed().as_secs_f64();
+                let tr = Instant::now();
+                // `lane_out` and `lane_in` are adjacent mod k, hence
+                // distinct for k >= 2: split the lanes into disjoint
+                // payload (resend source) and destination borrows.
+                let hi = lane_out.max(lane_in);
+                let (head, tail) = self.finals.split_at_mut(hi);
+                let (payload, dst) = if lane_out < lane_in {
+                    (&head[lane_out], &mut tail[0])
+                } else {
+                    (&tail[0], &mut head[lane_in])
+                };
+                repair_hop(
+                    mesh,
+                    next,
+                    prev,
+                    ok,
+                    payload,
+                    |inc| {
+                        dst.clear();
+                        dst.extend_from_slice(inc);
+                        a.fill(0.0);
+                        codec.decode_add(inc, 1.0, &mut a[..])
+                    },
+                    stats,
+                )?;
+                stats.wall.transfer_s += tr.elapsed().as_secs_f64();
+            }
         }
 
         // Same final decode as every in-process replica: lane order.
@@ -396,6 +502,11 @@ fn pack_set(frames: &[Vec<u8>], out: &mut Vec<u8>) {
 }
 
 fn unpack_set(bytes: &[u8], expect: usize, out: &mut [Vec<u8>]) -> Result<()> {
+    ensure!(
+        out.len() == expect,
+        "frame set destination has {} slots but {expect} frames are expected",
+        out.len()
+    );
     ensure!(bytes.len() >= 4, "frame set too short");
     let count = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
     ensure!(count == expect, "frame set carries {count} frames, expected {expect}");
@@ -414,11 +525,182 @@ fn unpack_set(bytes: &[u8], expect: usize, out: &mut [Vec<u8>]) -> Result<()> {
     Ok(())
 }
 
+/// One ring-hop recovery round. Verdicts travel *against* ring direction
+/// (each rank judges the frame it received from `prev` and hears `next`'s
+/// judgement of the frame it sent), injector-bypassed. A rank then serves a
+/// resend of `payload` to `next` if asked, and/or receives a replacement
+/// from `prev` if its own frame failed validation (`ok == false`),
+/// consuming it through `redecode`. Sends and receives that must coexist
+/// run concurrently, so a chain of repairing ranks cannot deadlock; a
+/// replacement that still fails `redecode` is a hard error — recovery is
+/// bounded at one resend per hop.
+fn repair_hop(
+    mesh: &mut Mesh,
+    next: usize,
+    prev: usize,
+    ok: bool,
+    payload: &[u8],
+    mut redecode: impl FnMut(&[u8]) -> Result<()>,
+    stats: &mut DistStats,
+) -> Result<()> {
+    let verdict = [u8::from(!ok)];
+    let serve = {
+        let reply = mesh.send_recv_raw(prev, next, &verdict)?;
+        reply.first().copied() == Some(1)
+    };
+    if !ok {
+        stats.faults.corrupt_frames += 1;
+        stats.faults.rerequests += 1;
+    }
+    if serve {
+        stats.faults.resends_served += 1;
+    }
+    match (serve, ok) {
+        (true, true) => mesh.send_to_raw(next, payload)?,
+        (true, false) => {
+            let inc = mesh.send_recv_raw(next, prev, payload)?;
+            redecode(inc)?;
+        }
+        (false, false) => {
+            mesh.recv_from(prev)?;
+            redecode(mesh.frame(prev))?;
+        }
+        (false, true) => {}
+    }
+    Ok(())
+}
+
+/// The all-to-all recovery protocol, one step:
+///
+/// 1. tolerant data exchange — unresponsive peers are declared dead;
+/// 2. decode-validate every received frame, stashing valid ones (the
+///    control round below clobbers the mesh receive buffers);
+/// 3. one-byte control round — OK / RESEND per peer;
+/// 4. bounded injector-bypassed resend round for the corrupt frames;
+/// 5. renormalized mean over the contributors in ascending rank order,
+///    through the same grouped merge as the in-process
+///    partial-participation path — bit parity by construction.
+///
+/// Replica consistency requires every survivor to observe a death in the
+/// same round, which holds when a worker dies at a step boundary (it sends
+/// nothing, so all survivors time out in round 1). A worker dying *midway*
+/// through a data round may be seen by only some survivors — full
+/// agreement needs a membership protocol, out of scope here; the e2e churn
+/// test kills workers at step boundaries.
+#[allow(clippy::too_many_arguments)]
+fn a2a_recover(
+    codec: &dyn Codec,
+    mesh: &mut Mesh,
+    msg: &[u8],
+    rx: &mut [Vec<u8>],
+    scratch: &mut Vec<f32>,
+    n: usize,
+    mean: &mut Vec<f32>,
+    stats: &mut DistStats,
+) -> Result<()> {
+    let k = mesh.world;
+    let rank = mesh.rank;
+    let live_at_entry = mesh.live_peers().len();
+
+    // 1. tolerant data exchange
+    let t = Instant::now();
+    mesh.exchange_all_tolerant(msg)?;
+    stats.wall.transfer_s += t.elapsed().as_secs_f64();
+    stats.hops += 1;
+
+    // 2. decode-validate and stash
+    let live = mesh.live_peers();
+    stats.wire.record_fanout(msg.len(), n, live.len());
+    let mut valid = vec![false; k];
+    let mut corrupt: Vec<usize> = Vec::new();
+    let td = Instant::now();
+    for &w in &live {
+        scratch.clear();
+        scratch.resize(n, 0.0);
+        if codec.decode_add(mesh.frame(w), 1.0, scratch).is_ok() {
+            rx[w].clear();
+            rx[w].extend_from_slice(mesh.frame(w));
+            valid[w] = true;
+        } else {
+            corrupt.push(w);
+        }
+    }
+    stats.wall.decode_s += td.elapsed().as_secs_f64();
+    stats.faults.corrupt_frames += corrupt.len() as u64;
+    stats.faults.rerequests += corrupt.len() as u64;
+
+    // 3. control round: OK=0 / RESEND=1 per peer
+    let tt = Instant::now();
+    let mut ctrl = vec![0u8; k];
+    for &w in &corrupt {
+        ctrl[w] = 1;
+    }
+    let replies = mesh.exchange_ctrl(&ctrl)?;
+    let serve: Vec<usize> = replies
+        .iter()
+        .enumerate()
+        .filter(|&(_, c)| *c == Some(1))
+        .map(|(w, _)| w)
+        .collect();
+    stats.faults.resends_served += serve.len() as u64;
+
+    // 4. bounded resend round (injector bypassed)
+    let expect: Vec<usize> = corrupt.iter().copied().filter(|&w| mesh.is_live(w)).collect();
+    let failed = mesh.resend_round(&serve, &expect, msg)?;
+    stats.wall.transfer_s += tt.elapsed().as_secs_f64();
+    let td = Instant::now();
+    for &w in &expect {
+        if failed.contains(&w) {
+            continue;
+        }
+        scratch.clear();
+        scratch.resize(n, 0.0);
+        ensure!(
+            codec.decode_add(mesh.frame(w), 1.0, scratch).is_ok(),
+            "frame from rank {w} still corrupt after its one resend — \
+             recovery is bounded, giving up"
+        );
+        rx[w].clear();
+        rx[w].extend_from_slice(mesh.frame(w));
+        valid[w] = true;
+    }
+    stats.wall.decode_s += td.elapsed().as_secs_f64();
+
+    // 5. renormalized mean over the agreed contributor set. A peer that
+    // died in rounds 3–4 may have left a valid stashed frame; exclude it
+    // so every survivor's contributor set agrees.
+    let contributors: Vec<usize> =
+        (0..k).filter(|&w| w == rank || (valid[w] && mesh.is_live(w))).collect();
+    stats.faults.dead_workers += (live_at_entry - mesh.live_peers().len()) as u64;
+    if contributors.len() < k {
+        stats.faults.renormalized_steps += 1;
+    }
+    let t = Instant::now();
+    let frames: Vec<&[u8]> = contributors
+        .iter()
+        .map(|&w| if w == rank { msg } else { rx[w].as_slice() })
+        .collect();
+    *mean = collectives::par_decode_mean(
+        &frames,
+        n,
+        1.0 / contributors.len() as f32,
+        codec.decode_threads(),
+        |m, a, acc, th| codec.decode_add_threads(m, a, acc, th),
+    )?;
+    stats.wall.decode_s += t.elapsed().as_secs_f64();
+    stats.decode_coords += contributors.len() * n;
+    Ok(())
+}
+
 /// Per-collective state behind [`SocketExchange`].
 enum Backend {
     AllToAll {
         session: Box<dyn EncodeSession>,
         msg: Vec<u8>,
+        /// Recovery mode: per-peer stash of validated frames (control
+        /// rounds clobber the mesh receive buffers) + validation scratch.
+        rx: Vec<Vec<u8>>,
+        scratch: Vec<f32>,
     },
     Ring {
         ring: DistRing,
@@ -426,7 +708,10 @@ enum Backend {
     Hier {
         session: Box<dyn EncodeSession>,
         msg: Vec<u8>,
-        group: usize,
+        /// This rank's group, in listed order; `members[0]` is the leader.
+        members: Vec<usize>,
+        /// Number of groups (= leader-ring size).
+        lcount: usize,
         /// Leader ranks only: the recompressing ring over group sums.
         ring: Option<DistRing>,
         group_sum: Vec<f32>,
@@ -443,6 +728,7 @@ pub struct SocketExchange {
     mesh: Mesh,
     backend: Backend,
     label: String,
+    recovery: RecoveryOptions,
 }
 
 impl SocketExchange {
@@ -458,10 +744,12 @@ impl SocketExchange {
         let rank = mesh.rank;
         let world = mesh.world;
         let label = spec.label();
-        let backend = match *spec {
+        let backend = match spec {
             CollectiveSpec::AllToAll => Backend::AllToAll {
                 session: codec.session(Xoshiro256::stream(seed, rank as u64)),
                 msg: Vec::new(),
+                rx: (0..world).map(|_| Vec::new()).collect(),
+                scratch: Vec::new(),
             },
             CollectiveSpec::Ring { recompress, error_feedback } => Backend::Ring {
                 ring: DistRing::new(
@@ -469,21 +757,23 @@ impl SocketExchange {
                     (0..world).collect(),
                     rank,
                     seed,
-                    recompress,
-                    error_feedback,
+                    *recompress,
+                    *error_feedback,
                 ),
             },
-            CollectiveSpec::Hierarchical { group } => {
-                let group = group.min(world).max(1);
-                let leaders: Vec<usize> =
-                    (0..world.div_ceil(group)).map(|i| i * group).collect();
-                let ring = if rank % group == 0 {
-                    let li = rank / group;
+            CollectiveSpec::Hierarchical { groups } => {
+                let resolved = groups.resolve(world)?;
+                let leaders: Vec<usize> = resolved.iter().map(|g| g[0]).collect();
+                let gi = resolved
+                    .iter()
+                    .position(|g| g.contains(&rank))
+                    .expect("resolve() covers every rank");
+                let ring = if resolved[gi][0] == rank {
                     // Same forked stream family as the in-process leader ring.
                     Some(DistRing::new(
                         codec.as_ref(),
                         leaders,
-                        li,
+                        gi,
                         seed ^ 0x9E3779B97F4A7C15,
                         true,
                         false,
@@ -494,7 +784,8 @@ impl SocketExchange {
                 Backend::Hier {
                     session: codec.session(Xoshiro256::stream(seed, rank as u64)),
                     msg: Vec::new(),
-                    group,
+                    members: resolved[gi].clone(),
+                    lcount: resolved.len(),
                     ring,
                     group_sum: Vec::new(),
                     lsegs: Vec::new(),
@@ -503,7 +794,33 @@ impl SocketExchange {
                 }
             }
         };
-        Ok(Self { codec, mesh, backend, label })
+        Ok(Self { codec, mesh, backend, label, recovery: RecoveryOptions::default() })
+    }
+
+    /// Enable fault recovery (see [`RecoveryOptions`]). Errors for backends
+    /// with no recovery path, which fail clean instead.
+    pub fn with_recovery(mut self, opts: RecoveryOptions) -> Result<Self> {
+        if opts.enabled {
+            let supported = match &self.backend {
+                Backend::AllToAll { .. } => true,
+                Backend::Ring { ring } => ring.recompress,
+                Backend::Hier { .. } => false,
+            };
+            ensure!(
+                supported,
+                "recovery is supported by the all-to-all and recompressing ring \
+                 collectives only — '{}' fails clean on faults instead",
+                self.label
+            );
+        }
+        self.recovery = opts;
+        Ok(self)
+    }
+
+    /// Direct access to the mesh (for installing a fault injector or
+    /// reading liveness in tests and the trainer).
+    pub fn mesh_mut(&mut self) -> &mut Mesh {
+        &mut self.mesh
     }
 
     pub fn rank(&self) -> usize {
@@ -523,16 +840,24 @@ impl SocketExchange {
     pub fn exchange(&mut self, grad: &[f32], mean: &mut Vec<f32>) -> Result<DistStats> {
         let n = grad.len();
         let mut stats = DistStats::default();
-        let SocketExchange { codec, mesh, backend, .. } = self;
+        let SocketExchange { codec, mesh, backend, recovery, .. } = self;
         let codec: &dyn Codec = &**codec;
+        let recovery = recovery.enabled;
 
         match backend {
-            Backend::AllToAll { session, msg } => {
+            Backend::AllToAll { session, msg, rx, scratch } => {
                 let k = mesh.world;
                 let t = Instant::now();
                 session.encode_into(grad, msg);
                 stats.wall.encode_s += t.elapsed().as_secs_f64();
                 stats.encode_coords += n;
+
+                if recovery {
+                    a2a_recover(
+                        codec, mesh, msg, rx, scratch, n, mean, &mut stats,
+                    )?;
+                    return Ok(stats);
+                }
                 stats.wire.record_fanout(msg.len(), n, k.saturating_sub(1));
 
                 let t = Instant::now();
@@ -567,13 +892,23 @@ impl SocketExchange {
                 );
                 let alpha = 1.0 / mesh.world as f32;
                 if ring.recompress {
-                    ring.run_recompress(codec, mesh, grad, alpha, mean, &mut stats)?;
+                    ring.run_recompress(codec, mesh, grad, alpha, mean, &mut stats, recovery)?;
                 } else {
                     ring.run_raw(codec, mesh, grad, alpha, mean, &mut stats)?;
                 }
             }
 
-            Backend::Hier { session, msg, group, ring, group_sum, lsegs, lfinals, lcur_n } => {
+            Backend::Hier {
+                session,
+                msg,
+                members,
+                lcount,
+                ring,
+                group_sum,
+                lsegs,
+                lfinals,
+                lcur_n,
+            } => {
                 ensure!(
                     codec.supports_chunked_encode(),
                     "{} sessions cannot re-encode leader-ring segments (stateful fixed \
@@ -581,12 +916,9 @@ impl SocketExchange {
                     codec.name()
                 );
                 let world = mesh.world;
-                let rank = mesh.rank;
-                let g = *group;
-                let gi = rank / g;
-                let leader = gi * g;
-                let gsize = g.min(world - leader);
-                let lcount = world.div_ceil(g);
+                let leader = members[0];
+                let gsize = members.len();
+                let lcount = *lcount;
 
                 // Phase 1 — every rank encodes its full gradient.
                 let t = Instant::now();
@@ -595,7 +927,7 @@ impl SocketExchange {
                 stats.encode_coords += n;
 
                 if let Some(ring) = ring.as_mut() {
-                    // Leader: fan-in, decode-sum in worker order (own
+                    // Leader: fan-in, decode-sum in listed member order (own
                     // message first — it passes through encode/decode even
                     // though it never crosses a link, as in Algorithm 1).
                     let td = Instant::now();
@@ -604,7 +936,7 @@ impl SocketExchange {
                     codec.decode_add(msg, 1.0, group_sum)?;
                     stats.wall.decode_s += td.elapsed().as_secs_f64();
                     stats.decode_coords += n;
-                    for m in leader + 1..leader + gsize {
+                    for &m in &members[1..] {
                         let tt = Instant::now();
                         mesh.recv_from(m)?;
                         stats.wall.transfer_s += tt.elapsed().as_secs_f64();
@@ -626,13 +958,14 @@ impl SocketExchange {
                         1.0 / world as f32,
                         mean,
                         &mut stats,
+                        false,
                     )?;
 
                     // Phase 3 — fan the final frames out verbatim, lane
                     // order (`mean` is already materialised by the ring).
                     if gsize > 1 {
                         let tt = Instant::now();
-                        for m in leader + 1..leader + gsize {
+                        for &m in &members[1..] {
                             for f in ring.finals.iter() {
                                 mesh.send_to(m, f)?;
                             }
@@ -703,5 +1036,25 @@ mod tests {
         let mut extra = packed.clone();
         extra.push(0);
         assert!(unpack_set(&extra, 3, &mut out).is_err());
+    }
+
+    #[test]
+    fn unpack_set_rejects_mismatched_destination() {
+        // A destination with fewer slots than `expect` used to pass the
+        // count check and silently drop trailing frames (the `at ==
+        // bytes.len()` check caught it only by accident, after partially
+        // filling the output); more slots would panic later. Both are now
+        // rejected up front with both counts named.
+        let frames = vec![vec![1u8, 2], vec![3u8], vec![4u8, 5, 6]];
+        let mut packed = Vec::new();
+        pack_set(&frames, &mut packed);
+        let mut short = vec![Vec::new(); 2];
+        let err = unpack_set(&packed, 3, &mut short).unwrap_err().to_string();
+        assert!(err.contains('2') && err.contains('3'), "names both counts: {err}");
+        let mut long = vec![Vec::new(); 5];
+        assert!(unpack_set(&packed, 3, &mut long).is_err());
+        let mut exact = vec![Vec::new(); 3];
+        unpack_set(&packed, 3, &mut exact).unwrap();
+        assert_eq!(exact, frames);
     }
 }

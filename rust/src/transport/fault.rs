@@ -1,0 +1,177 @@
+//! Seeded fault injection for the socket transport.
+//!
+//! [`FaultInjector`] is the fallible wrapper around a mesh connection's
+//! write half: every *data* frame a rank sends passes through it, and the
+//! injector decides — as a pure function of `(seed, frame index)` — whether
+//! the frame is delivered intact, delivered corrupted, dropped entirely, or
+//! delayed. Deciding on the sender side keeps the schedule independent of
+//! wall-clock timing, so a given seed produces the same fault pattern on
+//! every run (the determinism goldens rely on this).
+//!
+//! Control-plane frames (the recovery protocol's OK/RESEND bytes and the
+//! resent payloads themselves) bypass the injector: the model is "the data
+//! path is lossy, the recovery path is reliable", which keeps the bounded
+//! re-request guarantee honest — one resend always repairs one corruption.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::splitmix64;
+
+/// Fate of one outbound data frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Write the frame unchanged.
+    Deliver,
+    /// Write the frame with its body damaged (length-valid, undecodable).
+    Corrupt,
+    /// Do not write the frame at all (the receiver sees an io-timeout).
+    Drop,
+}
+
+/// Seeded per-frame fault schedule (see module docs).
+#[derive(Debug)]
+pub struct FaultInjector {
+    corrupt_prob: f64,
+    drop_prob: f64,
+    delay: Option<Duration>,
+    /// Injection stops after this many faults so recovery tests stay
+    /// bounded; `u64::MAX` means unlimited.
+    max_faults: u64,
+    seed: u64,
+    ops: AtomicU64,
+    faults: AtomicU64,
+    corrupted: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(seed: u64) -> Self {
+        FaultInjector {
+            corrupt_prob: 0.0,
+            drop_prob: 0.0,
+            delay: None,
+            max_faults: u64::MAX,
+            seed,
+            ops: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            corrupted: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Corrupt each data frame with probability `prob`.
+    pub fn with_corruption(mut self, prob: f64) -> Self {
+        assert!((0.0..=1.0).contains(&prob));
+        self.corrupt_prob = prob;
+        self
+    }
+
+    /// Drop each data frame with probability `prob`.
+    pub fn with_drops(mut self, prob: f64) -> Self {
+        assert!((0.0..=1.0).contains(&prob));
+        self.drop_prob = prob;
+        self
+    }
+
+    /// Sleep this long before every injected write (slow-sender straggler).
+    pub fn with_delay(mut self, d: Duration) -> Self {
+        self.delay = Some(d);
+        self
+    }
+
+    /// Stop injecting after `n` faults (delivery continues unfaulted).
+    pub fn with_max_faults(mut self, n: u64) -> Self {
+        self.max_faults = n;
+        self
+    }
+
+    fn unit(&self, op: u64, salt: u64) -> f64 {
+        let mut s = self.seed ^ op.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ salt;
+        let h = splitmix64(&mut s);
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Decide the fate of the next outbound data frame (advances the
+    /// schedule by one draw even when no fault fires).
+    pub fn next_action(&self) -> FaultAction {
+        let op = self.ops.fetch_add(1, Ordering::Relaxed);
+        if self.faults.load(Ordering::Relaxed) >= self.max_faults {
+            return FaultAction::Deliver;
+        }
+        if self.drop_prob > 0.0 && self.unit(op, 0x0D) < self.drop_prob {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return FaultAction::Drop;
+        }
+        if self.corrupt_prob > 0.0 && self.unit(op, 0xC0) < self.corrupt_prob {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            self.corrupted.fetch_add(1, Ordering::Relaxed);
+            return FaultAction::Corrupt;
+        }
+        FaultAction::Deliver
+    }
+
+    /// Per-write delay, if configured.
+    pub fn delay(&self) -> Option<Duration> {
+        self.delay
+    }
+
+    /// Frames corrupted so far.
+    pub fn corrupted(&self) -> u64 {
+        self.corrupted.load(Ordering::Relaxed)
+    }
+
+    /// Frames dropped so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Damage `payload` in place the way the injector's `Corrupt` action
+    /// does on the wire: the frame stays length-valid but its body (first
+    /// and last bytes) is flipped, so every length- or header-checked
+    /// decoder rejects it.
+    pub fn damage(payload: &mut [u8]) {
+        if let Some(b) = payload.first_mut() {
+            *b ^= 0xA5;
+        }
+        if let Some(b) = payload.last_mut() {
+            *b ^= 0x5A;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_seed_deterministic() {
+        let a = FaultInjector::new(42).with_corruption(0.3).with_drops(0.1);
+        let b = FaultInjector::new(42).with_corruption(0.3).with_drops(0.1);
+        let sa: Vec<FaultAction> = (0..256).map(|_| a.next_action()).collect();
+        let sb: Vec<FaultAction> = (0..256).map(|_| b.next_action()).collect();
+        assert_eq!(sa, sb);
+        assert!(a.corrupted() > 0 && a.dropped() > 0, "probs should fire over 256 draws");
+        let c = FaultInjector::new(43).with_corruption(0.3).with_drops(0.1);
+        let sc: Vec<FaultAction> = (0..256).map(|_| c.next_action()).collect();
+        assert_ne!(sa, sc, "different seed, different schedule");
+    }
+
+    #[test]
+    fn max_faults_bounds_injection() {
+        let inj = FaultInjector::new(7).with_corruption(1.0).with_max_faults(2);
+        let n: usize =
+            (0..64).filter(|_| inj.next_action() == FaultAction::Corrupt).count();
+        assert_eq!(n, 2);
+        assert_eq!(inj.corrupted(), 2);
+    }
+
+    #[test]
+    fn damage_changes_bytes_but_not_length() {
+        let mut p = vec![1u8, 2, 3, 4];
+        FaultInjector::damage(&mut p);
+        assert_eq!(p.len(), 4);
+        assert_ne!(p, vec![1u8, 2, 3, 4]);
+    }
+}

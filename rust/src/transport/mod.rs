@@ -27,16 +27,24 @@
 //!   measured [`crate::metrics::WallClock`] filled in next to the modeled
 //!   breakdown.
 //!
+//! * [`fault`] — [`fault::FaultInjector`], the seeded fault schedule the
+//!   scenario layer installs on a mesh's outbound data frames (corrupt /
+//!   drop / delay), with the recovery control plane bypassing it.
+//!
 //! The `transport_e2e` CI lane runs the cross-process determinism goldens
 //! (spawned `qsgd exchange-worker` processes over loopback TCP and UDS)
-//! under a hard timeout.
+//! under a hard timeout, including the churn case that kills a rank
+//! mid-epoch and requires the survivors to finish with a renormalized
+//! mean.
 
 pub mod exchange;
+pub mod fault;
 pub mod frame;
 pub mod net;
 pub mod trainer;
 
-pub use exchange::{DistStats, SocketExchange};
+pub use exchange::{DistStats, RecoveryOptions, SocketExchange};
+pub use fault::{FaultAction, FaultInjector};
 pub use frame::{write_frame, FrameReader, MAX_FRAME};
 pub use net::{connect_retry, Conn, Endpoint, Listener, Mesh, MeshConfig};
 pub use trainer::{train_rank, DistTrainConfig};

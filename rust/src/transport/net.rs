@@ -31,7 +31,30 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use super::fault::{FaultAction, FaultInjector};
 use super::frame::{self, FrameReader};
+
+/// Write one data frame through the optional fault injector: delivered,
+/// damaged, dropped (not written at all), or delayed per the seeded
+/// schedule. Control-plane writes bypass this and call
+/// [`frame::write_frame`] directly.
+fn inject_write(inj: Option<&FaultInjector>, w: &mut Conn, payload: &[u8]) -> Result<()> {
+    let Some(inj) = inj else {
+        return frame::write_frame(w, payload);
+    };
+    if let Some(d) = inj.delay() {
+        std::thread::sleep(d);
+    }
+    match inj.next_action() {
+        FaultAction::Deliver => frame::write_frame(w, payload),
+        FaultAction::Drop => Ok(()),
+        FaultAction::Corrupt => {
+            let mut bad = payload.to_vec();
+            FaultInjector::damage(&mut bad);
+            frame::write_frame(w, &bad)
+        }
+    }
+}
 
 /// A dialable / bindable address for one side of the transport.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -257,6 +280,13 @@ impl Listener {
 }
 
 fn try_connect(ep: &Endpoint, deadline: Instant) -> io::Result<Conn> {
+    // Deadline first: once the budget has elapsed there is no 10ms floor to
+    // hide behind — the attempt must fail fast so the caller's total bound
+    // holds.
+    let remaining = deadline.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        return Err(io::Error::new(io::ErrorKind::TimedOut, "connect deadline elapsed"));
+    }
     match ep {
         Endpoint::Tcp(addr) => {
             let sa = addr.to_socket_addrs()?.next().ok_or_else(|| {
@@ -265,11 +295,9 @@ fn try_connect(ep: &Endpoint, deadline: Instant) -> io::Result<Conn> {
                     format!("no socket address resolves for '{addr}'"),
                 )
             })?;
-            // Per-attempt budget: short enough to retry, never past deadline.
-            let budget = deadline
-                .saturating_duration_since(Instant::now())
-                .max(Duration::from_millis(10))
-                .min(Duration::from_millis(500));
+            // Per-attempt budget: short enough to retry, clamped to the time
+            // actually remaining so the last attempt ends at the deadline.
+            let budget = remaining.min(Duration::from_millis(500));
             Ok(Conn::Tcp(TcpStream::connect_timeout(&sa, budget)?))
         }
         #[cfg(unix)]
@@ -280,11 +308,16 @@ fn try_connect(ep: &Endpoint, deadline: Instant) -> io::Result<Conn> {
 /// Dial with bounded retry: capped exponential backoff (2ms doubling to
 /// 100ms) until `total` elapses. Tolerates the target rank binding its
 /// listener slightly later than us — the normal case at startup.
+///
+/// The deadline is re-checked before every attempt (not just after a
+/// failure) and each attempt's budget is clamped to the remaining time, so
+/// the total dial time is bounded by `total` plus at most one short
+/// attempt — even against a black-holed endpoint that never answers.
 pub fn connect_retry(ep: &Endpoint, total: Duration) -> Result<Conn> {
     let deadline = Instant::now() + total;
     let mut backoff = Duration::from_millis(2);
     let mut last: Option<io::Error> = None;
-    loop {
+    while Instant::now() < deadline {
         match try_connect(ep, deadline) {
             Ok(c) => {
                 c.tune();
@@ -293,16 +326,17 @@ pub fn connect_retry(ep: &Endpoint, total: Duration) -> Result<Conn> {
             Err(e) => last = Some(e),
         }
         if Instant::now() + backoff >= deadline {
-            bail!(
-                "connect to {} timed out after {:.1}s (last error: {})",
-                ep.describe(),
-                total.as_secs_f64(),
-                last.map(|e| e.to_string()).unwrap_or_else(|| "none".into())
-            );
+            break;
         }
         std::thread::sleep(backoff);
         backoff = (backoff * 2).min(Duration::from_millis(100));
     }
+    bail!(
+        "connect to {} timed out after {:.1}s (last error: {})",
+        ep.describe(),
+        total.as_secs_f64(),
+        last.map(|e| e.to_string()).unwrap_or_else(|| "none".into())
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -400,6 +434,9 @@ pub struct Mesh {
     pub rank: usize,
     pub world: usize,
     peers: Vec<Option<Peer>>,
+    /// Seeded fault schedule applied to outbound data frames (tests and
+    /// `--scenario` runs); `None` in production paths.
+    injector: Option<FaultInjector>,
 }
 
 impl Mesh {
@@ -413,7 +450,7 @@ impl Mesh {
             cfg.world
         );
         if cfg.world == 1 {
-            return Ok(Mesh { rank: 0, world: 1, peers: vec![None] });
+            return Ok(Mesh { rank: 0, world: 1, peers: vec![None], injector: None });
         }
 
         let listener = Listener::bind(&base.listener_for_rank(cfg.rank)?)?;
@@ -501,7 +538,41 @@ impl Mesh {
             peers[r] = Some(Peer::new(c)?);
         }
 
-        Ok(Mesh { rank: cfg.rank, world: cfg.world, peers })
+        Ok(Mesh { rank: cfg.rank, world: cfg.world, peers, injector: None })
+    }
+
+    /// Install a seeded fault injector on this rank's outbound data frames.
+    pub fn set_fault_injector(&mut self, inj: FaultInjector) {
+        self.injector = Some(inj);
+    }
+
+    /// The installed injector, if any (for reading its counters).
+    pub fn injector(&self) -> Option<&FaultInjector> {
+        self.injector.as_ref()
+    }
+
+    /// Ranks (excluding self) we still hold a live connection to.
+    pub fn live_peers(&self) -> Vec<usize> {
+        self.peers
+            .iter()
+            .enumerate()
+            .filter_map(|(r, p)| p.as_ref().map(|_| r))
+            .collect()
+    }
+
+    /// Whether `rank` is this rank or a peer we still hold a connection to.
+    pub fn is_live(&self, rank: usize) -> bool {
+        rank == self.rank || matches!(self.peers.get(rank), Some(Some(_)))
+    }
+
+    /// Drop the connection to `rank`: it is skipped by every later
+    /// exchange. Called when a peer is declared dead by io-timeout.
+    pub fn mark_dead(&mut self, rank: usize) {
+        if rank != self.rank {
+            if let Some(slot) = self.peers.get_mut(rank) {
+                *slot = None;
+            }
+        }
     }
 
     fn peer_mut(&mut self, rank: usize) -> Result<&mut Peer> {
@@ -511,8 +582,22 @@ impl Mesh {
             .ok_or_else(|| anyhow!("no mesh connection to rank {rank}"))
     }
 
-    /// Send one frame to `peer` (blocking, bounded by the write timeout).
+    /// Send one data frame to `peer` (blocking, bounded by the write
+    /// timeout). Passes through the fault injector when one is installed.
     pub fn send_to(&mut self, peer: usize, payload: &[u8]) -> Result<()> {
+        let inj = self.injector.as_ref();
+        let p = self
+            .peers
+            .get_mut(peer)
+            .and_then(|p| p.as_mut())
+            .ok_or_else(|| anyhow!("no mesh connection to rank {peer}"))?;
+        inject_write(inj, &mut p.writer, payload)
+            .with_context(|| format!("sending frame to rank {peer}"))
+    }
+
+    /// Send one control/recovery frame to `peer`, bypassing the fault
+    /// injector (the recovery path is modeled as reliable).
+    pub fn send_to_raw(&mut self, peer: usize, payload: &[u8]) -> Result<()> {
         let p = self.peer_mut(peer)?;
         frame::write_frame(&mut p.writer, payload)
             .with_context(|| format!("sending frame to rank {peer}"))
@@ -544,6 +629,7 @@ impl Mesh {
         if self.world == 1 {
             return Ok(());
         }
+        let inj = self.injector.as_ref();
         let mut writers: Vec<(usize, &mut Conn)> = Vec::new();
         let mut readers: Vec<(usize, &mut Conn, &mut FrameReader)> = Vec::new();
         for (r, slot) in self.peers.iter_mut().enumerate() {
@@ -555,7 +641,7 @@ impl Mesh {
         std::thread::scope(|s| -> Result<()> {
             let sender = s.spawn(move || -> Result<()> {
                 for (r, w) in writers.iter_mut() {
-                    frame::write_frame(&mut **w, payload)
+                    inject_write(inj, &mut **w, payload)
                         .with_context(|| format!("sending to rank {r}"))?;
                 }
                 Ok(())
@@ -584,11 +670,192 @@ impl Mesh {
         })
     }
 
+    /// Fault-tolerant all-to-all: like [`exchange_all`](Self::exchange_all)
+    /// but a peer whose send or receive fails (closed stream, io-timeout)
+    /// is marked dead and skipped instead of aborting the step. Returns
+    /// the ranks that failed this round, in ascending order; their frames
+    /// are not valid.
+    pub fn exchange_all_tolerant(&mut self, payload: &[u8]) -> Result<Vec<usize>> {
+        if self.world == 1 {
+            return Ok(Vec::new());
+        }
+        let inj = self.injector.as_ref();
+        let mut writers: Vec<(usize, &mut Conn)> = Vec::new();
+        let mut readers: Vec<(usize, &mut Conn, &mut FrameReader)> = Vec::new();
+        for (r, slot) in self.peers.iter_mut().enumerate() {
+            if let Some(p) = slot {
+                writers.push((r, &mut p.writer));
+                readers.push((r, &mut p.reader, &mut p.rbuf));
+            }
+        }
+        let mut failed: Vec<usize> = Vec::new();
+        std::thread::scope(|s| -> Result<()> {
+            let sender = s.spawn(move || -> Vec<usize> {
+                let mut bad = Vec::new();
+                for (r, w) in writers.iter_mut() {
+                    if inject_write(inj, &mut **w, payload).is_err() {
+                        bad.push(*r);
+                    }
+                }
+                bad
+            });
+            for (r, conn, rbuf) in readers.iter_mut() {
+                match rbuf.read_frame(&mut **conn) {
+                    Ok(Some(_)) => {}
+                    Ok(None) | Err(_) => failed.push(*r),
+                }
+            }
+            let wbad =
+                sender.join().map_err(|_| anyhow!("mesh sender thread panicked"))?;
+            failed.extend(wbad);
+            Ok(())
+        })?;
+        failed.sort_unstable();
+        failed.dedup();
+        for &r in &failed {
+            self.mark_dead(r);
+        }
+        Ok(failed)
+    }
+
+    /// Recovery control round: send the one-byte code `ctrl[r]` to every
+    /// live peer `r` while reading one control byte from each (injector
+    /// bypassed — the recovery path is modeled as reliable). A peer that
+    /// fails the round is marked dead and reported as `None`, as is the
+    /// slot for self.
+    ///
+    /// Note the received control bytes land in each peer's frame buffer:
+    /// decode (or copy out) data frames *before* running a control round.
+    pub fn exchange_ctrl(&mut self, ctrl: &[u8]) -> Result<Vec<Option<u8>>> {
+        ensure!(
+            ctrl.len() == self.world,
+            "ctrl has {} slots for world size {}",
+            ctrl.len(),
+            self.world
+        );
+        let mut out: Vec<Option<u8>> = vec![None; self.world];
+        if self.world == 1 {
+            return Ok(out);
+        }
+        let mut writers: Vec<(usize, u8, &mut Conn)> = Vec::new();
+        let mut readers: Vec<(usize, &mut Conn, &mut FrameReader)> = Vec::new();
+        for (r, slot) in self.peers.iter_mut().enumerate() {
+            if let Some(p) = slot {
+                writers.push((r, ctrl[r], &mut p.writer));
+                readers.push((r, &mut p.reader, &mut p.rbuf));
+            }
+        }
+        let mut failed: Vec<usize> = Vec::new();
+        std::thread::scope(|s| -> Result<()> {
+            let sender = s.spawn(move || -> Vec<usize> {
+                let mut bad = Vec::new();
+                for (r, c, w) in writers.iter_mut() {
+                    if frame::write_frame(&mut **w, &[*c]).is_err() {
+                        bad.push(*r);
+                    }
+                }
+                bad
+            });
+            for (r, conn, rbuf) in readers.iter_mut() {
+                match rbuf.read_frame(&mut **conn) {
+                    Ok(Some(f)) if f.len() == 1 => out[*r] = Some(f[0]),
+                    _ => failed.push(*r),
+                }
+            }
+            let wbad =
+                sender.join().map_err(|_| anyhow!("mesh ctrl sender thread panicked"))?;
+            failed.extend(wbad);
+            Ok(())
+        })?;
+        failed.sort_unstable();
+        failed.dedup();
+        for &r in &failed {
+            self.mark_dead(r);
+            out[r] = None;
+        }
+        Ok(out)
+    }
+
+    /// Recovery data round: re-send `payload` to every rank in `serve`
+    /// while reading one replacement frame from every rank in `expect`
+    /// (injector bypassed). The replacement frames are then available via
+    /// [`frame`](Self::frame). Failed or already-dead expected ranks are
+    /// marked dead and returned.
+    pub fn resend_round(
+        &mut self,
+        serve: &[usize],
+        expect: &[usize],
+        payload: &[u8],
+    ) -> Result<Vec<usize>> {
+        let mut failed: Vec<usize> = expect
+            .iter()
+            .copied()
+            .filter(|&r| !matches!(self.peers.get(r), Some(Some(_))))
+            .collect();
+        let mut writers: Vec<(usize, &mut Conn)> = Vec::new();
+        let mut readers: Vec<(usize, &mut Conn, &mut FrameReader)> = Vec::new();
+        for (r, slot) in self.peers.iter_mut().enumerate() {
+            if let Some(p) = slot {
+                if serve.contains(&r) {
+                    writers.push((r, &mut p.writer));
+                }
+                if expect.contains(&r) {
+                    readers.push((r, &mut p.reader, &mut p.rbuf));
+                }
+            }
+        }
+        std::thread::scope(|s| -> Result<()> {
+            let sender = s.spawn(move || -> Vec<usize> {
+                let mut bad = Vec::new();
+                for (r, w) in writers.iter_mut() {
+                    if frame::write_frame(&mut **w, payload).is_err() {
+                        bad.push(*r);
+                    }
+                }
+                bad
+            });
+            for (r, conn, rbuf) in readers.iter_mut() {
+                match rbuf.read_frame(&mut **conn) {
+                    Ok(Some(_)) => {}
+                    _ => failed.push(*r),
+                }
+            }
+            let wbad =
+                sender.join().map_err(|_| anyhow!("mesh resend thread panicked"))?;
+            failed.extend(wbad);
+            Ok(())
+        })?;
+        failed.sort_unstable();
+        failed.dedup();
+        for &r in &failed {
+            self.mark_dead(r);
+        }
+        Ok(failed)
+    }
+
     /// Ring hop: send `payload` to rank `to` while receiving one frame from
     /// rank `from` (concurrently, write on a scoped thread). Returns the
     /// received frame, valid until the next receive from `from`.
     pub fn send_recv(&mut self, to: usize, from: usize, payload: &[u8]) -> Result<&[u8]> {
+        self.send_recv_inner(to, from, payload, false)
+    }
+
+    /// [`send_recv`](Self::send_recv) bypassing the fault injector — the
+    /// recovery control plane (per-hop verdicts) and resends are modeled as
+    /// reliable, which is what makes one resend always enough.
+    pub fn send_recv_raw(&mut self, to: usize, from: usize, payload: &[u8]) -> Result<&[u8]> {
+        self.send_recv_inner(to, from, payload, true)
+    }
+
+    fn send_recv_inner(
+        &mut self,
+        to: usize,
+        from: usize,
+        payload: &[u8],
+        raw: bool,
+    ) -> Result<&[u8]> {
         ensure!(to != self.rank && from != self.rank, "send_recv cannot target self");
+        let inj = if raw { None } else { self.injector.as_ref() };
         if to == from {
             // Two-rank ring: both halves of the same peer connection.
             let p = self
@@ -598,7 +865,7 @@ impl Mesh {
                 .ok_or_else(|| anyhow!("no mesh connection to rank {to}"))?;
             let Peer { reader, writer, rbuf } = p;
             std::thread::scope(|s| -> Result<()> {
-                let sender = s.spawn(move || frame::write_frame(writer, payload));
+                let sender = s.spawn(move || inject_write(inj, writer, payload));
                 let got = rbuf.read_frame(reader);
                 let sent =
                     sender.join().map_err(|_| anyhow!("ring sender thread panicked"))?;
@@ -619,7 +886,7 @@ impl Mesh {
             let writer = &mut wpeer.writer;
             let Peer { reader, rbuf, .. } = rpeer;
             std::thread::scope(|s| -> Result<()> {
-                let sender = s.spawn(move || frame::write_frame(writer, payload));
+                let sender = s.spawn(move || inject_write(inj, writer, payload));
                 let got = rbuf.read_frame(reader);
                 let sent =
                     sender.join().map_err(|_| anyhow!("ring sender thread panicked"))?;
@@ -689,6 +956,26 @@ mod tests {
         assert_eq!(decode_table(&encode_table(&table)).unwrap(), table);
         assert!(decode_table(&[1, 0]).is_err());
         assert!(decode_hello(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn connect_retry_respects_total_budget_against_black_hole() {
+        // TEST-NET-1 (RFC 5737) is reserved: SYNs to it are typically
+        // black-holed, so each attempt runs to its timeout instead of
+        // failing fast. The deadline is checked before every attempt and
+        // the final attempt's budget is clamped to the remaining time, so
+        // the dial must return within `total` plus one short attempt of
+        // scheduling slack.
+        let ep = Endpoint::Tcp("192.0.2.1:9".into());
+        let total = Duration::from_millis(250);
+        let t0 = Instant::now();
+        let err = connect_retry(&ep, total).unwrap_err();
+        assert!(
+            t0.elapsed() <= total + Duration::from_millis(600),
+            "dial overran its budget: {:?}",
+            t0.elapsed()
+        );
+        assert!(err.to_string().contains("192.0.2.1:9"), "{err}");
     }
 
     #[test]

@@ -29,13 +29,13 @@ use crate::config::CollectiveSpec;
 use crate::coordinator::sources::GradSource;
 use crate::coordinator::sync::RunResult;
 use crate::coordinator::CompressorSpec;
-use crate::metrics::{Breakdown, Curve, WallClock, WireStats};
+use crate::metrics::{Breakdown, Curve, FaultStats, WallClock, WireStats};
 use crate::models::CostModel;
 use crate::optim::Sgd;
 use crate::simnet::{SimNet, VTime};
 use crate::util::rng::{self, Xoshiro256};
 
-use super::exchange::SocketExchange;
+use super::exchange::{RecoveryOptions, SocketExchange};
 use super::net::Mesh;
 
 /// Configuration of one rank's distributed run. The *same values on every
@@ -56,6 +56,13 @@ pub struct DistTrainConfig {
     /// report the same α–β breakdown a simnet run of this shape would.
     pub net: SimNet,
     pub cost: CostModel,
+    /// Trainer-side fault recovery: re-request corrupt frames from live
+    /// peers, skip io-timeout-dead workers with a renormalized mean.
+    pub recovery: RecoveryOptions,
+    /// Churn injection: exit (with an error) at the *top* of this step,
+    /// before sending anything — so every survivor times this rank out in
+    /// the same round and their contributor sets agree.
+    pub die_at_step: Option<usize>,
 }
 
 impl DistTrainConfig {
@@ -72,6 +79,8 @@ impl DistTrainConfig {
             eval_every: 0,
             net: SimNet::preset(world, crate::simnet::Preset::K80Pcie),
             cost: CostModel::k80(),
+            recovery: RecoveryOptions::default(),
+            die_at_step: None,
         }
     }
 }
@@ -88,7 +97,8 @@ pub fn train_rank(
     let rank = mesh.rank;
     let codec = cfg.compressor.codec();
     let mut exchange =
-        SocketExchange::new(&cfg.collective, codec.clone(), mesh, cfg.seed ^ 0xF00D)?;
+        SocketExchange::new(&cfg.collective, codec.clone(), mesh, cfg.seed ^ 0xF00D)?
+            .with_recovery(cfg.recovery)?;
 
     // Identical init on every rank: same seed ⇒ same stream ⇒ same bits.
     let mut init_rng = Xoshiro256::stream(cfg.seed, 0x1417);
@@ -107,6 +117,7 @@ pub fn train_rank(
     let mut hops = 0usize;
     let mut recompressions = 0u64;
     let mut recompress_err_sq = 0.0f64;
+    let mut faults = FaultStats::default();
 
     // One modeled transfer charge per step, the same formula the simnet
     // benches use, sized by the codec's expected message size.
@@ -114,6 +125,9 @@ pub fn train_rank(
         collectives::model_exchange_time(&cfg.collective, &cfg.net, codec.encoded_size_hint(n));
 
     for step in 0..cfg.steps {
+        if cfg.die_at_step == Some(step) {
+            anyhow::bail!("rank {rank}: dying at step {step} (--die-at-step churn injection)");
+        }
         // 1. this rank's local gradient (the source is deterministic in
         //    (worker, step), so rank-local compute is exact data parallelism)
         let (loss, grad) = source.loss_and_grad(rank, step as u64, &params)?;
@@ -124,6 +138,7 @@ pub fn train_rank(
         let stats = exchange.exchange(&grad, &mut mean_grad)?;
         wire.add(&stats.wire);
         wall.add(&stats.wall);
+        faults.add(&stats.faults);
         hops += stats.hops;
         recompressions += stats.recompressions;
         recompress_err_sq += stats.recompress_err_sq;
@@ -163,5 +178,6 @@ pub fn train_rank(
         recompressions,
         recompress_err_sq,
         wall,
+        faults,
     })
 }

@@ -1,0 +1,256 @@
+//! Trainer-recovery integration goldens — real loopback meshes in threads.
+//!
+//! These drive the socket recovery protocol end to end without child
+//! processes: K threads each connect a real [`Mesh`] over loopback TCP,
+//! wrap it in a [`SocketExchange`] with recovery enabled, and face seeded
+//! outbound fault injection. The acceptance bar is bit parity:
+//!
+//! * a **corruption-recovered** exchange must produce exactly the bytes a
+//!   fault-free run produces (the resend carries the original frame);
+//! * a **dead-worker** exchange must produce exactly the bytes the
+//!   in-process renormalized golden (`build_with_scenario` + `drop:R@S`)
+//!   produces on every survivor;
+//! * `ring:ef` **residuals survive** a recovered step — later steps stay
+//!   bit-identical to the fault-free trajectory.
+//!
+//! The `FaultInjector::damage` constant XORs a frame's first byte with
+//! 0xA5 — exactly `FRAME_MAGIC` — so a damaged codec frame always fails
+//! decode validation instead of sometimes parsing into garbage.
+
+use std::time::Duration;
+
+use qsgd::collectives;
+use qsgd::config::{CollectiveSpec, ScenarioSpec};
+use qsgd::coordinator::CompressorSpec;
+use qsgd::metrics::FaultStats;
+use qsgd::simnet::{Link, SimNet, Topology};
+use qsgd::transport::{
+    DistStats, Endpoint, FaultInjector, Mesh, MeshConfig, RecoveryOptions, SocketExchange,
+};
+use qsgd::util::rng::{self, Xoshiro256};
+
+const WORLD: usize = 4;
+/// Ragged tail (not a multiple of bucket·K) exercises short final segments.
+const N: usize = 2 * 512 * 4 + 29;
+const SEED: u64 = 7;
+const GSEED: u64 = 99;
+
+/// A free TCP port on loopback: bind :0, read the address, release it.
+fn free_tcp_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("binding probe socket");
+    l.local_addr().expect("probe addr").to_string()
+}
+
+/// Run `f(rank, mesh)` on `world` threads over one real loopback mesh.
+fn run_world<T: Send>(world: usize, io_ms: u64, f: impl Fn(usize, Mesh) -> T + Sync) -> Vec<T> {
+    let base = Endpoint::Tcp(free_tcp_addr());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..world)
+            .map(|r| {
+                let base = base.clone();
+                let f = &f;
+                s.spawn(move || {
+                    let mesh = Mesh::connect(
+                        &base,
+                        &MeshConfig {
+                            rank: r,
+                            world,
+                            io_timeout: Duration::from_millis(io_ms),
+                            connect_timeout: Duration::from_secs(30),
+                        },
+                    )
+                    .unwrap_or_else(|e| panic!("rank {r} mesh: {e:#}"));
+                    f(r, mesh)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+    })
+}
+
+fn grad_for(rank: usize) -> Vec<f32> {
+    rng::normal_vec(&mut Xoshiro256::stream(GSEED, rank as u64), N)
+}
+
+/// In-process golden: the same collective (scenario-aware) at the same
+/// seeds — the bits every socket-side mean must match exactly.
+fn golden_mean(spec: &CollectiveSpec, scenario: &ScenarioSpec, steps: usize) -> Vec<f32> {
+    let grads: Vec<Vec<f32>> = (0..WORLD).map(grad_for).collect();
+    let net = SimNet::new(WORLD, Link::new(1e9, 1e-6), Topology::P2pBroadcast);
+    let codec = CompressorSpec::qsgd_4bit().codec();
+    let mut algo =
+        collectives::build_with_scenario(spec, scenario, codec, WORLD, SEED).expect("golden algo");
+    algo.prepare(N);
+    let mut mean = Vec::new();
+    for _ in 0..steps {
+        algo.exchange(&net, &grads, &mut mean).expect("golden exchange");
+    }
+    mean
+}
+
+fn assert_mean_matches(tag: &str, rank: usize, got: &[f32], want: &[f32]) {
+    assert!(want.iter().any(|&x| x != 0.0), "{tag}: golden mean is all zeros");
+    assert_eq!(got.len(), want.len(), "{tag}: rank {rank} mean length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{tag}: rank {rank} diverges from the golden at coord {i}: \
+             {a} ({:#010x}) vs {b} ({:#010x})",
+            a.to_bits(),
+            b.to_bits()
+        );
+    }
+}
+
+fn sum_faults(stats: &[&DistStats]) -> FaultStats {
+    let mut f = FaultStats::default();
+    for s in stats {
+        f.add(&s.faults);
+    }
+    f
+}
+
+#[test]
+fn corrupt_frames_are_rerequested_from_live_peers_bit_identically() {
+    let spec = CollectiveSpec::AllToAll;
+    let steps = 2;
+    // Recovery resends carry the original bytes, so the golden is simply
+    // the fault-free run.
+    let want = golden_mean(&spec, &ScenarioSpec::None, steps);
+    let results = run_world(WORLD, 10_000, |rank, mut mesh| {
+        if rank == 1 {
+            // Rank 1's first two outbound data frames arrive undecodable
+            // (0xA5 XOR kills the frame magic); everything after is clean.
+            mesh.set_fault_injector(
+                FaultInjector::new(0xFA17).with_corruption(1.0).with_max_faults(2),
+            );
+        }
+        let mut ex =
+            SocketExchange::new(&spec, CompressorSpec::qsgd_4bit().codec(), mesh, SEED)
+                .expect("exchange")
+                .with_recovery(RecoveryOptions::on())
+                .expect("recovery");
+        let grad = grad_for(rank);
+        let mut mean = Vec::new();
+        let mut total = DistStats::default();
+        for _ in 0..steps {
+            let s =
+                ex.exchange(&grad, &mut mean).unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
+            total.add(&s);
+        }
+        (mean, total)
+    });
+    for (rank, (mean, _)) in results.iter().enumerate() {
+        assert_mean_matches("corrupt-rerequest", rank, mean, &want);
+    }
+    let f = sum_faults(&results.iter().map(|(_, s)| s).collect::<Vec<_>>());
+    assert_eq!(f.corrupt_frames, 2, "both damaged frames must be detected");
+    assert_eq!(f.rerequests, 2, "both damaged frames must be re-requested");
+    assert_eq!(f.resends_served, 2, "rank 1 must serve both resends");
+    assert_eq!(f.dead_workers, 0);
+    assert_eq!(f.renormalized_steps, 0, "all workers contributed — no renormalization");
+}
+
+#[test]
+fn dead_worker_skip_is_bit_deterministic_across_survivors() {
+    let spec = CollectiveSpec::AllToAll;
+    let steps = 2;
+    // Rank 3 dies before ever sending, so both steps renormalize over
+    // {0,1,2} — exactly the in-process drop:3@0 schedule.
+    let want = golden_mean(&spec, &ScenarioSpec::Drop { rank: 3, step: 0 }, steps);
+    let results = run_world(WORLD, 4_000, |rank, mesh| {
+        if rank == 3 {
+            // Dies at the top of step 0: full mesh joined, nothing sent.
+            drop(mesh);
+            return None;
+        }
+        let mut ex =
+            SocketExchange::new(&spec, CompressorSpec::qsgd_4bit().codec(), mesh, SEED)
+                .expect("exchange")
+                .with_recovery(RecoveryOptions::on())
+                .expect("recovery");
+        let grad = grad_for(rank);
+        let mut mean = Vec::new();
+        let mut total = DistStats::default();
+        for _ in 0..steps {
+            let s =
+                ex.exchange(&grad, &mut mean).unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
+            total.add(&s);
+        }
+        Some((mean, total))
+    });
+    let survivors: Vec<&(Vec<f32>, DistStats)> =
+        results.iter().filter_map(|r| r.as_ref()).collect();
+    assert_eq!(survivors.len(), WORLD - 1);
+    for (i, (mean, stats)) in survivors.iter().enumerate() {
+        assert_mean_matches("dead-worker-skip", i, mean, &want);
+        assert_eq!(stats.faults.dead_workers, 1, "death is counted once, in step 0");
+        assert_eq!(stats.faults.renormalized_steps, steps as u64);
+        assert_eq!(stats.faults.corrupt_frames, 0);
+    }
+    // Bit determinism across survivors is implied by each matching the
+    // golden, but assert it directly for a sharper failure message.
+    for w in &survivors[1..] {
+        assert_eq!(w.0, survivors[0].0, "survivors must agree bit for bit");
+    }
+}
+
+#[test]
+fn ring_ef_residuals_survive_a_recovered_step() {
+    let spec = CollectiveSpec::ring_ef();
+    let steps = 3;
+    // The repaired hop carries the exact bytes the fault destroyed, so the
+    // whole faulted run — residual evolution included — is bit-identical
+    // to the fault-free golden.
+    let want = golden_mean(&spec, &ScenarioSpec::None, steps);
+    let results = run_world(WORLD, 10_000, |rank, mut mesh| {
+        if rank == 2 {
+            // One corrupted reduce-scatter hop frame in step 0.
+            mesh.set_fault_injector(
+                FaultInjector::new(0xFA17).with_corruption(1.0).with_max_faults(1),
+            );
+        }
+        let mut ex =
+            SocketExchange::new(&spec, CompressorSpec::qsgd_4bit().codec(), mesh, SEED)
+                .expect("exchange")
+                .with_recovery(RecoveryOptions::on())
+                .expect("recovery");
+        let grad = grad_for(rank);
+        let mut mean = Vec::new();
+        let mut total = DistStats::default();
+        for _ in 0..steps {
+            let s =
+                ex.exchange(&grad, &mut mean).unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
+            total.add(&s);
+        }
+        (mean, total)
+    });
+    for (rank, (mean, _)) in results.iter().enumerate() {
+        assert_mean_matches("ring-ef-recovered", rank, mean, &want);
+    }
+    let f = sum_faults(&results.iter().map(|(_, s)| s).collect::<Vec<_>>());
+    assert_eq!(f.corrupt_frames, 1, "exactly one damaged hop frame");
+    assert_eq!(f.rerequests, 1);
+    assert_eq!(f.resends_served, 1, "rank 2 must serve the resend");
+    assert_eq!(f.dead_workers, 0);
+}
+
+#[test]
+fn recovery_refuses_backends_that_fail_clean() {
+    // ring:raw and hier have no bounded recovery path; with_recovery must
+    // refuse up front instead of deadlocking mid-hop.
+    let results = run_world(2, 4_000, |_rank, mesh| {
+        let ex = SocketExchange::new(
+            &CollectiveSpec::parse("ring:raw").unwrap(),
+            CompressorSpec::qsgd_4bit().codec(),
+            mesh,
+            SEED,
+        )
+        .expect("exchange");
+        ex.with_recovery(RecoveryOptions::on()).err().map(|e| e.to_string())
+    });
+    for err in results {
+        let err = err.expect("ring:raw must refuse recovery");
+        assert!(err.contains("fails clean"), "{err}");
+    }
+}

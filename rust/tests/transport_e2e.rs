@@ -20,7 +20,7 @@ use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use qsgd::collectives;
-use qsgd::config::CollectiveSpec;
+use qsgd::config::{CollectiveSpec, ScenarioSpec};
 use qsgd::coordinator::CompressorSpec;
 use qsgd::simnet::{Link, SimNet, Topology};
 use qsgd::transport::{Endpoint, Mesh, MeshConfig};
@@ -65,11 +65,23 @@ fn golden_mean(
     n: usize,
     steps: usize,
 ) -> Vec<f32> {
+    golden_mean_scenario(spec, &ScenarioSpec::None, compressor, k, n, steps)
+}
+
+fn golden_mean_scenario(
+    spec: &CollectiveSpec,
+    scenario: &ScenarioSpec,
+    compressor: &CompressorSpec,
+    k: usize,
+    n: usize,
+    steps: usize,
+) -> Vec<f32> {
     let grads: Vec<Vec<f32>> = (0..k)
         .map(|w| rng::normal_vec(&mut Xoshiro256::stream(GSEED, w as u64), n))
         .collect();
     let net = SimNet::new(k, Link::new(1e9, 1e-6), Topology::P2pBroadcast);
-    let mut algo = collectives::build(spec, compressor.codec(), k, SEED);
+    let mut algo = collectives::build_with_scenario(spec, scenario, compressor.codec(), k, SEED)
+        .expect("in-process golden algo");
     algo.prepare(n);
     let mut mean = Vec::new();
     for _ in 0..steps {
@@ -96,6 +108,23 @@ fn tail_of(path: &PathBuf) -> String {
 /// Spawn K `exchange-worker` ranks against `transport`, wait for all of
 /// them under a deadline, and return the per-rank decoded means.
 fn run_group(tag: &str, transport: &str, collective: &str, compressor: &str) -> Vec<Vec<f32>> {
+    run_group_with(tag, transport, collective, compressor, &|_| Vec::new(), &[])
+        .into_iter()
+        .map(|m| m.expect("all ranks succeed"))
+        .collect()
+}
+
+/// Like [`run_group`], with per-rank extra CLI args and a set of ranks
+/// *expected* to exit with an error (churn injection). Returns `None` for
+/// the ranks in `expect_fail` — their mean file is never written.
+fn run_group_with(
+    tag: &str,
+    transport: &str,
+    collective: &str,
+    compressor: &str,
+    extra: &dyn Fn(usize) -> Vec<String>,
+    expect_fail: &[usize],
+) -> Vec<Option<Vec<f32>>> {
     let dir = log_dir(tag);
     let mut children: Vec<Child> = Vec::with_capacity(WORLD);
     let mut mean_paths = Vec::with_capacity(WORLD);
@@ -131,6 +160,7 @@ fn run_group(tag: &str, transport: &str, collective: &str, compressor: &str) -> 
                 "--connect-timeout-ms",
                 "30000",
             ])
+            .args(extra(r))
             .stdout(Stdio::from(stdout))
             .stderr(Stdio::from(stderr))
             .spawn()
@@ -170,13 +200,24 @@ fn run_group(tag: &str, transport: &str, collective: &str, compressor: &str) -> 
     }
     for (r, st) in statuses.iter().enumerate() {
         let st = st.expect("filled");
-        assert!(
-            st.success(),
-            "{tag}: rank {r} exited with {st}\nstderr tail:\n{}",
-            tail_of(&dir.join(format!("rank{r}.err")))
-        );
+        if expect_fail.contains(&r) {
+            assert!(
+                !st.success(),
+                "{tag}: rank {r} was expected to die (churn injection) but exited cleanly"
+            );
+        } else {
+            assert!(
+                st.success(),
+                "{tag}: rank {r} exited with {st}\nstderr tail:\n{}",
+                tail_of(&dir.join(format!("rank{r}.err")))
+            );
+        }
     }
-    mean_paths.iter().map(read_mean).collect()
+    mean_paths
+        .iter()
+        .enumerate()
+        .map(|(r, p)| if expect_fail.contains(&r) { None } else { Some(read_mean(p)) })
+        .collect()
 }
 
 fn assert_bit_identical(tag: &str, got: &[Vec<f32>], want: &[f32]) {
@@ -241,6 +282,80 @@ fn uds_a2a_and_ring_match_inprocess_golden() {
         check_arm(tag, &transport, col, "qsgd4");
         qsgd::transport::net::cleanup_uds(&base, WORLD);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Churn and corruption: the recovery protocol across real processes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_a2a_churn_killed_rank_renormalizes_without_hanging() {
+    // The CI lane's churn case. Rank 3 dies at the top of step 1 — before
+    // sending anything, so every survivor times it out in the same round.
+    // Survivors must (a) never hang (io timeouts bound the stall, the
+    // group deadline and the lane's `timeout` back that up) and (b) finish
+    // the epoch with means renormalized over {0,1,2}, bit-identical to the
+    // in-process `drop:3@1` golden.
+    let spec = CollectiveSpec::parse("a2a").unwrap();
+    let comp = CompressorSpec::parse("qsgd4").unwrap();
+    let want = golden_mean_scenario(
+        &spec,
+        &ScenarioSpec::Drop { rank: 3, step: 1 },
+        &comp,
+        WORLD,
+        N,
+        STEPS,
+    );
+    let extra = |r: usize| -> Vec<String> {
+        let mut v = vec!["--recover".to_string()];
+        if r == 3 {
+            v.extend(["--die-at-step".to_string(), "1".to_string()]);
+        }
+        v
+    };
+    let got = run_group_with(
+        "tcp-a2a-churn",
+        &format!("tcp:{}", free_tcp_addr()),
+        "a2a",
+        "qsgd4",
+        &extra,
+        &[3],
+    );
+    let survivors: Vec<Vec<f32>> = got.into_iter().flatten().collect();
+    assert_eq!(survivors.len(), WORLD - 1);
+    assert_bit_identical("tcp-a2a-churn", &survivors, &want);
+}
+
+#[test]
+fn tcp_a2a_corrupt_frames_recover_to_fault_free_golden() {
+    // Seeded sender-side corruption across real processes: recovery
+    // re-requests the damaged frames, and the repaired run is bit-identical
+    // to the fault-free golden (resends carry the original bytes).
+    let spec = CollectiveSpec::parse("a2a").unwrap();
+    let comp = CompressorSpec::parse("qsgd4").unwrap();
+    let want = golden_mean(&spec, &comp, WORLD, N, STEPS);
+    let extra = |r: usize| -> Vec<String> {
+        let mut v = vec!["--recover".to_string()];
+        if r == 1 {
+            v.extend([
+                "--corrupt-prob".to_string(),
+                "1.0".to_string(),
+                "--max-faults".to_string(),
+                "2".to_string(),
+            ]);
+        }
+        v
+    };
+    let got = run_group_with(
+        "tcp-a2a-corrupt",
+        &format!("tcp:{}", free_tcp_addr()),
+        "a2a",
+        "qsgd4",
+        &extra,
+        &[],
+    );
+    let means: Vec<Vec<f32>> = got.into_iter().flatten().collect();
+    assert_bit_identical("tcp-a2a-corrupt", &means, &want);
 }
 
 // ---------------------------------------------------------------------------
