@@ -1,0 +1,134 @@
+//! Serial vs pipelined recompressing-ring exchange at K=4 over loopback
+//! TCP: the measured counterpart to the §5 overlap *model*. Four ranks of
+//! this process connect a real mesh; rank 0's exchange step is timed once
+//! with the hop-serial path and once with `with_pipelining(true)` (per-peer
+//! writer threads ship hop h's frame while the main thread decodes and
+//! re-encodes hop h+1 — same bits, overlapped wall clock).
+//!
+//! Loopback transfer is cheap relative to the codec, so the win here is
+//! modest by construction; what this bench pins is the *regression
+//! direction*: pipelining must never cost wall clock. A hard in-bench
+//! assert fails the run if the pipelined median exceeds 1.05× the serial
+//! median, and the committed baseline envelope in
+//! `rust/benches/baselines/pipeline_overlap.json` lets the advisory perf
+//! lane catch order-of-magnitude drift.
+//!
+//! Run: `cargo bench --bench pipeline_overlap`.
+
+use std::time::Duration;
+
+use qsgd::bench::{section, Bench, Report};
+use qsgd::config::CollectiveSpec;
+use qsgd::coordinator::CompressorSpec;
+use qsgd::transport::{Endpoint, Mesh, MeshConfig, SocketExchange};
+use qsgd::util::rng::{self, Xoshiro256};
+use qsgd::util::stats;
+
+const WORLD: usize = 4;
+const N: usize = 1 << 18;
+const SEED: u64 = 7;
+
+fn free_tcp_endpoint() -> Endpoint {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("probe socket");
+    Endpoint::Tcp(l.local_addr().expect("probe addr").to_string())
+}
+
+fn mesh_cfg(rank: usize) -> MeshConfig {
+    MeshConfig {
+        rank,
+        world: WORLD,
+        io_timeout: Duration::from_secs(30),
+        connect_timeout: Duration::from_secs(30),
+    }
+}
+
+/// Time rank 0's K=4 recompressing-ring step with every rank in the given
+/// mode; returns the median step wall in seconds. Peers loop exchanges
+/// until rank 0 drops its mesh out from under them (the same teardown the
+/// loopback bench uses — the next hop errors and the thread exits).
+fn bench_ring(b: &Bench, report: &mut Report, pipelined: bool) -> f64 {
+    let base = free_tcp_endpoint();
+    let spec = CollectiveSpec::ring();
+    let comp = CompressorSpec::qsgd_4bit();
+    let mode = if pipelined { "pipelined" } else { "serial" };
+
+    let mut peers = Vec::new();
+    for rank in 1..WORLD {
+        let base = base.clone();
+        let spec = spec.clone();
+        let comp = comp.clone();
+        peers.push(std::thread::spawn(move || {
+            let mesh = Mesh::connect(&base, &mesh_cfg(rank)).expect("peer mesh");
+            let mut ex = SocketExchange::new(&spec, comp.codec(), mesh, SEED)
+                .expect("peer exchange")
+                .with_pipelining(pipelined)
+                .expect("peer pipelining");
+            let grad = rng::normal_vec(&mut Xoshiro256::stream(5, rank as u64), N);
+            let mut mean = Vec::new();
+            while ex.exchange(&grad, &mut mean).is_ok() {}
+        }));
+    }
+
+    let mesh = Mesh::connect(&base, &mesh_cfg(0)).expect("rank 0 mesh");
+    let mut ex = SocketExchange::new(&spec, comp.codec(), mesh, SEED)
+        .expect("rank 0 exchange")
+        .with_pipelining(pipelined)
+        .expect("rank 0 pipelining");
+    let grad = rng::normal_vec(&mut Xoshiro256::stream(5, 0), N);
+    let mut mean = Vec::new();
+    let s = b.run(&format!("ring recompress K=4 ({mode})"), || {
+        ex.exchange(&grad, &mut mean).expect("exchange").wire.payload_bytes
+    });
+    s.report();
+    report.add("ring_k4", &s, Some(N as f64));
+
+    // One instrumented step: where rank 0's wall actually went. Pipelining
+    // should move seconds out of the io-blocked bucket.
+    let st = ex.exchange(&grad, &mut mean).expect("instrumented step");
+    let occ = &st.occupancy;
+    println!(
+        "  {mode} occupancy: io-blocked {}, codec {}, idle {} (of {})",
+        stats::fmt_duration(occ.io_blocked_s),
+        stats::fmt_duration(occ.codec_s),
+        stats::fmt_duration(occ.idle_s),
+        stats::fmt_duration(occ.total_s()),
+    );
+    report.add_metric("occupancy", &format!("{mode} io_blocked_s"), occ.io_blocked_s);
+    report.add_metric("occupancy", &format!("{mode} codec_s"), occ.codec_s);
+    report.add_metric("occupancy", &format!("{mode} idle_s"), occ.idle_s);
+
+    drop(ex);
+    for p in peers {
+        p.join().expect("peer thread");
+    }
+    s.median()
+}
+
+fn main() {
+    let b = Bench::quick();
+    let mut report = Report::new("pipeline_overlap");
+
+    section("recompressing ring @K=4 (tcp loopback): serial vs pipelined");
+    let serial = bench_ring(&b, &mut report, false);
+    let pipelined = bench_ring(&b, &mut report, true);
+    let ratio = pipelined / serial.max(f64::MIN_POSITIVE);
+    println!(
+        "\n  serial {} vs pipelined {} per step — {:.2}x",
+        stats::fmt_duration(serial),
+        stats::fmt_duration(pipelined),
+        ratio,
+    );
+    report.add_metric("summary", "serial_median_s", serial);
+    report.add_metric("summary", "pipelined_median_s", pipelined);
+    report.add_metric("summary", "pipelined_over_serial", ratio);
+    report.write("BENCH_pipeline_overlap.json").expect("write bench json");
+
+    // Hard floor on the feature's value: pipelining may be a wash on a fast
+    // loopback, but it must never *cost* wall clock. (Written after the
+    // report so a failing run still leaves the artifact for debugging.)
+    assert!(
+        ratio <= 1.05,
+        "pipelined ring step ({pipelined:.6}s) slower than 1.05x serial ({serial:.6}s): \
+         {ratio:.3}x — the writer-thread path is costing wall clock"
+    );
+}

@@ -246,6 +246,21 @@ const GRID_TAG_UNIFORM: u64 = 3;
 /// directory plus padding outweighs any decode-parallelism win; above it
 /// the overhead is <1% of the payload at the paper's 4-bit/512
 /// configuration.
+///
+/// Derivation from the committed hot-path medians
+/// (`rust/benches/baselines/coding_hotpath.json`): serial `decode_add`
+/// sustains ~8 ns/coord while the directory-fed parallel decode reaches
+/// ~5 ns/coord at 4 threads, so the directory buys ~3 ns/coord — which
+/// must first amortize the roughly-100 µs fixed cost of fanning
+/// per-bucket work lists across the pool and merging partials.
+/// Break-even is therefore near 100 µs / 3 ns ≈ 3·10⁴ coords; 2¹⁶ =
+/// 65 536 leaves ~2× slack for slower machines. The *byte* cost is
+/// size-independent at fixed bucket width (≈ 2 B per 512-coord bucket ≈
+/// 0.8% of a 4-bit payload), so the threshold is set by the time
+/// crossover, not the wire overhead. Do not retune this value in place:
+/// it selects the frame version on the wire, and the transport goldens
+/// pin frames on both sides of it — move it only with a format version
+/// bump.
 pub const DIRECTORY_MIN_COORDS: usize = 1 << 16;
 
 /// The shared default rule for emitting the bucket-offset directory —

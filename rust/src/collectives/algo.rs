@@ -191,6 +191,20 @@ pub(crate) struct Recompress {
 /// socket transport: `(offset, len)` per lane, boundaries on multiples of
 /// `align` so per-segment quantization matches a whole-gradient pass.
 /// Trailing segments may be short or empty, which the codecs handle.
+///
+/// Why exactly one segment per ring member (`per ≈ ⌈n/k⌉` rounded up to
+/// the alignment), not finer strips: the committed hot-path medians
+/// (`rust/benches/baselines/coding_hotpath.json`) put per-hop codec work
+/// at ~8 ns/coord `decode_add` plus ~10–12 ns/coord fused re-encode, so a
+/// K=8 hop over a 2²⁰-coord gradient already spends milliseconds in the
+/// codec — orders of magnitude above per-frame latency — and sub-dividing
+/// segments would multiply framing and session overhead without shortening
+/// the codec critical path (the pipelined transport overlaps wire time
+/// with that codec work instead). The alignment is the codec's
+/// `chunk_align()` (the bucket width, 512 at the paper's setting): a cut
+/// inside a bucket would renormalize it differently per segment and break
+/// bit parity with the whole-gradient encode. The transport wire goldens
+/// pin this layout — change it only with a frame-format version bump.
 pub fn ring_segments(n: usize, k: usize, align: usize) -> Vec<(usize, usize)> {
     assert!(k >= 1, "ring needs at least one member");
     let align = align.max(1);

@@ -107,6 +107,10 @@ pub struct EpochSim {
     pub bytes_per_worker: f64,
     pub steps: usize,
     pub quantized_fraction: f64,
+    /// Per-tensor `(readiness, share)` transmission schedule of the
+    /// network's layout ([`crate::models::layout::ParamLayout::overlap_schedule`])
+    /// — what [`Self::epoch_time_overlapped`] feeds the §5 overlap model.
+    pub schedule: Vec<(f64, f64)>,
 }
 
 impl EpochSim {
@@ -116,9 +120,14 @@ impl EpochSim {
         self.breakdown.total().secs()
     }
 
-    /// Epoch time with full §5 double-buffered overlap (lower bound).
-    pub fn epoch_time_overlapped(&self) -> f64 {
-        self.breakdown.total_double_buffered().secs()
+    /// Schedule-derived epoch time under §5-style overlap at fraction
+    /// `phi ∈ [0, 1]`: layer L's buckets go on the wire while layers
+    /// L−1…0 are still differentiating
+    /// ([`Breakdown::total_overlapped`]). `phi = 0` reproduces
+    /// [`Self::epoch_time`] exactly; `phi = 1` is full per-layer bucket
+    /// readiness (at or above the old whole-step double-buffering bound).
+    pub fn epoch_time_overlapped(&self, phi: f64) -> f64 {
+        self.breakdown.total_overlapped(&self.schedule, phi).secs()
     }
 }
 
@@ -227,6 +236,7 @@ pub fn simulate_epoch(
         bytes_per_worker,
         steps,
         quantized_fraction: qfrac,
+        schedule: net.layout.overlap_schedule(),
     }
 }
 
@@ -356,6 +366,25 @@ mod tests {
         };
         assert_eq!(total(7).to_bits(), total(7).to_bits(), "same seed, same trace");
         assert!(total(7).to_bits() != total(8).to_bits(), "different seed, different trace");
+    }
+
+    #[test]
+    fn overlapped_epoch_time_interpolates_the_serial_total() {
+        let net = zoo::alexnet();
+        let r = sim(&net, 16, &EpochArm::fp32());
+        assert!(!r.schedule.is_empty(), "alexnet layout must yield a schedule");
+        // φ = 0 is exactly the stacked-bar total.
+        assert_eq!(r.epoch_time_overlapped(0.0).to_bits(), r.epoch_time().to_bits());
+        // φ = 1 strictly helps a comm-bound configuration and never beats
+        // the max(comp, comm) floor.
+        let full = r.epoch_time_overlapped(1.0);
+        assert!(full < r.epoch_time(), "overlap should shrink a comm-bound epoch");
+        let comp = r.breakdown.compute.secs();
+        let comm = r.breakdown.communication().secs();
+        assert!(full >= comp.max(comm) - 1e-9);
+        // and φ = 0.5 lies between the endpoints
+        let half = r.epoch_time_overlapped(0.5);
+        assert!(full <= half && half <= r.epoch_time());
     }
 
     #[test]

@@ -140,6 +140,18 @@ impl RunResult {
             self.breakdown.total()
         }
     }
+
+    /// Schedule-derived virtual run time under §5-style per-layer overlap:
+    /// `schedule` is the model layout's transmission schedule
+    /// ([`crate::models::layout::ParamLayout::overlap_schedule`]) and
+    /// `fraction` the overlap knob φ ∈ [0, 1]
+    /// ([`Breakdown::total_overlapped`]). φ = 0 equals
+    /// `virtual_time(false)` exactly; φ = 1 is at or above the
+    /// whole-step `virtual_time(true)` bound (that bound ignores intra-step
+    /// readiness ordering).
+    pub fn virtual_time_overlapped(&self, schedule: &[(f64, f64)], fraction: f64) -> VTime {
+        self.breakdown.total_overlapped(schedule, fraction)
+    }
 }
 
 /// One simulated worker's state. Encode sessions (and any error-feedback

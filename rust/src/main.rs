@@ -68,9 +68,11 @@ fn print_help() {
                   # socket fault injection: [--recover] [--die-at-step S]\n\
                   #  [--corrupt-prob P] [--drop-prob P] [--fault-delay-ms MS]\n\
                   #  [--fault-seed S] [--max-faults N]\n\
+                  # pipelined exchange (same bits, overlapped wall clock):\n\
+                  #  [--overlap on|off]\n\
          simulate --network <alexnet|vgg19|resnet50|resnet152|resnet110|bn-inception|lstm>\n\
                   --gpus K [--preset k80|10gbe|nvlink] [--collective <...>]\n\
-                  [--scenario <...>]\n\
+                  [--scenario <...>] [--overlap-fraction F]\n\
          svrg     --processors K --epochs P [--exact]\n\
          async    --workers K --updates N --compressor <...>\n\
          validate [--n N] [--trials T]"
@@ -299,6 +301,11 @@ fn train_dist_rank(
     cfg.eval_every = args.usize("eval-every", 25);
     cfg.log_every = args.usize("log-every", 10);
     cfg.recovery = RecoveryOptions { enabled: args.flag("recover") };
+    cfg.pipeline = match args.string("overlap", "off").as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("bad --overlap '{other}' (expected on|off)"),
+    };
     cfg.die_at_step = match args.get("die-at-step") {
         Some(s) => {
             Some(s.parse().map_err(|_| anyhow::anyhow!("bad --die-at-step '{s}'"))?)
@@ -423,6 +430,11 @@ fn cmd_exchange_worker(args: &Args) -> Result<()> {
     if args.flag("recover") {
         ex = ex.with_recovery(RecoveryOptions::on())?;
     }
+    match args.string("overlap", "off").as_str() {
+        "on" => ex = ex.with_pipelining(true)?,
+        "off" => {}
+        other => anyhow::bail!("bad --overlap '{other}' (expected on|off)"),
+    }
 
     // Same gradient every step (the per-step variation under test is the
     // sessions' RNG streams advancing), deterministic in (gseed, rank).
@@ -457,6 +469,17 @@ fn cmd_exchange_worker(args: &Args) -> Result<()> {
         total.wall.decode_s,
         stats::fmt_bytes(total.wire.payload_bytes as f64),
     );
+    let occ = &total.occupancy;
+    if occ.total_s() > 0.0 {
+        println!(
+            "rank {rank} occupancy: io-blocked {:.3}s, codec {:.3}s, idle {:.3}s \
+             (of {:.3}s in exchanges)",
+            occ.io_blocked_s,
+            occ.codec_s,
+            occ.idle_s,
+            occ.total_s(),
+        );
+    }
     if total.faults.any() {
         let f = &total.faults;
         println!(
@@ -507,7 +530,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cost = CostModel::k80();
     let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
 
-    let mut table = Table::new(&["arm", "via", "epoch", "comm%", "msg", "B/wkr", "speedup"]);
+    // Schedule-derived overlapped epoch time (per-layer bucket readiness
+    // from the network layout) at the requested overlap fraction φ.
+    let overlap: Option<f64> = match args.get("overlap-fraction") {
+        Some(s) => Some(
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad --overlap-fraction '{s}'"))?,
+        ),
+        None => None,
+    };
+    let mut headers = vec!["arm", "via", "epoch", "comm%", "msg", "B/wkr", "speedup"];
+    if overlap.is_some() {
+        headers.insert(3, "overlap");
+    }
+    let mut table = Table::new(&headers);
     let fp = simulate_epoch(&net, gpus, &EpochArm::fp32(), &simnet, &cost, 2, 0);
     let arms = [
         EpochArm::fp32(),
@@ -521,7 +557,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let r = simulate_epoch(&net, gpus, &arm, &simnet, &cost, 2, 0);
         let label =
             if arm.dense_transport { format!("{} (ring)", r.arm) } else { r.arm.clone() };
-        table.row(&[
+        let mut row = vec![
             label,
             r.collective.clone(),
             stats::fmt_duration(r.epoch_time()),
@@ -529,7 +565,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             stats::fmt_bytes(r.message_bytes as f64),
             stats::fmt_bytes(r.bytes_per_worker),
             format!("{:.2}x", fp.epoch_time() / r.epoch_time()),
-        ]);
+        ];
+        if let Some(phi) = overlap {
+            row.insert(3, stats::fmt_duration(r.epoch_time_overlapped(phi)));
+        }
+        table.row(&row);
     }
     println!(
         "{} on {gpus} GPUs ({} params, {:.1}% quantized, {} steps/epoch):",
@@ -548,6 +588,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
     table.print();
+    if let Some(phi) = overlap {
+        println!(
+            "overlap: schedule-derived epoch time at fraction {phi:.2} \
+             (per-layer bucket readiness from the {} layout)",
+            net.name
+        );
+    }
     Ok(())
 }
 

@@ -39,6 +39,47 @@ impl Breakdown {
         VTime(self.steps as f64 * per_comp.max(per_comm) + per_comp.min(per_comm))
     }
 
+    /// Schedule-derived overlapped total: per-layer bucket readiness instead
+    /// of the single [`Self::total_double_buffered`] lower bound.
+    ///
+    /// `schedule` lists the transmission units of one step in the order they
+    /// go on the wire (backprop reverse layout order — see
+    /// [`crate::models::layout::ParamLayout::overlap_schedule`]); each entry
+    /// is `(readiness, share)` where `readiness` is the fraction of the
+    /// step's compute after which the unit's gradient exists, and `share` is
+    /// its fraction of the step's communication (shares are normalized here,
+    /// so callers may pass raw sizes). `fraction` is the §5 overlap knob
+    /// φ ∈ [0, 1]: at φ = 0 every unit waits for the full backprop (the
+    /// serial `compute + comm` of [`Self::total`], exactly); at φ = 1 unit
+    /// `i` may start as soon as `readiness_i · compute` has elapsed.
+    ///
+    /// Communication is serialized on the link in schedule order:
+    /// `start_i = max(ready_i, finish_{i-1})`, `finish_i = start_i +
+    /// share_i · comm`. Readiness times shrink linearly in φ
+    /// (`ready_i = comp · (1 − φ·(1 − readiness_i))`), so the result is
+    /// monotonically non-increasing in φ and always within
+    /// `[max(comp, comm), comp + comm]` per step.
+    pub fn total_overlapped(&self, schedule: &[(f64, f64)], fraction: f64) -> VTime {
+        let steps = self.steps.max(1) as f64;
+        let comp = self.compute.secs() / steps;
+        let comm = self.communication().secs() / steps;
+        let phi = fraction.clamp(0.0, 1.0);
+        let whole = [(1.0f64, 1.0f64)];
+        let sched: &[(f64, f64)] = if schedule.is_empty() { &whole } else { schedule };
+        let total_share: f64 = sched.iter().map(|&(_, s)| s.max(0.0)).sum();
+        let mut finish = 0.0f64;
+        for &(readiness, share) in sched {
+            let r = readiness.clamp(0.0, 1.0);
+            let ready = comp * (1.0 - phi * (1.0 - r));
+            let start = ready.max(finish);
+            let norm = if total_share > 0.0 { share.max(0.0) / total_share } else { 0.0 };
+            finish = start + comm * norm;
+        }
+        // The step is not done before backprop is (guards schedules whose
+        // last entry declares readiness < 1).
+        VTime(self.steps as f64 * finish.max(comp))
+    }
+
     pub fn comm_fraction(&self) -> f64 {
         let t = self.total().secs();
         if t <= 0.0 {
@@ -84,6 +125,45 @@ impl WallClock {
         self.encode_s += other.encode_s;
         self.transfer_s += other.transfer_s;
         self.decode_s += other.decode_s;
+    }
+}
+
+/// Wall-clock occupancy of the exchange loop, attributed to what the main
+/// thread was doing: blocked on socket I/O, running codec work (quantize /
+/// entropy-code / decode), or idle (scheduling gaps, pipeline stalls,
+/// control-plane rounds). Recorded by the socket transport per exchange so
+/// the pipelined path's win — io-blocked time shrinking while codec time
+/// stays put — is directly measurable. All-zero for simnet-only runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Occupancy {
+    /// Blocked in socket sends/receives (includes peer-skew wait).
+    pub io_blocked_s: f64,
+    /// Encode + decode work on this rank.
+    pub codec_s: f64,
+    /// Exchange wall time not attributed to either bucket (never negative).
+    pub idle_s: f64,
+}
+
+impl Occupancy {
+    pub fn total_s(&self) -> f64 {
+        self.io_blocked_s + self.codec_s + self.idle_s
+    }
+
+    /// Attribute one exchange: `total_s` is the measured wall time of the
+    /// whole exchange, of which `io_s` was spent blocked on sockets and
+    /// `codec_s` in encode/decode. The remainder (clamped at zero — the
+    /// buckets are themselves measured and can overshoot by timer noise)
+    /// lands in `idle_s`.
+    pub fn record(&mut self, total_s: f64, io_s: f64, codec_s: f64) {
+        self.io_blocked_s += io_s;
+        self.codec_s += codec_s;
+        self.idle_s += (total_s - io_s - codec_s).max(0.0);
+    }
+
+    pub fn add(&mut self, other: &Occupancy) {
+        self.io_blocked_s += other.io_blocked_s;
+        self.codec_s += other.codec_s;
+        self.idle_s += other.idle_s;
     }
 }
 
@@ -272,6 +352,62 @@ mod tests {
         assert!((b.comm_fraction() - 0.4).abs() < 1e-12);
         // double buffered: 2 steps · max(3, 2) + min(3, 2) = 8
         assert!((b.total_double_buffered().secs() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapped_total_bounds_and_endpoints() {
+        let b = Breakdown {
+            compute: VTime(6.0),
+            encode: VTime(1.0),
+            transfer: VTime(2.0),
+            decode: VTime(1.0),
+            steps: 2,
+        };
+        // Two units: the late half of the net ready at 40% of backprop, the
+        // early half only when backprop finishes.
+        let sched = [(0.4, 1.0), (1.0, 1.0)];
+        // φ = 0 reproduces the serial total exactly.
+        assert_eq!(b.total_overlapped(&sched, 0.0).secs().to_bits(), b.total().secs().to_bits());
+        // Empty schedule = one whole-gradient unit: serial at every φ > 0
+        // still ends at comp + comm (nothing is ready before comp).
+        assert_eq!(b.total_overlapped(&[], 0.5).secs().to_bits(), b.total().secs().to_bits());
+        // Monotone non-increasing in φ, and within [max(comp, comm), serial].
+        let per_comp = 3.0;
+        let per_comm = 2.0;
+        let mut prev = f64::INFINITY;
+        for phi in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let t = b.total_overlapped(&sched, phi).secs();
+            assert!(t <= prev + 1e-12, "φ={phi}: {t} > {prev}");
+            assert!(t <= b.total().secs() + 1e-12);
+            assert!(t >= 2.0 * per_comp.max(per_comm) - 1e-12);
+            prev = t;
+        }
+        // φ = 1 by hand: unit 1 ready at 0.4·3 = 1.2, finish 2.2; unit 2
+        // ready at 3.0, finish 4.0 ⇒ 2 steps · 4.0 = 8.0.
+        assert!((b.total_overlapped(&sched, 1.0).secs() - 8.0).abs() < 1e-12);
+        // Raw sizes normalize: scaling all shares changes nothing.
+        let scaled = [(0.4, 512.0), (1.0, 512.0)];
+        assert_eq!(
+            b.total_overlapped(&scaled, 0.7).secs().to_bits(),
+            b.total_overlapped(&sched, 0.7).secs().to_bits()
+        );
+    }
+
+    #[test]
+    fn occupancy_attribution_clamps_idle() {
+        let mut o = Occupancy::default();
+        o.record(10.0, 4.0, 3.0);
+        assert_eq!(o.io_blocked_s, 4.0);
+        assert_eq!(o.codec_s, 3.0);
+        assert_eq!(o.idle_s, 3.0);
+        // measured buckets can overshoot the outer timer: idle clamps at 0
+        o.record(1.0, 0.8, 0.4);
+        assert_eq!(o.idle_s, 3.0);
+        assert!((o.total_s() - 11.2).abs() < 1e-12);
+        let mut sum = Occupancy::default();
+        sum.add(&o);
+        sum.add(&o);
+        assert!((sum.io_blocked_s - 9.6).abs() < 1e-12);
     }
 
     #[test]

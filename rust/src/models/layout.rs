@@ -75,6 +75,33 @@ impl ParamLayout {
     pub fn tensor(&self, name: &str) -> Option<&TensorInfo> {
         self.tensors.iter().find(|t| t.name == name)
     }
+
+    /// Per-tensor `(readiness, share)` schedule for the §5 overlap model
+    /// ([`Breakdown::total_overlapped`](crate::metrics::Breakdown::total_overlapped)).
+    ///
+    /// Backprop walks the network output → input, so the *last* tensor's
+    /// gradient is ready first and may start its exchange while earlier
+    /// layers are still differentiating. Backprop time per tensor is
+    /// approximated as proportional to its parameter count, giving tensor
+    /// `i` (layout order) a readiness fraction of `Σ_{j≥i} size_j / total` —
+    /// the suffix-cumulative size. Entries come out in transmission order
+    /// (reverse layout order), readiness non-decreasing, the final entry
+    /// (the input layer, ready only when backprop completes) at exactly 1.0;
+    /// `share` is the tensor's size fraction. Empty layout ⇒ empty schedule
+    /// (the overlap model then treats the step as one whole-gradient unit).
+    pub fn overlap_schedule(&self) -> Vec<(f64, f64)> {
+        let total = self.total_params();
+        if total == 0 {
+            return Vec::new();
+        }
+        let mut sched = Vec::with_capacity(self.tensors.len());
+        let mut done = 0usize;
+        for t in self.tensors.iter().rev() {
+            done += t.size;
+            sched.push((done as f64 / total as f64, t.size as f64 / total as f64));
+        }
+        sched
+    }
 }
 
 /// A contiguous segment of the flat gradient with a single treatment.
@@ -188,6 +215,27 @@ mod tests {
         assert_eq!(p.total_len(), l.total_params());
         let f = p.quantized_fraction();
         assert!(f > 0.97 && f < 1.0, "{f}");
+    }
+
+    #[test]
+    fn overlap_schedule_is_reverse_order_and_normalized() {
+        let l = ParamLayout::synthetic(&[
+            ("in", vec![10]),  // computed last in backprop
+            ("mid", vec![30]),
+            ("out", vec![60]), // ready first
+        ]);
+        let s = l.overlap_schedule();
+        assert_eq!(s.len(), 3);
+        // transmission order = reverse layout order: out, mid, in
+        assert!((s[0].0 - 0.6).abs() < 1e-12 && (s[0].1 - 0.6).abs() < 1e-12);
+        assert!((s[1].0 - 0.9).abs() < 1e-12 && (s[1].1 - 0.3).abs() < 1e-12);
+        assert!((s[2].0 - 1.0).abs() < 1e-12 && (s[2].1 - 0.1).abs() < 1e-12);
+        // readiness is non-decreasing and ends at exactly 1.0
+        assert!(s.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert_eq!(s.last().unwrap().0, 1.0);
+        let share_sum: f64 = s.iter().map(|&(_, sh)| sh).sum();
+        assert!((share_sum - 1.0).abs() < 1e-12);
+        assert!(ParamLayout::default().overlap_schedule().is_empty());
     }
 
     #[test]

@@ -24,6 +24,40 @@ impl Link {
     pub fn message_time(&self, bytes: usize) -> f64 {
         self.latency_s + self.serialize_time(bytes)
     }
+
+    /// Fit α (latency) and β (1/bandwidth) by least squares from measured
+    /// `(bytes, seconds)` transfer samples: `t = α + β·bytes`. This is how
+    /// the `table1_speedup` bench turns committed loopback-bench medians
+    /// into a calibrated link instead of a preset constant.
+    ///
+    /// Degenerate inputs fall back gracefully rather than panicking: with
+    /// all samples at one size (or a non-positive fitted slope — noise can
+    /// produce one), the fit collapses to a zero-latency pure-bandwidth
+    /// line through the means; a fitted α below zero clamps to zero. An
+    /// empty sample set yields a 1 B/s zero-latency link, which downstream
+    /// code treats as "unmeasured".
+    pub fn fit(samples: &[(usize, f64)]) -> Link {
+        if samples.is_empty() {
+            return Link::new(1.0, 0.0);
+        }
+        let n = samples.len() as f64;
+        let mean_b = samples.iter().map(|&(b, _)| b as f64).sum::<f64>() / n;
+        let mean_t = samples.iter().map(|&(_, t)| t).sum::<f64>() / n;
+        let var_b: f64 = samples.iter().map(|&(b, _)| (b as f64 - mean_b).powi(2)).sum();
+        let cov: f64 =
+            samples.iter().map(|&(b, t)| (b as f64 - mean_b) * (t - mean_t)).sum();
+        let slope = if var_b > 0.0 { cov / var_b } else { 0.0 };
+        let beta = if slope > 0.0 {
+            slope
+        } else if mean_b > 0.0 && mean_t > 0.0 {
+            // pure-bandwidth fallback through the means
+            mean_t / mean_b
+        } else {
+            1.0
+        };
+        let alpha = (mean_t - beta * mean_b).max(0.0);
+        Link::new(1.0 / beta, alpha)
+    }
 }
 
 #[cfg(test)]
@@ -35,5 +69,32 @@ mod tests {
         let l = Link::new(1e9, 5e-6);
         assert!((l.message_time(1_000_000) - (5e-6 + 1e-3)).abs() < 1e-12);
         assert_eq!(l.serialize_time(0), 0.0);
+    }
+
+    #[test]
+    fn fit_recovers_alpha_beta() {
+        // Exact samples from a known link: α = 10µs, β = 1/(100 MB/s).
+        let truth = Link::new(1e8, 1e-5);
+        let samples: Vec<(usize, f64)> = [1 << 10, 1 << 16, 1 << 20, 1 << 22]
+            .iter()
+            .map(|&b| (b, truth.message_time(b)))
+            .collect();
+        let fit = Link::fit(&samples);
+        assert!((fit.latency_s - truth.latency_s).abs() / truth.latency_s < 1e-9);
+        assert!((fit.bandwidth_bps - truth.bandwidth_bps).abs() / truth.bandwidth_bps < 1e-9);
+    }
+
+    #[test]
+    fn fit_degenerate_inputs_fall_back() {
+        // One sample (zero variance): pure-bandwidth line through the point.
+        let one = Link::fit(&[(1 << 20, 0.01)]);
+        assert_eq!(one.latency_s, 0.0);
+        assert!((one.bandwidth_bps - (1 << 20) as f64 / 0.01).abs() < 1e-3);
+        // Negative slope (noise): same fallback, never a panic.
+        let noisy = Link::fit(&[(1000, 0.02), (1_000_000, 0.01)]);
+        assert!(noisy.bandwidth_bps > 0.0 && noisy.latency_s >= 0.0);
+        // Empty: the "unmeasured" sentinel link.
+        let empty = Link::fit(&[]);
+        assert_eq!((empty.bandwidth_bps, empty.latency_s), (1.0, 0.0));
     }
 }

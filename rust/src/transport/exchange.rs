@@ -37,7 +37,7 @@ use anyhow::{ensure, Result};
 
 use crate::collectives::{self, algo};
 use crate::config::CollectiveSpec;
-use crate::metrics::{FaultStats, WallClock, WireStats};
+use crate::metrics::{FaultStats, Occupancy, WallClock, WireStats};
 use crate::quant::{Codec, EncodeSession};
 use crate::util::rng::Xoshiro256;
 
@@ -59,6 +59,11 @@ pub struct DistStats {
     /// Fault/recovery events this rank observed (all-zero without a
     /// [`RecoveryOptions`]-enabled exchange).
     pub faults: FaultStats,
+    /// Where this rank's exchange wall time went: blocked on sockets, in
+    /// codec work, or idle. On the serial paths io + codec ≈ total (idle
+    /// ≈ 0 by construction); the pipelined paths shrink the io bucket —
+    /// the overlap the exchange actually achieved.
+    pub occupancy: Occupancy,
 }
 
 impl DistStats {
@@ -71,6 +76,7 @@ impl DistStats {
         self.encode_coords += other.encode_coords;
         self.decode_coords += other.decode_coords;
         self.faults.add(&other.faults);
+        self.occupancy.add(&other.occupancy);
     }
 }
 
@@ -246,6 +252,16 @@ impl DistRing {
     /// the repaired hop carries the exact bytes the fault destroyed, so a
     /// recovered exchange is bit-identical to a fault-free one (which is
     /// how `ring:ef` residuals survive a recovered step unchanged).
+    ///
+    /// With `pipeline`, each hop's outbound frame is queued to the peer's
+    /// writer thread instead of written on a scoped thread, so its bytes
+    /// ship while this thread decodes the incoming frame and re-encodes the
+    /// next one; a flush barrier after the last hop surfaces any deferred
+    /// write error. The hop inputs, session RNG draws, and accumulation
+    /// order are unchanged, so the result stays bit-identical to the serial
+    /// path. Mutually exclusive with `recovery` (the caller falls back to
+    /// serial): verdict rounds and resends must not interleave with queued
+    /// data frames on the same socket.
     #[allow(clippy::too_many_arguments)]
     fn run_recompress(
         &mut self,
@@ -256,6 +272,7 @@ impl DistRing {
         mean: &mut Vec<f32>,
         stats: &mut DistStats,
         recovery: bool,
+        pipeline: bool,
     ) -> Result<()> {
         let n = grad.len();
         self.ensure_layout(codec, n);
@@ -266,6 +283,7 @@ impl DistRing {
         let r = self.pos;
         let ef = self.error_feedback;
         let (next, prev) = self.neighbors();
+        debug_assert!(!(pipeline && recovery), "caller falls back to serial under recovery");
         let mut rec = algo::Recompress::default();
 
         // Hop-0 message: own segment (a first compression, not counted).
@@ -298,7 +316,11 @@ impl DistRing {
             let decode_ok;
             {
                 let tt = Instant::now();
-                let incoming = mesh.send_recv(next, prev, &self.inflight)?;
+                let incoming = if pipeline {
+                    mesh.send_recv_pipelined(next, prev, &self.inflight)?
+                } else {
+                    mesh.send_recv(next, prev, &self.inflight)?
+                };
                 stats.wall.transfer_s += tt.elapsed().as_secs_f64();
                 let td = Instant::now();
                 decode_ok = if recovery {
@@ -363,7 +385,11 @@ impl DistRing {
             let tt = Instant::now();
             {
                 let payload = &self.finals[lane_out];
-                let incoming = mesh.send_recv(next, prev, payload)?;
+                let incoming = if pipeline {
+                    mesh.send_recv_pipelined(next, prev, payload)?
+                } else {
+                    mesh.send_recv(next, prev, payload)?
+                };
                 self.finals[lane_in].clear();
                 self.finals[lane_in].extend_from_slice(incoming);
             }
@@ -405,6 +431,16 @@ impl DistRing {
                 )?;
                 stats.wall.transfer_s += tr.elapsed().as_secs_f64();
             }
+        }
+
+        if pipeline {
+            // Barrier: the last allgather frame may still be in a writer
+            // queue; surface any deferred write error before declaring the
+            // step done (and before any later non-pipelined traffic could
+            // interleave with it).
+            let tt = Instant::now();
+            mesh.flush_sends()?;
+            stats.wall.transfer_s += tt.elapsed().as_secs_f64();
         }
 
         // Same final decode as every in-process replica: lane order.
@@ -692,6 +728,74 @@ fn a2a_recover(
     Ok(())
 }
 
+/// Pipelined all-to-all merge: decode each peer frame as it drains off the
+/// socket instead of waiting for the receive-all barrier, overlapping codec
+/// work with the remaining wire reads.
+///
+/// Bit-parity with [`collectives::par_decode_mean`] holds by replicating
+/// its exact accumulation structure: messages in worker order are split
+/// into [`collectives::DECODE_MERGE_GROUPS`] contiguous groups, each group
+/// accumulates serially (ascending worker index, this rank's own message
+/// interleaved at index `rank`), and the group partials merge in group
+/// index order into a zeroed accumulator. Frames arrive in ascending peer
+/// order, so the on-arrival decode visits exactly that sequence.
+fn a2a_pipelined(
+    codec: &dyn Codec,
+    mesh: &mut Mesh,
+    msg: &[u8],
+    n: usize,
+    stats: &mut DistStats,
+) -> Result<Vec<f32>> {
+    let k = mesh.world;
+    let rank = mesh.rank;
+    let alpha = 1.0 / k as f32;
+    let groups = collectives::DECODE_MERGE_GROUPS.min(k);
+    let chunk = k.div_ceil(groups);
+    let intra = (codec.decode_threads().max(1) / groups).max(1);
+    // `chunks(chunk)` over k messages yields ceil(k/chunk) groups — which
+    // can be fewer than `groups` — so size the partial set to the real
+    // count and the merge sequence matches exactly.
+    let mut partials: Vec<Vec<f32>> = (0..k.div_ceil(chunk)).map(|_| vec![0.0f32; n]).collect();
+    let mut own_done = false;
+    let mut codec_s = 0.0f64;
+
+    let tx = Instant::now();
+    mesh.exchange_all_with(msg, |w, frame| {
+        // Keep the within-group order ascending: decode our own message at
+        // its slot between the peer frames.
+        if !own_done && rank < w {
+            let td = Instant::now();
+            codec.decode_add_threads(msg, alpha, &mut partials[rank / chunk], intra)?;
+            codec_s += td.elapsed().as_secs_f64();
+            own_done = true;
+        }
+        let td = Instant::now();
+        codec.decode_add_threads(frame, alpha, &mut partials[w / chunk], intra)?;
+        codec_s += td.elapsed().as_secs_f64();
+        Ok(())
+    })?;
+    let wall = tx.elapsed().as_secs_f64();
+    stats.hops += 1;
+    // The exchange interleaved transfer and decode; split its wall time so
+    // the WallClock phases still sum to the real elapsed total.
+    stats.wall.transfer_s += (wall - codec_s).max(0.0);
+    stats.wall.decode_s += codec_s.min(wall);
+
+    let td = Instant::now();
+    if !own_done {
+        codec.decode_add_threads(msg, alpha, &mut partials[rank / chunk], intra)?;
+    }
+    let mut mean = vec![0.0f32; n];
+    for p in &partials {
+        for (a, &x) in mean.iter_mut().zip(p) {
+            *a += x;
+        }
+    }
+    stats.wall.decode_s += td.elapsed().as_secs_f64();
+    stats.decode_coords += k * n;
+    Ok(mean)
+}
+
 /// Per-collective state behind [`SocketExchange`].
 enum Backend {
     AllToAll {
@@ -729,6 +833,9 @@ pub struct SocketExchange {
     backend: Backend,
     label: String,
     recovery: RecoveryOptions,
+    /// Pipelined exchange paths requested (see
+    /// [`with_pipelining`](Self::with_pipelining)).
+    pipeline: bool,
 }
 
 impl SocketExchange {
@@ -794,7 +901,34 @@ impl SocketExchange {
                 }
             }
         };
-        Ok(Self { codec, mesh, backend, label, recovery: RecoveryOptions::default() })
+        Ok(Self {
+            codec,
+            mesh,
+            backend,
+            label,
+            recovery: RecoveryOptions::default(),
+            pipeline: false,
+        })
+    }
+
+    /// Enable the pipelined exchange paths: the all-to-all decodes each
+    /// peer frame as it drains off the socket, and the recompressing ring
+    /// queues each hop's outbound frame to a per-peer writer thread so its
+    /// bytes ship while this thread decodes and re-encodes the next hop.
+    /// Bit-parity with the serial paths is preserved — same sessions, same
+    /// injector draws, same accumulation order.
+    ///
+    /// Arms with no pipelined path run serial transparently: `ring:raw`
+    /// and the hierarchical backend (store-and-forward / fan-in shapes),
+    /// and *any* arm while recovery is enabled — recovery's control rounds
+    /// and raw resends must not interleave with queued data frames on the
+    /// same socket.
+    pub fn with_pipelining(mut self, on: bool) -> Result<Self> {
+        if on {
+            self.mesh.enable_pipelining()?;
+        }
+        self.pipeline = on;
+        Ok(self)
     }
 
     /// Enable fault recovery (see [`RecoveryOptions`]). Errors for backends
@@ -840,9 +974,13 @@ impl SocketExchange {
     pub fn exchange(&mut self, grad: &[f32], mean: &mut Vec<f32>) -> Result<DistStats> {
         let n = grad.len();
         let mut stats = DistStats::default();
-        let SocketExchange { codec, mesh, backend, recovery, .. } = self;
+        let SocketExchange { codec, mesh, backend, recovery, pipeline, .. } = self;
         let codec: &dyn Codec = &**codec;
         let recovery = recovery.enabled;
+        // Recovery traffic (verdict rounds, raw resends) must not interleave
+        // with queued data frames: fall back to the serial paths, same bits.
+        let pipeline = *pipeline && !recovery;
+        let t_total = Instant::now();
 
         match backend {
             Backend::AllToAll { session, msg, rx, scratch } => {
@@ -856,31 +994,34 @@ impl SocketExchange {
                     a2a_recover(
                         codec, mesh, msg, rx, scratch, n, mean, &mut stats,
                     )?;
-                    return Ok(stats);
+                } else if pipeline {
+                    stats.wire.record_fanout(msg.len(), n, k.saturating_sub(1));
+                    *mean = a2a_pipelined(codec, mesh, msg, n, &mut stats)?;
+                } else {
+                    stats.wire.record_fanout(msg.len(), n, k.saturating_sub(1));
+
+                    let t = Instant::now();
+                    mesh.exchange_all(msg)?;
+                    stats.wall.transfer_s += t.elapsed().as_secs_f64();
+                    stats.hops += 1;
+
+                    // Same grouped merge as in-process: messages in worker
+                    // order, this rank's own bytes included at its own index.
+                    let t = Instant::now();
+                    let rank = mesh.rank;
+                    let msgs: Vec<&[u8]> = (0..k)
+                        .map(|w| if w == rank { msg.as_slice() } else { mesh.frame(w) })
+                        .collect();
+                    *mean = collectives::par_decode_mean(
+                        &msgs,
+                        n,
+                        1.0 / k as f32,
+                        codec.decode_threads(),
+                        |m, a, acc, th| codec.decode_add_threads(m, a, acc, th),
+                    )?;
+                    stats.wall.decode_s += t.elapsed().as_secs_f64();
+                    stats.decode_coords += k * n;
                 }
-                stats.wire.record_fanout(msg.len(), n, k.saturating_sub(1));
-
-                let t = Instant::now();
-                mesh.exchange_all(msg)?;
-                stats.wall.transfer_s += t.elapsed().as_secs_f64();
-                stats.hops += 1;
-
-                // Same grouped merge as in-process: messages in worker
-                // order, this rank's own bytes included at its own index.
-                let t = Instant::now();
-                let rank = mesh.rank;
-                let msgs: Vec<&[u8]> = (0..k)
-                    .map(|w| if w == rank { msg.as_slice() } else { mesh.frame(w) })
-                    .collect();
-                *mean = collectives::par_decode_mean(
-                    &msgs,
-                    n,
-                    1.0 / k as f32,
-                    codec.decode_threads(),
-                    |m, a, acc, th| codec.decode_add_threads(m, a, acc, th),
-                )?;
-                stats.wall.decode_s += t.elapsed().as_secs_f64();
-                stats.decode_coords += k * n;
             }
 
             Backend::Ring { ring } => {
@@ -892,7 +1033,9 @@ impl SocketExchange {
                 );
                 let alpha = 1.0 / mesh.world as f32;
                 if ring.recompress {
-                    ring.run_recompress(codec, mesh, grad, alpha, mean, &mut stats, recovery)?;
+                    ring.run_recompress(
+                        codec, mesh, grad, alpha, mean, &mut stats, recovery, pipeline,
+                    )?;
                 } else {
                     ring.run_raw(codec, mesh, grad, alpha, mean, &mut stats)?;
                 }
@@ -959,6 +1102,7 @@ impl SocketExchange {
                         mean,
                         &mut stats,
                         false,
+                        false,
                     )?;
 
                     // Phase 3 — fan the final frames out verbatim, lane
@@ -1014,6 +1158,14 @@ impl SocketExchange {
                 }
             }
         }
+        // Attribute this exchange's wall time: sockets vs codec, remainder
+        // idle. The phase timers run disjointly on this thread, so their
+        // sum never exceeds the enclosing total (idle clamps at zero).
+        stats.occupancy.record(
+            t_total.elapsed().as_secs_f64(),
+            stats.wall.transfer_s,
+            stats.wall.encode_s + stats.wall.decode_s,
+        );
         Ok(stats)
     }
 }

@@ -21,7 +21,13 @@
 //! * [`exchange`] — [`exchange::SocketExchange`], one rank's end of the
 //!   all-to-all / ring / hierarchical collectives, bit-identical to the
 //!   in-process implementations (same sessions, same segment layout, same
-//!   accumulation order), measuring real per-phase wall-clock.
+//!   accumulation order), measuring real per-phase wall-clock. With
+//!   pipelining enabled (`with_pipelining`), the all-to-all decodes peer
+//!   frames as they drain off the sockets and the recompressing ring ships
+//!   each hop's outbound frame from a per-peer writer thread while the main
+//!   thread decodes and re-encodes the next hop — same bits, overlapped
+//!   wall clock, with the io/codec/idle split surfaced as
+//!   [`crate::metrics::Occupancy`] in [`exchange::DistStats`].
 //! * [`trainer`] — [`trainer::train_rank`], one rank's synchronous SGD
 //!   loop producing the same `RunResult` the simnet trainer does, with the
 //!   measured [`crate::metrics::WallClock`] filled in next to the modeled

@@ -27,6 +27,7 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::os::unix::net::{UnixListener, UnixStream};
 #[cfg(unix)]
 use std::path::{Path, PathBuf};
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -54,6 +55,56 @@ fn inject_write(inj: Option<&FaultInjector>, w: &mut Conn, payload: &[u8]) -> Re
             frame::write_frame(w, &bad)
         }
     }
+}
+
+/// One instruction for a per-peer writer thread. The fault decision (and
+/// any injected delay) is drawn on the *calling* thread at enqueue time, so
+/// the injector's deterministic schedule is byte-identical between the
+/// serial and pipelined paths; the writer thread only applies it. `buf` is
+/// `None` for a drawn Drop — nothing hits the wire but the delay (if any)
+/// still elapses on the writer, matching the serial path's timing shape.
+enum PipeMsg {
+    Write { delay: Option<Duration>, buf: Option<Vec<u8>> },
+    /// Barrier: reply with the sticky first write error (or `None`) once
+    /// every previously queued frame has been written.
+    Flush(mpsc::Sender<Option<String>>),
+}
+
+/// A dedicated writer thread for one peer connection: owns a `try_clone` of
+/// the peer's write half and drains queued frames in FIFO order, so the
+/// calling thread can enqueue a hop's outbound frame and move straight on
+/// to decoding/re-encoding the next hop while the bytes ship.
+struct PipeWriter {
+    tx: mpsc::Sender<PipeMsg>,
+}
+
+fn spawn_pipe_writer(mut conn: Conn, peer: usize) -> PipeWriter {
+    let (tx, rx) = mpsc::channel::<PipeMsg>();
+    std::thread::spawn(move || {
+        // First write error is sticky: later frames are skipped (the
+        // connection is gone anyway) and every flush reports it.
+        let mut err: Option<String> = None;
+        for msg in rx {
+            match msg {
+                PipeMsg::Write { delay, buf } => {
+                    if let Some(d) = delay {
+                        std::thread::sleep(d);
+                    }
+                    let Some(buf) = buf else { continue };
+                    if err.is_none() {
+                        if let Err(e) = frame::write_frame(&mut conn, &buf) {
+                            err = Some(format!("sending pipelined frame to rank {peer}: {e:#}"));
+                        }
+                    }
+                }
+                PipeMsg::Flush(ack) => {
+                    let _ = ack.send(err.clone());
+                }
+            }
+        }
+        // Channel disconnected (mesh dropped or peer marked dead): exit.
+    });
+    PipeWriter { tx }
 }
 
 /// A dialable / bindable address for one side of the transport.
@@ -437,6 +488,9 @@ pub struct Mesh {
     /// Seeded fault schedule applied to outbound data frames (tests and
     /// `--scenario` runs); `None` in production paths.
     injector: Option<FaultInjector>,
+    /// Per-peer writer threads for the pipelined exchange paths; empty
+    /// until [`enable_pipelining`](Self::enable_pipelining).
+    pipes: Vec<Option<PipeWriter>>,
 }
 
 impl Mesh {
@@ -450,7 +504,13 @@ impl Mesh {
             cfg.world
         );
         if cfg.world == 1 {
-            return Ok(Mesh { rank: 0, world: 1, peers: vec![None], injector: None });
+            return Ok(Mesh {
+                rank: 0,
+                world: 1,
+                peers: vec![None],
+                injector: None,
+                pipes: Vec::new(),
+            });
         }
 
         let listener = Listener::bind(&base.listener_for_rank(cfg.rank)?)?;
@@ -538,7 +598,114 @@ impl Mesh {
             peers[r] = Some(Peer::new(c)?);
         }
 
-        Ok(Mesh { rank: cfg.rank, world: cfg.world, peers, injector: None })
+        Ok(Mesh { rank: cfg.rank, world: cfg.world, peers, injector: None, pipes: Vec::new() })
+    }
+
+    /// Spawn one dedicated writer thread per live peer (idempotent). The
+    /// pipelined send paths ([`send_enqueue`](Self::send_enqueue),
+    /// [`send_recv_pipelined`](Self::send_recv_pipelined)) then queue
+    /// outbound data frames to these threads instead of blocking the
+    /// caller, which is what lets a ring hop's bytes ship while the caller
+    /// decodes and re-encodes the next hop.
+    ///
+    /// Discipline: a queued frame and any *other* write to the same peer
+    /// (control round, raw resend, scoped-thread exchange) would interleave
+    /// at byte level on the socket, so callers must
+    /// [`flush_sends`](Self::flush_sends) before mixing paths — the
+    /// exchange layer flushes at the end of every pipelined collective and
+    /// falls back to the serial path whenever recovery traffic is possible.
+    pub fn enable_pipelining(&mut self) -> Result<()> {
+        if !self.pipes.is_empty() {
+            return Ok(());
+        }
+        let mut pipes: Vec<Option<PipeWriter>> = (0..self.world).map(|_| None).collect();
+        for (r, slot) in self.peers.iter().enumerate() {
+            if let Some(p) = slot {
+                pipes[r] = Some(spawn_pipe_writer(p.writer.try_clone()?, r));
+            }
+        }
+        self.pipes = pipes;
+        Ok(())
+    }
+
+    /// Whether [`enable_pipelining`](Self::enable_pipelining) has run.
+    pub fn pipelined(&self) -> bool {
+        !self.pipes.is_empty()
+    }
+
+    /// Queue one data frame to `to`'s writer thread and return immediately.
+    /// The fault decision is drawn here, on the calling thread, in exactly
+    /// the order the serial path would draw it.
+    pub fn send_enqueue(&mut self, to: usize, payload: &[u8]) -> Result<()> {
+        let (delay, action) = match self.injector.as_ref() {
+            Some(inj) => (inj.delay(), inj.next_action()),
+            None => (None, FaultAction::Deliver),
+        };
+        let buf = match action {
+            FaultAction::Deliver => Some(payload.to_vec()),
+            FaultAction::Drop => None,
+            FaultAction::Corrupt => {
+                let mut bad = payload.to_vec();
+                FaultInjector::damage(&mut bad);
+                Some(bad)
+            }
+        };
+        let pipe = self
+            .pipes
+            .get(to)
+            .and_then(|p| p.as_ref())
+            .ok_or_else(|| anyhow!("no pipelined writer for rank {to}"))?;
+        pipe.tx
+            .send(PipeMsg::Write { delay, buf })
+            .map_err(|_| anyhow!("pipelined writer for rank {to} exited"))
+    }
+
+    /// Barrier: wait until every queued frame on every writer thread has
+    /// hit its socket, surfacing the first write error. Must run before any
+    /// non-pipelined write to a peer (see
+    /// [`enable_pipelining`](Self::enable_pipelining)).
+    pub fn flush_sends(&mut self) -> Result<()> {
+        let mut first: Option<anyhow::Error> = None;
+        for (r, slot) in self.pipes.iter().enumerate() {
+            let Some(pipe) = slot else { continue };
+            let (ack_tx, ack_rx) = mpsc::channel();
+            if pipe.tx.send(PipeMsg::Flush(ack_tx)).is_err() {
+                first.get_or_insert(anyhow!("pipelined writer for rank {r} exited"));
+                continue;
+            }
+            match ack_rx.recv() {
+                Ok(None) => {}
+                Ok(Some(e)) => {
+                    first.get_or_insert(anyhow!(e));
+                }
+                Err(_) => {
+                    first.get_or_insert(anyhow!("pipelined writer for rank {r} exited"));
+                }
+            }
+        }
+        match first {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Pipelined ring hop: queue `payload` to `to`'s writer thread, then
+    /// block only on the read from `from`. Falls back to the serial
+    /// [`send_recv`](Self::send_recv) when pipelining is not enabled.
+    /// Deadlock-free for the same reason the serial hop is: writes never
+    /// wait on reads (they queue), so the global wait graph stays acyclic.
+    pub fn send_recv_pipelined(
+        &mut self,
+        to: usize,
+        from: usize,
+        payload: &[u8],
+    ) -> Result<&[u8]> {
+        if self.pipes.is_empty() {
+            return self.send_recv(to, from, payload);
+        }
+        ensure!(to != self.rank && from != self.rank, "send_recv cannot target self");
+        self.send_enqueue(to, payload)?;
+        self.recv_from(from)
     }
 
     /// Install a seeded fault injector on this rank's outbound data frames.
@@ -570,6 +737,11 @@ impl Mesh {
     pub fn mark_dead(&mut self, rank: usize) {
         if rank != self.rank {
             if let Some(slot) = self.peers.get_mut(rank) {
+                *slot = None;
+            }
+            // Dropping the sender disconnects the channel; the writer
+            // thread drains and exits on its own.
+            if let Some(slot) = self.pipes.get_mut(rank) {
                 *slot = None;
             }
         }
@@ -626,6 +798,21 @@ impl Mesh {
     /// rank order; reads drain on the calling thread in the same order.
     /// Afterwards each peer's frame is available via [`frame`](Self::frame).
     pub fn exchange_all(&mut self, payload: &[u8]) -> Result<()> {
+        self.exchange_all_with(payload, |_, _| Ok(()))
+    }
+
+    /// [`exchange_all`](Self::exchange_all) with decode-on-arrival: as each
+    /// peer's frame lands (ascending rank order on the calling thread),
+    /// `on_frame(rank, bytes)` consumes it before the next read blocks —
+    /// the kernel buffers later arrivals in the meantime, so codec work
+    /// overlaps the remaining wire I/O without perturbing the deterministic
+    /// consumption order. An `on_frame` error aborts the step after the
+    /// sender thread is joined.
+    pub fn exchange_all_with(
+        &mut self,
+        payload: &[u8],
+        mut on_frame: impl FnMut(usize, &[u8]) -> Result<()>,
+    ) -> Result<()> {
         if self.world == 1 {
             return Ok(());
         }
@@ -649,7 +836,12 @@ impl Mesh {
             let mut recv_err: Option<anyhow::Error> = None;
             for (r, conn, rbuf) in readers.iter_mut() {
                 match rbuf.read_frame(&mut **conn) {
-                    Ok(Some(_)) => {}
+                    Ok(Some(f)) => {
+                        if let Err(e) = on_frame(*r, f) {
+                            recv_err = Some(e.context(format!("consuming frame from rank {r}")));
+                            break;
+                        }
+                    }
                     Ok(None) => {
                         recv_err = Some(anyhow!("rank {r} closed mid-exchange"));
                         break;

@@ -63,6 +63,11 @@ pub struct DistTrainConfig {
     /// before sending anything — so every survivor times this rank out in
     /// the same round and their contributor sets agree.
     pub die_at_step: Option<usize>,
+    /// Pipelined exchange paths (`--overlap on`): decode-on-arrival
+    /// all-to-all, writer-thread ring hops. Bit-identical results; arms
+    /// without a pipelined path (and recovery-enabled runs) fall back to
+    /// serial transparently.
+    pub pipeline: bool,
 }
 
 impl DistTrainConfig {
@@ -81,6 +86,7 @@ impl DistTrainConfig {
             cost: CostModel::k80(),
             recovery: RecoveryOptions::default(),
             die_at_step: None,
+            pipeline: false,
         }
     }
 }
@@ -98,7 +104,8 @@ pub fn train_rank(
     let codec = cfg.compressor.codec();
     let mut exchange =
         SocketExchange::new(&cfg.collective, codec.clone(), mesh, cfg.seed ^ 0xF00D)?
-            .with_recovery(cfg.recovery)?;
+            .with_recovery(cfg.recovery)?
+            .with_pipelining(cfg.pipeline)?;
 
     // Identical init on every rank: same seed ⇒ same stream ⇒ same bits.
     let mut init_rng = Xoshiro256::stream(cfg.seed, 0x1417);

@@ -1,0 +1,142 @@
+//! Properties of the §5-style overlap model across the full arm × topology
+//! matrix.
+//!
+//! The schedule-derived overlapped epoch time
+//! ([`EpochSim::epoch_time_overlapped`]) must behave like a *pipeline*, not
+//! a fudge factor, for every compressor and collective the simulator
+//! supports:
+//!
+//! * **Bounds** — overlap can hide communication behind computation but
+//!   cannot invent time: `max(comp, comm) ≤ overlapped(φ) ≤ serial` for all
+//!   φ ∈ [0, 1].
+//! * **Monotonicity** — more overlap never hurts: φ ↦ overlapped(φ) is
+//!   non-increasing.
+//! * **Exact serial endpoint** — φ = 0 reproduces [`EpochSim::epoch_time`]
+//!   bit for bit (`to_bits`), so reports that omit `--overlap-fraction`
+//!   are untouched by this feature.
+
+use qsgd::config::CollectiveSpec;
+use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm, EpochSim};
+use qsgd::models::{zoo, CostModel, NetworkShape};
+use qsgd::simnet::{Preset, SimNet};
+
+const PHI_GRID: [f64; 6] = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];
+
+fn arms() -> Vec<EpochArm> {
+    let collectives = [
+        CollectiveSpec::AllToAll,
+        CollectiveSpec::ring(),
+        CollectiveSpec::ring_ef(),
+        CollectiveSpec::parse("ring:raw").unwrap(),
+        CollectiveSpec::hierarchical(4),
+    ];
+    let mut arms = vec![EpochArm::fp32(), EpochArm::fp32_allreduce()];
+    for c in collectives {
+        arms.push(EpochArm::qsgd(4, 512).with_collective(c.clone()));
+        arms.push(EpochArm::nuqsgd(4, 512).with_collective(c));
+    }
+    arms
+}
+
+fn networks() -> Vec<NetworkShape> {
+    vec![zoo::alexnet(), zoo::resnet50(), zoo::lstm_an4()]
+}
+
+fn sim(net: &NetworkShape, gpus: usize, arm: &EpochArm) -> EpochSim {
+    let simnet = SimNet::preset(gpus, Preset::K80Pcie);
+    simulate_epoch(net, gpus, arm, &simnet, &CostModel::k80(), 1, 0)
+}
+
+/// Relative slack for the floating-point comparisons: the schedule folds
+/// hundreds of per-tensor terms, so exact ordering can wobble in the last
+/// ulp even though the model is monotone.
+fn eps(scale: f64) -> f64 {
+    1e-9 * scale.max(1.0)
+}
+
+#[test]
+fn overlapped_time_is_bounded_by_serial_and_critical_path() {
+    for net in networks() {
+        for gpus in [4usize, 16] {
+            for arm in arms() {
+                let r = sim(&net, gpus, &arm);
+                assert!(!r.schedule.is_empty(), "{}: empty schedule", net.name);
+                let serial = r.epoch_time();
+                let comp = r.breakdown.compute.secs();
+                let comm = r.breakdown.communication().secs();
+                let floor = comp.max(comm);
+                for phi in PHI_GRID {
+                    let t = r.epoch_time_overlapped(phi);
+                    let tag = format!("{} {}×{} {} φ={phi}", net.name, gpus, r.arm, r.collective);
+                    assert!(t <= serial + eps(serial), "{tag}: {t} above serial {serial}");
+                    assert!(t >= floor - eps(serial), "{tag}: {t} below floor {floor}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_time_is_monotone_in_fraction() {
+    for net in networks() {
+        for arm in arms() {
+            let r = sim(&net, 8, &arm);
+            let serial = r.epoch_time();
+            let mut prev = f64::INFINITY;
+            for phi in PHI_GRID {
+                let t = r.epoch_time_overlapped(phi);
+                assert!(
+                    t <= prev + eps(serial),
+                    "{} {} {}: overlapped({phi}) = {t} above previous {prev}",
+                    net.name,
+                    r.arm,
+                    r.collective
+                );
+                prev = t;
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_overlap_reproduces_serial_epoch_time_exactly() {
+    // Not "close": bit-identical. φ = 0 must take the same code path sums
+    // as the stacked-bar total so existing goldens and reports are inert.
+    for net in networks() {
+        for gpus in [2usize, 8] {
+            for arm in arms() {
+                let r = sim(&net, gpus, &arm);
+                assert_eq!(
+                    r.epoch_time_overlapped(0.0).to_bits(),
+                    r.epoch_time().to_bits(),
+                    "{} {}×{} {}: φ=0 diverged from epoch_time()",
+                    net.name,
+                    gpus,
+                    r.arm,
+                    r.collective
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_overlap_helps_a_comm_bound_arm_and_respects_the_floor() {
+    // 16-GPU fp32 AlexNet is >70% communication: full per-layer bucket
+    // readiness must shrink the epoch, and a compute-bound arm (ResNet-50,
+    // 4-bit ring on 4 GPUs) must pin near max(comp, comm) rather than dip
+    // below it.
+    let comm_bound = sim(&zoo::alexnet(), 16, &EpochArm::fp32());
+    assert!(
+        comm_bound.epoch_time_overlapped(1.0) < comm_bound.epoch_time(),
+        "full overlap should shrink a comm-bound epoch"
+    );
+
+    let compute_bound =
+        sim(&zoo::resnet50(), 4, &EpochArm::qsgd(4, 512).with_collective(CollectiveSpec::ring()));
+    let comp = compute_bound.breakdown.compute.secs();
+    let comm = compute_bound.breakdown.communication().secs();
+    assert!(comp > comm, "expected a compute-bound configuration");
+    let full = compute_bound.epoch_time_overlapped(1.0);
+    assert!(full >= comp - eps(comp), "overlap must not hide computation: {full} < {comp}");
+}

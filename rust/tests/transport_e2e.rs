@@ -285,6 +285,62 @@ fn uds_a2a_and_ring_match_inprocess_golden() {
 }
 
 // ---------------------------------------------------------------------------
+// Pipelined exchange (--overlap on): same bits as the serial goldens
+// ---------------------------------------------------------------------------
+
+/// Like [`check_arm`] but with the pipelined exchange paths enabled. The
+/// golden is the *same* in-process serial mean: decode-on-arrival and the
+/// writer-thread ring hops must not change a single bit.
+fn check_arm_overlap(tag: &str, transport: &str, collective: &str, compressor: &str) {
+    let spec = CollectiveSpec::parse(collective).unwrap();
+    let comp = CompressorSpec::parse(compressor).unwrap();
+    let want = golden_mean(&spec, &comp, WORLD, N, STEPS);
+    let extra = |_: usize| vec!["--overlap".to_string(), "on".to_string()];
+    let got: Vec<Vec<f32>> =
+        run_group_with(tag, transport, collective, compressor, &extra, &[])
+            .into_iter()
+            .flatten()
+            .collect();
+    assert_eq!(got.len(), WORLD);
+    assert_bit_identical(tag, &got, &want);
+}
+
+#[test]
+fn tcp_overlap_a2a_matches_serial_golden() {
+    check_arm_overlap("tcp-ov-a2a-qsgd4", &format!("tcp:{}", free_tcp_addr()), "a2a", "qsgd4");
+    check_arm_overlap(
+        "tcp-ov-a2a-nuqsgd4",
+        &format!("tcp:{}", free_tcp_addr()),
+        "a2a",
+        "nuqsgd4",
+    );
+}
+
+#[test]
+fn tcp_overlap_ring_matches_serial_golden() {
+    check_arm_overlap("tcp-ov-ring-qsgd4", &format!("tcp:{}", free_tcp_addr()), "ring", "qsgd4");
+    check_arm_overlap(
+        "tcp-ov-ring-nuqsgd4",
+        &format!("tcp:{}", free_tcp_addr()),
+        "ring",
+        "nuqsgd4",
+    );
+}
+
+#[test]
+fn tcp_overlap_ring_ef_matches_serial_golden() {
+    // Error-feedback residuals persist across hops and steps; pipelining
+    // must leave the residual trajectory untouched too.
+    check_arm_overlap("tcp-ov-ring-ef-qsgd4", &format!("tcp:{}", free_tcp_addr()), "ring:ef", "qsgd4");
+    check_arm_overlap(
+        "tcp-ov-ring-ef-nuqsgd4",
+        &format!("tcp:{}", free_tcp_addr()),
+        "ring:ef",
+        "nuqsgd4",
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Churn and corruption: the recovery protocol across real processes
 // ---------------------------------------------------------------------------
 
@@ -356,6 +412,39 @@ fn tcp_a2a_corrupt_frames_recover_to_fault_free_golden() {
     );
     let means: Vec<Vec<f32>> = got.into_iter().flatten().collect();
     assert_bit_identical("tcp-a2a-corrupt", &means, &want);
+}
+
+#[test]
+fn tcp_a2a_overlap_with_recovery_falls_back_serial_and_recovers() {
+    // `--overlap on --recover` together: recovery needs the serial re-request
+    // protocol, so the exchange transparently ignores the pipelined paths.
+    // The run must still repair rank 1's corrupted frames down to the
+    // fault-free golden bits — proving the fallback really is the serial path.
+    let spec = CollectiveSpec::parse("a2a").unwrap();
+    let comp = CompressorSpec::parse("qsgd4").unwrap();
+    let want = golden_mean(&spec, &comp, WORLD, N, STEPS);
+    let extra = |r: usize| -> Vec<String> {
+        let mut v = vec!["--recover".to_string(), "--overlap".to_string(), "on".to_string()];
+        if r == 1 {
+            v.extend([
+                "--corrupt-prob".to_string(),
+                "1.0".to_string(),
+                "--max-faults".to_string(),
+                "2".to_string(),
+            ]);
+        }
+        v
+    };
+    let got = run_group_with(
+        "tcp-ov-a2a-corrupt",
+        &format!("tcp:{}", free_tcp_addr()),
+        "a2a",
+        "qsgd4",
+        &extra,
+        &[],
+    );
+    let means: Vec<Vec<f32>> = got.into_iter().flatten().collect();
+    assert_bit_identical("tcp-ov-a2a-corrupt", &means, &want);
 }
 
 // ---------------------------------------------------------------------------
