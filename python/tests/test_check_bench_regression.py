@@ -128,3 +128,59 @@ def test_discovery_compares_every_bench(tmp_path):
 
 def test_discovery_with_no_results_is_hard_failure(tmp_path):
     assert run_main(["--results-dir", str(tmp_path)]) == 2
+
+
+def rate_row(section, name, per_sec):
+    return {"section": section, "name": name,
+            "per_sec": per_sec, "direction": "higher"}
+
+
+def test_throughput_rows_invert_the_ratio(tmp_path):
+    """direction:higher rows regress when throughput DROPS, not rises."""
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    write(base, report([rate_row("traffic", "msgs/sec", 500.0)]))
+
+    # Far above the floor: obviously fine (a latency-style new/base ratio
+    # of 100x would wrongly flag this).
+    write(new, report([rate_row("traffic", "msgs/sec", 50000.0)]))
+    assert run_main([str(new), str(base)]) == 0
+
+    # Just inside the floor: 500/450 = 1.11x < 1.25x.
+    write(new, report([rate_row("traffic", "msgs/sec", 450.0)]))
+    assert run_main([str(new), str(base)]) == 0
+
+    # Collapsed throughput regresses: 500/100 = 5x.
+    write(new, report([rate_row("traffic", "msgs/sec", 100.0)]))
+    assert run_main([str(new), str(base)]) == 1
+
+    # Zero throughput must regress, not divide-by-zero crash.
+    write(new, report([rate_row("traffic", "msgs/sec", 0.0)]))
+    assert run_main([str(new), str(base)]) == 1
+
+
+def test_mixed_direction_report_checks_each_row_its_own_way(tmp_path):
+    """One report can mix latency ceilings and throughput floors."""
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    write(base, report([row("push", "decode", 100.0),
+                        rate_row("traffic", "msgs/sec", 500.0)]))
+
+    # Both healthy: latency under ceiling, throughput over floor.
+    write(new, report([row("push", "decode", 80.0),
+                       rate_row("traffic", "msgs/sec", 9000.0)]))
+    assert run_main([str(new), str(base)]) == 0
+
+    # Latency fine but throughput collapsed — the rate row alone fails it.
+    write(new, report([row("push", "decode", 80.0),
+                       rate_row("traffic", "msgs/sec", 50.0)]))
+    assert run_main([str(new), str(base)]) == 1
+
+
+def test_unknown_direction_is_malformed(tmp_path):
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    write(base, report([row("enc", "hot", 1.0)]))
+    write(new, report([{"section": "s", "name": "n",
+                        "per_sec": 5.0, "direction": "sideways"}]))
+    assert run_main([str(new), str(base)]) == 2

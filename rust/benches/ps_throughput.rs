@@ -1,0 +1,114 @@
+//! Parameter-server service benchmarks: per-coordinate push decode-add and
+//! pull re-encode service times on a single shard, then a sustained
+//! in-process heavy-traffic run (Zipf clients, mixed push/pull, bursty
+//! open-loop arrivals) reported as msgs/sec with p50/p99 service-latency
+//! percentiles from the server's own metrics.
+//!
+//! The throughput row is the repo's first *higher-is-better* bench result:
+//! it is emitted via `Report::add_rate`, carries `"direction": "higher"`,
+//! and the regression check inverts its ratio accordingly — the committed
+//! baseline is a conservative floor, not a ceiling.
+//!
+//! Run: `cargo bench --bench ps_throughput`.
+
+use std::sync::Arc;
+
+use qsgd::bench::{section, Bench, Report};
+use qsgd::coordinator::CompressorSpec;
+use qsgd::ps::{run_traffic, Service, ServiceConfig, ShardMap, Target, TrafficConfig};
+use qsgd::util::rng::{self, Xoshiro256};
+use qsgd::util::stats;
+
+/// Headline shape: 256Ki coordinates across 4 shards (64Ki per shard, 128
+/// QSGD buckets each at the paper's 512 bucket size).
+const DIM: usize = 1 << 18;
+const SHARDS: usize = 4;
+
+fn service(queue_depth: usize) -> Service {
+    let cfg = ServiceConfig {
+        compressor: CompressorSpec::qsgd_4bit(),
+        lr: 0.05,
+        seed: 11,
+        staleness: None,
+        queue_depth,
+    };
+    Service::new(ShardMap::uniform(DIM, SHARDS).unwrap(), &cfg)
+}
+
+fn main() {
+    let b = Bench::quick();
+    let mut report = Report::new("ps_throughput");
+    let shard_len = DIM / SHARDS;
+
+    // -- single-shard service paths ----------------------------------------
+    section("shard service paths (64Ki-coord shard, qsgd 4bit/512)");
+    {
+        let svc = service(64);
+        let codec = svc.codec().clone();
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(3), shard_len);
+        let frame = codec.session(Xoshiro256::from_u64(4)).compress(&grad);
+
+        // Push: fused decode-add straight into the shard slice. Repeated
+        // application of one frame drifts the parameters, which is fine —
+        // decode cost depends on the frame, not the accumulator values.
+        let s = b.run("push decode-add 64Ki-coord shard", || {
+            svc.push(0, u64::MAX, &frame).expect("push")
+        });
+        s.report();
+        report.add("push", &s, Some(shard_len as f64));
+
+        // Pull: versioned-snapshot re-encode through a per-connection
+        // session (version is stable here, so the snapshot copy is paid
+        // once and the steady state measures pure encode).
+        let mut sess = codec.session(Xoshiro256::from_u64(5));
+        let mut out = Vec::new();
+        let s = b.run("pull re-encode 64Ki-coord shard", || {
+            svc.pull_encoded(1, sess.as_mut(), &mut out).expect("pull");
+            out.len()
+        });
+        s.report();
+        report.add("pull", &s, Some(shard_len as f64));
+        report.add_metric("pull", "encoded frame bytes", frame.len() as f64);
+    }
+
+    // -- sustained heavy-traffic run ---------------------------------------
+    section("heavy traffic (in-process, 16 clients / 4 threads, zipf 1.0)");
+    {
+        let svc = Arc::new(service(256));
+        let tcfg = TrafficConfig {
+            clients: 16,
+            threads: 4,
+            ops: 20_000,
+            push_fraction: 0.8,
+            zipf: 1.0,
+            burst: 16,
+            seed: 2,
+        };
+        let rep = run_traffic(&svc, Target::InProcess, &tcfg).expect("traffic run");
+        // Op conservation is a hard invariant, not a perf number: every op
+        // must have drawn exactly one response.
+        assert_eq!(rep.ops, tcfg.ops as u64, "traffic run dropped ops");
+        assert_eq!(
+            rep.pushed_ok + rep.pulls_ok + rep.stale + rep.shed,
+            rep.ops,
+            "op accounting does not conserve"
+        );
+        println!("{}", rep.summary());
+        let m = svc.metrics();
+        println!("service: {}", m.summary());
+
+        report.add_rate("traffic", "sustained msgs/sec", rep.msgs_per_sec());
+        report.add_metric("traffic", "push-decode p50 ns", m.push_decode.p50_ns());
+        report.add_metric("traffic", "push-decode p99 ns", m.push_decode.p99_ns());
+        report.add_metric("traffic", "pull-encode p99 ns", m.pull_encode.p99_ns());
+        report.add_metric("traffic", "shed responses", m.shed as f64);
+        report.add_metric("traffic", "stale rejections", m.stale_rejected as f64);
+        println!(
+            "push-decode p99 {}  pull-encode p99 {}",
+            stats::fmt_duration(m.push_decode.p99_ns() / 1e9),
+            stats::fmt_duration(m.pull_encode.p99_ns() / 1e9),
+        );
+    }
+
+    report.write("BENCH_ps_throughput.json").expect("write bench json");
+}

@@ -152,6 +152,19 @@ impl Report {
         self.results.push(row);
     }
 
+    /// Record a sustained-rate result (ops/sec, msgs/sec). Rate rows carry
+    /// `"direction": "higher"` so the regression check knows bigger is
+    /// better and inverts its ratio (a drop in throughput regresses, a rise
+    /// never does). Timed rows keep the implicit lower-is-better default.
+    pub fn add_rate(&mut self, section: &str, name: &str, per_sec: f64) {
+        self.results.push(format!(
+            "{{\"section\": {}, \"name\": {}, \"per_sec\": {}, \"direction\": \"higher\"}}",
+            json_str(section),
+            json_str(name),
+            json_num(per_sec)
+        ));
+    }
+
     /// Record a scalar metric (alloc count, speedup, message bytes, …).
     pub fn add_metric(&mut self, section: &str, name: &str, value: f64) {
         self.metrics.push(format!(
@@ -252,6 +265,19 @@ mod tests {
         let metrics = doc.get("metrics").unwrap().as_arr().unwrap();
         assert_eq!(metrics.len(), 2);
         assert_eq!(metrics[1].get("value").unwrap(), &crate::util::json::Json::Null);
+    }
+
+    #[test]
+    fn rate_rows_carry_higher_direction() {
+        let mut rep = Report::new("unit");
+        rep.add_rate("ps", "sustained msgs/sec", 12345.5);
+        let doc = crate::util::json::parse(&rep.to_json()).expect("report must parse");
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        let row = &results[0];
+        assert_eq!(row.get("per_sec").unwrap().as_f64(), Some(12345.5));
+        assert_eq!(row.get("direction").unwrap().as_str().unwrap(), "higher");
+        assert!(row.get("median_ns").is_none(), "rate rows carry no latency fields");
     }
 
     #[test]

@@ -15,6 +15,13 @@
 //! ([`crate::util::par`]). Per-worker RNG streams make the wire bytes
 //! bit-identical to encoding at pop time, and arrival order, staleness and
 //! the applied updates are unchanged.
+//!
+//! This loop is also the **S=1 reference oracle** for the sharded
+//! parameter-server service: [`crate::ps::run_async`] drives the same event
+//! schedule through [`crate::ps::Service`] and must stay bit-identical to
+//! this implementation at one shard (seeded golden + live comparison in
+//! `rust/tests/ps_service.rs`). Change the RNG stream derivations or the
+//! event ordering here and that parity — and the pinned golden — breaks.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

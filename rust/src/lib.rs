@@ -7,8 +7,9 @@
 //!   ([`coding`]), a simulated multi-GPU interconnect ([`simnet`]), collective
 //!   communication patterns ([`collectives`]), a real multi-process socket
 //!   transport running the same collectives across OS processes ([`transport`]),
-//!   and the synchronous / asynchronous / variance-reduced training loops
-//!   ([`coordinator`]).
+//!   the synchronous / asynchronous / variance-reduced training loops
+//!   ([`coordinator`]), and a sharded quantized parameter-server service with
+//!   admission control and a heavy-traffic client harness ([`ps`]).
 //! * **Layer 2 (JAX, build-time)** — model forward/backward graphs, AOT-lowered to
 //!   HLO text and executed from Rust via PJRT ([`runtime`]).
 //! * **Layer 1 (Pallas, build-time)** — the stochastic-quantization kernel, fused
@@ -26,6 +27,7 @@ pub mod data;
 pub mod metrics;
 pub mod models;
 pub mod optim;
+pub mod ps;
 pub mod quant;
 pub mod runtime;
 pub mod simnet;

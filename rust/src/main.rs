@@ -6,6 +6,8 @@
 //!   simulate                   — epoch-time breakdown for a paper network
 //!   svrg                       — QSVRG linear-convergence run
 //!   async                      — asynchronous parameter-server run
+//!   ps-serve                   — sharded parameter-server service over sockets
+//!   ps-bench                   — heavy-traffic client harness against the service
 //!   validate                   — quick Lemma 3.1 / Thm 3.2 empirical checks
 
 use std::time::{Duration, Instant};
@@ -38,6 +40,8 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "svrg" => cmd_svrg(&args),
         "async" => cmd_async(&args),
+        "ps-serve" => cmd_ps_serve(&args),
+        "ps-bench" => cmd_ps_bench(&args),
         "validate" => cmd_validate(&args),
         // Internal: one rank of a raw collective exchange over sockets —
         // spawned by the transport_e2e determinism goldens.
@@ -74,7 +78,13 @@ fn print_help() {
                   --gpus K [--preset k80|10gbe|nvlink] [--collective <...>]\n\
                   [--scenario <...>] [--overlap-fraction F]\n\
          svrg     --processors K --epochs P [--exact]\n\
-         async    --workers K --updates N --compressor <...>\n\
+         async    --workers K --updates N --compressor <...> [--shards S]\n\
+         ps-serve --transport <tcp:HOST:PORT|uds:PATH> --shards S --dim N \\\n\
+                  [--compressor <...>] [--lr F] [--seed S] [--staleness T]\n\
+                  [--queue-depth D] [--duration-s F]\n\
+         ps-bench --shards S --dim N --clients N --threads M --ops N \\\n\
+                  [--push-pull F] [--zipf T] [--burst B] [--staleness T]\n\
+                  [--queue-depth D] [--transport sim|tcp:...|uds:PATH]\n\
          validate [--n N] [--trials T]"
     );
 }
@@ -645,8 +655,17 @@ fn cmd_async(args: &Args) -> Result<()> {
     };
     let p = QuadraticProblem::generate(512, 256, 1e-3, 0.05, cfg.seed);
     let mut src = ConvexSource::new(p, 8, cfg.seed);
-    let r = async_ps::run(&cfg, &mut src)?;
-    println!("async QSGD: loss {}", r.loss.sparkline(12));
+    // S=1 runs the legacy single-loop server; S>1 routes the same event
+    // schedule through the sharded service (bit-identical at S=1, pinned by
+    // rust/tests/ps_service.rs).
+    let shards = args.usize("shards", 1);
+    let r = if shards <= 1 {
+        async_ps::run(&cfg, &mut src)?
+    } else {
+        qsgd::ps::run_async(&cfg, &mut src, shards)?
+    };
+    let plural = if shards == 1 { "" } else { "s" };
+    println!("async QSGD ({shards} shard{plural}): loss {}", r.loss.sparkline(12));
     println!(
         "staleness max={} mean={:.2}, vtime {}, payload {}",
         r.max_staleness,
@@ -654,6 +673,71 @@ fn cmd_async(args: &Args) -> Result<()> {
         stats::fmt_duration(r.vtime),
         stats::fmt_bytes(r.wire.payload_bytes as f64)
     );
+    Ok(())
+}
+
+/// Shared `ps-serve` / `ps-bench` service construction: a uniform shard map
+/// over `--dim` coordinates with the service knobs from the flag set.
+fn ps_service_from_args(args: &Args) -> Result<qsgd::ps::Service> {
+    let dim = args.usize("dim", 1 << 16);
+    let shards = args.usize("shards", 4);
+    let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
+    let staleness = match args.get("staleness") {
+        Some(s) => Some(s.parse::<u64>().context("parsing --staleness")?),
+        None => None,
+    };
+    let cfg = qsgd::ps::ServiceConfig {
+        compressor: spec,
+        lr: args.f32("lr", 0.05),
+        seed: args.u64("seed", 0),
+        staleness,
+        queue_depth: args.usize("queue-depth", 64),
+    };
+    let map = qsgd::ps::ShardMap::uniform(dim, shards)?;
+    Ok(qsgd::ps::Service::new(map, &cfg))
+}
+
+fn cmd_ps_serve(args: &Args) -> Result<()> {
+    let transport = TransportSpec::parse(&args.string("transport", "uds:/tmp/qsgd-ps.sock"))?;
+    let ep = transport_endpoint(&transport)?;
+    let service = std::sync::Arc::new(ps_service_from_args(args)?);
+    let handle = qsgd::ps::serve(&ep, service.clone())?;
+    let dur = args.f64("duration-s", 10.0);
+    println!(
+        "ps-serve: {} shards × {} coords on {} for {dur:.1}s",
+        service.num_shards(),
+        service.map().total_len(),
+        handle.endpoint().describe()
+    );
+    std::thread::sleep(Duration::from_secs_f64(dur.max(0.0)));
+    handle.shutdown();
+    println!("service: {}", service.metrics().summary());
+    Ok(())
+}
+
+fn cmd_ps_bench(args: &Args) -> Result<()> {
+    let service = std::sync::Arc::new(ps_service_from_args(args)?);
+    let tcfg = qsgd::ps::TrafficConfig {
+        clients: args.usize("clients", 16),
+        threads: args.usize("threads", 4),
+        ops: args.usize("ops", 20_000),
+        push_fraction: args.f64("push-pull", 0.8),
+        zipf: args.f64("zipf", 1.0),
+        burst: args.usize("burst", 8),
+        seed: args.u64("seed", 1),
+    };
+    let transport = TransportSpec::parse(&args.string("transport", "sim"))?;
+    let rep = if transport.is_sim() {
+        qsgd::ps::run_traffic(&service, qsgd::ps::Target::InProcess, &tcfg)?
+    } else {
+        let handle = qsgd::ps::serve(&transport_endpoint(&transport)?, service.clone())?;
+        let bound = handle.endpoint().clone();
+        let rep = qsgd::ps::run_traffic(&service, qsgd::ps::Target::Socket(&bound), &tcfg)?;
+        handle.shutdown();
+        rep
+    };
+    println!("ps-bench [{}]: {}", transport.label(), rep.summary());
+    println!("service: {}", service.metrics().summary());
     Ok(())
 }
 

@@ -250,6 +250,75 @@ impl FaultStats {
     }
 }
 
+/// Latency accumulator with exact percentiles, used by the parameter-server
+/// service for its push-decode / pull-encode service times and by the
+/// traffic harness for client round trips. Samples are kept (8 bytes each)
+/// rather than bucketed: the heaviest in-tree producer records a few
+/// hundred thousand operations per run, and exact p50/p99 beats histogram
+/// bin error at that scale. Recording is O(1); percentile queries sort a
+/// copy ([`crate::util::stats::percentile`]).
+#[derive(Debug, Clone, Default)]
+pub struct Latency {
+    samples_ns: Vec<f64>,
+}
+
+impl Latency {
+    pub fn record_ns(&mut self, ns: f64) {
+        self.samples_ns.push(ns);
+    }
+
+    pub fn record(&mut self, elapsed: std::time::Duration) {
+        self.record_ns(elapsed.as_secs_f64() * 1e9);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ns.is_empty()
+    }
+
+    /// p-th percentile in nanoseconds; 0.0 when nothing was recorded (keeps
+    /// downstream JSON finite instead of NaN).
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&self.samples_ns, p)
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        self.percentile_ns(50.0)
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        self.percentile_ns(99.0)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        stats::mean(&self.samples_ns)
+    }
+
+    pub fn add(&mut self, other: &Latency) {
+        self.samples_ns.extend_from_slice(&other.samples_ns);
+    }
+
+    /// `"p50 12.3µs p99 45.6µs (n=789)"` — the one-line form the CLI and
+    /// bench output print.
+    pub fn summary(&self) -> String {
+        format!(
+            "p50 {} p99 {} (n={})",
+            stats::fmt_duration(self.p50_ns() / 1e9),
+            stats::fmt_duration(self.p99_ns() / 1e9),
+            self.count()
+        )
+    }
+}
+
 /// A (step → value) curve, e.g. loss or accuracy over training.
 #[derive(Debug, Clone, Default)]
 pub struct Curve {
@@ -446,6 +515,28 @@ mod tests {
         assert!(a.any());
         assert_eq!(a.corrupt_frames, 4);
         assert_eq!(a.straggler_hops, 14);
+    }
+
+    #[test]
+    fn latency_percentiles_and_merge() {
+        let mut l = Latency::default();
+        assert!(l.is_empty());
+        assert_eq!(l.p50_ns(), 0.0);
+        assert_eq!(l.p99_ns(), 0.0);
+        assert_eq!(l.mean_ns(), 0.0);
+        for ns in [100.0, 200.0, 300.0, 400.0] {
+            l.record_ns(ns);
+        }
+        l.record(std::time::Duration::from_nanos(500));
+        assert_eq!(l.count(), 5);
+        assert_eq!(l.p50_ns(), 300.0);
+        assert!((l.mean_ns() - 300.0).abs() < 1e-9);
+        assert!(l.p99_ns() > l.p50_ns());
+        let mut sum = Latency::default();
+        sum.add(&l);
+        sum.add(&l);
+        assert_eq!(sum.count(), 10);
+        assert!(sum.summary().contains("n=10"));
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! Synthetic heavy-traffic client harness: N simulated clients multiplexed
+//! over M OS threads, hammering a [`Service`] either in-process or through
+//! the socket front end.
+//!
+//! The load shape is the classic parameter-server stress profile:
+//!
+//! * **Zipf shard popularity** — shard s is picked with probability
+//!   ∝ 1/(s+1)^θ, so θ > 0 concentrates traffic on a few hot shards
+//!   (exactly the case admission control exists for) while θ = 0 is
+//!   uniform.
+//! * **Configurable push/pull mix** — each op is a push (encode a gradient
+//!   slice client-side, server decodes-and-applies) with probability
+//!   `push_fraction`, else a pull (server re-encodes its snapshot, client
+//!   decodes).
+//! * **Bursty open-loop arrivals** — ops are issued in back-to-back bursts
+//!   of `burst` without waiting for admission feedback, so a burst larger
+//!   than a shard's queue depth *will* draw shed responses; the harness
+//!   counts them instead of retrying, which is what keeps overload visible.
+//!
+//! Everything is seeded: thread t draws from `stream(seed ^ 0x7247, t)`, a
+//! client's encode sessions from the shared `(seed, client, shard)`
+//! derivation. With `threads = 1` the op sequence is fully deterministic,
+//! which the integration suite uses to prove the in-process and `uds:`
+//! socket paths land bit-identical final parameters.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use super::service::{
+    encode_request, parse_response, Reply, Service, OP_PULL, OP_PUSH, ST_OK, ST_SHED, ST_STALE,
+};
+use super::shard::SessionPool;
+use crate::metrics::Latency;
+use crate::transport::frame::{write_frame, FrameReader};
+use crate::transport::net::{connect_retry, Endpoint};
+use crate::util::rng::{self, Xoshiro256};
+
+/// Load-shape knobs for one traffic run.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Simulated clients (distinct client ids / session streams).
+    pub clients: usize,
+    /// OS threads the clients are multiplexed over.
+    pub threads: usize,
+    /// Total ops across all clients.
+    pub ops: usize,
+    /// Probability an op is a push (the rest are pulls).
+    pub push_fraction: f64,
+    /// Zipf skew θ over shards (0 = uniform).
+    pub zipf: f64,
+    /// Ops issued back-to-back per arrival.
+    pub burst: usize,
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        Self {
+            clients: 8,
+            threads: 2,
+            ops: 1000,
+            push_fraction: 0.8,
+            zipf: 1.0,
+            burst: 8,
+            seed: 1,
+        }
+    }
+}
+
+/// Where the ops go: straight into the service, or through its socket
+/// front end (the service reference still supplies the shard map, codec
+/// and seed the clients encode against).
+#[derive(Clone, Copy)]
+pub enum Target<'a> {
+    InProcess,
+    Socket(&'a Endpoint),
+}
+
+/// What a traffic run observed, aggregated across threads.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficReport {
+    pub ops: u64,
+    pub pushes: u64,
+    pub pulls: u64,
+    /// Pushes accepted and applied.
+    pub pushed_ok: u64,
+    /// Pulls that returned parameters.
+    pub pulls_ok: u64,
+    /// Ops rejected by the staleness bound.
+    pub stale: u64,
+    /// Ops shed by admission control.
+    pub shed: u64,
+    pub elapsed_s: f64,
+    pub push_rtt: Latency,
+    pub pull_rtt: Latency,
+}
+
+impl TrafficReport {
+    fn add(&mut self, other: &TrafficReport) {
+        self.ops += other.ops;
+        self.pushes += other.pushes;
+        self.pulls += other.pulls;
+        self.pushed_ok += other.pushed_ok;
+        self.pulls_ok += other.pulls_ok;
+        self.stale += other.stale;
+        self.shed += other.shed;
+        self.push_rtt.add(&other.push_rtt);
+        self.pull_rtt.add(&other.pull_rtt);
+    }
+
+    /// Sustained throughput over the whole run.
+    pub fn msgs_per_sec(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.ops as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ops in {:.3}s ({:.0} msgs/s) · push ok {} / stale {} / shed {} · pull ok {} | push rtt {} | pull rtt {}",
+            self.ops,
+            self.elapsed_s,
+            self.msgs_per_sec(),
+            self.pushed_ok,
+            self.stale,
+            self.shed,
+            self.pulls_ok,
+            self.push_rtt.summary(),
+            self.pull_rtt.summary(),
+        )
+    }
+}
+
+/// Cumulative Zipf distribution over the non-empty shards: returns the
+/// eligible shard indices and their cumulative probabilities (last = 1).
+fn zipf_cdf(service: &Service, skew: f64) -> (Vec<usize>, Vec<f64>) {
+    let eligible: Vec<usize> = (0..service.num_shards())
+        .filter(|&s| service.map().shard(s).len > 0)
+        .collect();
+    let mut cdf = Vec::with_capacity(eligible.len());
+    let mut total = 0.0f64;
+    for (rank, _) in eligible.iter().enumerate() {
+        total += 1.0 / ((rank + 1) as f64).powf(skew);
+        cdf.push(total);
+    }
+    for c in &mut cdf {
+        *c /= total;
+    }
+    (eligible, cdf)
+}
+
+fn sample_cdf(cdf: &[f64], u: f64) -> usize {
+    cdf.partition_point(|&c| c < u).min(cdf.len() - 1)
+}
+
+/// One simulated client's state: its encode sessions (for pushes), its
+/// in-process stand-in for the server-side pull sessions, and the last
+/// version it pulled per shard (what its pushes claim).
+struct ClientSim {
+    id: u32,
+    push_pool: SessionPool,
+    /// In-process runs have no connection handler to own the server-side
+    /// pull session, so the client holds it — same `(seed, client, shard)`
+    /// derivation, hence the same bytes the socket path produces.
+    pull_pool: SessionPool,
+    last_pulled: Vec<u64>,
+}
+
+/// Drive `cfg.ops` synthetic ops at `service` through `target`. Returns the
+/// aggregated [`TrafficReport`]; shed and stale responses are counted, not
+/// retried.
+pub fn run_traffic(
+    service: &Service,
+    target: Target<'_>,
+    cfg: &TrafficConfig,
+) -> Result<TrafficReport> {
+    ensure!(cfg.clients >= 1, "traffic needs at least one client");
+    ensure!(cfg.ops >= 1, "traffic needs at least one op");
+    let threads = cfg.threads.clamp(1, cfg.clients.max(1));
+    let (eligible, cdf) = zipf_cdf(service, cfg.zipf);
+    ensure!(!eligible.is_empty(), "service has no non-empty shards to target");
+    let max_len = eligible.iter().map(|&s| service.map().shard(s).len).max().unwrap_or(0);
+
+    let started = Instant::now();
+    let mut merged = TrafficReport::default();
+    let reports: Vec<Result<TrafficReport>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let eligible = &eligible;
+            let cdf = &cdf;
+            handles.push(scope.spawn(move || {
+                run_thread(service, target, cfg, t, threads, eligible, cdf, max_len)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("traffic thread panicked")).collect()
+    });
+    for r in reports {
+        merged.add(&r?);
+    }
+    merged.elapsed_s = started.elapsed().as_secs_f64();
+    Ok(merged)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_thread(
+    service: &Service,
+    target: Target<'_>,
+    cfg: &TrafficConfig,
+    t: usize,
+    threads: usize,
+    eligible: &[usize],
+    cdf: &[f64],
+    max_len: usize,
+) -> Result<TrafficReport> {
+    let shards = service.num_shards();
+    let codec = service.codec().clone();
+    // Thread t owns client ids t, t+threads, … — per-client session streams
+    // are derived from the global ids, so the identity→bytes mapping is the
+    // same no matter how many threads the clients are multiplexed over.
+    let mut clients: Vec<ClientSim> = (t..cfg.clients)
+        .step_by(threads)
+        .map(|c| ClientSim {
+            id: c as u32,
+            push_pool: SessionPool::new(codec.clone(), cfg.seed ^ 0xC11E, c as u64, shards),
+            pull_pool: SessionPool::new(codec.clone(), service.seed(), c as u64, shards),
+            last_pulled: vec![0; shards],
+        })
+        .collect();
+    ensure!(!clients.is_empty(), "thread {t} owns no clients (clients < threads?)");
+
+    // This thread's op budget and its deterministic randomness.
+    let my_ops = cfg.ops / threads + usize::from(t < cfg.ops % threads);
+    let mut rng_t = Xoshiro256::stream(cfg.seed ^ 0x7247, t as u64);
+    // One synthetic gradient per thread, sliced per push — the encode cost
+    // is what matters, not fresh values per op.
+    let grad = rng::normal_vec(&mut rng_t, max_len);
+
+    // Socket mode: one connection per thread, clients multiplexed over it.
+    let mut sock = match target {
+        Target::InProcess => None,
+        Target::Socket(ep) => {
+            let conn = connect_retry(ep, Duration::from_secs(5))
+                .with_context(|| format!("traffic thread {t} dialing {}", ep.describe()))?;
+            conn.set_timeouts(Some(Duration::from_secs(10)))?;
+            Some((conn, FrameReader::new()))
+        }
+    };
+
+    let mut rep = TrafficReport::default();
+    let mut frame = Vec::new();
+    let mut req = Vec::new();
+    let mut done = 0usize;
+    let mut next_client = 0usize;
+    while done < my_ops {
+        let burst = cfg.burst.max(1).min(my_ops - done);
+        for _ in 0..burst {
+            let c = &mut clients[next_client];
+            next_client = (next_client + 1) % clients.len();
+            let s = eligible[sample_cdf(cdf, rng::uniform_f64(&mut rng_t))];
+            let range = service.map().shard(s);
+            let is_push = rng::uniform_f64(&mut rng_t) < cfg.push_fraction;
+            rep.ops += 1;
+            if is_push {
+                rep.pushes += 1;
+                c.push_pool.session(s).encode_into(&grad[..range.len], &mut frame);
+                let op_t = Instant::now();
+                let reply = match &mut sock {
+                    None => service.push(s, c.last_pulled[s], &frame)?,
+                    Some((conn, reader)) => {
+                        encode_request(&mut req, OP_PUSH, s as u16, c.id, c.last_pulled[s], &frame);
+                        write_frame(conn, &req)?;
+                        let resp = reader
+                            .read_frame(conn)?
+                            .context("server closed mid push")
+                            .and_then(parse_response)?;
+                        match resp.status {
+                            ST_OK => Reply::Pushed { version: resp.version },
+                            ST_STALE => Reply::Stale { version: resp.version },
+                            ST_SHED => Reply::Shed,
+                            other => anyhow::bail!("unknown push status {other}"),
+                        }
+                    }
+                };
+                rep.push_rtt.record(op_t.elapsed());
+                match reply {
+                    Reply::Pushed { version } => {
+                        rep.pushed_ok += 1;
+                        c.last_pulled[s] = version;
+                    }
+                    Reply::Stale { version } => {
+                        rep.stale += 1;
+                        // Adopt the server's version: the client would
+                        // re-pull before its next push.
+                        c.last_pulled[s] = version;
+                    }
+                    Reply::Shed => rep.shed += 1,
+                }
+            } else {
+                rep.pulls += 1;
+                let op_t = Instant::now();
+                let pulled = match &mut sock {
+                    None => service
+                        .pull_encoded(s, c.pull_pool.session(s), &mut frame)
+                        .map(|v| (v, frame.as_slice())),
+                    Some((conn, reader)) => {
+                        encode_request(&mut req, OP_PULL, s as u16, c.id, 0, &[]);
+                        write_frame(conn, &req)?;
+                        let resp = reader
+                            .read_frame(conn)?
+                            .context("server closed mid pull")
+                            .and_then(parse_response)?;
+                        match resp.status {
+                            ST_OK => Some((resp.version, resp.body)),
+                            ST_SHED => None,
+                            other => anyhow::bail!("unknown pull status {other}"),
+                        }
+                    }
+                };
+                match pulled {
+                    Some((v, bytes)) => {
+                        // Client-side decode is part of the pull round trip.
+                        let dense = codec.decode(bytes, range.len)?;
+                        ensure!(dense.len() == range.len, "pull decoded to wrong length");
+                        rep.pulls_ok += 1;
+                        c.last_pulled[s] = v;
+                    }
+                    None => rep.shed += 1,
+                }
+                rep.pull_rtt.record(op_t.elapsed());
+            }
+        }
+        done += burst;
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CompressorSpec;
+    use crate::ps::router::ShardMap;
+    use crate::ps::service::ServiceConfig;
+
+    fn service(n: usize, shards: usize, depth: usize) -> Service {
+        let cfg = ServiceConfig {
+            compressor: CompressorSpec::qsgd_4bit(),
+            lr: 0.05,
+            seed: 3,
+            staleness: None,
+            queue_depth: depth,
+        };
+        Service::new(ShardMap::uniform(n, shards).unwrap(), &cfg)
+    }
+
+    #[test]
+    fn zipf_cdf_skews_toward_low_shards() {
+        let svc = service(1000, 4, 8);
+        let (eligible, cdf) = zipf_cdf(&svc, 1.0);
+        assert_eq!(eligible, vec![0, 1, 2, 3]);
+        assert!((cdf.last().unwrap() - 1.0).abs() < 1e-12);
+        // First shard takes the biggest slice under skew.
+        assert!(cdf[0] > 0.25);
+        let (_, flat) = zipf_cdf(&svc, 0.0);
+        assert!((flat[0] - 0.25).abs() < 1e-12, "θ=0 is uniform");
+        // Empty tail shards are excluded.
+        let tiny = service(3, 7, 8);
+        let (el, _) = zipf_cdf(&tiny, 1.0);
+        assert_eq!(el, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn in_process_traffic_conserves_ops() {
+        let svc = service(2048, 4, 64);
+        let cfg = TrafficConfig {
+            clients: 6,
+            threads: 2,
+            ops: 600,
+            push_fraction: 0.7,
+            zipf: 1.0,
+            burst: 4,
+            seed: 9,
+        };
+        let rep = run_traffic(&svc, Target::InProcess, &cfg).unwrap();
+        assert_eq!(rep.ops, 600);
+        assert_eq!(rep.pushes + rep.pulls, rep.ops);
+        assert_eq!(rep.pushed_ok + rep.stale + rep.pulls_ok + rep.shed, rep.ops);
+        assert!(rep.pushes > 0 && rep.pulls > 0, "mix produced both ops");
+        assert!(rep.msgs_per_sec() > 0.0);
+        // Deep queues + no staleness bound: nothing rejected.
+        assert_eq!((rep.shed, rep.stale), (0, 0));
+        let m = svc.metrics();
+        assert_eq!(m.pushes, rep.pushed_ok);
+        assert_eq!(m.pulls, rep.pulls_ok);
+        assert_eq!(rep.push_rtt.count() as u64, rep.pushes);
+        assert_eq!(rep.pull_rtt.count() as u64, rep.pulls);
+    }
+
+    #[test]
+    fn single_thread_traffic_is_deterministic_in_outcome() {
+        // Same seed, same service state ⇒ identical final params and
+        // identical op accounting across two fresh runs.
+        let cfg = TrafficConfig {
+            clients: 4,
+            threads: 1,
+            ops: 300,
+            push_fraction: 0.9,
+            zipf: 0.8,
+            burst: 8,
+            seed: 42,
+        };
+        let run = || {
+            let svc = service(1024, 3, 64);
+            let rep = run_traffic(&svc, Target::InProcess, &cfg).unwrap();
+            (svc.dense_params(), rep.pushed_ok, rep.pulls_ok)
+        };
+        let (p1, ok1, pl1) = run();
+        let (p2, ok2, pl2) = run();
+        let b1: Vec<u32> = p1.iter().map(|x| x.to_bits()).collect();
+        let b2: Vec<u32> = p2.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(b1, b2, "deterministic traffic must land identical params");
+        assert_eq!((ok1, pl1), (ok2, pl2));
+    }
+}

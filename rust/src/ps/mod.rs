@@ -1,0 +1,45 @@
+//! Sharded quantized parameter-server service — the service-shaped
+//! successor to the single-loop [`crate::coordinator::async_ps`].
+//!
+//! The paper's asynchronous story (Appendix D) is one logical server and K
+//! cooperating workers; the ROADMAP north-star is a *service*: parameters
+//! partitioned across S shard instances, hit by many lightweight clients
+//! whose gradients arrive quantized and leave re-quantized. This module is
+//! that shape, grown from the pieces the repo already trusts:
+//!
+//! * [`router`] — the shard map: a [`crate::models::layout::QuantPlan`]-
+//!   derived total, non-overlapping partition of the flat parameter vector,
+//!   each shard carrying its own plan slice (which coordinates ride
+//!   quantized vs fp32).
+//! * [`admission`] — bounded-inflight admission per shard: overload draws
+//!   explicit, counted shed responses instead of silent buffering.
+//! * [`shard`] — one shard instance: fused push decode-add straight into
+//!   its parameter slice, pull re-encode from a versioned snapshot, a
+//!   stale-gradient bound τ, and the per-connection
+//!   [`shard::SessionPool`] of encode sessions.
+//! * [`service`] — S shard cells behind one facade, the request protocol
+//!   (op / shard / client / version header in front of the self-describing
+//!   frames) over the `transport` socket stack, and
+//!   [`service::run_async`] — the event-driven virtual-time driver whose
+//!   S=1 case is bit-identical to the legacy `async_ps::run`.
+//! * [`client`] — the heavy-traffic harness: N Zipf-skewed simulated
+//!   clients over M threads, configurable push/pull mix, bursty open-loop
+//!   arrivals, in-process or over sockets.
+//!
+//! Determinism is the through-line: parameter init, every encode session
+//! (worker-, client- and server-side), and the single-threaded traffic
+//! schedule are all pure functions of seeds and identities, which is what
+//! lets the test suite pin S=1 against the legacy loop and the socket path
+//! against the in-process path bit-for-bit.
+
+pub mod admission;
+pub mod client;
+pub mod router;
+pub mod service;
+pub mod shard;
+
+pub use admission::Admission;
+pub use client::{run_traffic, Target, TrafficConfig, TrafficReport};
+pub use router::{ShardMap, ShardRange};
+pub use service::{run_async, serve, Reply, ServerHandle, Service, ServiceConfig, ServiceMetrics};
+pub use shard::{PushOutcome, SessionPool, Shard, ShardMetrics};

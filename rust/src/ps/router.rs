@@ -1,0 +1,230 @@
+//! The shard map: a [`QuantPlan`]-derived partition of the flat parameter
+//! vector across S shard instances.
+//!
+//! The map reuses the segment machinery from [`crate::models::layout`]: each
+//! shard owns a contiguous coordinate range `[offset, offset + len)` of the
+//! flat vector, described by its own [`QuantPlan`] whose segments are the
+//! (possibly split) pieces of the model plan that fall inside the range —
+//! so a shard knows exactly which of its coordinates ride quantized and
+//! which ride fp32, with the same `Segment` vocabulary every other layer
+//! speaks. Ranges are balanced to within one coordinate (the first
+//! `total % S` shards get the extra one) and cover the vector exactly:
+//! total, non-overlapping, and ragged-dim-safe — properties pinned by the
+//! router suite in `rust/tests/ps_service.rs`.
+
+use anyhow::Result;
+
+use crate::models::layout::{QuantPlan, Segment};
+
+/// One shard's slice of the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct ShardRange {
+    pub index: usize,
+    /// First coordinate owned by this shard (global index).
+    pub offset: usize,
+    pub len: usize,
+    /// The model plan restricted to this shard: segments carry *global*
+    /// offsets inside `[offset, offset + len)`, preserving each piece's
+    /// quantized/fp32 treatment.
+    pub plan: QuantPlan,
+}
+
+impl ShardRange {
+    /// This shard's slice of a full-length vector.
+    pub fn slice<'a>(&self, full: &'a [f32]) -> &'a [f32] {
+        &full[self.offset..self.offset + self.len]
+    }
+
+    pub fn slice_mut<'a>(&self, full: &'a mut [f32]) -> &'a mut [f32] {
+        &mut full[self.offset..self.offset + self.len]
+    }
+}
+
+/// A total, non-overlapping partition of `[0, total_len)` into S shard
+/// ranges, derived from a model's [`QuantPlan`].
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    shards: Vec<ShardRange>,
+    total: usize,
+}
+
+impl ShardMap {
+    /// Partition `plan`'s coordinate space into `shards` near-equal
+    /// contiguous ranges. Plan segments are split at shard boundaries, so a
+    /// shard count that does not divide the segment structure still yields
+    /// an exact partition (more shards than coordinates leaves the tail
+    /// shards empty rather than failing).
+    pub fn build(plan: &QuantPlan, shards: usize) -> Result<Self> {
+        anyhow::ensure!(shards >= 1, "shard map needs at least 1 shard, got {shards}");
+        let total = plan.total_len();
+        // The plan must be contiguous from 0 — QuantPlan::build produces
+        // exactly that, but hand-rolled plans could lie.
+        let mut expect = 0usize;
+        for s in &plan.segments {
+            anyhow::ensure!(
+                s.offset == expect,
+                "quant plan is not contiguous at offset {} (expected {expect})",
+                s.offset
+            );
+            expect = s.offset + s.len;
+        }
+
+        let base = total / shards;
+        let extra = total % shards;
+        let mut out = Vec::with_capacity(shards);
+        let mut lo = 0usize;
+        let mut seg_iter = plan.segments.iter().peekable();
+        for index in 0..shards {
+            let len = base + usize::from(index < extra);
+            let hi = lo + len;
+            let mut segs: Vec<Segment> = Vec::new();
+            // Collect the plan pieces overlapping [lo, hi): a plan segment
+            // ending inside the shard is consumed; one straddling `hi` is
+            // split, its remainder left for the next shard.
+            while let Some(seg) = seg_iter.peek() {
+                let s_lo = seg.offset.max(lo);
+                let s_hi = (seg.offset + seg.len).min(hi);
+                if s_lo < s_hi {
+                    segs.push(Segment { offset: s_lo, len: s_hi - s_lo, quantized: seg.quantized });
+                }
+                if seg.offset + seg.len <= hi {
+                    seg_iter.next();
+                } else {
+                    break;
+                }
+            }
+            out.push(ShardRange { index, offset: lo, len, plan: QuantPlan { segments: segs } });
+            lo = hi;
+        }
+        Ok(Self { shards: out, total })
+    }
+
+    /// Shard map over a bare `n`-coordinate vector (no model layout): one
+    /// all-quantized segment, split S ways. This is what the async driver
+    /// and the synthetic traffic harness use.
+    pub fn uniform(n: usize, shards: usize) -> Result<Self> {
+        let plan = QuantPlan {
+            segments: if n == 0 {
+                vec![]
+            } else {
+                vec![Segment { offset: 0, len: n, quantized: true }]
+            },
+        };
+        Self::build(&plan, shards)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.total
+    }
+
+    pub fn shard(&self, s: usize) -> &ShardRange {
+        &self.shards[s]
+    }
+
+    pub fn shards(&self) -> &[ShardRange] {
+        &self.shards
+    }
+
+    /// Which shard owns global coordinate `coord` (binary search on the
+    /// range offsets). Empty tail shards never win: the owning shard is the
+    /// one whose `[offset, offset + len)` contains the coordinate.
+    pub fn shard_of(&self, coord: usize) -> Option<usize> {
+        if coord >= self.total {
+            return None;
+        }
+        let mut lo = 0usize;
+        let mut hi = self.shards.len();
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if self.shards[mid].offset <= coord {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        // With empty shards adjacent to `lo`, walk forward to the one that
+        // actually contains the coordinate (empty ranges share an offset).
+        let mut s = lo;
+        while self.shards[s].len == 0 || coord >= self.shards[s].offset + self.shards[s].len {
+            s += 1;
+        }
+        Some(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::layout::ParamLayout;
+
+    #[test]
+    fn uniform_split_is_balanced_partition() {
+        let m = ShardMap::uniform(10, 3).unwrap();
+        assert_eq!(m.num_shards(), 3);
+        assert_eq!(m.total_len(), 10);
+        let lens: Vec<usize> = m.shards().iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        let mut cursor = 0;
+        for s in m.shards() {
+            assert_eq!(s.offset, cursor);
+            cursor += s.len;
+            assert_eq!(s.plan.total_len(), s.len);
+        }
+        assert_eq!(cursor, 10);
+    }
+
+    #[test]
+    fn shard_of_matches_ranges() {
+        let m = ShardMap::uniform(10, 3).unwrap();
+        for c in 0..10 {
+            let s = m.shard_of(c).unwrap();
+            let r = m.shard(s);
+            assert!(c >= r.offset && c < r.offset + r.len, "coord {c} in shard {s}");
+        }
+        assert_eq!(m.shard_of(10), None);
+    }
+
+    #[test]
+    fn more_shards_than_coords_leaves_empty_tails() {
+        let m = ShardMap::uniform(3, 7).unwrap();
+        let lens: Vec<usize> = m.shards().iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![1, 1, 1, 0, 0, 0, 0]);
+        assert_eq!(m.shard_of(2), Some(2));
+    }
+
+    #[test]
+    fn plan_segments_split_at_shard_boundaries() {
+        // Mixed plan: a small fp32 tensor then a large quantized one.
+        let l = ParamLayout::synthetic(&[("small", vec![6]), ("big", vec![14])]);
+        let plan = QuantPlan::build(&l, 10); // small -> fp32, big -> quantized
+        let m = ShardMap::build(&plan, 2).unwrap();
+        // 20 coords split 10/10: shard 0 = fp32[0..6) + quant[6..10),
+        // shard 1 = quant[10..20).
+        let s0 = &m.shard(0).plan.segments;
+        assert_eq!(s0.len(), 2);
+        assert_eq!((s0[0].offset, s0[0].len, s0[0].quantized), (0, 6, false));
+        assert_eq!((s0[1].offset, s0[1].len, s0[1].quantized), (6, 4, true));
+        let s1 = &m.shard(1).plan.segments;
+        assert_eq!(s1.len(), 1);
+        assert_eq!((s1[0].offset, s1[0].len, s1[0].quantized), (10, 10, true));
+    }
+
+    #[test]
+    fn rejects_zero_shards_and_gappy_plans() {
+        assert!(ShardMap::uniform(8, 0).is_err());
+        let gappy =
+            QuantPlan { segments: vec![Segment { offset: 4, len: 4, quantized: true }] };
+        assert!(ShardMap::build(&gappy, 2).is_err());
+    }
+
+    #[test]
+    fn empty_vector_is_fine() {
+        let m = ShardMap::uniform(0, 2).unwrap();
+        assert_eq!(m.total_len(), 0);
+        assert_eq!(m.shard_of(0), None);
+    }
+}

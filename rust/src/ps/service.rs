@@ -1,0 +1,791 @@
+//! The sharded parameter-server service: S shard cells behind one facade,
+//! a tiny request protocol over the transport stack, and the deterministic
+//! event-driven driver that makes the legacy single-loop
+//! [`crate::coordinator::async_ps`] the S=1 degenerate case.
+//!
+//! Three layers, same state:
+//!
+//! * [`Service`] — in-process API. Each shard cell pairs an [`Admission`]
+//!   gate with a mutex-guarded [`Shard`]; shards lock independently, so
+//!   pushes to different shards proceed in parallel and a hot shard sheds
+//!   without slowing the others.
+//! * [`serve`] — the same service over `tcp:`/`uds:` sockets: a 15-byte
+//!   request header (op, shard, client id, version) rides in front of the
+//!   self-describing encoded frames, reusing `transport::frame` for
+//!   boundaries and `transport::net` for endpoints. One handler thread per
+//!   connection owns a [`FrameReader`] and per-client [`SessionPool`]s.
+//! * [`run_async`] — the event-driven virtual-time driver from
+//!   `async_ps::run`, re-routed through a [`Service`]. With S=1 and the
+//!   session streams below it is **bit-identical** to the legacy loop
+//!   (pinned in `rust/tests/ps_service.rs`); with S>1 each worker encodes
+//!   one frame per shard and the server applies them shard-by-shard.
+//!
+//! Determinism contract: parameter init is `stream(seed, 0xA54C)` (the
+//! legacy formula over the *full* vector, then sliced), and a worker's
+//! encode session for shard s is `stream(seed ^ 0xAB5, w | s << 32)` — for
+//! s = 0 exactly the legacy per-worker stream, which is what makes the S=1
+//! parity hold down to the wire bytes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use super::admission::Admission;
+use super::router::ShardMap;
+use super::shard::{PushOutcome, SessionPool, Shard};
+use crate::coordinator::async_ps::{AsyncConfig, AsyncResult};
+use crate::coordinator::sources::GradSource;
+use crate::coordinator::CompressorSpec;
+use crate::metrics::{Curve, Latency, WireStats};
+use crate::quant::{Codec, EncodeSession};
+use crate::transport::frame::{write_frame, FrameReader};
+use crate::transport::net::{Conn, Endpoint, Listener};
+use crate::util::par;
+use crate::util::rng::Xoshiro256;
+
+/// Service-level knobs (the shard map itself travels separately).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub compressor: CompressorSpec,
+    pub lr: f32,
+    pub seed: u64,
+    /// Staleness bound τ: reject pushes whose pulled version lags the shard
+    /// by more than τ updates. `None` = unbounded (legacy behaviour).
+    pub staleness: Option<u64>,
+    /// Admission depth per shard (bounded inflight; extra requests shed).
+    pub queue_depth: usize,
+}
+
+/// What the service tells a client about its request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reply {
+    /// Push decoded and applied; shard now at `version`.
+    Pushed { version: u64 },
+    /// Push rejected by the staleness bound; re-pull at `version`.
+    Stale { version: u64 },
+    /// Shed by admission control — retry later.
+    Shed,
+}
+
+/// Aggregated service counters and latency percentiles across all shards.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    pub pushes: u64,
+    pub pulls: u64,
+    pub stale_rejected: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub push_decode: Latency,
+    pub pull_encode: Latency,
+}
+
+impl ServiceMetrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "pushes {} · pulls {} · stale {} · shed {} | push-decode {} | pull-encode {}",
+            self.pushes,
+            self.pulls,
+            self.stale_rejected,
+            self.shed,
+            self.push_decode.summary(),
+            self.pull_encode.summary(),
+        )
+    }
+}
+
+struct Cell {
+    admission: Admission,
+    shard: Mutex<Shard>,
+}
+
+/// S independent shard cells behind one facade. Shared across threads as
+/// `Arc<Service>`; all methods take `&self`.
+pub struct Service {
+    map: ShardMap,
+    codec: Arc<dyn Codec>,
+    seed: u64,
+    cells: Vec<Cell>,
+}
+
+impl Service {
+    /// A service over `map` with parameters initialised by the legacy
+    /// async-PS formula: `stream(seed, 0xA54C)` normal draws × 0.1 over the
+    /// full vector, then sliced per shard — so the S=1 service starts
+    /// bit-identical to `async_ps::run`.
+    pub fn new(map: ShardMap, cfg: &ServiceConfig) -> Self {
+        let n = map.total_len();
+        let init: Vec<f32> = {
+            let mut r = Xoshiro256::stream(cfg.seed, 0xA54C);
+            crate::util::rng::normal_vec(&mut r, n).into_iter().map(|x| x * 0.1).collect()
+        };
+        Self::with_init(map, cfg, &init).expect("init length matches map by construction")
+    }
+
+    /// A service with explicitly supplied initial parameters.
+    pub fn with_init(map: ShardMap, cfg: &ServiceConfig, init: &[f32]) -> Result<Self> {
+        ensure!(
+            init.len() == map.total_len(),
+            "init vector has {} coords, shard map covers {}",
+            init.len(),
+            map.total_len()
+        );
+        let codec = cfg.compressor.codec();
+        let cells = map
+            .shards()
+            .iter()
+            .map(|r| Cell {
+                admission: Admission::new(cfg.queue_depth),
+                shard: Mutex::new(Shard::new(
+                    r.clone(),
+                    codec.clone(),
+                    cfg.lr,
+                    cfg.staleness,
+                    init,
+                )),
+            })
+            .collect();
+        Ok(Self { map, codec, seed: cfg.seed, cells })
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    pub fn codec(&self) -> &Arc<dyn Codec> {
+        &self.codec
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// The admission gate for shard `s` — exposed so tests can hold permits
+    /// and provoke deterministic shedding.
+    pub fn admission(&self, s: usize) -> &Admission {
+        &self.cells[s].admission
+    }
+
+    fn lock(&self, s: usize) -> std::sync::MutexGuard<'_, Shard> {
+        self.cells[s].shard.lock().expect("shard mutex poisoned")
+    }
+
+    pub fn shard_version(&self, s: usize) -> u64 {
+        self.lock(s).version()
+    }
+
+    /// Push one encoded gradient frame (covering shard `s`'s coordinates)
+    /// from a client that last pulled `pulled_version`.
+    pub fn push(&self, s: usize, pulled_version: u64, frame: &[u8]) -> Result<Reply> {
+        let cell = &self.cells[s];
+        let Some(_permit) = cell.admission.try_enter() else {
+            return Ok(Reply::Shed);
+        };
+        let mut sh = cell.shard.lock().expect("shard mutex poisoned");
+        Ok(match sh.push(pulled_version, frame)? {
+            PushOutcome::Applied { version } => Reply::Pushed { version },
+            PushOutcome::Stale { version } => Reply::Stale { version },
+        })
+    }
+
+    /// Dense pull of shard `s` into `out`. `Some(version)` on success,
+    /// `None` if shed by admission.
+    pub fn pull_dense(&self, s: usize, out: &mut Vec<f32>) -> Option<u64> {
+        let cell = &self.cells[s];
+        let _permit = cell.admission.try_enter()?;
+        let mut sh = cell.shard.lock().expect("shard mutex poisoned");
+        Some(sh.pull_dense_into(out))
+    }
+
+    /// Quantized pull: re-encode shard `s`'s versioned snapshot with the
+    /// caller's (per-connection) session. `None` if shed.
+    pub fn pull_encoded(
+        &self,
+        s: usize,
+        session: &mut dyn EncodeSession,
+        out: &mut Vec<u8>,
+    ) -> Option<u64> {
+        let cell = &self.cells[s];
+        let _permit = cell.admission.try_enter()?;
+        let mut sh = cell.shard.lock().expect("shard mutex poisoned");
+        Some(sh.pull_encode_into(session, out))
+    }
+
+    /// Assemble the full parameter vector from the live shard slices
+    /// (maintenance read: no admission, no pull metrics).
+    pub fn dense_params(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.map.total_len()];
+        for (s, cell) in self.cells.iter().enumerate() {
+            let sh = cell.shard.lock().expect("shard mutex poisoned");
+            let r = self.map.shard(s);
+            out[r.offset..r.offset + r.len].copy_from_slice(sh.params());
+        }
+        out
+    }
+
+    /// Aggregate counters and latency samples across all shards.
+    pub fn metrics(&self) -> ServiceMetrics {
+        let mut m = ServiceMetrics::default();
+        for cell in &self.cells {
+            let sh = cell.shard.lock().expect("shard mutex poisoned");
+            m.pushes += sh.metrics.pushes;
+            m.pulls += sh.metrics.pulls;
+            m.stale_rejected += sh.metrics.stale_rejected;
+            m.push_decode.add(&sh.metrics.push_decode);
+            m.pull_encode.add(&sh.metrics.pull_encode);
+            m.admitted += cell.admission.admitted();
+            m.shed += cell.admission.shed();
+        }
+        m
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol: a small fixed header in front of the self-describing frames.
+// ---------------------------------------------------------------------------
+
+/// Push an encoded gradient; body = encoded frame, `version` = last pulled.
+pub const OP_PUSH: u8 = 0;
+/// Pull the shard re-encoded through the client's server-side session.
+pub const OP_PULL: u8 = 1;
+/// Pull the shard as dense little-endian f32s (the legacy pull shape).
+pub const OP_PULL_DENSE: u8 = 2;
+
+pub const ST_OK: u8 = 0;
+pub const ST_SHED: u8 = 1;
+pub const ST_STALE: u8 = 2;
+
+/// Request header: `op(1) | shard u16 LE | client u32 LE | version u64 LE`.
+pub const REQ_HEADER: usize = 1 + 2 + 4 + 8;
+/// Response header: `status(1) | shard u16 LE | version u64 LE`.
+pub const RESP_HEADER: usize = 1 + 2 + 8;
+
+/// A parsed request, body borrowed from the transport frame.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Request<'a> {
+    pub op: u8,
+    pub shard: u16,
+    pub client: u32,
+    pub version: u64,
+    pub body: &'a [u8],
+}
+
+/// A parsed response, body borrowed from the transport frame.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Response<'a> {
+    pub status: u8,
+    pub shard: u16,
+    pub version: u64,
+    pub body: &'a [u8],
+}
+
+/// Serialise a request into `buf` (cleared first).
+pub fn encode_request(
+    buf: &mut Vec<u8>,
+    op: u8,
+    shard: u16,
+    client: u32,
+    version: u64,
+    body: &[u8],
+) {
+    buf.clear();
+    buf.reserve(REQ_HEADER + body.len());
+    buf.push(op);
+    buf.extend_from_slice(&shard.to_le_bytes());
+    buf.extend_from_slice(&client.to_le_bytes());
+    buf.extend_from_slice(&version.to_le_bytes());
+    buf.extend_from_slice(body);
+}
+
+pub fn parse_request(frame: &[u8]) -> Result<Request<'_>> {
+    ensure!(frame.len() >= REQ_HEADER, "request frame of {} bytes is truncated", frame.len());
+    Ok(Request {
+        op: frame[0],
+        shard: u16::from_le_bytes(frame[1..3].try_into().expect("2 bytes")),
+        client: u32::from_le_bytes(frame[3..7].try_into().expect("4 bytes")),
+        version: u64::from_le_bytes(frame[7..15].try_into().expect("8 bytes")),
+        body: &frame[REQ_HEADER..],
+    })
+}
+
+/// Serialise a response into `buf` (cleared first).
+pub fn encode_response(buf: &mut Vec<u8>, status: u8, shard: u16, version: u64, body: &[u8]) {
+    buf.clear();
+    buf.reserve(RESP_HEADER + body.len());
+    buf.push(status);
+    buf.extend_from_slice(&shard.to_le_bytes());
+    buf.extend_from_slice(&version.to_le_bytes());
+    buf.extend_from_slice(body);
+}
+
+pub fn parse_response(frame: &[u8]) -> Result<Response<'_>> {
+    ensure!(frame.len() >= RESP_HEADER, "response frame of {} bytes is truncated", frame.len());
+    Ok(Response {
+        status: frame[0],
+        shard: u16::from_le_bytes(frame[1..3].try_into().expect("2 bytes")),
+        version: u64::from_le_bytes(frame[3..11].try_into().expect("8 bytes")),
+        body: &frame[RESP_HEADER..],
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Socket server.
+// ---------------------------------------------------------------------------
+
+/// How long the accept loop sleeps per poll while checking the stop flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(50);
+/// Per-connection socket timeout: a peer silent this long is treated as
+/// dead and its handler exits with an error.
+const CONN_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A running socket server. Dropping (or calling
+/// [`shutdown`](Self::shutdown)) stops the accept loop and joins every
+/// handler; clients should close their connections first so handlers see a
+/// clean EOF rather than riding out the [`CONN_TIMEOUT`].
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+    endpoint: Endpoint,
+}
+
+impl ServerHandle {
+    /// The bound endpoint (with the real port for `tcp:host:0` binds).
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Serve `service` on `ep`. The accept loop runs on its own thread and
+/// spawns one handler thread per connection; every blocking operation is
+/// deadline-bounded, so shutdown never hangs.
+pub fn serve(ep: &Endpoint, service: Arc<Service>) -> Result<ServerHandle> {
+    let listener = Listener::bind(ep)?;
+    let endpoint = listener.local_endpoint()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_accept = stop.clone();
+    let join = thread::spawn(move || {
+        let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+        while !stop_accept.load(Ordering::Relaxed) {
+            match listener.accept_deadline(Instant::now() + ACCEPT_POLL) {
+                Ok(conn) => {
+                    let svc = service.clone();
+                    let stop = stop_accept.clone();
+                    handlers.push(thread::spawn(move || {
+                        // Errors here are per-connection (peer died, bad
+                        // frame): the connection ends, the server lives on.
+                        let _ = handle_conn(conn, svc, stop);
+                    }));
+                }
+                // Deadline poll elapsed (or transient accept error): retry.
+                Err(_) => continue,
+            }
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+    });
+    Ok(ServerHandle { stop, join: Some(join), endpoint })
+}
+
+/// One connection's serve loop: read request frames, dispatch to the
+/// service, write response frames. Owns the connection's [`FrameReader`]
+/// and a [`SessionPool`] per client id seen on this connection (so pull
+/// re-encode state is per (client, shard) and deterministic in the ids).
+fn handle_conn(mut conn: Conn, svc: Arc<Service>, stop: Arc<AtomicBool>) -> Result<()> {
+    conn.set_timeouts(Some(CONN_TIMEOUT))?;
+    let mut reader = FrameReader::new();
+    let mut pools: HashMap<u32, SessionPool> = HashMap::new();
+    let mut resp = Vec::new();
+    let mut body = Vec::new();
+    let mut dense = Vec::new();
+    loop {
+        let frame = match reader.read_frame(&mut conn) {
+            Ok(Some(f)) => f,
+            Ok(None) => return Ok(()), // clean EOF: client closed
+            Err(e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                return Err(e.context("reading ps request"));
+            }
+        };
+        let req = parse_request(frame)?;
+        let s = req.shard as usize;
+        ensure!(s < svc.num_shards(), "request for shard {s} of {}", svc.num_shards());
+        match req.op {
+            OP_PUSH => match svc.push(s, req.version, req.body)? {
+                Reply::Pushed { version } => {
+                    encode_response(&mut resp, ST_OK, req.shard, version, &[])
+                }
+                Reply::Stale { version } => {
+                    encode_response(&mut resp, ST_STALE, req.shard, version, &[])
+                }
+                Reply::Shed => encode_response(&mut resp, ST_SHED, req.shard, 0, &[]),
+            },
+            OP_PULL => {
+                let pool = pools.entry(req.client).or_insert_with(|| {
+                    SessionPool::new(
+                        svc.codec().clone(),
+                        svc.seed(),
+                        u64::from(req.client),
+                        svc.num_shards(),
+                    )
+                });
+                match svc.pull_encoded(s, pool.session(s), &mut body) {
+                    Some(v) => encode_response(&mut resp, ST_OK, req.shard, v, &body),
+                    None => encode_response(&mut resp, ST_SHED, req.shard, 0, &[]),
+                }
+            }
+            OP_PULL_DENSE => match svc.pull_dense(s, &mut dense) {
+                Some(v) => {
+                    body.clear();
+                    body.reserve(dense.len() * 4);
+                    for x in &dense {
+                        body.extend_from_slice(&x.to_le_bytes());
+                    }
+                    encode_response(&mut resp, ST_OK, req.shard, v, &body)
+                }
+                None => encode_response(&mut resp, ST_SHED, req.shard, 0, &[]),
+            },
+            other => bail!("unknown ps op {other}"),
+        }
+        write_frame(&mut conn, &resp)?;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic async driver: async_ps re-routed through the service.
+// ---------------------------------------------------------------------------
+
+#[derive(PartialEq)]
+struct Event {
+    at: f64,
+    worker: usize,
+    pulled_version: usize,
+    step: u64,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap on time, same tie-breaking as the legacy loop
+        other.at.partial_cmp(&self.at).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct DriverWorker {
+    /// One encode session per shard, stream `seed ^ 0xAB5, w | s << 32`.
+    sessions: Vec<Box<dyn EncodeSession>>,
+    grad: Vec<f32>,
+    loss: f32,
+    /// One reusable wire buffer per shard.
+    msgs: Vec<Vec<u8>>,
+    ready: bool,
+}
+
+/// The event-driven async-PS simulation of [`crate::coordinator::async_ps`],
+/// with the server state held by a `shards`-way [`Service`]. Identical event
+/// schedule, identical staleness accounting; each worker pushes one encoded
+/// frame per (non-empty) shard and `wire`/`push_t` charge the summed frame
+/// bytes. For `shards == 1` the result is bit-identical to the legacy loop.
+pub fn run_async(
+    cfg: &AsyncConfig,
+    source: &mut dyn GradSource,
+    shards: usize,
+) -> Result<AsyncResult> {
+    let n = source.dim();
+    let map = ShardMap::uniform(n, shards)?;
+    let scfg = ServiceConfig {
+        compressor: cfg.compressor.clone(),
+        lr: cfg.lr,
+        seed: cfg.seed,
+        staleness: None,
+        queue_depth: cfg.workers.max(1),
+    };
+    let service = Service::new(map, &scfg);
+    let codec = service.codec().clone();
+    let mut states: Vec<DriverWorker> = (0..cfg.workers)
+        .map(|w| DriverWorker {
+            sessions: (0..shards)
+                .map(|s| {
+                    codec.session(Xoshiro256::stream(
+                        cfg.seed ^ 0xAB5,
+                        w as u64 | ((s as u64) << 32),
+                    ))
+                })
+                .collect(),
+            grad: Vec::new(),
+            loss: 0.0,
+            msgs: (0..shards)
+                .map(|s| Vec::with_capacity(codec.encoded_size_hint(service.map().shard(s).len)))
+                .collect(),
+            ready: false,
+        })
+        .collect();
+
+    let speed = |w: usize| -> f64 { cfg.speed.get(w).copied().unwrap_or(1.0).max(1e-6) };
+    let pull_bytes = n * 4; // dense param pull
+    let compute_s = cfg.cost.step_compute_s(source.flops_fwd_per_step(), 1);
+
+    let mut params = service.dense_params();
+    let mut heap = std::collections::BinaryHeap::new();
+    for w in 0..cfg.workers {
+        let (loss, grad) = source.loss_and_grad(w, 0, &params)?;
+        states[w].loss = loss;
+        states[w].grad = grad;
+        let t = cfg.net.p2p_time(pull_bytes).secs() + compute_s / speed(w);
+        heap.push(Event { at: t, worker: w, pulled_version: 0, step: 0 });
+    }
+
+    let mut version = 0usize;
+    let mut wire = WireStats::default();
+    let mut loss_curve = Curve::default();
+    let mut max_stale = 0usize;
+    let mut stale_sum = 0usize;
+    let mut now = 0.0f64;
+    let ranges = service.map().shards().to_vec();
+
+    while version < cfg.updates {
+        let ev = heap.pop().expect("workers alive");
+        now = ev.at;
+        let w = ev.worker;
+
+        // Lazy batched encode, as in the legacy loop, but one frame per
+        // shard: each worker encodes every shard's slice of its gradient
+        // with that shard's session. Empty tail shards get no frame.
+        if !states[w].ready {
+            par::par_map_mut(&mut states, |_, st| {
+                if !st.ready {
+                    for (s, r) in ranges.iter().enumerate() {
+                        if r.len > 0 {
+                            st.sessions[s].encode_into(r.slice(&st.grad), &mut st.msgs[s]);
+                        }
+                    }
+                    st.ready = true;
+                }
+            });
+        }
+        let push_len: usize = states[w].msgs.iter().map(Vec::len).sum();
+        wire.record(push_len, n);
+        let push_t = cfg.net.p2p_time(push_len).secs();
+
+        // Server applies the worker's per-shard frames in shard order. With
+        // staleness unbounded and the driver strictly sequential, every
+        // reply must be Pushed.
+        for (s, r) in ranges.iter().enumerate() {
+            if r.len == 0 {
+                continue;
+            }
+            match service.push(s, ev.pulled_version as u64, &states[w].msgs[s])? {
+                Reply::Pushed { .. } => {}
+                other => bail!("driver push unexpectedly rejected: {other:?}"),
+            }
+        }
+        states[w].ready = false;
+        let staleness = version - ev.pulled_version;
+        max_stale = max_stale.max(staleness);
+        stale_sum += staleness;
+        version += 1;
+
+        if version % cfg.log_every.max(1) == 0 || version == cfg.updates {
+            loss_curve.push(version, states[w].loss as f64);
+        }
+
+        if version < cfg.updates {
+            params = service.dense_params();
+            let (loss, grad) = source.loss_and_grad(w, ev.step + 1, &params)?;
+            states[w].loss = loss;
+            states[w].grad = grad;
+            let next = now + push_t + cfg.net.p2p_time(pull_bytes).secs() + compute_s / speed(w);
+            heap.push(Event { at: next, worker: w, pulled_version: version, step: ev.step + 1 });
+        }
+    }
+
+    Ok(AsyncResult {
+        loss: loss_curve,
+        wire,
+        params: service.dense_params(),
+        max_staleness: max_stale,
+        mean_staleness: stale_sum as f64 / cfg.updates as f64,
+        vtime: now,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng;
+
+    fn svc(n: usize, shards: usize, staleness: Option<u64>, depth: usize) -> Service {
+        let cfg = ServiceConfig {
+            compressor: CompressorSpec::qsgd_4bit(),
+            lr: 0.1,
+            seed: 5,
+            staleness,
+            queue_depth: depth,
+        };
+        Service::new(ShardMap::uniform(n, shards).unwrap(), &cfg)
+    }
+
+    fn push_frames(svc: &Service, grad: &[f32], session_seed: u64) -> Vec<Vec<u8>> {
+        let codec = svc.codec();
+        (0..svc.num_shards())
+            .map(|s| {
+                let r = svc.map().shard(s);
+                codec
+                    .session(Xoshiro256::stream(session_seed, s as u64))
+                    .compress(r.slice(grad))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn wire_header_roundtrip() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, OP_PUSH, 7, 42, 913, b"payload");
+        let req = parse_request(&buf).unwrap();
+        assert_eq!(
+            req,
+            Request { op: OP_PUSH, shard: 7, client: 42, version: 913, body: b"payload" }
+        );
+        encode_response(&mut buf, ST_STALE, 7, 914, b"");
+        let resp = parse_response(&buf).unwrap();
+        assert_eq!(resp, Response { status: ST_STALE, shard: 7, version: 914, body: b"" });
+        assert!(parse_request(&[0u8; REQ_HEADER - 1]).is_err());
+        assert!(parse_response(&[0u8; RESP_HEADER - 1]).is_err());
+    }
+
+    #[test]
+    fn push_then_pull_roundtrip_across_shards() {
+        let n = 700;
+        let svc = svc(n, 3, None, 4);
+        let before = svc.dense_params();
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(2), n);
+        for (s, frame) in push_frames(&svc, &grad, 77).iter().enumerate() {
+            assert_eq!(svc.push(s, 0, frame).unwrap(), Reply::Pushed { version: 1 });
+        }
+        let after = svc.dense_params();
+        assert_ne!(before, after);
+        // Dense pulls reassemble the full updated vector.
+        let mut out = Vec::new();
+        let mut assembled = vec![0.0f32; n];
+        for s in 0..svc.num_shards() {
+            assert_eq!(svc.pull_dense(s, &mut out), Some(1));
+            let r = svc.map().shard(s);
+            assembled[r.offset..r.offset + r.len].copy_from_slice(&out);
+        }
+        assert_eq!(assembled, after);
+        let m = svc.metrics();
+        assert_eq!((m.pushes, m.pulls, m.shed), (3, 3, 0));
+        assert_eq!(m.push_decode.count(), 3);
+    }
+
+    #[test]
+    fn held_permits_shed_deterministically() {
+        let svc = svc(256, 2, None, 2);
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(2), 256);
+        let frames = push_frames(&svc, &grad, 9);
+        // Fill shard 0's admission gate; shard 1 stays open.
+        let _p0 = svc.admission(0).try_enter().unwrap();
+        let _p1 = svc.admission(0).try_enter().unwrap();
+        assert_eq!(svc.push(0, 0, &frames[0]).unwrap(), Reply::Shed);
+        assert_eq!(svc.push(1, 0, &frames[1]).unwrap(), Reply::Pushed { version: 1 });
+        drop((_p0, _p1));
+        assert_eq!(svc.push(0, 0, &frames[0]).unwrap(), Reply::Pushed { version: 1 });
+        let m = svc.metrics();
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.pushes, 2);
+    }
+
+    #[test]
+    fn stale_pushes_rejected_and_counted() {
+        let svc = svc(128, 1, Some(1), 4);
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(2), 128);
+        let mut sess = svc.codec().session(Xoshiro256::from_u64(3));
+        for expect in 1..=3u64 {
+            let f = sess.compress(&grad);
+            assert_eq!(
+                svc.push(0, expect - 1, &f).unwrap(),
+                Reply::Pushed { version: expect }
+            );
+        }
+        // Pulled at 0, shard at 3: lag 3 > τ=1.
+        let f = sess.compress(&grad);
+        assert_eq!(svc.push(0, 0, &f).unwrap(), Reply::Stale { version: 3 });
+        assert_eq!(svc.metrics().stale_rejected, 1);
+        assert_eq!(svc.shard_version(0), 3);
+    }
+
+    #[test]
+    fn socket_serve_push_and_dense_pull() {
+        let svc = Arc::new(svc(300, 2, None, 4));
+        let path = std::env::temp_dir()
+            .join(format!("qsgd-ps-unit-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let server = serve(&Endpoint::Uds(path.clone()), svc.clone()).unwrap();
+        {
+            let mut conn =
+                crate::transport::net::connect_retry(server.endpoint(), Duration::from_secs(5))
+                    .unwrap();
+            conn.set_timeouts(Some(Duration::from_secs(5))).unwrap();
+            let mut reader = FrameReader::new();
+            let grad = rng::normal_vec(&mut Xoshiro256::from_u64(4), 300);
+            let frames = push_frames(&svc, &grad, 21);
+            let mut req = Vec::new();
+            for (s, f) in frames.iter().enumerate() {
+                encode_request(&mut req, OP_PUSH, s as u16, 1, 0, f);
+                write_frame(&mut conn, &req).unwrap();
+                let frame = reader.read_frame(&mut conn).unwrap().unwrap();
+                let resp = parse_response(frame).unwrap();
+                assert_eq!((resp.status, resp.version), (ST_OK, 1));
+            }
+            // Dense pull of shard 0 matches the in-process view bitwise.
+            encode_request(&mut req, OP_PULL_DENSE, 0, 1, 0, &[]);
+            write_frame(&mut conn, &req).unwrap();
+            let frame = reader.read_frame(&mut conn).unwrap().unwrap();
+            let resp = parse_response(frame).unwrap();
+            assert_eq!(resp.status, ST_OK);
+            let r0 = svc.map().shard(0);
+            let expect = &svc.dense_params()[r0.offset..r0.offset + r0.len];
+            let got: Vec<f32> = resp
+                .body
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            assert_eq!(got, expect);
+        }
+        server.shutdown();
+        let _ = std::fs::remove_file(&path);
+    }
+}

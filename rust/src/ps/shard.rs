@@ -1,0 +1,315 @@
+//! One parameter-server shard: a slice of the flat parameter vector, the
+//! fused push/pull paths over it, and the per-connection encode-session
+//! pool.
+//!
+//! * **Push** decodes an encoded gradient frame *straight into* the shard's
+//!   parameter slice with `α = −lr` ([`Codec::decode_add_threads`]) — no
+//!   intermediate gradient vector, exactly the fused path the single-server
+//!   async loop uses. A push carries the version the client last pulled;
+//!   when a staleness bound τ is set and the shard has advanced more than τ
+//!   updates past that version, the push is **rejected** (counted, not
+//!   applied) — the bounded-staleness condition of Theorem D.1, enforced at
+//!   the server instead of assumed of the scheduler.
+//! * **Pull** re-encodes from a *versioned snapshot*: the first pull after
+//!   an update copies the live slice once, then every pull at that version
+//!   encodes from the stable copy — concurrent pulls at one version see
+//!   identical parameters regardless of interleaved pushes, and repeat
+//!   pulls don't pay the copy.
+//! * **Sessions** ([`SessionPool`]) are pooled per connection, one lazily
+//!   created [`EncodeSession`] per shard the connection actually touches.
+//!   Sessions own RNG streams and encode scratch, so pooling them per
+//!   connection is what makes per-client server-side state (ECQ-style error
+//!   compensation, stateful residuals) cheap: the pool *is* that state's
+//!   home.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::router::ShardRange;
+use crate::metrics::Latency;
+use crate::quant::{Codec, EncodeSession};
+use crate::util::rng::Xoshiro256;
+
+/// Per-shard service counters and service-time percentiles, updated under
+/// the shard lock.
+#[derive(Debug, Clone, Default)]
+pub struct ShardMetrics {
+    pub pushes: u64,
+    pub pulls: u64,
+    /// Pushes rejected by the staleness bound.
+    pub stale_rejected: u64,
+    /// Server-side decode-and-apply time per accepted push.
+    pub push_decode: Latency,
+    /// Server-side (snapshot +) encode time per pull.
+    pub pull_encode: Latency,
+}
+
+impl ShardMetrics {
+    pub fn add(&mut self, other: &ShardMetrics) {
+        self.pushes += other.pushes;
+        self.pulls += other.pulls;
+        self.stale_rejected += other.stale_rejected;
+        self.push_decode.add(&other.push_decode);
+        self.pull_encode.add(&other.pull_encode);
+    }
+}
+
+/// What happened to a push that made it past admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Decoded and applied; the shard is now at `version`.
+    Applied { version: u64 },
+    /// Older than the staleness bound τ — rejected, nothing applied. The
+    /// client should re-pull (`version` is the shard's current version).
+    Stale { version: u64 },
+}
+
+/// One shard instance: owns its parameter slice and version counter.
+/// Callers (the [`super::Service`]) wrap it in a mutex; everything here is
+/// plain single-threaded state.
+pub struct Shard {
+    range: ShardRange,
+    codec: Arc<dyn Codec>,
+    lr: f32,
+    /// Reject pushes whose pulled version lags the shard by more than τ;
+    /// `None` = unbounded (the legacy async loop's behaviour).
+    staleness_bound: Option<u64>,
+    params: Vec<f32>,
+    version: u64,
+    snapshot: Vec<f32>,
+    snapshot_version: Option<u64>,
+    pub metrics: ShardMetrics,
+}
+
+impl Shard {
+    /// A shard over `range`, its slice initialised from the full-length
+    /// `init` vector.
+    pub fn new(
+        range: ShardRange,
+        codec: Arc<dyn Codec>,
+        lr: f32,
+        staleness_bound: Option<u64>,
+        init: &[f32],
+    ) -> Self {
+        let params = range.slice(init).to_vec();
+        Self {
+            range,
+            codec,
+            lr,
+            staleness_bound,
+            params,
+            version: 0,
+            snapshot: Vec::new(),
+            snapshot_version: None,
+            metrics: ShardMetrics::default(),
+        }
+    }
+
+    pub fn range(&self) -> &ShardRange {
+        &self.range
+    }
+
+    pub fn len(&self) -> usize {
+        self.range.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.len == 0
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Apply one encoded gradient frame (covering exactly this shard's
+    /// coordinates) pushed by a client that last pulled `pulled_version`.
+    pub fn push(&mut self, pulled_version: u64, frame: &[u8]) -> Result<PushOutcome> {
+        if let Some(tau) = self.staleness_bound {
+            if self.version.saturating_sub(pulled_version) > tau {
+                self.metrics.stale_rejected += 1;
+                return Ok(PushOutcome::Stale { version: self.version });
+            }
+        }
+        let t = Instant::now();
+        self.codec.decode_add_threads(
+            frame,
+            -self.lr,
+            &mut self.params,
+            self.codec.decode_threads(),
+        )?;
+        self.metrics.push_decode.record(t.elapsed());
+        self.metrics.pushes += 1;
+        self.version += 1;
+        Ok(PushOutcome::Applied { version: self.version })
+    }
+
+    /// Refresh the versioned snapshot if the live slice has advanced past
+    /// it. Returns the snapshot's version.
+    fn refresh_snapshot(&mut self) -> u64 {
+        if self.snapshot_version != Some(self.version) {
+            self.snapshot.clear();
+            self.snapshot.extend_from_slice(&self.params);
+            self.snapshot_version = Some(self.version);
+        }
+        self.version
+    }
+
+    /// Dense pull: copy the versioned snapshot into `out` (cleared first).
+    /// Returns the snapshot version the copy reflects.
+    pub fn pull_dense_into(&mut self, out: &mut Vec<f32>) -> u64 {
+        let v = self.refresh_snapshot();
+        out.clear();
+        out.extend_from_slice(&self.snapshot);
+        self.metrics.pulls += 1;
+        v
+    }
+
+    /// Quantized pull: re-encode the versioned snapshot with the caller's
+    /// (per-connection) session into `out`. Returns the snapshot version.
+    pub fn pull_encode_into(
+        &mut self,
+        session: &mut dyn EncodeSession,
+        out: &mut Vec<u8>,
+    ) -> u64 {
+        let v = self.refresh_snapshot();
+        let t = Instant::now();
+        session.encode_into(&self.snapshot, out);
+        self.metrics.pull_encode.record(t.elapsed());
+        self.metrics.pulls += 1;
+        v
+    }
+}
+
+/// Deterministic RNG for a (connection, shard) encode session: pure in
+/// `(seed, client, shard)`, so two runs that derive sessions for the same
+/// identities encode bit-identical frames. `0x5053` is ASCII "PS".
+pub fn session_rng(seed: u64, client: u64, shard: usize) -> Xoshiro256 {
+    Xoshiro256::stream(seed ^ 0x5053, client ^ ((shard as u64) << 32))
+}
+
+/// Per-connection pool of [`EncodeSession`]s, one per shard, created lazily
+/// on first touch — a connection that only ever talks to 2 of 64 shards
+/// holds 2 sessions' worth of scratch, not 64. Both ends use it: the server
+/// pools pull-re-encode sessions per accepted connection, and the traffic
+/// harness pools push-encode sessions per simulated client.
+pub struct SessionPool {
+    codec: Arc<dyn Codec>,
+    seed: u64,
+    client: u64,
+    slots: Vec<Option<Box<dyn EncodeSession>>>,
+}
+
+impl SessionPool {
+    pub fn new(codec: Arc<dyn Codec>, seed: u64, client: u64, shards: usize) -> Self {
+        Self { codec, seed, client, slots: (0..shards).map(|_| None).collect() }
+    }
+
+    /// The session for `shard`, created on first use.
+    pub fn session(&mut self, shard: usize) -> &mut dyn EncodeSession {
+        let slot = &mut self.slots[shard];
+        if slot.is_none() {
+            *slot = Some(self.codec.session(session_rng(self.seed, self.client, shard)));
+        }
+        slot.as_mut().expect("just filled").as_mut()
+    }
+
+    /// How many sessions have actually been materialised.
+    pub fn live_sessions(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CompressorSpec;
+    use crate::ps::router::ShardMap;
+    use crate::util::rng;
+
+    fn shard(n: usize, staleness: Option<u64>) -> (Shard, Arc<dyn Codec>) {
+        let map = ShardMap::uniform(n, 1).unwrap();
+        let codec = CompressorSpec::qsgd_4bit().codec();
+        let init = rng::normal_vec(&mut Xoshiro256::from_u64(3), n);
+        let s = Shard::new(map.shard(0).clone(), codec.clone(), 0.1, staleness, &init);
+        (s, codec)
+    }
+
+    #[test]
+    fn push_applies_and_versions_advance() {
+        let (mut s, codec) = shard(512, None);
+        let before = s.params().to_vec();
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(9), 512);
+        let frame = codec.session(Xoshiro256::from_u64(1)).compress(&grad);
+        assert_eq!(s.push(0, &frame).unwrap(), PushOutcome::Applied { version: 1 });
+        assert_eq!(s.version(), 1);
+        assert_ne!(s.params(), before.as_slice());
+        assert_eq!(s.metrics.pushes, 1);
+        assert_eq!(s.metrics.push_decode.count(), 1);
+    }
+
+    #[test]
+    fn stale_push_rejected_under_bound() {
+        let (mut s, codec) = shard(256, Some(2));
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(9), 256);
+        let mut sess = codec.session(Xoshiro256::from_u64(1));
+        for _ in 0..4 {
+            let frame = sess.compress(&grad);
+            s.push(s.version(), &frame).unwrap();
+        }
+        assert_eq!(s.version(), 4);
+        let before = s.params().to_vec();
+        // Pulled at version 1, shard at 4: lag 3 > τ=2 — rejected.
+        let frame = sess.compress(&grad);
+        assert_eq!(s.push(1, &frame).unwrap(), PushOutcome::Stale { version: 4 });
+        assert_eq!(s.params(), before.as_slice(), "rejected push must not touch params");
+        assert_eq!(s.metrics.stale_rejected, 1);
+        // Lag exactly τ is still admitted.
+        let frame = sess.compress(&grad);
+        assert_eq!(s.push(2, &frame).unwrap(), PushOutcome::Applied { version: 5 });
+    }
+
+    #[test]
+    fn pull_snapshot_is_versioned_and_stable() {
+        let (mut s, codec) = shard(256, None);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        assert_eq!(s.pull_dense_into(&mut a), 0);
+        assert_eq!(s.pull_dense_into(&mut b), 0);
+        assert_eq!(a, b, "same version ⇒ identical snapshot");
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(9), 256);
+        let frame = codec.session(Xoshiro256::from_u64(1)).compress(&grad);
+        s.push(0, &frame).unwrap();
+        assert_eq!(s.pull_dense_into(&mut b), 1);
+        assert_ne!(a, b, "new version ⇒ refreshed snapshot");
+        // Encoded pull decodes back to the snapshot's length.
+        let mut sess = codec.session(Xoshiro256::from_u64(2));
+        let mut wire = Vec::new();
+        assert_eq!(s.pull_encode_into(sess.as_mut(), &mut wire), 1);
+        assert_eq!(codec.decode(&wire, 256).unwrap().len(), 256);
+        assert_eq!(s.metrics.pulls, 4);
+        assert_eq!(s.metrics.pull_encode.count(), 1);
+    }
+
+    #[test]
+    fn session_pool_is_lazy_and_deterministic() {
+        let codec = CompressorSpec::qsgd_4bit().codec();
+        let mut pool = SessionPool::new(codec.clone(), 7, 42, 8);
+        assert_eq!(pool.live_sessions(), 0);
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(5), 128);
+        let f3 = pool.session(3).compress(&grad);
+        assert_eq!(pool.live_sessions(), 1);
+        // Same (seed, client, shard) in a fresh pool ⇒ same bytes.
+        let mut pool2 = SessionPool::new(codec.clone(), 7, 42, 8);
+        assert_eq!(pool2.session(3).compress(&grad), f3);
+        // Different shard slot ⇒ an independent RNG stream.
+        let f4 = pool.session(4).compress(&grad);
+        assert_eq!(pool.live_sessions(), 2);
+        assert_ne!(f3, f4);
+    }
+}

@@ -1,0 +1,370 @@
+//! Acceptance suite for the sharded parameter-server service (`qsgd::ps`).
+//!
+//! Four properties carry the subsystem:
+//!
+//! 1. **Legacy golden** — the pre-refactor `coordinator::async_ps` loop is
+//!    seeded-deterministic (final params bit-for-bit across reruns, fixed
+//!    message/step accounting). The legacy code is kept untouched as the
+//!    oracle, so the golden is a live rerun comparison rather than baked
+//!    literals — any drift in its RNG streams or event ordering fails here
+//!    before it can silently re-anchor the service parity below.
+//! 2. **S=1 parity** — `ps::run_async` at one shard is bit-identical to the
+//!    legacy loop: params, wire accounting, staleness, virtual time.
+//! 3. **Router** — the QuantPlan-derived shard map is a total,
+//!    non-overlapping partition for ragged dims and S ∈ {1, 2, 7}, and
+//!    sharded push + pull(all) round-trips bit-identically to an unsharded
+//!    decode of the same frames.
+//! 4. **Service behaviour** — in-process and `uds:` socket runs land
+//!    bit-identical final params; bursts past the queue depth shed
+//!    (counted, never a hang); pushes older than τ are rejected with the
+//!    stale count visible in metrics.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use qsgd::coordinator::async_ps::{self, AsyncConfig};
+use qsgd::coordinator::sources::ConvexSource;
+use qsgd::coordinator::CompressorSpec;
+use qsgd::data::QuadraticProblem;
+use qsgd::models::layout::{ParamLayout, QuantPlan};
+use qsgd::models::CostModel;
+use qsgd::ps::{self, Service, ServiceConfig, ShardMap, Target, TrafficConfig};
+use qsgd::simnet::{Link, SimNet, Topology};
+use qsgd::transport::Endpoint;
+use qsgd::util::rng::{self, Xoshiro256};
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn async_cfg(workers: usize, updates: usize, compressor: CompressorSpec) -> AsyncConfig {
+    AsyncConfig {
+        workers,
+        updates,
+        compressor,
+        lr: 0.02,
+        seed: 1,
+        net: SimNet::new(workers, Link::new(1e9, 1e-5), Topology::Star),
+        cost: CostModel::k80(),
+        speed: vec![],
+        log_every: 10,
+    }
+}
+
+fn async_source() -> ConvexSource<QuadraticProblem> {
+    ConvexSource::new(QuadraticProblem::generate(256, 24, 1e-3, 0.05, 11), 8, 13)
+}
+
+fn mk_service(n: usize, shards: usize, staleness: Option<u64>, depth: usize) -> Service {
+    let cfg = ServiceConfig {
+        compressor: CompressorSpec::qsgd_4bit(),
+        lr: 0.05,
+        seed: 7,
+        staleness,
+        queue_depth: depth,
+    };
+    Service::new(ShardMap::uniform(n, shards).unwrap(), &cfg)
+}
+
+fn uds_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("qsgd-ps-{}-{tag}.sock", std::process::id()))
+}
+
+// ---------------------------------------------------------------------------
+// 1. Legacy determinism golden (satellite: pinned before the refactor).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn legacy_async_ps_seeded_golden() {
+    let run = || {
+        async_ps::run(&async_cfg(4, 300, CompressorSpec::qsgd_4bit()), &mut async_source()).unwrap()
+    };
+    let r1 = run();
+    let r2 = run();
+    // Final params to_bits: exact across reruns at the same seed.
+    assert_eq!(bits(&r1.params), bits(&r2.params), "legacy async_ps must be seeded-deterministic");
+    assert_eq!(r1.vtime.to_bits(), r2.vtime.to_bits());
+    assert_eq!(r1.max_staleness, r2.max_staleness);
+    // Step-count accounting: one applied push per update, logged every 10.
+    assert_eq!(r1.wire.messages, 300);
+    // Source dim is 24 (QuadraticProblem::generate(m=256, dim=24, ..)).
+    assert_eq!(r1.wire.fp32_equiv_bytes, 300 * 24 * 4);
+    assert_eq!(r1.loss.points.len(), 30);
+    assert_eq!(r1.loss.points.last().unwrap().0, 300);
+}
+
+// ---------------------------------------------------------------------------
+// 2. S=1 service path bit-identical to the legacy loop.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn s1_service_bit_identical_to_legacy_qsgd() {
+    let cfg = async_cfg(4, 300, CompressorSpec::qsgd_4bit());
+    let legacy = async_ps::run(&cfg, &mut async_source()).unwrap();
+    let svc = ps::run_async(&cfg, &mut async_source(), 1).unwrap();
+    assert_eq!(bits(&legacy.params), bits(&svc.params), "S=1 params must match legacy bit-for-bit");
+    assert_eq!(legacy.vtime.to_bits(), svc.vtime.to_bits());
+    assert_eq!(legacy.wire.messages, svc.wire.messages);
+    assert_eq!(legacy.wire.payload_bytes, svc.wire.payload_bytes);
+    assert_eq!(legacy.wire.fp32_equiv_bytes, svc.wire.fp32_equiv_bytes);
+    assert_eq!(legacy.max_staleness, svc.max_staleness);
+    assert_eq!(legacy.mean_staleness.to_bits(), svc.mean_staleness.to_bits());
+    assert_eq!(legacy.loss.points, svc.loss.points);
+}
+
+#[test]
+fn s1_service_bit_identical_to_legacy_nuqsgd_and_fp32() {
+    // The parity is codec-independent: v2 non-uniform frames and raw fp32
+    // ride the same event schedule and the same session streams.
+    for spec in [CompressorSpec::nuqsgd_4bit(), CompressorSpec::Fp32] {
+        let cfg = async_cfg(3, 150, spec.clone());
+        let legacy = async_ps::run(&cfg, &mut async_source()).unwrap();
+        let svc = ps::run_async(&cfg, &mut async_source(), 1).unwrap();
+        assert_eq!(bits(&legacy.params), bits(&svc.params), "parity broke for {}", spec.label());
+        assert_eq!(legacy.wire.payload_bytes, svc.wire.payload_bytes);
+        assert_eq!(legacy.vtime.to_bits(), svc.vtime.to_bits());
+    }
+}
+
+#[test]
+fn sharded_async_run_still_converges() {
+    // S>1 is a different (per-shard) quantization of the same gradients —
+    // not bit-equal to S=1, but it must still train.
+    let cfg = async_cfg(4, 400, CompressorSpec::qsgd_4bit());
+    let r = ps::run_async(&cfg, &mut async_source(), 4).unwrap();
+    let first = r.loss.points[0].1;
+    let last = r.loss.tail_mean(3);
+    assert!(last < first * 0.3, "sharded async diverged: {first} -> {last}");
+    assert_eq!(r.wire.messages, 400, "one recorded push event per update");
+}
+
+// ---------------------------------------------------------------------------
+// 3. Router property tests: partition + sharded/unsharded round-trip.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_map_is_total_nonoverlapping_partition_for_ragged_dims() {
+    // Ragged synthetic layout: mixed tensors, some below the quantization
+    // threshold (fp32), one above (quantized).
+    let layout = ParamLayout::synthetic(&[
+        ("bias", vec![7]),
+        ("blocks", vec![13, 3]),
+        ("emb", vec![101]),
+    ]);
+    let plan = QuantPlan::build(&layout, 40);
+    let total = plan.total_len();
+    assert_eq!(total, 7 + 39 + 101);
+    for s_count in [1usize, 2, 7] {
+        let map = ShardMap::build(&plan, s_count).unwrap();
+        assert_eq!(map.num_shards(), s_count);
+        assert_eq!(map.total_len(), total);
+        // Contiguous cover: offsets chain exactly, lens sum to total.
+        let mut cursor = 0usize;
+        for r in map.shards() {
+            assert_eq!(r.offset, cursor, "gap/overlap at shard {}", r.index);
+            assert_eq!(r.plan.total_len(), r.len, "shard plan must cover its range");
+            cursor += r.len;
+        }
+        assert_eq!(cursor, total);
+        // Every coordinate resolves to the shard whose range contains it,
+        // and carries the same quantized flag as the original plan.
+        let flag_of = |coord: usize, plan: &QuantPlan| -> bool {
+            plan.segments
+                .iter()
+                .find(|seg| coord >= seg.offset && coord < seg.offset + seg.len)
+                .map(|seg| seg.quantized)
+                .expect("coord covered")
+        };
+        for coord in 0..total {
+            let s = map.shard_of(coord).expect("total partition");
+            let r = map.shard(s);
+            assert!(coord >= r.offset && coord < r.offset + r.len);
+            assert_eq!(
+                flag_of(coord, &r.plan),
+                flag_of(coord, &plan),
+                "quantized flag drifted at coord {coord}, S={s_count}"
+            );
+        }
+        assert_eq!(map.shard_of(total), None);
+    }
+}
+
+#[test]
+fn sharded_push_round_trips_bit_identically_to_unsharded_decode() {
+    let n = 1100usize;
+    let grad = rng::normal_vec(&mut Xoshiro256::from_u64(21), n);
+    for s_count in [1usize, 2, 7] {
+        let svc = mk_service(n, s_count, None, 8);
+        let codec = svc.codec().clone();
+        let init = svc.dense_params();
+        // One frame per shard, sessions derived per shard.
+        let frames: Vec<Vec<u8>> = (0..s_count)
+            .map(|s| {
+                let r = svc.map().shard(s);
+                codec.session(Xoshiro256::stream(123, s as u64)).compress(r.slice(&grad))
+            })
+            .collect();
+        // Reference: apply the SAME frames to the corresponding slices of an
+        // unsharded copy via the plain decode_add path.
+        let mut reference = init.clone();
+        for (s, frame) in frames.iter().enumerate() {
+            let r = svc.map().shard(s);
+            codec
+                .decode_add(frame, -0.05, &mut reference[r.offset..r.offset + r.len])
+                .unwrap();
+        }
+        // Service: push each frame, then pull(all) shards back together.
+        for (s, frame) in frames.iter().enumerate() {
+            assert_eq!(svc.push(s, 0, frame).unwrap(), ps::Reply::Pushed { version: 1 });
+        }
+        let mut pulled = vec![0.0f32; n];
+        let mut out = Vec::new();
+        for s in 0..s_count {
+            assert_eq!(svc.pull_dense(s, &mut out), Some(1));
+            let r = svc.map().shard(s);
+            pulled[r.offset..r.offset + r.len].copy_from_slice(&out);
+        }
+        assert_eq!(
+            bits(&pulled),
+            bits(&reference),
+            "sharded push+pull(all) != unsharded decode at S={s_count}"
+        );
+        assert_eq!(bits(&svc.dense_params()), bits(&reference));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Service behaviour: socket parity, shedding, staleness.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn s4_socket_and_in_process_runs_agree_bit_for_bit() {
+    let tcfg = TrafficConfig {
+        clients: 3,
+        threads: 1, // single-threaded ⇒ one deterministic op sequence
+        ops: 400,
+        push_fraction: 0.8,
+        zipf: 1.2,
+        burst: 8,
+        seed: 17,
+    };
+    let svc_local = mk_service(4096, 4, None, 64);
+    let rep_local = ps::run_traffic(&svc_local, Target::InProcess, &tcfg).unwrap();
+
+    let svc_sock = Arc::new(mk_service(4096, 4, None, 64));
+    let path = uds_path("parity");
+    let _ = std::fs::remove_file(&path);
+    let server = ps::serve(&Endpoint::Uds(path.clone()), svc_sock.clone()).unwrap();
+    let rep_sock = ps::run_traffic(&svc_sock, Target::Socket(server.endpoint()), &tcfg).unwrap();
+    server.shutdown();
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        bits(&svc_local.dense_params()),
+        bits(&svc_sock.dense_params()),
+        "uds socket run must land the exact parameters the in-process run does"
+    );
+    assert_eq!(
+        (rep_local.pushed_ok, rep_local.pulls_ok, rep_local.stale, rep_local.shed),
+        (rep_sock.pushed_ok, rep_sock.pulls_ok, rep_sock.stale, rep_sock.shed),
+        "op accounting must match across transports"
+    );
+    assert_eq!(rep_local.shed, 0, "deep queues: nothing shed in either mode");
+}
+
+#[test]
+fn burst_past_queue_depth_sheds_counted_and_returns() {
+    let depth = 2usize;
+    let svc = mk_service(2048, 2, None, depth);
+    // Deterministic overload: fill every shard's admission gate, exactly
+    // depth permits each (no extra try_enter calls — those would count as
+    // shed themselves).
+    let mut permits = Vec::new();
+    for s in 0..svc.num_shards() {
+        for _ in 0..depth {
+            permits.push(svc.admission(s).try_enter().expect("gate not yet full"));
+        }
+    }
+    let tcfg = TrafficConfig {
+        clients: 4,
+        threads: 1,
+        ops: 100,
+        push_fraction: 0.7,
+        zipf: 1.0,
+        burst: 16,
+        seed: 3,
+    };
+    let rep = ps::run_traffic(&svc, Target::InProcess, &tcfg).unwrap();
+    assert_eq!(rep.ops, 100, "every op completed with a response — no hang");
+    assert_eq!(rep.shed, 100, "full gates shed the entire burst");
+    assert_eq!((rep.pushed_ok, rep.pulls_ok, rep.stale), (0, 0, 0));
+    assert_eq!(svc.metrics().shed, 100);
+    drop(permits);
+    // Gates released: the same traffic now goes through untouched.
+    let rep2 = ps::run_traffic(&svc, Target::InProcess, &tcfg).unwrap();
+    assert_eq!(rep2.shed, 0);
+    assert_eq!(rep2.pushed_ok + rep2.pulls_ok, 100);
+}
+
+#[test]
+fn concurrent_overload_never_hangs_and_conserves_ops() {
+    // Genuine contention: shallow gates, hot Zipf head, many threads. Shed
+    // counts are timing-dependent; conservation and completion are not.
+    let svc = mk_service(8192, 4, None, 1);
+    let tcfg = TrafficConfig {
+        clients: 8,
+        threads: 4,
+        ops: 2000,
+        push_fraction: 0.8,
+        zipf: 2.5,
+        burst: 32,
+        seed: 11,
+    };
+    let rep = ps::run_traffic(&svc, Target::InProcess, &tcfg).unwrap();
+    assert_eq!(rep.ops, 2000);
+    assert_eq!(rep.pushed_ok + rep.pulls_ok + rep.stale + rep.shed, rep.ops);
+    let m = svc.metrics();
+    assert_eq!(m.shed, rep.shed, "service and client agree on shed count");
+    assert_eq!(m.pushes, rep.pushed_ok);
+}
+
+#[test]
+fn stale_push_rejected_over_socket_with_metrics() {
+    use qsgd::ps::service::{
+        encode_request, parse_response, OP_PUSH, ST_OK, ST_STALE,
+    };
+    use qsgd::transport::frame::{write_frame, FrameReader};
+
+    let svc = Arc::new(mk_service(512, 1, Some(0), 8));
+    let codec = svc.codec().clone();
+    let path = uds_path("stale");
+    let _ = std::fs::remove_file(&path);
+    let server = ps::serve(&Endpoint::Uds(path.clone()), svc.clone()).unwrap();
+    {
+        let mut conn =
+            qsgd::transport::connect_retry(server.endpoint(), Duration::from_secs(5)).unwrap();
+        conn.set_timeouts(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = FrameReader::new();
+        let grad = rng::normal_vec(&mut Xoshiro256::from_u64(5), 512);
+        let mut sess = codec.session(Xoshiro256::from_u64(6));
+        let mut req = Vec::new();
+
+        // Fresh push at the shard's current version: applied.
+        encode_request(&mut req, OP_PUSH, 0, 9, 0, &sess.compress(&grad));
+        write_frame(&mut conn, &req).unwrap();
+        let resp = parse_response(reader.read_frame(&mut conn).unwrap().unwrap()).unwrap();
+        assert_eq!((resp.status, resp.version), (ST_OK, 1));
+
+        // Same pulled version again: τ=0 means any lag is too old.
+        encode_request(&mut req, OP_PUSH, 0, 9, 0, &sess.compress(&grad));
+        write_frame(&mut conn, &req).unwrap();
+        let resp = parse_response(reader.read_frame(&mut conn).unwrap().unwrap()).unwrap();
+        assert_eq!((resp.status, resp.version), (ST_STALE, 1), "stale push must be rejected");
+    }
+    server.shutdown();
+    let _ = std::fs::remove_file(&path);
+    let m = svc.metrics();
+    assert_eq!(m.stale_rejected, 1, "stale count must surface in metrics");
+    assert_eq!(m.pushes, 1);
+    assert_eq!(svc.shard_version(0), 1, "rejected push must not advance the version");
+}

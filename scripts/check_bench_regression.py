@@ -12,10 +12,16 @@ Two modes:
       [--baseline-dir rust/benches/baselines] [--threshold 1.25]
 
 Matches (section, name) rows between the two reports and flags a regression
-when `ns_per_coord` (falling back to `median_ns`) exceeds the baseline by
-more than the threshold factor. Rows present on only one side are reported
-but never fail the check (sections come and go across PRs; a baseline row
-for a platform-gated bench section may legitimately be absent from a run).
+when the row's value drifts beyond the threshold factor in the *bad*
+direction. A row's value is `ns_per_coord` (falling back to `median_ns`,
+then `per_sec` for throughput rows); its direction is the row's
+`"direction"` field — the default `"lower"` means smaller is better
+(latency) and regression is `new/base > threshold`, while `"higher"` means
+bigger is better (msgs/sec, ops/sec) and the ratio inverts to
+`base/new > threshold`. The baseline row's direction wins when both sides
+carry one. Rows present on only one side are reported but never fail the
+check (sections come and go across PRs; a baseline row for a
+platform-gated bench section may legitimately be absent from a run).
 A *missing baseline file* is a soft skip so the advisory lane stays green
 until a baseline is committed from a trusted runner's artifact.
 
@@ -37,7 +43,11 @@ class BenchFormatError(Exception):
 
 
 def load_rows(path: Path) -> dict:
-    """Parse a schema-1 bench report into {(section, name): ns_value}."""
+    """Parse a schema-1 bench report into {(section, name): (value, direction)}.
+
+    `direction` is "lower" (latency-style, the default) or "higher"
+    (throughput-style rows emitted with a `per_sec` value).
+    """
     try:
         doc = json.loads(path.read_text())
     except OSError as e:
@@ -58,9 +68,16 @@ def load_rows(path: Path) -> dict:
         if value is None:
             value = row.get("median_ns")
         if value is None:
+            value = row.get("per_sec")
+        if value is None:
             continue
+        direction = row.get("direction", "lower")
+        if direction not in ("lower", "higher"):
+            raise BenchFormatError(
+                f"{path}: row {key} has unknown direction {direction!r}"
+            )
         try:
-            rows[key] = float(value)
+            rows[key] = (float(value), direction)
         except (TypeError, ValueError) as e:
             raise BenchFormatError(
                 f"{path}: row {key} has non-numeric timing {value!r}"
@@ -74,17 +91,25 @@ def compare(new_json: Path, baseline_json: Path, threshold: float) -> list:
     base = load_rows(baseline_json)
 
     regressions = []
-    for key, base_v in sorted(base.items()):
+    for key, (base_v, base_dir) in sorted(base.items()):
         if base_v <= 0:
             continue
-        new_v = new.get(key)
-        if new_v is None:
+        if key not in new:
             print(f"  [gone]    {key[0]} / {key[1]}")
             continue
-        ratio = new_v / base_v
+        new_v, _new_dir = new[key]
+        # The committed baseline owns the row's semantics.
+        if base_dir == "higher":
+            # Throughput: a drop below the floor regresses; guard the
+            # degenerate 0-rate case explicitly (ratio would divide by 0).
+            ratio = base_v / new_v if new_v > 0 else float("inf")
+            unit = "per_sec"
+        else:
+            ratio = new_v / base_v
+            unit = "ns/coord"
         marker = "REGRESSED" if ratio > threshold else "ok"
         print(f"  [{marker:9}] {key[0]} / {key[1]}: "
-              f"{base_v:.3f} -> {new_v:.3f} ns/coord ({ratio:.2f}x)")
+              f"{base_v:.3f} -> {new_v:.3f} {unit} ({ratio:.2f}x)")
         if ratio > threshold:
             regressions.append((key, ratio))
     for key in sorted(set(new) - set(base)):
