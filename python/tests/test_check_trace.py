@@ -1,0 +1,145 @@
+"""Unit tests for scripts/check_trace.py (stdlib-only — no JAX).
+
+The transport-e2e lane trusts this validator to certify the Chrome trace
+and JSONL span logs that the Rust side exports under `--trace-out`. The
+failure modes that matter are the quiet ones: an empty directory, a rank
+that never exported, or a trace whose begin/end events silently stopped
+balancing — none of those may read as "traces are fine".
+"""
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+SCRIPT = (pathlib.Path(__file__).resolve().parents[2]
+          / "scripts" / "check_trace.py")
+
+
+def load_module():
+    spec = importlib.util.spec_from_file_location("check_trace", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+MOD = load_module()
+
+
+def ev(name, ph, ts, pid=0, tid=0, rank=0, step=0):
+    return {"name": name, "ph": ph, "ts": ts, "pid": pid, "tid": tid,
+            "args": {"rank": rank, "step": step}}
+
+
+GOOD_CHROME = [
+    ev("step", "B", 0.0),
+    ev("exchange", "B", 1.5),
+    ev("ring.hop", "B", 1.5),       # zero-duration child, shared timestamp
+    ev("ring.hop", "E", 1.5),
+    ev("exchange", "E", 5.0),
+    ev("step", "E", 9.0),
+    ev("step", "B", 0.0, tid=1),    # second thread restarts its own clock
+    ev("step", "E", 2.0, tid=1),
+]
+
+
+def span(t_ns, dur_ns=10, name="step", rank=0, tid=0, step=0):
+    return {"t_ns": t_ns, "dur_ns": dur_ns, "name": name,
+            "rank": rank, "tid": tid, "step": step}
+
+
+def jsonl(spans):
+    return "".join(json.dumps(s) + "\n" for s in spans)
+
+
+def run_main(argv):
+    old = sys.argv
+    sys.argv = ["check_trace.py"] + argv
+    try:
+        return MOD.main()
+    finally:
+        sys.argv = old
+
+
+def write_dir(tmp_path, chrome=None, spans=None, rank=0):
+    if chrome is not None:
+        (tmp_path / f"trace_rank{rank}.json").write_text(json.dumps(chrome))
+    if spans is not None:
+        (tmp_path / f"events_rank{rank}.jsonl").write_text(jsonl(spans))
+
+
+def test_valid_directory_passes(tmp_path):
+    write_dir(tmp_path, GOOD_CHROME, [span(0), span(20, tid=1), span(40)])
+    assert run_main([str(tmp_path)]) == 0
+
+
+def test_explicit_files_pass(tmp_path):
+    write_dir(tmp_path, GOOD_CHROME, [span(0)])
+    assert run_main([str(tmp_path / "trace_rank0.json"),
+                     str(tmp_path / "events_rank0.jsonl")]) == 0
+
+
+def test_empty_directory_is_exit_2(tmp_path):
+    assert run_main([str(tmp_path)]) == 2
+
+
+def test_missing_path_is_exit_2(tmp_path):
+    assert run_main([str(tmp_path / "nope")]) == 2
+
+
+def test_expect_ranks_catches_missing_rank(tmp_path):
+    write_dir(tmp_path, GOOD_CHROME, rank=0)
+    assert run_main([str(tmp_path), "--expect-ranks", "1"]) == 0
+    assert run_main([str(tmp_path), "--expect-ranks", "2"]) == 2
+
+
+@pytest.mark.parametrize("chrome", [
+    "not json {",
+    json.dumps({"traceEvents": []}),                       # not an array
+    json.dumps([42]),                                      # non-object event
+    json.dumps([ev("s", "X", 0.0)]),                       # bad phase
+    json.dumps([ev("", "B", 0.0), ev("", "E", 1.0)]),      # empty name
+    json.dumps([ev("s", "B", 5.0), ev("s", "E", 1.0)]),    # ts goes backwards
+    json.dumps([ev("s", "B", 0.0)]),                       # unclosed span
+    json.dumps([ev("s", "E", 0.0)]),                       # end without begin
+    json.dumps([ev("a", "B", 0.0), ev("b", "E", 1.0)]),    # mismatched close
+    json.dumps([{"name": "s", "ph": "B", "ts": 0.0,
+                 "pid": 0, "tid": 0, "args": {}}]),        # args missing rank
+])
+def test_malformed_chrome_is_exit_1(tmp_path, chrome):
+    (tmp_path / "trace_rank0.json").write_text(chrome)
+    assert run_main([str(tmp_path)]) == 1
+
+
+def test_interleaved_tids_only_need_per_tid_order(tmp_path):
+    # tid 0 at t=100 after tid 1 at t=50 is fine; regression within one
+    # tid is not.
+    ok = [span(0, tid=0), span(50, tid=1), span(100, tid=0)]
+    write_dir(tmp_path, spans=ok)
+    assert run_main([str(tmp_path)]) == 0
+    bad = [span(100, tid=0), span(50, tid=0)]
+    write_dir(tmp_path, spans=bad)
+    assert run_main([str(tmp_path)]) == 1
+
+
+@pytest.mark.parametrize("lines", [
+    "not json\n",
+    json.dumps([1, 2]) + "\n",                             # not an object
+    jsonl([{"t_ns": 0, "dur_ns": 1, "name": "",            # empty name
+            "rank": 0, "tid": 0, "step": 0}]),
+    jsonl([{"t_ns": -5, "dur_ns": 1, "name": "s",          # negative time
+            "rank": 0, "tid": 0, "step": 0}]),
+    jsonl([{"t_ns": 0, "name": "s",                        # missing dur_ns
+            "rank": 0, "tid": 0, "step": 0}]),
+])
+def test_malformed_jsonl_is_exit_1(tmp_path, lines):
+    (tmp_path / "events_rank0.jsonl").write_text(lines)
+    assert run_main([str(tmp_path)]) == 1
+
+
+def test_one_bad_file_fails_the_whole_directory(tmp_path):
+    write_dir(tmp_path, GOOD_CHROME, [span(0)])
+    write_dir(tmp_path, [ev("s", "B", 0.0)], rank=1)       # rank 1 unclosed
+    assert run_main([str(tmp_path)]) == 1

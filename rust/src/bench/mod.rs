@@ -2,7 +2,9 @@
 //!
 //! `cargo bench` targets declare `harness = false` and drive this module:
 //! warmup, calibrated iteration counts, multiple samples, median/p10/p90
-//! reporting, and optional throughput lines. Output is plain text tables so
+//! reporting (quantiles via the log-bucketed [`crate::obs::Histogram`] —
+//! the tree's single quantile implementation), and optional throughput
+//! lines. Output is plain text tables so
 //! bench logs read like the paper's. [`Report`] additionally collects every
 //! section into a machine-readable JSON file (e.g.
 //! `BENCH_coding_hotpath.json`) so the perf trajectory is diffable across
@@ -10,6 +12,7 @@
 
 use std::time::Instant;
 
+use crate::obs::Histogram;
 use crate::util::stats;
 
 /// One benchmark result.
@@ -21,18 +24,25 @@ pub struct Sampled {
 }
 
 impl Sampled {
+    /// Log-bucketed histogram over this run's samples — quantiles route
+    /// through the tree's single implementation ([`crate::obs::Histogram`],
+    /// ~0.8% relative error; see the bench baselines README).
+    pub fn hist(&self) -> Histogram {
+        Histogram::from_samples(&self.samples)
+    }
+
     pub fn median(&self) -> f64 {
-        stats::median(&self.samples)
+        self.hist().median()
     }
 
     pub fn report(&self) {
-        let med = self.median();
+        let h = self.hist();
         println!(
             "{:<44} {:>10}  (p10 {:>10}, p90 {:>10}, n={})",
             self.name,
-            stats::fmt_duration(med),
-            stats::fmt_duration(stats::percentile(&self.samples, 10.0)),
-            stats::fmt_duration(stats::percentile(&self.samples, 90.0)),
+            stats::fmt_duration(h.median()),
+            stats::fmt_duration(h.percentile(10.0)),
+            stats::fmt_duration(h.percentile(90.0)),
             self.samples.len()
         );
     }
@@ -130,15 +140,16 @@ impl Report {
     /// Record a timed section. `coords` (work items per iteration) adds the
     /// normalized `ns_per_coord` field the regression check keys on.
     pub fn add(&mut self, section: &str, s: &Sampled, coords: Option<f64>) {
-        let med_ns = s.median() * 1e9;
+        let h = s.hist();
+        let med_ns = h.median() * 1e9;
         let mut row = format!(
             "{{\"section\": {}, \"name\": {}, \"median_ns\": {}, \"p10_ns\": {}, \
              \"p90_ns\": {}, \"samples\": {}",
             json_str(section),
             json_str(&s.name),
             json_num(med_ns),
-            json_num(stats::percentile(&s.samples, 10.0) * 1e9),
-            json_num(stats::percentile(&s.samples, 90.0) * 1e9),
+            json_num(h.percentile(10.0) * 1e9),
+            json_num(h.percentile(90.0) * 1e9),
             s.samples.len()
         );
         if let Some(c) = coords {
@@ -260,7 +271,10 @@ mod tests {
         assert_eq!(results.len(), 2);
         assert_eq!(results[0].get("coords").unwrap().as_f64(), Some(1024.0));
         let npc = results[0].get("ns_per_coord").unwrap().as_f64().unwrap();
-        assert!((npc - 2e3 / 1024.0).abs() < 1e-9, "ns/coord {npc}");
+        // Quantiles are log-bucketed (~0.8% relative error), so compare with
+        // the histogram's error bound rather than bit-exactly.
+        let expect = 2e3 / 1024.0;
+        assert!((npc - expect).abs() / expect < 1.0 / 64.0, "ns/coord {npc}");
         assert!(results[1].get("coords").is_none());
         let metrics = doc.get("metrics").unwrap().as_arr().unwrap();
         assert_eq!(metrics.len(), 2);

@@ -455,6 +455,45 @@ impl ScenarioSpec {
     }
 }
 
+/// Observability knobs shared by every subcommand (`--trace-out DIR`,
+/// `--trace-sample N`), parsed here so train / dist-train / ps-serve /
+/// ps-bench / exchange-worker all spell them the same way. Parsing does not
+/// touch the global tracer; call [`install`](Self::install) once the process
+/// knows its rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObsSpec {
+    /// Trace/metrics/flight output directory; `None` leaves the
+    /// observability layer at its zero-overhead disabled default.
+    pub trace_out: Option<String>,
+    /// Keep every Nth span per thread (1 = all).
+    pub sample_every: u32,
+}
+
+impl Default for ObsSpec {
+    fn default() -> Self {
+        Self { trace_out: None, sample_every: 1 }
+    }
+}
+
+impl ObsSpec {
+    /// Read `--trace-out` / `--trace-sample` from a parsed [`Args`].
+    pub fn from_args(args: &Args) -> anyhow::Result<Self> {
+        let sample = args.u64("trace-sample", 1);
+        anyhow::ensure!(
+            sample >= 1 && sample <= u64::from(u32::MAX),
+            "--trace-sample must be at least 1, got {sample}"
+        );
+        let trace_out = args.get("trace-out").map(String::from);
+        Ok(Self { trace_out, sample_every: sample as u32 })
+    }
+
+    /// Initialise the global observability layer for this process/rank.
+    pub fn install(&self, rank: u32) {
+        let dir = self.trace_out.as_deref().map(std::path::Path::new);
+        crate::obs::init(dir, rank, self.sample_every);
+    }
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
@@ -540,6 +579,15 @@ mod tests {
         assert!(a.flag("double-buffer"));
         assert!(!a.flag("verbose"));
         assert_eq!(a.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn obs_spec_parses_trace_knobs() {
+        assert_eq!(ObsSpec::from_args(&parse("train")).unwrap(), ObsSpec::default());
+        let o = ObsSpec::from_args(&parse("train --trace-out /tmp/t --trace-sample 8")).unwrap();
+        assert_eq!(o.trace_out.as_deref(), Some("/tmp/t"));
+        assert_eq!(o.sample_every, 8);
+        assert!(ObsSpec::from_args(&parse("train --trace-sample 0")).is_err());
     }
 
     #[test]

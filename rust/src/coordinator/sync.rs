@@ -247,6 +247,8 @@ impl SyncTrainer {
         let mut faults = FaultStats::default();
 
         for step in 0..cfg.steps {
+            crate::obs::set_step(step as u64);
+            let _step_span = crate::obs_span!("sim.step");
             // 1. local gradients (virtual: all workers compute in parallel)
             let mut grads = Vec::with_capacity(cfg.workers);
             let mut mean_loss = 0.0f64;

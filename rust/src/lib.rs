@@ -8,8 +8,10 @@
 //!   communication patterns ([`collectives`]), a real multi-process socket
 //!   transport running the same collectives across OS processes ([`transport`]),
 //!   the synchronous / asynchronous / variance-reduced training loops
-//!   ([`coordinator`]), and a sharded quantized parameter-server service with
-//!   admission control and a heavy-traffic client harness ([`ps`]).
+//!   ([`coordinator`]), a sharded quantized parameter-server service with
+//!   admission control and a heavy-traffic client harness ([`ps`]), and a
+//!   unified observability layer — structured tracing, a mergeable metrics
+//!   registry, and a distributed flight recorder ([`obs`]).
 //! * **Layer 2 (JAX, build-time)** — model forward/backward graphs, AOT-lowered to
 //!   HLO text and executed from Rust via PJRT ([`runtime`]).
 //! * **Layer 1 (Pallas, build-time)** — the stochastic-quantization kernel, fused
@@ -26,6 +28,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod optim;
 pub mod ps;
 pub mod quant;

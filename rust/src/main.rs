@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use qsgd::config::{Args, CollectiveSpec, ScenarioSpec, TransportSpec};
+use qsgd::config::{Args, CollectiveSpec, ObsSpec, ScenarioSpec, TransportSpec};
 use qsgd::coordinator::epoch_sim::{simulate_epoch, EpochArm};
 use qsgd::coordinator::sources::{ConvexSource, GradSource, RuntimeSource, Workload};
 use qsgd::coordinator::sync::{SyncConfig, SyncTrainer};
@@ -53,7 +53,16 @@ fn main() {
     };
     if let Err(e) = r {
         eprintln!("error: {e:#}");
+        if qsgd::obs::enabled() {
+            // Last-gasp diagnostics: the flight recorder's recent-event
+            // window plus whatever spans the rings still hold.
+            qsgd::obs::flight::dump("fatal: command errored");
+            let _ = qsgd::obs::export_traces();
+        }
         std::process::exit(1);
+    }
+    if let Err(e) = qsgd::obs::export_traces() {
+        eprintln!("warning: exporting traces failed: {e:#}");
     }
 }
 
@@ -74,6 +83,9 @@ fn print_help() {
                   #  [--fault-seed S] [--max-faults N]\n\
                   # pipelined exchange (same bits, overlapped wall clock):\n\
                   #  [--overlap on|off]\n\
+                  # observability (all subcommands): [--trace-out DIR]\n\
+                  #  [--trace-sample N] — per-rank Chrome traces, JSONL\n\
+                  #  span logs, metrics dumps, flight-recorder dumps\n\
          simulate --network <alexnet|vgg19|resnet50|resnet152|resnet110|bn-inception|lstm>\n\
                   --gpus K [--preset k80|10gbe|nvlink] [--collective <...>]\n\
                   [--scenario <...>] [--overlap-fraction F]\n\
@@ -112,6 +124,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     if !transport.is_sim() {
         return cmd_train_dist(args, &transport);
     }
+    ObsSpec::from_args(args)?.install(0);
     let model = args.string("model", "mlp");
     let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
     let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
@@ -161,6 +174,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                 f.straggler_hops, f.corrupt_frames, f.dead_workers, f.renormalized_steps
             );
         }
+        let mut m = qsgd::obs::MetricSet::new();
+        res.wire.export(&mut m);
+        res.faults.export(&mut m);
+        res.wall.export(&mut m);
+        m.counter("train.steps", res.breakdown.steps as u64);
+        qsgd::obs::export_metrics(&m)?;
         Ok(())
     };
 
@@ -298,6 +317,7 @@ fn train_dist_rank(
     rank: usize,
     world: usize,
 ) -> Result<()> {
+    ObsSpec::from_args(args)?.install(rank as u32);
     let model = args.string("model", "quadratic");
     let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
     let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
@@ -397,6 +417,13 @@ fn train_dist_rank(
             f.renormalized_steps
         );
     }
+    let mut m = qsgd::obs::MetricSet::new();
+    res.wire.export(&mut m);
+    res.faults.export(&mut m);
+    res.wall.export(&mut m);
+    m.counter("train.steps", res.breakdown.steps as u64);
+    m.counter("exchange.hops", res.hops as u64);
+    qsgd::obs::export_metrics(&m)?;
     Ok(())
 }
 
@@ -410,6 +437,7 @@ fn cmd_exchange_worker(args: &Args) -> Result<()> {
     let transport = TransportSpec::parse(&args.string("transport", "sim"))?;
     let rank = args.usize("rank", 0);
     let world = args.usize("world", 1);
+    ObsSpec::from_args(args)?.install(rank as u32);
     let collective = CollectiveSpec::parse(&args.string("collective", "a2a"))?;
     let spec = CompressorSpec::parse(&args.string("compressor", "qsgd4"))?;
     let n = args.usize("n", 8192);
@@ -499,6 +527,9 @@ fn cmd_exchange_worker(args: &Args) -> Result<()> {
             f.renormalized_steps
         );
     }
+    let mut m = qsgd::obs::MetricSet::new();
+    total.export(&mut m);
+    qsgd::obs::export_metrics(&m)?;
     Ok(())
 }
 
@@ -698,6 +729,7 @@ fn ps_service_from_args(args: &Args) -> Result<qsgd::ps::Service> {
 }
 
 fn cmd_ps_serve(args: &Args) -> Result<()> {
+    ObsSpec::from_args(args)?.install(0);
     let transport = TransportSpec::parse(&args.string("transport", "uds:/tmp/qsgd-ps.sock"))?;
     let ep = transport_endpoint(&transport)?;
     let service = std::sync::Arc::new(ps_service_from_args(args)?);
@@ -712,10 +744,14 @@ fn cmd_ps_serve(args: &Args) -> Result<()> {
     std::thread::sleep(Duration::from_secs_f64(dur.max(0.0)));
     handle.shutdown();
     println!("service: {}", service.metrics().summary());
+    let mut m = qsgd::obs::MetricSet::new();
+    service.metrics().export(&mut m);
+    qsgd::obs::export_metrics(&m)?;
     Ok(())
 }
 
 fn cmd_ps_bench(args: &Args) -> Result<()> {
+    ObsSpec::from_args(args)?.install(0);
     let service = std::sync::Arc::new(ps_service_from_args(args)?);
     let tcfg = qsgd::ps::TrafficConfig {
         clients: args.usize("clients", 16),
@@ -738,6 +774,9 @@ fn cmd_ps_bench(args: &Args) -> Result<()> {
     };
     println!("ps-bench [{}]: {}", transport.label(), rep.summary());
     println!("service: {}", service.metrics().summary());
+    let mut m = qsgd::obs::MetricSet::new();
+    service.metrics().export(&mut m);
+    qsgd::obs::export_metrics(&m)?;
     Ok(())
 }
 

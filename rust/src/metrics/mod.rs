@@ -126,6 +126,14 @@ impl WallClock {
         self.transfer_s += other.transfer_s;
         self.decode_s += other.decode_s;
     }
+
+    /// Export into the unified registry (`wall.*` histogram rows — one
+    /// sample per rank, so cross-rank merge yields the distribution).
+    pub fn export(&self, m: &mut crate::obs::MetricSet) {
+        m.observe("wall.encode_s", self.encode_s);
+        m.observe("wall.transfer_s", self.transfer_s);
+        m.observe("wall.decode_s", self.decode_s);
+    }
 }
 
 /// Wall-clock occupancy of the exchange loop, attributed to what the main
@@ -164,6 +172,13 @@ impl Occupancy {
         self.io_blocked_s += other.io_blocked_s;
         self.codec_s += other.codec_s;
         self.idle_s += other.idle_s;
+    }
+
+    /// Export into the unified registry (`occupancy.*` histogram rows).
+    pub fn export(&self, m: &mut crate::obs::MetricSet) {
+        m.observe("occupancy.io_blocked_s", self.io_blocked_s);
+        m.observe("occupancy.codec_s", self.codec_s);
+        m.observe("occupancy.idle_s", self.idle_s);
     }
 }
 
@@ -213,6 +228,13 @@ impl WireStats {
         self.payload_bytes += other.payload_bytes;
         self.fp32_equiv_bytes += other.fp32_equiv_bytes;
     }
+
+    /// Export into the unified registry (`wire.*` counter rows).
+    pub fn export(&self, m: &mut crate::obs::MetricSet) {
+        m.counter("wire.messages", self.messages);
+        m.counter("wire.payload_bytes", self.payload_bytes);
+        m.counter("wire.fp32_equiv_bytes", self.fp32_equiv_bytes);
+    }
 }
 
 /// Per-run fault and recovery accounting, filled by the scenario layer:
@@ -248,23 +270,33 @@ impl FaultStats {
         self.renormalized_steps += other.renormalized_steps;
         self.straggler_hops += other.straggler_hops;
     }
+
+    /// Export into the unified registry (`faults.*` counter rows).
+    pub fn export(&self, m: &mut crate::obs::MetricSet) {
+        m.counter("faults.corrupt_frames", self.corrupt_frames);
+        m.counter("faults.rerequests", self.rerequests);
+        m.counter("faults.resends_served", self.resends_served);
+        m.counter("faults.dead_workers", self.dead_workers);
+        m.counter("faults.renormalized_steps", self.renormalized_steps);
+        m.counter("faults.straggler_hops", self.straggler_hops);
+    }
 }
 
-/// Latency accumulator with exact percentiles, used by the parameter-server
-/// service for its push-decode / pull-encode service times and by the
-/// traffic harness for client round trips. Samples are kept (8 bytes each)
-/// rather than bucketed: the heaviest in-tree producer records a few
-/// hundred thousand operations per run, and exact p50/p99 beats histogram
-/// bin error at that scale. Recording is O(1); percentile queries sort a
-/// copy ([`crate::util::stats::percentile`]).
+/// Latency accumulator over the log-bucketed [`crate::obs::Histogram`] —
+/// bounded memory (one 64 KiB bucket array no matter how many ops are
+/// recorded), ~0.8% relative quantile error, exact mean. Used by the
+/// parameter-server service for its push-decode / pull-encode service times
+/// and by the traffic harness for client round trips. Recording is O(1) and
+/// allocation-free after first touch; [`Latency::add`] is bucket-wise and
+/// associative, so per-shard and per-client accumulators fold in any order.
 #[derive(Debug, Clone, Default)]
 pub struct Latency {
-    samples_ns: Vec<f64>,
+    hist: crate::obs::Histogram,
 }
 
 impl Latency {
     pub fn record_ns(&mut self, ns: f64) {
-        self.samples_ns.push(ns);
+        self.hist.record(ns);
     }
 
     pub fn record(&mut self, elapsed: std::time::Duration) {
@@ -272,20 +304,20 @@ impl Latency {
     }
 
     pub fn count(&self) -> usize {
-        self.samples_ns.len()
+        self.hist.count() as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_ns.is_empty()
+        self.hist.is_empty()
     }
 
     /// p-th percentile in nanoseconds; 0.0 when nothing was recorded (keeps
     /// downstream JSON finite instead of NaN).
     pub fn percentile_ns(&self, p: f64) -> f64 {
-        if self.samples_ns.is_empty() {
+        if self.hist.is_empty() {
             return 0.0;
         }
-        stats::percentile(&self.samples_ns, p)
+        self.hist.percentile(p)
     }
 
     pub fn p50_ns(&self) -> f64 {
@@ -297,14 +329,19 @@ impl Latency {
     }
 
     pub fn mean_ns(&self) -> f64 {
-        if self.samples_ns.is_empty() {
+        if self.hist.is_empty() {
             return 0.0;
         }
-        stats::mean(&self.samples_ns)
+        self.hist.mean()
     }
 
     pub fn add(&mut self, other: &Latency) {
-        self.samples_ns.extend_from_slice(&other.samples_ns);
+        self.hist.merge(&other.hist);
+    }
+
+    /// Histogram view, for exporting into a [`crate::obs::MetricSet`] row.
+    pub fn hist(&self) -> &crate::obs::Histogram {
+        &self.hist
     }
 
     /// `"p50 12.3µs p99 45.6µs (n=789)"` — the one-line form the CLI and
@@ -529,7 +566,10 @@ mod tests {
         }
         l.record(std::time::Duration::from_nanos(500));
         assert_eq!(l.count(), 5);
-        assert_eq!(l.p50_ns(), 300.0);
+        // Quantiles come from the log-bucketed histogram: ~0.8% relative
+        // error, so compare against its bound rather than bit-exactly.
+        let p50 = l.p50_ns();
+        assert!((p50 - 300.0).abs() / 300.0 <= 1.0 / 64.0, "p50 {p50}");
         assert!((l.mean_ns() - 300.0).abs() < 1e-9);
         assert!(l.p99_ns() > l.p50_ns());
         let mut sum = Latency::default();

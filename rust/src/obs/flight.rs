@@ -1,0 +1,164 @@
+//! Flight recorder: an always-on, bounded, allocation-free breadcrumb ring
+//! whose last-N events are dumped when something goes wrong — a rank dies,
+//! recovery triggers, or an exchange errors — so multi-process failures
+//! leave a diagnosable artifact instead of a bare exit code.
+//!
+//! Breadcrumbs are cheap enough to leave on unconditionally at step / hop /
+//! op granularity: one global `fetch_add` plus a handful of relaxed stores
+//! into pre-allocated slots (the ring itself is allocated on the first
+//! crumb — first-touch, never steady-state). Each crumb carries the shared
+//! monotonic clock, the interned static name, the current step, and three
+//! free-form `u64` arguments whose meaning is per-site (documented at the
+//! call site).
+//!
+//! [`dump`] renders the surviving crumbs oldest-first to stderr and — when a
+//! trace directory is configured — appends them to
+//! `<dir>/flight_rank<R>.txt` under a reason header. Dumping is additive:
+//! a recovery dump followed by a fatal dump yields a narrative, not an
+//! overwrite.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::trace::{now_ns, rank, Site};
+
+/// Crumbs kept (ring wraps, oldest first to go).
+const FLIGHT_CAP: usize = 512;
+
+/// Where dumps land (`flight_rank<R>.txt`); set via [`set_dump_dir`].
+static DUMP_DIR: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+struct FlightRing {
+    head: AtomicU64,
+    seq: Box<[AtomicU64]>,
+    t_ns: Box<[AtomicU64]>,
+    /// `site_id << 32 | low 32 bits of step`.
+    meta: Box<[AtomicU64]>,
+    a: Box<[AtomicU64]>,
+    b: Box<[AtomicU64]>,
+    c: Box<[AtomicU64]>,
+}
+
+fn slots(n: usize) -> Box<[AtomicU64]> {
+    (0..n).map(|_| AtomicU64::new(0)).collect()
+}
+
+fn ring() -> &'static FlightRing {
+    static RING: OnceLock<FlightRing> = OnceLock::new();
+    RING.get_or_init(|| FlightRing {
+        head: AtomicU64::new(0),
+        seq: slots(FLIGHT_CAP),
+        t_ns: slots(FLIGHT_CAP),
+        meta: slots(FLIGHT_CAP),
+        a: slots(FLIGHT_CAP),
+        b: slots(FLIGHT_CAP),
+        c: slots(FLIGHT_CAP),
+    })
+}
+
+/// Record a breadcrumb. Multi-writer safe: slots are claimed by a global
+/// `fetch_add` and guarded by per-slot seqlocks; a reader racing a writer
+/// skips the torn slot. (Two writers can only collide on one slot after a
+/// full ring wrap mid-write — acceptable for a diagnostic ring.)
+pub fn crumb(site: &'static Site, a: u64, b: u64, c: u64) {
+    let r = ring();
+    let h = r.head.fetch_add(1, Ordering::Relaxed);
+    let i = (h % FLIGHT_CAP as u64) as usize;
+    let s = r.seq[i].load(Ordering::Relaxed);
+    r.seq[i].store(s | 1, Ordering::Relaxed);
+    r.t_ns[i].store(now_ns(), Ordering::Relaxed);
+    let step = super::trace::step();
+    r.meta[i].store(((site.id() as u64) << 32) | (step & 0xffff_ffff), Ordering::Relaxed);
+    r.a[i].store(a, Ordering::Relaxed);
+    r.b[i].store(b, Ordering::Relaxed);
+    r.c[i].store(c, Ordering::Relaxed);
+    r.seq[i].store((s | 1).wrapping_add(1), Ordering::Release);
+}
+
+/// Configure where [`dump`] writes `flight_rank<R>.txt` (usually the
+/// `--trace-out` directory). Without it, dumps still go to stderr.
+pub fn set_dump_dir(dir: &Path) {
+    *DUMP_DIR.lock().unwrap() = Some(dir.to_path_buf());
+}
+
+fn render(reason: &str) -> String {
+    let r = ring();
+    let head = r.head.load(Ordering::Acquire);
+    let start = head.saturating_sub(FLIGHT_CAP as u64);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "=== flight recorder dump (rank {}, {} crumbs, reason: {}) ===\n",
+        rank(),
+        head - start,
+        reason
+    ));
+    for h in start..head {
+        let i = (h % FLIGHT_CAP as u64) as usize;
+        let s0 = r.seq[i].load(Ordering::Acquire);
+        if s0 & 1 == 1 {
+            continue;
+        }
+        let t = r.t_ns[i].load(Ordering::Relaxed);
+        let meta = r.meta[i].load(Ordering::Relaxed);
+        let (a, b, c) = (
+            r.a[i].load(Ordering::Relaxed),
+            r.b[i].load(Ordering::Relaxed),
+            r.c[i].load(Ordering::Relaxed),
+        );
+        if r.seq[i].load(Ordering::Acquire) != s0 {
+            continue;
+        }
+        let name = super::trace::site_name((meta >> 32) as u32);
+        let step = meta & 0xffff_ffff;
+        out.push_str(&format!("t={t}ns step={step} {name} a={a} b={b} c={c}\n"));
+    }
+    out.push_str("=== end flight dump ===\n");
+    out
+}
+
+/// Dump the surviving breadcrumbs to stderr and (if a dump dir is set)
+/// append them to `flight_rank<R>.txt`. Called on fatal errors, recovery
+/// triggers, and exchange failures; safe to call repeatedly.
+pub fn dump(reason: &str) {
+    let text = render(reason);
+    eprint!("{text}");
+    let dir = DUMP_DIR.lock().unwrap().clone();
+    if let Some(dir) = dir {
+        let _ = fs::create_dir_all(&dir);
+        let path = dir.join(format!("flight_rank{}.txt", rank()));
+        if let Ok(mut f) = fs::OpenOptions::new().create(true).append(true).open(&path) {
+            let _ = f.write_all(text.as_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static TEST_SITE: Site = Site::new("test.crumb");
+
+    // One sequential test: the flight ring is a process-wide global, so
+    // splitting these into parallel #[test]s would race on its contents.
+    #[test]
+    fn crumbs_render_and_ring_wraps() {
+        for i in 0..10 {
+            crumb(&TEST_SITE, i, i * 2, 0);
+        }
+        let text = render("unit test");
+        assert!(text.contains("flight recorder dump"));
+        assert!(text.contains("test.crumb"));
+        assert!(text.contains("a=9 b=18 c=0"));
+
+        for i in 0..(FLIGHT_CAP as u64 + 50) {
+            crumb(&TEST_SITE, 1_000_000 + i, 0, 0);
+        }
+        let text = render("wrap test");
+        // The newest crumb is present; the ring never grows past CAP lines.
+        assert!(text.contains(&format!("a={}", 1_000_000 + FLIGHT_CAP as u64 + 49)));
+        assert!(text.lines().count() <= FLIGHT_CAP + 2);
+    }
+}

@@ -1,0 +1,88 @@
+//! Unified observability: structured tracing ([`trace`]), a mergeable
+//! metrics registry ([`set`] / [`hist`]), and a distributed flight recorder
+//! ([`flight`]).
+//!
+//! Everything here is hand-rolled and dependency-free (the offline registry
+//! vendors only `anyhow` + `rand_core`), and everything is **free at
+//! defaults**: tracing is off unless `--trace-out` is given (one relaxed
+//! atomic load per span site), the flight recorder is a bounded
+//! allocation-free ring, and the histogram allocates its 64 KiB bucket
+//! array lazily. The codec zero-steady-state-alloc conformance suites run
+//! with this module compiled in.
+//!
+//! # Naming scheme
+//!
+//! Span and metric names are dot-separated `subsystem.verb` paths with
+//! optional `{label=value}` row suffixes:
+//!
+//! * spans — `step`, `exchange`, `ring.hop`, `a2a.encode`, `ps.push`,
+//!   `net.flush`, `sim.step` …
+//! * metrics — `wire.messages`, `faults.dead_workers`,
+//!   `occupancy.io_blocked_s`, `ps.push.decode_ns{shard=3}` …
+//!
+//! # Exported artifacts (per rank, under `--trace-out DIR`)
+//!
+//! * `trace_rank<R>.json` — Chrome trace-event JSON (`chrome://tracing` or
+//!   <https://ui.perfetto.dev>).
+//! * `events_rank<R>.jsonl` — one complete span per line
+//!   (`t_ns`/`dur_ns`/`name`/`rank`/`tid`/`step`).
+//! * `metrics_rank<R>.txt` — deterministic [`MetricSet::render_text`] dump.
+//! * `flight_rank<R>.txt` — flight-recorder dumps (appended per incident).
+//!
+//! `scripts/check_trace.py` validates the first two.
+
+pub mod flight;
+pub mod hist;
+pub mod set;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use set::{labeled, MetricSet, MetricValue};
+pub use trace::{
+    enabled, now_ns, rank, set_enabled, set_rank, set_sample_every, set_step, step, SpanGuard,
+};
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+static TRACE_DIR: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// One-stop initialisation from CLI knobs: set the rank, remember the trace
+/// directory (for exporters and flight dumps), enable span recording when a
+/// directory is given, and apply the sampling knob.
+pub fn init(trace_dir: Option<&Path>, rank: u32, sample_every: u32) {
+    trace::set_rank(rank);
+    trace::set_sample_every(sample_every);
+    if let Some(dir) = trace_dir {
+        *TRACE_DIR.lock().unwrap() = Some(dir.to_path_buf());
+        flight::set_dump_dir(dir);
+        trace::set_enabled(true);
+    }
+}
+
+/// The configured `--trace-out` directory, if any.
+pub fn trace_dir() -> Option<PathBuf> {
+    TRACE_DIR.lock().unwrap().clone()
+}
+
+/// Export `trace_rank<R>.json` + `events_rank<R>.jsonl` into the configured
+/// trace directory. No-op when tracing was never enabled.
+pub fn export_traces() -> Result<()> {
+    if let Some(dir) = trace_dir() {
+        trace::export(&dir)?;
+    }
+    Ok(())
+}
+
+/// Write `metrics_rank<R>.txt` into the configured trace directory. No-op
+/// without one.
+pub fn export_metrics(set: &MetricSet) -> Result<()> {
+    if let Some(dir) = trace_dir() {
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("metrics_rank{}.txt", trace::rank()));
+        std::fs::write(path, set.render_text())?;
+    }
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! `MetricSet`: one labeled-row registry unifying the scattered telemetry
+//! structs (`Latency`, `Occupancy`, `FaultStats`, `WireStats`,
+//! `ServiceMetrics`, …) behind a single mergeable container.
+//!
+//! Rows are keyed by a rendered name (`subsystem.metric` plus optional
+//! `{label=value}` suffixes, e.g. `ps.push.decode_ns{shard=3}`) and hold one
+//! of three value kinds:
+//!
+//! * **Counter** — monotone `u64`, merged by addition.
+//! * **Gauge** — `f64` high-watermark, merged by `max` (documented choice:
+//!   cross-rank aggregation of occupancy/inflight gauges wants the peak).
+//! * **Hist** — a log-bucketed [`Histogram`], merged bucket-wise.
+//!
+//! All three merge rules are associative and commutative, so per-thread,
+//! per-shard, and per-rank sets can be folded in any order — the
+//! `MetricSet::merge` property tests in `rust/tests/obs_conformance.rs`
+//! pin that down.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::hist::Histogram;
+
+/// One metric row.
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Histogram),
+}
+
+/// Labeled metric rows with associative merge. Keys are ordered
+/// (`BTreeMap`), so `render_text` output is deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct MetricSet {
+    rows: BTreeMap<String, MetricValue>,
+}
+
+impl MetricSet {
+    pub fn new() -> Self {
+        MetricSet::default()
+    }
+
+    /// Add `v` to the counter row `name` (creating it at zero).
+    pub fn counter(&mut self, name: &str, v: u64) {
+        match self
+            .rows
+            .entry(name.to_string())
+            .or_insert(MetricValue::Counter(0))
+        {
+            MetricValue::Counter(c) => *c += v,
+            other => debug_assert!(false, "metric {name} is not a counter: {other:?}"),
+        }
+    }
+
+    /// Raise the gauge row `name` to at least `v` (high-watermark).
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        match self
+            .rows
+            .entry(name.to_string())
+            .or_insert(MetricValue::Gauge(f64::NEG_INFINITY))
+        {
+            MetricValue::Gauge(g) => *g = g.max(v),
+            other => debug_assert!(false, "metric {name} is not a gauge: {other:?}"),
+        }
+    }
+
+    /// Merge `h` into the histogram row `name`.
+    pub fn hist(&mut self, name: &str, h: &Histogram) {
+        match self
+            .rows
+            .entry(name.to_string())
+            .or_insert_with(|| MetricValue::Hist(Histogram::new()))
+        {
+            MetricValue::Hist(mine) => mine.merge(h),
+            other => debug_assert!(false, "metric {name} is not a histogram: {other:?}"),
+        }
+    }
+
+    /// Record one sample into the histogram row `name`.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self
+            .rows
+            .entry(name.to_string())
+            .or_insert_with(|| MetricValue::Hist(Histogram::new()))
+        {
+            MetricValue::Hist(mine) => mine.record(v),
+            other => debug_assert!(false, "metric {name} is not a histogram: {other:?}"),
+        }
+    }
+
+    /// Fold `other` into `self`. Associative and commutative row-wise
+    /// (counter: sum; gauge: max; histogram: bucket-wise sum). Rows with
+    /// mismatched kinds are a programming error: `debug_assert` in dev,
+    /// first-writer-wins in release.
+    pub fn merge(&mut self, other: &MetricSet) {
+        for (name, v) in &other.rows {
+            match v {
+                MetricValue::Counter(c) => self.counter(name, *c),
+                MetricValue::Gauge(g) => self.gauge(name, *g),
+                MetricValue::Hist(h) => self.hist(name, h),
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.rows.get(name)
+    }
+
+    pub fn rows(&self) -> impl Iterator<Item = (&str, &MetricValue)> {
+        self.rows.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Deterministic text rendering — one row per line, histogram rows as a
+    /// quantile summary. This is what the PS `Stats` wire op returns and
+    /// what `metrics_rank<R>.txt` contains.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.rows {
+            match v {
+                MetricValue::Counter(c) => {
+                    let _ = writeln!(out, "{name} counter {c}");
+                }
+                MetricValue::Gauge(g) => {
+                    let _ = writeln!(out, "{name} gauge {g:.6}");
+                }
+                MetricValue::Hist(h) => {
+                    let _ = writeln!(out, "{name} hist {}", h.summary());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Render a row key with one label: `name{label=value}`.
+pub fn labeled(name: &str, label: &str, value: impl std::fmt::Display) -> String {
+    format!("{name}{{{label}={value}}}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_sum_and_gauges_max() {
+        let mut m = MetricSet::new();
+        m.counter("a.ops", 3);
+        m.counter("a.ops", 4);
+        m.gauge("a.peak", 1.5);
+        m.gauge("a.peak", 0.5);
+        assert!(matches!(m.get("a.ops"), Some(MetricValue::Counter(7))));
+        match m.get("a.peak") {
+            Some(MetricValue::Gauge(g)) => assert_eq!(*g, 1.5),
+            other => panic!("unexpected row {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_folds_rows() {
+        let mut a = MetricSet::new();
+        a.counter("x", 1);
+        a.observe("lat", 100.0);
+        let mut b = MetricSet::new();
+        b.counter("x", 2);
+        b.counter("y", 5);
+        b.observe("lat", 300.0);
+        a.merge(&b);
+        assert!(matches!(a.get("x"), Some(MetricValue::Counter(3))));
+        assert!(matches!(a.get("y"), Some(MetricValue::Counter(5))));
+        match a.get("lat") {
+            Some(MetricValue::Hist(h)) => assert_eq!(h.count(), 2),
+            other => panic!("unexpected row {other:?}"),
+        }
+    }
+
+    #[test]
+    fn text_rendering_is_deterministic() {
+        let mut m = MetricSet::new();
+        m.counter(&labeled("ps.push", "shard", 3), 9);
+        m.gauge("occ.peak", 0.25);
+        let t = m.render_text();
+        assert!(t.contains("ps.push{shard=3} counter 9"));
+        assert!(t.contains("occ.peak gauge 0.250000"));
+        // BTreeMap ordering: occ.* sorts before ps.*.
+        assert!(t.find("occ.peak").unwrap() < t.find("ps.push").unwrap());
+    }
+}

@@ -1,0 +1,455 @@
+//! Structured tracing: `obs_span!`-style guards recording monotonic nanos,
+//! rank, step, and an interned static name into lock-free per-thread ring
+//! buffers.
+//!
+//! # Design constraints
+//!
+//! * **Off by default, and free when off.** A span site with tracing
+//!   disabled costs one relaxed atomic load — no TLS touch, no allocation —
+//!   so the counting-allocator zero-steady-state-alloc conformance suites
+//!   keep passing with observability compiled in at defaults.
+//! * **Zero steady-state allocation when on.** The first span on a thread
+//!   allocates that thread's ring and registers it (first-touch, during
+//!   warmup); the first use of a span site interns its `&'static str` name
+//!   into a global table. After that, recording is a few relaxed atomic
+//!   stores into pre-allocated slots.
+//! * **Lock-free rings, safe concurrent export.** Each slot carries a
+//!   seqlock word (odd while being written); the exporter snapshots rings
+//!   from any thread and skips torn slots. Ring wrap discards the oldest
+//!   events; the exporter re-balances begin/end pairs so emitted traces are
+//!   always well-formed.
+//! * **Compile-out path.** Building with `--features trace-off` turns
+//!   `SpanGuard::enter` into a no-op that the optimizer deletes entirely.
+//!
+//! Spans are recorded as separate begin/end events (two ring slots) so
+//! per-thread chronology is the natural ring order. Export pairs them up,
+//! drops unmatched halves (ring wrap), and emits Chrome-trace `B`/`E`
+//! events plus a JSONL span log per rank.
+
+use std::cell::RefCell;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Events kept per thread (begin and end each take one slot).
+const RING_CAP: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SAMPLE_EVERY: AtomicU32 = AtomicU32::new(1);
+static RANK: AtomicU32 = AtomicU32::new(0);
+static STEP: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+/// Interned span-site names; a `Site`'s id is its index + 1 (0 = uninterned).
+static NAMES: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+/// All per-thread rings ever created (threads may exit; rings outlive them).
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+
+fn clock_base() -> &'static Instant {
+    static BASE: OnceLock<Instant> = OnceLock::new();
+    BASE.get_or_init(Instant::now)
+}
+
+/// Monotonic nanoseconds since the first observability touch in this
+/// process. Shared by the tracer and the flight recorder so their
+/// timestamps correlate.
+pub fn now_ns() -> u64 {
+    clock_base().elapsed().as_nanos() as u64
+}
+
+/// Enable/disable span recording at runtime (default: disabled).
+pub fn set_enabled(on: bool) {
+    if on {
+        // Pin the clock base before the first span so timestamps start near
+        // zero and stay comparable across threads.
+        let _ = clock_base();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Record every `n`-th span per thread (1 = record all; 0 is treated as 1).
+pub fn set_sample_every(n: u32) {
+    SAMPLE_EVERY.store(n.max(1), Ordering::Relaxed);
+}
+
+pub fn set_rank(r: u32) {
+    RANK.store(r, Ordering::Relaxed);
+}
+
+pub fn rank() -> u32 {
+    RANK.load(Ordering::Relaxed)
+}
+
+/// Set the current training step, attached to every span and breadcrumb
+/// recorded afterwards. A single relaxed store — callable unconditionally
+/// from step loops.
+pub fn set_step(s: u64) {
+    STEP.store(s, Ordering::Relaxed);
+}
+
+pub fn step() -> u64 {
+    STEP.load(Ordering::Relaxed)
+}
+
+/// A static span call site. Declare via [`crate::obs_span!`]; the name is
+/// interned into the global table on first use.
+pub struct Site {
+    name: &'static str,
+    id: AtomicU32,
+}
+
+impl Site {
+    pub const fn new(name: &'static str) -> Self {
+        Site { name, id: AtomicU32::new(0) }
+    }
+
+    /// Interned id (index + 1). First touch takes the name-table lock and
+    /// allocates; afterwards a relaxed load.
+    pub(crate) fn id(&self) -> u32 {
+        let id = self.id.load(Ordering::Relaxed);
+        if id != 0 {
+            return id;
+        }
+        let mut tab = NAMES.lock().unwrap();
+        let again = self.id.load(Ordering::Relaxed);
+        if again != 0 {
+            return again;
+        }
+        tab.push(self.name);
+        let id = tab.len() as u32;
+        self.id.store(id, Ordering::Relaxed);
+        id
+    }
+}
+
+pub(crate) fn site_name(id: u32) -> &'static str {
+    if id == 0 {
+        return "?";
+    }
+    let tab = NAMES.lock().unwrap();
+    tab.get(id as usize - 1).copied().unwrap_or("?")
+}
+
+/// Per-thread event ring. Written only by the owning thread; read by the
+/// exporter through per-slot seqlocks.
+struct Ring {
+    tid: u32,
+    /// Total events ever written (logical head; slot = head % RING_CAP).
+    head: AtomicU64,
+    seq: Box<[AtomicU64]>,
+    t_ns: Box<[AtomicU64]>,
+    /// `kind << 32 | site_id` (kind: 0 = begin, 1 = end).
+    meta: Box<[AtomicU64]>,
+    step: Box<[AtomicU64]>,
+}
+
+fn atomic_slice(n: usize) -> Box<[AtomicU64]> {
+    (0..n).map(|_| AtomicU64::new(0)).collect()
+}
+
+impl Ring {
+    fn new(tid: u32) -> Self {
+        Ring {
+            tid,
+            head: AtomicU64::new(0),
+            seq: atomic_slice(RING_CAP),
+            t_ns: atomic_slice(RING_CAP),
+            meta: atomic_slice(RING_CAP),
+            step: atomic_slice(RING_CAP),
+        }
+    }
+
+    fn record(&self, kind: u64, site: u32, t: u64) {
+        let h = self.head.fetch_add(1, Ordering::Relaxed);
+        let i = (h % RING_CAP as u64) as usize;
+        let s = self.seq[i].load(Ordering::Relaxed);
+        self.seq[i].store(s | 1, Ordering::Relaxed);
+        self.t_ns[i].store(t, Ordering::Relaxed);
+        self.meta[i].store((kind << 32) | site as u64, Ordering::Relaxed);
+        self.step[i].store(STEP.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.seq[i].store((s | 1).wrapping_add(1), Ordering::Release);
+    }
+}
+
+struct Tls {
+    ring: Option<Arc<Ring>>,
+    /// Per-thread span counter driving the sampling decision.
+    ctr: u64,
+}
+
+thread_local! {
+    static TLS: RefCell<Tls> = const { RefCell::new(Tls { ring: None, ctr: 0 }) };
+}
+
+/// RAII span guard: records a begin event on creation and an end event on
+/// drop (both, or neither — so exported traces always balance).
+pub struct SpanGuard {
+    site: u32,
+    active: bool,
+}
+
+impl SpanGuard {
+    #[cfg(not(feature = "trace-off"))]
+    #[inline]
+    pub fn enter(site: &'static Site) -> SpanGuard {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return SpanGuard { site: 0, active: false };
+        }
+        Self::enter_slow(site)
+    }
+
+    /// Compile-out path: with `--features trace-off` every span site is an
+    /// inert guard the optimizer removes.
+    #[cfg(feature = "trace-off")]
+    #[inline(always)]
+    pub fn enter(_site: &'static Site) -> SpanGuard {
+        SpanGuard { site: 0, active: false }
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    fn enter_slow(site: &'static Site) -> SpanGuard {
+        let every = SAMPLE_EVERY.load(Ordering::Relaxed) as u64;
+        TLS.with(|tls| {
+            let mut tls = tls.borrow_mut();
+            tls.ctr += 1;
+            if tls.ctr % every != 0 {
+                return SpanGuard { site: 0, active: false };
+            }
+            if tls.ring.is_none() {
+                let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+                let ring = Arc::new(Ring::new(tid));
+                RINGS.lock().unwrap().push(Arc::clone(&ring));
+                tls.ring = Some(ring);
+            }
+            let id = site.id();
+            let ring = tls.ring.as_ref().unwrap();
+            ring.record(0, id, now_ns());
+            SpanGuard { site: id, active: true }
+        })
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let t = now_ns();
+        TLS.with(|tls| {
+            let tls = tls.borrow();
+            if let Some(ring) = tls.ring.as_ref() {
+                ring.record(1, self.site, t);
+            }
+        });
+    }
+}
+
+/// Declare a static span site and enter it:
+/// `let _sp = obs_span!("ring.hop");` — the guard records begin on creation
+/// and end on drop. Free when tracing is disabled or compiled out.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:literal) => {{
+        static SITE: $crate::obs::trace::Site = $crate::obs::trace::Site::new($name);
+        $crate::obs::trace::SpanGuard::enter(&SITE)
+    }};
+}
+
+/// One exported span event.
+#[derive(Clone, Copy)]
+struct Event {
+    t_ns: u64,
+    kind: u64,
+    site: u32,
+    step: u64,
+}
+
+/// Snapshot a ring into chronological events, skipping torn slots.
+fn snapshot(ring: &Ring) -> Vec<Event> {
+    let head = ring.head.load(Ordering::Acquire);
+    let start = head.saturating_sub(RING_CAP as u64);
+    let mut out = Vec::with_capacity((head - start) as usize);
+    for h in start..head {
+        let i = (h % RING_CAP as u64) as usize;
+        let s0 = ring.seq[i].load(Ordering::Acquire);
+        if s0 & 1 == 1 {
+            continue;
+        }
+        let meta = ring.meta[i].load(Ordering::Relaxed);
+        let ev = Event {
+            t_ns: ring.t_ns[i].load(Ordering::Relaxed),
+            kind: meta >> 32,
+            site: (meta & 0xffff_ffff) as u32,
+            step: ring.step[i].load(Ordering::Relaxed),
+        };
+        if ring.seq[i].load(Ordering::Acquire) != s0 {
+            continue;
+        }
+        out.push(ev);
+    }
+    out
+}
+
+/// A matched span: begin/end pair from one thread.
+struct Span {
+    t0: u64,
+    t1: u64,
+    site: u32,
+    step: u64,
+}
+
+/// Pair begin/end events with a stack; drop unmatched halves (ring wrap).
+fn pair_spans(events: &[Event]) -> Vec<Span> {
+    let mut stack: Vec<Event> = Vec::new();
+    let mut out = Vec::new();
+    for &e in events {
+        if e.kind == 0 {
+            stack.push(e);
+        } else if stack.last().is_some_and(|b| b.site == e.site) {
+            let b = stack.pop().unwrap();
+            out.push(Span { t0: b.t_ns, t1: e.t_ns, site: e.site, step: b.step });
+        } else {
+            // End without a matching begin (wrapped away): the stack below
+            // it is unreliable too, so drop the lot.
+            stack.clear();
+        }
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Append one Chrome-trace event object (`ph` is `"B"` or `"E"`).
+fn chrome_event(
+    out: &mut String,
+    first: &mut bool,
+    s: &Span,
+    ph: &str,
+    t: u64,
+    pid: u32,
+    tid: u32,
+) {
+    if !*first {
+        out.push_str(",\n");
+    }
+    *first = false;
+    out.push_str(&format!(
+        "{{\"name\":\"{}\",\"ph\":\"{}\",\"ts\":{:.3},\"pid\":{},\"tid\":{},\"args\":{{\"rank\":{},\"step\":{}}}}}",
+        json_escape(site_name(s.site)),
+        ph,
+        t as f64 / 1000.0,
+        pid,
+        tid,
+        pid,
+        s.step
+    ));
+}
+
+/// Export the Chrome-trace file (`trace_rank<R>.json`) and the JSONL span
+/// log (`events_rank<R>.jsonl`) for this process into `dir`. Idempotent;
+/// call once per run after the workload finishes.
+pub fn export(dir: &Path) -> Result<()> {
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let r = rank();
+
+    let rings: Vec<Arc<Ring>> = RINGS.lock().unwrap().clone();
+    // (tid, spans) per thread, spans sorted by begin time (ties: parents —
+    // longer spans — first).
+    let mut threads: Vec<(u32, Vec<Span>)> = Vec::new();
+    for ring in &rings {
+        let mut spans = pair_spans(&snapshot(ring));
+        spans.sort_by_key(|s| (s.t0, u64::MAX - (s.t1 - s.t0)));
+        threads.push((ring.tid, spans));
+    }
+    threads.sort_by_key(|(tid, _)| *tid);
+
+    // Chrome trace: B/E event pairs per thread, emitted by a stack walk
+    // over the (already well-nested) span list. This keeps the output
+    // balanced and ts-monotone even when spans have zero duration or touch
+    // at a shared timestamp — cases where a plain timestamp sort would emit
+    // an `E` ahead of its `B` and fail check_trace.py's strict matcher.
+    let chrome = dir.join(format!("trace_rank{r}.json"));
+    let mut out = String::from("[\n");
+    let mut first = true;
+    for (tid, spans) in &threads {
+        let mut open: Vec<&Span> = Vec::new();
+        for s in spans {
+            while open.last().is_some_and(|o| o.t1 <= s.t0) {
+                let o = open.pop().unwrap();
+                chrome_event(&mut out, &mut first, o, "E", o.t1, r, *tid);
+            }
+            chrome_event(&mut out, &mut first, s, "B", s.t0, r, *tid);
+            open.push(s);
+        }
+        while let Some(o) = open.pop() {
+            chrome_event(&mut out, &mut first, o, "E", o.t1, r, *tid);
+        }
+    }
+    out.push_str("\n]\n");
+    fs::write(&chrome, out).with_context(|| format!("writing {}", chrome.display()))?;
+
+    // JSONL: one complete span per line, per-thread blocks in begin-time
+    // order so t_ns is non-decreasing within each tid.
+    let jsonl = dir.join(format!("events_rank{r}.jsonl"));
+    let mut f = fs::File::create(&jsonl).with_context(|| format!("writing {}", jsonl.display()))?;
+    for (tid, spans) in &threads {
+        for s in spans {
+            writeln!(
+                f,
+                "{{\"t_ns\":{},\"dur_ns\":{},\"name\":\"{}\",\"rank\":{},\"tid\":{},\"step\":{}}}",
+                s.t0,
+                s.t1 - s.t0,
+                json_escape(site_name(s.site)),
+                r,
+                tid,
+                s.step
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        static SITE: Site = Site::new("test.inert");
+        set_enabled(false);
+        let g = SpanGuard::enter(&SITE);
+        assert!(!g.active);
+    }
+
+    #[test]
+    fn pairing_drops_unmatched_halves() {
+        let b = |site, t| Event { t_ns: t, kind: 0, site, step: 0 };
+        let e = |site, t| Event { t_ns: t, kind: 1, site, step: 0 };
+        // Orphan end (site 9) then a proper nested pair-of-pairs.
+        let evs = [e(9, 5), b(1, 10), b(2, 11), e(2, 12), e(1, 13)];
+        let spans = pair_spans(&evs);
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().all(|s| s.t1 >= s.t0));
+    }
+
+    #[test]
+    fn site_interning_is_stable() {
+        static A: Site = Site::new("test.site_a");
+        let id1 = A.id();
+        let id2 = A.id();
+        assert_eq!(id1, id2);
+        assert_eq!(site_name(id1), "test.site_a");
+    }
+}

@@ -41,6 +41,9 @@ use crate::coordinator::async_ps::{AsyncConfig, AsyncResult};
 use crate::coordinator::sources::GradSource;
 use crate::coordinator::CompressorSpec;
 use crate::metrics::{Curve, Latency, WireStats};
+use crate::obs::flight;
+use crate::obs::trace::Site;
+use crate::obs::MetricSet;
 use crate::quant::{Codec, EncodeSession};
 use crate::transport::frame::{write_frame, FrameReader};
 use crate::transport::net::{Conn, Endpoint, Listener};
@@ -95,7 +98,22 @@ impl ServiceMetrics {
             self.pull_encode.summary(),
         )
     }
+
+    /// Export into the unified metrics registry under the `ps.*` namespace.
+    pub fn export(&self, m: &mut MetricSet) {
+        m.counter("ps.pushes", self.pushes);
+        m.counter("ps.pulls", self.pulls);
+        m.counter("ps.stale_rejected", self.stale_rejected);
+        m.counter("ps.admitted", self.admitted);
+        m.counter("ps.shed", self.shed);
+        m.hist("ps.push_decode_ns", self.push_decode.hist());
+        m.hist("ps.pull_encode_ns", self.pull_encode.hist());
+    }
 }
+
+// Flight-recorder breadcrumb sites. `a` = shard, `b` = client version.
+static CRUMB_SHED: Site = Site::new("ps.shed");
+static CRUMB_STALE: Site = Site::new("ps.stale");
 
 struct Cell {
     admission: Admission,
@@ -184,20 +202,26 @@ impl Service {
     /// Push one encoded gradient frame (covering shard `s`'s coordinates)
     /// from a client that last pulled `pulled_version`.
     pub fn push(&self, s: usize, pulled_version: u64, frame: &[u8]) -> Result<Reply> {
+        let _sp = crate::obs_span!("ps.push");
         let cell = &self.cells[s];
         let Some(_permit) = cell.admission.try_enter() else {
+            flight::crumb(&CRUMB_SHED, s as u64, pulled_version, 0);
             return Ok(Reply::Shed);
         };
         let mut sh = cell.shard.lock().expect("shard mutex poisoned");
         Ok(match sh.push(pulled_version, frame)? {
             PushOutcome::Applied { version } => Reply::Pushed { version },
-            PushOutcome::Stale { version } => Reply::Stale { version },
+            PushOutcome::Stale { version } => {
+                flight::crumb(&CRUMB_STALE, s as u64, pulled_version, version);
+                Reply::Stale { version }
+            }
         })
     }
 
     /// Dense pull of shard `s` into `out`. `Some(version)` on success,
     /// `None` if shed by admission.
     pub fn pull_dense(&self, s: usize, out: &mut Vec<f32>) -> Option<u64> {
+        let _sp = crate::obs_span!("ps.pull_dense");
         let cell = &self.cells[s];
         let _permit = cell.admission.try_enter()?;
         let mut sh = cell.shard.lock().expect("shard mutex poisoned");
@@ -212,6 +236,7 @@ impl Service {
         session: &mut dyn EncodeSession,
         out: &mut Vec<u8>,
     ) -> Option<u64> {
+        let _sp = crate::obs_span!("ps.pull");
         let cell = &self.cells[s];
         let _permit = cell.admission.try_enter()?;
         let mut sh = cell.shard.lock().expect("shard mutex poisoned");
@@ -245,6 +270,14 @@ impl Service {
         }
         m
     }
+
+    /// The aggregated metrics rendered as deterministic text — the body of
+    /// a `Stats` wire response and of `metrics_rank<R>.txt`.
+    pub fn metrics_text(&self) -> String {
+        let mut m = MetricSet::new();
+        self.metrics().export(&mut m);
+        m.render_text()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -257,6 +290,9 @@ pub const OP_PUSH: u8 = 0;
 pub const OP_PULL: u8 = 1;
 /// Pull the shard as dense little-endian f32s (the legacy pull shape).
 pub const OP_PULL_DENSE: u8 = 2;
+/// Fetch the service's aggregated metrics as text (shard field ignored —
+/// send 0). Response body is [`Service::metrics_text`] bytes.
+pub const OP_STATS: u8 = 3;
 
 pub const ST_OK: u8 = 0;
 pub const ST_SHED: u8 = 1;
@@ -459,6 +495,10 @@ fn handle_conn(mut conn: Conn, svc: Arc<Service>, stop: Arc<AtomicBool>) -> Resu
                     Some(v) => encode_response(&mut resp, ST_OK, req.shard, v, &body),
                     None => encode_response(&mut resp, ST_SHED, req.shard, 0, &[]),
                 }
+            }
+            OP_STATS => {
+                let text = svc.metrics_text();
+                encode_response(&mut resp, ST_OK, 0, 0, text.as_bytes());
             }
             OP_PULL_DENSE => match svc.pull_dense(s, &mut dense) {
                 Some(v) => {
@@ -784,6 +824,15 @@ mod tests {
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect();
             assert_eq!(got, expect);
+            // Stats op: aggregated metrics come back as deterministic text.
+            encode_request(&mut req, OP_STATS, 0, 1, 0, &[]);
+            write_frame(&mut conn, &req).unwrap();
+            let frame = reader.read_frame(&mut conn).unwrap().unwrap();
+            let resp = parse_response(frame).unwrap();
+            assert_eq!(resp.status, ST_OK);
+            let text = std::str::from_utf8(resp.body).unwrap();
+            assert!(text.contains("ps.pushes counter 2"), "stats body:\n{text}");
+            assert!(text.contains("ps.pull_encode_ns hist"), "stats body:\n{text}");
         }
         server.shutdown();
         let _ = std::fs::remove_file(&path);

@@ -137,12 +137,15 @@ impl Shard {
             }
         }
         let t = Instant::now();
-        self.codec.decode_add_threads(
-            frame,
-            -self.lr,
-            &mut self.params,
-            self.codec.decode_threads(),
-        )?;
+        {
+            let _sp = crate::obs_span!("ps.shard.decode");
+            self.codec.decode_add_threads(
+                frame,
+                -self.lr,
+                &mut self.params,
+                self.codec.decode_threads(),
+            )?;
+        }
         self.metrics.push_decode.record(t.elapsed());
         self.metrics.pushes += 1;
         self.version += 1;
@@ -179,7 +182,10 @@ impl Shard {
     ) -> u64 {
         let v = self.refresh_snapshot();
         let t = Instant::now();
-        session.encode_into(&self.snapshot, out);
+        {
+            let _sp = crate::obs_span!("ps.shard.encode");
+            session.encode_into(&self.snapshot, out);
+        }
         self.metrics.pull_encode.record(t.elapsed());
         self.metrics.pulls += 1;
         v

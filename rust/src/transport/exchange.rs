@@ -38,10 +38,20 @@ use anyhow::{ensure, Result};
 use crate::collectives::{self, algo};
 use crate::config::CollectiveSpec;
 use crate::metrics::{FaultStats, Occupancy, WallClock, WireStats};
+use crate::obs::flight;
+use crate::obs::trace::Site;
 use crate::quant::{Codec, EncodeSession};
 use crate::util::rng::Xoshiro256;
 
 use super::net::Mesh;
+
+// Flight-recorder breadcrumb sites (args documented per site).
+/// `a` = gradient coords, `b` = rank.
+static CRUMB_EXCHANGE: Site = Site::new("exchange");
+/// `a` = corrupt/re-requested frame count, `b` = peer rank.
+static CRUMB_RECOVERY: Site = Site::new("recovery");
+/// `a` = workers declared dead this step.
+static CRUMB_DEAD: Site = Site::new("dead_worker");
 
 /// Telemetry from one (or many accumulated) socket exchanges.
 #[derive(Debug, Clone, Default)]
@@ -77,6 +87,20 @@ impl DistStats {
         self.decode_coords += other.decode_coords;
         self.faults.add(&other.faults);
         self.occupancy.add(&other.occupancy);
+    }
+
+    /// Export everything into the unified metrics registry under the
+    /// `exchange.*` / `wall.*` / `wire.*` / `faults.*` / `occupancy.*`
+    /// namespaces. Rows merge associatively across ranks and steps.
+    pub fn export(&self, m: &mut crate::obs::MetricSet) {
+        self.wall.export(m);
+        self.wire.export(m);
+        self.faults.export(m);
+        self.occupancy.export(m);
+        m.counter("exchange.hops", self.hops as u64);
+        m.counter("exchange.recompressions", self.recompressions);
+        m.counter("exchange.encode_coords", self.encode_coords as u64);
+        m.counter("exchange.decode_coords", self.decode_coords as u64);
     }
 }
 
@@ -289,6 +313,7 @@ impl DistRing {
         // Hop-0 message: own segment (a first compression, not counted).
         let t = Instant::now();
         {
+            let _sp = crate::obs_span!("ring.encode0");
             let (off, len) = self.segs[r];
             let res = if ef { Some(&mut self.residual[off..off + len]) } else { None };
             algo::encode_lane(
@@ -307,6 +332,7 @@ impl DistRing {
         // Reduce-scatter: at hop t this rank sends lane (r − t) mod K and
         // receives lane (r − 1 − t) mod K from its predecessor.
         for t in 0..k - 1 {
+            let _sp = crate::obs_span!("ring.hop");
             let lane_out = (r + k - t) % k;
             stats.wire.record(self.inflight.len(), self.segs[lane_out].1);
             let lane = (r + 2 * k - 1 - t) % k;
@@ -379,6 +405,7 @@ impl DistRing {
         // h this rank sends the final for lane (r + 1 − h) mod K (hop 0:
         // its own) and receives the final for lane (r − h) mod K.
         for h in 0..k - 1 {
+            let _sp = crate::obs_span!("ring.allgather");
             let lane_out = (r + 1 + k - h) % k;
             let lane_in = (r + k - h) % k;
             stats.wire.record(self.finals[lane_out].len(), self.segs[lane_out].1);
@@ -444,6 +471,7 @@ impl DistRing {
         }
 
         // Same final decode as every in-process replica: lane order.
+        let _sp = crate::obs_span!("ring.decode");
         let td = Instant::now();
         mean.clear();
         mean.resize(n, 0.0);
@@ -496,6 +524,7 @@ impl DistRing {
         // K−1 store-and-forward hops: at hop h send origin (r − h) mod K's
         // set, receive origin (r − 1 − h) mod K's.
         for h in 0..k - 1 {
+            let _sp = crate::obs_span!("ring.raw.hop");
             let origin_out = (r + k - h) % k;
             let origin_in = (r + 2 * k - 1 - h) % k;
             pack_set(&self.sets[origin_out], &mut self.packed);
@@ -587,6 +616,8 @@ fn repair_hop(
     if !ok {
         stats.faults.corrupt_frames += 1;
         stats.faults.rerequests += 1;
+        flight::crumb(&CRUMB_RECOVERY, 1, prev as u64, 0);
+        flight::dump("ring hop repair: re-requesting corrupt frame");
     }
     if serve {
         stats.faults.resends_served += 1;
@@ -664,6 +695,10 @@ fn a2a_recover(
     stats.wall.decode_s += td.elapsed().as_secs_f64();
     stats.faults.corrupt_frames += corrupt.len() as u64;
     stats.faults.rerequests += corrupt.len() as u64;
+    if !corrupt.is_empty() {
+        flight::crumb(&CRUMB_RECOVERY, corrupt.len() as u64, corrupt[0] as u64, 0);
+        flight::dump("a2a recovery: re-requesting corrupt frames");
+    }
 
     // 3. control round: OK=0 / RESEND=1 per peer
     let tt = Instant::now();
@@ -707,7 +742,12 @@ fn a2a_recover(
     // so every survivor's contributor set agrees.
     let contributors: Vec<usize> =
         (0..k).filter(|&w| w == rank || (valid[w] && mesh.is_live(w))).collect();
-    stats.faults.dead_workers += (live_at_entry - mesh.live_peers().len()) as u64;
+    let died = (live_at_entry - mesh.live_peers().len()) as u64;
+    stats.faults.dead_workers += died;
+    if died > 0 {
+        flight::crumb(&CRUMB_DEAD, died, contributors.len() as u64, 0);
+        flight::dump("a2a recovery: worker(s) declared dead, renormalizing mean");
+    }
     if contributors.len() < k {
         stats.faults.renormalized_steps += 1;
     }
@@ -746,6 +786,7 @@ fn a2a_pipelined(
     n: usize,
     stats: &mut DistStats,
 ) -> Result<Vec<f32>> {
+    let _sp = crate::obs_span!("a2a.pipelined");
     let k = mesh.world;
     let rank = mesh.rank;
     let alpha = 1.0 / k as f32;
@@ -972,6 +1013,16 @@ impl SocketExchange {
     /// Run one synchronous exchange of this rank's gradient; `mean`
     /// receives the decoded global mean (identical bits on every rank).
     pub fn exchange(&mut self, grad: &[f32], mean: &mut Vec<f32>) -> Result<DistStats> {
+        let _sp = crate::obs_span!("exchange");
+        flight::crumb(&CRUMB_EXCHANGE, grad.len() as u64, self.mesh.rank as u64, 0);
+        let r = self.exchange_inner(grad, mean);
+        if r.is_err() {
+            flight::dump("exchange errored");
+        }
+        r
+    }
+
+    fn exchange_inner(&mut self, grad: &[f32], mean: &mut Vec<f32>) -> Result<DistStats> {
         let n = grad.len();
         let mut stats = DistStats::default();
         let SocketExchange { codec, mesh, backend, recovery, pipeline, .. } = self;
@@ -986,7 +1037,10 @@ impl SocketExchange {
             Backend::AllToAll { session, msg, rx, scratch } => {
                 let k = mesh.world;
                 let t = Instant::now();
-                session.encode_into(grad, msg);
+                {
+                    let _sp = crate::obs_span!("a2a.encode");
+                    session.encode_into(grad, msg);
+                }
                 stats.wall.encode_s += t.elapsed().as_secs_f64();
                 stats.encode_coords += n;
 
@@ -1001,13 +1055,17 @@ impl SocketExchange {
                     stats.wire.record_fanout(msg.len(), n, k.saturating_sub(1));
 
                     let t = Instant::now();
-                    mesh.exchange_all(msg)?;
+                    {
+                        let _sp = crate::obs_span!("a2a.exchange");
+                        mesh.exchange_all(msg)?;
+                    }
                     stats.wall.transfer_s += t.elapsed().as_secs_f64();
                     stats.hops += 1;
 
                     // Same grouped merge as in-process: messages in worker
                     // order, this rank's own bytes included at its own index.
                     let t = Instant::now();
+                    let _sp = crate::obs_span!("a2a.decode");
                     let rank = mesh.rank;
                     let msgs: Vec<&[u8]> = (0..k)
                         .map(|w| if w == rank { msg.as_slice() } else { mesh.frame(w) })
@@ -1019,6 +1077,7 @@ impl SocketExchange {
                         codec.decode_threads(),
                         |m, a, acc, th| codec.decode_add_threads(m, a, acc, th),
                     )?;
+                    drop(_sp);
                     stats.wall.decode_s += t.elapsed().as_secs_f64();
                     stats.decode_coords += k * n;
                 }

@@ -92,6 +92,7 @@ fn spawn_pipe_writer(mut conn: Conn, peer: usize) -> PipeWriter {
                     }
                     let Some(buf) = buf else { continue };
                     if err.is_none() {
+                        let _sp = crate::obs_span!("net.pipe.write");
                         if let Err(e) = frame::write_frame(&mut conn, &buf) {
                             err = Some(format!("sending pipelined frame to rank {peer}: {e:#}"));
                         }
@@ -665,6 +666,7 @@ impl Mesh {
     /// non-pipelined write to a peer (see
     /// [`enable_pipelining`](Self::enable_pipelining)).
     pub fn flush_sends(&mut self) -> Result<()> {
+        let _sp = crate::obs_span!("net.flush");
         let mut first: Option<anyhow::Error> = None;
         for (r, slot) in self.pipes.iter().enumerate() {
             let Some(pipe) = slot else { continue };

@@ -132,12 +132,17 @@ pub fn train_rank(
         collectives::model_exchange_time(&cfg.collective, &cfg.net, codec.encoded_size_hint(n));
 
     for step in 0..cfg.steps {
+        crate::obs::set_step(step as u64);
+        let _step_span = crate::obs_span!("step");
         if cfg.die_at_step == Some(step) {
             anyhow::bail!("rank {rank}: dying at step {step} (--die-at-step churn injection)");
         }
         // 1. this rank's local gradient (the source is deterministic in
         //    (worker, step), so rank-local compute is exact data parallelism)
-        let (loss, grad) = source.loss_and_grad(rank, step as u64, &params)?;
+        let (loss, grad) = {
+            let _sp = crate::obs_span!("grad.compute");
+            source.loss_and_grad(rank, step as u64, &params)?
+        };
         breakdown.compute += VTime(cfg.cost.step_compute_s(source.flops_fwd_per_step(), 1));
 
         // 2.–4. encode → socket exchange → decode; every rank gets the same
@@ -154,7 +159,10 @@ pub fn train_rank(
         breakdown.decode += VTime(cfg.cost.decode_s(stats.decode_coords, 1));
 
         // 5. identical update from the identical mean
-        opt.apply(&mut params, &mean_grad);
+        {
+            let _sp = crate::obs_span!("sgd.apply");
+            opt.apply(&mut params, &mean_grad);
+        }
         breakdown.steps += 1;
 
         anyhow::ensure!(

@@ -19,26 +19,11 @@ pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
-/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return f64::NAN;
-    }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    if lo == hi {
-        v[lo]
-    } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
-    }
-}
-
-pub fn median(xs: &[f64]) -> f64 {
-    percentile(xs, 50.0)
-}
+// NOTE: there is deliberately no `percentile`/`median` here. The single
+// quantile implementation in the tree is the log-bucketed
+// `crate::obs::Histogram` (bounded memory, ~0.8% relative error); exact
+// sorted-sample quantiles survive only as test oracles inside
+// `rust/tests/obs_conformance.rs`.
 
 /// Human-readable duration from seconds.
 pub fn fmt_duration(secs: f64) -> String {
@@ -80,9 +65,6 @@ mod tests {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert_eq!(mean(&xs), 2.5);
         assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
-        assert_eq!(median(&xs), 2.5);
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 4.0);
     }
 
     #[test]
@@ -96,7 +78,6 @@ mod tests {
     #[test]
     fn empty_inputs() {
         assert!(mean(&[]).is_nan());
-        assert!(percentile(&[], 50.0).is_nan());
         assert_eq!(variance(&[1.0]), 0.0);
     }
 }

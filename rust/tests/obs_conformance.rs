@@ -1,0 +1,254 @@
+//! Conformance suite for the observability layer (`qsgd::obs`):
+//!
+//! * the log-bucketed [`Histogram`] tracks an exact sorted-sample
+//!   nearest-rank oracle within its advertised `1/64` relative error bound
+//!   on adversarial distributions (heavy-tailed, bimodal, constant, tiny,
+//!   octave-spanning) — these are the only exact-quantile computations left
+//!   in the tree, kept here as test oracles;
+//! * [`MetricSet::merge`] is associative and commutative row-wise
+//!   (counters and gauges exactly; histogram quantiles exactly, means up to
+//!   float-addition reordering);
+//! * **zero steady-state allocation**: with tracing disabled (the default)
+//!   a span site is one atomic load; with tracing enabled at the default
+//!   sampling rate, recording after the first-touch ring allocation is
+//!   alloc-free; flight-recorder crumbs are alloc-free after the ring's
+//!   first touch. Proven with a counting global allocator using a
+//!   thread-local counter, so concurrently running tests don't pollute it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use qsgd::obs::flight;
+use qsgd::obs::trace::{Site, SpanGuard};
+use qsgd::obs::{labeled, Histogram, MetricSet, MetricValue};
+
+// ---------------------------------------------------------------------------
+// Thread-local counting allocator
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+std::thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocations made by *this* thread so far.
+fn local_allocs() -> u64 {
+    LOCAL_ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+/// Deterministic uniform-[0,1) stream (splitmix-style LCG), so the
+/// adversarial distributions below are reproducible without a seed file.
+fn lcg(state: &mut u64) -> f64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*state >> 11) as f64) / (1u64 << 53) as f64
+}
+
+/// Exact nearest-rank quantile over an ascending-sorted sample vector —
+/// the oracle the bounded-memory histogram is checked against.
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+// ---------------------------------------------------------------------------
+// Histogram vs exact oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_quantiles_track_exact_oracle_on_adversarial_distributions() {
+    let mut s = 0xD1CE_u64;
+    // Pareto(α=1): heavy tail spanning many octaves.
+    let heavy: Vec<f64> = (0..2000).map(|_| 1.0 / (1.0 - lcg(&mut s))).collect();
+    // Two clusters six decades apart — quantiles must jump the gap cleanly.
+    let bimodal: Vec<f64> = (0..1000)
+        .map(|i| if i % 2 == 0 { 1e-3 * (1.0 + lcg(&mut s)) } else { 1e3 * (1.0 + lcg(&mut s)) })
+        .collect();
+    // Tiny but in-domain values (domain floor is 2^-64 ≈ 5.4e-20).
+    let tiny: Vec<f64> = (0..1000).map(|_| 1e-18 * (1.0 + lcg(&mut s))).collect();
+    // One sample per octave across most of the domain.
+    let octaves: Vec<f64> =
+        (0..1200).map(|i| 2f64.powi((i % 120) - 60) * (1.0 + lcg(&mut s))).collect();
+    let cases: Vec<(&str, Vec<f64>)> = vec![
+        ("heavy_tail", heavy),
+        ("bimodal", bimodal),
+        // Degenerate: every quantile must be the constant (min==max clamp).
+        ("constant", vec![42.0; 1000]),
+        ("tiny", tiny),
+        ("mixed_octaves", octaves),
+    ];
+
+    for (name, mut xs) in cases {
+        let h = Histogram::from_samples(&xs);
+        xs.sort_by(f64::total_cmp);
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let exact = exact_quantile(&xs, q);
+            let got = h.quantile(q);
+            let tol = exact / 64.0;
+            assert!(
+                (got - exact).abs() <= tol,
+                "{name} q={q}: hist {got} vs exact {exact} (tol {tol})"
+            );
+        }
+        assert_eq!(h.count(), xs.len() as u64, "{name}: count");
+        assert_eq!(h.quantile(1.0), xs[xs.len() - 1], "{name}: q=1.0 clamps to max");
+    }
+}
+
+#[test]
+fn histogram_merge_agrees_with_recording_everything_into_one() {
+    let mut s = 7_u64;
+    let a: Vec<f64> = (0..500).map(|_| 1.0 / (1.0 - lcg(&mut s))).collect();
+    let b: Vec<f64> = (0..700).map(|_| 1e-6 * (1.0 + lcg(&mut s))).collect();
+    let mut merged = Histogram::from_samples(&a);
+    merged.merge(&Histogram::from_samples(&b));
+    let mut all = a.clone();
+    all.extend_from_slice(&b);
+    let whole = Histogram::from_samples(&all);
+    assert_eq!(merged.count(), whole.count());
+    for q in [0.1, 0.5, 0.9, 0.99] {
+        assert_eq!(merged.quantile(q), whole.quantile(q), "q={q}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MetricSet merge algebra
+// ---------------------------------------------------------------------------
+
+/// A set with counter, gauge, and histogram rows plus one seed-unique
+/// labeled row, so merges exercise both shared and disjoint keys.
+fn sample_set(seed: u64) -> MetricSet {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+    let mut m = MetricSet::new();
+    m.counter("wire.messages", (lcg(&mut s) * 1000.0) as u64);
+    m.counter("faults.rerequests", (lcg(&mut s) * 10.0) as u64);
+    m.counter(&labeled("ps.pushes", "shard", seed), 7);
+    m.gauge("occupancy.peak", lcg(&mut s));
+    m.gauge("queue.depth", lcg(&mut s) * 64.0);
+    for _ in 0..300 {
+        m.observe("ps.push_decode_ns", 1.0 / (1.0 - lcg(&mut s)));
+        m.observe("wall.encode_s", 1e-3 * (1.0 + lcg(&mut s)));
+    }
+    m
+}
+
+/// Row-wise equivalence: counters and gauges exact, histogram quantiles
+/// exact (integer bucket counts), means up to float-addition reordering.
+fn assert_equiv(x: &MetricSet, y: &MetricSet) {
+    assert_eq!(x.len(), y.len());
+    for ((nx, vx), (ny, vy)) in x.rows().zip(y.rows()) {
+        assert_eq!(nx, ny);
+        match (vx, vy) {
+            (MetricValue::Counter(a), MetricValue::Counter(b)) => assert_eq!(a, b, "{nx}"),
+            (MetricValue::Gauge(a), MetricValue::Gauge(b)) => assert_eq!(a, b, "{nx}"),
+            (MetricValue::Hist(a), MetricValue::Hist(b)) => {
+                assert_eq!(a.count(), b.count(), "{nx}: count");
+                for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+                    assert_eq!(a.quantile(q), b.quantile(q), "{nx}: q={q}");
+                }
+                let (ma, mb) = (a.mean(), b.mean());
+                assert!((ma - mb).abs() <= 1e-9 * ma.abs(), "{nx}: mean {ma} vs {mb}");
+            }
+            (a, b) => panic!("{nx}: kind mismatch {a:?} vs {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn metric_set_merge_is_commutative() {
+    let (a, b) = (sample_set(1), sample_set(2));
+    let mut ab = a.clone();
+    ab.merge(&b);
+    let mut ba = b.clone();
+    ba.merge(&a);
+    assert_equiv(&ab, &ba);
+    // The seed-unique rows from both operands survive the merge.
+    assert!(matches!(ab.get("ps.pushes{shard=1}"), Some(MetricValue::Counter(7))));
+    assert!(matches!(ab.get("ps.pushes{shard=2}"), Some(MetricValue::Counter(7))));
+}
+
+#[test]
+fn metric_set_merge_is_associative() {
+    let (a, b, c) = (sample_set(1), sample_set(2), sample_set(3));
+    let mut ab_c = a.clone();
+    ab_c.merge(&b);
+    ab_c.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut a_bc = a.clone();
+    a_bc.merge(&bc);
+    assert_equiv(&ab_c, &a_bc);
+}
+
+// ---------------------------------------------------------------------------
+// Zero steady-state allocation
+// ---------------------------------------------------------------------------
+
+// One sequential test: the tracer's enabled flag is process-global, so
+// splitting these phases into parallel #[test]s would race on it.
+#[test]
+fn observability_is_allocation_free_in_steady_state() {
+    static SITE: Site = Site::new("conf.steady");
+    static CRUMB_SITE: Site = Site::new("conf.crumb");
+
+    // Phase 1 — tracing disabled (the default): a span site costs one
+    // relaxed atomic load and must never touch the heap.
+    qsgd::obs::set_enabled(false);
+    for _ in 0..8 {
+        let _g = SpanGuard::enter(&SITE);
+    }
+    let before = local_allocs();
+    for _ in 0..10_000 {
+        let _g = SpanGuard::enter(&SITE);
+    }
+    assert_eq!(local_allocs() - before, 0, "disabled span path allocated");
+
+    // Phase 2 — tracing enabled at the default sampling rate: the first
+    // span on a thread allocates its ring (warmup below); after that,
+    // begin/end recording is relaxed stores into pre-allocated slots.
+    qsgd::obs::set_sample_every(1);
+    qsgd::obs::set_enabled(true);
+    for _ in 0..8 {
+        let _g = SpanGuard::enter(&SITE);
+    }
+    let before = local_allocs();
+    for _ in 0..10_000 {
+        let _g = SpanGuard::enter(&SITE);
+    }
+    assert_eq!(local_allocs() - before, 0, "warm enabled span path allocated");
+    qsgd::obs::set_enabled(false);
+
+    // Phase 3 — flight-recorder crumbs after the ring's first touch.
+    for i in 0..8u64 {
+        flight::crumb(&CRUMB_SITE, i, 0, 0);
+    }
+    let before = local_allocs();
+    for i in 0..10_000u64 {
+        flight::crumb(&CRUMB_SITE, i, i, i);
+    }
+    assert_eq!(local_allocs() - before, 0, "crumb path allocated");
+}

@@ -341,6 +341,41 @@ fn tcp_overlap_ring_ef_matches_serial_golden() {
 }
 
 // ---------------------------------------------------------------------------
+// Observability: --trace-out across real processes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_a2a_trace_out_emits_valid_per_rank_artifacts() {
+    // `--trace-out` across K real processes: every rank exports a Chrome
+    // trace and a JSONL span log into the shared directory, and tracing
+    // must not perturb the exchanged bits (same golden as the untraced
+    // arm). The CI lane runs scripts/check_trace.py over this directory
+    // afterwards, so the file names here are load-bearing.
+    let tag = "tcp-a2a-trace";
+    let dir = log_dir(tag);
+    let spec = CollectiveSpec::parse("a2a").unwrap();
+    let comp = CompressorSpec::parse("qsgd4").unwrap();
+    let want = golden_mean(&spec, &comp, WORLD, N, STEPS);
+    let trace_dir = dir.to_str().expect("utf-8 tmpdir").to_string();
+    let extra = move |_: usize| vec!["--trace-out".to_string(), trace_dir.clone()];
+    let got: Vec<Vec<f32>> =
+        run_group_with(tag, &format!("tcp:{}", free_tcp_addr()), "a2a", "qsgd4", &extra, &[])
+            .into_iter()
+            .flatten()
+            .collect();
+    assert_bit_identical(tag, &got, &want);
+    for r in 0..WORLD {
+        for name in [format!("trace_rank{r}.json"), format!("events_rank{r}.jsonl")] {
+            let p = dir.join(&name);
+            let len = std::fs::metadata(&p)
+                .unwrap_or_else(|e| panic!("{tag}: missing {name}: {e}"))
+                .len();
+            assert!(len > 2, "{tag}: {name} is empty");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Churn and corruption: the recovery protocol across real processes
 // ---------------------------------------------------------------------------
 
@@ -362,8 +397,10 @@ fn tcp_a2a_churn_killed_rank_renormalizes_without_hanging() {
         N,
         STEPS,
     );
-    let extra = |r: usize| -> Vec<String> {
-        let mut v = vec!["--recover".to_string()];
+    let dir = log_dir("tcp-a2a-churn");
+    let trace_dir = dir.to_str().expect("utf-8 tmpdir").to_string();
+    let extra = move |r: usize| -> Vec<String> {
+        let mut v = vec!["--recover".to_string(), "--trace-out".to_string(), trace_dir.clone()];
         if r == 3 {
             v.extend(["--die-at-step".to_string(), "1".to_string()]);
         }
@@ -380,6 +417,22 @@ fn tcp_a2a_churn_killed_rank_renormalizes_without_hanging() {
     let survivors: Vec<Vec<f32>> = got.into_iter().flatten().collect();
     assert_eq!(survivors.len(), WORLD - 1);
     assert_bit_identical("tcp-a2a-churn", &survivors, &want);
+
+    // Every rank leaves a non-empty flight-recorder dump: rank 3 from the
+    // fatal-error path, the survivors from the dead-worker recovery dump.
+    for r in 0..WORLD {
+        let flight = dir.join(format!("flight_rank{r}.txt"));
+        let text = std::fs::read_to_string(&flight)
+            .unwrap_or_else(|e| panic!("tcp-a2a-churn: missing {}: {e}", flight.display()));
+        assert!(
+            text.contains("flight recorder dump"),
+            "tcp-a2a-churn: rank {r} dump header missing:\n{text}"
+        );
+        assert!(
+            text.lines().count() > 2,
+            "tcp-a2a-churn: rank {r} flight dump has no crumbs:\n{text}"
+        );
+    }
 }
 
 #[test]

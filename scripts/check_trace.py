@@ -1,0 +1,205 @@
+#!/usr/bin/env python3
+"""Validate observability artifacts emitted under `--trace-out DIR`.
+
+Two file kinds, dispatched by name:
+
+  trace_rank<R>.json    Chrome trace-event JSON: a top-level array of
+                        B/E phase events. Per (pid, tid) the stream must
+                        have non-decreasing `ts`, and begins/ends must
+                        balance as a properly nested stack with matching
+                        names. Every event needs `name`/`ph`/`ts`/`pid`/
+                        `tid` plus integer `args.rank` and `args.step`.
+  events_rank<R>.jsonl  One completed span per line: a JSON object with
+                        integer `t_ns`/`dur_ns`/`rank`/`tid`/`step` and a
+                        non-empty string `name`; `t_ns` must be
+                        non-decreasing within each tid.
+
+Usage:
+
+  # validate every trace/events file under one or more directories
+  check_trace.py DIR [DIR ...] [--expect-ranks K]
+
+  # or validate explicit files
+  check_trace.py trace_rank0.json events_rank0.jsonl
+
+`--expect-ranks K` additionally requires trace_rank{0..K-1}.json to exist
+in each directory argument — the multi-process lanes use it to catch a
+rank that silently exited before exporting.
+
+Exit codes:
+  0  everything validated
+  1  at least one file is malformed or violates an invariant
+  2  nothing to validate (no matching files found, or a missing path) —
+     an empty run must never read as "traces are fine"
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+class TraceError(Exception):
+    """A trace artifact exists but violates the format invariants."""
+
+
+def _require_int(obj: dict, key: str, where: str) -> int:
+    v = obj.get(key)
+    if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+        raise TraceError(f"{where}: field {key!r} is {v!r}, want a non-negative int")
+    return v
+
+
+def check_chrome(path: Path) -> int:
+    """Validate one Chrome trace file; return the number of events."""
+    try:
+        doc = json.loads(path.read_text())
+    except OSError as e:
+        raise TraceError(f"{path}: unreadable ({e})") from e
+    except json.JSONDecodeError as e:
+        raise TraceError(f"{path}: invalid JSON ({e})") from e
+    if not isinstance(doc, list):
+        raise TraceError(f"{path}: top level is not an array")
+
+    last_ts = {}   # (pid, tid) -> last ts seen
+    stacks = {}    # (pid, tid) -> [open span names]
+    for i, ev in enumerate(doc):
+        where = f"{path}: event {i}"
+        if not isinstance(ev, dict):
+            raise TraceError(f"{where}: not an object")
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            raise TraceError(f"{where}: name is {name!r}, want a non-empty string")
+        ph = ev.get("ph")
+        if ph not in ("B", "E"):
+            raise TraceError(f"{where}: ph is {ph!r}, want 'B' or 'E'")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or isinstance(ts, bool) or ts < 0:
+            raise TraceError(f"{where}: ts is {ts!r}, want a non-negative number")
+        pid = _require_int(ev, "pid", where)
+        tid = _require_int(ev, "tid", where)
+        args = ev.get("args")
+        if not isinstance(args, dict):
+            raise TraceError(f"{where}: args is {args!r}, want an object")
+        _require_int(args, "rank", where)
+        _require_int(args, "step", where)
+
+        key = (pid, tid)
+        if ts < last_ts.get(key, 0):
+            raise TraceError(
+                f"{where}: ts {ts} goes backwards on pid={pid} tid={tid} "
+                f"(last was {last_ts[key]})")
+        last_ts[key] = ts
+        stack = stacks.setdefault(key, [])
+        if ph == "B":
+            stack.append(name)
+        elif not stack:
+            raise TraceError(f"{where}: E {name!r} with no open span on tid={tid}")
+        elif stack[-1] != name:
+            raise TraceError(
+                f"{where}: E {name!r} does not close the open span "
+                f"{stack[-1]!r} on tid={tid}")
+        else:
+            stack.pop()
+    for (pid, tid), stack in stacks.items():
+        if stack:
+            raise TraceError(
+                f"{path}: pid={pid} tid={tid} ends with unclosed span(s) {stack}")
+    return len(doc)
+
+
+def check_jsonl(path: Path) -> int:
+    """Validate one JSONL span log; return the number of spans."""
+    try:
+        text = path.read_text()
+    except OSError as e:
+        raise TraceError(f"{path}: unreadable ({e})") from e
+    last_t = {}  # tid -> last t_ns seen
+    n = 0
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            continue
+        where = f"{path}: line {i + 1}"
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise TraceError(f"{where}: invalid JSON ({e})") from e
+        if not isinstance(ev, dict):
+            raise TraceError(f"{where}: not an object")
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            raise TraceError(f"{where}: name is {name!r}, want a non-empty string")
+        t_ns = _require_int(ev, "t_ns", where)
+        _require_int(ev, "dur_ns", where)
+        _require_int(ev, "rank", where)
+        tid = _require_int(ev, "tid", where)
+        _require_int(ev, "step", where)
+        if t_ns < last_t.get(tid, 0):
+            raise TraceError(
+                f"{where}: t_ns {t_ns} goes backwards on tid={tid} "
+                f"(last was {last_t[tid]})")
+        last_t[tid] = t_ns
+        n += 1
+    return n
+
+
+def check_file(path: Path) -> None:
+    if path.name.endswith(".jsonl"):
+        n = check_jsonl(path)
+        print(f"  [ok] {path}: {n} span(s)")
+    else:
+        n = check_chrome(path)
+        print(f"  [ok] {path}: {n} event(s)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="+", type=Path,
+                    help="trace-out directories, or explicit trace/events files")
+    ap.add_argument("--expect-ranks", type=int, default=None, metavar="K",
+                    help="require trace_rank{0..K-1}.json in each directory")
+    args = ap.parse_args()
+
+    files = []
+    missing = False
+    for p in args.paths:
+        if p.is_dir():
+            found = sorted(p.glob("trace_rank*.json")) + sorted(p.glob("events_rank*.jsonl"))
+            if not found:
+                print(f"{p}: no trace_rank*.json or events_rank*.jsonl here")
+                missing = True
+            if args.expect_ranks is not None:
+                for r in range(args.expect_ranks):
+                    want = p / f"trace_rank{r}.json"
+                    if not want.exists():
+                        print(f"{p}: expected {want.name} (rank {r} never exported)")
+                        missing = True
+            files.extend(found)
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"{p}: does not exist")
+            missing = True
+    if missing:
+        return 2
+    if not files:
+        print("nothing to validate")
+        return 2
+
+    bad = 0
+    for f in files:
+        try:
+            check_file(f)
+        except TraceError as e:
+            print(f"  [BAD] {e}")
+            bad += 1
+    if bad:
+        print(f"{bad} file(s) failed validation.")
+        return 1
+    print(f"all {len(files)} trace file(s) valid.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
